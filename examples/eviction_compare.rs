@@ -1,0 +1,85 @@
+//! Compare every eviction policy on the same workload: task score,
+//! GT-overlap quality (recall@C vs the true response's attention — the
+//! paper's Table-8 metric) and eviction latency.
+//!
+//!     cargo run --release --example eviction_compare -- --ctx 256 --budget 16 --n 6
+
+use lookaheadkv::engine::{Engine, EngineConfig};
+use lookaheadkv::eval::runner;
+use lookaheadkv::eviction::{EvictionConfig, Method};
+use lookaheadkv::model::tokenizer::encode;
+use lookaheadkv::runtime::artifacts::default_artifacts_dir;
+use lookaheadkv::util::cli::Args;
+use lookaheadkv::util::stats;
+use lookaheadkv::workload;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(&[]);
+    let ctx = args.usize("ctx", 256);
+    let budget = args.usize("budget", 16);
+    let n = args.usize("n", 6);
+    let engine = Engine::new(&default_artifacts_dir(), EngineConfig::new("lkv-tiny"))?;
+    let suite = workload::ruler_suite(7, n, ctx);
+
+    let methods = [
+        Method::FullKV,
+        Method::Random { seed: 1 },
+        Method::StreamingLLM,
+        Method::SnapKV,
+        Method::PyramidKV,
+        Method::H2O,
+        Method::Tova,
+        Method::Laq,
+        Method::SpecKV,
+        Method::LookaheadKV { variant: "main".into() },
+    ];
+
+    // GT importance per sample (FullKV greedy decode attention, Eq. 1).
+    let mut gts = Vec::new();
+    for s in &suite.samples {
+        let prompt = encode(&s.prompt(), true, false);
+        let gt = engine.gt_importance(&prompt, 0.0, 0, 12)?;
+        gts.push((prompt, gt));
+    }
+
+    println!("{:<16} {:>8} {:>10} {:>12}", "method", "score", "recall@C", "evict(ms)");
+    let n_layers = engine.n_layers("lkv-tiny");
+    for method in &methods {
+        let cfg = runner::EvalConfig { budget, max_new: 8, temperature: 0.0, seed: 0 };
+        let res = runner::run_suite(&engine, &suite, method, &cfg)?;
+        // GT-overlap: recall of the kept set against the GT top-C set.
+        let mut recalls = Vec::new();
+        if !matches!(method, Method::FullKV) {
+            for (prompt, gt) in &gts {
+                let pre = engine.prefill_for_method(prompt, method)?;
+                let evcfg = EvictionConfig::new(budget);
+                let sel = method.select(&evcfg, n_layers, &pre.bundle);
+                let (l, h) = (gt.shape[0], gt.shape[1]);
+                for li in 0..l {
+                    let mut gt_mean = vec![0.0f32; prompt.len()];
+                    for hi in 0..h {
+                        let row = gt.index(&[li, hi]);
+                        for (j, g) in gt_mean.iter_mut().enumerate() {
+                            *g += row[j];
+                        }
+                    }
+                    let gt_top = stats::topk_indices(&gt_mean, sel.per_layer[li].len());
+                    let kept: std::collections::HashSet<usize> =
+                        sel.per_layer[li].iter().copied().collect();
+                    let inter = gt_top.iter().filter(|i| kept.contains(i)).count();
+                    recalls.push(inter as f64 / gt_top.len().max(1) as f64);
+                }
+            }
+        }
+        let recall = if recalls.is_empty() {
+            1.0
+        } else {
+            recalls.iter().sum::<f64>() / recalls.len() as f64
+        };
+        println!(
+            "{:<16} {:>8.3} {:>10.3} {:>12.2}",
+            res.method, res.score, recall, res.overhead_ms_mean
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,33 @@
+//! Quickstart: load the AOT artifacts, serve one prompt with LookaheadKV
+//! eviction, and print the generation plus the latency breakdown.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use lookaheadkv::engine::{Engine, EngineConfig, GenOptions};
+use lookaheadkv::eviction::Method;
+use lookaheadkv::model::tokenizer::encode;
+use lookaheadkv::runtime::artifacts::default_artifacts_dir;
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::new(&default_artifacts_dir(), EngineConfig::new("lkv-tiny"))?;
+
+    // A needle-in-a-haystack prompt: the answer Q2Z is buried in noise.
+    let prompt = "lorem;ipsum;dolor;K7F=Q2Z;amet;tempor;labore;magna;aliqua;\
+                  erat;sed;diam;nonumy;eirmod;invidunt;K7F=";
+    let tokens = encode(prompt, true, false);
+
+    for method in [Method::FullKV, Method::SnapKV, Method::LookaheadKV { variant: "main".into() }]
+    {
+        let res = engine.generate(&tokens, &method, &GenOptions::new(16, 8))?;
+        println!(
+            "{:<14} -> {:<8}  (kept {:?} of {} | ttft {:.1} ms, evict +{:.2} ms)",
+            method.name(),
+            res.text,
+            res.kept_per_layer,
+            res.prompt_len,
+            res.ttft_ms,
+            res.eviction_overhead_ms
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,109 @@
+//! End-to-end serving validation (DESIGN.md §E2E): start the full stack
+//! (engine loop + scheduler + HTTP server), drive it with a concurrent
+//! load generator over a real workload, and report TTFT / end-to-end
+//! latency / throughput per eviction method.
+//!
+//!     cargo run --release --example serve_bench -- --requests 24 --concurrency 4
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use lookaheadkv::engine::{Engine, EngineConfig};
+use lookaheadkv::metrics::Metrics;
+use lookaheadkv::runtime::artifacts::default_artifacts_dir;
+use lookaheadkv::scheduler::{EngineLoop, LoopConfig, RequestQueue};
+use lookaheadkv::server::http::{http_get, http_post};
+use lookaheadkv::server::{serve, ServerConfig};
+use lookaheadkv::util::cli::Args;
+use lookaheadkv::util::json;
+use lookaheadkv::util::stats::summarize;
+use lookaheadkv::util::threadpool::{ThreadPool, WaitGroup};
+use lookaheadkv::workload;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(&[]);
+    let n_requests = args.usize("requests", 24);
+    let concurrency = args.usize("concurrency", 4);
+    let ctx = args.usize("ctx", 256);
+    let addr = args.get_or("addr", "127.0.0.1:18931").to_string();
+
+    // Engine thread (owns the PJRT client).
+    let queue = Arc::new(RequestQueue::new(128));
+    let metrics = Arc::new(Metrics::new());
+    let (q2, m2) = (Arc::clone(&queue), Arc::clone(&metrics));
+    let art = default_artifacts_dir();
+    std::thread::spawn(move || {
+        let engine = Engine::new(&art, EngineConfig::new("lkv-tiny")).expect("engine");
+        EngineLoop::new(engine, LoopConfig { max_active: 4, ..Default::default() }, q2, m2).run();
+    });
+    // HTTP server thread.
+    let (q3, m3) = (Arc::clone(&queue), Arc::clone(&metrics));
+    let addr2 = addr.clone();
+    std::thread::spawn(move || {
+        serve(ServerConfig { addr: addr2, workers: concurrency + 2, queue_cap: 128 }, q3, m3)
+            .expect("server");
+    });
+    for _ in 0..100 {
+        std::thread::sleep(std::time::Duration::from_millis(100));
+        if http_get(&addr, "/healthz").is_ok() {
+            break;
+        }
+    }
+
+    let suite = workload::ruler_suite(3, (n_requests / 4).max(1), ctx);
+    for method in ["snapkv", "lookaheadkv", "streaming"] {
+        let pool = ThreadPool::new(concurrency, "loadgen");
+        let results = Arc::new(std::sync::Mutex::new(Vec::<(f64, f64)>::new()));
+        let total_launch = n_requests.min(suite.samples.len() * 4);
+        let wg = WaitGroup::new(total_launch);
+        let t0 = Instant::now();
+        let mut launched = 0;
+        'outer: for _ in 0..4 {
+            for s in &suite.samples {
+                if launched >= total_launch {
+                    break 'outer;
+                }
+                launched += 1;
+                let prompt = s.prompt();
+                let addr = addr.clone();
+                let results = Arc::clone(&results);
+                let done = wg.done_handle();
+                let method = method.to_string();
+                pool.execute(move || {
+                    let mut o = json::Json::obj();
+                    o.set("prompt", prompt.as_str().into());
+                    o.set("method", method.as_str().into());
+                    o.set("budget", 32usize.into());
+                    o.set("max_new", 8usize.into());
+                    if let Ok((200, resp)) = http_post(&addr, "/generate", &o.to_string()) {
+                        if let Ok(v) = json::parse(&resp) {
+                            let ttft = v.req("ttft_ms").as_f64().unwrap_or(0.0);
+                            let total = v.req("total_ms").as_f64().unwrap_or(0.0);
+                            results.lock().unwrap().push((ttft, total));
+                        }
+                    }
+                    done();
+                });
+            }
+        }
+        wg.wait();
+        let wall = t0.elapsed().as_secs_f64();
+        let rs = results.lock().unwrap();
+        let ttfts: Vec<f64> = rs.iter().map(|(t, _)| *t).collect();
+        let totals: Vec<f64> = rs.iter().map(|(_, t)| *t).collect();
+        let st = summarize(&ttfts);
+        let se = summarize(&totals);
+        println!(
+            "{:<14} n={:<3} ttft p50={:.1}ms p99={:.1}ms | e2e p50={:.1}ms | {:.2} req/s",
+            method,
+            rs.len(),
+            st.p50,
+            st.p99,
+            se.p50,
+            rs.len() as f64 / wall
+        );
+    }
+    let (_, m) = http_get(&addr, "/metrics")?;
+    println!("\n/metrics: {m}");
+    Ok(())
+}

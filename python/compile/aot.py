@@ -1,0 +1,364 @@
+"""AOT lowering: JAX graphs -> HLO text + manifest + weights + goldens.
+
+This is the compile-path boundary of the three-layer architecture. For
+every (model, shape-bucket, variant) combination used by the serving
+coordinator it lowers a jitted function to **HLO text** (NOT a serialized
+proto — jax >= 0.5 emits 64-bit instruction ids that xla_extension 0.5.1
+rejects; the text parser reassigns ids) and records in ``manifest.json``
+everything the Rust runtime needs: the positional argument list (weights
+first, in the canonical order of ``model.param_order``; then runtime
+inputs), output order/shapes, and model/tokenizer constants.
+
+Weights are *runtime inputs* loaded by Rust from ``weights/<model>.npz``
+into device buffers once per process — artifacts stay small and one graph
+serves every LookaheadKV variant that shares shapes.
+
+Usage: python -m compile.aot [--out ../artifacts] [--skip-ablations]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import lookahead as LK, model as M
+from .config import (
+    ARTIFACTS,
+    BOS_ID,
+    CKPT_DIR,
+    DECODE_CAPS,
+    EOS_ID,
+    MODELS,
+    OBS_WINDOW,
+    PAD_ID,
+    PREFILL_BUCKETS,
+    SEP_ID,
+    VOCAB_SIZE,
+    LookaheadConfig,
+)
+from .train_lm import load_params
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lkv_weight_order(cfg, lkv_cfg: LookaheadConfig) -> list[str]:
+    names = ["emb"]
+    for i in range(cfg.n_layers):
+        for t in lkv_cfg.lora_targets:
+            names += [f"l{i}.{t}.a", f"l{i}.{t}.b"]
+    return names
+
+
+def lkv_flatten(lkv, cfg, lkv_cfg):
+    flat = [lkv["emb"]]
+    for i in range(cfg.n_layers):
+        for t in lkv_cfg.lora_targets:
+            a, b = lkv["lora"][i][t]
+            flat += [a, b]
+    return flat
+
+
+def lkv_unflatten(flat, cfg, lkv_cfg):
+    it = iter(flat)
+    emb = next(it)
+    lora = []
+    for _ in range(cfg.n_layers):
+        layer = {}
+        for t in lkv_cfg.lora_targets:
+            layer[t] = (next(it), next(it))
+        lora.append(layer)
+    return {"emb": emb, "lora": lora}
+
+
+class Builder:
+    def __init__(self, out_dir: str):
+        self.out = out_dir
+        self.hlo_dir = os.path.join(out_dir, "hlo")
+        self.w_dir = os.path.join(out_dir, "weights")
+        self.g_dir = os.path.join(out_dir, "goldens")
+        for d in (self.hlo_dir, self.w_dir, self.g_dir):
+            os.makedirs(d, exist_ok=True)
+        self.manifest = {
+            "format": 1,
+            "tokenizer": {
+                "pad": PAD_ID, "bos": BOS_ID, "eos": EOS_ID, "sep": SEP_ID,
+                "vocab": VOCAB_SIZE,
+            },
+            "obs_window": OBS_WINDOW,
+            "prefill_buckets": list(PREFILL_BUCKETS),
+            "decode_caps": list(DECODE_CAPS),
+            "models": {},
+            "lkv_variants": {},
+            "graphs": {},
+            "goldens": {},
+        }
+
+    # -- weights -----------------------------------------------------------
+    def add_model(self, name: str, cfg, params):
+        order = M.param_order(cfg)
+        flat = M.flatten_params(cfg, params)
+        wfile = f"weights/{name}.npz"
+        np.savez(os.path.join(self.out, wfile), **{n: np.asarray(a) for n, a in zip(order, flat)})
+        self.manifest["models"][name] = {
+            "d_model": cfg.d_model, "n_layers": cfg.n_layers, "n_heads": cfg.n_heads,
+            "n_kv_heads": cfg.n_kv_heads, "head_dim": cfg.head_dim, "ff": cfg.ff,
+            "vocab": cfg.vocab, "max_seq": cfg.max_seq,
+            "weights": wfile, "param_names": order,
+            "param_count": int(cfg.param_count()),
+        }
+
+    def add_lkv_variant(self, model: str, variant: str, cfg, lkv, lkv_cfg):
+        order = lkv_weight_order(cfg, lkv_cfg)
+        flat = lkv_flatten(lkv, cfg, lkv_cfg)
+        wfile = f"weights/lkv_{model}_{variant}.npz"
+        np.savez(os.path.join(self.out, wfile), **{n: np.asarray(a) for n, a in zip(order, flat)})
+        self.manifest["lkv_variants"][f"{model}/{variant}"] = {
+            "model": model, "variant": variant,
+            "n_lookahead": lkv_cfg.n_lookahead,
+            "lora_rank": lkv_cfg.lora_rank, "lora_alpha": lkv_cfg.lora_alpha,
+            "lora_targets": list(lkv_cfg.lora_targets),
+            "weights": wfile, "param_names": order,
+            "trainable_params": int(LK.lkv_param_count(cfg, lkv_cfg)),
+            "graph_suffix": graph_suffix(lkv_cfg),
+        }
+
+    # -- graphs ------------------------------------------------------------
+    def lower(self, key: str, fn, arg_specs, input_names, output_names, meta, golden_args=None):
+        """Lower fn(*args) and register. arg_specs: full positional specs;
+        input_names: names for the non-weight tail (len <= len(arg_specs));
+        weights occupy the head positions."""
+        print(f"[aot] lowering {key}")
+        lowered = jax.jit(fn).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        fname = key.replace("/", "__") + ".hlo.txt"
+        with open(os.path.join(self.hlo_dir, fname), "w") as f:
+            f.write(text)
+        entry = dict(meta)
+        entry.update(
+            {
+                "file": f"hlo/{fname}",
+                "inputs": [
+                    {"name": n, "dtype": str(s.dtype), "shape": list(s.shape)}
+                    for n, s in zip(input_names, arg_specs[len(arg_specs) - len(input_names):])
+                ],
+                "n_weight_args": len(arg_specs) - len(input_names),
+                "outputs": output_names,
+            }
+        )
+        self.manifest["graphs"][key] = entry
+        if golden_args is not None:
+            self._golden(key, fn, golden_args, input_names, len(arg_specs) - len(input_names))
+        return entry
+
+    def _golden(self, key: str, fn, args, input_names, n_weights):
+        outs = jax.jit(fn)(*args)
+        flat_outs = jax.tree_util.tree_leaves(outs)
+        payload = {}
+        for n, a in zip(input_names, args[n_weights:]):
+            payload[f"in_{n}"] = np.asarray(a)
+        for i, o in enumerate(flat_outs):
+            payload[f"out_{i}"] = np.asarray(o)
+        gfile = f"goldens/{key.replace('/', '__')}.npz"
+        np.savez(os.path.join(self.out, gfile), **payload)
+        self.manifest["goldens"][key] = gfile
+
+    def finish(self):
+        with open(os.path.join(self.out, "manifest.json"), "w") as f:
+            json.dump(self.manifest, f, indent=1)
+        print(f"[aot] wrote manifest with {len(self.manifest['graphs'])} graphs")
+
+
+def graph_suffix(lkv_cfg: LookaheadConfig) -> str:
+    """Graphs are shared by all variants with the same shapes/arg list."""
+    mods = {tuple(): "emb", ("wq", "wv"): "qv"}.get(tuple(lkv_cfg.lora_targets), "all")
+    return f"n{lkv_cfg.n_lookahead}_{mods}"
+
+
+# --------------------------------------------------------------------------
+# Per-model lowering
+# --------------------------------------------------------------------------
+
+PREFILL_OUTS = ["k", "v", "logits", "window_scores", "h2o_scores"]
+PREFILL_LKV_OUTS = ["k", "v", "logits", "lkv_scores"]
+DECODE_OUTS = ["logits", "k_cache", "v_cache", "probs"]
+
+
+def lower_model(b: Builder, name: str, golden: bool, buckets=PREFILL_BUCKETS, caps=DECODE_CAPS):
+    cfg = MODELS[name]
+    params = load_params(cfg, os.path.join(CKPT_DIR, f"{name}.npz"))
+    b.add_model(name, cfg, params)
+    wspecs = [_spec(a.shape, a.dtype) for a in M.flatten_params(cfg, params)]
+    n_w = len(wspecs)
+
+    rng = np.random.default_rng(0)
+
+    def demo_tokens(s):
+        return jnp.asarray(rng.integers(0, 255, (s,)), I32)
+
+    for s in buckets:
+        def prefill_fn(*args, _s=s):
+            params_ = M.unflatten_params(cfg, list(args[:n_w]))
+            tokens, length, logit_pos = args[n_w:]
+            out = M.prefill(params_, cfg, tokens, length, logit_pos, window=OBS_WINDOW)
+            return tuple(out[k] for k in PREFILL_OUTS)
+
+        specs = wspecs + [_spec((s,), I32), _spec((), I32), _spec((), I32)]
+        golden_args = None
+        if golden and s == buckets[0]:
+            golden_args = M.flatten_params(cfg, params) + [
+                demo_tokens(s), jnp.asarray(100, I32), jnp.asarray(99, I32)
+            ]
+        b.lower(
+            f"{name}/prefill_base_s{s}",
+            prefill_fn,
+            specs,
+            ["tokens", "length", "logit_pos"],
+            PREFILL_OUTS,
+            {"kind": "prefill_base", "model": name, "s": s, "window": OBS_WINDOW},
+            golden_args,
+        )
+
+    for cap in caps:
+        def decode_fn(*args, _c=cap):
+            params_ = M.unflatten_params(cfg, list(args[:n_w]))
+            token, pos, kc, vc, lens = args[n_w:]
+            out = M.decode_step(params_, cfg, token, pos, kc, vc, lens)
+            return tuple(out[k] for k in DECODE_OUTS)
+
+        kv_shape = (cfg.n_layers, cfg.n_kv_heads, cap, cfg.head_dim)
+        specs = wspecs + [
+            _spec((), I32), _spec((), I32),
+            _spec(kv_shape, F32), _spec(kv_shape, F32),
+            _spec((cfg.n_layers,), I32),
+        ]
+        golden_args = None
+        if golden and cap == caps[0]:
+            golden_args = M.flatten_params(cfg, params) + [
+                jnp.asarray(65, I32), jnp.asarray(40, I32),
+                jnp.asarray(rng.normal(size=kv_shape), F32),
+                jnp.asarray(rng.normal(size=kv_shape), F32),
+                jnp.full((cfg.n_layers,), 40, I32),
+            ]
+        b.lower(
+            f"{name}/decode_c{cap}",
+            decode_fn,
+            specs,
+            ["token", "pos", "k_cache", "v_cache", "cache_lens"],
+            DECODE_OUTS,
+            {"kind": "decode", "model": name, "cap": cap},
+            golden_args,
+        )
+    return cfg, params, wspecs
+
+
+def lower_lkv_graphs(b: Builder, name: str, cfg, params, wspecs, lkv_cfg, buckets, golden: bool):
+    """One graph per (shape bucket, n_lookahead, target-set); lkv weights
+    are runtime inputs so trained variants with identical shapes share it."""
+    n_w = len(wspecs)
+    suffix = graph_suffix(lkv_cfg)
+    lkv_demo = LK.init_lkv(cfg, lkv_cfg, jax.random.PRNGKey(1))
+    lkv_specs = [_spec(a.shape, a.dtype) for a in lkv_flatten(lkv_demo, cfg, lkv_cfg)]
+    n_lw = len(lkv_specs)
+    rng = np.random.default_rng(1)
+
+    for s in buckets:
+        key = f"{name}/prefill_lkv_s{s}_{suffix}"
+        if key in b.manifest["graphs"]:
+            continue
+
+        def lkv_fn(*args, _s=s):
+            params_ = M.unflatten_params(cfg, list(args[:n_w]))
+            lkv_ = lkv_unflatten(list(args[n_w:n_w + n_lw]), cfg, lkv_cfg)
+            tokens, length = args[n_w + n_lw:]
+            out = M.prefill_lkv(
+                params_, cfg, lkv_["emb"],
+                lkv_["lora"] if lkv_cfg.lora_targets else None,
+                lkv_cfg, tokens, length,
+            )
+            return tuple(out[k] for k in PREFILL_LKV_OUTS)
+
+        specs = wspecs + lkv_specs + [_spec((s,), I32), _spec((), I32)]
+        golden_args = None
+        if golden and s == buckets[0]:
+            golden_args = (
+                M.flatten_params(cfg, params)
+                + lkv_flatten(lkv_demo, cfg, lkv_cfg)
+                + [jnp.asarray(rng.integers(0, 255, (s,)), I32), jnp.asarray(100, I32)]
+            )
+        b.lower(
+            key,
+            lkv_fn,
+            specs,
+            ["tokens", "length"],
+            PREFILL_LKV_OUTS,
+            {
+                "kind": "prefill_lkv", "model": name, "s": s,
+                "n_lookahead": lkv_cfg.n_lookahead, "suffix": suffix,
+                "n_lkv_weight_args": n_lw,
+            },
+            golden_args,
+        )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=ARTIFACTS)
+    ap.add_argument("--skip-ablations", action="store_true")
+    args = ap.parse_args()
+    out = os.path.abspath(args.out)
+    b = Builder(out)
+
+    # Target + base models: full graph set.
+    lkv_variant_files = []
+    for name in ("lkv-tiny", "lkv-base"):
+        if not os.path.exists(os.path.join(CKPT_DIR, f"{name}.npz")):
+            print(f"[aot] {name}: no checkpoint, skipping")
+            continue
+        cfg, params, wspecs = lower_model(b, name, golden=(name == "lkv-tiny"))
+        # Register every trained LookaheadKV variant for this model and
+        # lower the graphs its shapes require.
+        for fn in sorted(os.listdir(CKPT_DIR)):
+            if not (fn.startswith(f"lkv_{name}_") and fn.endswith(".npz")):
+                continue
+            variant = fn[len(f"lkv_{name}_"):-len(".npz")]
+            lkv, lkv_cfg = LK.load_lkv(cfg, os.path.join(CKPT_DIR, fn))
+            if args.skip_ablations and variant not in ("main",):
+                continue
+            b.add_lkv_variant(name, variant, cfg, lkv, lkv_cfg)
+            buckets = PREFILL_BUCKETS if variant in ("main", "srcdata", "ctx32", "ctx64", "ctx128") else PREFILL_BUCKETS[:2]
+            lower_lkv_graphs(
+                b, name, cfg, params, wspecs, lkv_cfg, buckets,
+                golden=(name == "lkv-tiny" and variant == "main"),
+            )
+            lkv_variant_files.append(variant)
+
+    # Draft model (SpecKV): prefill for scoring-free forward + full-cache
+    # decode caps sized prompt+draft.
+    if os.path.exists(os.path.join(CKPT_DIR, "lkv-draft.npz")):
+        draft_caps = tuple(s + 32 for s in PREFILL_BUCKETS)
+        lower_model(b, "lkv-draft", golden=False, caps=draft_caps)
+
+    b.finish()
+
+
+if __name__ == "__main__":
+    main()

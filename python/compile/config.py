@@ -1,0 +1,138 @@
+"""Shared configuration for the LookaheadKV build pipeline.
+
+Everything the Rust coordinator needs to know about these constants is
+exported into ``artifacts/manifest.json`` by ``aot.py``; nothing here is
+imported at runtime.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+
+# --------------------------------------------------------------------------
+# Tokenizer (byte-level; mirrored by rust/src/model/tokenizer.rs)
+# --------------------------------------------------------------------------
+PAD_ID = 256
+BOS_ID = 257
+EOS_ID = 258
+SEP_ID = 259
+VOCAB_SIZE = 320  # 256 bytes + 4 specials, rounded up for alignment
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture of a LLaMA-style decoder-only transformer.
+
+    RMSNorm + RoPE + GQA + SwiGLU — the block structure of the paper's
+    target models (LLaMA-3 / Qwen-3), scaled to the CPU testbed.
+    """
+
+    name: str
+    vocab: int = VOCAB_SIZE
+    d_model: int = 64
+    n_layers: int = 4
+    n_heads: int = 4
+    n_kv_heads: int = 2
+    head_dim: int = 16
+    ff: int = 192
+    rope_theta: float = 10_000.0
+    max_seq: int = 1184
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    @property
+    def group(self) -> int:
+        return self.n_heads // self.n_kv_heads
+
+    def param_count(self) -> int:
+        d, f = self.d_model, self.ff
+        per_layer = (
+            2 * d  # two norms
+            + d * self.q_dim  # wq
+            + 2 * d * self.kv_dim  # wk, wv
+            + self.q_dim * d  # wo
+            + 3 * d * f  # gate, up, down
+        )
+        return self.vocab * d + self.n_layers * per_layer + d + d * self.vocab
+
+
+# The paper's LLaMA/Qwen families, scaled. `lkv-tiny` is the primary target
+# model, `lkv-base` the second family for multi-model figures, `lkv-draft`
+# the small draft model used by SpecKV.
+TINY = ModelConfig(name="lkv-tiny")
+BASE = ModelConfig(
+    name="lkv-base", d_model=80, n_layers=5, n_heads=5, n_kv_heads=1, ff=224
+)
+DRAFT = ModelConfig(name="lkv-draft", d_model=32, n_layers=2, n_heads=2, n_kv_heads=1, ff=96)
+
+MODELS = {m.name: m for m in (TINY, BASE, DRAFT)}
+
+# --------------------------------------------------------------------------
+# LookaheadKV module configuration
+# --------------------------------------------------------------------------
+# LoRA target sets, matching the paper's Table-5 ablation axes.
+LORA_NONE: tuple[str, ...] = ()
+LORA_QV: tuple[str, ...] = ("wq", "wv")
+LORA_ALL: tuple[str, ...] = ("wq", "wk", "wv", "wo", "wgate", "wup", "wdown")
+LORA_SETS = {"emb": LORA_NONE, "qv": LORA_QV, "all": LORA_ALL}
+
+
+@dataclasses.dataclass(frozen=True)
+class LookaheadConfig:
+    """Lookahead tokens + selective LoRA (paper §3.1)."""
+
+    n_lookahead: int = 8  # paper: 32 @ 8B scale; 8 matches our context scale
+    lora_rank: int = 4  # paper: 8
+    lora_alpha: float = 16.0  # paper: 32
+    lora_targets: tuple[str, ...] = LORA_ALL
+
+    @property
+    def scale(self) -> float:
+        return self.lora_alpha / self.lora_rank
+
+
+DEFAULT_LKV = LookaheadConfig()
+
+# --------------------------------------------------------------------------
+# Serving shape buckets (what aot.py lowers; mirrored in the manifest)
+# --------------------------------------------------------------------------
+PREFILL_BUCKETS = (128, 256, 512, 1024)
+# Decode cache capacities: budget C + generation headroom.
+DECODE_CAPS = (64, 128, 256, 640, 1152)
+OBS_WINDOW = 32  # suffix observation window W exported by prefill_base
+MAX_NEW_TOKENS = 96
+
+# --------------------------------------------------------------------------
+# Training profiles (override steps with env LKV_FAST=1 for smoke builds)
+# --------------------------------------------------------------------------
+FAST = os.environ.get("LKV_FAST", "0") == "1"
+
+
+def steps(n: int) -> int:
+    return max(20, n // 20) if FAST else n
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainProfile:
+    lm_steps: int = 3000
+    lm_batch: int = 16
+    lm_seq: int = 160
+    lm_lr: float = 8e-4
+    lkv_steps: int = 400
+    lkv_ablation_steps: int = 120
+    lkv_batch: int = 8
+    lkv_lr: float = 2e-3
+    max_resp: int = 32  # generated-response length for GT scores
+
+
+PROFILE = TrainProfile()
+
+ARTIFACTS = os.environ.get("LKV_ARTIFACTS", os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+CKPT_DIR = os.path.join(ARTIFACTS, "ckpt")

@@ -1,0 +1,232 @@
+"""Synthetic long-context task corpus (training side).
+
+Stands in for the paper's ChatQA2/Tulu/Stack mixture *and* for the
+LongBench/RULER/QASPER/LongProc/MT-Bench evaluation suites (the Rust
+workload generators in ``rust/src/workload/`` draw from the same task
+families with disjoint seeds — distribution-level parity, pinned by the
+shared format constants below).
+
+Every family produces (context, query, answer) where the answer depends on
+sparse, identifiable positions inside a distractor-filled context — which
+is exactly the regime KV-eviction quality is measured in, and it makes
+ground-truth-relevant positions known.
+
+Format contract (mirrored in rust/src/workload/spec.rs):
+  * records are `KEY=VAL;` with keys/values over [A-Z0-9];
+  * noise is lowercase words terminated by `;`;
+  * a query is the exact record prefix `KEY=`; the model answers `VAL`
+    followed by EOS (exact-continuation form — pure induction);
+  * few-shot pairs are `x->Y;`, final incomplete pair is the query;
+  * longproc records are `<NAME:VAL>`; the instruction `!tsv;` asks for
+    `NAME\tVAL;` lines in order of appearance.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import random
+import string
+from typing import Callable
+
+CODE_CHARS = string.ascii_uppercase + string.digits
+NOISE_WORDS = (
+    "lorem ipsum dolor amet tempor incidunt labore magna aliqua erat "
+    "sed diam nonumy eirmod invidunt ut vero accusam justo duo kasd "
+    "gubergren clita takimata sanctus est sit elitr".split()
+)
+FAMILIES = ("kv", "multikv", "vt", "fewshot", "code", "qa", "cwe", "longproc", "mtbench")
+
+
+@dataclasses.dataclass
+class Sample:
+    family: str
+    context: str
+    query: str
+    answer: str
+    turns: tuple[tuple[str, str], ...] = ()  # extra (query, answer) turns
+
+    @property
+    def prompt(self) -> str:
+        return self.context + self.query
+
+
+def _code(rng: random.Random, n: int = 3) -> str:
+    return "".join(rng.choice(CODE_CHARS) for _ in range(n))
+
+
+def _noise(rng: random.Random, n_words: int) -> str:
+    return "".join(rng.choice(NOISE_WORDS) + ";" for _ in range(n_words))
+
+
+def _shuffle_merge(rng: random.Random, records: list[str], noise_words: int) -> str:
+    parts = records + [rng.choice(NOISE_WORDS) + ";" for _ in range(noise_words)]
+    rng.shuffle(parts)
+    return "".join(parts)
+
+
+def gen_kv(rng: random.Random, ctx_chars: int) -> Sample:
+    """Single-needle retrieval (RULER NIAH analog)."""
+    key, val = _code(rng), _code(rng)
+    rec = f"{key}={val};"
+    noise = max(0, (ctx_chars - len(rec)) // 6)
+    return Sample("kv", _shuffle_merge(rng, [rec], noise), f"{key}=", val)
+
+
+def gen_multikv(rng: random.Random, ctx_chars: int, n_keys: int = 4) -> Sample:
+    """Multi-needle: several keys present, one queried."""
+    pairs = {}
+    while len(pairs) < n_keys:
+        pairs[_code(rng)] = _code(rng)
+    recs = [f"{k}={v};" for k, v in pairs.items()]
+    used = sum(len(r) for r in recs)
+    noise = max(0, (ctx_chars - used) // 6)
+    k = rng.choice(list(pairs))
+    return Sample("multikv", _shuffle_merge(rng, recs, noise), f"{k}=", pairs[k])
+
+
+def gen_vt(rng: random.Random, ctx_chars: int, depth: int = 3) -> Sample:
+    """Variable tracking: a=V; b=a; c=b; ?c= -> V."""
+    names = rng.sample(string.ascii_lowercase, depth + 4)
+    val = _code(rng)
+    recs = [f"{names[0]}={val};"]
+    for i in range(1, depth):
+        recs.append(f"{names[i]}={names[i-1]};")
+    # distractor chains
+    dval = _code(rng)
+    recs.append(f"{names[depth]}={dval};")
+    recs.append(f"{names[depth+1]}={names[depth]};")
+    used = sum(len(r) for r in recs)
+    noise = max(0, (ctx_chars - used) // 6)
+    # order matters for chains: keep chain order, sprinkle noise between
+    out, ri = [], 0
+    noise_each = noise // max(1, len(recs))
+    for r in recs:
+        out.append(_noise(rng, noise_each))
+        out.append(r)
+    return Sample("vt", "".join(out), f"{names[depth-1]}=", val)
+
+
+def gen_fewshot(rng: random.Random, ctx_chars: int) -> Sample:
+    """In-context pattern: x->X (uppercase mapping), novel query item."""
+    n_shots = max(2, min(8, ctx_chars // 24))
+    items = rng.sample([w for w in NOISE_WORDS if len(w) <= 5], n_shots + 1)
+    recs = [f"{w}->{w.upper()};" for w in items[:-1]]
+    used = sum(len(r) for r in recs)
+    noise = max(0, (ctx_chars - used) // 6)
+    ctx = _noise(rng, noise // 2) + "".join(recs) + _noise(rng, noise - noise // 2)
+    return Sample("fewshot", ctx, f"{items[-1]}->", items[-1].upper())
+
+
+def gen_code(rng: random.Random, ctx_chars: int) -> Sample:
+    """Repository-completion analog: fn NAME(ARG); ... complete one."""
+    n_fns = max(2, ctx_chars // 40)
+    fns = {}
+    while len(fns) < n_fns:
+        fns[_code(rng, 4).lower()] = _code(rng, 3).lower()
+    recs = [f"fn {n}({a});" for n, a in fns.items()]
+    used = sum(len(r) for r in recs)
+    noise = max(0, (ctx_chars - used) // 6)
+    name = rng.choice(list(fns))
+    return Sample("code", _shuffle_merge(rng, recs, noise), f"fn {name}(", fns[name])
+
+
+def gen_qa(rng: random.Random, ctx_chars: int) -> Sample:
+    """Document-QA analog (QASPER/LongBench-QA): word facts in noise."""
+    objs = rng.sample([w for w in NOISE_WORDS if len(w) <= 6], 3)
+    vals = rng.sample([w for w in NOISE_WORDS if len(w) <= 6], 3)
+    recs = [f"{o}={v};" for o, v in zip(objs, vals)]
+    used = sum(len(r) for r in recs)
+    noise = max(0, (ctx_chars - used) // 6)
+    i = rng.randrange(3)
+    return Sample("qa", _shuffle_merge(rng, recs, noise), f"{objs[i]}=", vals[i])
+
+
+def gen_cwe(rng: random.Random, ctx_chars: int) -> Sample:
+    """Common-word extraction: one word repeats far more than others."""
+    target = rng.choice([w for w in NOISE_WORDS if len(w) <= 5])
+    others = [w for w in NOISE_WORDS if w != target]
+    reps = max(4, ctx_chars // 30)
+    parts = [target + ";"] * reps + [rng.choice(others) + ";" for _ in range(max(0, ctx_chars // 8 - reps))]
+    rng.shuffle(parts)
+    return Sample("cwe", "".join(parts), "?max=", target)
+
+
+def gen_longproc(rng: random.Random, ctx_chars: int, n_records: int = 4) -> Sample:
+    """LongProc HTML->TSV analog: extract all records, in order."""
+    recs = []
+    while len(recs) < n_records:
+        recs.append((_code(rng), _code(rng)))
+    tagged = [f"<{n}:{v}>" for n, v in recs]
+    used = sum(len(t) for t in tagged)
+    noise = max(0, (ctx_chars - used) // 6)
+    out, per = [], noise // max(1, n_records)
+    for t in tagged:
+        out.append(_noise(rng, per))
+        out.append(t)
+    answer = "".join(f"{n}\t{v};" for n, v in recs)
+    return Sample("longproc", "".join(out), "!tsv;", answer)
+
+
+def gen_mtbench(rng: random.Random, ctx_chars: int) -> Sample:
+    """Two-turn conversation: both queries hit the shared turn-1 context."""
+    pairs = {}
+    while len(pairs) < 3:
+        pairs[_code(rng)] = _code(rng)
+    recs = [f"{k}={v};" for k, v in pairs.items()]
+    used = sum(len(r) for r in recs)
+    noise = max(0, (ctx_chars - used) // 6)
+    ks = list(pairs)
+    k1, k2 = rng.sample(ks, 2)
+    return Sample(
+        "mtbench",
+        _shuffle_merge(rng, recs, noise),
+        f"{k1}=",
+        pairs[k1],
+        turns=((f"{k2}=", pairs[k2]),),
+    )
+
+
+GENERATORS: dict[str, Callable[..., Sample]] = {
+    "kv": gen_kv,
+    "multikv": gen_multikv,
+    "vt": gen_vt,
+    "fewshot": gen_fewshot,
+    "code": gen_code,
+    "qa": gen_qa,
+    "cwe": gen_cwe,
+    "longproc": gen_longproc,
+    "mtbench": gen_mtbench,
+}
+
+# Pretraining mixture (weights roughly by how much signal each family
+# carries for retrieval-style attention; mirrors the paper's mixed
+# instruction + pretraining-text recipe).
+TRAIN_MIX = (
+    ("kv", 0.22),
+    ("multikv", 0.16),
+    ("vt", 0.10),
+    ("fewshot", 0.12),
+    ("code", 0.12),
+    ("qa", 0.12),
+    ("cwe", 0.06),
+    ("longproc", 0.06),
+    ("mtbench", 0.04),
+)
+
+
+def sample_family(rng: random.Random) -> str:
+    r = rng.random()
+    acc = 0.0
+    for fam, w in TRAIN_MIX:
+        acc += w
+        if r <= acc:
+            return fam
+    return TRAIN_MIX[-1][0]
+
+
+def gen_sample(rng: random.Random, family: str, ctx_chars: int) -> Sample:
+    return GENERATORS[family](rng, ctx_chars)
+
+
+def gen_mixed(rng: random.Random, ctx_chars: int) -> Sample:
+    return gen_sample(rng, sample_family(rng), ctx_chars)

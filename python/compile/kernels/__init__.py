@@ -1,0 +1,1 @@
+"""L1 Pallas kernels: the eviction hot-spots (see lookahead_score.py, decode_attn.py)."""

@@ -1,0 +1,136 @@
+"""Pallas kernel: single-token decode attention over the compacted KV cache.
+
+The serving-side payoff of eviction is that the decode working set fits in
+fast memory; this kernel makes the HBM->VMEM schedule explicit. For one
+decode step it computes GQA attention of the new token's queries over the
+post-eviction cache and also exports the attention probabilities (used by
+the coordinator for ground-truth importance tracking, Table 8, and for the
+TOVA/H2O decode-time policies).
+
+Same two-pass flash decomposition as `lookahead_score.py`:
+
+  * pass 1: per query head, stream cache blocks along the sequential inner
+    grid axis accumulating online-softmax stats (m, l) in the revisited
+    output block;
+  * pass 2: per (head, cache block), normalize with the stats, emit the
+    probability block, and accumulate `p @ v` into the revisited output
+    row.
+
+GQA is expressed in the BlockSpec index maps: query head `h` reads KV head
+`h // group`, so each KV block is fetched once per query group on real
+hardware. interpret=True for CPU PJRT (see package docstring).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e9
+DEFAULT_BLOCK_C = 128
+
+
+def _stats_kernel(dims_ref, q_ref, k_ref, m_ref, l_ref, *, bc: int):
+    h = pl.program_id(0)
+    j = pl.program_id(1)
+    n_valid = dims_ref[0]
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[...].astype(jnp.float32)  # [1, dh]
+    k = k_ref[0].astype(jnp.float32)  # [bc, dh]
+    scale = 1.0 / jnp.sqrt(jnp.float32(q.shape[-1]))
+    s = (q @ k.T) * scale  # [1, bc]
+    cols = j * bc + jax.lax.broadcasted_iota(jnp.int32, (1, bc), 1)
+    valid = cols < n_valid
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None]) * valid
+    l_ref[...] = l_ref[...] * jnp.exp(m_prev - m_new) + jnp.sum(p, axis=-1)
+    m_ref[...] = m_new
+
+
+def _attend_kernel(dims_ref, q_ref, k_ref, v_ref, m_ref, l_ref, out_ref, probs_ref, *, bc: int):
+    j = pl.program_id(1)
+    n_valid = dims_ref[0]
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    q = q_ref[...].astype(jnp.float32)  # [1, dh]
+    k = k_ref[0].astype(jnp.float32)  # [bc, dh]
+    v = v_ref[0].astype(jnp.float32)  # [bc, dh]
+    scale = 1.0 / jnp.sqrt(jnp.float32(q.shape[-1]))
+    s = (q @ k.T) * scale  # [1, bc]
+    cols = j * bc + jax.lax.broadcasted_iota(jnp.int32, (1, bc), 1)
+    valid = cols < n_valid
+    p = jnp.exp(s - m_ref[...][:, None]) * valid
+    p = p / l_ref[...][:, None]  # [1, bc]
+    probs_ref[...] = p
+    out_ref[...] += p @ v  # [1, dh]
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "interpret"))
+def decode_attn(
+    q: jnp.ndarray,  # [H, dh]
+    k: jnp.ndarray,  # [Hkv, C, dh]
+    v: jnp.ndarray,  # [Hkv, C, dh]
+    n_valid,  # scalar i32: live slots (cols >= n_valid are masked)
+    *,
+    block_c: int = DEFAULT_BLOCK_C,
+    interpret: bool = True,
+):
+    """Host wrapper. Returns (out [H, dh], probs [H, C])."""
+    h, dh = q.shape
+    hkv, c_in, _ = k.shape
+    group = h // hkv
+    bc = min(block_c, c_in)
+    pad = (-c_in) % bc
+    if pad:  # off-bucket caps (build-time generation utility); serving caps are multiples of 64
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0)))
+    c = c_in + pad
+    n_blocks = c // bc
+    dims = jnp.asarray([n_valid], dtype=jnp.int32).reshape(1)
+
+    whole_dims = pl.BlockSpec((1,), lambda h_, j: (0,))
+    qspec = pl.BlockSpec((1, dh), lambda h_, j: (h_, 0))
+    kvspec = pl.BlockSpec((1, bc, dh), lambda h_, j: (h_ // group, j, 0))
+    stat = pl.BlockSpec((1,), lambda h_, j: (h_,))
+
+    m, l = pl.pallas_call(
+        functools.partial(_stats_kernel, bc=bc),
+        grid=(h, n_blocks),
+        in_specs=[whole_dims, qspec, kvspec],
+        out_specs=[stat, stat],
+        out_shape=[
+            jax.ShapeDtypeStruct((h,), jnp.float32),
+            jax.ShapeDtypeStruct((h,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(dims, q, k)
+
+    out, probs = pl.pallas_call(
+        functools.partial(_attend_kernel, bc=bc),
+        grid=(h, n_blocks),
+        in_specs=[whole_dims, qspec, kvspec, kvspec, stat, stat],
+        out_specs=[
+            pl.BlockSpec((1, dh), lambda h_, j: (h_, 0)),
+            pl.BlockSpec((1, bc), lambda h_, j: (h_, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((h, dh), jnp.float32),
+            jax.ShapeDtypeStruct((h, c), jnp.float32),
+        ],
+        interpret=interpret,
+    )(dims, q, k, v, m, l)
+    return out, probs[:, :c_in]

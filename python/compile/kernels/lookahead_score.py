@@ -1,0 +1,155 @@
+"""Pallas kernel: lookahead importance scores (the paper's eviction hot-spot).
+
+Computes, for one (layer, head), the Algorithm-2 importance vector
+
+    scores[j] = mean_i softmax_j'( q_i . k_j' / sqrt(d) )[j],   j < s_max
+
+without ever materializing the full `n x s_tot` attention matrix in slow
+memory. This is the TPU rethink of the paper's Appendix-C trick (flash
+forward + eager cross-window): a **two-pass flash decomposition**:
+
+  * pass 1 (`_stats_kernel`): stream key blocks HBM->VMEM along a
+    sequential grid, maintaining the online-softmax statistics
+    (running row-max `m`, running denominator `l`) for all `n` lookahead
+    queries in the revisited output block (the canonical Pallas
+    accumulate-in-output pattern).
+  * pass 2 (`_score_kernel`): embarrassingly parallel over prompt-key
+    blocks; each grid step re-computes its `n x bk` logit tile, normalizes
+    with the pass-1 stats and emits the column means for its block.
+
+VMEM per step is `n x bk` (plus the `bk x dh` key tile) -- at the paper's
+scale (n=32, bk=128, fp32) that is 16 KiB of logits versus a 32 x 131072
+full matrix. Lowered with ``interpret=True`` (CPU PJRT cannot execute
+Mosaic custom-calls); block sizes keep the lane dimension at 128 for the
+real-TPU layout documented in EXPERIMENTS.md §Perf.
+
+Masking rules (see `ref.lkv_score_ref`): prompt columns are valid when
+`col < length`; the `n` lookahead keys sit at static columns
+`[s_max, s_max + n)` and are causally visible (`col - s_max <= row`).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e9
+DEFAULT_BLOCK_K = 128
+
+
+def _masks(pid, bk: int, n: int, s_max: int, length):
+    """Validity mask [n, bk] for key-block `pid` (shared by both passes)."""
+    cols = pid * bk + jax.lax.broadcasted_iota(jnp.int32, (n, bk), 1)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (n, bk), 0)
+    prompt_ok = cols < length
+    look_ok = (cols >= s_max) & ((cols - s_max) <= rows)
+    return prompt_ok | look_ok
+
+
+def _stats_kernel(dims_ref, q_ref, k_ref, m_ref, l_ref, *, bk: int, s_max: int):
+    """Pass 1: online-softmax stats over all key blocks (sequential grid)."""
+    pid = pl.program_id(0)
+    length = dims_ref[0]
+    n = q_ref.shape[0]
+
+    @pl.when(pid == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[...].astype(jnp.float32)
+    k = k_ref[...].astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(jnp.float32(q.shape[-1]))
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # [n, bk]
+    valid = _masks(pid, bk, n, s_max, length)
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    m_cur = jnp.max(s, axis=-1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    # exp of fully-masked blocks underflows to 0 via the NEG_INF fill.
+    p = jnp.exp(s - m_new[:, None]) * valid
+    l_new = l_prev * jnp.exp(m_prev - m_new) + jnp.sum(p, axis=-1)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+
+def _score_kernel(dims_ref, q_ref, k_ref, m_ref, l_ref, out_ref, *, bk: int, s_max: int):
+    """Pass 2: normalized column means for one prompt-key block."""
+    pid = pl.program_id(0)
+    length = dims_ref[0]
+    n = q_ref.shape[0]
+
+    q = q_ref[...].astype(jnp.float32)
+    k = k_ref[...].astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(jnp.float32(q.shape[-1]))
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # [n, bk]
+    valid = _masks(pid, bk, n, s_max, length)
+    p = jnp.exp(s - m_ref[...][:, None]) * valid
+    p = p / l_ref[...][:, None]
+    out_ref[...] = jnp.sum(p, axis=0) / jnp.float32(n)
+
+
+def _pad_cols(k: jnp.ndarray, bk: int) -> jnp.ndarray:
+    s_tot = k.shape[0]
+    pad = (-s_tot) % bk
+    if pad:
+        k = jnp.pad(k, ((0, pad), (0, 0)))
+    return k
+
+
+@functools.partial(jax.jit, static_argnames=("s_max", "block_k", "interpret"))
+def lkv_score(
+    q: jnp.ndarray,  # [n, dh]
+    k: jnp.ndarray,  # [s_max + n, dh]
+    length,  # scalar i32
+    *,
+    s_max: int,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Host wrapper: two pallas_call passes; returns scores [s_max]."""
+    n, dh = q.shape
+    bk = min(block_k, s_max)
+    kp = _pad_cols(k, bk)  # padded cols are masked (col >= length, col < s_max fails look_ok... they are >= s_max+n so look_ok false)
+    s_pad = kp.shape[0]
+    dims = jnp.asarray([length], dtype=jnp.int32).reshape(1)
+    n_blocks = s_pad // bk
+
+    whole_q = pl.BlockSpec((n, dh), lambda i: (0, 0))
+    kblock = pl.BlockSpec((bk, dh), lambda i: (i, 0))
+    whole_stat = pl.BlockSpec((n,), lambda i: (0,))
+    whole_dims = pl.BlockSpec((1,), lambda i: (0,))
+
+    m, l = pl.pallas_call(
+        functools.partial(_stats_kernel, bk=bk, s_max=s_max),
+        grid=(n_blocks,),
+        in_specs=[whole_dims, whole_q, kblock],
+        out_specs=[whole_stat, whole_stat],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(dims, q, kp)
+
+    n_prompt_blocks = s_max // bk
+    scores = pl.pallas_call(
+        functools.partial(_score_kernel, bk=bk, s_max=s_max),
+        grid=(n_prompt_blocks,),
+        in_specs=[whole_dims, whole_q, kblock, whole_stat, whole_stat],
+        out_specs=pl.BlockSpec((bk,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((s_max,), jnp.float32),
+        interpret=interpret,
+    )(dims, q, kp, m, l)
+    return scores
+
+
+def lkv_score_batched(q, k, length, *, s_max, block_k=DEFAULT_BLOCK_K, interpret=True):
+    """vmap over leading (layer*head) axes: q [G,n,dh], k [G,s_tot,dh] -> [G,s_max]."""
+    fn = functools.partial(lkv_score, s_max=s_max, block_k=block_k, interpret=interpret)
+    return jax.vmap(lambda qq, kk: fn(qq, kk, length))(q, k)

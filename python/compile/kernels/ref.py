@@ -1,0 +1,66 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness ground truth).
+
+These are the *definitions* the kernels must match; pytest/hypothesis sweeps
+assert `assert_allclose(kernel(...), ref(...))` over shapes and seeds.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e9
+
+
+def lkv_score_ref(
+    q: jnp.ndarray,  # [n, dh] lookahead (or suffix) queries, post-RoPE
+    k: jnp.ndarray,  # [s_tot, dh] keys: s_max prompt rows then n lookahead rows
+    length,  # scalar i32: number of valid prompt tokens (<= s_max)
+    s_max: int,  # static prompt bucket size
+) -> jnp.ndarray:
+    """Importance scores per Algorithm 2: softmax over the full visible row
+    (prompt cols < length plus causally-visible lookahead cols), then the
+    column mean over the n lookahead rows, restricted to prompt columns.
+
+    Returns [s_max] with zeros at cols >= length.
+    """
+    n, dh = q.shape
+    s_tot = k.shape[0]
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+    s = (q.astype(jnp.float32) @ k.astype(jnp.float32).T) * scale  # [n, s_tot]
+    cols = jnp.arange(s_tot)
+    rows = jnp.arange(n)
+    prompt_ok = cols[None, :] < length  # [1, s_tot]
+    look_ok = (cols[None, :] >= s_max) & ((cols[None, :] - s_max) <= rows[:, None])
+    valid = prompt_ok | look_ok
+    s = jnp.where(valid, s, NEG_INF)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p * valid
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    scores = jnp.mean(p[:, :s_max], axis=0)  # [s_max]
+    return jnp.where(jnp.arange(s_max) < length, scores, 0.0)
+
+
+def decode_attn_ref(
+    q: jnp.ndarray,  # [H, dh] single-token queries, post-RoPE
+    k: jnp.ndarray,  # [Hkv, C, dh] compacted key cache
+    v: jnp.ndarray,  # [Hkv, C, dh]
+    n_valid,  # scalar i32: number of live cache slots
+):
+    """Single-query GQA attention over the compacted cache.
+
+    Returns (out [H, dh], probs [H, C]); probs are zero at cols >= n_valid.
+    """
+    h, dh = q.shape
+    hkv, c, _ = k.shape
+    group = h // hkv
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+    kh = jnp.repeat(k, group, axis=0)  # [H, C, dh]
+    vh = jnp.repeat(v, group, axis=0)
+    s = jnp.einsum("hd,hcd->hc", q.astype(jnp.float32), kh.astype(jnp.float32)) * scale
+    valid = jnp.arange(c)[None, :] < n_valid
+    s = jnp.where(valid, s, NEG_INF)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p * valid
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("hc,hcd->hd", p, vh)
+    return out, p

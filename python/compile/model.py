@@ -1,0 +1,500 @@
+"""L2: pure-JAX LLaMA-style transformer (RMSNorm + RoPE + GQA + SwiGLU).
+
+One parameter layout, one core forward, many heads on top:
+
+* ``lm_logits``        — training forward (full causal, batched);
+* ``prefill``          — serving prefill: KV export + last-token logits +
+                         the score tensors every baseline eviction policy
+                         consumes (suffix-window rows, H2O column means);
+* ``prefill_lkv``      — serving prefill with appended lookahead tokens and
+                         selective LoRA (paper Eq. 3), exporting the
+                         Pallas-kernel importance scores;
+* ``suffix_forward``   — the shared machinery behind both LookaheadKV
+                         training passes (GT scores from the true response
+                         Y, estimates from the lookahead tokens P);
+* ``decode_step``      — single-token decode over a compacted cache with
+                         in-graph cache insertion (caches stay device-side
+                         across steps in the Rust engine).
+
+Parameters are a plain dict; ``param_order`` fixes the canonical flat
+ordering that ``aot.py`` writes to ``weights.npz`` and the Rust runtime
+feeds positionally.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import OBS_WINDOW, LookaheadConfig, ModelConfig
+from .kernels.lookahead_score import lkv_score_batched
+from .kernels.decode_attn import decode_attn
+
+NEG_INF = -1e9
+EPS = 1e-5
+
+# --------------------------------------------------------------------------
+# Parameters
+# --------------------------------------------------------------------------
+
+LAYER_FIELDS = ("attn_norm", "wq", "wk", "wv", "wo", "mlp_norm", "wgate", "wup", "wdown")
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> dict:
+    """He-style init; weights stored input-major ([d_in, d_out])."""
+    d, dh = cfg.d_model, cfg.head_dim
+
+    def dense(key, n_in, n_out):
+        return jax.random.normal(key, (n_in, n_out), jnp.float32) * (n_in**-0.5)
+
+    keys = jax.random.split(key, 2 + cfg.n_layers)
+    params = {
+        "emb": jax.random.normal(keys[0], (cfg.vocab, d), jnp.float32) * 0.02,
+        "final_norm": jnp.ones((d,), jnp.float32),
+        "head": dense(keys[1], d, cfg.vocab),
+        "layers": [],
+    }
+    for i in range(cfg.n_layers):
+        ks = jax.random.split(keys[2 + i], 7)
+        params["layers"].append(
+            {
+                "attn_norm": jnp.ones((d,), jnp.float32),
+                "wq": dense(ks[0], d, cfg.q_dim),
+                "wk": dense(ks[1], d, cfg.kv_dim),
+                "wv": dense(ks[2], d, cfg.kv_dim),
+                "wo": dense(ks[3], cfg.q_dim, d),
+                "mlp_norm": jnp.ones((d,), jnp.float32),
+                "wgate": dense(ks[4], d, cfg.ff),
+                "wup": dense(ks[5], d, cfg.ff),
+                "wdown": dense(ks[6], cfg.ff, d),
+            }
+        )
+    return params
+
+
+def param_order(cfg: ModelConfig) -> list[str]:
+    """Canonical flat ordering, shared with the Rust runtime via the manifest."""
+    names = ["emb"]
+    for i in range(cfg.n_layers):
+        names += [f"l{i}.{f}" for f in LAYER_FIELDS]
+    names += ["final_norm", "head"]
+    return names
+
+
+def flatten_params(cfg: ModelConfig, params: dict) -> list[jnp.ndarray]:
+    out = [params["emb"]]
+    for layer in params["layers"]:
+        out += [layer[f] for f in LAYER_FIELDS]
+    out += [params["final_norm"], params["head"]]
+    return out
+
+
+def unflatten_params(cfg: ModelConfig, flat: list[jnp.ndarray]) -> dict:
+    it = iter(flat)
+    params = {"emb": next(it), "layers": []}
+    for _ in range(cfg.n_layers):
+        params["layers"].append({f: next(it) for f in LAYER_FIELDS})
+    params["final_norm"] = next(it)
+    params["head"] = next(it)
+    return params
+
+
+# --------------------------------------------------------------------------
+# Primitives
+# --------------------------------------------------------------------------
+
+
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + EPS) * w
+
+
+def rope_cos_sin(positions: jnp.ndarray, head_dim: int, theta: float):
+    """positions [...,T] -> cos/sin [...,T, head_dim] (half-split convention)."""
+    half = head_dim // 2
+    inv = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * inv  # [...,T, half]
+    cos = jnp.concatenate([jnp.cos(ang), jnp.cos(ang)], axis=-1)
+    sin = jnp.concatenate([jnp.sin(ang), jnp.sin(ang)], axis=-1)
+    return cos, sin
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x [...,T, n_heads, head_dim]; cos/sin [...,T, head_dim]."""
+    half = x.shape[-1] // 2
+    rot = jnp.concatenate([-x[..., half:], x[..., :half]], axis=-1)
+    return x * cos[..., None, :] + rot * sin[..., None, :]
+
+
+class LoraSpec(NamedTuple):
+    """Selective LoRA (paper §3.1): delta applied only where row_mask is 1."""
+
+    params: dict  # per-layer dicts: {"wq": (A, B), ...}
+    row_mask: jnp.ndarray  # [T] 1.0 on lookahead rows, 0.0 elsewhere
+    scale: float
+
+
+def _linear(h, w, name, layer_idx, lora: Optional[LoraSpec]):
+    y = h @ w
+    if lora is not None and name in lora.params[layer_idx]:
+        a, b = lora.params[layer_idx][name]
+        y = y + ((h * lora.row_mask[:, None]) @ a) @ b * lora.scale
+    return y
+
+
+# --------------------------------------------------------------------------
+# Core forward
+# --------------------------------------------------------------------------
+
+# Per-layer callback: reducer(layer_idx, q, k_rep, v, probs) -> aux pytree.
+# q: [T, H, dh] (post-RoPE), k_rep: [T, H, dh] (GQA-expanded, post-RoPE),
+# probs: [H, T, T] attention probabilities (rows = queries).
+Reducer = Callable[[int, jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray], dict]
+
+
+def core_forward(
+    params: dict,
+    cfg: ModelConfig,
+    x: jnp.ndarray,  # [T, d] input embeddings
+    pos_ids: jnp.ndarray,  # [T] RoPE positions
+    mask: jnp.ndarray,  # [T, T] bool, True = attend
+    lora: Optional[LoraSpec] = None,
+    reducer: Optional[Reducer] = None,
+    collect_kv: bool = False,
+):
+    """Runs all layers; returns (hidden [T, d], aux dict).
+
+    aux["k"]/aux["v"]: [L, Hkv, T, dh] post-RoPE keys / values when
+    collect_kv; aux["reduced"]: list of reducer outputs per layer.
+    """
+    t = x.shape[0]
+    cos, sin = rope_cos_sin(pos_ids, cfg.head_dim, cfg.rope_theta)
+    add_mask = jnp.where(mask, 0.0, NEG_INF)  # [T, T]
+    ks, vs, reduced = [], [], []
+    for li, layer in enumerate(params["layers"]):
+        h = rmsnorm(x, layer["attn_norm"])
+        q = _linear(h, layer["wq"], "wq", li, lora).reshape(t, cfg.n_heads, cfg.head_dim)
+        k = _linear(h, layer["wk"], "wk", li, lora).reshape(t, cfg.n_kv_heads, cfg.head_dim)
+        v = _linear(h, layer["wv"], "wv", li, lora).reshape(t, cfg.n_kv_heads, cfg.head_dim)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+        k_rep = jnp.repeat(k, cfg.group, axis=1)  # [T, H, dh]
+        v_rep = jnp.repeat(v, cfg.group, axis=1)
+        scores = jnp.einsum("shd,thd->hst", q, k_rep) / jnp.sqrt(jnp.float32(cfg.head_dim))
+        probs = jax.nn.softmax(scores + add_mask[None], axis=-1)  # [H, T, T]
+        attn = jnp.einsum("hst,thd->shd", probs, v_rep).reshape(t, cfg.q_dim)
+        x = x + _linear(attn, layer["wo"], "wo", li, lora)
+        h2 = rmsnorm(x, layer["mlp_norm"])
+        gate = jax.nn.silu(_linear(h2, layer["wgate"], "wgate", li, lora))
+        up = _linear(h2, layer["wup"], "wup", li, lora)
+        x = x + _linear(gate * up, layer["wdown"], "wdown", li, lora)
+        if collect_kv:
+            ks.append(jnp.transpose(k, (1, 0, 2)))  # [Hkv, T, dh]
+            vs.append(jnp.transpose(v, (1, 0, 2)))
+        if reducer is not None:
+            reduced.append(reducer(li, q, k_rep, v, probs))
+    aux = {}
+    if collect_kv:
+        aux["k"] = jnp.stack(ks)  # [L, Hkv, T, dh]
+        aux["v"] = jnp.stack(vs)
+    if reducer is not None:
+        aux["reduced"] = reduced
+    return x, aux
+
+
+def _head_logits(params: dict, hidden_row: jnp.ndarray) -> jnp.ndarray:
+    return rmsnorm(hidden_row, params["final_norm"]) @ params["head"]
+
+
+# --------------------------------------------------------------------------
+# Training forward (batched LM)
+# --------------------------------------------------------------------------
+
+
+def lm_logits(params: dict, cfg: ModelConfig, tokens: jnp.ndarray) -> jnp.ndarray:
+    """tokens [B, S] -> logits [B, S, V] (plain causal)."""
+
+    def single(tok):
+        s = tok.shape[0]
+        x = params["emb"][tok]
+        pos = jnp.arange(s)
+        mask = pos[None, :] <= pos[:, None]
+        hidden, _ = core_forward(params, cfg, x, pos, mask)
+        return rmsnorm(hidden, params["final_norm"]) @ params["head"]
+
+    return jax.vmap(single)(tokens)
+
+
+# --------------------------------------------------------------------------
+# Serving prefill (base): KV + logits + baseline score tensors
+# --------------------------------------------------------------------------
+
+
+def prefill(
+    params: dict,
+    cfg: ModelConfig,
+    tokens: jnp.ndarray,
+    length: jnp.ndarray,
+    logit_pos: Optional[jnp.ndarray] = None,
+    window: int = OBS_WINDOW,
+):
+    """tokens [S] i32, length scalar i32, logit_pos scalar i32 (default
+    length-1; the SpecKV/LAQ rescore path appends draft tokens and needs
+    logits at the last *prompt* position instead).
+
+    Returns dict:
+      k, v:          [L, Hkv, S, dh] post-RoPE KV for the prompt
+      logits:        [V] next-token logits at position logit_pos
+      window_scores: [L, H, W, S] attention rows of the last W real
+                     positions (rows before `win_start` are zeroed); the
+                     manifest records win_start = clamp(length-W, 0, S-W)
+      h2o_scores:    [L, H, S] column means over valid rows (H2O salience)
+    """
+    s = tokens.shape[0]
+    x = params["emb"][tokens]
+    pos = jnp.arange(s)
+    valid = pos < length
+    mask = (pos[None, :] <= pos[:, None]) & valid[None, :] & valid[:, None]
+    win_start = jnp.clip(length - window, 0, s - window)
+
+    def reducer(li, q, k_rep, v, probs):
+        probs = probs * valid[None, :, None]  # zero padded query rows
+        h2o = jnp.sum(probs, axis=1) / jnp.maximum(length, 1).astype(jnp.float32)
+        win = jax.lax.dynamic_slice(
+            probs, (0, win_start, 0), (cfg.n_heads, window, s)
+        )  # [H, W, S]
+        return {"h2o": h2o, "win": win}
+
+    hidden, aux = core_forward(params, cfg, x, pos, mask, reducer=reducer, collect_kv=True)
+    if logit_pos is None:
+        logit_pos = jnp.maximum(length - 1, 0)
+    logits = _head_logits(params, hidden[logit_pos])
+    return {
+        "k": aux["k"],
+        "v": aux["v"],
+        "logits": logits,
+        "window_scores": jnp.stack([r["win"] for r in aux["reduced"]]),
+        "h2o_scores": jnp.stack([r["h2o"] for r in aux["reduced"]]),
+    }
+
+
+# --------------------------------------------------------------------------
+# Suffix forward — shared by LookaheadKV training (GT pass & LKV pass)
+# --------------------------------------------------------------------------
+
+
+def suffix_forward(
+    params: dict,
+    cfg: ModelConfig,
+    tokens: jnp.ndarray,  # [S] prompt tokens (padded)
+    length: jnp.ndarray,  # scalar i32
+    suffix_emb: jnp.ndarray,  # [n, d] embeddings appended after the prompt
+    lora: Optional[dict] = None,  # lookahead LoRA params (per-layer dicts)
+    lora_scale: float = 1.0,
+    use_kernel: bool = False,
+    collect_kv: bool = False,
+):
+    """Runs the model over [prompt ; suffix] with the Algorithm-2 mask:
+    prompt rows are plain causal; suffix row r sees prompt cols < length
+    plus suffix cols <= r. Suffix rows get RoPE positions length + r.
+
+    Returns (scores, aux): scores [L, H, S] = per-layer/head column means
+    of the suffix rows' attention over prompt columns (zero at
+    cols >= length) — computed by the Pallas kernel when `use_kernel`,
+    else by slicing the dense probabilities (training path, which needs
+    the dense rows for backprop anyway); aux carries cross [L, H, n, S]
+    (dense path only), plus k/v/last_hidden when collect_kv.
+    """
+    s = tokens.shape[0]
+    n = suffix_emb.shape[0]
+    t = s + n
+    x = jnp.concatenate([params["emb"][tokens], suffix_emb], axis=0)
+    pos = jnp.concatenate([jnp.arange(s), length + jnp.arange(n)])
+    idx = jnp.arange(t)
+    causal = idx[None, :] <= idx[:, None]
+    mask = causal & ((idx[None, :] < length) | (idx[None, :] >= s))
+
+    lora_spec = None
+    if lora is not None:
+        row_mask = (idx >= s).astype(jnp.float32)
+        lora_spec = LoraSpec(params=lora, row_mask=row_mask, scale=lora_scale)
+
+    def reducer(li, q, k_rep, v, probs):
+        out = {}
+        if use_kernel:
+            # [H, n, dh] suffix queries / [H, s+n, dh] all keys -> kernel
+            qh = jnp.transpose(q[s:], (1, 0, 2))
+            kh = jnp.transpose(k_rep, (1, 0, 2))
+            out["scores"] = lkv_score_batched(qh, kh, length, s_max=s)  # [H, S]
+        else:
+            cross = probs[:, s:, :s]  # [H, n, S]
+            cross = cross * (jnp.arange(s)[None, None, :] < length)
+            out["cross"] = cross
+            out["scores"] = jnp.mean(cross, axis=1)
+        return out
+
+    hidden, aux = core_forward(
+        params, cfg, x, pos, mask, lora=lora_spec, reducer=reducer, collect_kv=collect_kv
+    )
+    scores = jnp.stack([r["scores"] for r in aux["reduced"]])  # [L, H, S]
+    extra = {}
+    if not use_kernel:
+        extra["cross"] = jnp.stack([r["cross"] for r in aux["reduced"]])  # [L, H, n, S]
+    if collect_kv:
+        extra["k"] = aux["k"][:, :, :s]  # prompt rows only
+        extra["v"] = aux["v"][:, :, :s]
+        extra["last_hidden"] = hidden[jnp.maximum(length - 1, 0)]
+    return scores, extra
+
+
+def prefill_lkv(
+    params: dict,
+    cfg: ModelConfig,
+    lkv_emb: jnp.ndarray,  # [n_lookahead, d] learned lookahead embeddings
+    lkv_lora: Optional[dict],
+    lkv_cfg: LookaheadConfig,
+    tokens: jnp.ndarray,
+    length: jnp.ndarray,
+):
+    """Serving prefill with lookahead tokens (paper Fig. 1b / Algorithm 2).
+
+    One forward pass returns everything decoding needs *plus* the learned
+    importance scores — no draft generation:
+      k, v [L, Hkv, S, dh], logits [V], lkv_scores [L, H, S].
+    """
+    scores, extra = suffix_forward(
+        params,
+        cfg,
+        tokens,
+        length,
+        lkv_emb,
+        lora=lkv_lora,
+        lora_scale=lkv_cfg.scale,
+        use_kernel=True,
+        collect_kv=True,
+    )
+    logits = _head_logits(params, extra["last_hidden"])
+    return {"k": extra["k"], "v": extra["v"], "logits": logits, "lkv_scores": scores}
+
+
+# --------------------------------------------------------------------------
+# Decode step (serving)
+# --------------------------------------------------------------------------
+
+
+def decode_step(
+    params: dict,
+    cfg: ModelConfig,
+    token: jnp.ndarray,  # scalar i32
+    pos: jnp.ndarray,  # scalar i32 absolute RoPE position
+    k_cache: jnp.ndarray,  # [L, Hkv, C, dh]
+    v_cache: jnp.ndarray,  # [L, Hkv, C, dh]
+    cache_lens: jnp.ndarray,  # [L] i32 live slots per layer (pre-insert)
+    use_kernel: bool = True,
+):
+    """One decode step with in-graph cache insertion at `cache_lens[l]`.
+
+    Returns dict: logits [V], k_cache/v_cache (updated), probs [L, H, C]
+    (attention over the cache *after* insertion; cols >= cache_lens[l]+1
+    are zero). The new token's KV is inserted first, so it always attends
+    to itself. Attention runs through the Pallas decode kernel.
+    """
+    c = k_cache.shape[2]
+    x = params["emb"][token]  # [d]
+    cos, sin = rope_cos_sin(pos[None], cfg.head_dim, cfg.rope_theta)  # [1, dh]
+    new_ks, new_vs, probs_all = [], [], []
+    kc_out, vc_out = k_cache, v_cache
+    for li, layer in enumerate(params["layers"]):
+        h = rmsnorm(x, layer["attn_norm"])
+        q = (h @ layer["wq"]).reshape(1, cfg.n_heads, cfg.head_dim)
+        k = (h @ layer["wk"]).reshape(1, cfg.n_kv_heads, cfg.head_dim)
+        v = (h @ layer["wv"]).reshape(1, cfg.n_kv_heads, cfg.head_dim)
+        q = apply_rope(q, cos, sin)[0]  # [H, dh]
+        k = apply_rope(k, cos, sin)[0]  # [Hkv, dh]
+        v = v[0]
+        kc = jax.lax.dynamic_update_slice(
+            kc_out[li], k[:, None, :], (0, cache_lens[li], 0)
+        )
+        vc = jax.lax.dynamic_update_slice(
+            vc_out[li], v[:, None, :], (0, cache_lens[li], 0)
+        )
+        kc_out = kc_out.at[li].set(kc)
+        vc_out = vc_out.at[li].set(vc)
+        if use_kernel:
+            out, probs = decode_attn(q, kc, vc, cache_lens[li] + 1)
+        else:  # dense fallback for build-time generation loops (jit/scan-friendly)
+            from .kernels.ref import decode_attn_ref
+
+            out, probs = decode_attn_ref(q, kc, vc, cache_lens[li] + 1)
+        x = x + out.reshape(cfg.q_dim) @ layer["wo"]
+        h2 = rmsnorm(x, layer["mlp_norm"])
+        x = x + (jax.nn.silu(h2 @ layer["wgate"]) * (h2 @ layer["wup"])) @ layer["wdown"]
+        probs_all.append(probs)
+    logits = _head_logits(params, x)
+    return {
+        "logits": logits,
+        "k_cache": kc_out,
+        "v_cache": vc_out,
+        "probs": jnp.stack(probs_all),  # [L, H, C]
+    }
+
+
+# --------------------------------------------------------------------------
+# Batched generation (build-time only: training data + eval references)
+# --------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "max_new", "greedy"))
+def generate_batch(
+    params: dict,
+    cfg: ModelConfig,
+    tokens: jnp.ndarray,  # [B, S] padded prompts
+    lengths: jnp.ndarray,  # [B]
+    key: jax.Array,
+    *,
+    max_new: int,
+    greedy: bool = True,
+    temperature: float = 1.0,
+):
+    """Full-cache greedy/temperature generation. Returns [B, max_new] i32.
+
+    Build-time utility (training-data generation, python-side references);
+    the serving path decodes in Rust through the AOT decode graphs.
+    """
+    b, s = tokens.shape
+
+    def single(tok, length, k0):
+        x = params["emb"][tok]
+        pos = jnp.arange(s)
+        mask = (pos[None, :] <= pos[:, None]) & (pos[None, :] < length)
+        hidden, aux = core_forward(params, cfg, x, pos, mask, collect_kv=True)
+        cap = s + max_new
+        kc = jnp.pad(aux["k"], ((0, 0), (0, 0), (0, max_new), (0, 0)))
+        vc = jnp.pad(aux["v"], ((0, 0), (0, 0), (0, max_new), (0, 0)))
+        logits0 = _head_logits(params, hidden[length - 1])
+
+        def pick(logits, kk):
+            if greedy:
+                return jnp.argmax(logits).astype(jnp.int32)
+            z = logits / jnp.maximum(temperature, 1e-4)
+            return jax.random.categorical(kk, z).astype(jnp.int32)
+
+        def step(carry, i):
+            kc, vc, logits, cur_len, kk = carry
+            kk, sub = jax.random.split(kk)
+            tok_i = pick(logits, sub)
+            res = decode_step(
+                params, cfg, tok_i, cur_len, kc, vc,
+                jnp.full((cfg.n_layers,), cur_len), use_kernel=False,
+            )
+            return (res["k_cache"], res["v_cache"], res["logits"], cur_len + 1, kk), tok_i
+
+        (_, _, _, _, _), toks = jax.lax.scan(
+            step, (kc, vc, logits0, length, k0), jnp.arange(max_new)
+        )
+        return toks
+
+    keys = jax.random.split(key, b)
+    return jax.vmap(single)(tokens, lengths, keys)

@@ -1,0 +1,47 @@
+"""Minimal Adam + cosine schedule (optax is unavailable offline).
+
+Matches the paper's Table-16 recipe: Adam(0.9, 0.95), cosine decay to 0,
+2% warmup, global-norm gradient clipping at 1.0.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": jnp.zeros((), jnp.int32)}
+
+
+def cosine_lr(step, base_lr: float, total_steps: int, warmup_frac: float = 0.02):
+    warm = max(1, int(total_steps * warmup_frac))
+    step = step.astype(jnp.float32)
+    warm_lr = base_lr * step / warm
+    prog = jnp.clip((step - warm) / max(1, total_steps - warm), 0.0, 1.0)
+    cos_lr = base_lr * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < warm, warm_lr, cos_lr)
+
+
+def clip_by_global_norm(grads, max_norm: float = 1.0):
+    leaves = jax.tree_util.tree_leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), gnorm
+
+
+def adam_step(params, grads, state, lr, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    tf = t.astype(jnp.float32)
+    mhat_scale = 1.0 / (1.0 - b1**tf)
+    vhat_scale = 1.0 / (1.0 - b2**tf)
+    new_params = jax.tree_util.tree_map(
+        lambda p, m_, v_: p - lr * (m_ * mhat_scale) / (jnp.sqrt(v_ * vhat_scale) + eps),
+        params,
+        m,
+        v,
+    )
+    return new_params, {"m": m, "v": v, "t": t}

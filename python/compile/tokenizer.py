@@ -1,0 +1,33 @@
+"""Byte-level tokenizer, mirrored exactly by ``rust/src/model/tokenizer.rs``.
+
+Ids 0..255 are raw bytes; 256..259 are specials (PAD/BOS/EOS/SEP). The
+cross-language contract is pinned by a golden file written at AOT time and
+checked by a Rust unit test.
+"""
+
+from __future__ import annotations
+
+from .config import BOS_ID, EOS_ID, PAD_ID, SEP_ID
+
+
+def encode(text: str, *, bos: bool = False, eos: bool = False) -> list[int]:
+    ids = list(text.encode("utf-8"))
+    if bos:
+        ids.insert(0, BOS_ID)
+    if eos:
+        ids.append(EOS_ID)
+    return ids
+
+
+def decode(ids: list[int]) -> str:
+    data = bytes(i for i in ids if 0 <= i < 256)
+    return data.decode("utf-8", errors="replace")
+
+
+def pad_to(ids: list[int], length: int) -> list[int]:
+    if len(ids) > length:
+        raise ValueError(f"sequence of {len(ids)} tokens exceeds bucket {length}")
+    return ids + [PAD_ID] * (length - len(ids))
+
+
+__all__ = ["encode", "decode", "pad_to", "PAD_ID", "BOS_ID", "EOS_ID", "SEP_ID"]

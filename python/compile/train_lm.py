@@ -1,0 +1,208 @@
+"""Pretrain the target / base / draft language models on the synthetic corpus.
+
+The serving-side evaluation needs models that actually *use* long-range
+attention (otherwise eviction quality would be unmeasurable), so training
+follows a length curriculum (most steps short, a tail at 512/1024 tokens to
+cover the relative-distance range of the longest serving bucket) with the
+answer span up-weighted in the LM loss.
+
+Checkpoints land in ``artifacts/ckpt/<model>.npz`` with the canonical
+parameter names of ``model.param_order``; a per-family held-out accuracy
+report is written to ``artifacts/train_report.json``.
+
+Usage: python -m compile.train_lm [--model lkv-tiny] [--all]
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+import random
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data, model as M, optim, tokenizer as tok
+from .config import CKPT_DIR, MODELS, PROFILE, FAST, ARTIFACTS, steps as scaled
+
+# (seq_len, batch, steps, ctx_chars_range) — step counts sized for the
+# single-core CI testbed (~0.7 s/step at 192); most of the gradient budget
+# goes to short sequences, with a long-range tail so relative distances up
+# to the largest serving bucket are trained (RoPE logits are exactly
+# relative, so only unseen *distances* matter).
+CURRICULUM = (
+    (192, 8, scaled(2400), (40, 150)),
+    (512, 2, scaled(260), (200, 440)),
+    (1024, 1, scaled(100), (500, 930)),
+)
+# Cheaper recipe for secondary models (draft, base).
+CURRICULUM_SMALL = (
+    (192, 8, scaled(1200), (40, 150)),
+    (512, 2, scaled(150), (200, 440)),
+    (1024, 1, scaled(60), (500, 930)),
+)
+ANSWER_WEIGHT = 4.0
+EVAL_SAMPLES = 16
+
+
+def tokenize_example(sample: data.Sample, seq: int):
+    """BOS + prompt + answer + EOS, padded; returns (ids, loss_weights)."""
+    pids = tok.encode(sample.prompt, bos=True)
+    aids = tok.encode(sample.answer, eos=True)
+    ids = (pids + aids)[:seq]
+    w = [1.0] * len(pids) + [ANSWER_WEIGHT] * len(aids)
+    w = w[:seq]
+    n = len(ids)
+    ids = ids + [tok.PAD_ID] * (seq - n)
+    w = w + [0.0] * (seq - n)
+    # next-token loss: weight applies to the *predicted* token (shifted)
+    return np.asarray(ids, np.int32), np.asarray(w, np.float32)
+
+
+def make_batch(rng: random.Random, batch: int, seq: int, ctx_range):
+    ids = np.zeros((batch, seq), np.int32)
+    ws = np.zeros((batch, seq), np.float32)
+    for i in range(batch):
+        s = data.gen_mixed(rng, rng.randint(*ctx_range))
+        ids[i], ws[i] = tokenize_example(s, seq)
+    return jnp.asarray(ids), jnp.asarray(ws)
+
+
+def lm_loss(params, cfg, tokens, weights):
+    logits = M.lm_logits(params, cfg, tokens)  # [B, S, V]
+    targets = tokens[:, 1:]
+    w = weights[:, 1:]
+    logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.sum(nll * w) / jnp.maximum(jnp.sum(w), 1.0)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "base_lr", "total"))
+def train_step(params, opt, step, tokens, weights, *, cfg, base_lr, total):
+    loss, grads = jax.value_and_grad(lm_loss)(params, cfg, tokens, weights)
+    grads, gnorm = optim.clip_by_global_norm(grads)
+    lr = optim.cosine_lr(step, base_lr, total)
+    params, opt = optim.adam_step(params, grads, opt, lr)
+    return params, opt, loss, gnorm
+
+
+def eval_accuracy(params, cfg, rng: random.Random, seq: int, ctx_range) -> dict:
+    """Greedy exact-match accuracy per task family on held-out samples."""
+    out = {}
+    for fam in data.GENERATORS:
+        hits, n = 0, 0
+        prompts, answers, lens = [], [], []
+        for _ in range(EVAL_SAMPLES):
+            s = data.gen_sample(rng, fam, rng.randint(*ctx_range))
+            pids = tok.encode(s.prompt, bos=True)
+            if len(pids) >= seq - 8:
+                continue
+            prompts.append(np.asarray(tok.pad_to(pids, seq), np.int32))
+            answers.append(s.answer)
+            lens.append(len(pids))
+        if not prompts:
+            continue
+        toks = jnp.asarray(np.stack(prompts))
+        lengths = jnp.asarray(np.asarray(lens, np.int32))
+        max_new = max(len(a) for a in answers) + 1
+        gen = np.asarray(
+            M.generate_batch(params, cfg, toks, lengths, jax.random.PRNGKey(0), max_new=max_new)
+        )
+        for g, ans in zip(gen, answers):
+            ids = []
+            for t in g:
+                if t == tok.EOS_ID:
+                    break
+                ids.append(int(t))
+            hits += tok.decode(ids) == ans
+            n += 1
+        out[fam] = hits / max(n, 1)
+    out["avg"] = float(np.mean([v for v in out.values()]))
+    return out
+
+
+def save_params(cfg, params, path: str):
+    names = M.param_order(cfg)
+    flat = M.flatten_params(cfg, params)
+    np.savez(path, **{n: np.asarray(a) for n, a in zip(names, flat)})
+
+
+def load_params(cfg, path: str):
+    z = np.load(path)
+    flat = [jnp.asarray(z[n]) for n in M.param_order(cfg)]
+    return M.unflatten_params(cfg, flat)
+
+
+def train_model(name: str, seed: int = 0, force: bool = False) -> dict:
+    cfg = MODELS[name]
+    os.makedirs(CKPT_DIR, exist_ok=True)
+    ckpt = os.path.join(CKPT_DIR, f"{name}.npz")
+    report_path = os.path.join(ARTIFACTS, "train_report.json")
+    report = {}
+    if os.path.exists(report_path):
+        report = json.load(open(report_path))
+    if os.path.exists(ckpt) and not force:
+        print(f"[train_lm] {name}: checkpoint exists, skipping")
+        return report.get(name, {})
+
+    rng = random.Random(seed)
+    params = M.init_params(cfg, jax.random.PRNGKey(seed))
+    opt = optim.adam_init(params)
+    curriculum = CURRICULUM if name == "lkv-tiny" else CURRICULUM_SMALL
+    total = sum(c[2] for c in curriculum)
+    gstep, t0 = 0, time.time()
+    losses = []
+    for seq, batch, nsteps, ctx_range in curriculum:
+        for i in range(nsteps):
+            tokens, weights = make_batch(rng, batch, seq, ctx_range)
+            params, opt, loss, gnorm = train_step(
+                params, opt, jnp.int32(gstep), tokens, weights,
+                cfg=cfg, base_lr=PROFILE.lm_lr, total=total,
+            )
+            gstep += 1
+            if gstep % 200 == 0 or gstep == total:
+                losses.append([gstep, float(loss)])
+                print(
+                    f"[train_lm] {name} step {gstep}/{total} seq={seq} "
+                    f"loss={float(loss):.4f} gnorm={float(gnorm):.2f} "
+                    f"({time.time()-t0:.0f}s)"
+                )
+
+    erng = random.Random(10_000 + seed)
+    acc_short = eval_accuracy(params, cfg, erng, 192, (40, 150))
+    acc_long = eval_accuracy(params, cfg, erng, 1024, (500, 930))
+    print(f"[train_lm] {name} acc@192={acc_short['avg']:.3f} acc@1024={acc_long['avg']:.3f}")
+
+    save_params(cfg, params, ckpt)
+    entry = {
+        "params": int(cfg.param_count()),
+        "loss_curve": losses,
+        "acc_short": acc_short,
+        "acc_long": acc_long,
+        "wallclock_s": round(time.time() - t0, 1),
+        "fast_mode": FAST,
+    }
+    report[name] = entry
+    os.makedirs(ARTIFACTS, exist_ok=True)
+    json.dump(report, open(report_path, "w"), indent=2)
+    return entry
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", default=None, choices=list(MODELS))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    default = [m for m in MODELS if m != "lkv-base" or os.environ.get("LKV_WITH_BASE") == "1"]
+    names = default if (args.all or not args.model) else [args.model]
+    for n in names:
+        train_model(n, force=args.force)
+
+
+if __name__ == "__main__":
+    main()

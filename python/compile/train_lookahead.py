@@ -1,0 +1,51 @@
+"""Driver: train every LookaheadKV variant needed by the experiment index.
+
+    python -m compile.train_lookahead [--model lkv-tiny] [--variants main,ablation,...]
+
+Variants (see DESIGN.md §5):
+  main      — n=8, LoRA on all linear layers (paper default, scaled)
+  ablation  — Table 5 grid (n x module placement), lkv-tiny only
+  trainctx  — Fig. 6 context-length robustness arms, lkv-tiny only
+  srcdata   — Fig. 7 source-answer training arm, lkv-tiny only
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from . import lookahead as L
+from .config import MODELS
+
+VARIANT_GROUPS = ("main", "ablation", "trainctx", "srcdata")
+
+
+def specs_for(model: str, groups: list[str]) -> list[L.LkvTrainSpec]:
+    out = []
+    if "main" in groups:
+        out.append(L.main_spec())
+    if model == "lkv-tiny":  # ablation arms only on the primary target model
+        if "ablation" in groups:
+            out.extend(L.ablation_specs())
+        if "trainctx" in groups:
+            out.extend(L.trainctx_specs())
+        if "srcdata" in groups:
+            out.append(L.srcdata_spec())
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", default="lkv-tiny", choices=[m for m in MODELS if m != "lkv-draft"])
+    ap.add_argument("--variants", default="main,ablation,trainctx,srcdata")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    groups = [g for g in args.variants.split(",") if g]
+    for g in groups:
+        if g not in VARIANT_GROUPS:
+            raise SystemExit(f"unknown variant group {g!r}; choose from {VARIANT_GROUPS}")
+    for spec in specs_for(args.model, groups):
+        L.train_lookahead(args.model, spec, force=args.force)
+
+
+if __name__ == "__main__":
+    main()

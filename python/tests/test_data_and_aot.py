@@ -1,0 +1,74 @@
+"""Corpus generators + tokenizer + AOT manifest contract."""
+
+import json
+import os
+import random
+
+import pytest
+
+from compile import data, tokenizer as tok
+from compile.config import ARTIFACTS, MODELS
+
+
+def test_tokenizer_roundtrip():
+    s = "K7F=Q2Z;lorem;"
+    ids = tok.encode(s, bos=True, eos=True)
+    assert ids[0] == tok.BOS_ID and ids[-1] == tok.EOS_ID
+    assert tok.decode(ids) == s
+
+
+def test_tokenizer_pad():
+    assert tok.pad_to([1, 2], 4) == [1, 2, tok.PAD_ID, tok.PAD_ID]
+    with pytest.raises(ValueError):
+        tok.pad_to([1, 2, 3], 2)
+
+
+@pytest.mark.parametrize("family", list(data.GENERATORS))
+def test_generators_answer_derivable(family):
+    rng = random.Random(42)
+    for _ in range(10):
+        s = data.gen_sample(rng, family, 150)
+        assert s.answer
+        assert s.prompt.endswith(s.query)
+        if family in ("kv", "multikv", "qa", "code"):
+            # exact-continuation: query+answer appears verbatim in context
+            assert (s.query + s.answer) in s.context, s
+
+
+def test_mixture_covers_all_families():
+    rng = random.Random(0)
+    seen = {data.sample_family(rng) for _ in range(500)}
+    assert seen == set(f for f, _ in data.TRAIN_MIX)
+
+
+def test_sizes_bounded():
+    rng = random.Random(1)
+    for _ in range(20):
+        s = data.gen_mixed(rng, 100)
+        assert len(s.prompt) < 400
+
+
+manifest_path = os.path.join(ARTIFACTS, "manifest.json")
+
+
+@pytest.mark.skipif(not os.path.exists(manifest_path), reason="artifacts not built")
+def test_manifest_contract():
+    m = json.load(open(manifest_path))
+    assert m["tokenizer"]["pad"] == tok.PAD_ID
+    assert m["tokenizer"]["bos"] == tok.BOS_ID
+    for name, meta in m["models"].items():
+        cfg = MODELS[name]
+        assert meta["n_layers"] == cfg.n_layers
+        assert meta["param_count"] == cfg.param_count()
+        assert os.path.exists(os.path.join(ARTIFACTS, meta["weights"]))
+    for key, g in m["graphs"].items():
+        assert os.path.exists(os.path.join(ARTIFACTS, g["file"])), key
+        expected = len(m["models"][g["model"]]["param_names"]) + g.get("n_lkv_weight_args", 0)
+        assert g["n_weight_args"] == expected, key
+    # every lkv variant's graph family exists at some bucket
+    for vk, v in m["lkv_variants"].items():
+        found = any(
+            g["kind"] == "prefill_lkv" and g.get("suffix") == v["graph_suffix"]
+            for g in m["graphs"].values()
+        )
+        assert found, vk

@@ -1,0 +1,84 @@
+"""LookaheadKV training machinery: loss properties, checkpoint round-trip,
+parameter accounting (paper Table 1 analog)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import lookahead as L, model as M
+from compile.config import DRAFT, LORA_SETS, LookaheadConfig
+
+CFG = DRAFT
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, jax.random.PRNGKey(0))
+
+
+def test_kl_loss_zero_when_equal():
+    s = jnp.asarray(np.random.default_rng(0).random((2, 2, 32)), jnp.float32)
+    loss = L.kl_loss(s, s, jnp.int32(20), 32)
+    assert abs(float(loss)) < 1e-5
+
+
+def test_kl_loss_positive_and_finite():
+    rng = np.random.default_rng(1)
+    a = jnp.asarray(rng.random((2, 2, 32)), jnp.float32)
+    b = jnp.asarray(rng.random((2, 2, 32)), jnp.float32)
+    loss = float(L.kl_loss(a, b, jnp.int32(20), 32))
+    assert np.isfinite(loss) and loss > 0
+
+
+def test_kl_loss_no_nan_with_zero_scores():
+    """Masked columns and zero estimates must never produce NaN (the bug
+    class fixed during bring-up)."""
+    a = jnp.zeros((1, 1, 16), jnp.float32).at[0, 0, 3].set(1.0)
+    b = jnp.zeros((1, 1, 16), jnp.float32)
+    loss = float(L.kl_loss(a, b, jnp.int32(8), 16))
+    assert np.isfinite(loss)
+
+
+def test_gradients_flow(params):
+    rng = np.random.default_rng(2)
+    lkv_cfg = LookaheadConfig(n_lookahead=4)
+    lkv = L.init_lkv(CFG, lkv_cfg, jax.random.PRNGKey(1))
+    xs = jnp.asarray(rng.integers(0, 255, (2, 32)), jnp.int32)
+    lens = jnp.asarray([20, 28], jnp.int32)
+    gts = jnp.asarray(rng.random((2, CFG.n_layers, CFG.n_heads, 32)), jnp.float32)
+    loss, grads = jax.value_and_grad(L.batch_loss)(lkv, params, CFG, lkv_cfg, xs, lens, gts)
+    assert np.isfinite(float(loss))
+    gnorm = sum(float(jnp.abs(g).sum()) for g in jax.tree_util.tree_leaves(grads))
+    assert gnorm > 0, "gradients must reach emb and LoRA"
+
+
+def test_ckpt_roundtrip(tmp_path, params):
+    lkv_cfg = LookaheadConfig(n_lookahead=4, lora_targets=LORA_SETS["qv"])
+    lkv = L.init_lkv(CFG, lkv_cfg, jax.random.PRNGKey(2))
+    p = str(tmp_path / "lkv.npz")
+    L.save_lkv(lkv, lkv_cfg, p)
+    back, back_cfg = L.load_lkv(CFG, p)
+    assert back_cfg.n_lookahead == 4
+    assert set(back_cfg.lora_targets) == {"wq", "wv"}
+    np.testing.assert_array_equal(np.asarray(back["emb"]), np.asarray(lkv["emb"]))
+
+
+def test_param_count_under_half_percent():
+    """Paper Table 1: <0.5% additional trainable parameters."""
+    from compile.config import TINY
+
+    for cfg in (TINY, CFG):
+        n = L.lkv_param_count(cfg, LookaheadConfig())
+        pct = 100.0 * n / cfg.param_count()
+        # paper: <0.5% on 1B-8B models; our scaled models have tiny
+        # denominators, so only sanity-bound the ratio here (the paper-scale
+        # ratio is checked in bin/table1_params against LLaMA configs).
+        assert pct < 12.0, f"{cfg.name}: {pct:.2f}%"
+        assert n > 0
+
+
+def test_emb_only_has_no_lora():
+    lkv_cfg = LookaheadConfig(lora_targets=LORA_SETS["emb"])
+    lkv = L.init_lkv(CFG, lkv_cfg, jax.random.PRNGKey(0))
+    assert all(len(layer) == 0 for layer in lkv["lora"])

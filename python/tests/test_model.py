@@ -1,0 +1,101 @@
+"""L2 invariants: shapes, masking, prefill/decode/LM consistency, and the
+selective-LoRA guarantee (prompt rows unchanged)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.config import DEFAULT_LKV, DRAFT, LookaheadConfig
+
+CFG = DRAFT  # smallest config keeps the suite fast
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def tokens():
+    rng = np.random.default_rng(0)
+    return jnp.asarray(rng.integers(0, 255, (64,)), jnp.int32)
+
+
+def test_param_roundtrip(params):
+    flat = M.flatten_params(CFG, params)
+    assert len(flat) == len(M.param_order(CFG))
+    back = M.unflatten_params(CFG, flat)
+    np.testing.assert_array_equal(np.asarray(back["emb"]), np.asarray(params["emb"]))
+
+
+def test_prefill_matches_lm(params, tokens):
+    full = M.lm_logits(params, CFG, tokens[None])[0]
+    pre = M.prefill(params, CFG, tokens, jnp.int32(50), window=8)
+    np.testing.assert_allclose(
+        np.asarray(pre["logits"]), np.asarray(full[49]), rtol=1e-4, atol=1e-5
+    )
+
+
+def test_decode_matches_lm(params, tokens):
+    full = M.lm_logits(params, CFG, tokens[None])[0]
+    pre = M.prefill(params, CFG, tokens, jnp.int32(50), window=8)
+    res = M.decode_step(
+        params, CFG, tokens[50], jnp.int32(50), pre["k"], pre["v"],
+        jnp.full((CFG.n_layers,), 50, jnp.int32),
+    )
+    np.testing.assert_allclose(
+        np.asarray(res["logits"]), np.asarray(full[50]), rtol=1e-3, atol=1e-4
+    )
+
+
+def test_padding_does_not_leak(params, tokens):
+    """Changing tokens beyond `length` must not change outputs."""
+    pre1 = M.prefill(params, CFG, tokens, jnp.int32(40), window=8)
+    corrupted = tokens.at[45:].set(7)
+    pre2 = M.prefill(params, CFG, corrupted, jnp.int32(40), window=8)
+    np.testing.assert_allclose(np.asarray(pre1["logits"]), np.asarray(pre2["logits"]), rtol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(pre1["h2o_scores"]), np.asarray(pre2["h2o_scores"]), rtol=1e-5, atol=1e-7
+    )
+
+
+def test_lora_selectivity(params, tokens):
+    """Nonzero LoRA must leave prompt-token outputs bit-identical (the
+    paper's selective-activation guarantee)."""
+    lkv_cfg = DEFAULT_LKV
+    from compile.lookahead import init_lkv
+
+    key = jax.random.PRNGKey(3)
+    lkv = init_lkv(CFG, lkv_cfg, key)
+    # make B nonzero so the adapters actually fire
+    lkv["lora"] = [
+        {t: (a, jax.random.normal(key, b.shape) * 0.1) for t, (a, b) in layer.items()}
+        for layer in lkv["lora"]
+    ]
+    out_with = M.prefill_lkv(params, CFG, lkv["emb"], lkv["lora"], lkv_cfg, tokens, jnp.int32(50))
+    out_without = M.prefill_lkv(params, CFG, lkv["emb"], None, lkv_cfg, tokens, jnp.int32(50))
+    # prompt KV and logits identical; only lkv_scores may differ
+    np.testing.assert_allclose(np.asarray(out_with["k"]), np.asarray(out_without["k"]), atol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(out_with["logits"]), np.asarray(out_without["logits"]), atol=1e-5
+    )
+    assert not np.allclose(
+        np.asarray(out_with["lkv_scores"]), np.asarray(out_without["lkv_scores"])
+    )
+
+
+def test_suffix_kernel_equals_dense(params, tokens):
+    emb_y = params["emb"][tokens[:6]]
+    dense, _ = M.suffix_forward(params, CFG, tokens, jnp.int32(50), emb_y, use_kernel=False)
+    kern, _ = M.suffix_forward(params, CFG, tokens, jnp.int32(50), emb_y, use_kernel=True)
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(kern), rtol=3e-4, atol=1e-5)
+
+
+def test_generate_shapes(params, tokens):
+    out = M.generate_batch(
+        params, CFG, tokens[None], jnp.asarray([50]), jax.random.PRNGKey(0), max_new=4
+    )
+    assert out.shape == (1, 4)
+    assert ((np.asarray(out) >= 0) & (np.asarray(out) < CFG.vocab)).all()

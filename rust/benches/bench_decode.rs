@@ -1,0 +1,28 @@
+//! Decode throughput (TPOT) × cache budget: the serving-side payoff of
+//! eviction — smaller caches decode faster.
+
+mod common;
+
+use lookaheadkv::engine::GenOptions;
+use lookaheadkv::eviction::Method;
+use lookaheadkv::model::tokenizer::encode;
+use lookaheadkv::util::bench::{record, run_bench, BenchConfig};
+use lookaheadkv::workload;
+
+fn main() {
+    let Some(engine) = common::engine_or_skip("decode") else { return };
+    let cfg = BenchConfig { min_iters: 4, max_iters: 8, ..Default::default() };
+    let suite = workload::ruler_suite(13, 1, 512);
+    let prompt = encode(&suite.samples[0].prompt(), true, false);
+    let mut results = Vec::new();
+    for budget in [16usize, 32, 64, 128, 448] {
+        let method = if budget >= prompt.len() { Method::FullKV } else { Method::SnapKV };
+        let name = format!("decode16/{}@C{}", method.name(), budget);
+        let opts = GenOptions { max_new: 16, ..GenOptions::new(budget, 16) };
+        let r = run_bench(&name, &cfg, || {
+            let _ = engine.generate(&prompt, &method, &opts).expect("generate");
+        });
+        results.push(r);
+    }
+    record(&results);
+}

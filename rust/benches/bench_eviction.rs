@@ -1,0 +1,51 @@
+//! Pure selection cost per policy × context length (the L3 component of
+//! eviction overhead: score aggregation, pooling, top-k).
+
+mod common;
+
+use lookaheadkv::eviction::{EvictionConfig, Method, ScoreBundle};
+use lookaheadkv::util::bench::{record, run_bench, BenchConfig};
+use lookaheadkv::util::rng::Rng;
+use lookaheadkv::util::tensor::TensorF;
+
+fn synth_bundle(rng: &mut Rng, len: usize, l: usize, h: usize, w: usize) -> ScoreBundle {
+    let s = len;
+    let rand = |rng: &mut Rng, n: usize| -> Vec<f32> { (0..n).map(|_| rng.f32()).collect() };
+    ScoreBundle {
+        len,
+        window_scores: Some(TensorF::new(vec![l, h, w, s], rand(rng, l * h * w * s))),
+        win_start: len.saturating_sub(w),
+        win_rows: w,
+        h2o_scores: Some(TensorF::new(vec![l, h, s], rand(rng, l * h * s))),
+        lkv_scores: Some(TensorF::new(vec![l, h, s], rand(rng, l * h * s))),
+        w_use_override: None,
+    }
+}
+
+fn main() {
+    // No artifacts needed: selection is pure host-side logic.
+    let cfg = BenchConfig { min_iters: 50, max_iters: 200, ..Default::default() };
+    let mut rng = Rng::new(5);
+    let methods = [
+        Method::SnapKV,
+        Method::PyramidKV,
+        Method::H2O,
+        Method::Tova,
+        Method::StreamingLLM,
+        Method::LookaheadKV { variant: "main".into() },
+    ];
+    let mut results = Vec::new();
+    for len in [128usize, 512, 1024, 4096] {
+        let bundle = synth_bundle(&mut rng, len, 4, 4, 32);
+        let ev = EvictionConfig::new(64);
+        for m in &methods {
+            let name = format!("select/{}/len{}", m.name(), len);
+            let r = run_bench(&name, &cfg, || {
+                let sel = m.select(&ev, 4, &bundle);
+                std::hint::black_box(sel);
+            });
+            results.push(r);
+        }
+    }
+    record(&results);
+}

@@ -1,0 +1,42 @@
+//! Graph-level microbenchmarks: per-graph execution time of the AOT
+//! prefill/decode computations (the L1/L2 hot paths as seen from L3).
+
+mod common;
+
+use lookaheadkv::model::tokenizer::pad_to;
+use lookaheadkv::runtime::literal::{literal_i32, literal_scalar_i32};
+use lookaheadkv::util::bench::{record, run_bench, BenchConfig};
+use lookaheadkv::util::tensor::TensorI;
+
+fn main() {
+    let Some(engine) = common::engine_or_skip("kernels") else { return };
+    let cfg = BenchConfig { min_iters: 5, max_iters: 15, ..Default::default() };
+    let mut results = Vec::new();
+    for s in [128usize, 256, 512, 1024] {
+        let tokens: Vec<i32> = (0..s as i32 - 8).map(|i| 65 + (i % 26)).collect();
+        let inputs = vec![
+            literal_i32(&TensorI::from_vec(pad_to(&tokens, s))).unwrap(),
+            literal_scalar_i32(tokens.len() as i32),
+            literal_scalar_i32(tokens.len() as i32 - 1),
+        ];
+        let key = format!("lkv-tiny/prefill_base_s{s}");
+        results.push(run_bench(&format!("graph/{key}"), &cfg, || {
+            let _ = engine.rt.execute(&key, None, &inputs).expect("exec");
+        }));
+        // lookahead prefill at the same bucket
+        let lkey = format!("lkv-tiny/prefill_lkv_s{s}_n8_all");
+        if engine.rt.manifest().graph(&lkey).is_ok() {
+            let linputs = vec![
+                literal_i32(&TensorI::from_vec(pad_to(&tokens, s))).unwrap(),
+                literal_scalar_i32(tokens.len() as i32),
+            ];
+            results.push(run_bench(&format!("graph/{lkey}"), &cfg, || {
+                let _ = engine
+                    .rt
+                    .execute(&lkey, Some(("lkv-tiny", "main")), &linputs)
+                    .expect("exec");
+            }));
+        }
+    }
+    record(&results);
+}

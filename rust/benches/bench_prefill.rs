@@ -1,0 +1,37 @@
+//! TTFT per method × context length (empirical side of paper Table 3/15
+//! and Fig. 3b): prefill + eviction + compaction until first logits.
+
+mod common;
+
+use lookaheadkv::engine::GenOptions;
+use lookaheadkv::eviction::Method;
+use lookaheadkv::model::tokenizer::encode;
+use lookaheadkv::util::bench::{record, run_bench, BenchConfig};
+use lookaheadkv::workload;
+
+fn main() {
+    let Some(engine) = common::engine_or_skip("prefill") else { return };
+    let cfg = BenchConfig { min_iters: 5, max_iters: 12, ..Default::default() };
+    let methods = [
+        Method::FullKV,
+        Method::SnapKV,
+        Method::StreamingLLM,
+        Method::LookaheadKV { variant: "main".into() },
+        Method::SpecKV,
+        Method::Laq,
+    ];
+    let mut results = Vec::new();
+    for ctx in [128usize, 256, 512, 1024] {
+        let suite = workload::ruler_suite(11, 1, ctx);
+        let prompt = encode(&suite.samples[0].prompt(), true, false);
+        for method in &methods {
+            let name = format!("ttft/{}/ctx{}", method.name(), ctx);
+            let opts = GenOptions { max_new: 1, ..GenOptions::new(32, 1) };
+            let r = run_bench(&name, &cfg, || {
+                let _ = engine.generate(&prompt, method, &opts).expect("generate");
+            });
+            results.push(r);
+        }
+    }
+    record(&results);
+}

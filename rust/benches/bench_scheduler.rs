@@ -1,0 +1,44 @@
+//! Scheduler micro: queue throughput and batcher bookkeeping cost under
+//! synthetic load (no PJRT involved).
+
+use std::sync::mpsc::channel;
+
+use lookaheadkv::eviction::Method;
+use lookaheadkv::kvcache::CacheManager;
+use lookaheadkv::scheduler::{Request, RequestQueue};
+use lookaheadkv::util::bench::{record, run_bench, BenchConfig};
+
+fn main() {
+    let cfg = BenchConfig { min_iters: 20, max_iters: 100, ..Default::default() };
+    let mut results = Vec::new();
+
+    results.push(run_bench("queue/submit_pop_1k", &cfg, || {
+        let q = RequestQueue::new(2048);
+        for i in 0..1000u64 {
+            let (tx, _rx) = channel();
+            q.submit(Request {
+                id: i,
+                prompt: vec![1, 2, 3],
+                method: Method::SnapKV,
+                budget: 8,
+                max_new: 4,
+                temperature: 0.0,
+                reply: tx,
+            })
+            .unwrap();
+        }
+        while q.try_pop().is_some() {}
+    }));
+
+    results.push(run_bench("kvpool/reserve_release_1k", &cfg, || {
+        let mut mgr = CacheManager::new(1 << 20, 64);
+        for i in 0..1000u64 {
+            assert!(mgr.reserve(i, 640));
+        }
+        for i in 0..1000u64 {
+            mgr.release(i);
+        }
+    }));
+
+    record(&results);
+}

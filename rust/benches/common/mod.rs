@@ -1,0 +1,20 @@
+//! Shared bench scaffolding: engine construction with a graceful skip
+//! when artifacts have not been built yet.
+
+use lookaheadkv::engine::{Engine, EngineConfig};
+use lookaheadkv::runtime::artifacts::default_artifacts_dir;
+
+pub fn engine_or_skip(name: &str) -> Option<Engine> {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("bench {name}: artifacts not built (run `make artifacts`), skipping");
+        return None;
+    }
+    match Engine::new(&dir, EngineConfig::new("lkv-tiny")) {
+        Ok(e) => Some(e),
+        Err(err) => {
+            println!("bench {name}: engine init failed ({err:#}), skipping");
+            None
+        }
+    }
+}

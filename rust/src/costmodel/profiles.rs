@@ -1,0 +1,137 @@
+//! Hardware and model profiles for the analytical cost model.
+
+/// Accelerator profile.
+#[derive(Debug, Clone, Copy)]
+pub struct HwProfile {
+    pub name: &'static str,
+    /// Peak dense half-precision FLOP/s.
+    pub peak_flops: f64,
+    /// HBM bandwidth, bytes/s.
+    pub mem_bw: f64,
+    /// Achievable fractions (Li 2023, llm-analysis defaults used by the paper).
+    pub flops_eff: f64,
+    pub mem_eff: f64,
+}
+
+/// H100-80GB SXM, dense BF16 tensor-core rate.
+pub const H100: HwProfile = HwProfile {
+    name: "H100-80GB",
+    peak_flops: 756e12,
+    mem_bw: 3.35e12,
+    flops_eff: 0.7,
+    mem_eff: 0.9,
+};
+
+/// Transformer shape for analytical FLOPs/bytes (half precision).
+#[derive(Debug, Clone, Copy)]
+pub struct LlmProfile {
+    pub name: &'static str,
+    pub n_layers: f64,
+    pub d_model: f64,
+    pub n_heads: f64,
+    pub n_kv_heads: f64,
+    pub head_dim: f64,
+    pub ff: f64,
+    pub vocab: f64,
+    pub bytes_per_param: f64,
+}
+
+impl LlmProfile {
+    pub fn q_dim(&self) -> f64 {
+        self.n_heads * self.head_dim
+    }
+
+    pub fn kv_dim(&self) -> f64 {
+        self.n_kv_heads * self.head_dim
+    }
+
+    /// Matmul-visible parameters (dense weights; embedding excluded — its
+    /// rows are gathered, not streamed).
+    pub fn matmul_params(&self) -> f64 {
+        let per_layer = self.d_model * self.q_dim()
+            + 2.0 * self.d_model * self.kv_dim()
+            + self.q_dim() * self.d_model
+            + 3.0 * self.d_model * self.ff;
+        self.n_layers * per_layer + self.d_model * self.vocab
+    }
+
+    /// Forward FLOPs for `s` tokens attending over a causal prefix of
+    /// themselves: 2·P·s for the matmuls + 2·2·(s²/2)·d_q per layer for
+    /// QKᵀ and AV.
+    pub fn forward_flops(&self, s: f64) -> f64 {
+        let matmul = 2.0 * self.matmul_params() * s;
+        let attn = self.n_layers * 2.0 * 2.0 * (s * s / 2.0) * self.q_dim();
+        matmul + attn
+    }
+
+    /// Incremental FLOPs of decoding one token with a KV context of `ctx`.
+    pub fn decode_flops(&self, ctx: f64) -> f64 {
+        2.0 * self.matmul_params() + self.n_layers * 2.0 * 2.0 * ctx * self.q_dim()
+    }
+
+    /// Weight bytes streamed per forward (prefill streams them once).
+    pub fn weight_bytes(&self) -> f64 {
+        self.matmul_params() * self.bytes_per_param
+    }
+
+    /// KV-cache bytes for `s` tokens.
+    pub fn kv_bytes(&self, s: f64) -> f64 {
+        2.0 * self.n_layers * self.kv_dim() * s * self.bytes_per_param
+    }
+}
+
+/// LLaMA3.1-8B (the paper's Table-3 target model).
+pub const LLAMA31_8B: LlmProfile = LlmProfile {
+    name: "LLaMA3.1-8B",
+    n_layers: 32.0,
+    d_model: 4096.0,
+    n_heads: 32.0,
+    n_kv_heads: 8.0,
+    head_dim: 128.0,
+    ff: 14336.0,
+    vocab: 128256.0,
+    bytes_per_param: 2.0,
+};
+
+/// LLaMA3.2-1B (the paper's draft model for SpecKV).
+pub const LLAMA32_1B: LlmProfile = LlmProfile {
+    name: "LLaMA3.2-1B",
+    n_layers: 16.0,
+    d_model: 2048.0,
+    n_heads: 32.0,
+    n_kv_heads: 8.0,
+    head_dim: 64.0,
+    ff: 8192.0,
+    vocab: 128256.0,
+    bytes_per_param: 2.0,
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn llama8b_sizes() {
+        // matmul params ≈ 7.5B (8.03B minus input embedding)
+        let p = LLAMA31_8B.matmul_params();
+        assert!((6.9e9..7.8e9).contains(&p), "{p}");
+        // weights ≈ 14 GB at bf16 (the paper's ~13 GB forward traffic row)
+        let gb = LLAMA31_8B.weight_bytes() / 1e9;
+        assert!((13.0..16.0).contains(&gb), "{gb}");
+        // GQA KV for 8K tokens ≈ 1 GB (32L x 8 KV heads x 128 dh, bf16)
+        let kv = LLAMA31_8B.kv_bytes(8192.0) / 1e9;
+        assert!((0.8..1.5).contains(&kv), "{kv}");
+    }
+
+    #[test]
+    fn forward_flops_order() {
+        // paper Table 3: 8K forward ≈ 136 TFLOPs, 32K ≈ 928 TFLOPs.
+        // Our accounting lands within ~20% (the paper's exact attention
+        // accounting is unspecified); residuals documented in
+        // EXPERIMENTS.md §Table 3.
+        let t8k = LLAMA31_8B.forward_flops(8192.0) / 1e12;
+        assert!((105.0..170.0).contains(&t8k), "{t8k}");
+        let t32k = LLAMA31_8B.forward_flops(32768.0) / 1e12;
+        assert!((700.0..1100.0).contains(&t32k), "{t32k}");
+    }
+}

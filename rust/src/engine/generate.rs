@@ -1,0 +1,185 @@
+//! End-to-end generation: prefill → evict → compact → decode loop.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::Engine;
+use crate::eviction::Method;
+use crate::kvcache::SeqCache;
+use crate::model::sampler::Sampler;
+use crate::model::tokenizer::{decode_until_eos, EOS_ID};
+use crate::util::tensor::TensorF;
+
+#[derive(Debug, Clone)]
+pub struct GenOptions {
+    pub budget: usize,
+    pub max_new: usize,
+    pub temperature: f32,
+    pub seed: u64,
+    /// Accumulate ground-truth importance from decode attention (Table 8);
+    /// only meaningful with `Method::FullKV`.
+    pub collect_gt: bool,
+}
+
+impl GenOptions {
+    pub fn new(budget: usize, max_new: usize) -> GenOptions {
+        GenOptions { budget, max_new, temperature: 0.0, seed: 0, collect_gt: false }
+    }
+}
+
+/// Accumulates mean cross-attention of generated tokens over the prompt —
+/// the ground-truth importance scores s_GT of paper Eq. (1).
+pub struct GtAccumulator {
+    /// [L, H, prompt_len] running sums.
+    sums: TensorF,
+    steps: usize,
+    prompt_len: usize,
+}
+
+impl GtAccumulator {
+    pub fn new(n_layers: usize, n_heads: usize, prompt_len: usize) -> GtAccumulator {
+        GtAccumulator {
+            sums: TensorF::zeros(vec![n_layers, n_heads, prompt_len]),
+            steps: 0,
+            prompt_len,
+        }
+    }
+
+    /// Fold one decode step's `[L, H, C]` probs, mapping cache slots back
+    /// to absolute prompt positions via the cache's slot map.
+    pub fn add_step(&mut self, probs: &TensorF, cache: &SeqCache) {
+        let (l, h, _c) = (probs.shape[0], probs.shape[1], probs.shape[2]);
+        for li in 0..l {
+            let slots = &cache.slot_pos[li];
+            for hi in 0..h {
+                let row = probs.index(&[li, hi]);
+                let dst_base = (li * h + hi) * self.prompt_len;
+                for (slot, &pos) in slots.iter().enumerate() {
+                    if pos < self.prompt_len {
+                        self.sums.data[dst_base + pos] += row[slot];
+                    }
+                }
+            }
+        }
+        self.steps += 1;
+    }
+
+    /// Mean over steps: `[L, H, prompt_len]`.
+    pub fn finish(mut self) -> TensorF {
+        let n = self.steps.max(1) as f32;
+        for x in self.sums.data.iter_mut() {
+            *x /= n;
+        }
+        self.sums
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct GenResult {
+    pub text: String,
+    pub tokens: Vec<i32>,
+    pub prompt_len: usize,
+    /// Time to first token (prefill + eviction + compaction + sampling).
+    pub ttft_ms: f64,
+    /// Forward-pass-only component of TTFT (the paper's baseline).
+    pub forward_ms: f64,
+    pub eviction_overhead_ms: f64,
+    pub decode_ms_total: f64,
+    pub n_decode_steps: usize,
+    pub kept_per_layer: Vec<usize>,
+    pub cache_cap: usize,
+    pub gt_scores: Option<TensorF>,
+}
+
+impl GenResult {
+    pub fn decode_ms_per_token(&self) -> f64 {
+        self.decode_ms_total / self.n_decode_steps.max(1) as f64
+    }
+}
+
+impl Engine {
+    /// Serve one request end-to-end.
+    pub fn generate(&self, prompt: &[i32], method: &Method, opts: &GenOptions) -> Result<GenResult> {
+        let t_start = Instant::now();
+        let model = self.cfg.model.clone();
+        let n_layers = self.n_layers(&model);
+        let mheads = self.rt.manifest().model(&model)?.n_heads;
+
+        // 1-2. prefill + select
+        let mut evcfg = self.cfg.eviction;
+        evcfg.budget = opts.budget;
+        let pre = self.prefill_for_method(prompt, method)?;
+        let t_sel = Instant::now();
+        let sel = method.select(&evcfg, n_layers, &pre.bundle);
+        let select_ms = t_sel.elapsed().as_secs_f64() * 1e3;
+
+        // 3. compact
+        let t_cmp = Instant::now();
+        let cap = self.rt.manifest().decode_cap(&model, sel.max_kept() + opts.max_new)?;
+        let mut cache = SeqCache::from_selection(&pre.k, &pre.v, &sel.per_layer, prompt.len(), cap);
+        let compact_ms = t_cmp.elapsed().as_secs_f64() * 1e3;
+
+        // 4. decode
+        let mut sampler = if opts.temperature > 0.0 {
+            Sampler::with_temperature(opts.temperature, opts.seed)
+        } else {
+            Sampler::greedy()
+        };
+        let mut gt = opts
+            .collect_gt
+            .then(|| GtAccumulator::new(n_layers, mheads, prompt.len()));
+        let mut logits = pre.logits.clone();
+        let first_token = sampler.sample(&logits);
+        let ttft_ms = t_start.elapsed().as_secs_f64() * 1e3;
+
+        let mut tokens = vec![first_token];
+        let t_dec = Instant::now();
+        let mut token = first_token;
+        while tokens.len() < opts.max_new && token != EOS_ID && cache.headroom() > 0 {
+            let step = self.decode_step(&model, &mut cache, token)?;
+            logits = step.logits;
+            if let Some(acc) = gt.as_mut() {
+                acc.add_step(&step.probs, &cache);
+            }
+            token = sampler.sample(&logits);
+            tokens.push(token);
+        }
+        let decode_ms_total = t_dec.elapsed().as_secs_f64() * 1e3;
+
+        let kept_per_layer: Vec<usize> = sel.per_layer.iter().map(Vec::len).collect();
+        Ok(GenResult {
+            text: decode_until_eos(&tokens),
+            n_decode_steps: tokens.len().saturating_sub(1),
+            tokens,
+            prompt_len: prompt.len(),
+            ttft_ms,
+            forward_ms: pre.breakdown.forward_ms,
+            eviction_overhead_ms: pre.breakdown.overhead_ms() + select_ms + compact_ms,
+            decode_ms_total,
+            kept_per_layer,
+            cache_cap: cap,
+            gt_scores: gt.map(GtAccumulator::finish),
+        })
+    }
+
+    /// Ground-truth importance scores for Table 8: FullKV generation at
+    /// `temperature`, returning s_GT `[L, H, prompt_len]`.
+    pub fn gt_importance(
+        &self,
+        prompt: &[i32],
+        temperature: f32,
+        seed: u64,
+        max_new: usize,
+    ) -> Result<TensorF> {
+        let opts = GenOptions {
+            budget: usize::MAX / 2,
+            max_new,
+            temperature,
+            seed,
+            collect_gt: true,
+        };
+        let res = self.generate(prompt, &Method::FullKV, &opts)?;
+        Ok(res.gt_scores.expect("collect_gt was set"))
+    }
+}

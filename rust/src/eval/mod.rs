@@ -1,0 +1,9 @@
+//! Evaluation harness: run suites through the engine under each eviction
+//! method, score the generations, and print paper-style tables.
+
+pub mod runner;
+pub mod scorer;
+pub mod tables;
+
+pub use runner::{run_suite, EvalConfig, MethodScore};
+pub use scorer::score_sample;

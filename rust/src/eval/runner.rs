@@ -1,0 +1,114 @@
+//! Suite runner: evaluate methods × budgets over a workload suite.
+
+use anyhow::Result;
+
+use super::scorer::score_sample;
+use crate::engine::{Engine, GenOptions};
+use crate::eviction::Method;
+use crate::model::tokenizer::encode;
+use crate::util::stats::summarize;
+use crate::workload::Suite;
+
+#[derive(Debug, Clone)]
+pub struct EvalConfig {
+    pub budget: usize,
+    pub max_new: usize,
+    pub temperature: f32,
+    pub seed: u64,
+}
+
+impl EvalConfig {
+    pub fn new(budget: usize) -> EvalConfig {
+        EvalConfig { budget, max_new: 16, temperature: 0.0, seed: 0 }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct MethodScore {
+    pub method: String,
+    pub suite: String,
+    pub budget: usize,
+    pub score: f64,
+    pub per_family: Vec<(String, f64)>,
+    pub ttft_ms_mean: f64,
+    pub forward_ms_mean: f64,
+    pub overhead_ms_mean: f64,
+    pub decode_ms_per_tok: f64,
+    pub n: usize,
+}
+
+/// Evaluate one method over a suite. Multi-turn samples re-prefill with
+/// the accumulated history per turn (each turn's score averaged in).
+pub fn run_suite(
+    engine: &Engine,
+    suite: &Suite,
+    method: &Method,
+    cfg: &EvalConfig,
+) -> Result<MethodScore> {
+    let mut scores: Vec<(String, f64)> = Vec::new();
+    let mut ttfts = Vec::new();
+    let mut fwd = Vec::new();
+    let mut ovh = Vec::new();
+    let mut dec = Vec::new();
+    for (i, sample) in suite.samples.iter().enumerate() {
+        let max_new = (sample.answer.len() + 4).max(cfg.max_new);
+        let opts = GenOptions {
+            budget: cfg.budget,
+            max_new,
+            temperature: cfg.temperature,
+            seed: cfg.seed ^ i as u64,
+            collect_gt: false,
+        };
+        let prompt = encode(&sample.prompt(), true, false);
+        let res = engine.generate(&prompt, method, &opts)?;
+        let mut s = score_sample(sample, &res.text);
+        ttfts.push(res.ttft_ms);
+        fwd.push(res.forward_ms);
+        ovh.push(res.eviction_overhead_ms);
+        dec.push(res.decode_ms_per_token());
+        // extra conversation turns: history = ctx + q1 + a1(ref) + q2 ...
+        if !sample.turns.is_empty() {
+            let mut history = sample.prompt();
+            history.push_str(&sample.answer);
+            history.push(';');
+            let mut tscores = vec![s];
+            for (q, a) in &sample.turns {
+                history.push_str(q);
+                let prompt2 = encode(&history, true, false);
+                let res2 = engine.generate(&prompt2, method, &opts)?;
+                tscores
+                    .push(if res2.text.trim_end().starts_with(a.as_str()) { 1.0 } else { 0.0 });
+                history.push_str(a);
+                history.push(';');
+            }
+            s = tscores.iter().sum::<f64>() / tscores.len() as f64;
+        }
+        scores.push((sample.family.name().to_string(), s));
+    }
+    // per-family averages
+    let mut fams: Vec<String> = scores.iter().map(|(f, _)| f.clone()).collect();
+    fams.sort();
+    fams.dedup();
+    let per_family: Vec<(String, f64)> = fams
+        .into_iter()
+        .map(|f| {
+            let xs: Vec<f64> =
+                scores.iter().filter(|(g, _)| *g == f).map(|(_, s)| *s).collect();
+            let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+            (f, mean)
+        })
+        .collect();
+    let avg = per_family.iter().map(|(_, s)| s).sum::<f64>() / per_family.len().max(1) as f64;
+    Ok(MethodScore {
+        method: method.name(),
+        suite: suite.name.clone(),
+        budget: cfg.budget,
+        score: avg,
+        per_family,
+        ttft_ms_mean: summarize(&ttfts).mean,
+        forward_ms_mean: summarize(&fwd).mean,
+        overhead_ms_mean: summarize(&ovh).mean,
+        decode_ms_per_tok: summarize(&dec).mean,
+        n: suite.samples.len(),
+    })
+}

@@ -1,0 +1,107 @@
+//! Scoring: exact match for retrieval-style answers, field-level F1 for
+//! long-form extraction (LongProc).
+
+use crate::workload::spec::{Sample, TaskFamily};
+
+/// Score one generation in [0, 1]: exact-prefix match scores 1.0; partial
+/// credit is per-character positional accuracy (the sub-answer analog of
+/// LongBench's graded metrics, needed for resolution at this model scale).
+pub fn score_sample(sample: &Sample, generated: &str) -> f64 {
+    match sample.family {
+        TaskFamily::LongProc => field_f1(&sample.answer, generated),
+        _ => exact_prefix(&sample.answer, generated),
+    }
+}
+
+fn exact_prefix(answer: &str, generated: &str) -> f64 {
+    let g = generated.trim_end();
+    if g.starts_with(answer) {
+        return 1.0;
+    }
+    char_positional(answer, g)
+}
+
+/// Fraction of answer characters reproduced at the right position.
+pub fn char_positional(answer: &str, generated: &str) -> f64 {
+    if answer.is_empty() {
+        return 0.0;
+    }
+    let a: Vec<char> = answer.chars().collect();
+    let g: Vec<char> = generated.chars().collect();
+    let hits = a.iter().zip(g.iter()).filter(|(x, y)| x == y).count();
+    hits as f64 / a.len() as f64
+}
+
+/// F1 over `NAME\tVAL;` fields (order-insensitive multiset match).
+pub fn field_f1(answer: &str, generated: &str) -> f64 {
+    let want: Vec<&str> = answer.split(';').filter(|s| !s.is_empty()).collect();
+    let got: Vec<&str> = generated.split(';').filter(|s| !s.is_empty()).collect();
+    if want.is_empty() {
+        return if got.is_empty() { 1.0 } else { 0.0 };
+    }
+    if got.is_empty() {
+        return 0.0;
+    }
+    let mut remaining = want.clone();
+    let mut hits = 0usize;
+    for g in &got {
+        if let Some(i) = remaining.iter().position(|w| w == g) {
+            remaining.swap_remove(i);
+            hits += 1;
+        }
+    }
+    let p = hits as f64 / got.len() as f64;
+    let r = hits as f64 / want.len() as f64;
+    if p + r == 0.0 {
+        0.0
+    } else {
+        2.0 * p * r / (p + r)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::spec::TaskFamily;
+
+    fn kv_sample(ans: &str) -> Sample {
+        Sample {
+            family: TaskFamily::Kv,
+            context: String::new(),
+            query: String::new(),
+            answer: ans.to_string(),
+            turns: vec![],
+        }
+    }
+
+    #[test]
+    fn exact_match_scores() {
+        assert_eq!(score_sample(&kv_sample("Q2Z"), "Q2Z"), 1.0);
+        assert_eq!(score_sample(&kv_sample("Q2Z"), "Q2Zextra"), 1.0);
+        let partial = score_sample(&kv_sample("Q2Z"), "Q2X");
+        assert!((partial - 2.0 / 3.0).abs() < 1e-9, "{partial}");
+        assert_eq!(score_sample(&kv_sample("Q2Z"), "xyz"), 0.0);
+    }
+
+    #[test]
+    fn char_positional_basics() {
+        assert_eq!(char_positional("ABC", "ABC"), 1.0);
+        assert_eq!(char_positional("ABC", "AXC"), 2.0 / 3.0);
+        assert_eq!(char_positional("ABC", ""), 0.0);
+    }
+
+    #[test]
+    fn f1_partial_credit() {
+        let ans = "A1B\tX2Y;C3D\tZ4W;";
+        assert_eq!(field_f1(ans, "A1B\tX2Y;C3D\tZ4W;"), 1.0);
+        let half = field_f1(ans, "A1B\tX2Y;");
+        assert!((half - 2.0 / 3.0).abs() < 1e-9, "{half}");
+        assert_eq!(field_f1(ans, "nope"), 0.0);
+    }
+
+    #[test]
+    fn f1_order_insensitive() {
+        let ans = "A\t1;B\t2;";
+        assert_eq!(field_f1(ans, "B\t2;A\t1;"), 1.0);
+    }
+}

@@ -1,0 +1,82 @@
+//! Paper-style table printing + JSON result persistence.
+
+use std::fmt::Write as _;
+
+use super::runner::MethodScore;
+use crate::util::json::Json;
+
+/// Render a score grid: rows = methods, cols = the sweep variable.
+pub fn score_grid(
+    title: &str,
+    col_label: &str,
+    cols: &[String],
+    rows: &[(String, Vec<f64>)],
+) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "== {title} ==");
+    let _ = write!(out, "{:<18}", format!("method \\ {col_label}"));
+    for c in cols {
+        let _ = write!(out, "{c:>10}");
+    }
+    let _ = writeln!(out);
+    for (name, vals) in rows {
+        let _ = write!(out, "{name:<18}");
+        for v in vals {
+            let _ = write!(out, "{v:>10.3}");
+        }
+        let _ = writeln!(out);
+    }
+    out
+}
+
+pub fn results_to_json(scores: &[MethodScore]) -> Json {
+    Json::Arr(
+        scores
+            .iter()
+            .map(|s| {
+                let mut fams = Json::obj();
+                for (f, v) in &s.per_family {
+                    fams.set(f, (*v).into());
+                }
+                Json::from_pairs(vec![
+                    ("method", s.method.as_str().into()),
+                    ("suite", s.suite.as_str().into()),
+                    ("budget", s.budget.into()),
+                    ("score", s.score.into()),
+                    ("per_family", fams),
+                    ("ttft_ms", s.ttft_ms_mean.into()),
+                    ("forward_ms", s.forward_ms_mean.into()),
+                    ("overhead_ms", s.overhead_ms_mean.into()),
+                    ("decode_ms_per_tok", s.decode_ms_per_tok.into()),
+                    ("n", s.n.into()),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// Write a results JSON file under `results/`.
+pub fn save_results(name: &str, value: &Json) {
+    let _ = std::fs::create_dir_all("results");
+    let path = format!("results/{name}.json");
+    if std::fs::write(&path, value.to_string()).is_ok() {
+        println!("[results] wrote {path}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_renders() {
+        let s = score_grid(
+            "t",
+            "budget",
+            &["16".into(), "32".into()],
+            &[("SnapKV".into(), vec![0.5, 0.75])],
+        );
+        assert!(s.contains("SnapKV"));
+        assert!(s.contains("0.750"));
+    }
+}

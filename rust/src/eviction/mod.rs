@@ -1,0 +1,245 @@
+//! Prefill KV-cache eviction framework (the paper's contribution, §2-§3).
+//!
+//! Every policy consumes a [`ScoreBundle`] harvested from one (or more)
+//! prefill passes and produces a [`Selection`]: per-layer sorted keep-sets
+//! over prompt positions, later compacted into a [`crate::kvcache::SeqCache`].
+//!
+//! Pure selection logic lives here and is exhaustively unit/property
+//! tested; the *assembly* of bundles (which graphs to run, draft-loop
+//! driving for LAQ/SpecKV) lives in [`crate::engine`].
+//!
+//! Implemented policies:
+//!
+//! | method        | score source                                   | paper role |
+//! |---------------|------------------------------------------------|------------|
+//! | `full`        | — (keep everything)                            | upper bound |
+//! | `random`      | seeded uniform                                 | sanity floor |
+//! | `streaming`   | positions only (sinks + recents)               | StreamingLLM |
+//! | `snapkv`      | suffix-window cross-attention                  | SnapKV |
+//! | `pyramidkv`   | snapkv scores, funnel per-layer budgets        | PyramidKV |
+//! | `h2o`         | whole-prompt column means + recents            | H2O |
+//! | `tova`        | last-token attention row                       | TOVA |
+//! | `lookaheadkv` | learned lookahead-token scores (Pallas kernel) | **LookaheadKV** |
+//! | `lkv+suffix`  | mean of normalized lookahead + suffix scores   | Table 7 ablation |
+//! | `laq`         | draft re-query scores (2-pass, target model)   | Lookahead Q-Cache |
+//! | `speckv`      | draft re-query scores (draft model)            | SpecKV |
+
+pub mod policies;
+pub mod pooling;
+pub mod scores;
+
+use crate::util::tensor::TensorF;
+
+/// Scores harvested from prefill, in the shapes exported by the AOT graphs.
+#[derive(Debug, Clone)]
+pub struct ScoreBundle {
+    /// Real prompt length (eviction domain is positions `0..len`).
+    pub len: usize,
+    /// `[L, H, W, S]` attention rows of the last W real positions
+    /// (or of the appended draft tokens for LAQ/SpecKV bundles).
+    pub window_scores: Option<TensorF>,
+    /// Absolute position of `window_scores` row 0.
+    pub win_start: usize,
+    /// Number of valid rows in `window_scores` (draft bundles may have
+    /// fewer than W).
+    pub win_rows: usize,
+    /// `[L, H, S]` column means over all valid rows (H2O salience).
+    pub h2o_scores: Option<TensorF>,
+    /// `[L, H, S]` learned lookahead importance scores.
+    pub lkv_scores: Option<TensorF>,
+    /// Override for how many suffix rows the SnapKV-family aggregation
+    /// uses (draft bundles aggregate exactly the draft rows, which may be
+    /// fewer than the config window).
+    pub w_use_override: Option<usize>,
+}
+
+impl ScoreBundle {
+    pub fn empty(len: usize) -> ScoreBundle {
+        ScoreBundle {
+            len,
+            window_scores: None,
+            win_start: 0,
+            win_rows: 0,
+            h2o_scores: None,
+            lkv_scores: None,
+            w_use_override: None,
+        }
+    }
+}
+
+/// Per-layer keep-sets, each sorted ascending and duplicate-free.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Selection {
+    pub per_layer: Vec<Vec<usize>>,
+}
+
+impl Selection {
+    pub fn uniform(indices: Vec<usize>, n_layers: usize) -> Selection {
+        Selection { per_layer: vec![indices; n_layers] }
+    }
+
+    pub fn max_kept(&self) -> usize {
+        self.per_layer.iter().map(Vec::len).max().unwrap_or(0)
+    }
+
+    /// Validate structural invariants (used by tests and debug builds).
+    pub fn validate(&self, len: usize, budgets: &[usize]) {
+        assert_eq!(self.per_layer.len(), budgets.len());
+        for (l, idx) in self.per_layer.iter().enumerate() {
+            assert_eq!(idx.len(), budgets[l].min(len), "layer {l} count");
+            assert!(idx.windows(2).all(|w| w[0] < w[1]), "layer {l} not sorted-unique");
+            assert!(idx.iter().all(|&i| i < len), "layer {l} out of range");
+        }
+    }
+}
+
+/// Tunable eviction knobs (paper's standard configuration, scaled —
+/// observation window 32→8, max-pool kernel 7→3, 4 attention sinks→2).
+#[derive(Debug, Clone, Copy)]
+pub struct EvictionConfig {
+    /// Cache budget C: kept KV per layer (PyramidKV redistributes it).
+    pub budget: usize,
+    /// Suffix observation-window length used by SnapKV-family selection.
+    pub window: usize,
+    /// 1D max-pooling kernel over scores (odd; 1 = off).
+    pub kernel: usize,
+    /// StreamingLLM attention sinks.
+    pub sinks: usize,
+}
+
+impl EvictionConfig {
+    pub fn new(budget: usize) -> EvictionConfig {
+        EvictionConfig { budget, window: 8, kernel: 3, sinks: 2 }
+    }
+}
+
+/// The eviction method, as selected by CLI/server/eval harnesses.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Method {
+    FullKV,
+    Random { seed: u64 },
+    StreamingLLM,
+    SnapKV,
+    PyramidKV,
+    H2O,
+    Tova,
+    /// `variant` names a trained module set, e.g. "main", "n4_qv", "ctx64".
+    LookaheadKV { variant: String },
+    /// Table 7: average LookaheadKV scores with the SnapKV suffix window.
+    LkvSuffix { variant: String },
+    Laq,
+    SpecKV,
+}
+
+impl Method {
+    pub fn parse(s: &str) -> Option<Method> {
+        let s = s.trim();
+        Some(match s {
+            "full" | "fullkv" => Method::FullKV,
+            "random" => Method::Random { seed: 0 },
+            "streaming" | "streamingllm" => Method::StreamingLLM,
+            "snapkv" | "snap" => Method::SnapKV,
+            "pyramidkv" | "pyramid" => Method::PyramidKV,
+            "h2o" => Method::H2O,
+            "tova" => Method::Tova,
+            "laq" => Method::Laq,
+            "speckv" => Method::SpecKV,
+            _ => {
+                if let Some(v) = s.strip_prefix("lookaheadkv") {
+                    let variant = v.strip_prefix(':').unwrap_or("main");
+                    Method::LookaheadKV { variant: variant.to_string() }
+                } else if let Some(v) = s.strip_prefix("lkv+suffix") {
+                    let variant = v.strip_prefix(':').unwrap_or("main");
+                    Method::LkvSuffix { variant: variant.to_string() }
+                } else if let Some(v) = s.strip_prefix("lkv") {
+                    let variant = v.strip_prefix(':').unwrap_or("main");
+                    Method::LookaheadKV { variant: variant.to_string() }
+                } else {
+                    return None;
+                }
+            }
+        })
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            Method::FullKV => "FullKV".into(),
+            Method::Random { .. } => "Random".into(),
+            Method::StreamingLLM => "StreamingLLM".into(),
+            Method::SnapKV => "SnapKV".into(),
+            Method::PyramidKV => "PyramidKV".into(),
+            Method::H2O => "H2O".into(),
+            Method::Tova => "TOVA".into(),
+            Method::LookaheadKV { variant } if variant == "main" => "LookaheadKV".into(),
+            Method::LookaheadKV { variant } => format!("LookaheadKV:{variant}"),
+            Method::LkvSuffix { .. } => "LKV+Suffix".into(),
+            Method::Laq => "LAQ".into(),
+            Method::SpecKV => "SpecKV".into(),
+        }
+    }
+
+    /// Does this method run the lookahead prefill graph?
+    pub fn lkv_variant(&self) -> Option<&str> {
+        match self {
+            Method::LookaheadKV { variant } | Method::LkvSuffix { variant } => Some(variant),
+            _ => None,
+        }
+    }
+
+    /// Does this method need a draft pass before selection?
+    pub fn needs_draft(&self) -> bool {
+        matches!(self, Method::Laq | Method::SpecKV)
+    }
+
+    /// Pure selection step given an assembled bundle.
+    pub fn select(&self, cfg: &EvictionConfig, n_layers: usize, bundle: &ScoreBundle) -> Selection {
+        use policies::*;
+        let sel = match self {
+            Method::FullKV => full_kv(bundle.len, n_layers),
+            Method::Random { seed } => random(cfg, n_layers, bundle.len, *seed),
+            Method::StreamingLLM => streaming_llm(cfg, n_layers, bundle.len),
+            Method::SnapKV | Method::Laq | Method::SpecKV => snapkv(cfg, n_layers, bundle),
+            Method::PyramidKV => pyramidkv(cfg, n_layers, bundle),
+            Method::H2O => h2o(cfg, n_layers, bundle),
+            Method::Tova => tova(cfg, n_layers, bundle),
+            Method::LookaheadKV { .. } => lookaheadkv(cfg, n_layers, bundle),
+            Method::LkvSuffix { .. } => lkv_suffix(cfg, n_layers, bundle),
+        };
+        #[cfg(debug_assertions)]
+        {
+            let budgets: Vec<usize> = sel.per_layer.iter().map(Vec::len).collect();
+            sel.validate(bundle.len, &budgets);
+        }
+        sel
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(Method::parse("snapkv"), Some(Method::SnapKV));
+        assert_eq!(
+            Method::parse("lookaheadkv:ctx64"),
+            Some(Method::LookaheadKV { variant: "ctx64".into() })
+        );
+        assert_eq!(
+            Method::parse("lkv"),
+            Some(Method::LookaheadKV { variant: "main".into() })
+        );
+        assert_eq!(
+            Method::parse("lkv+suffix"),
+            Some(Method::LkvSuffix { variant: "main".into() })
+        );
+        assert!(Method::parse("bogus").is_none());
+    }
+
+    #[test]
+    fn needs_draft_flags() {
+        assert!(Method::Laq.needs_draft());
+        assert!(Method::SpecKV.needs_draft());
+        assert!(!Method::SnapKV.needs_draft());
+    }
+}

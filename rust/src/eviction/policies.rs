@@ -1,0 +1,363 @@
+//! Selection rules for every eviction method (pure functions over a
+//! [`super::ScoreBundle`]).
+
+use super::pooling::maxpool1d;
+use super::scores::{head_mean_per_layer, window_mean_per_layer, window_row_per_layer};
+use super::{EvictionConfig, ScoreBundle, Selection};
+use crate::util::rng::Rng;
+use crate::util::stats::topk_indices;
+
+/// Merge an unconditional keep-range `[lo, hi)` with the top-k of `scores`
+/// outside it, returning exactly `min(budget, len)` sorted indices.
+fn keep_window_plus_topk(scores: &[f32], len: usize, budget: usize, win: (usize, usize)) -> Vec<usize> {
+    let budget = budget.min(len);
+    let (lo, hi) = win;
+    let win_len = hi.saturating_sub(lo);
+    if budget <= win_len {
+        // budget smaller than the protected window: keep its most recent part
+        return (hi - budget..hi).collect();
+    }
+    // mask window columns out of the ranking, then take top (budget - win)
+    let mut masked: Vec<f32> = scores[..len].to_vec();
+    for j in lo..hi {
+        masked[j] = f32::NEG_INFINITY;
+    }
+    let mut kept = topk_indices(&masked, budget - win_len);
+    kept.extend(lo..hi);
+    kept.sort_unstable();
+    kept.dedup();
+    debug_assert_eq!(kept.len(), budget);
+    kept
+}
+
+pub fn full_kv(len: usize, n_layers: usize) -> Selection {
+    Selection::uniform((0..len).collect(), n_layers)
+}
+
+pub fn random(cfg: &EvictionConfig, n_layers: usize, len: usize, seed: u64) -> Selection {
+    let budget = cfg.budget.min(len);
+    let mut rng = Rng::new(seed ^ len as u64);
+    // always keep the final window so generation stays coherent
+    let win_lo = len.saturating_sub(cfg.window.min(budget));
+    let mut idx: Vec<usize> = (win_lo..len).collect();
+    let mut rest: Vec<usize> = (0..win_lo).collect();
+    rng.shuffle(&mut rest);
+    idx.extend(rest.into_iter().take(budget - idx.len()));
+    idx.sort_unstable();
+    Selection::uniform(idx, n_layers)
+}
+
+pub fn streaming_llm(cfg: &EvictionConfig, n_layers: usize, len: usize) -> Selection {
+    let budget = cfg.budget.min(len);
+    let sinks = cfg.sinks.min(budget);
+    let recent = budget - sinks;
+    let mut idx: Vec<usize> = (0..sinks).collect();
+    idx.extend(len.saturating_sub(recent)..len);
+    idx.sort_unstable();
+    idx.dedup();
+    // if sinks and recents overlap (tiny prompts), top up from the front
+    let mut next = 0;
+    while idx.len() < budget {
+        if !idx.contains(&next) {
+            idx.push(next);
+        }
+        next += 1;
+    }
+    idx.sort_unstable();
+    Selection::uniform(idx, n_layers)
+}
+
+/// SnapKV-family score vector: suffix-window rows, head-mean, max-pooled.
+fn snap_scores(cfg: &EvictionConfig, bundle: &ScoreBundle) -> Vec<Vec<f32>> {
+    let ws = bundle
+        .window_scores
+        .as_ref()
+        .expect("snapkv-family selection needs window_scores");
+    let w_use = bundle.w_use_override.unwrap_or(cfg.window);
+    let per_layer = window_mean_per_layer(ws, bundle.len, bundle.win_start, bundle.win_rows, w_use);
+    per_layer.into_iter().map(|s| maxpool1d(&s, cfg.kernel)).collect()
+}
+
+/// Unconditionally-kept suffix window `[lo, len)` for SnapKV-family picks.
+fn protect_window(cfg: &EvictionConfig, len: usize) -> (usize, usize) {
+    (len.saturating_sub(cfg.window), len)
+}
+
+pub fn snapkv(cfg: &EvictionConfig, n_layers: usize, bundle: &ScoreBundle) -> Selection {
+    let scores = snap_scores(cfg, bundle);
+    let win = protect_window(cfg, bundle.len);
+    let per_layer = (0..n_layers)
+        .map(|l| keep_window_plus_topk(&scores[l], bundle.len, cfg.budget, win))
+        .collect();
+    Selection { per_layer }
+}
+
+/// Funnel budgets: linearly decaying with depth, mean preserved at
+/// `budget` (PyramidKV's pyramidal information funneling).
+pub fn pyramid_budgets(budget: usize, n_layers: usize, floor: usize) -> Vec<usize> {
+    if n_layers == 1 {
+        return vec![budget];
+    }
+    let total = budget * n_layers;
+    let weights: Vec<f64> = (0..n_layers).map(|l| (n_layers - l) as f64).collect();
+    let wsum: f64 = weights.iter().sum();
+    let mut b: Vec<usize> =
+        weights.iter().map(|w| ((total as f64) * w / wsum).floor().max(floor as f64) as usize).collect();
+    // fix rounding drift onto the earliest layers, keeping the sum == total
+    let mut diff = total as i64 - b.iter().sum::<usize>() as i64;
+    let mut l = 0;
+    while diff != 0 {
+        if diff > 0 {
+            b[l % n_layers] += 1;
+            diff -= 1;
+        } else if b[l % n_layers] > floor {
+            b[l % n_layers] -= 1;
+            diff += 1;
+        }
+        l += 1;
+    }
+    b
+}
+
+pub fn pyramidkv(cfg: &EvictionConfig, n_layers: usize, bundle: &ScoreBundle) -> Selection {
+    let scores = snap_scores(cfg, bundle);
+    let win = protect_window(cfg, bundle.len);
+    let budgets = pyramid_budgets(cfg.budget, n_layers, cfg.window.min(cfg.budget));
+    let per_layer = (0..n_layers)
+        .map(|l| keep_window_plus_topk(&scores[l], bundle.len, budgets[l], win))
+        .collect();
+    Selection { per_layer }
+}
+
+pub fn h2o(cfg: &EvictionConfig, n_layers: usize, bundle: &ScoreBundle) -> Selection {
+    let hs = bundle.h2o_scores.as_ref().expect("h2o selection needs h2o_scores");
+    let scores = head_mean_per_layer(hs, bundle.len);
+    let win = protect_window(cfg, bundle.len); // heavy hitters + recents
+    let per_layer = (0..n_layers)
+        .map(|l| keep_window_plus_topk(&scores[l], bundle.len, cfg.budget, win))
+        .collect();
+    Selection { per_layer }
+}
+
+pub fn tova(cfg: &EvictionConfig, n_layers: usize, bundle: &ScoreBundle) -> Selection {
+    let ws = bundle.window_scores.as_ref().expect("tova needs window_scores");
+    let last_row = bundle.win_rows.saturating_sub(1);
+    let scores = window_row_per_layer(ws, bundle.len, last_row);
+    let per_layer = (0..n_layers)
+        .map(|l| {
+            // TOVA always keeps the newest token: pin it above any score.
+            let mut s = scores[l][..bundle.len].to_vec();
+            if let Some(last) = s.last_mut() {
+                *last = f32::INFINITY;
+            }
+            topk_indices(&s, cfg.budget.min(bundle.len))
+        })
+        .collect();
+    Selection { per_layer }
+}
+
+pub fn lookaheadkv(cfg: &EvictionConfig, n_layers: usize, bundle: &ScoreBundle) -> Selection {
+    let ls = bundle.lkv_scores.as_ref().expect("lookaheadkv needs lkv_scores");
+    let scores = head_mean_per_layer(ls, bundle.len);
+    let per_layer = (0..n_layers)
+        .map(|l| {
+            let pooled = maxpool1d(&scores[l], cfg.kernel);
+            topk_indices(&pooled, cfg.budget.min(bundle.len))
+        })
+        .collect();
+    Selection { per_layer }
+}
+
+/// Table 7: L1-normalize both the lookahead scores and the suffix-window
+/// scores, average them, then select (the paper finds this *hurts*).
+pub fn lkv_suffix(cfg: &EvictionConfig, n_layers: usize, bundle: &ScoreBundle) -> Selection {
+    let ls = bundle.lkv_scores.as_ref().expect("lkv+suffix needs lkv_scores");
+    let lkv = head_mean_per_layer(ls, bundle.len);
+    let snap = snap_scores(cfg, bundle);
+    let per_layer = (0..n_layers)
+        .map(|l| {
+            let mut a = lkv[l].clone();
+            let mut b = snap[l].clone();
+            crate::util::stats::l1_normalize(&mut a);
+            crate::util::stats::l1_normalize(&mut b);
+            let avg: Vec<f32> = a.iter().zip(&b).map(|(x, y)| 0.5 * (x + y)).collect();
+            let pooled = maxpool1d(&avg, cfg.kernel);
+            topk_indices(&pooled, cfg.budget.min(bundle.len))
+        })
+        .collect();
+    Selection { per_layer }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, Config};
+    use crate::util::tensor::TensorF;
+
+    fn bundle_with_peak(len: usize, s: usize, peak: usize) -> ScoreBundle {
+        // L=2, H=2, W=4 window scores with a clear peak column
+        let (l, h, w) = (2, 2, 4);
+        let mut win = vec![0.0f32; l * h * w * s];
+        let mut h2o = vec![0.0f32; l * h * s];
+        let mut lkv = vec![0.0f32; l * h * s];
+        for li in 0..l {
+            for hi in 0..h {
+                for r in 0..w {
+                    win[((li * h + hi) * w + r) * s + peak] = 1.0;
+                }
+                h2o[(li * h + hi) * s + peak] = 1.0;
+                lkv[(li * h + hi) * s + peak] = 1.0;
+            }
+        }
+        ScoreBundle {
+            len,
+            window_scores: Some(TensorF::new(vec![l, h, w, s], win)),
+            win_start: len.saturating_sub(4),
+            win_rows: 4,
+            h2o_scores: Some(TensorF::new(vec![l, h, s], h2o)),
+            lkv_scores: Some(TensorF::new(vec![l, h, s], lkv)),
+            w_use_override: None,
+        }
+    }
+
+    #[test]
+    fn snapkv_keeps_peak_and_window() {
+        let cfg = EvictionConfig { budget: 8, window: 4, kernel: 1, sinks: 2 };
+        let b = bundle_with_peak(32, 32, 5);
+        let sel = snapkv(&cfg, 2, &b);
+        for idx in &sel.per_layer {
+            assert_eq!(idx.len(), 8);
+            assert!(idx.contains(&5), "peak kept: {idx:?}");
+            for j in 28..32 {
+                assert!(idx.contains(&j), "window kept: {idx:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn snapkv_budget_below_window() {
+        let cfg = EvictionConfig { budget: 2, window: 4, kernel: 1, sinks: 2 };
+        let b = bundle_with_peak(16, 16, 3);
+        let sel = snapkv(&cfg, 2, &b);
+        assert_eq!(sel.per_layer[0], vec![14, 15]); // most recent part of window
+    }
+
+    #[test]
+    fn streaming_structure() {
+        let cfg = EvictionConfig { budget: 6, window: 4, kernel: 1, sinks: 2 };
+        let sel = streaming_llm(&cfg, 1, 100);
+        assert_eq!(sel.per_layer[0], vec![0, 1, 96, 97, 98, 99]);
+    }
+
+    #[test]
+    fn streaming_tiny_prompt() {
+        let cfg = EvictionConfig { budget: 8, window: 4, kernel: 1, sinks: 2 };
+        let sel = streaming_llm(&cfg, 1, 5);
+        assert_eq!(sel.per_layer[0], vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn pyramid_budgets_preserve_total() {
+        for (c, l) in [(16usize, 4usize), (64, 4), (13, 5), (128, 6)] {
+            let b = pyramid_budgets(c, l, 4);
+            assert_eq!(b.iter().sum::<usize>(), c * l, "{b:?}");
+            // non-increasing with depth
+            assert!(b.windows(2).all(|w| w[0] >= w[1]), "{b:?}");
+        }
+    }
+
+    #[test]
+    fn pyramid_layers_differ() {
+        let cfg = EvictionConfig { budget: 8, window: 2, kernel: 1, sinks: 2 };
+        let b = bundle_with_peak(64, 64, 7);
+        let sel = pyramidkv(&cfg, 2, &b);
+        assert!(sel.per_layer[0].len() > sel.per_layer[1].len());
+        assert!(sel.per_layer.iter().all(|i| i.contains(&7)));
+    }
+
+    #[test]
+    fn h2o_keeps_heavy_hitter() {
+        let cfg = EvictionConfig { budget: 6, window: 2, kernel: 1, sinks: 2 };
+        let b = bundle_with_peak(32, 32, 11);
+        let sel = h2o(&cfg, 2, &b);
+        assert!(sel.per_layer[0].contains(&11));
+        assert!(sel.per_layer[0].contains(&31));
+    }
+
+    #[test]
+    fn tova_keeps_last_token() {
+        let cfg = EvictionConfig { budget: 4, window: 2, kernel: 1, sinks: 2 };
+        let b = bundle_with_peak(32, 32, 3);
+        let sel = tova(&cfg, 2, &b);
+        assert!(sel.per_layer[0].contains(&31));
+        assert!(sel.per_layer[0].contains(&3));
+    }
+
+    #[test]
+    fn lookaheadkv_pure_topk() {
+        let cfg = EvictionConfig { budget: 4, window: 8, kernel: 1, sinks: 2 };
+        let b = bundle_with_peak(32, 32, 13);
+        let sel = lookaheadkv(&cfg, 2, &b);
+        assert!(sel.per_layer[0].contains(&13));
+        assert_eq!(sel.per_layer[0].len(), 4);
+    }
+
+    #[test]
+    fn lkv_suffix_combines() {
+        let cfg = EvictionConfig { budget: 4, window: 4, kernel: 1, sinks: 2 };
+        let b = bundle_with_peak(32, 32, 13);
+        let sel = lkv_suffix(&cfg, 2, &b);
+        assert!(sel.per_layer[0].contains(&13));
+    }
+
+    #[test]
+    fn random_deterministic_and_valid() {
+        let cfg = EvictionConfig { budget: 8, window: 4, kernel: 1, sinks: 2 };
+        let a = random(&cfg, 2, 100, 42);
+        let b = random(&cfg, 2, 100, 42);
+        assert_eq!(a, b);
+        assert_eq!(a.per_layer[0].len(), 8);
+    }
+
+    /// Property: every policy returns exactly min(budget, len) sorted
+    /// unique in-range indices per layer, for any budget/len/scores.
+    #[test]
+    fn prop_selection_invariants() {
+        check("selection invariants", &Config { cases: 96, max_size: 64, ..Config::new() }, |rng, size| {
+            let len = (size * 2).max(2);
+            let s = len.next_multiple_of(8);
+            let (l, h, w) = (3usize, 2usize, 4usize);
+            let rnd = |rng: &mut crate::util::rng::Rng, n: usize| -> Vec<f32> {
+                (0..n).map(|_| rng.f32()).collect()
+            };
+            let bundle = ScoreBundle {
+                len,
+                window_scores: Some(TensorF::new(vec![l, h, w, s], rnd(rng, l * h * w * s))),
+                win_start: len.saturating_sub(w),
+                win_rows: w.min(len),
+                h2o_scores: Some(TensorF::new(vec![l, h, s], rnd(rng, l * h * s))),
+                lkv_scores: Some(TensorF::new(vec![l, h, s], rnd(rng, l * h * s))),
+                w_use_override: None,
+            };
+            let budget = rng.range(1, len + 8);
+            let cfg = EvictionConfig { budget, window: rng.range(1, 8), kernel: 3, sinks: 2 };
+            for sel in [
+                snapkv(&cfg, l, &bundle),
+                pyramidkv(&cfg, l, &bundle),
+                h2o(&cfg, l, &bundle),
+                tova(&cfg, l, &bundle),
+                lookaheadkv(&cfg, l, &bundle),
+                lkv_suffix(&cfg, l, &bundle),
+                streaming_llm(&cfg, l, len),
+                random(&cfg, l, len, 7),
+            ] {
+                for idx in &sel.per_layer {
+                    assert!(idx.windows(2).all(|p| p[0] < p[1]), "sorted unique: {idx:?}");
+                    assert!(idx.iter().all(|&i| i < len), "in range");
+                    assert!(idx.len() <= budget.max(cfg.budget * 2).min(len) + budget, "bounded");
+                    assert!(!idx.is_empty());
+                }
+            }
+        });
+    }
+}

@@ -1,0 +1,52 @@
+//! 1D max-pooling over score vectors (SnapKV's clustering trick: smear
+//! each hot position over its neighborhood so whole needles survive).
+
+/// Same-length max-pool with odd kernel `k` (k <= 1 is identity).
+pub fn maxpool1d(scores: &[f32], k: usize) -> Vec<f32> {
+    if k <= 1 || scores.is_empty() {
+        return scores.to_vec();
+    }
+    assert!(k % 2 == 1, "kernel must be odd");
+    let half = k / 2;
+    let n = scores.len();
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let lo = i.saturating_sub(half);
+        let hi = (i + half + 1).min(n);
+        let m = scores[lo..hi].iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        out.push(m);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_kernel() {
+        let v = vec![1.0, 2.0, 3.0];
+        assert_eq!(maxpool1d(&v, 1), v);
+    }
+
+    #[test]
+    fn smears_peak() {
+        let v = vec![0.0, 0.0, 9.0, 0.0, 0.0];
+        assert_eq!(maxpool1d(&v, 3), vec![0.0, 9.0, 9.0, 9.0, 0.0]);
+    }
+
+    #[test]
+    fn edges_clamp() {
+        let v = vec![5.0, 0.0, 0.0, 7.0];
+        assert_eq!(maxpool1d(&v, 3), vec![5.0, 5.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn monotone_under_pool() {
+        // pooled values always >= originals
+        let mut rng = crate::util::rng::Rng::new(2);
+        let v: Vec<f32> = (0..64).map(|_| rng.f32()).collect();
+        let p = maxpool1d(&v, 5);
+        assert!(v.iter().zip(&p).all(|(a, b)| b >= a));
+    }
+}

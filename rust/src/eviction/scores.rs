@@ -1,0 +1,128 @@
+//! Score aggregation helpers: collapse `[L, H, ...]` score tensors into a
+//! per-layer `[len]` ranking vector (head-mean reduction, the paper's GQA
+//! compatibility choice), with optional suffix-row windows.
+
+use crate::util::tensor::TensorF;
+
+/// Mean over heads of `[L, H, S]` scores, truncated to `len`: returns
+/// per-layer vectors of length `len`.
+pub fn head_mean_per_layer(t: &TensorF, len: usize) -> Vec<Vec<f32>> {
+    let (l, h, s) = (t.shape[0], t.shape[1], t.shape[2]);
+    assert!(len <= s);
+    let mut out = Vec::with_capacity(l);
+    for li in 0..l {
+        let mut acc = vec![0.0f32; len];
+        for hi in 0..h {
+            let row = t.index(&[li, hi]);
+            for j in 0..len {
+                acc[j] += row[j];
+            }
+        }
+        for a in acc.iter_mut() {
+            *a /= h as f32;
+        }
+        out.push(acc);
+    }
+    out
+}
+
+/// SnapKV-style aggregation of `window_scores [L, H, W, S]`: mean over the
+/// last `w_use` valid rows and all heads, per layer, over columns `0..len`.
+///
+/// `win_start` is the absolute position of row 0; `win_rows` the number of
+/// valid rows (rows are zeroed above `win_rows` by the graph, but we slice
+/// precisely anyway).
+pub fn window_mean_per_layer(
+    t: &TensorF,
+    len: usize,
+    win_start: usize,
+    win_rows: usize,
+    w_use: usize,
+) -> Vec<Vec<f32>> {
+    let (l, h, w, s) = (t.shape[0], t.shape[1], t.shape[2], t.shape[3]);
+    assert!(len <= s);
+    let rows_used = w_use.min(win_rows).max(1);
+    // rows [win_rows - rows_used, win_rows) within the window tensor
+    let row_lo = win_rows.saturating_sub(rows_used).min(w.saturating_sub(1));
+    let row_hi = win_rows.min(w);
+    let _ = win_start;
+    let denom = ((row_hi - row_lo) * h) as f32;
+    let mut out = Vec::with_capacity(l);
+    for li in 0..l {
+        let mut acc = vec![0.0f32; len];
+        for hi in 0..h {
+            for r in row_lo..row_hi {
+                let row = t.index(&[li, hi, r]);
+                for j in 0..len {
+                    acc[j] += row[j];
+                }
+            }
+        }
+        for a in acc.iter_mut() {
+            *a /= denom.max(1.0);
+        }
+        out.push(acc);
+    }
+    out
+}
+
+/// Single row `r` of `window_scores`, head-mean (TOVA's last-token view).
+pub fn window_row_per_layer(t: &TensorF, len: usize, r: usize) -> Vec<Vec<f32>> {
+    let (l, h, w, _s) = (t.shape[0], t.shape[1], t.shape[2], t.shape[3]);
+    let r = r.min(w - 1);
+    let mut out = Vec::with_capacity(l);
+    for li in 0..l {
+        let mut acc = vec![0.0f32; len];
+        for hi in 0..h {
+            let row = t.index(&[li, hi, r]);
+            for j in 0..len {
+                acc[j] += row[j];
+            }
+        }
+        for a in acc.iter_mut() {
+            *a /= h as f32;
+        }
+        out.push(acc);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn head_mean_basic() {
+        // L=1, H=2, S=3
+        let t = TensorF::new(vec![1, 2, 3], vec![1.0, 2.0, 3.0, 3.0, 2.0, 1.0]);
+        let m = head_mean_per_layer(&t, 3);
+        assert_eq!(m[0], vec![2.0, 2.0, 2.0]);
+        let m2 = head_mean_per_layer(&t, 2);
+        assert_eq!(m2[0], vec![2.0, 2.0]);
+    }
+
+    #[test]
+    fn window_mean_uses_last_rows() {
+        // L=1,H=1,W=3,S=2; rows: [1,1], [2,2], [30,40]; win_rows=3
+        let t = TensorF::new(vec![1, 1, 3, 2], vec![1.0, 1.0, 2.0, 2.0, 30.0, 40.0]);
+        let m = window_mean_per_layer(&t, 2, 0, 3, 2);
+        assert_eq!(m[0], vec![16.0, 21.0]); // mean of rows 1,2
+        let m1 = window_mean_per_layer(&t, 2, 0, 3, 1);
+        assert_eq!(m1[0], vec![30.0, 40.0]);
+    }
+
+    #[test]
+    fn window_mean_partial_valid_rows() {
+        // only first 2 rows valid (draft of 2 tokens), w_use=8 clamps to 2
+        let t = TensorF::new(vec![1, 1, 3, 2], vec![1.0, 3.0, 3.0, 5.0, 99.0, 99.0]);
+        let m = window_mean_per_layer(&t, 2, 0, 2, 8);
+        assert_eq!(m[0], vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn window_row_picks_row() {
+        let t = TensorF::new(vec![1, 1, 2, 2], vec![1.0, 2.0, 7.0, 8.0]);
+        let m = window_row_per_layer(&t, 2, 1);
+        assert_eq!(m[0], vec![7.0, 8.0]);
+    }
+}

@@ -1,0 +1,169 @@
+//! Fixed-size block allocator with free-list reuse.
+//!
+//! Capacity is expressed in *slots* (one slot = one token's KV across all
+//! layers/heads of a model); blocks group `block_size` slots. The
+//! scheduler uses `can_alloc`/`alloc`/`free` for admission control and
+//! backpressure.
+
+use std::collections::HashMap;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct BlockId(pub u32);
+
+#[derive(Debug)]
+pub struct BlockAllocator {
+    block_size: usize,
+    n_blocks: usize,
+    free: Vec<BlockId>,
+    /// Owner tag per allocated block (sequence id), for leak diagnostics.
+    owners: HashMap<BlockId, u64>,
+    peak_used: usize,
+}
+
+impl BlockAllocator {
+    pub fn new(total_slots: usize, block_size: usize) -> Self {
+        assert!(block_size > 0);
+        let n_blocks = total_slots / block_size;
+        let free = (0..n_blocks as u32).rev().map(BlockId).collect();
+        BlockAllocator { block_size, n_blocks, free, owners: HashMap::new(), peak_used: 0 }
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    pub fn total_blocks(&self) -> usize {
+        self.n_blocks
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn used_blocks(&self) -> usize {
+        self.n_blocks - self.free.len()
+    }
+
+    pub fn peak_used_blocks(&self) -> usize {
+        self.peak_used
+    }
+
+    pub fn blocks_for_slots(&self, slots: usize) -> usize {
+        slots.div_ceil(self.block_size)
+    }
+
+    pub fn can_alloc(&self, slots: usize) -> bool {
+        self.blocks_for_slots(slots) <= self.free.len()
+    }
+
+    /// Allocate enough blocks for `slots` slots, tagged with `owner`.
+    pub fn alloc(&mut self, owner: u64, slots: usize) -> Option<Vec<BlockId>> {
+        let need = self.blocks_for_slots(slots);
+        if need > self.free.len() {
+            return None;
+        }
+        let mut out = Vec::with_capacity(need);
+        for _ in 0..need {
+            let b = self.free.pop().unwrap();
+            debug_assert!(!self.owners.contains_key(&b), "double allocation of {b:?}");
+            self.owners.insert(b, owner);
+            out.push(b);
+        }
+        self.peak_used = self.peak_used.max(self.used_blocks());
+        Some(out)
+    }
+
+    /// Return blocks to the pool. Panics on double-free or foreign blocks.
+    pub fn free(&mut self, blocks: &[BlockId]) {
+        for &b in blocks {
+            assert!(self.owners.remove(&b).is_some(), "freeing unallocated block {b:?}");
+            self.free.push(b);
+        }
+    }
+
+    /// Free every block owned by `owner`; returns how many were freed.
+    pub fn free_owner(&mut self, owner: u64) -> usize {
+        let mine: Vec<BlockId> =
+            self.owners.iter().filter(|(_, &o)| o == owner).map(|(&b, _)| b).collect();
+        let n = mine.len();
+        self.free(&mine);
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, Config};
+
+    #[test]
+    fn alloc_free_roundtrip() {
+        let mut a = BlockAllocator::new(64, 8); // 8 blocks
+        assert_eq!(a.total_blocks(), 8);
+        let b1 = a.alloc(1, 20).unwrap(); // 3 blocks
+        assert_eq!(b1.len(), 3);
+        assert_eq!(a.free_blocks(), 5);
+        assert!(a.can_alloc(40));
+        assert!(!a.can_alloc(41));
+        a.free(&b1);
+        assert_eq!(a.free_blocks(), 8);
+    }
+
+    #[test]
+    fn exhaustion_returns_none() {
+        let mut a = BlockAllocator::new(16, 8);
+        assert!(a.alloc(1, 16).is_some());
+        assert!(a.alloc(2, 1).is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "freeing unallocated")]
+    fn double_free_panics() {
+        let mut a = BlockAllocator::new(16, 8);
+        let b = a.alloc(1, 8).unwrap();
+        a.free(&b);
+        a.free(&b);
+    }
+
+    #[test]
+    fn free_owner_collects_all() {
+        let mut a = BlockAllocator::new(64, 8);
+        a.alloc(7, 24).unwrap();
+        a.alloc(8, 8).unwrap();
+        assert_eq!(a.free_owner(7), 3);
+        assert_eq!(a.used_blocks(), 1);
+    }
+
+    /// Property: any interleaving of allocs/frees preserves capacity and
+    /// never double-assigns a block.
+    #[test]
+    fn prop_no_leaks_no_double_assign() {
+        check("allocator invariants", &Config { cases: 128, ..Config::new() }, |rng, size| {
+            let mut a = BlockAllocator::new(size * 8, 4);
+            let mut live: Vec<(u64, Vec<BlockId>)> = Vec::new();
+            let mut next_owner = 0u64;
+            for _ in 0..size {
+                if rng.chance(0.6) || live.is_empty() {
+                    let slots = rng.range(1, 16);
+                    if let Some(bs) = a.alloc(next_owner, slots) {
+                        live.push((next_owner, bs));
+                        next_owner += 1;
+                    }
+                } else {
+                    let i = rng.below(live.len());
+                    let (_, bs) = live.swap_remove(i);
+                    a.free(&bs);
+                }
+                // capacity invariant
+                let live_blocks: usize = live.iter().map(|(_, b)| b.len()).sum();
+                assert_eq!(live_blocks + a.free_blocks(), a.total_blocks());
+                // uniqueness invariant
+                let mut all: Vec<BlockId> = live.iter().flat_map(|(_, b)| b.clone()).collect();
+                all.sort();
+                let n = all.len();
+                all.dedup();
+                assert_eq!(all.len(), n, "duplicate block assignment");
+            }
+        });
+    }
+}

@@ -1,0 +1,142 @@
+//! Per-sequence compacted KV cache (host side of the decode loop).
+
+use crate::util::tensor::TensorF;
+
+/// One sequence's cache after prefill eviction. `k`/`v` are shaped
+/// `[L, Hkv, cap, dh]` matching the decode graph's cache inputs; rows
+/// `>= lens[l]` in layer `l` are dead slots.
+#[derive(Debug, Clone)]
+pub struct SeqCache {
+    pub k: TensorF,
+    pub v: TensorF,
+    /// Live slots per layer (ragged after per-layer budgets, e.g. PyramidKV).
+    pub lens: Vec<usize>,
+    /// Absolute token position of each live slot, per layer
+    /// (slot -> original position; generated tokens append their own).
+    pub slot_pos: Vec<Vec<usize>>,
+    /// Next absolute RoPE position (continues counting over the *full*
+    /// prompt even though the cache is compacted — kept KV retain their
+    /// original rotary phases, as in SnapKV-style serving).
+    pub next_pos: usize,
+    pub cap: usize,
+    pub n_layers: usize,
+}
+
+impl SeqCache {
+    /// Build from per-layer kept indices over full prompt KV
+    /// (`[L, Hkv, S, dh]`), compacting into a `cap`-slot cache.
+    pub fn from_selection(
+        k_full: &TensorF,
+        v_full: &TensorF,
+        kept: &[Vec<usize>],
+        prompt_len: usize,
+        cap: usize,
+    ) -> SeqCache {
+        let (l, hkv, _s, dh) = (
+            k_full.shape[0],
+            k_full.shape[1],
+            k_full.shape[2],
+            k_full.shape[3],
+        );
+        assert_eq!(kept.len(), l);
+        let mut k = TensorF::zeros(vec![l, hkv, cap, dh]);
+        let mut v = TensorF::zeros(vec![l, hkv, cap, dh]);
+        let mut lens = Vec::with_capacity(l);
+        let mut slot_pos = Vec::with_capacity(l);
+        for (li, idx) in kept.iter().enumerate() {
+            assert!(idx.len() <= cap, "layer {li}: {} kept > cap {cap}", idx.len());
+            for (slot, &p) in idx.iter().enumerate() {
+                for h in 0..hkv {
+                    let src_k = k_full.index(&[li, h, p]);
+                    let src_v = v_full.index(&[li, h, p]);
+                    let off = ((li * hkv + h) * cap + slot) * dh;
+                    k.data[off..off + dh].copy_from_slice(src_k);
+                    v.data[off..off + dh].copy_from_slice(src_v);
+                }
+            }
+            lens.push(idx.len());
+            slot_pos.push(idx.clone());
+        }
+        SeqCache { k, v, lens, slot_pos, next_pos: prompt_len, cap, n_layers: l }
+    }
+
+    /// Record the insertion performed by the decode graph: the new token's
+    /// KV landed at slot `lens[l]` in each layer, at absolute `pos`.
+    pub fn note_insert(&mut self, pos: usize) {
+        for l in 0..self.n_layers {
+            assert!(self.lens[l] < self.cap, "cache overflow at layer {l}");
+            self.slot_pos[l].push(pos);
+            self.lens[l] += 1;
+        }
+    }
+
+    /// Replace the K/V tensors with the updated ones returned by the
+    /// decode graph (host round-trip; see DESIGN.md §Perf).
+    pub fn update_tensors(&mut self, k: TensorF, v: TensorF) {
+        debug_assert_eq!(k.shape, self.k.shape);
+        self.k = k;
+        self.v = v;
+    }
+
+    pub fn lens_i32(&self) -> Vec<i32> {
+        self.lens.iter().map(|&x| x as i32).collect()
+    }
+
+    /// Remaining decode headroom (min across layers).
+    pub fn headroom(&self) -> usize {
+        self.lens.iter().map(|&l| self.cap - l).min().unwrap_or(0)
+    }
+
+    /// Total live slots across layers (memory-accounting unit).
+    pub fn live_slots(&self) -> usize {
+        self.lens.iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn full_kv(l: usize, hkv: usize, s: usize, dh: usize) -> TensorF {
+        TensorF::new(
+            vec![l, hkv, s, dh],
+            (0..l * hkv * s * dh).map(|x| x as f32).collect(),
+        )
+    }
+
+    #[test]
+    fn compacts_selected_rows() {
+        let k = full_kv(2, 2, 8, 4);
+        let v = full_kv(2, 2, 8, 4);
+        let kept = vec![vec![1, 3, 7], vec![0, 2]];
+        let c = SeqCache::from_selection(&k, &v, &kept, 8, 4);
+        assert_eq!(c.lens, vec![3, 2]);
+        assert_eq!(c.slot_pos[0], vec![1, 3, 7]);
+        // layer 0, head 1, slot 2 should hold original row 7
+        assert_eq!(c.k.index(&[0, 1, 2]), k.index(&[0, 1, 7]));
+        // dead slot is zero
+        assert_eq!(c.k.index(&[1, 0, 3]), &[0.0; 4][..]);
+        assert_eq!(c.next_pos, 8);
+        assert_eq!(c.headroom(), 1);
+    }
+
+    #[test]
+    fn insert_tracking() {
+        let k = full_kv(1, 1, 4, 2);
+        let c0 = SeqCache::from_selection(&k, &k, &[vec![0, 2]], 4, 4);
+        let mut c = c0;
+        c.note_insert(4);
+        assert_eq!(c.lens, vec![3]);
+        assert_eq!(c.slot_pos[0], vec![0, 2, 4]);
+        c.note_insert(5);
+        assert_eq!(c.headroom(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "cache overflow")]
+    fn overflow_panics() {
+        let k = full_kv(1, 1, 4, 2);
+        let mut c = SeqCache::from_selection(&k, &k, &[vec![0, 1, 2, 3]], 4, 4);
+        c.note_insert(4);
+    }
+}

@@ -1,0 +1,119 @@
+//! Cache manager: per-sequence cache registry + global memory accounting.
+
+use std::collections::HashMap;
+
+use super::block::BlockAllocator;
+use super::cache::SeqCache;
+
+/// Bytes per slot for a model (one token's KV across layers/heads).
+pub fn bytes_per_slot(n_layers: usize, n_kv_heads: usize, head_dim: usize) -> usize {
+    n_layers * n_kv_heads * head_dim * 4 * 2 // K and V, f32
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct CacheStats {
+    pub active_seqs: usize,
+    pub live_slots: usize,
+    pub used_blocks: usize,
+    pub free_blocks: usize,
+    pub peak_used_blocks: usize,
+}
+
+pub struct CacheManager {
+    allocator: BlockAllocator,
+    seqs: HashMap<u64, SeqCache>,
+}
+
+impl CacheManager {
+    /// `total_slots` is the global KV budget in token slots (the analog of
+    /// GPU KV memory); `block_size` the allocation granularity.
+    pub fn new(total_slots: usize, block_size: usize) -> CacheManager {
+        CacheManager { allocator: BlockAllocator::new(total_slots, block_size), seqs: HashMap::new() }
+    }
+
+    /// Admission check for a sequence needing `cap` slots.
+    pub fn can_admit(&self, cap: usize) -> bool {
+        self.allocator.can_alloc(cap)
+    }
+
+    /// Register a prefilled+evicted sequence. Returns false (and drops the
+    /// cache) if memory is exhausted — callers should have checked
+    /// `can_admit` via the scheduler's admission control.
+    pub fn insert(&mut self, seq_id: u64, cache: SeqCache) -> bool {
+        if self.allocator.alloc(seq_id, cache.cap).is_none() {
+            return false;
+        }
+        self.seqs.insert(seq_id, cache);
+        true
+    }
+
+    pub fn get_mut(&mut self, seq_id: u64) -> Option<&mut SeqCache> {
+        self.seqs.get_mut(&seq_id)
+    }
+
+    pub fn get(&self, seq_id: u64) -> Option<&SeqCache> {
+        self.seqs.get(&seq_id)
+    }
+
+    /// Accounting-only reservation (cache owned elsewhere, e.g. by the
+    /// engine loop's active set). Pairs with [`CacheManager::release`].
+    pub fn reserve(&mut self, seq_id: u64, slots: usize) -> bool {
+        self.allocator.alloc(seq_id, slots).is_some()
+    }
+
+    /// Release an accounting-only reservation.
+    pub fn release(&mut self, seq_id: u64) -> usize {
+        self.allocator.free_owner(seq_id)
+    }
+
+    /// Release a finished sequence's memory.
+    pub fn remove(&mut self, seq_id: u64) -> Option<SeqCache> {
+        let c = self.seqs.remove(&seq_id);
+        if c.is_some() {
+            self.allocator.free_owner(seq_id);
+        }
+        c
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            active_seqs: self.seqs.len(),
+            live_slots: self.seqs.values().map(SeqCache::live_slots).sum(),
+            used_blocks: self.allocator.used_blocks(),
+            free_blocks: self.allocator.free_blocks(),
+            peak_used_blocks: self.allocator.peak_used_blocks(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tensor::TensorF;
+
+    fn mk_cache(cap: usize) -> SeqCache {
+        let k = TensorF::zeros(vec![1, 1, 4, 2]);
+        SeqCache::from_selection(&k, &k, &[vec![0, 1]], 4, cap)
+    }
+
+    #[test]
+    fn admit_insert_remove() {
+        let mut m = CacheManager::new(64, 8);
+        assert!(m.can_admit(32));
+        assert!(m.insert(1, mk_cache(32)));
+        assert!(m.insert(2, mk_cache(32)));
+        assert!(!m.can_admit(8));
+        assert!(!m.insert(3, mk_cache(8)));
+        assert!(m.remove(1).is_some());
+        assert!(m.can_admit(32));
+        let s = m.stats();
+        assert_eq!(s.active_seqs, 1);
+        assert_eq!(s.peak_used_blocks, 8);
+    }
+
+    #[test]
+    fn remove_unknown_is_none() {
+        let mut m = CacheManager::new(64, 8);
+        assert!(m.remove(99).is_none());
+    }
+}

@@ -1,0 +1,17 @@
+//! Paged KV-cache management.
+//!
+//! * [`block::BlockAllocator`] — a vLLM-style fixed-size block pool with
+//!   global capacity accounting (admission control for the scheduler);
+//! * [`cache::SeqCache`] — one sequence's compacted post-eviction cache:
+//!   host K/V tensors shaped `[L, Hkv, cap, dh]`, per-layer live lengths,
+//!   and the slot→absolute-position map needed to interpret decode-time
+//!   attention probabilities (GT importance tracking, Table 8);
+//! * [`manager::CacheManager`] — ties both together per active sequence.
+
+pub mod block;
+pub mod cache;
+pub mod manager;
+
+pub use block::BlockAllocator;
+pub use cache::SeqCache;
+pub use manager::CacheManager;

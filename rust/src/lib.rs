@@ -1,0 +1,33 @@
+//! # LookaheadKV — serving-stack reproduction
+//!
+//! Reproduction of *LookaheadKV: Fast and Accurate KV Cache Eviction by
+//! Glimpsing into the Future without Generation* (Samsung Research, 2026)
+//! as a three-layer Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the serving coordinator: request scheduling,
+//!   continuous batching, a paged KV-cache manager, and the paper's
+//!   contribution — a pluggable prefill KV-eviction framework
+//!   ([`eviction`]) with LookaheadKV plus seven baseline policies.
+//! * **L2/L1 (build-time Python, `python/compile/`)** — JAX transformer
+//!   graphs with Pallas importance-score kernels, AOT-lowered to HLO text
+//!   and executed here through PJRT ([`runtime`]).
+//!
+//! Python is never on the request path: `make artifacts` produces
+//! `artifacts/*.hlo.txt` + `manifest.json`, and the `lkv` binary serves
+//! from those alone.
+//!
+//! See `DESIGN.md` for the full system inventory and the experiment index
+//! mapping every paper table/figure to a harness binary.
+
+pub mod costmodel;
+pub mod engine;
+pub mod eval;
+pub mod eviction;
+pub mod kvcache;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod scheduler;
+pub mod server;
+pub mod util;
+pub mod workload;

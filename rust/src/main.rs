@@ -1,0 +1,235 @@
+//! `lkv` — the LookaheadKV serving coordinator CLI.
+//!
+//! Subcommands:
+//!   serve      start the HTTP server (engine loop + scheduler)
+//!   generate   one-shot generation from the command line
+//!   eval       run a workload suite under one or more eviction methods
+//!   cost       print the analytical TTFT cost table (paper Table 3/15)
+//!   graphs     list artifact graphs and compile-check them
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::Result;
+use lookaheadkv::costmodel::{self, methods::CostConfig, profiles};
+use lookaheadkv::engine::{Engine, EngineConfig, GenOptions};
+use lookaheadkv::eval::{runner, tables};
+use lookaheadkv::eviction::Method;
+use lookaheadkv::metrics::Metrics;
+use lookaheadkv::model::tokenizer::encode;
+use lookaheadkv::runtime::artifacts::default_artifacts_dir;
+use lookaheadkv::scheduler::{EngineLoop, LoopConfig, RequestQueue};
+use lookaheadkv::server::{serve, ServerConfig};
+use lookaheadkv::util::cli::Args;
+use lookaheadkv::workload;
+
+fn main() {
+    let args = Args::from_env(&["help", "verbose", "compile"]);
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    let result = match cmd {
+        "serve" => cmd_serve(&args),
+        "generate" => cmd_generate(&args),
+        "eval" => cmd_eval(&args),
+        "cost" => cmd_cost(&args),
+        "graphs" => cmd_graphs(&args),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "lkv — LookaheadKV serving coordinator\n\
+         \n\
+         usage: lkv <command> [options]\n\
+         \n\
+         commands:\n\
+         \x20 serve     --addr 127.0.0.1:8080 --model lkv-tiny --max-active 4\n\
+         \x20 generate  --prompt <text> --method lookaheadkv --budget 64 --max-new 32\n\
+         \x20 eval      --suite ruler|longbench|qasper|longproc|mtbench --methods snapkv,lookaheadkv \\\n\
+         \x20           --budgets 16,32 --ctx 256 --n 8\n\
+         \x20 cost      [--contexts 4096,8192,16384,32768]   (paper Table 3/15)\n\
+         \x20 graphs    [--compile]                           (artifact inventory)\n\
+         \n\
+         methods: full random streaming snapkv pyramidkv h2o tova laq speckv\n\
+         \x20        lookaheadkv[:variant] lkv+suffix[:variant]"
+    );
+}
+
+fn artifacts(args: &Args) -> PathBuf {
+    args.get("artifacts").map(PathBuf::from).unwrap_or_else(default_artifacts_dir)
+}
+
+fn engine_from_args(args: &Args) -> Result<Engine> {
+    let model = args.get_or("model", "lkv-tiny");
+    let mut cfg = EngineConfig::new(model);
+    cfg.draft_tokens = args.usize("draft-tokens", 8);
+    Engine::new(&artifacts(args), cfg)
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    // PJRT handles are not Send: construct the Engine *inside* the engine
+    // thread and keep it there for the process lifetime.
+    let queue = Arc::new(RequestQueue::new(args.usize("queue-cap", 64)));
+    let metrics = Arc::new(Metrics::new());
+    let loop_cfg = LoopConfig { max_active: args.usize("max-active", 4), ..LoopConfig::default() };
+    let q2 = Arc::clone(&queue);
+    let m2 = Arc::clone(&metrics);
+    let model = args.get_or("model", "lkv-tiny").to_string();
+    let draft_tokens = args.usize("draft-tokens", 8);
+    let art = artifacts(args);
+    let engine_thread = std::thread::Builder::new().name("engine".into()).spawn(move || {
+        let mut cfg = EngineConfig::new(&model);
+        cfg.draft_tokens = draft_tokens;
+        let engine = Engine::new(&art, cfg).expect("engine init");
+        EngineLoop::new(engine, loop_cfg, q2, m2).run()
+    })?;
+    let server_cfg = ServerConfig {
+        addr: args.get_or("addr", "127.0.0.1:8080").to_string(),
+        workers: args.usize("workers", 4),
+        queue_cap: args.usize("queue-cap", 64),
+    };
+    serve(server_cfg, queue, metrics)?;
+    let _ = engine_thread.join();
+    Ok(())
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let engine = engine_from_args(args)?;
+    let prompt_text = args.get_or("prompt", "A7K=Q2Z;lorem;ipsum;dolor;A7K=");
+    let method = Method::parse(args.get_or("method", "lookaheadkv"))
+        .ok_or_else(|| anyhow::anyhow!("unknown method"))?;
+    let opts = GenOptions {
+        budget: args.usize("budget", 64),
+        max_new: args.usize("max-new", 32),
+        temperature: args.f64("temperature", 0.0) as f32,
+        seed: args.usize("seed", 0) as u64,
+        collect_gt: false,
+    };
+    let res = engine.generate(&encode(prompt_text, true, false), &method, &opts)?;
+    println!("text: {}", res.text);
+    println!(
+        "prompt={} tokens, kept/layer={:?}, cap={}",
+        res.prompt_len, res.kept_per_layer, res.cache_cap
+    );
+    println!(
+        "ttft={:.2} ms (forward {:.2} + eviction {:.2}), decode {:.2} ms/tok x {}",
+        res.ttft_ms,
+        res.forward_ms,
+        res.eviction_overhead_ms,
+        res.decode_ms_per_token(),
+        res.n_decode_steps
+    );
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let engine = engine_from_args(args)?;
+    let suite_name = args.get_or("suite", "ruler");
+    let ctx = args.usize("ctx", 256);
+    let n = args.usize("n", 8);
+    let seed = args.usize("seed", 0) as u64;
+    let suite = match suite_name {
+        "ruler" => workload::ruler_suite(seed, n, ctx),
+        "longbench" => workload::longbench_suite(seed, n, ctx),
+        "qasper" => workload::qasper_suite(seed, n * 4, ctx),
+        "longproc" => workload::longproc_suite(seed, n * 2, ctx, args.usize("records", 4)),
+        "mtbench" => workload::mtbench_suite(seed, n * 4, ctx),
+        other => anyhow::bail!("unknown suite {other}"),
+    };
+    let methods: Vec<Method> = args
+        .list("methods", &["full", "streaming", "snapkv", "lookaheadkv"])
+        .iter()
+        .map(|m| Method::parse(m).ok_or_else(|| anyhow::anyhow!("unknown method {m}")))
+        .collect::<Result<_>>()?;
+    let budgets = args.usize_list("budgets", &[32]);
+    let mut rows = Vec::new();
+    let mut all = Vec::new();
+    for method in &methods {
+        let mut vals = Vec::new();
+        for &b in &budgets {
+            let cfg = runner::EvalConfig {
+                budget: b,
+                max_new: args.usize("max-new", 16),
+                temperature: args.f64("temperature", 0.0) as f32,
+                seed,
+            };
+            let score = runner::run_suite(&engine, &suite, method, &cfg)?;
+            println!(
+                "{:<16} budget={:<5} score={:.3} ttft={:.1}ms (+{:.1}ms evict)",
+                score.method, b, score.score, score.ttft_ms_mean, score.overhead_ms_mean
+            );
+            vals.push(score.score);
+            all.push(score);
+        }
+        rows.push((method.name(), vals));
+    }
+    let cols: Vec<String> = budgets.iter().map(|b| b.to_string()).collect();
+    println!("\n{}", tables::score_grid(&suite.name, "budget", &cols, &rows));
+    tables::save_results(&format!("eval_{suite_name}_{ctx}"), &tables::results_to_json(&all));
+    Ok(())
+}
+
+fn cmd_cost(args: &Args) -> Result<()> {
+    let contexts = args.usize_list("contexts", &[4096, 8192, 16384, 32768]);
+    let cfg = CostConfig::default();
+    println!(
+        "Analytical TTFT (paper §B config: LLaMA3.1-8B, H100-80GB, C={}, window/lookahead/draft=32)",
+        cfg.budget as usize
+    );
+    println!(
+        "{:<8} {:<18} {:>10} {:>12} {:>10} {:>14}",
+        "context", "method", "TFLOPs", "traffic(GB)", "TTFT(ms)", "overhead(ms)"
+    );
+    for &ctx in &contexts {
+        for m in costmodel::MethodKind::all() {
+            let row = costmodel::method_cost(
+                m,
+                &profiles::LLAMA31_8B,
+                &profiles::LLAMA32_1B,
+                &profiles::H100,
+                ctx,
+                &cfg,
+            );
+            println!(
+                "{:<8} {:<18} {:>10.0} {:>12.1} {:>10.0} {:>14.2}",
+                ctx,
+                row.method.label(),
+                row.tflops,
+                row.traffic_gb,
+                row.ttft_ms,
+                row.overhead_ms
+            );
+        }
+        println!();
+    }
+    Ok(())
+}
+
+fn cmd_graphs(args: &Args) -> Result<()> {
+    let engine = engine_from_args(args)?;
+    let m = engine.rt.manifest();
+    println!(
+        "{} graphs, {} models, {} lkv variants",
+        m.graphs.len(),
+        m.models.len(),
+        m.variants.len()
+    );
+    for (key, g) in &m.graphs {
+        println!("  {:<44} kind={:<12} model={}", key, g.kind, g.model);
+    }
+    if args.has("compile") {
+        for key in m.graphs.keys().cloned().collect::<Vec<_>>() {
+            let t0 = std::time::Instant::now();
+            engine.rt.graph(&key)?;
+            println!("compiled {key} in {:.0} ms", t0.elapsed().as_secs_f64() * 1e3);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,113 @@
+//! Serving metrics: counters + latency histograms, exported as JSON by
+//! the server's `/metrics` endpoint and by the bench harnesses.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use crate::util::json::Json;
+use crate::util::stats::summarize;
+
+/// Log-scaled latency histogram (microsecond buckets, powers of √2).
+#[derive(Debug, Default)]
+pub struct Histogram {
+    samples: Vec<f64>, // ms; bounded reservoir
+}
+
+const RESERVOIR: usize = 4096;
+
+impl Histogram {
+    pub fn record(&mut self, ms: f64) {
+        if self.samples.len() < RESERVOIR {
+            self.samples.push(ms);
+        } else {
+            // reservoir decimation: overwrite pseudo-randomly
+            let i = (self.samples.len() * 31 + ms.to_bits() as usize) % RESERVOIR;
+            self.samples[i] = ms;
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let s = summarize(&self.samples);
+        Json::from_pairs(vec![
+            ("count", s.n.into()),
+            ("mean_ms", s.mean.into()),
+            ("p50_ms", s.p50.into()),
+            ("p90_ms", s.p90.into()),
+            ("p99_ms", s.p99.into()),
+            ("max_ms", s.max.into()),
+        ])
+    }
+}
+
+/// Global metrics registry (server-side; engine thread writes, HTTP
+/// threads read snapshots).
+#[derive(Debug, Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    counters: BTreeMap<String, u64>,
+    histograms: BTreeMap<String, Histogram>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn incr(&self, name: &str, by: u64) {
+        let mut inner = self.inner.lock().unwrap();
+        *inner.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    pub fn observe(&self, name: &str, ms: f64) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.histograms.entry(name.to_string()).or_default().record(ms);
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.inner.lock().unwrap().counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let inner = self.inner.lock().unwrap();
+        let mut counters = Json::obj();
+        for (k, v) in &inner.counters {
+            counters.set(k, (*v).into());
+        }
+        let mut hists = Json::obj();
+        for (k, h) in &inner.histograms {
+            hists.set(k, h.to_json());
+        }
+        Json::from_pairs(vec![("counters", counters), ("latency", hists)])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_histograms() {
+        let m = Metrics::new();
+        m.incr("requests", 1);
+        m.incr("requests", 2);
+        m.observe("ttft", 10.0);
+        m.observe("ttft", 20.0);
+        assert_eq!(m.counter("requests"), 3);
+        let j = m.to_json();
+        assert_eq!(j.req("latency").req("ttft").req("count").as_usize(), Some(2));
+        assert_eq!(j.req("counters").req("requests").as_usize(), Some(3));
+    }
+
+    #[test]
+    fn histogram_reservoir_bounded() {
+        let mut h = Histogram::default();
+        for i in 0..10_000 {
+            h.record(i as f64);
+        }
+        assert!(h.samples.len() <= RESERVOIR);
+    }
+}

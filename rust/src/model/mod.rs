@@ -1,0 +1,8 @@
+//! Model-facing types shared across the coordinator: the byte-level
+//! tokenizer (mirroring `python/compile/tokenizer.py`) and sampling.
+
+pub mod sampler;
+pub mod tokenizer;
+
+pub use sampler::Sampler;
+pub use tokenizer::{decode, encode, Tokenizer, BOS_ID, EOS_ID, PAD_ID, SEP_ID};

@@ -1,0 +1,96 @@
+//! Byte-level tokenizer — the exact mirror of `python/compile/tokenizer.py`.
+//!
+//! Ids 0..=255 are raw bytes; 256..=259 are PAD/BOS/EOS/SEP. The manifest
+//! carries the same constants and the integration tests cross-check them.
+
+pub const PAD_ID: i32 = 256;
+pub const BOS_ID: i32 = 257;
+pub const EOS_ID: i32 = 258;
+pub const SEP_ID: i32 = 259;
+pub const VOCAB_SIZE: usize = 320;
+
+/// Stateless tokenizer handle (the constants above are the whole state,
+/// but a struct keeps call sites uniform if a BPE variant lands later).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Tokenizer;
+
+impl Tokenizer {
+    pub fn encode(&self, text: &str, bos: bool, eos: bool) -> Vec<i32> {
+        encode(text, bos, eos)
+    }
+
+    pub fn decode(&self, ids: &[i32]) -> String {
+        decode(ids)
+    }
+}
+
+pub fn encode(text: &str, bos: bool, eos: bool) -> Vec<i32> {
+    let bytes = text.as_bytes();
+    let mut ids = Vec::with_capacity(bytes.len() + 2);
+    if bos {
+        ids.push(BOS_ID);
+    }
+    ids.extend(bytes.iter().map(|&b| b as i32));
+    if eos {
+        ids.push(EOS_ID);
+    }
+    ids
+}
+
+/// Decode, dropping special tokens; invalid UTF-8 becomes U+FFFD.
+pub fn decode(ids: &[i32]) -> String {
+    let bytes: Vec<u8> = ids.iter().filter(|&&i| (0..256).contains(&i)).map(|&i| i as u8).collect();
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+/// Decode up to (excluding) the first EOS.
+pub fn decode_until_eos(ids: &[i32]) -> String {
+    let end = ids.iter().position(|&i| i == EOS_ID).unwrap_or(ids.len());
+    decode(&ids[..end])
+}
+
+pub fn pad_to(ids: &[i32], len: usize) -> Vec<i32> {
+    assert!(ids.len() <= len, "sequence of {} tokens exceeds bucket {len}", ids.len());
+    let mut out = ids.to_vec();
+    out.resize(len, PAD_ID);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let ids = encode("?K7F=Q2Z;", true, true);
+        assert_eq!(ids[0], BOS_ID);
+        assert_eq!(*ids.last().unwrap(), EOS_ID);
+        assert_eq!(decode(&ids), "?K7F=Q2Z;");
+    }
+
+    #[test]
+    fn roundtrip_utf8() {
+        let s = "héllo→";
+        assert_eq!(decode(&encode(s, false, false)), s);
+    }
+
+    #[test]
+    fn decode_until_eos_stops() {
+        let mut ids = encode("abc", false, false);
+        ids.push(EOS_ID);
+        ids.extend(encode("junk", false, false));
+        assert_eq!(decode_until_eos(&ids), "abc");
+    }
+
+    #[test]
+    fn pad_to_len() {
+        let ids = pad_to(&[1, 2], 5);
+        assert_eq!(ids, vec![1, 2, PAD_ID, PAD_ID, PAD_ID]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn pad_overflow_panics() {
+        pad_to(&[1, 2, 3], 2);
+    }
+}

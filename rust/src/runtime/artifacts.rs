@@ -1,0 +1,312 @@
+//! Artifact manifest: the contract between `aot.py` and the Rust runtime.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// One transformer architecture (mirrors `config.ModelConfig`).
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub name: String,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub ff: usize,
+    pub vocab: usize,
+    pub max_seq: usize,
+    pub weights_file: String,
+    pub param_names: Vec<String>,
+    pub param_count: usize,
+}
+
+/// One trained LookaheadKV variant (lookahead embeddings + LoRA weights).
+#[derive(Debug, Clone)]
+pub struct VariantMeta {
+    pub model: String,
+    pub variant: String,
+    pub n_lookahead: usize,
+    pub lora_rank: usize,
+    pub lora_targets: Vec<String>,
+    pub weights_file: String,
+    pub param_names: Vec<String>,
+    pub trainable_params: usize,
+    /// Which prefill_lkv graph family this variant runs on (e.g. "n8_all").
+    pub graph_suffix: String,
+}
+
+/// Input spec of one runtime (non-weight) argument.
+#[derive(Debug, Clone)]
+pub struct InputSpec {
+    pub name: String,
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+/// One lowered graph.
+#[derive(Debug, Clone)]
+pub struct GraphMeta {
+    pub key: String,
+    pub kind: String, // prefill_base | prefill_lkv | decode
+    pub model: String,
+    pub file: String,
+    pub s: Option<usize>,
+    pub cap: Option<usize>,
+    pub window: Option<usize>,
+    pub n_lookahead: Option<usize>,
+    pub suffix: Option<String>,
+    pub n_weight_args: usize,
+    pub n_lkv_weight_args: usize,
+    pub inputs: Vec<InputSpec>,
+    pub outputs: Vec<String>,
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub pad_id: i32,
+    pub bos_id: i32,
+    pub eos_id: i32,
+    pub vocab: usize,
+    pub obs_window: usize,
+    pub prefill_buckets: Vec<usize>,
+    pub decode_caps: Vec<usize>,
+    pub models: BTreeMap<String, ModelMeta>,
+    pub variants: BTreeMap<String, VariantMeta>,
+    pub graphs: BTreeMap<String, GraphMeta>,
+    pub goldens: BTreeMap<String, String>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?}; run `make artifacts` first"))?;
+        let v = json::parse(&text).context("parsing manifest.json")?;
+        Self::from_json(dir, &v)
+    }
+
+    fn from_json(dir: &Path, v: &Json) -> Result<Manifest> {
+        let tok = v.req("tokenizer");
+        let mut models = BTreeMap::new();
+        for (name, m) in v.req("models").as_obj().context("models")? {
+            models.insert(
+                name.clone(),
+                ModelMeta {
+                    name: name.clone(),
+                    d_model: m.req("d_model").as_usize().unwrap(),
+                    n_layers: m.req("n_layers").as_usize().unwrap(),
+                    n_heads: m.req("n_heads").as_usize().unwrap(),
+                    n_kv_heads: m.req("n_kv_heads").as_usize().unwrap(),
+                    head_dim: m.req("head_dim").as_usize().unwrap(),
+                    ff: m.req("ff").as_usize().unwrap(),
+                    vocab: m.req("vocab").as_usize().unwrap(),
+                    max_seq: m.req("max_seq").as_usize().unwrap(),
+                    weights_file: m.req("weights").as_str().unwrap().to_string(),
+                    param_names: m.req("param_names").str_arr(),
+                    param_count: m.req("param_count").as_usize().unwrap(),
+                },
+            );
+        }
+        let mut variants = BTreeMap::new();
+        if let Some(obj) = v.get("lkv_variants").and_then(Json::as_obj) {
+            for (key, m) in obj {
+                variants.insert(
+                    key.clone(),
+                    VariantMeta {
+                        model: m.req("model").as_str().unwrap().to_string(),
+                        variant: m.req("variant").as_str().unwrap().to_string(),
+                        n_lookahead: m.req("n_lookahead").as_usize().unwrap(),
+                        lora_rank: m.req("lora_rank").as_usize().unwrap(),
+                        lora_targets: m.req("lora_targets").str_arr(),
+                        weights_file: m.req("weights").as_str().unwrap().to_string(),
+                        param_names: m.req("param_names").str_arr(),
+                        trainable_params: m.req("trainable_params").as_usize().unwrap(),
+                        graph_suffix: m.req("graph_suffix").as_str().unwrap().to_string(),
+                    },
+                );
+            }
+        }
+        let mut graphs = BTreeMap::new();
+        for (key, g) in v.req("graphs").as_obj().context("graphs")? {
+            let inputs = g
+                .req("inputs")
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|i| InputSpec {
+                    name: i.req("name").as_str().unwrap().to_string(),
+                    dtype: i.req("dtype").as_str().unwrap().to_string(),
+                    shape: i.req("shape").usize_arr(),
+                })
+                .collect();
+            graphs.insert(
+                key.clone(),
+                GraphMeta {
+                    key: key.clone(),
+                    kind: g.req("kind").as_str().unwrap().to_string(),
+                    model: g.req("model").as_str().unwrap().to_string(),
+                    file: g.req("file").as_str().unwrap().to_string(),
+                    s: g.get("s").and_then(Json::as_usize),
+                    cap: g.get("cap").and_then(Json::as_usize),
+                    window: g.get("window").and_then(Json::as_usize),
+                    n_lookahead: g.get("n_lookahead").and_then(Json::as_usize),
+                    suffix: g.get("suffix").and_then(Json::as_str).map(str::to_string),
+                    n_weight_args: g.req("n_weight_args").as_usize().unwrap(),
+                    n_lkv_weight_args: g.get("n_lkv_weight_args").and_then(Json::as_usize).unwrap_or(0),
+                    inputs,
+                    outputs: g.req("outputs").str_arr(),
+                },
+            );
+        }
+        let mut goldens = BTreeMap::new();
+        if let Some(obj) = v.get("goldens").and_then(Json::as_obj) {
+            for (k, g) in obj {
+                if let Some(s) = g.as_str() {
+                    goldens.insert(k.clone(), s.to_string());
+                }
+            }
+        }
+        Ok(Manifest {
+            root: dir.to_path_buf(),
+            pad_id: tok.req("pad").as_i64().unwrap() as i32,
+            bos_id: tok.req("bos").as_i64().unwrap() as i32,
+            eos_id: tok.req("eos").as_i64().unwrap() as i32,
+            vocab: tok.req("vocab").as_usize().unwrap(),
+            obs_window: v.req("obs_window").as_usize().unwrap(),
+            prefill_buckets: v.req("prefill_buckets").usize_arr(),
+            decode_caps: v.req("decode_caps").usize_arr(),
+            models,
+            variants,
+            graphs,
+            goldens,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelMeta> {
+        self.models.get(name).with_context(|| format!("unknown model {name:?}"))
+    }
+
+    pub fn variant(&self, model: &str, variant: &str) -> Result<&VariantMeta> {
+        self.variants
+            .get(&format!("{model}/{variant}"))
+            .with_context(|| format!("unknown lkv variant {model}/{variant}"))
+    }
+
+    pub fn graph(&self, key: &str) -> Result<&GraphMeta> {
+        self.graphs.get(key).with_context(|| format!("unknown graph {key:?}"))
+    }
+
+    /// Smallest prefill bucket that fits `len` tokens.
+    pub fn prefill_bucket(&self, len: usize) -> Result<usize> {
+        self.prefill_buckets
+            .iter()
+            .copied()
+            .find(|&b| b >= len)
+            .with_context(|| format!("prompt of {len} tokens exceeds largest bucket"))
+    }
+
+    /// Smallest decode cap that fits `need` slots, from the model's caps.
+    pub fn decode_cap(&self, model: &str, need: usize) -> Result<usize> {
+        let caps: Vec<usize> = self
+            .graphs
+            .values()
+            .filter(|g| g.kind == "decode" && g.model == model)
+            .filter_map(|g| g.cap)
+            .collect();
+        let mut caps = caps;
+        caps.sort_unstable();
+        caps.into_iter()
+            .find(|&c| c >= need)
+            .with_context(|| format!("no decode cap >= {need} for {model}"))
+    }
+
+    pub fn graph_key_prefill_base(&self, model: &str, s: usize) -> String {
+        format!("{model}/prefill_base_s{s}")
+    }
+
+    pub fn graph_key_prefill_lkv(&self, model: &str, s: usize, suffix: &str) -> String {
+        format!("{model}/prefill_lkv_s{s}_{suffix}")
+    }
+
+    pub fn graph_key_decode(&self, model: &str, cap: usize) -> String {
+        format!("{model}/decode_c{cap}")
+    }
+
+    pub fn path(&self, rel: &str) -> PathBuf {
+        self.root.join(rel)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        for g in self.graphs.values() {
+            let p = self.path(&g.file);
+            if !p.exists() {
+                bail!("graph file missing: {p:?}");
+            }
+        }
+        for m in self.models.values() {
+            if !self.path(&m.weights_file).exists() {
+                bail!("weights missing for {}", m.name);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Locate the artifacts directory: $LKV_ARTIFACTS or ./artifacts upward.
+pub fn default_artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("LKV_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !dir.pop() {
+            return PathBuf::from("artifacts");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let text = r#"{
+          "format": 1,
+          "tokenizer": {"pad":256,"bos":257,"eos":258,"sep":259,"vocab":320},
+          "obs_window": 32,
+          "prefill_buckets": [128, 256],
+          "decode_caps": [64],
+          "models": {"m": {"d_model":64,"n_layers":4,"n_heads":4,"n_kv_heads":2,
+            "head_dim":16,"ff":192,"vocab":320,"max_seq":1184,
+            "weights":"weights/m.npz","param_names":["emb"],"param_count":10}},
+          "lkv_variants": {"m/main": {"model":"m","variant":"main","n_lookahead":8,
+            "lora_rank":4,"lora_alpha":16,"lora_targets":["wq"],
+            "weights":"w.npz","param_names":["emb"],"trainable_params":5,
+            "graph_suffix":"n8_all"}},
+          "graphs": {"m/prefill_base_s128": {"kind":"prefill_base","model":"m",
+            "s":128,"window":32,"file":"hlo/x.hlo.txt","n_weight_args":1,
+            "inputs":[{"name":"tokens","dtype":"int32","shape":[128]}],
+            "outputs":["k","v"]}},
+          "goldens": {}
+        }"#;
+        let v = json::parse(text).unwrap();
+        let m = Manifest::from_json(Path::new("/tmp/x"), &v).unwrap();
+        assert_eq!(m.pad_id, 256);
+        assert_eq!(m.prefill_bucket(100).unwrap(), 128);
+        assert_eq!(m.prefill_bucket(200).unwrap(), 256);
+        assert!(m.prefill_bucket(999).is_err());
+        let g = m.graph("m/prefill_base_s128").unwrap();
+        assert_eq!(g.inputs[0].shape, vec![128]);
+        assert_eq!(m.variant("m", "main").unwrap().n_lookahead, 8);
+    }
+}

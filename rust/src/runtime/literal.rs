@@ -1,0 +1,62 @@
+//! Host tensor <-> xla::Literal bridging.
+
+use anyhow::{Context, Result};
+use xla::{ArrayElement, ElementType, Literal};
+
+use crate::util::tensor::{TensorF, TensorI};
+
+pub fn literal_f32(t: &TensorF) -> Result<Literal> {
+    let dims: Vec<usize> = t.shape.clone();
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(t.data.as_ptr() as *const u8, t.data.len() * 4)
+    };
+    Ok(Literal::create_from_shape_and_untyped_data(ElementType::F32, &dims, bytes)?)
+}
+
+pub fn literal_i32(t: &TensorI) -> Result<Literal> {
+    let dims: Vec<usize> = t.shape.clone();
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(t.data.as_ptr() as *const u8, t.data.len() * 4)
+    };
+    Ok(Literal::create_from_shape_and_untyped_data(ElementType::S32, &dims, bytes)?)
+}
+
+pub fn literal_scalar_i32(v: i32) -> Literal {
+    Literal::scalar(v)
+}
+
+pub fn tensor_f32(lit: &Literal) -> Result<TensorF> {
+    let shape = lit.array_shape().context("literal shape")?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = lit.to_vec::<f32>().context("literal f32 data")?;
+    Ok(TensorF::new(dims, data))
+}
+
+pub fn tensor_i32(lit: &Literal) -> Result<TensorI> {
+    let shape = lit.array_shape().context("literal shape")?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = lit.to_vec::<i32>().context("literal i32 data")?;
+    Ok(TensorI::new(dims, data))
+}
+
+/// Copy a literal's raw data into a pre-allocated f32 slice (hot path:
+/// avoids the extra Vec allocation of `to_vec`).
+pub fn copy_f32_into(lit: &Literal, dst: &mut [f32]) -> Result<()> {
+    lit.copy_raw_to(dst).context("copy_raw_to f32")?;
+    Ok(())
+}
+
+pub fn element_count(lit: &Literal) -> usize {
+    lit.element_count()
+}
+
+/// Assert a literal element type matches.
+pub fn expect_type(lit: &Literal, ty: ElementType) -> Result<()> {
+    let got = lit.ty().context("literal ty")?;
+    anyhow::ensure!(got == ty, "expected {ty:?}, got {got:?}");
+    Ok(())
+}
+
+pub fn f32_type() -> ElementType {
+    <f32 as ArrayElement>::TY
+}

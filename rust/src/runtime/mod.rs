@@ -1,0 +1,25 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them.
+//!
+//! The compile path (`python/compile/aot.py`) lowers every jax graph once
+//! to `artifacts/hlo/*.hlo.txt` and records shapes + positional argument
+//! contracts in `artifacts/manifest.json`. This module:
+//!
+//! * parses the manifest ([`artifacts::Manifest`]);
+//! * owns the PJRT CPU client and a lazy compile cache
+//!   ([`Runtime`]) — each graph is compiled at most once per process;
+//! * holds model weights as device-resident [`xla::PjRtBuffer`]s loaded
+//!   from `weights/*.npz` once (weights are graph *inputs*, so artifacts
+//!   stay small and all LookaheadKV variants share shape-compatible
+//!   graphs);
+//! * bridges host tensors ([`crate::util::tensor`]) to literals/buffers
+//!   ([`literal`]).
+//!
+//! Python is never involved at runtime; everything here is self-contained
+//! given the artifacts directory.
+
+pub mod artifacts;
+pub mod literal;
+pub mod runtime;
+
+pub use artifacts::{GraphMeta, Manifest, ModelMeta, VariantMeta};
+pub use runtime::{GraphHandle, Runtime};

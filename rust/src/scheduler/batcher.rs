@@ -1,0 +1,216 @@
+//! Continuous-batching engine loop.
+//!
+//! Iteration-level scheduling in the Orca/vLLM mold, specialized to the
+//! single-stream CPU PJRT backend: each loop iteration either (a) admits
+//! and prefills one queued request if the KV pool has room, or (b)
+//! advances every active sequence by one decode token, round-robin.
+//! Prefill is prioritized while the active set is below `max_active`
+//! (prefill-priority keeps TTFT low; decode fairness keeps TPOT flat).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::engine::{Engine, GenOptions};
+use crate::kvcache::{manager::bytes_per_slot, CacheManager, SeqCache};
+use crate::metrics::Metrics;
+use crate::model::sampler::Sampler;
+use crate::model::tokenizer::{decode_until_eos, EOS_ID};
+use crate::scheduler::queue::{Reply, Request, RequestQueue};
+
+#[derive(Debug, Clone)]
+pub struct LoopConfig {
+    /// Max concurrently active (decoding) sequences.
+    pub max_active: usize,
+    /// Global KV pool in token slots (admission control).
+    pub kv_pool_slots: usize,
+    pub kv_block_slots: usize,
+}
+
+impl Default for LoopConfig {
+    fn default() -> Self {
+        LoopConfig { max_active: 4, kv_pool_slots: 16 * 1152, kv_block_slots: 64 }
+    }
+}
+
+struct ActiveSeq {
+    id: u64,
+    cache: SeqCache,
+    sampler: Sampler,
+    tokens: Vec<i32>,
+    next_token: i32,
+    max_new: usize,
+    reply: std::sync::mpsc::Sender<Reply>,
+    t_start: Instant,
+    ttft_ms: f64,
+    kept: usize,
+}
+
+pub struct EngineLoop {
+    engine: Engine,
+    cfg: LoopConfig,
+    queue: Arc<RequestQueue>,
+    metrics: Arc<Metrics>,
+}
+
+impl EngineLoop {
+    pub fn new(
+        engine: Engine,
+        cfg: LoopConfig,
+        queue: Arc<RequestQueue>,
+        metrics: Arc<Metrics>,
+    ) -> EngineLoop {
+        EngineLoop { engine, cfg, queue, metrics }
+    }
+
+    /// Run until the queue is closed and drained.
+    pub fn run(mut self) {
+        let model = self.engine.cfg.model.clone();
+        let m = self.engine.rt.manifest().model(&model).expect("model");
+        let _slot_bytes = bytes_per_slot(m.n_layers, m.n_kv_heads, m.head_dim);
+        let mut mgr = CacheManager::new(self.cfg.kv_pool_slots, self.cfg.kv_block_slots);
+        let mut active: Vec<ActiveSeq> = Vec::new();
+
+        loop {
+            // Admission + prefill (prioritized under max_active).
+            while active.len() < self.cfg.max_active {
+                let req = if active.is_empty() {
+                    match self.queue.pop_timeout(Duration::from_millis(50)) {
+                        Some(r) => r,
+                        None if self.queue.is_closed() && self.queue.is_empty() => {
+                            self.drain(&mut active, &mut mgr);
+                            return;
+                        }
+                        None => break,
+                    }
+                } else {
+                    match self.queue.try_pop() {
+                        Some(r) => r,
+                        None => break,
+                    }
+                };
+                self.admit(req, &mut active, &mut mgr);
+            }
+
+            if active.is_empty() {
+                if self.queue.is_closed() && self.queue.is_empty() {
+                    return;
+                }
+                continue;
+            }
+
+            // One decode step for every active sequence (round-robin).
+            let mut finished = Vec::new();
+            for (i, seq) in active.iter_mut().enumerate() {
+                let tok = seq.next_token;
+                if tok == EOS_ID || seq.tokens.len() >= seq.max_new || seq.cache.headroom() == 0 {
+                    finished.push(i);
+                    continue;
+                }
+                let t0 = Instant::now();
+                match self.engine.decode_step(&model, &mut seq.cache, tok) {
+                    Ok(step) => {
+                        self.metrics.observe("decode_step_ms", t0.elapsed().as_secs_f64() * 1e3);
+                        seq.next_token = seq.sampler.sample(&step.logits);
+                        seq.tokens.push(seq.next_token);
+                    }
+                    Err(e) => {
+                        let _ = seq.reply.send(Reply {
+                            id: seq.id,
+                            text: String::new(),
+                            n_tokens: 0,
+                            ttft_ms: seq.ttft_ms,
+                            total_ms: seq.t_start.elapsed().as_secs_f64() * 1e3,
+                            kept: seq.kept,
+                            error: Some(format!("{e:#}")),
+                        });
+                        finished.push(i);
+                    }
+                }
+            }
+            for i in finished.into_iter().rev() {
+                let seq = active.swap_remove(i);
+                self.complete(seq, &mut mgr);
+            }
+        }
+    }
+
+    fn admit(&mut self, req: Request, active: &mut Vec<ActiveSeq>, mgr: &mut CacheManager) {
+        let t0 = Instant::now();
+        // prefill + evict + compact
+        let res = (|| -> anyhow::Result<(SeqCache, Vec<f32>, usize)> {
+            let pre = self.engine.prefill_for_method(&req.prompt, &req.method)?;
+            let n_layers = self.engine.n_layers(&self.engine.cfg.model);
+            let mut evcfg = self.engine.cfg.eviction;
+            evcfg.budget = req.budget;
+            let sel = req.method.select(&evcfg, n_layers, &pre.bundle);
+            let cap = self
+                .engine
+                .rt
+                .manifest()
+                .decode_cap(&self.engine.cfg.model, sel.max_kept() + req.max_new)?;
+            anyhow::ensure!(mgr.can_admit(cap), "kv pool exhausted");
+            let cache =
+                SeqCache::from_selection(&pre.k, &pre.v, &sel.per_layer, req.prompt.len(), cap);
+            Ok((cache, pre.logits, sel.max_kept()))
+        })();
+        match res {
+            Ok((cache, logits, kept)) => {
+                let mut sampler = if req.temperature > 0.0 {
+                    Sampler::with_temperature(req.temperature, req.id)
+                } else {
+                    Sampler::greedy()
+                };
+                let first = sampler.sample(&logits);
+                let ttft_ms = t0.elapsed().as_secs_f64() * 1e3;
+                self.metrics.observe("ttft_ms", ttft_ms);
+                self.metrics.incr("prefills", 1);
+                mgr.reserve(req.id, cache.cap); // KV-pool accounting
+                active.push(ActiveSeq {
+                    id: req.id,
+                    cache,
+                    sampler,
+                    tokens: vec![first],
+                    next_token: first,
+                    max_new: req.max_new,
+                    reply: req.reply,
+                    t_start: t0,
+                    ttft_ms,
+                    kept,
+                });
+            }
+            Err(e) => {
+                self.metrics.incr("prefill_errors", 1);
+                let _ = req.reply.send(Reply {
+                    id: req.id,
+                    text: String::new(),
+                    n_tokens: 0,
+                    ttft_ms: 0.0,
+                    total_ms: t0.elapsed().as_secs_f64() * 1e3,
+                    kept: 0,
+                    error: Some(format!("{e:#}")),
+                });
+            }
+        }
+    }
+
+    fn complete(&mut self, seq: ActiveSeq, mgr: &mut CacheManager) {
+        mgr.release(seq.id);
+        self.metrics.incr("completions", 1);
+        self.metrics.incr("generated_tokens", seq.tokens.len() as u64);
+        let _ = seq.reply.send(Reply {
+            id: seq.id,
+            text: decode_until_eos(&seq.tokens),
+            n_tokens: seq.tokens.len(),
+            ttft_ms: seq.ttft_ms,
+            total_ms: seq.t_start.elapsed().as_secs_f64() * 1e3,
+            kept: seq.kept,
+            error: None,
+        });
+    }
+
+    fn drain(&mut self, active: &mut Vec<ActiveSeq>, mgr: &mut CacheManager) {
+        for seq in active.drain(..) {
+            self.complete(seq, mgr);
+        }
+    }
+}

@@ -1,0 +1,11 @@
+//! Request scheduling: admission control, FIFO queue with backpressure,
+//! and a continuous-batching engine loop (prefill interleaved with
+//! round-robin decode across active sequences — vLLM-style iteration
+//! scheduling, executed serially on the single engine thread that owns
+//! the PJRT client).
+
+pub mod batcher;
+pub mod queue;
+
+pub use batcher::{EngineLoop, LoopConfig};
+pub use queue::{Reply, Request, RequestQueue, SubmitError};

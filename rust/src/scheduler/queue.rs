@@ -1,0 +1,176 @@
+//! Bounded request queue shared between the server front-end and the
+//! engine loop.
+
+use std::collections::VecDeque;
+use std::sync::mpsc::Sender;
+use std::sync::{Condvar, Mutex};
+
+use crate::eviction::Method;
+
+/// One generation request, as submitted by a front-end.
+#[derive(Debug)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub method: Method,
+    pub budget: usize,
+    pub max_new: usize,
+    pub temperature: f32,
+    pub reply: Sender<Reply>,
+}
+
+/// Completion message.
+#[derive(Debug, Clone)]
+pub struct Reply {
+    pub id: u64,
+    pub text: String,
+    pub n_tokens: usize,
+    pub ttft_ms: f64,
+    pub total_ms: f64,
+    pub kept: usize,
+    pub error: Option<String>,
+}
+
+#[derive(Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// Queue at capacity — caller should shed load (HTTP 429).
+    Full,
+    /// Queue shut down.
+    Closed,
+}
+
+/// MPMC bounded FIFO with shutdown; producers are server threads,
+/// the single consumer is the engine loop.
+pub struct RequestQueue {
+    inner: Mutex<Inner>,
+    cv: Condvar,
+    cap: usize,
+}
+
+struct Inner {
+    q: VecDeque<Request>,
+    closed: bool,
+}
+
+impl RequestQueue {
+    pub fn new(cap: usize) -> RequestQueue {
+        RequestQueue { inner: Mutex::new(Inner { q: VecDeque::new(), closed: false }), cv: Condvar::new(), cap }
+    }
+
+    pub fn submit(&self, req: Request) -> Result<(), SubmitError> {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.closed {
+            return Err(SubmitError::Closed);
+        }
+        if inner.q.len() >= self.cap {
+            return Err(SubmitError::Full); // backpressure
+        }
+        inner.q.push_back(req);
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    /// Non-blocking pop.
+    pub fn try_pop(&self) -> Option<Request> {
+        self.inner.lock().unwrap().q.pop_front()
+    }
+
+    /// Blocking pop with timeout; None on timeout or close-with-empty.
+    pub fn pop_timeout(&self, timeout: std::time::Duration) -> Option<Request> {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(r) = inner.q.pop_front() {
+            return Some(r);
+        }
+        if inner.closed {
+            return None;
+        }
+        let (mut inner, _t) = self.cv.wait_timeout(inner, timeout).unwrap();
+        inner.q.pop_front()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap().closed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eviction::Method;
+    use std::sync::mpsc::channel;
+
+    fn req(id: u64) -> (Request, std::sync::mpsc::Receiver<Reply>) {
+        let (tx, rx) = channel();
+        (
+            Request {
+                id,
+                prompt: vec![1, 2, 3],
+                method: Method::SnapKV,
+                budget: 8,
+                max_new: 4,
+                temperature: 0.0,
+                reply: tx,
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn fifo_order() {
+        let q = RequestQueue::new(8);
+        let (r1, _k1) = req(1);
+        let (r2, _k2) = req(2);
+        q.submit(r1).unwrap();
+        q.submit(r2).unwrap();
+        assert_eq!(q.try_pop().unwrap().id, 1);
+        assert_eq!(q.try_pop().unwrap().id, 2);
+    }
+
+    #[test]
+    fn backpressure_full() {
+        let q = RequestQueue::new(1);
+        let (r1, _k1) = req(1);
+        let (r2, _k2) = req(2);
+        q.submit(r1).unwrap();
+        assert_eq!(q.submit(r2).unwrap_err(), SubmitError::Full);
+    }
+
+    #[test]
+    fn closed_rejects() {
+        let q = RequestQueue::new(1);
+        q.close();
+        let (r, _k) = req(1);
+        assert_eq!(q.submit(r).unwrap_err(), SubmitError::Closed);
+    }
+
+    #[test]
+    fn prop_queue_never_exceeds_cap() {
+        use crate::util::proptest::{check, Config};
+        check("queue cap", &Config { cases: 64, max_size: 64, ..Config::new() }, |rng, size| {
+            let cap = rng.range(1, 8);
+            let q = RequestQueue::new(cap);
+            for i in 0..size {
+                if rng.chance(0.7) {
+                    let (r, _k) = req(i as u64);
+                    let _ = q.submit(r);
+                } else {
+                    let _ = q.try_pop();
+                }
+                assert!(q.len() <= cap);
+            }
+        });
+    }
+}

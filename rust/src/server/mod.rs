@@ -1,0 +1,130 @@
+//! HTTP serving front-end (hand-rolled HTTP/1.1 over std TCP; tokio is
+//! unavailable offline and the engine is CPU-bound anyway).
+//!
+//! Endpoints:
+//!   POST /generate  {"prompt": str, "method": str, "budget": n,
+//!                    "max_new": n, "temperature": f}  → generation JSON
+//!   GET  /metrics   → counters + latency histograms
+//!   GET  /healthz   → ok
+
+pub mod http;
+
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::eviction::Method;
+use crate::metrics::Metrics;
+use crate::model::tokenizer::encode;
+use crate::scheduler::{Reply, Request, RequestQueue};
+use crate::util::json::{self, Json};
+use crate::util::threadpool::ThreadPool;
+use http::{read_request, write_response, HttpRequest};
+
+pub struct ServerConfig {
+    pub addr: String,
+    pub workers: usize,
+    pub queue_cap: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { addr: "127.0.0.1:8080".into(), workers: 4, queue_cap: 64 }
+    }
+}
+
+/// Accept loop: HTTP workers parse requests and push them to the engine
+/// queue; each worker blocks on its per-request reply channel.
+pub fn serve(cfg: ServerConfig, queue: Arc<RequestQueue>, metrics: Arc<Metrics>) -> Result<()> {
+    let listener = TcpListener::bind(&cfg.addr).with_context(|| format!("bind {}", cfg.addr))?;
+    log::info!("listening on http://{}", cfg.addr);
+    let pool = ThreadPool::new(cfg.workers, "http");
+    let next_id = Arc::new(AtomicU64::new(1));
+    for stream in listener.incoming() {
+        let Ok(stream) = stream else { continue };
+        let queue = Arc::clone(&queue);
+        let metrics = Arc::clone(&metrics);
+        let next_id = Arc::clone(&next_id);
+        pool.execute(move || {
+            let _ = handle_conn(stream, &queue, &metrics, &next_id);
+        });
+    }
+    Ok(())
+}
+
+fn handle_conn(
+    mut stream: std::net::TcpStream,
+    queue: &RequestQueue,
+    metrics: &Metrics,
+    next_id: &AtomicU64,
+) -> Result<()> {
+    let req = read_request(&mut stream)?;
+    metrics.incr("http_requests", 1);
+    let (status, body) = route(&req, queue, metrics, next_id);
+    write_response(&mut stream, status, &body.to_string())
+}
+
+fn route(req: &HttpRequest, queue: &RequestQueue, metrics: &Metrics, next_id: &AtomicU64) -> (u16, Json) {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => (200, Json::from_pairs(vec![("ok", true.into())])),
+        ("GET", "/metrics") => (200, metrics.to_json()),
+        ("POST", "/generate") => generate(req, queue, next_id),
+        _ => (404, Json::from_pairs(vec![("error", "not found".into())])),
+    }
+}
+
+fn generate(req: &HttpRequest, queue: &RequestQueue, next_id: &AtomicU64) -> (u16, Json) {
+    let body = match json::parse(&req.body) {
+        Ok(b) => b,
+        Err(e) => return (400, Json::from_pairs(vec![("error", format!("{e}").into())])),
+    };
+    let Some(prompt) = body.get("prompt").and_then(Json::as_str) else {
+        return (400, Json::from_pairs(vec![("error", "missing prompt".into())]));
+    };
+    let method_name = body.get("method").and_then(Json::as_str).unwrap_or("lookaheadkv");
+    let Some(method) = Method::parse(method_name) else {
+        return (400, Json::from_pairs(vec![("error", format!("unknown method {method_name}").into())]));
+    };
+    let (tx, rx) = channel::<Reply>();
+    let request = Request {
+        id: next_id.fetch_add(1, Ordering::SeqCst),
+        prompt: encode(prompt, true, false),
+        method,
+        budget: body.get("budget").and_then(Json::as_usize).unwrap_or(64),
+        max_new: body.get("max_new").and_then(Json::as_usize).unwrap_or(32).min(96),
+        temperature: body.get("temperature").and_then(Json::as_f64).unwrap_or(0.0) as f32,
+        reply: tx,
+    };
+    match queue.submit(request) {
+        Err(crate::scheduler::SubmitError::Full) => {
+            return (429, Json::from_pairs(vec![("error", "queue full".into())]))
+        }
+        Err(crate::scheduler::SubmitError::Closed) => {
+            return (503, Json::from_pairs(vec![("error", "shutting down".into())]))
+        }
+        Ok(()) => {}
+    }
+    match rx.recv_timeout(std::time::Duration::from_secs(120)) {
+        Ok(reply) => {
+            if let Some(err) = reply.error {
+                (500, Json::from_pairs(vec![("error", err.into())]))
+            } else {
+                (
+                    200,
+                    Json::from_pairs(vec![
+                        ("id", reply.id.into()),
+                        ("text", reply.text.into()),
+                        ("n_tokens", reply.n_tokens.into()),
+                        ("ttft_ms", reply.ttft_ms.into()),
+                        ("total_ms", reply.total_ms.into()),
+                        ("kept", reply.kept.into()),
+                    ]),
+                )
+            }
+        }
+        Err(_) => (504, Json::from_pairs(vec![("error", "timeout".into())])),
+    }
+}

@@ -1,0 +1,109 @@
+//! Micro/macro benchmark harness (criterion is unavailable offline).
+//!
+//! `cargo bench` targets use `harness = false` and drive this: warmup,
+//! timed iterations with early stop on time budget, summary stats, and a
+//! JSON line per benchmark appended to `results/bench.jsonl` so the paper
+//! tables can cite exact runs.
+
+use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
+use crate::util::stats::{summarize, Summary};
+
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub max_time: Duration,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup_iters: 3,
+            min_iters: 10,
+            max_iters: 200,
+            max_time: Duration::from_secs(10),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    /// Per-iteration wallclock in milliseconds.
+    pub ms: Summary,
+}
+
+impl BenchResult {
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("name", self.name.as_str().into()),
+            ("iters", self.iters.into()),
+            ("mean_ms", self.ms.mean.into()),
+            ("std_ms", self.ms.std.into()),
+            ("p50_ms", self.ms.p50.into()),
+            ("p90_ms", self.ms.p90.into()),
+            ("p99_ms", self.ms.p99.into()),
+            ("min_ms", self.ms.min.into()),
+            ("max_ms", self.ms.max.into()),
+        ])
+    }
+}
+
+pub fn run_bench<F: FnMut()>(name: &str, cfg: &BenchConfig, mut f: F) -> BenchResult {
+    for _ in 0..cfg.warmup_iters {
+        f();
+    }
+    let start = Instant::now();
+    let mut samples = Vec::new();
+    while samples.len() < cfg.max_iters
+        && (samples.len() < cfg.min_iters || start.elapsed() < cfg.max_time)
+    {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    let res = BenchResult { name: name.to_string(), iters: samples.len(), ms: summarize(&samples) };
+    println!(
+        "bench {:<48} {:>8.3} ms/iter  (p50 {:.3}, p99 {:.3}, n={})",
+        res.name, res.ms.mean, res.ms.p50, res.ms.p99, res.iters
+    );
+    res
+}
+
+/// Append results to `results/bench.jsonl` (best-effort).
+pub fn record(results: &[BenchResult]) {
+    let _ = std::fs::create_dir_all("results");
+    let mut lines = String::new();
+    for r in results {
+        lines.push_str(&r.to_json().to_string());
+        lines.push('\n');
+    }
+    use std::io::Write;
+    if let Ok(mut f) =
+        std::fs::OpenOptions::new().create(true).append(true).open("results/bench.jsonl")
+    {
+        let _ = f.write_all(lines.as_bytes());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_sleep() {
+        let cfg = BenchConfig {
+            warmup_iters: 1,
+            min_iters: 5,
+            max_iters: 5,
+            max_time: Duration::from_secs(1),
+        };
+        let r = run_bench("sleep1ms", &cfg, || std::thread::sleep(Duration::from_millis(1)));
+        assert_eq!(r.iters, 5);
+        assert!(r.ms.mean >= 0.9, "mean {:.3}", r.ms.mean);
+    }
+}

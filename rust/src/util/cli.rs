@@ -1,0 +1,112 @@
+//! Tiny declarative CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw args (excluding argv[0]). `flag_names` lists options that
+    /// take no value.
+    pub fn parse(raw: &[String], flag_names: &[&str]) -> Args {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < raw.len() {
+            let a = &raw[i];
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if flag_names.contains(&stripped) {
+                    out.flags.push(stripped.to_string());
+                } else if i + 1 < raw.len() {
+                    out.options.insert(stripped.to_string(), raw[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.push(stripped.to_string());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    pub fn from_env(flag_names: &[&str]) -> Args {
+        let raw: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&raw, flag_names)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has(&self, flag: &str) -> bool {
+        self.flags.iter().any(|f| f == flag)
+    }
+
+    /// Comma-separated list option.
+    pub fn list(&self, key: &str, default: &[&str]) -> Vec<String> {
+        match self.get(key) {
+            Some(v) => v.split(',').filter(|s| !s.is_empty()).map(str::to_string).collect(),
+            None => default.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+
+    pub fn usize_list(&self, key: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(key) {
+            Some(v) => v.split(',').filter_map(|s| s.trim().parse().ok()).collect(),
+            None => default.to_vec(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(v: &[&str]) -> Vec<String> {
+        v.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed() {
+        let a = Args::parse(&s(&["serve", "--port", "8080", "--verbose", "--x=1,2"]), &["verbose"]);
+        assert_eq!(a.positional, vec!["serve"]);
+        assert_eq!(a.usize("port", 0), 8080);
+        assert!(a.has("verbose"));
+        assert_eq!(a.usize_list("x", &[]), vec![1, 2]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(&s(&[]), &[]);
+        assert_eq!(a.get_or("model", "lkv-tiny"), "lkv-tiny");
+        assert_eq!(a.f64("t", 0.5), 0.5);
+        assert_eq!(a.list("methods", &["a", "b"]), vec!["a", "b"]);
+    }
+
+    #[test]
+    fn trailing_key_becomes_flag() {
+        let a = Args::parse(&s(&["--end"]), &[]);
+        assert!(a.has("end"));
+    }
+}

@@ -1,0 +1,15 @@
+//! Infrastructure utilities.
+//!
+//! The offline vendor tree only carries the `xla` crate's dependency
+//! closure, so the roles usually played by serde/clap/criterion/tokio/
+//! proptest/rand are covered by the small, dependency-free modules here
+//! (see DESIGN.md §1).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod tensor;
+pub mod threadpool;

@@ -1,0 +1,85 @@
+//! Minimal property-based testing driver (proptest is unavailable
+//! offline): run a property over many seeded random cases and, on
+//! failure, report the failing seed so the case is reproducible.
+//!
+//! Shrinking is seed-based: the harness retries the property with a
+//! sequence of "smaller" size hints for the failing seed and reports the
+//! smallest size that still fails.
+
+use crate::util::rng::Rng;
+
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    /// Maximum size hint passed to the generator.
+    pub max_size: usize,
+}
+
+pub const DEFAULT_SEED: u64 = 0x1001_cafe_f00d;
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 256, seed: DEFAULT_SEED, max_size: 128 }
+    }
+}
+
+impl Config {
+    pub fn new() -> Self {
+        Config::default()
+    }
+}
+
+/// Run `prop(rng, size)` for `cfg.cases` random cases. The property panics
+/// (e.g. via assert!) to signal failure.
+pub fn check<F: Fn(&mut Rng, usize) + std::panic::RefUnwindSafe>(name: &str, cfg: &Config, prop: F) {
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed.wrapping_add(case as u64);
+        let size = 1 + (case * cfg.max_size) / cfg.cases.max(1);
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Rng::new(case_seed);
+            prop(&mut rng, size);
+        });
+        if let Err(err) = result {
+            // shrink: find the smallest size that still fails for this seed
+            let mut min_fail = size;
+            for s in 1..size {
+                let r = std::panic::catch_unwind(|| {
+                    let mut rng = Rng::new(case_seed);
+                    prop(&mut rng, s);
+                });
+                if r.is_err() {
+                    min_fail = s;
+                    break;
+                }
+            }
+            panic!(
+                "property {name:?} failed (case {case}, seed {case_seed:#x}, size {size}, \
+                 min failing size {min_fail}): {err:?}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_valid_property() {
+        check("sort idempotent", &Config { cases: 64, ..Config::new() }, |rng, size| {
+            let mut v: Vec<u64> = (0..size).map(|_| rng.next_u64() % 100).collect();
+            v.sort_unstable();
+            let w = v.clone();
+            v.sort_unstable();
+            assert_eq!(v, w);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn reports_failure_with_seed() {
+        check("always fails at size>=3", &Config { cases: 16, ..Config::new() }, |_rng, size| {
+            assert!(size < 3, "too big");
+        });
+    }
+}

@@ -1,0 +1,199 @@
+//! Descriptive statistics and ranking metrics used across the eval and
+//! bench harnesses: summary stats, percentiles, top-k selection, recall@k
+//! and Kendall's tau (Table 8).
+
+/// Summary of a sample of f64 observations.
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+}
+
+pub fn summarize(xs: &[f64]) -> Summary {
+    if xs.is_empty() {
+        return Summary::default();
+    }
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = xs.len();
+    let mean = xs.iter().sum::<f64>() / n as f64;
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+    Summary {
+        n,
+        mean,
+        std: var.sqrt(),
+        min: sorted[0],
+        max: sorted[n - 1],
+        p50: percentile_sorted(&sorted, 0.50),
+        p90: percentile_sorted(&sorted, 0.90),
+        p99: percentile_sorted(&sorted, 0.99),
+    }
+}
+
+/// Linear-interpolated percentile of a pre-sorted slice.
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        sorted[lo] + (sorted[hi] - sorted[lo]) * (pos - lo as f64)
+    }
+}
+
+/// Indices of the k largest values (ties broken toward lower index),
+/// returned sorted ascending by index. O(n log k).
+pub fn topk_indices(scores: &[f32], k: usize) -> Vec<usize> {
+    let k = k.min(scores.len());
+    if k == 0 {
+        return Vec::new();
+    }
+    // (score, negated index) min-heap of size k keeps the k best.
+    use std::cmp::Ordering;
+    use std::collections::BinaryHeap;
+
+    #[derive(PartialEq)]
+    struct Entry(f32, usize);
+    impl Eq for Entry {}
+    impl PartialOrd for Entry {
+        fn partial_cmp(&self, o: &Self) -> Option<Ordering> {
+            Some(self.cmp(o))
+        }
+    }
+    impl Ord for Entry {
+        fn cmp(&self, o: &Self) -> Ordering {
+            // Reverse: BinaryHeap is a max-heap, we want min at top.
+            o.0.partial_cmp(&self.0)
+                .unwrap_or(Ordering::Equal)
+                .then(self.1.cmp(&o.1)) // prefer evicting higher index on ties
+        }
+    }
+
+    let mut heap: BinaryHeap<Entry> = BinaryHeap::with_capacity(k + 1);
+    for (i, &s) in scores.iter().enumerate() {
+        heap.push(Entry(s, i));
+        if heap.len() > k {
+            heap.pop();
+        }
+    }
+    let mut idx: Vec<usize> = heap.into_iter().map(|e| e.1).collect();
+    idx.sort_unstable();
+    idx
+}
+
+/// recall@k between two score vectors: |topk(a) ∩ topk(b)| / k.
+pub fn recall_at_k(a: &[f32], b: &[f32], k: usize) -> f64 {
+    let ka = topk_indices(a, k);
+    let kb = topk_indices(b, k);
+    let set: std::collections::HashSet<usize> = ka.into_iter().collect();
+    let inter = kb.iter().filter(|i| set.contains(i)).count();
+    inter as f64 / k.min(a.len()).max(1) as f64
+}
+
+/// Kendall's tau-a rank correlation. O(n^2); fine for n <= ~2k.
+pub fn kendall_tau(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let n = a.len();
+    if n < 2 {
+        return 1.0;
+    }
+    let mut concordant = 0i64;
+    let mut discordant = 0i64;
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let da = a[i] - a[j];
+            let db = b[i] - b[j];
+            let s = (da * db).signum();
+            if s > 0.0 {
+                concordant += 1;
+            } else if s < 0.0 {
+                discordant += 1;
+            }
+        }
+    }
+    let total = (n * (n - 1) / 2) as f64;
+    (concordant - discordant) as f64 / total
+}
+
+/// L1-normalize in place; returns the original sum.
+pub fn l1_normalize(xs: &mut [f32]) -> f32 {
+    let sum: f32 = xs.iter().sum();
+    if sum > 0.0 {
+        for x in xs.iter_mut() {
+            *x /= sum;
+        }
+    }
+    sum
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = summarize(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.n, 4);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+        assert!((s.p50 - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn topk_matches_naive_sort() {
+        let mut rng = crate::util::rng::Rng::new(1);
+        for _ in 0..50 {
+            let n = rng.range(1, 200);
+            let k = rng.range(0, n);
+            let scores: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+            let got = topk_indices(&scores, k);
+            // naive oracle
+            let mut order: Vec<usize> = (0..n).collect();
+            order.sort_by(|&i, &j| {
+                scores[j].partial_cmp(&scores[i]).unwrap().then(i.cmp(&j))
+            });
+            let mut want: Vec<usize> = order[..k].to_vec();
+            want.sort_unstable();
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn recall_self_is_one() {
+        let v = vec![0.1f32, 0.9, 0.3, 0.5];
+        assert_eq!(recall_at_k(&v, &v, 2), 1.0);
+    }
+
+    #[test]
+    fn kendall_extremes() {
+        let a = vec![1.0f32, 2.0, 3.0, 4.0];
+        let rev: Vec<f32> = a.iter().rev().cloned().collect();
+        assert!((kendall_tau(&a, &a) - 1.0).abs() < 1e-12);
+        assert!((kendall_tau(&a, &rev) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn l1_norm() {
+        let mut v = vec![1.0f32, 3.0];
+        let s = l1_normalize(&mut v);
+        assert_eq!(s, 4.0);
+        assert!((v[0] - 0.25).abs() < 1e-7);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let sorted = [0.0, 10.0];
+        assert!((percentile_sorted(&sorted, 0.5) - 5.0).abs() < 1e-12);
+    }
+}

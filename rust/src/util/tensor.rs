@@ -1,0 +1,193 @@
+//! Host-side dense tensors (f32 / i32) with the small operation surface
+//! the coordinator needs: shape bookkeeping, slicing along the leading
+//! axes, and gather along a middle axis (the eviction compaction step).
+//!
+//! These mirror `xla::Literal` contents; conversion lives in
+//! `runtime::literal`.
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorF {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorI {
+    pub shape: Vec<usize>,
+    pub data: Vec<i32>,
+}
+
+fn numel(shape: &[usize]) -> usize {
+    shape.iter().product()
+}
+
+impl TensorF {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(numel(&shape), data.len(), "shape {shape:?} vs {} elems", data.len());
+        TensorF { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = numel(&shape);
+        TensorF { shape, data: vec![0.0; n] }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Row-major strides.
+    pub fn strides(&self) -> Vec<usize> {
+        let mut s = vec![1usize; self.shape.len()];
+        for i in (0..self.shape.len().saturating_sub(1)).rev() {
+            s[i] = s[i + 1] * self.shape[i + 1];
+        }
+        s
+    }
+
+    /// View of the sub-tensor at leading indices `idx` (e.g. `[l, h]` of an
+    /// `[L, H, S]` tensor returns the `[S]` slice).
+    pub fn index(&self, idx: &[usize]) -> &[f32] {
+        let strides = self.strides();
+        assert!(idx.len() <= self.shape.len());
+        let mut off = 0;
+        for (d, &i) in idx.iter().enumerate() {
+            assert!(i < self.shape[d], "index {i} out of bounds for dim {d} ({})", self.shape[d]);
+            off += i * strides[d];
+        }
+        let span: usize = self.shape[idx.len()..].iter().product();
+        &self.data[off..off + span]
+    }
+
+    /// Gather along axis `axis`, keeping rows `indices` (in order).
+    /// E.g. compacting `[L, Hkv, S, dh]` caches with axis=2.
+    pub fn gather(&self, axis: usize, indices: &[usize]) -> TensorF {
+        assert!(axis < self.shape.len());
+        let outer: usize = self.shape[..axis].iter().product();
+        let mid = self.shape[axis];
+        let inner: usize = self.shape[axis + 1..].iter().product();
+        let mut shape = self.shape.clone();
+        shape[axis] = indices.len();
+        let mut out = Vec::with_capacity(outer * indices.len() * inner);
+        for o in 0..outer {
+            let base = o * mid * inner;
+            for &i in indices {
+                assert!(i < mid, "gather index {i} out of bounds ({mid})");
+                out.extend_from_slice(&self.data[base + i * inner..base + (i + 1) * inner]);
+            }
+        }
+        TensorF::new(shape, out)
+    }
+
+    /// Scatter rows of `self` (axis `axis`) into a zero tensor with the
+    /// given axis size, placing row j at `indices[j]`. Inverse of gather.
+    pub fn scatter_rows(&self, axis: usize, indices: &[usize], new_size: usize) -> TensorF {
+        assert_eq!(self.shape[axis], indices.len());
+        let outer: usize = self.shape[..axis].iter().product();
+        let inner: usize = self.shape[axis + 1..].iter().product();
+        let mut shape = self.shape.clone();
+        shape[axis] = new_size;
+        let mut out = vec![0.0f32; outer * new_size * inner];
+        for o in 0..outer {
+            for (j, &i) in indices.iter().enumerate() {
+                assert!(i < new_size);
+                let src = (o * indices.len() + j) * inner;
+                let dst = (o * new_size + i) * inner;
+                out[dst..dst + inner].copy_from_slice(&self.data[src..src + inner]);
+            }
+        }
+        TensorF::new(shape, out)
+    }
+
+    /// Pad (or truncate) axis `axis` to `new_size` with zeros at the end.
+    pub fn resize_axis(&self, axis: usize, new_size: usize) -> TensorF {
+        let outer: usize = self.shape[..axis].iter().product();
+        let mid = self.shape[axis];
+        let inner: usize = self.shape[axis + 1..].iter().product();
+        let mut shape = self.shape.clone();
+        shape[axis] = new_size;
+        let mut out = vec![0.0f32; outer * new_size * inner];
+        let copy = mid.min(new_size);
+        for o in 0..outer {
+            let src = o * mid * inner;
+            let dst = o * new_size * inner;
+            out[dst..dst + copy * inner].copy_from_slice(&self.data[src..src + copy * inner]);
+        }
+        TensorF::new(shape, out)
+    }
+}
+
+impl TensorI {
+    pub fn new(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(numel(&shape), data.len());
+        TensorI { shape, data }
+    }
+
+    pub fn scalar(v: i32) -> Self {
+        TensorI { shape: vec![], data: vec![v] }
+    }
+
+    pub fn from_vec(v: Vec<i32>) -> Self {
+        TensorI { shape: vec![v.len()], data: v }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t234() -> TensorF {
+        TensorF::new(vec![2, 3, 4], (0..24).map(|x| x as f32).collect())
+    }
+
+    #[test]
+    fn index_views() {
+        let t = t234();
+        assert_eq!(t.index(&[1]), &(12..24).map(|x| x as f32).collect::<Vec<_>>()[..]);
+        assert_eq!(t.index(&[0, 2]), &[8.0, 9.0, 10.0, 11.0]);
+        assert_eq!(t.index(&[1, 0]), &[12.0, 13.0, 14.0, 15.0]);
+    }
+
+    #[test]
+    fn gather_middle_axis() {
+        let t = t234();
+        let g = t.gather(1, &[2, 0]);
+        assert_eq!(g.shape, vec![2, 2, 4]);
+        assert_eq!(g.index(&[0, 0]), &[8.0, 9.0, 10.0, 11.0]);
+        assert_eq!(g.index(&[0, 1]), &[0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(g.index(&[1, 0]), &[20.0, 21.0, 22.0, 23.0]);
+    }
+
+    #[test]
+    fn gather_then_scatter_roundtrip_subset() {
+        let t = t234();
+        let idx = [1usize, 2];
+        let g = t.gather(1, &idx);
+        let s = g.scatter_rows(1, &idx, 3);
+        assert_eq!(s.index(&[0, 1]), t.index(&[0, 1]));
+        assert_eq!(s.index(&[0, 2]), t.index(&[0, 2]));
+        assert_eq!(s.index(&[0, 0]), &[0.0; 4][..]);
+    }
+
+    #[test]
+    fn resize_axis_pads_and_truncates() {
+        let t = t234();
+        let p = t.resize_axis(1, 5);
+        assert_eq!(p.shape, vec![2, 5, 4]);
+        assert_eq!(p.index(&[0, 2]), t.index(&[0, 2]));
+        assert_eq!(p.index(&[0, 4]), &[0.0; 4][..]);
+        let tr = t.resize_axis(1, 2);
+        assert_eq!(tr.shape, vec![2, 2, 4]);
+        assert_eq!(tr.index(&[1, 1]), t.index(&[1, 1]));
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_shape_panics() {
+        TensorF::new(vec![2, 2], vec![0.0; 3]);
+    }
+}

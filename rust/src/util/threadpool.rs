@@ -1,0 +1,127 @@
+//! Fixed-size thread pool over std channels (tokio is unavailable offline;
+//! the serving hot path is CPU-bound PJRT execution, so blocking worker
+//! threads are the right model anyway).
+//!
+//! Used by the HTTP server for connection handling and by the bench
+//! harness for load generation.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+pub struct ThreadPool {
+    workers: Vec<thread::JoinHandle<()>>,
+    tx: Option<mpsc::Sender<Job>>,
+}
+
+impl ThreadPool {
+    pub fn new(size: usize, name: &str) -> Self {
+        assert!(size > 0);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..size)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                thread::Builder::new()
+                    .name(format!("{name}-{i}"))
+                    .spawn(move || loop {
+                        let job = { rx.lock().unwrap().recv() };
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break, // sender dropped: shut down
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { workers, tx: Some(tx) }
+    }
+
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.tx.as_ref().expect("pool closed").send(Box::new(f)).expect("pool closed");
+    }
+
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Await-able single-value slot (a poor man's oneshot future).
+pub struct WaitGroup {
+    counter: Arc<(Mutex<usize>, std::sync::Condvar)>,
+}
+
+impl WaitGroup {
+    pub fn new(n: usize) -> Self {
+        WaitGroup { counter: Arc::new((Mutex::new(n), std::sync::Condvar::new())) }
+    }
+
+    pub fn done_handle(&self) -> impl Fn() + Send + 'static {
+        let c = Arc::clone(&self.counter);
+        move || {
+            let (lock, cv) = &*c;
+            let mut n = lock.lock().unwrap();
+            *n = n.saturating_sub(1);
+            if *n == 0 {
+                cv.notify_all();
+            }
+        }
+    }
+
+    pub fn wait(&self) {
+        let (lock, cv) = &*self.counter;
+        let mut n = lock.lock().unwrap();
+        while *n > 0 {
+            n = cv.wait(n).unwrap();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_all_jobs() {
+        let pool = ThreadPool::new(4, "t");
+        let count = Arc::new(AtomicUsize::new(0));
+        let wg = WaitGroup::new(100);
+        for _ in 0..100 {
+            let c = Arc::clone(&count);
+            let done = wg.done_handle();
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+                done();
+            });
+        }
+        wg.wait();
+        assert_eq!(count.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn drop_joins_cleanly() {
+        let pool = ThreadPool::new(2, "d");
+        let count = Arc::new(AtomicUsize::new(0));
+        for _ in 0..10 {
+            let c = Arc::clone(&count);
+            pool.execute(move || {
+                std::thread::sleep(std::time::Duration::from_millis(1));
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // must wait for queued jobs' workers to exit
+        assert_eq!(count.load(Ordering::SeqCst), 10);
+    }
+}

@@ -1,0 +1,14 @@
+//! Synthetic evaluation workloads — the Rust mirror of
+//! `python/compile/data.py` (same task families and format contract,
+//! disjoint seeds), standing in for LongBench / RULER / QASPER /
+//! LongProc / MT-Bench as documented in DESIGN.md §1.
+//!
+//! Each [`Sample`] carries its prompt, the reference answer(s) and enough
+//! metadata (needle positions are implied by the format) for the scorers
+//! in [`crate::eval`].
+
+pub mod spec;
+pub mod suites;
+
+pub use spec::{Sample, TaskFamily};
+pub use suites::{longbench_suite, longproc_suite, mtbench_suite, qasper_suite, ruler_suite, Suite};

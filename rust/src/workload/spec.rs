@@ -1,0 +1,391 @@
+//! Task-format contract shared with `python/compile/data.py`.
+//!
+//! * records are `KEY=VAL;` with keys/values over `[A-Z0-9]`;
+//! * noise is lowercase words terminated by `;`;
+//! * queries are the exact record prefix `KEY=` (exact-continuation);
+//! * few-shot pairs `x->Y;` with a final incomplete pair as query;
+//! * longproc records `<NAME:VAL>`, instruction `!tsv;`, answer
+//!   `NAME\tVAL;` per record in order.
+
+use crate::util::rng::Rng;
+
+pub const CODE_CHARS: &[u8] = b"ABCDEFGHIJKLMNOPQRSTUVWXYZ0123456789";
+pub const NOISE_WORDS: &[&str] = &[
+    "lorem", "ipsum", "dolor", "amet", "tempor", "incidunt", "labore", "magna", "aliqua", "erat",
+    "sed", "diam", "nonumy", "eirmod", "invidunt", "ut", "vero", "accusam", "justo", "duo", "kasd",
+    "gubergren", "clita", "takimata", "sanctus", "est", "sit", "elitr",
+];
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TaskFamily {
+    Kv,
+    MultiKv,
+    Vt,
+    Fewshot,
+    Code,
+    Qa,
+    Cwe,
+    LongProc,
+    MtBench,
+}
+
+impl TaskFamily {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TaskFamily::Kv => "kv",
+            TaskFamily::MultiKv => "multikv",
+            TaskFamily::Vt => "vt",
+            TaskFamily::Fewshot => "fewshot",
+            TaskFamily::Code => "code",
+            TaskFamily::Qa => "qa",
+            TaskFamily::Cwe => "cwe",
+            TaskFamily::LongProc => "longproc",
+            TaskFamily::MtBench => "mtbench",
+        }
+    }
+}
+
+/// One evaluation sample; `turns` holds extra (query, answer) pairs for
+/// multi-turn suites.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub family: TaskFamily,
+    pub context: String,
+    pub query: String,
+    pub answer: String,
+    pub turns: Vec<(String, String)>,
+}
+
+impl Sample {
+    pub fn prompt(&self) -> String {
+        format!("{}{}", self.context, self.query)
+    }
+}
+
+pub fn code(rng: &mut Rng, n: usize) -> String {
+    (0..n).map(|_| CODE_CHARS[rng.below(CODE_CHARS.len())] as char).collect()
+}
+
+pub fn noise_word(rng: &mut Rng) -> String {
+    format!("{};", NOISE_WORDS[rng.below(NOISE_WORDS.len())])
+}
+
+pub fn shuffle_merge(rng: &mut Rng, records: Vec<String>, noise_words: usize) -> String {
+    let mut parts = records;
+    for _ in 0..noise_words {
+        parts.push(noise_word(rng));
+    }
+    rng.shuffle(&mut parts);
+    parts.concat()
+}
+
+pub fn gen_kv(rng: &mut Rng, ctx_chars: usize) -> Sample {
+    let key = code(rng, 3);
+    let val = code(rng, 3);
+    let rec = format!("{key}={val};");
+    let noise = ctx_chars.saturating_sub(rec.len()) / 6;
+    Sample {
+        family: TaskFamily::Kv,
+        context: shuffle_merge(rng, vec![rec], noise),
+        query: format!("{key}="),
+        answer: val,
+        turns: vec![],
+    }
+}
+
+pub fn gen_multikv(rng: &mut Rng, ctx_chars: usize) -> Sample {
+    let n_keys = 4;
+    let mut keys = Vec::new();
+    let mut vals = Vec::new();
+    while keys.len() < n_keys {
+        let k = code(rng, 3);
+        if !keys.contains(&k) {
+            keys.push(k);
+            vals.push(code(rng, 3));
+        }
+    }
+    let recs: Vec<String> =
+        keys.iter().zip(&vals).map(|(k, v)| format!("{k}={v};")).collect();
+    let used: usize = recs.iter().map(String::len).sum();
+    let noise = ctx_chars.saturating_sub(used) / 6;
+    let i = rng.below(n_keys);
+    Sample {
+        family: TaskFamily::MultiKv,
+        context: shuffle_merge(rng, recs, noise),
+        query: format!("{}=", keys[i]),
+        answer: vals[i].clone(),
+        turns: vec![],
+    }
+}
+
+pub fn gen_vt(rng: &mut Rng, ctx_chars: usize) -> Sample {
+    let depth = 3;
+    let letters: Vec<char> = "abcdefghijklmnopqrstuvwxyz".chars().collect();
+    let names = rng.sample_indices(letters.len(), depth + 4);
+    let name = |i: usize| letters[names[i]];
+    let val = code(rng, 3);
+    let mut recs = vec![format!("{}={val};", name(0))];
+    for i in 1..depth {
+        recs.push(format!("{}={};", name(i), name(i - 1)));
+    }
+    let dval = code(rng, 3);
+    recs.push(format!("{}={dval};", name(depth)));
+    recs.push(format!("{}={};", name(depth + 1), name(depth)));
+    let used: usize = recs.iter().map(String::len).sum();
+    let noise = ctx_chars.saturating_sub(used) / 6;
+    let per = noise / recs.len().max(1);
+    let mut ctx = String::new();
+    for r in &recs {
+        for _ in 0..per {
+            ctx.push_str(&noise_word(rng));
+        }
+        ctx.push_str(r);
+    }
+    Sample {
+        family: TaskFamily::Vt,
+        context: ctx,
+        query: format!("{}=", name(depth - 1)),
+        answer: val,
+        turns: vec![],
+    }
+}
+
+pub fn gen_fewshot(rng: &mut Rng, ctx_chars: usize) -> Sample {
+    let short: Vec<&str> = NOISE_WORDS.iter().copied().filter(|w| w.len() <= 5).collect();
+    let n_shots = (ctx_chars / 24).clamp(2, 8);
+    let picks = rng.sample_indices(short.len(), n_shots + 1);
+    let recs: Vec<String> =
+        picks[..n_shots].iter().map(|&i| format!("{}->{};", short[i], short[i].to_uppercase())).collect();
+    let used: usize = recs.iter().map(String::len).sum();
+    let noise = ctx_chars.saturating_sub(used) / 6;
+    let mut ctx = String::new();
+    for _ in 0..noise / 2 {
+        ctx.push_str(&noise_word(rng));
+    }
+    ctx.push_str(&recs.concat());
+    for _ in 0..noise - noise / 2 {
+        ctx.push_str(&noise_word(rng));
+    }
+    let q = short[picks[n_shots]];
+    Sample {
+        family: TaskFamily::Fewshot,
+        context: ctx,
+        query: format!("{q}->"),
+        answer: q.to_uppercase(),
+        turns: vec![],
+    }
+}
+
+pub fn gen_code(rng: &mut Rng, ctx_chars: usize) -> Sample {
+    let n_fns = (ctx_chars / 40).max(2);
+    let mut names = Vec::new();
+    let mut args = Vec::new();
+    while names.len() < n_fns {
+        let n = code(rng, 4).to_lowercase();
+        if !names.contains(&n) {
+            names.push(n);
+            args.push(code(rng, 3).to_lowercase());
+        }
+    }
+    let recs: Vec<String> =
+        names.iter().zip(&args).map(|(n, a)| format!("fn {n}({a});")).collect();
+    let used: usize = recs.iter().map(String::len).sum();
+    let noise = ctx_chars.saturating_sub(used) / 6;
+    let i = rng.below(n_fns);
+    Sample {
+        family: TaskFamily::Code,
+        context: shuffle_merge(rng, recs, noise),
+        query: format!("fn {}(", names[i]),
+        answer: args[i].clone(),
+        turns: vec![],
+    }
+}
+
+pub fn gen_qa(rng: &mut Rng, ctx_chars: usize) -> Sample {
+    let short: Vec<&str> = NOISE_WORDS.iter().copied().filter(|w| w.len() <= 6).collect();
+    let oi = rng.sample_indices(short.len(), 3);
+    let vi = rng.sample_indices(short.len(), 3);
+    let recs: Vec<String> =
+        (0..3).map(|i| format!("{}={};", short[oi[i]], short[vi[i]])).collect();
+    let used: usize = recs.iter().map(String::len).sum();
+    let noise = ctx_chars.saturating_sub(used) / 6;
+    let i = rng.below(3);
+    Sample {
+        family: TaskFamily::Qa,
+        context: shuffle_merge(rng, recs, noise),
+        query: format!("{}=", short[oi[i]]),
+        answer: short[vi[i]].to_string(),
+        turns: vec![],
+    }
+}
+
+pub fn gen_cwe(rng: &mut Rng, ctx_chars: usize) -> Sample {
+    let short: Vec<&str> = NOISE_WORDS.iter().copied().filter(|w| w.len() <= 5).collect();
+    let target = short[rng.below(short.len())];
+    let reps = (ctx_chars / 30).max(4);
+    let others = (ctx_chars / 8).saturating_sub(reps);
+    let mut parts: Vec<String> = (0..reps).map(|_| format!("{target};")).collect();
+    for _ in 0..others {
+        let mut w = NOISE_WORDS[rng.below(NOISE_WORDS.len())];
+        while w == target {
+            w = NOISE_WORDS[rng.below(NOISE_WORDS.len())];
+        }
+        parts.push(format!("{w};"));
+    }
+    rng.shuffle(&mut parts);
+    Sample {
+        family: TaskFamily::Cwe,
+        context: parts.concat(),
+        query: "?max=".to_string(),
+        answer: target.to_string(),
+        turns: vec![],
+    }
+}
+
+pub fn gen_longproc(rng: &mut Rng, ctx_chars: usize, n_records: usize) -> Sample {
+    let recs: Vec<(String, String)> =
+        (0..n_records).map(|_| (code(rng, 3), code(rng, 3))).collect();
+    let tagged: Vec<String> = recs.iter().map(|(n, v)| format!("<{n}:{v}>")).collect();
+    let used: usize = tagged.iter().map(String::len).sum();
+    let noise = ctx_chars.saturating_sub(used) / 6;
+    let per = noise / n_records.max(1);
+    let mut ctx = String::new();
+    for t in &tagged {
+        for _ in 0..per {
+            ctx.push_str(&noise_word(rng));
+        }
+        ctx.push_str(t);
+    }
+    let answer: String = recs.iter().map(|(n, v)| format!("{n}\t{v};")).collect();
+    Sample {
+        family: TaskFamily::LongProc,
+        context: ctx,
+        query: "!tsv;".to_string(),
+        answer,
+        turns: vec![],
+    }
+}
+
+pub fn gen_mtbench(rng: &mut Rng, ctx_chars: usize) -> Sample {
+    let mut keys = Vec::new();
+    let mut vals = Vec::new();
+    while keys.len() < 3 {
+        let k = code(rng, 3);
+        if !keys.contains(&k) {
+            keys.push(k);
+            vals.push(code(rng, 3));
+        }
+    }
+    let recs: Vec<String> =
+        keys.iter().zip(&vals).map(|(k, v)| format!("{k}={v};")).collect();
+    let used: usize = recs.iter().map(String::len).sum();
+    let noise = ctx_chars.saturating_sub(used) / 6;
+    let picks = rng.sample_indices(3, 2);
+    Sample {
+        family: TaskFamily::MtBench,
+        context: shuffle_merge(rng, recs, noise),
+        query: format!("{}=", keys[picks[0]]),
+        answer: vals[picks[0]].clone(),
+        turns: vec![(format!("{}=", keys[picks[1]]), vals[picks[1]].clone())],
+    }
+}
+
+pub fn generate(rng: &mut Rng, family: TaskFamily, ctx_chars: usize) -> Sample {
+    match family {
+        TaskFamily::Kv => gen_kv(rng, ctx_chars),
+        TaskFamily::MultiKv => gen_multikv(rng, ctx_chars),
+        TaskFamily::Vt => gen_vt(rng, ctx_chars),
+        TaskFamily::Fewshot => gen_fewshot(rng, ctx_chars),
+        TaskFamily::Code => gen_code(rng, ctx_chars),
+        TaskFamily::Qa => gen_qa(rng, ctx_chars),
+        TaskFamily::Cwe => gen_cwe(rng, ctx_chars),
+        TaskFamily::LongProc => gen_longproc(rng, ctx_chars, 4),
+        TaskFamily::MtBench => gen_mtbench(rng, ctx_chars),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rng() -> Rng {
+        Rng::new(1234)
+    }
+
+    #[test]
+    fn kv_answer_in_context() {
+        let mut r = rng();
+        for _ in 0..20 {
+            let s = gen_kv(&mut r, 120);
+            let needle = format!("{}{};", s.query, s.answer);
+            assert!(s.context.contains(&needle), "{s:?}");
+        }
+    }
+
+    #[test]
+    fn multikv_queried_needle_present() {
+        let mut r = rng();
+        let s = gen_multikv(&mut r, 200);
+        assert!(s.context.contains(&format!("{}{};", s.query, s.answer)));
+    }
+
+    #[test]
+    fn vt_chain_resolves() {
+        let mut r = rng();
+        for _ in 0..10 {
+            let s = gen_vt(&mut r, 200);
+            // the queried variable must resolve through the chain to answer
+            assert_eq!(s.answer.len(), 3);
+            assert!(s.context.contains(&format!("={};", s.answer)) || s.context.contains(&format!("={}", s.answer)));
+        }
+    }
+
+    #[test]
+    fn code_query_prefix_present() {
+        let mut r = rng();
+        let s = gen_code(&mut r, 200);
+        assert!(s.context.contains(&format!("{}{});", s.query, s.answer)));
+    }
+
+    #[test]
+    fn longproc_answer_order_matches_context() {
+        let mut r = rng();
+        let s = gen_longproc(&mut r, 300, 4);
+        let names: Vec<&str> = s.answer.split(';').filter(|x| !x.is_empty()).collect();
+        assert_eq!(names.len(), 4);
+        let mut last = 0;
+        for rec in names {
+            let name = &rec[..3];
+            let pos = s.context[last..].find(&format!("<{name}:")).expect("in order") + last;
+            last = pos;
+        }
+    }
+
+    #[test]
+    fn mtbench_has_second_turn() {
+        let mut r = rng();
+        let s = gen_mtbench(&mut r, 150);
+        assert_eq!(s.turns.len(), 1);
+        assert!(s.context.contains(&format!("{}{};", s.turns[0].0, s.turns[0].1)));
+    }
+
+    #[test]
+    fn sizes_roughly_respected() {
+        let mut r = rng();
+        for fam in [TaskFamily::Kv, TaskFamily::Qa, TaskFamily::Code] {
+            let s = generate(&mut r, fam, 400);
+            let n = s.context.len();
+            assert!(n >= 150 && n <= 700, "{fam:?} -> {n}");
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Rng::new(9);
+        let mut b = Rng::new(9);
+        let s1 = gen_kv(&mut a, 100);
+        let s2 = gen_kv(&mut b, 100);
+        assert_eq!(s1.context, s2.context);
+        assert_eq!(s1.answer, s2.answer);
+    }
+}

@@ -1,0 +1,115 @@
+//! Benchmark suites: named collections of samples sized to a token
+//! budget, mirroring the paper's evaluation sets (DESIGN.md §1).
+//!
+//! Context sizes are specified in *tokens* (≈ characters + BOS for the
+//! byte tokenizer); generators are given a character budget slightly
+//! below the target bucket so prompts always fit.
+
+use super::spec::{self, Sample, TaskFamily};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct Suite {
+    pub name: String,
+    pub samples: Vec<Sample>,
+}
+
+/// Convert a token-bucket target into a safe character budget for the
+/// context (leave room for BOS + query + slack).
+fn ctx_chars_for(tokens: usize) -> usize {
+    tokens.saturating_sub(24) * 9 / 10
+}
+
+/// LongBench analog: mixed task families at a mid-size context.
+pub fn longbench_suite(seed: u64, n_per_family: usize, ctx_tokens: usize) -> Suite {
+    let mut rng = Rng::new(seed ^ 0x10b2);
+    let fams = [
+        TaskFamily::Kv,
+        TaskFamily::MultiKv,
+        TaskFamily::Vt,
+        TaskFamily::Fewshot,
+        TaskFamily::Code,
+        TaskFamily::Qa,
+    ];
+    let mut samples = Vec::new();
+    for fam in fams {
+        for _ in 0..n_per_family {
+            let c = ctx_chars_for(ctx_tokens);
+            let chars = rng.range(c / 2, c);
+            samples.push(spec::generate(&mut rng, fam, chars));
+        }
+    }
+    Suite { name: format!("longbench@{ctx_tokens}"), samples }
+}
+
+/// RULER analog: NIAH-style retrieval at a *fixed* context length.
+pub fn ruler_suite(seed: u64, n_per_family: usize, ctx_tokens: usize) -> Suite {
+    let mut rng = Rng::new(seed ^ 0x0517);
+    let fams = [TaskFamily::Kv, TaskFamily::MultiKv, TaskFamily::Vt, TaskFamily::Cwe];
+    let mut samples = Vec::new();
+    for fam in fams {
+        for _ in 0..n_per_family {
+            samples.push(spec::generate(&mut rng, fam, ctx_chars_for(ctx_tokens)));
+        }
+    }
+    Suite { name: format!("ruler@{ctx_tokens}"), samples }
+}
+
+/// QASPER analog (Fig. 2): document QA only.
+pub fn qasper_suite(seed: u64, n: usize, ctx_tokens: usize) -> Suite {
+    let mut rng = Rng::new(seed ^ 0x9a5e);
+    let samples = (0..n)
+        .map(|_| spec::generate(&mut rng, TaskFamily::Qa, ctx_chars_for(ctx_tokens)))
+        .collect();
+    Suite { name: format!("qasper@{ctx_tokens}"), samples }
+}
+
+/// LongProc analog (Fig. 5): long-form structured extraction.
+/// `n_records` scales the output length (the paper's 0.5K vs 2K outputs).
+pub fn longproc_suite(seed: u64, n: usize, ctx_tokens: usize, n_records: usize) -> Suite {
+    let mut rng = Rng::new(seed ^ 0x70c5);
+    let samples = (0..n)
+        .map(|_| {
+            let mut s = spec::gen_longproc(&mut rng, ctx_chars_for(ctx_tokens), n_records);
+            s.family = TaskFamily::LongProc;
+            s
+        })
+        .collect();
+    Suite { name: format!("longproc@{ctx_tokens}x{n_records}"), samples }
+}
+
+/// MT-Bench analog (Table 2): two-turn conversations.
+pub fn mtbench_suite(seed: u64, n: usize, ctx_tokens: usize) -> Suite {
+    let mut rng = Rng::new(seed ^ 0x3b7c);
+    let samples =
+        (0..n).map(|_| spec::gen_mtbench(&mut rng, ctx_chars_for(ctx_tokens))).collect();
+    Suite { name: format!("mtbench@{ctx_tokens}"), samples }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suites_fit_bucket() {
+        for s in longbench_suite(1, 3, 256).samples {
+            assert!(s.prompt().len() + 2 <= 256, "{}", s.prompt().len());
+        }
+        for s in ruler_suite(1, 3, 512).samples {
+            assert!(s.prompt().len() + 2 <= 512);
+        }
+    }
+
+    #[test]
+    fn suites_deterministic() {
+        let a = ruler_suite(7, 2, 128);
+        let b = ruler_suite(7, 2, 128);
+        assert_eq!(a.samples[0].context, b.samples[0].context);
+    }
+
+    #[test]
+    fn longproc_output_scales() {
+        let s = longproc_suite(1, 1, 512, 8);
+        assert!(s.samples[0].answer.len() >= 8 * 8);
+    }
+}
