@@ -122,6 +122,7 @@ class Builder:
             "d_model": cfg.d_model, "n_layers": cfg.n_layers, "n_heads": cfg.n_heads,
             "n_kv_heads": cfg.n_kv_heads, "head_dim": cfg.head_dim, "ff": cfg.ff,
             "vocab": cfg.vocab, "max_seq": cfg.max_seq,
+            "rope_theta": cfg.rope_theta,
             "weights": wfile, "param_names": order,
             "param_count": int(cfg.param_count()),
         }

@@ -1,20 +1,29 @@
-//! Decode throughput (TPOT) × cache budget: the serving-side payoff of
-//! eviction — smaller caches decode faster.
+//! Decode throughput (TPOT) × cache budget, plus the decode *dispatch*
+//! comparison: per-sequence backend round-trips (full cache serialized
+//! both ways every token) vs the batched in-place decode step the engine
+//! loop uses. Acceptance: batched is no slower at batch 1 and faster at
+//! `max_active = 4`.
 
 mod common;
 
 use lookaheadkv::engine::GenOptions;
 use lookaheadkv::eviction::Method;
+use lookaheadkv::kvcache::SeqCache;
 use lookaheadkv::model::tokenizer::encode;
-use lookaheadkv::util::bench::{record, run_bench, BenchConfig};
+use lookaheadkv::util::bench::{record_named, run_bench, BenchConfig, BenchResult};
 use lookaheadkv::workload;
+
+const DISPATCH_STEPS: usize = 16;
 
 fn main() {
     let Some(engine) = common::engine_or_skip("decode") else { return };
+    let model = engine.cfg.model.clone();
     let cfg = BenchConfig { min_iters: 4, max_iters: 8, ..Default::default() };
     let suite = workload::ruler_suite(13, 1, 512);
     let prompt = encode(&suite.samples[0].prompt(), true, false);
     let mut results = Vec::new();
+
+    // TPOT × budget: smaller caches decode faster.
     for budget in [16usize, 32, 64, 128, 448] {
         let method = if budget >= prompt.len() { Method::FullKV } else { Method::SnapKV };
         let name = format!("decode16/{}@C{}", method.name(), budget);
@@ -24,5 +33,54 @@ fn main() {
         });
         results.push(r);
     }
-    record(&results);
+
+    // Dispatch comparison: same prefilled cache, DISPATCH_STEPS decode
+    // tokens, batch sizes 1 and 4 (the default `max_active`).
+    let pre = engine.prefill_for_method(&prompt, &Method::SnapKV).expect("prefill");
+    let n_layers = engine.n_layers(&model);
+    let mut evcfg = engine.cfg.eviction;
+    evcfg.budget = 32;
+    let sel = Method::SnapKV.select(&evcfg, n_layers, &pre.bundle);
+    let cap = engine
+        .rt
+        .manifest()
+        .decode_cap(&model, sel.max_kept() + 2 * DISPATCH_STEPS)
+        .expect("decode cap");
+    let base = SeqCache::from_selection(&pre.k, &pre.v, &sel.per_layer, prompt.len(), cap);
+
+    for batch in [1usize, 4] {
+        let r = run_bench(&format!("decode_dispatch/perseq/b{batch}"), &cfg, || {
+            let mut caches: Vec<SeqCache> = (0..batch).map(|_| base.clone()).collect();
+            for step in 0..DISPATCH_STEPS {
+                for c in caches.iter_mut() {
+                    let _ = engine.decode_step(&model, c, 65 + step as i32).expect("step");
+                }
+            }
+        });
+        results.push(r);
+        let r = run_bench(&format!("decode_dispatch/batched/b{batch}"), &cfg, || {
+            let mut caches: Vec<SeqCache> = (0..batch).map(|_| base.clone()).collect();
+            for step in 0..DISPATCH_STEPS {
+                let tokens = vec![65 + step as i32; batch];
+                let mut refs: Vec<&mut SeqCache> = caches.iter_mut().collect();
+                let _ = engine.decode_step_batch(&model, &mut refs, &tokens).expect("batch step");
+            }
+        });
+        results.push(r);
+        report_speedup(&results, batch);
+    }
+
+    record_named("decode", &results);
+}
+
+fn report_speedup(results: &[BenchResult], batch: usize) {
+    let mean = |tag: &str| {
+        results
+            .iter()
+            .find(|r| r.name == format!("decode_dispatch/{tag}/b{batch}"))
+            .map(|r| r.ms.mean)
+    };
+    if let (Some(ps), Some(ba)) = (mean("perseq"), mean("batched")) {
+        println!("dispatch b{batch}: per-seq {ps:.3} ms vs batched {ba:.3} ms ({:.2}x)", ps / ba);
+    }
 }

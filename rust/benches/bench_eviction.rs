@@ -1,10 +1,9 @@
 //! Pure selection cost per policy × context length (the L3 component of
-//! eviction overhead: score aggregation, pooling, top-k).
-
-mod common;
+//! eviction overhead: score aggregation, pooling, top-k). No engine or
+//! backend involved: selection is pure host-side logic.
 
 use lookaheadkv::eviction::{EvictionConfig, Method, ScoreBundle};
-use lookaheadkv::util::bench::{record, run_bench, BenchConfig};
+use lookaheadkv::util::bench::{record_named, run_bench, BenchConfig};
 use lookaheadkv::util::rng::Rng;
 use lookaheadkv::util::tensor::TensorF;
 
@@ -47,5 +46,5 @@ fn main() {
             results.push(r);
         }
     }
-    record(&results);
+    record_named("eviction", &results);
 }

@@ -1,12 +1,12 @@
-//! Graph-level microbenchmarks: per-graph execution time of the AOT
-//! prefill/decode computations (the L1/L2 hot paths as seen from L3).
+//! Graph-level microbenchmarks: per-graph execution time of the
+//! prefill/decode computations (the L1/L2 hot paths as seen from L3),
+//! through whichever backend the runtime selected.
 
 mod common;
 
 use lookaheadkv::model::tokenizer::pad_to;
-use lookaheadkv::runtime::literal::{literal_i32, literal_scalar_i32};
-use lookaheadkv::util::bench::{record, run_bench, BenchConfig};
-use lookaheadkv::util::tensor::TensorI;
+use lookaheadkv::runtime::Value;
+use lookaheadkv::util::bench::{record_named, run_bench, BenchConfig};
 
 fn main() {
     let Some(engine) = common::engine_or_skip("kernels") else { return };
@@ -15,9 +15,9 @@ fn main() {
     for s in [128usize, 256, 512, 1024] {
         let tokens: Vec<i32> = (0..s as i32 - 8).map(|i| 65 + (i % 26)).collect();
         let inputs = vec![
-            literal_i32(&TensorI::from_vec(pad_to(&tokens, s))).unwrap(),
-            literal_scalar_i32(tokens.len() as i32),
-            literal_scalar_i32(tokens.len() as i32 - 1),
+            Value::vec_i32(pad_to(&tokens, s)),
+            Value::scalar_i32(tokens.len() as i32),
+            Value::scalar_i32(tokens.len() as i32 - 1),
         ];
         let key = format!("lkv-tiny/prefill_base_s{s}");
         results.push(run_bench(&format!("graph/{key}"), &cfg, || {
@@ -27,8 +27,8 @@ fn main() {
         let lkey = format!("lkv-tiny/prefill_lkv_s{s}_n8_all");
         if engine.rt.manifest().graph(&lkey).is_ok() {
             let linputs = vec![
-                literal_i32(&TensorI::from_vec(pad_to(&tokens, s))).unwrap(),
-                literal_scalar_i32(tokens.len() as i32),
+                Value::vec_i32(pad_to(&tokens, s)),
+                Value::scalar_i32(tokens.len() as i32),
             ];
             results.push(run_bench(&format!("graph/{lkey}"), &cfg, || {
                 let _ = engine
@@ -38,5 +38,5 @@ fn main() {
             }));
         }
     }
-    record(&results);
+    record_named("kernels", &results);
 }

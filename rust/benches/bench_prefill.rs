@@ -6,7 +6,7 @@ mod common;
 use lookaheadkv::engine::GenOptions;
 use lookaheadkv::eviction::Method;
 use lookaheadkv::model::tokenizer::encode;
-use lookaheadkv::util::bench::{record, run_bench, BenchConfig};
+use lookaheadkv::util::bench::{record_named, run_bench, BenchConfig};
 use lookaheadkv::workload;
 
 fn main() {
@@ -33,5 +33,5 @@ fn main() {
             results.push(r);
         }
     }
-    record(&results);
+    record_named("prefill", &results);
 }

@@ -1,12 +1,21 @@
-//! Scheduler micro: queue throughput and batcher bookkeeping cost under
-//! synthetic load (no PJRT involved).
+//! Scheduler benchmarks: queue/KV-pool micro-costs (no engine involved)
+//! plus the full continuous-batching `EngineLoop` under synthetic load,
+//! comparing batched decode dispatch (one backend call advances every
+//! active sequence, caches updated in place) against the per-sequence
+//! round-trip path.
 
 use std::sync::mpsc::channel;
+use std::sync::Arc;
 
+use lookaheadkv::engine::{Engine, EngineConfig};
 use lookaheadkv::eviction::Method;
 use lookaheadkv::kvcache::CacheManager;
-use lookaheadkv::scheduler::{Request, RequestQueue};
-use lookaheadkv::util::bench::{record, run_bench, BenchConfig};
+use lookaheadkv::metrics::Metrics;
+use lookaheadkv::model::tokenizer::encode;
+use lookaheadkv::runtime::artifacts::default_artifacts_dir;
+use lookaheadkv::scheduler::{EngineLoop, LoopConfig, Request, RequestQueue};
+use lookaheadkv::util::bench::{record_named, run_bench, BenchConfig};
+use lookaheadkv::workload;
 
 fn main() {
     let cfg = BenchConfig { min_iters: 20, max_iters: 100, ..Default::default() };
@@ -40,5 +49,55 @@ fn main() {
         }
     }));
 
-    record(&results);
+    // Full engine loop: 8 requests, max_active = 4, batched vs per-seq
+    // decode dispatch. Each iteration runs the loop to completion.
+    let loop_cfg = BenchConfig { min_iters: 4, max_iters: 8, ..Default::default() };
+    let suite = workload::ruler_suite(17, 2, 128);
+    let prompts: Vec<Vec<i32>> =
+        suite.samples.iter().map(|s| encode(&s.prompt(), true, false)).collect();
+    for batched in [false, true] {
+        let tag = if batched { "batched" } else { "perseq" };
+        let r = run_bench(&format!("loop/{tag}/active4"), &loop_cfg, || {
+            run_loop_once(&prompts, batched);
+        });
+        results.push(r);
+    }
+    let mean = |tag: &str| {
+        results.iter().find(|r| r.name == format!("loop/{tag}/active4")).map(|r| r.ms.mean)
+    };
+    if let (Some(ps), Some(ba)) = (mean("perseq"), mean("batched")) {
+        println!("engine loop: per-seq {ps:.2} ms vs batched {ba:.2} ms ({:.2}x)", ps / ba);
+    }
+
+    record_named("scheduler", &results);
+}
+
+fn run_loop_once(prompts: &[Vec<i32>], batched: bool) {
+    let engine = Engine::new(&default_artifacts_dir(), EngineConfig::new("lkv-tiny"))
+        .expect("engine (reference backend needs no artifacts)");
+    let queue = Arc::new(RequestQueue::new(64));
+    let metrics = Arc::new(Metrics::new());
+    let mut receivers = Vec::new();
+    for i in 0..8u64 {
+        let (tx, rx) = channel();
+        receivers.push(rx);
+        queue
+            .submit(Request {
+                id: i,
+                prompt: prompts[i as usize % prompts.len()].clone(),
+                method: Method::SnapKV,
+                budget: 24,
+                max_new: 16,
+                temperature: 0.0,
+                reply: tx,
+            })
+            .expect("submit");
+    }
+    queue.close();
+    let cfg = LoopConfig { max_active: 4, batched_decode: batched, ..LoopConfig::default() };
+    EngineLoop::new(engine, cfg, Arc::clone(&queue), metrics).run();
+    for rx in receivers {
+        let reply = rx.recv().expect("reply");
+        assert!(reply.error.is_none(), "loop error: {:?}", reply.error);
+    }
 }

@@ -1,17 +1,16 @@
-//! Shared bench scaffolding: engine construction with a graceful skip
-//! when artifacts have not been built yet.
+//! Shared bench scaffolding: engine construction. With the reference
+//! backend this always succeeds (no artifacts needed); the skip path only
+//! remains for misconfigured `LKV_BACKEND=pjrt` runs.
 
 use lookaheadkv::engine::{Engine, EngineConfig};
 use lookaheadkv::runtime::artifacts::default_artifacts_dir;
 
 pub fn engine_or_skip(name: &str) -> Option<Engine> {
-    let dir = default_artifacts_dir();
-    if !dir.join("manifest.json").exists() {
-        println!("bench {name}: artifacts not built (run `make artifacts`), skipping");
-        return None;
-    }
-    match Engine::new(&dir, EngineConfig::new("lkv-tiny")) {
-        Ok(e) => Some(e),
+    match Engine::new(&default_artifacts_dir(), EngineConfig::new("lkv-tiny")) {
+        Ok(e) => {
+            println!("bench {name}: backend={}", e.rt.backend_name());
+            Some(e)
+        }
         Err(err) => {
             println!("bench {name}: engine init failed ({err:#}), skipping");
             None

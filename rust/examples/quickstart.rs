@@ -1,7 +1,9 @@
-//! Quickstart: load the AOT artifacts, serve one prompt with LookaheadKV
-//! eviction, and print the generation plus the latency breakdown.
+//! Quickstart: serve one prompt with LookaheadKV eviction and print the
+//! generation plus the latency breakdown. Runs offline on the pure-Rust
+//! reference backend (no artifacts needed); with `--features pjrt` and
+//! `make artifacts`, the same binary serves the AOT graphs instead.
 //!
-//!     make artifacts && cargo run --release --example quickstart
+//!     cargo run --release --example quickstart
 
 use lookaheadkv::engine::{Engine, EngineConfig, GenOptions};
 use lookaheadkv::eviction::Method;

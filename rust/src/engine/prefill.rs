@@ -1,18 +1,22 @@
 //! Prefill paths: base, lookahead, and the draft-augmented LAQ/SpecKV
 //! pipelines, each producing KV + first-token logits + a score bundle.
+//! Decode lives here too: the per-sequence `decode_step` (one backend
+//! round-trip per sequence per token) and the batched `decode_step_batch`
+//! (all active sequences advanced in one backend call, caches updated in
+//! place).
 
 use std::time::Instant;
 
 use anyhow::{Context, Result};
-use xla::Literal;
 
 use super::Engine;
 use crate::eviction::{Method, ScoreBundle};
 use crate::kvcache::SeqCache;
 use crate::model::tokenizer::pad_to;
-use crate::runtime::literal::{literal_i32, literal_scalar_i32, tensor_f32};
+use crate::runtime::backend::decode_seq_via_execute;
+use crate::runtime::{DecodeSeq, Value};
 use crate::util::rng::argmax;
-use crate::util::tensor::{TensorF, TensorI};
+use crate::util::tensor::TensorF;
 
 /// Wallclock breakdown of one prefill+eviction (drives Fig. 2 / Table 3).
 #[derive(Debug, Clone, Default)]
@@ -72,19 +76,21 @@ impl Engine {
         let bucket = m.prefill_bucket(length)?;
         let key = m.graph_key_prefill_base(model, bucket);
         let inputs = vec![
-            literal_i32(&TensorI::from_vec(pad_to(tokens, bucket)))?,
-            literal_scalar_i32(length as i32),
-            literal_scalar_i32(logit_pos as i32),
+            Value::vec_i32(pad_to(tokens, bucket)),
+            Value::scalar_i32(length as i32),
+            Value::scalar_i32(logit_pos as i32),
         ];
         let out = self.rt.execute(&key, None, &inputs)?;
+        anyhow::ensure!(out.len() == 5, "prefill graph {key}: {} outputs, want 5", out.len());
         // outputs: k, v, logits, window_scores, h2o_scores (manifest order)
+        let mut it = out.into_iter();
         Ok((
             RawPrefill {
-                k: tensor_f32(&out[0])?,
-                v: tensor_f32(&out[1])?,
-                logits: out[2].to_vec::<f32>().context("logits")?,
-                window_scores: tensor_f32(&out[3])?,
-                h2o_scores: tensor_f32(&out[4])?,
+                k: it.next().unwrap().into_f32()?,
+                v: it.next().unwrap().into_f32()?,
+                logits: it.next().unwrap().into_vec_f32().context("logits")?,
+                window_scores: it.next().unwrap().into_f32()?,
+                h2o_scores: it.next().unwrap().into_f32()?,
             },
             bucket,
         ))
@@ -101,17 +107,17 @@ impl Engine {
         let bucket = m.prefill_bucket(length)?;
         let vmeta = m.variant(model, variant)?;
         let key = m.graph_key_prefill_lkv(model, bucket, &vmeta.graph_suffix.clone());
-        let inputs = vec![
-            literal_i32(&TensorI::from_vec(pad_to(tokens, bucket)))?,
-            literal_scalar_i32(length as i32),
-        ];
+        let inputs =
+            vec![Value::vec_i32(pad_to(tokens, bucket)), Value::scalar_i32(length as i32)];
         let out = self.rt.execute(&key, Some((model, variant)), &inputs)?;
+        anyhow::ensure!(out.len() == 4, "lkv graph {key}: {} outputs, want 4", out.len());
         // outputs: k, v, logits, lkv_scores
+        let mut it = out.into_iter();
         Ok((
-            tensor_f32(&out[0])?,
-            tensor_f32(&out[1])?,
-            out[2].to_vec::<f32>().context("logits")?,
-            tensor_f32(&out[3])?,
+            it.next().unwrap().into_f32()?,
+            it.next().unwrap().into_f32()?,
+            it.next().unwrap().into_vec_f32().context("logits")?,
+            it.next().unwrap().into_f32()?,
             bucket,
         ))
     }
@@ -187,7 +193,8 @@ impl Engine {
                         &bundle,
                     );
                     let cap = m.decode_cap(&model, sel.max_kept() + nd)?;
-                    let mut cache = SeqCache::from_selection(&raw.k, &raw.v, &sel.per_layer, len, cap);
+                    let mut cache =
+                        SeqCache::from_selection(&raw.k, &raw.v, &sel.per_layer, len, cap);
                     draft_toks = self.greedy_draft(&model, &mut cache, &raw.logits, nd)?;
                     bd.draft_ms = ms(t1);
                 }
@@ -243,30 +250,62 @@ impl Engine {
         Ok(PrefillOutput { k: raw.k, v: raw.v, logits: raw.logits, bundle, bucket, breakdown: bd })
     }
 
-    /// One decode step; updates `cache` tensors and bookkeeping.
+    /// One decode step for one sequence; serializes the full cache into
+    /// the backend call and replaces it with the returned tensors (the
+    /// per-sequence dispatch baseline — see `decode_step_batch`).
     pub fn decode_step(
         &self,
         model: &str,
         cache: &mut SeqCache,
         token: i32,
     ) -> Result<StepOutput> {
-        let m = self.rt.manifest();
-        let key = m.graph_key_decode(model, cache.cap);
+        let key = self.rt.manifest().graph_key_decode(model, cache.cap);
         let pos = cache.next_pos;
-        let inputs: Vec<Literal> = vec![
-            literal_scalar_i32(token),
-            literal_scalar_i32(pos as i32),
-            crate::runtime::literal::literal_f32(&cache.k)?,
-            crate::runtime::literal::literal_f32(&cache.v)?,
-            literal_i32(&TensorI::from_vec(cache.lens_i32()))?,
-        ];
-        let out = self.rt.execute(&key, None, &inputs)?;
-        // outputs: logits, k_cache, v_cache, probs
-        let logits = out[0].to_vec::<f32>().context("decode logits")?;
-        cache.update_tensors(tensor_f32(&out[1])?, tensor_f32(&out[2])?);
+        let out = {
+            let SeqCache { k, v, lens, .. } = &mut *cache;
+            let mut seq = DecodeSeq { token, pos, k, v, lens: &lens[..] };
+            let exec = |key: &str, inputs: &[Value]| self.rt.execute(key, None, inputs);
+            decode_seq_via_execute(&exec, &key, &mut seq)?
+        };
         cache.note_insert(pos);
         cache.next_pos += 1;
-        Ok(StepOutput { logits, probs: tensor_f32(&out[3])? })
+        Ok(StepOutput { logits: out.logits, probs: out.probs })
+    }
+
+    /// Advance every sequence by one decode token in a single backend
+    /// call. Caches are updated in place by the backend (no full-cache
+    /// serialization round-trip on backends that support it); host-side
+    /// slot bookkeeping is applied here.
+    pub fn decode_step_batch(
+        &self,
+        model: &str,
+        caches: &mut [&mut SeqCache],
+        tokens: &[i32],
+    ) -> Result<Vec<StepOutput>> {
+        anyhow::ensure!(
+            caches.len() == tokens.len(),
+            "decode_step_batch: {} caches vs {} tokens",
+            caches.len(),
+            tokens.len()
+        );
+        let mut positions = Vec::with_capacity(caches.len());
+        let mut seqs: Vec<DecodeSeq<'_>> = Vec::with_capacity(caches.len());
+        for (cache, &token) in caches.iter_mut().zip(tokens.iter()) {
+            let pos = cache.next_pos;
+            positions.push(pos);
+            let SeqCache { k, v, lens, .. } = &mut **cache;
+            seqs.push(DecodeSeq { token, pos, k, v, lens: &lens[..] });
+        }
+        let outs = self.rt.decode_batch(model, &mut seqs)?;
+        drop(seqs);
+        anyhow::ensure!(outs.len() == caches.len(), "decode_batch returned a short batch");
+        let mut steps = Vec::with_capacity(outs.len());
+        for ((cache, out), pos) in caches.iter_mut().zip(outs).zip(positions) {
+            cache.note_insert(pos);
+            cache.next_pos += 1;
+            steps.push(StepOutput { logits: out.logits, probs: out.probs });
+        }
+        Ok(steps)
     }
 }
 

@@ -113,6 +113,19 @@ impl EvictionConfig {
     }
 }
 
+/// Parse `name` or `name:variant` (and nothing else): returns the
+/// variant ("main" when unspecified), or None when `s` is not this
+/// family — including when `s` merely starts with `name`, which is what
+/// made the old `strip_prefix`-only parse order-sensitive.
+fn variant_of(s: &str, name: &str) -> Option<String> {
+    let rest = s.strip_prefix(name)?;
+    if rest.is_empty() {
+        Some("main".to_string())
+    } else {
+        rest.strip_prefix(':').filter(|v| !v.is_empty()).map(str::to_string)
+    }
+}
+
 /// The eviction method, as selected by CLI/server/eval harnesses.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum Method {
@@ -145,15 +158,16 @@ impl Method {
             "laq" => Method::Laq,
             "speckv" => Method::SpecKV,
             _ => {
-                if let Some(v) = s.strip_prefix("lookaheadkv") {
-                    let variant = v.strip_prefix(':').unwrap_or("main");
-                    Method::LookaheadKV { variant: variant.to_string() }
-                } else if let Some(v) = s.strip_prefix("lkv+suffix") {
-                    let variant = v.strip_prefix(':').unwrap_or("main");
-                    Method::LkvSuffix { variant: variant.to_string() }
-                } else if let Some(v) = s.strip_prefix("lkv") {
-                    let variant = v.strip_prefix(':').unwrap_or("main");
-                    Method::LookaheadKV { variant: variant.to_string() }
+                // Prefix-parsed families. `variant_of` only accepts an
+                // exact name or `name:variant`, so no family can shadow
+                // another regardless of the order checked here (e.g. bare
+                // "lkv" must never swallow "lkv+suffix" as a variant).
+                if let Some(v) = variant_of(s, "lookaheadkv") {
+                    Method::LookaheadKV { variant: v }
+                } else if let Some(v) = variant_of(s, "lkv+suffix") {
+                    Method::LkvSuffix { variant: v }
+                } else if let Some(v) = variant_of(s, "lkv") {
+                    Method::LookaheadKV { variant: v }
                 } else {
                     return None;
                 }
@@ -234,6 +248,35 @@ mod tests {
             Some(Method::LkvSuffix { variant: "main".into() })
         );
         assert!(Method::parse("bogus").is_none());
+    }
+
+    /// Regression (prefix-matching order hazard): the `lookaheadkv`/`lkv`
+    /// arms must never shadow `lkv+suffix`, and a trailing junk suffix is
+    /// a parse error, not a variant.
+    #[test]
+    fn parse_families_never_shadow_each_other() {
+        assert_eq!(
+            Method::parse("lookaheadkv:ctx64"),
+            Some(Method::LookaheadKV { variant: "ctx64".into() })
+        );
+        assert_eq!(
+            Method::parse("lkv:ctx64"),
+            Some(Method::LookaheadKV { variant: "ctx64".into() })
+        );
+        assert_eq!(
+            Method::parse("lkv+suffix:ctx64"),
+            Some(Method::LkvSuffix { variant: "ctx64".into() })
+        );
+        // "lkv+suffix" must parse as the suffix family, never as
+        // LookaheadKV { variant: "+suffix" } (what a bare strip_prefix
+        // of "lkv" would produce if checked first).
+        assert_eq!(
+            Method::parse("lkv+suffix"),
+            Some(Method::LkvSuffix { variant: "main".into() })
+        );
+        for bad in ["lkvx", "lkv+", "lkv+suffixx", "lkv:", "lookaheadkvx", "lkv+suffix:"] {
+            assert_eq!(Method::parse(bad), None, "{bad:?} must not parse");
+        }
     }
 
     #[test]

@@ -24,7 +24,7 @@ use lookaheadkv::util::cli::Args;
 use lookaheadkv::workload;
 
 fn main() {
-    let args = Args::from_env(&["help", "verbose", "compile"]);
+    let args = Args::from_env(&["help", "verbose", "compile", "per-seq-decode"]);
     let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
     let result = match cmd {
         "serve" => cmd_serve(&args),
@@ -50,7 +50,7 @@ fn print_help() {
          usage: lkv <command> [options]\n\
          \n\
          commands:\n\
-         \x20 serve     --addr 127.0.0.1:8080 --model lkv-tiny --max-active 4\n\
+         \x20 serve     --addr 127.0.0.1:8080 --model lkv-tiny --max-active 4 [--per-seq-decode]\n\
          \x20 generate  --prompt <text> --method lookaheadkv --budget 64 --max-new 32\n\
          \x20 eval      --suite ruler|longbench|qasper|longproc|mtbench --methods snapkv,lookaheadkv \\\n\
          \x20           --budgets 16,32 --ctx 256 --n 8\n\
@@ -58,7 +58,10 @@ fn print_help() {
          \x20 graphs    [--compile]                           (artifact inventory)\n\
          \n\
          methods: full random streaming snapkv pyramidkv h2o tova laq speckv\n\
-         \x20        lookaheadkv[:variant] lkv+suffix[:variant]"
+         \x20        lookaheadkv[:variant] lkv+suffix[:variant]\n\
+         \n\
+         backend: LKV_BACKEND=reference|pjrt|auto (default auto: pjrt when\n\
+         \x20        compiled in and artifacts exist, else pure-Rust reference)"
     );
 }
 
@@ -74,11 +77,16 @@ fn engine_from_args(args: &Args) -> Result<Engine> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    // PJRT handles are not Send: construct the Engine *inside* the engine
-    // thread and keep it there for the process lifetime.
+    // Backend handles may not be Send (PJRT): construct the Engine
+    // *inside* the engine thread and keep it there for the process
+    // lifetime.
     let queue = Arc::new(RequestQueue::new(args.usize("queue-cap", 64)));
     let metrics = Arc::new(Metrics::new());
-    let loop_cfg = LoopConfig { max_active: args.usize("max-active", 4), ..LoopConfig::default() };
+    let loop_cfg = LoopConfig {
+        max_active: args.usize("max-active", 4),
+        batched_decode: !args.has("per-seq-decode"),
+        ..LoopConfig::default()
+    };
     let q2 = Arc::clone(&queue);
     let m2 = Arc::clone(&metrics);
     let model = args.get_or("model", "lkv-tiny").to_string();
@@ -216,7 +224,8 @@ fn cmd_graphs(args: &Args) -> Result<()> {
     let engine = engine_from_args(args)?;
     let m = engine.rt.manifest();
     println!(
-        "{} graphs, {} models, {} lkv variants",
+        "backend={}: {} graphs, {} models, {} lkv variants",
+        engine.rt.backend_name(),
         m.graphs.len(),
         m.models.len(),
         m.variants.len()
@@ -227,8 +236,8 @@ fn cmd_graphs(args: &Args) -> Result<()> {
     if args.has("compile") {
         for key in m.graphs.keys().cloned().collect::<Vec<_>>() {
             let t0 = std::time::Instant::now();
-            engine.rt.graph(&key)?;
-            println!("compiled {key} in {:.0} ms", t0.elapsed().as_secs_f64() * 1e3);
+            engine.rt.prepare(&key)?;
+            println!("prepared {key} in {:.0} ms", t0.elapsed().as_secs_f64() * 1e3);
         }
     }
     Ok(())

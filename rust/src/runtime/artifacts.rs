@@ -19,9 +19,27 @@ pub struct ModelMeta {
     pub ff: usize,
     pub vocab: usize,
     pub max_seq: usize,
+    pub rope_theta: f32,
+    /// Weights npz, relative to the artifacts root; empty for synthetic
+    /// (reference-backend) manifests, whose weights are derived in-memory.
     pub weights_file: String,
     pub param_names: Vec<String>,
     pub param_count: usize,
+}
+
+impl ModelMeta {
+    pub fn q_dim(&self) -> usize {
+        self.n_heads * self.head_dim
+    }
+
+    pub fn kv_dim(&self) -> usize {
+        self.n_kv_heads * self.head_dim
+    }
+
+    /// GQA group size (query heads per KV head).
+    pub fn group(&self) -> usize {
+        self.n_heads / self.n_kv_heads
+    }
 }
 
 /// One trained LookaheadKV variant (lookahead embeddings + LoRA weights).
@@ -31,6 +49,7 @@ pub struct VariantMeta {
     pub variant: String,
     pub n_lookahead: usize,
     pub lora_rank: usize,
+    pub lora_alpha: f32,
     pub lora_targets: Vec<String>,
     pub weights_file: String,
     pub param_names: Vec<String>,
@@ -106,6 +125,10 @@ impl Manifest {
                     ff: m.req("ff").as_usize().unwrap(),
                     vocab: m.req("vocab").as_usize().unwrap(),
                     max_seq: m.req("max_seq").as_usize().unwrap(),
+                    rope_theta: m
+                        .get("rope_theta")
+                        .and_then(Json::as_f64)
+                        .unwrap_or(10_000.0) as f32,
                     weights_file: m.req("weights").as_str().unwrap().to_string(),
                     param_names: m.req("param_names").str_arr(),
                     param_count: m.req("param_count").as_usize().unwrap(),
@@ -122,6 +145,10 @@ impl Manifest {
                         variant: m.req("variant").as_str().unwrap().to_string(),
                         n_lookahead: m.req("n_lookahead").as_usize().unwrap(),
                         lora_rank: m.req("lora_rank").as_usize().unwrap(),
+                        lora_alpha: m
+                            .get("lora_alpha")
+                            .and_then(Json::as_f64)
+                            .unwrap_or(16.0) as f32,
                         lora_targets: m.req("lora_targets").str_arr(),
                         weights_file: m.req("weights").as_str().unwrap().to_string(),
                         param_names: m.req("param_names").str_arr(),
@@ -241,19 +268,260 @@ impl Manifest {
         self.root.join(rel)
     }
 
+    /// Check artifact files exist. Entries with an empty `file` /
+    /// `weights_file` are synthetic (reference-backend built-ins) and
+    /// have nothing on disk to check.
     pub fn validate(&self) -> Result<()> {
         for g in self.graphs.values() {
+            if g.file.is_empty() {
+                continue;
+            }
             let p = self.path(&g.file);
             if !p.exists() {
                 bail!("graph file missing: {p:?}");
             }
         }
         for m in self.models.values() {
-            if !self.path(&m.weights_file).exists() {
+            if !m.weights_file.is_empty() && !self.path(&m.weights_file).exists() {
                 bail!("weights missing for {}", m.name);
             }
         }
         Ok(())
+    }
+
+    /// The built-in manifest used by the reference backend when no AOT
+    /// artifacts exist: the same models, shape buckets and graph keys
+    /// `python/compile/aot.py` lowers (`config.py` constants), with empty
+    /// file entries since every computation is done in-process.
+    pub fn synthetic() -> Manifest {
+        let buckets = vec![128usize, 256, 512, 1024];
+        let caps = vec![64usize, 128, 256, 640, 1152];
+        let draft_caps: Vec<usize> = buckets.iter().map(|s| s + 32).collect();
+        let mut m = Manifest {
+            root: PathBuf::from("."),
+            pad_id: 256,
+            bos_id: 257,
+            eos_id: 258,
+            vocab: 320,
+            obs_window: 32,
+            prefill_buckets: buckets.clone(),
+            decode_caps: caps.clone(),
+            models: BTreeMap::new(),
+            variants: BTreeMap::new(),
+            graphs: BTreeMap::new(),
+            goldens: BTreeMap::new(),
+        };
+        // (name, d_model, n_layers, n_heads, n_kv_heads, ff) — config.py
+        let model_specs = [
+            ("lkv-tiny", 64usize, 4usize, 4usize, 2usize, 192usize),
+            ("lkv-base", 80, 5, 5, 1, 224),
+            ("lkv-draft", 32, 2, 2, 1, 96),
+        ];
+        for (name, d, l, h, hkv, ff) in model_specs {
+            m.models.insert(name.to_string(), synthetic_model(name, d, l, h, hkv, ff));
+        }
+        for name in ["lkv-tiny", "lkv-base"] {
+            let meta = m.models[name].clone();
+            add_synthetic_graphs(&mut m, &meta, &buckets, &caps, true);
+            m.variants.insert(
+                format!("{name}/main"),
+                synthetic_variant(&meta, "main", 8, 4, 16.0),
+            );
+        }
+        let draft = m.models["lkv-draft"].clone();
+        add_synthetic_graphs(&mut m, &draft, &buckets, &draft_caps, false);
+        m
+    }
+}
+
+/// Canonical flat parameter order (mirrors `model.param_order`).
+pub fn param_order(n_layers: usize) -> Vec<String> {
+    let mut names = vec!["emb".to_string()];
+    for i in 0..n_layers {
+        for f in LAYER_FIELDS {
+            names.push(format!("l{i}.{f}"));
+        }
+    }
+    names.push("final_norm".to_string());
+    names.push("head".to_string());
+    names
+}
+
+/// Per-layer weight field names, in canonical order (mirrors
+/// `model.LAYER_FIELDS`).
+pub const LAYER_FIELDS: [&str; 9] =
+    ["attn_norm", "wq", "wk", "wv", "wo", "mlp_norm", "wgate", "wup", "wdown"];
+
+fn synthetic_model(
+    name: &str,
+    d: usize,
+    l: usize,
+    h: usize,
+    hkv: usize,
+    ff: usize,
+) -> ModelMeta {
+    let head_dim = 16usize;
+    let vocab = 320usize;
+    let q_dim = h * head_dim;
+    let kv_dim = hkv * head_dim;
+    let per_layer = 2 * d + d * q_dim + 2 * d * kv_dim + q_dim * d + 3 * d * ff;
+    ModelMeta {
+        name: name.to_string(),
+        d_model: d,
+        n_layers: l,
+        n_heads: h,
+        n_kv_heads: hkv,
+        head_dim,
+        ff,
+        vocab,
+        max_seq: 1184,
+        rope_theta: 10_000.0,
+        weights_file: String::new(),
+        param_names: param_order(l),
+        param_count: vocab * d + l * per_layer + d + d * vocab,
+    }
+}
+
+fn synthetic_variant(
+    model: &ModelMeta,
+    variant: &str,
+    n_lookahead: usize,
+    lora_rank: usize,
+    lora_alpha: f32,
+) -> VariantMeta {
+    let targets = ["wq", "wk", "wv", "wo", "wgate", "wup", "wdown"];
+    let mut names = vec!["emb".to_string()];
+    for i in 0..model.n_layers {
+        for t in targets {
+            names.push(format!("l{i}.{t}.a"));
+            names.push(format!("l{i}.{t}.b"));
+        }
+    }
+    // emb + rank-r A/B pairs per target per layer (dims from target shapes)
+    let (d, q, kv, ff) = (model.d_model, model.q_dim(), model.kv_dim(), model.ff);
+    let per_layer: usize = [(d, q), (d, kv), (d, kv), (q, d), (d, ff), (d, ff), (ff, d)]
+        .iter()
+        .map(|&(a, b)| lora_rank * (a + b))
+        .sum();
+    VariantMeta {
+        model: model.name.clone(),
+        variant: variant.to_string(),
+        n_lookahead,
+        lora_rank,
+        lora_alpha,
+        lora_targets: targets.iter().map(|t| t.to_string()).collect(),
+        weights_file: String::new(),
+        param_names: names,
+        trainable_params: n_lookahead * d + model.n_layers * per_layer,
+        graph_suffix: format!("n{n_lookahead}_all"),
+    }
+}
+
+fn add_synthetic_graphs(
+    m: &mut Manifest,
+    meta: &ModelMeta,
+    buckets: &[usize],
+    caps: &[usize],
+    with_lkv: bool,
+) {
+    let name = &meta.name;
+    let n_weight_args = meta.param_names.len();
+    let kv_in = |s: usize| InputSpec {
+        name: "tokens".to_string(),
+        dtype: "int32".to_string(),
+        shape: vec![s],
+    };
+    let scalar = |n: &str| InputSpec {
+        name: n.to_string(),
+        dtype: "int32".to_string(),
+        shape: vec![],
+    };
+    for &s in buckets {
+        m.graphs.insert(
+            format!("{name}/prefill_base_s{s}"),
+            GraphMeta {
+                key: format!("{name}/prefill_base_s{s}"),
+                kind: "prefill_base".to_string(),
+                model: name.clone(),
+                file: String::new(),
+                s: Some(s),
+                cap: None,
+                window: Some(m.obs_window),
+                n_lookahead: None,
+                suffix: None,
+                n_weight_args,
+                n_lkv_weight_args: 0,
+                inputs: vec![kv_in(s), scalar("length"), scalar("logit_pos")],
+                outputs: ["k", "v", "logits", "window_scores", "h2o_scores"]
+                    .iter()
+                    .map(|o| o.to_string())
+                    .collect(),
+            },
+        );
+        if with_lkv {
+            let suffix = "n8_all";
+            let n_lkv_weight_args = 1 + meta.n_layers * 7 * 2;
+            m.graphs.insert(
+                format!("{name}/prefill_lkv_s{s}_{suffix}"),
+                GraphMeta {
+                    key: format!("{name}/prefill_lkv_s{s}_{suffix}"),
+                    kind: "prefill_lkv".to_string(),
+                    model: name.clone(),
+                    file: String::new(),
+                    s: Some(s),
+                    cap: None,
+                    window: None,
+                    n_lookahead: Some(8),
+                    suffix: Some(suffix.to_string()),
+                    n_weight_args,
+                    n_lkv_weight_args,
+                    inputs: vec![kv_in(s), scalar("length")],
+                    outputs: ["k", "v", "logits", "lkv_scores"]
+                        .iter()
+                        .map(|o| o.to_string())
+                        .collect(),
+                },
+            );
+        }
+    }
+    for &cap in caps {
+        let kv_shape = vec![meta.n_layers, meta.n_kv_heads, cap, meta.head_dim];
+        let cache = |n: &str| InputSpec {
+            name: n.to_string(),
+            dtype: "float32".to_string(),
+            shape: kv_shape.clone(),
+        };
+        m.graphs.insert(
+            format!("{name}/decode_c{cap}"),
+            GraphMeta {
+                key: format!("{name}/decode_c{cap}"),
+                kind: "decode".to_string(),
+                model: name.clone(),
+                file: String::new(),
+                s: None,
+                cap: Some(cap),
+                window: None,
+                n_lookahead: None,
+                suffix: None,
+                n_weight_args,
+                n_lkv_weight_args: 0,
+                inputs: vec![
+                    scalar("token"),
+                    scalar("pos"),
+                    cache("k_cache"),
+                    cache("v_cache"),
+                    InputSpec {
+                        name: "cache_lens".to_string(),
+                        dtype: "int32".to_string(),
+                        shape: vec![meta.n_layers],
+                    },
+                ],
+                outputs: ["logits", "k_cache", "v_cache", "probs"]
+                    .iter()
+                    .map(|o| o.to_string())
+                    .collect(),
+            },
+        );
     }
 }
 
@@ -308,5 +576,30 @@ mod tests {
         let g = m.graph("m/prefill_base_s128").unwrap();
         assert_eq!(g.inputs[0].shape, vec![128]);
         assert_eq!(m.variant("m", "main").unwrap().n_lookahead, 8);
+    }
+
+    #[test]
+    fn synthetic_manifest_is_complete() {
+        let m = Manifest::synthetic();
+        m.validate().expect("synthetic entries have no files to check");
+        assert_eq!(m.pad_id, 256);
+        assert!(m.graphs.len() >= 10);
+        for model in ["lkv-tiny", "lkv-base", "lkv-draft"] {
+            let meta = m.model(model).unwrap();
+            assert_eq!(meta.param_names.len(), 3 + 9 * meta.n_layers);
+            assert_eq!(meta.n_heads % meta.n_kv_heads, 0);
+        }
+        // tiny model has the full graph family
+        for &s in &m.prefill_buckets {
+            assert!(m.graphs.contains_key(&m.graph_key_prefill_base("lkv-tiny", s)));
+            assert!(m.graphs.contains_key(&m.graph_key_prefill_lkv("lkv-tiny", s, "n8_all")));
+        }
+        assert_eq!(m.decode_cap("lkv-tiny", 100).unwrap(), 128);
+        // draft caps are bucket+32 (SpecKV holds prompt + draft tokens)
+        assert_eq!(m.decode_cap("lkv-draft", 100).unwrap(), 160);
+        let v = m.variant("lkv-tiny", "main").unwrap();
+        assert_eq!(v.graph_suffix, "n8_all");
+        assert_eq!(v.lora_targets.len(), 7);
+        assert!(v.trainable_params > 0);
     }
 }

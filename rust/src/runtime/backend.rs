@@ -1,0 +1,208 @@
+//! The pluggable execution-backend abstraction.
+//!
+//! A [`Backend`] owns everything below the engine: the artifact
+//! [`Manifest`], per-model weights, and the execution of the three AOT
+//! graph contracts (`prefill_base`, `prefill_lkv`, `decode`). The engine,
+//! scheduler and server only ever talk [`Value`]s (host tensors), so the
+//! same serving stack runs on:
+//!
+//! * [`super::reference::ReferenceBackend`] — pure-Rust CPU math over
+//!   [`crate::util::tensor`] types; always available, no artifacts needed;
+//! * `super::pjrt::PjrtBackend` (`pjrt` cargo feature) — compiles the
+//!   AOT HLO-text artifacts through a PJRT client.
+//!
+//! [`Backend::decode_batch`] is the batched decode step: it advances a
+//! set of sequences by one token in a single backend call, mutating each
+//! sequence's cache tensors *in place*. The default implementation
+//! round-trips through [`Backend::execute`] per sequence (the historical
+//! path, which serializes the full K/V cache both ways every token);
+//! backends that can do better override it.
+
+use anyhow::Result;
+
+use super::artifacts::Manifest;
+use crate::util::tensor::{TensorF, TensorI};
+
+/// Per-graph execution statistics (drives the §Perf profiling tables).
+#[derive(Debug, Default, Clone)]
+pub struct GraphStats {
+    pub calls: u64,
+    /// Graph compilation (PJRT) or weight-synthesis (reference) time.
+    pub compile_ms: f64,
+    pub exec_ms: f64,
+    pub transfer_ms: f64,
+}
+
+/// A host tensor argument/result of a graph execution.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    F32(TensorF),
+    I32(TensorI),
+}
+
+impl Value {
+    pub fn scalar_i32(v: i32) -> Value {
+        Value::I32(TensorI::scalar(v))
+    }
+
+    pub fn vec_i32(v: Vec<i32>) -> Value {
+        Value::I32(TensorI::from_vec(v))
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Value::F32(t) => &t.shape,
+            Value::I32(t) => &t.shape,
+        }
+    }
+
+    pub fn dtype(&self) -> &'static str {
+        match self {
+            Value::F32(_) => "float32",
+            Value::I32(_) => "int32",
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&TensorF> {
+        match self {
+            Value::F32(t) => Ok(t),
+            Value::I32(_) => anyhow::bail!("expected f32 tensor, got i32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&TensorI> {
+        match self {
+            Value::I32(t) => Ok(t),
+            Value::F32(_) => anyhow::bail!("expected i32 tensor, got f32"),
+        }
+    }
+
+    pub fn into_f32(self) -> Result<TensorF> {
+        match self {
+            Value::F32(t) => Ok(t),
+            Value::I32(_) => anyhow::bail!("expected f32 tensor, got i32"),
+        }
+    }
+
+    pub fn into_vec_f32(self) -> Result<Vec<f32>> {
+        Ok(self.into_f32()?.data)
+    }
+
+    pub fn as_scalar_i32(&self) -> Result<i32> {
+        let t = self.as_i32()?;
+        anyhow::ensure!(t.data.len() == 1, "expected scalar, got shape {:?}", t.shape);
+        Ok(t.data[0])
+    }
+}
+
+/// One sequence's slice of a batched decode step. `k`/`v` are the
+/// sequence's cache tensors `[L, Hkv, cap, dh]`; `lens` the live slots
+/// per layer *before* insertion. After `decode_batch` returns, the new
+/// token's KV has been inserted at slot `lens[l]` of each layer.
+pub struct DecodeSeq<'a> {
+    pub token: i32,
+    /// Absolute RoPE position of the new token.
+    pub pos: usize,
+    pub k: &'a mut TensorF,
+    pub v: &'a mut TensorF,
+    pub lens: &'a [usize],
+}
+
+/// Per-sequence result of a batched decode step.
+pub struct DecodeOut {
+    pub logits: Vec<f32>,
+    /// `[L, H, cap]` attention over the cache after insertion.
+    pub probs: TensorF,
+}
+
+pub trait Backend {
+    /// Short backend identifier ("reference" / "pjrt").
+    fn name(&self) -> &'static str;
+
+    fn manifest(&self) -> &Manifest;
+
+    /// Execute a graph by manifest key. `inputs` are the runtime (non-
+    /// weight) arguments in manifest order; weights are owned by the
+    /// backend. Returns the outputs in manifest order.
+    fn execute(
+        &self,
+        key: &str,
+        variant: Option<(&str, &str)>,
+        inputs: &[Value],
+    ) -> Result<Vec<Value>>;
+
+    /// Warm a graph (compile / synthesize weights) without executing it.
+    fn prepare(&self, key: &str) -> Result<()> {
+        self.manifest().graph(key).map(|_| ())
+    }
+
+    /// Advance every sequence by one decode token in a single call,
+    /// updating the caches in place. Sequences may have different caps.
+    ///
+    /// Default: per-sequence `execute` round-trips (clones each cache
+    /// into the call and replaces it with the returned tensors).
+    fn decode_batch(&self, model: &str, seqs: &mut [DecodeSeq<'_>]) -> Result<Vec<DecodeOut>> {
+        let mut outs = Vec::with_capacity(seqs.len());
+        for seq in seqs.iter_mut() {
+            let key = self.manifest().graph_key_decode(model, seq.k.shape[2]);
+            outs.push(decode_seq_via_execute(
+                &|key: &str, inputs: &[Value]| self.execute(key, None, inputs),
+                &key,
+                seq,
+            )?);
+        }
+        Ok(outs)
+    }
+
+    /// Snapshot of per-graph stats (sorted by total exec time, desc).
+    fn stats(&self) -> Vec<(String, GraphStats)>;
+
+    fn reset_stats(&self);
+}
+
+/// Decode one sequence through the `execute` contract: serialize the
+/// cache into the call, replace it with the returned tensors. The single
+/// home of the decode-graph marshalling (input order, output order,
+/// arity), shared by the default [`Backend::decode_batch`] and the
+/// engine's per-sequence `decode_step`.
+pub fn decode_seq_via_execute(
+    execute: &dyn Fn(&str, &[Value]) -> Result<Vec<Value>>,
+    key: &str,
+    seq: &mut DecodeSeq<'_>,
+) -> Result<DecodeOut> {
+    let lens: Vec<i32> = seq.lens.iter().map(|&x| x as i32).collect();
+    let inputs = vec![
+        Value::scalar_i32(seq.token),
+        Value::scalar_i32(seq.pos as i32),
+        Value::F32(seq.k.clone()),
+        Value::F32(seq.v.clone()),
+        Value::vec_i32(lens),
+    ];
+    let mut out = execute(key, &inputs)?;
+    anyhow::ensure!(out.len() == 4, "decode graph {key}: {} outputs, want 4", out.len());
+    // outputs: logits, k_cache, v_cache, probs (manifest order)
+    let probs = out.pop().unwrap().into_f32()?;
+    let v = out.pop().unwrap().into_f32()?;
+    let k = out.pop().unwrap().into_f32()?;
+    let logits = out.pop().unwrap().into_vec_f32()?;
+    *seq.k = k;
+    *seq.v = v;
+    Ok(DecodeOut { logits, probs })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn value_accessors() {
+        let v = Value::scalar_i32(7);
+        assert_eq!(v.as_scalar_i32().unwrap(), 7);
+        assert_eq!(v.dtype(), "int32");
+        assert!(v.as_f32().is_err());
+        let f = Value::F32(TensorF::zeros(vec![2, 3]));
+        assert_eq!(f.shape(), &[2, 3]);
+        assert_eq!(f.clone().into_vec_f32().unwrap().len(), 6);
+        assert!(f.as_scalar_i32().is_err());
+    }
+}

@@ -1,25 +1,33 @@
-//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them.
+//! Execution runtime: manifest-driven graph execution behind a pluggable
+//! [`Backend`] abstraction.
 //!
 //! The compile path (`python/compile/aot.py`) lowers every jax graph once
 //! to `artifacts/hlo/*.hlo.txt` and records shapes + positional argument
-//! contracts in `artifacts/manifest.json`. This module:
+//! contracts in `artifacts/manifest.json`. At serve time the engine talks
+//! to a [`Runtime`], which dispatches to one of two backends:
 //!
-//! * parses the manifest ([`artifacts::Manifest`]);
-//! * owns the PJRT CPU client and a lazy compile cache
-//!   ([`Runtime`]) — each graph is compiled at most once per process;
-//! * holds model weights as device-resident [`xla::PjRtBuffer`]s loaded
-//!   from `weights/*.npz` once (weights are graph *inputs*, so artifacts
-//!   stay small and all LookaheadKV variants share shape-compatible
-//!   graphs);
-//! * bridges host tensors ([`crate::util::tensor`]) to literals/buffers
-//!   ([`literal`]).
+//! * [`reference::ReferenceBackend`] (default) — a pure-Rust CPU
+//!   implementation of the three graph contracts over
+//!   [`crate::util::tensor`] types. Runs offline with no artifacts at
+//!   all (weights are synthesized deterministically), so the full
+//!   prefill→evict→decode stack is testable and benchable everywhere.
+//! * [`pjrt::PjrtBackend`] (`pjrt` feature) — parses the manifest, owns
+//!   the PJRT CPU client and a lazy compile cache, and feeds the AOT
+//!   graphs their weights from `weights/*.npz`.
 //!
 //! Python is never involved at runtime; everything here is self-contained
-//! given the artifacts directory.
+//! given the artifacts directory (or nothing, for the reference backend).
 
 pub mod artifacts;
+pub mod backend;
+#[cfg(feature = "pjrt")]
 pub mod literal;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+pub mod reference;
 pub mod runtime;
 
 pub use artifacts::{GraphMeta, Manifest, ModelMeta, VariantMeta};
-pub use runtime::{GraphHandle, Runtime};
+pub use backend::{Backend, DecodeOut, DecodeSeq, GraphStats, Value};
+pub use reference::ReferenceBackend;
+pub use runtime::Runtime;

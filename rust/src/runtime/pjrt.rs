@@ -1,0 +1,213 @@
+//! The PJRT execution backend: lazy graph compilation + cached weights.
+//!
+//! Threading model: one backend lives on the engine thread (PJRT handles
+//! are raw pointers and not `Send`); the scheduler/server communicate with
+//! the engine over channels, vLLM-style. Interior mutability is therefore
+//! plain `RefCell`.
+//!
+//! Compiled only under the `pjrt` cargo feature. The default `xla`
+//! dependency is an API stub (see `rust/vendor/xla`); swap it for a real
+//! binding to execute the AOT HLO-text artifacts.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+use xla::{FromRawBytes, Literal, PjRtClient, PjRtLoadedExecutable};
+
+use super::artifacts::Manifest;
+use super::backend::{Backend, GraphStats, Value};
+use super::literal::{literal_f32, literal_i32, tensor_f32, tensor_i32};
+
+pub struct PjrtBackend {
+    client: PjRtClient,
+    manifest: Manifest,
+    graphs: RefCell<HashMap<String, Rc<PjRtLoadedExecutable>>>,
+    weights: RefCell<HashMap<String, Rc<Vec<Literal>>>>,
+    stats: RefCell<HashMap<String, GraphStats>>,
+}
+
+impl PjrtBackend {
+    pub fn new(artifacts_dir: &Path) -> Result<PjrtBackend> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        log::info!(
+            "pjrt backend up: platform={} graphs={} models={}",
+            client.platform_name(),
+            manifest.graphs.len(),
+            manifest.models.len()
+        );
+        Ok(PjrtBackend {
+            client,
+            manifest,
+            graphs: RefCell::new(HashMap::new()),
+            weights: RefCell::new(HashMap::new()),
+            stats: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Compile (once) and return the executable for a graph key.
+    fn graph(&self, key: &str) -> Result<Rc<PjRtLoadedExecutable>> {
+        if let Some(exe) = self.graphs.borrow().get(key) {
+            return Ok(Rc::clone(exe));
+        }
+        let meta = self.manifest.graph(key)?;
+        let path = self.manifest.path(&meta.file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compiling {key}"))?;
+        let dt = t0.elapsed().as_secs_f64() * 1e3;
+        self.stats.borrow_mut().entry(key.to_string()).or_default().compile_ms += dt;
+        log::info!("compiled {key} in {dt:.0} ms");
+        let exe = Rc::new(exe);
+        self.graphs.borrow_mut().insert(key.to_string(), Rc::clone(&exe));
+        Ok(exe)
+    }
+
+    /// Load (once) a weights npz in the canonical order of `param_names`.
+    fn load_npz_ordered(&self, rel: &str, names: &[String]) -> Result<Rc<Vec<Literal>>> {
+        if let Some(w) = self.weights.borrow().get(rel) {
+            return Ok(Rc::clone(w));
+        }
+        let path = self.manifest.path(rel);
+        let pairs = Literal::read_npz(&path, &()).with_context(|| format!("reading {path:?}"))?;
+        let mut by_name: HashMap<String, Literal> = pairs.into_iter().collect();
+        let mut ordered = Vec::with_capacity(names.len());
+        for n in names {
+            let lit = by_name
+                .remove(n)
+                .with_context(|| format!("weights file {rel} missing tensor {n:?}"))?;
+            ordered.push(lit);
+        }
+        let rc = Rc::new(ordered);
+        self.weights.borrow_mut().insert(rel.to_string(), Rc::clone(&rc));
+        Ok(rc)
+    }
+
+    fn model_weights(&self, model: &str) -> Result<Rc<Vec<Literal>>> {
+        let m = self.manifest.model(model)?;
+        let (file, names) = (m.weights_file.clone(), m.param_names.clone());
+        self.load_npz_ordered(&file, &names)
+    }
+
+    fn variant_weights(&self, model: &str, variant: &str) -> Result<Rc<Vec<Literal>>> {
+        let v = self.manifest.variant(model, variant)?;
+        let (file, names) = (v.weights_file.clone(), v.param_names.clone());
+        self.load_npz_ordered(&file, &names)
+    }
+
+    /// Execute a graph: positional args are
+    /// `[model weights..] [variant weights..]? [runtime inputs..]`.
+    /// Returns the flattened output literals in manifest order.
+    fn execute_literals(
+        &self,
+        key: &str,
+        variant: Option<(&str, &str)>,
+        inputs: &[Literal],
+    ) -> Result<Vec<Literal>> {
+        let exe = self.graph(key)?;
+        let meta = self.manifest.graph(key)?.clone();
+        let weights = self.model_weights(&meta.model)?;
+        let vweights = match variant {
+            Some((m, v)) => Some(self.variant_weights(m, v)?),
+            None => {
+                anyhow::ensure!(meta.n_lkv_weight_args == 0, "graph {key} needs a variant");
+                None
+            }
+        };
+        let mut args: Vec<&Literal> = Vec::with_capacity(
+            weights.len() + vweights.as_ref().map_or(0, |v| v.len()) + inputs.len(),
+        );
+        args.extend(weights.iter());
+        if let Some(v) = &vweights {
+            anyhow::ensure!(
+                v.len() == meta.n_lkv_weight_args,
+                "graph {key}: variant weight count {} != {}",
+                v.len(),
+                meta.n_lkv_weight_args
+            );
+            args.extend(v.iter());
+        }
+        args.extend(inputs.iter());
+
+        let t0 = Instant::now();
+        let out =
+            exe.execute::<&Literal>(&args).with_context(|| format!("executing {key}"))?;
+        let exec_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let t1 = Instant::now();
+        let tuple = out[0][0].to_literal_sync().context("fetching result")?;
+        let flat = tuple.to_tuple().context("untupling result")?;
+        let transfer_ms = t1.elapsed().as_secs_f64() * 1e3;
+        anyhow::ensure!(
+            flat.len() == meta.outputs.len(),
+            "graph {key}: {} outputs, manifest says {}",
+            flat.len(),
+            meta.outputs.len()
+        );
+        let mut stats = self.stats.borrow_mut();
+        let e = stats.entry(key.to_string()).or_default();
+        e.calls += 1;
+        e.exec_ms += exec_ms;
+        e.transfer_ms += transfer_ms;
+        Ok(flat)
+    }
+}
+
+fn value_to_literal(v: &Value) -> Result<Literal> {
+    match v {
+        Value::F32(t) => literal_f32(t),
+        Value::I32(t) if t.shape.is_empty() => Ok(Literal::scalar(t.data[0])),
+        Value::I32(t) => literal_i32(t),
+    }
+}
+
+#[allow(unreachable_patterns)] // the stub ElementType has only F32/S32
+fn literal_to_value(lit: &Literal) -> Result<Value> {
+    match lit.ty().context("output element type")? {
+        xla::ElementType::F32 => Ok(Value::F32(tensor_f32(lit)?)),
+        xla::ElementType::S32 => Ok(Value::I32(tensor_i32(lit)?)),
+        other => anyhow::bail!("unsupported output element type {other:?}"),
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn execute(
+        &self,
+        key: &str,
+        variant: Option<(&str, &str)>,
+        inputs: &[Value],
+    ) -> Result<Vec<Value>> {
+        let lits: Vec<Literal> =
+            inputs.iter().map(value_to_literal).collect::<Result<Vec<_>>>()?;
+        let out = self.execute_literals(key, variant, &lits)?;
+        out.iter().map(literal_to_value).collect()
+    }
+
+    fn prepare(&self, key: &str) -> Result<()> {
+        self.graph(key).map(|_| ())
+    }
+
+    fn stats(&self) -> Vec<(String, GraphStats)> {
+        let mut v: Vec<(String, GraphStats)> =
+            self.stats.borrow().iter().map(|(k, s)| (k.clone(), s.clone())).collect();
+        v.sort_by(|a, b| b.1.exec_ms.partial_cmp(&a.1.exec_ms).unwrap());
+        v
+    }
+
+    fn reset_stats(&self) {
+        self.stats.borrow_mut().clear();
+    }
+}

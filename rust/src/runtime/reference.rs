@@ -1,0 +1,1090 @@
+//! Pure-Rust CPU reference backend.
+//!
+//! Implements the three AOT graph contracts (`prefill_base`,
+//! `prefill_lkv`, `decode`) directly over [`crate::util::tensor`] types —
+//! the same RMSNorm + RoPE + GQA + SwiGLU forward as
+//! `python/compile/model.py`, including the Algorithm-2 lookahead scoring
+//! and the in-graph decode cache insertion. No XLA, no artifacts: model
+//! weights are synthesized deterministically from the model name, so the
+//! full prefill→evict→decode serving stack (engine, scheduler, server,
+//! benches) runs offline.
+//!
+//! Numerical parity with Python-trained artifacts is the PJRT backend's
+//! job (`goldens/`); this backend's contract is *structural* parity:
+//! identical shapes, masking, normalization and insertion semantics, unit
+//! tested below and exercised end-to-end by `tests/integration.rs`.
+//!
+//! [`ReferenceBackend::decode_batch`] overrides the default per-sequence
+//! round-trip: caches are mutated in place (no serialize/deserialize of
+//! the full K/V tensors every token), fanning out onto scoped threads
+//! when the per-sequence caches are large enough to amortize spawn/join.
+
+#![allow(clippy::needless_range_loop)]
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::artifacts::{Manifest, ModelMeta, VariantMeta};
+use super::backend::{Backend, DecodeOut, DecodeSeq, GraphStats, Value};
+use crate::util::rng::Rng;
+use crate::util::tensor::{TensorF, TensorI};
+
+const NEG_INF: f32 = -1e9;
+const EPS: f32 = 1e-5;
+
+// ---------------------------------------------------------------------------
+// Weights
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy)]
+struct Dims {
+    d: usize,
+    n_layers: usize,
+    n_heads: usize,
+    n_kv: usize,
+    dh: usize,
+    ff: usize,
+    vocab: usize,
+    group: usize,
+    q_dim: usize,
+    kv_dim: usize,
+    theta: f32,
+}
+
+impl Dims {
+    fn of(m: &ModelMeta) -> Dims {
+        Dims {
+            d: m.d_model,
+            n_layers: m.n_layers,
+            n_heads: m.n_heads,
+            n_kv: m.n_kv_heads,
+            dh: m.head_dim,
+            ff: m.ff,
+            vocab: m.vocab,
+            group: m.group(),
+            q_dim: m.q_dim(),
+            kv_dim: m.kv_dim(),
+            theta: m.rope_theta,
+        }
+    }
+}
+
+#[derive(Debug)]
+struct LayerWeights {
+    attn_norm: Vec<f32>, // [d]
+    wq: TensorF,         // [d, q_dim]
+    wk: TensorF,         // [d, kv_dim]
+    wv: TensorF,         // [d, kv_dim]
+    wo: TensorF,         // [q_dim, d]
+    mlp_norm: Vec<f32>,  // [d]
+    wgate: TensorF,      // [d, ff]
+    wup: TensorF,        // [d, ff]
+    wdown: TensorF,      // [ff, d]
+}
+
+#[derive(Debug)]
+pub struct ModelWeights {
+    dims: Dims,
+    emb: TensorF, // [vocab, d]
+    layers: Vec<LayerWeights>,
+    final_norm: Vec<f32>, // [d]
+    head: TensorF,        // [d, vocab]
+}
+
+/// He-style init, input-major `[n_in, n_out]` (mirrors `model.init_params`).
+fn dense(rng: &mut Rng, n_in: usize, n_out: usize) -> TensorF {
+    let scale = (n_in as f32).powf(-0.5);
+    let data = (0..n_in * n_out).map(|_| rng.normal() as f32 * scale).collect();
+    TensorF::new(vec![n_in, n_out], data)
+}
+
+/// Deterministic weight seed per model/variant name (FNV-1a).
+fn name_seed(name: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+impl ModelWeights {
+    fn synthesize(meta: &ModelMeta) -> ModelWeights {
+        let dims = Dims::of(meta);
+        let mut rng = Rng::new(name_seed(&meta.name));
+        let emb_data = (0..dims.vocab * dims.d).map(|_| rng.normal() as f32 * 0.02).collect();
+        let emb = TensorF::new(vec![dims.vocab, dims.d], emb_data);
+        let layers = (0..dims.n_layers)
+            .map(|_| LayerWeights {
+                attn_norm: vec![1.0; dims.d],
+                wq: dense(&mut rng, dims.d, dims.q_dim),
+                wk: dense(&mut rng, dims.d, dims.kv_dim),
+                wv: dense(&mut rng, dims.d, dims.kv_dim),
+                wo: dense(&mut rng, dims.q_dim, dims.d),
+                mlp_norm: vec![1.0; dims.d],
+                wgate: dense(&mut rng, dims.d, dims.ff),
+                wup: dense(&mut rng, dims.d, dims.ff),
+                wdown: dense(&mut rng, dims.ff, dims.d),
+            })
+            .collect();
+        ModelWeights {
+            dims,
+            emb,
+            layers,
+            final_norm: vec![1.0; dims.d],
+            head: dense(&mut rng, dims.d, dims.vocab),
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct VariantWeights {
+    /// `[n_lookahead, d]` learned lookahead embeddings.
+    emb: TensorF,
+    /// Per-layer `target -> (A [n_in, r], B [r, n_out])`.
+    lora: Vec<HashMap<String, (TensorF, TensorF)>>,
+    scale: f32,
+}
+
+fn lora_target_dims(dims: &Dims, target: &str) -> Option<(usize, usize)> {
+    Some(match target {
+        "wq" => (dims.d, dims.q_dim),
+        "wk" | "wv" => (dims.d, dims.kv_dim),
+        "wo" => (dims.q_dim, dims.d),
+        "wgate" | "wup" => (dims.d, dims.ff),
+        "wdown" => (dims.ff, dims.d),
+        _ => return None,
+    })
+}
+
+impl VariantWeights {
+    fn synthesize(model: &ModelMeta, vmeta: &VariantMeta) -> VariantWeights {
+        let dims = Dims::of(model);
+        let mut rng = Rng::new(name_seed(&format!("{}/{}", vmeta.model, vmeta.variant)));
+        let n = vmeta.n_lookahead;
+        let emb_data = (0..n * dims.d).map(|_| rng.normal() as f32 * 0.02).collect();
+        let emb = TensorF::new(vec![n, dims.d], emb_data);
+        let mut lora = Vec::with_capacity(dims.n_layers);
+        for _ in 0..dims.n_layers {
+            let mut layer = HashMap::new();
+            for t in &vmeta.lora_targets {
+                let Some((n_in, n_out)) = lora_target_dims(&dims, t) else { continue };
+                let a = dense(&mut rng, n_in, vmeta.lora_rank);
+                // Small non-zero B so the LoRA path is numerically live
+                // (trained artifacts start B at zero; synthetic ones
+                // should actually exercise the delta).
+                let b_data =
+                    (0..vmeta.lora_rank * n_out).map(|_| rng.normal() as f32 * 0.01).collect();
+                let b = TensorF::new(vec![vmeta.lora_rank, n_out], b_data);
+                layer.insert(t.clone(), (a, b));
+            }
+            lora.push(layer);
+        }
+        VariantWeights { emb, lora, scale: vmeta.lora_alpha / vmeta.lora_rank.max(1) as f32 }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Math primitives
+// ---------------------------------------------------------------------------
+
+/// `out[t, n_out] += x[t, n_in] @ w[n_in, n_out]` (row-major, k-inner).
+fn matmul_acc(x: &[f32], t: usize, n_in: usize, w: &[f32], n_out: usize, out: &mut [f32]) {
+    debug_assert_eq!(x.len(), t * n_in);
+    debug_assert_eq!(w.len(), n_in * n_out);
+    debug_assert_eq!(out.len(), t * n_out);
+    for i in 0..t {
+        let xrow = &x[i * n_in..(i + 1) * n_in];
+        let orow = &mut out[i * n_out..(i + 1) * n_out];
+        for (k, &xv) in xrow.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let wrow = &w[k * n_out..(k + 1) * n_out];
+            for (o, &wv) in orow.iter_mut().zip(wrow.iter()) {
+                *o += xv * wv;
+            }
+        }
+    }
+}
+
+/// Dense layer with optional selective LoRA applied to rows `>= row_lo`
+/// (paper Eq. 3: `y = x W + (mask(x) A) B * scale`).
+fn linear(
+    x: &[f32],
+    t: usize,
+    n_in: usize,
+    w: &TensorF,
+    lora: Option<(&TensorF, &TensorF, f32, usize)>,
+    out: &mut Vec<f32>,
+) {
+    let n_out = w.shape[1];
+    out.clear();
+    out.resize(t * n_out, 0.0);
+    matmul_acc(x, t, n_in, &w.data, n_out, out);
+    if let Some((a, b, scale, row_lo)) = lora {
+        let r = a.shape[1];
+        let mut tmp = vec![0.0f32; r];
+        for i in row_lo..t {
+            for v in tmp.iter_mut() {
+                *v = 0.0;
+            }
+            let xrow = &x[i * n_in..(i + 1) * n_in];
+            for (k, &xv) in xrow.iter().enumerate() {
+                if xv == 0.0 {
+                    continue;
+                }
+                let arow = &a.data[k * r..(k + 1) * r];
+                for (tv, &av) in tmp.iter_mut().zip(arow.iter()) {
+                    *tv += xv * av;
+                }
+            }
+            let orow = &mut out[i * n_out..(i + 1) * n_out];
+            for (j, &tv) in tmp.iter().enumerate() {
+                let tv = tv * scale;
+                if tv == 0.0 {
+                    continue;
+                }
+                let brow = &b.data[j * n_out..(j + 1) * n_out];
+                for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
+                    *o += tv * bv;
+                }
+            }
+        }
+    }
+}
+
+fn rmsnorm_into(x: &[f32], t: usize, d: usize, w: &[f32], out: &mut Vec<f32>) {
+    out.clear();
+    out.resize(t * d, 0.0);
+    for i in 0..t {
+        let row = &x[i * d..(i + 1) * d];
+        let ms: f32 = row.iter().map(|v| v * v).sum::<f32>() / d as f32;
+        let inv = 1.0 / (ms + EPS).sqrt();
+        let orow = &mut out[i * d..(i + 1) * d];
+        for j in 0..d {
+            orow[j] = row[j] * inv * w[j];
+        }
+    }
+}
+
+/// In-place RoPE over `[t, n_heads, dh]` rows (half-split convention,
+/// matching `model.apply_rope`).
+fn apply_rope(xs: &mut [f32], t: usize, n_heads: usize, dh: usize, pos: &[f32], theta: f32) {
+    let half = dh / 2;
+    let inv: Vec<f32> = (0..half).map(|i| theta.powf(-(i as f32) / half as f32)).collect();
+    for r in 0..t {
+        for h in 0..n_heads {
+            let base = (r * n_heads + h) * dh;
+            for i in 0..half {
+                let (sin, cos) = (pos[r] * inv[i]).sin_cos();
+                let a = xs[base + i];
+                let b = xs[base + half + i];
+                xs[base + i] = a * cos - b * sin;
+                xs[base + half + i] = b * cos + a * sin;
+            }
+        }
+    }
+}
+
+fn silu(v: f32) -> f32 {
+    v / (1.0 + (-v).exp())
+}
+
+/// LoRA operands for `target` at layer `li`, if the variant trains it.
+fn lora_for<'a>(
+    lora: Option<(&'a VariantWeights, usize)>,
+    li: usize,
+    target: &str,
+) -> Option<(&'a TensorF, &'a TensorF, f32, usize)> {
+    let (vw, row_lo) = lora?;
+    let (a, b) = vw.lora[li].get(target)?;
+    Some((a, b, vw.scale, row_lo))
+}
+
+// ---------------------------------------------------------------------------
+// Core forward (prefill family)
+// ---------------------------------------------------------------------------
+
+struct CoreOut {
+    hidden: Vec<f32>, // [T, d]
+    k: TensorF,       // [L, Hkv, T, dh]
+    v: TensorF,
+}
+
+/// Runs all layers over `x` with per-row RoPE positions and a dense
+/// `[T, T]` attention mask; calls `reducer(layer, probs)` with each
+/// layer's `[H, T, T]` attention probabilities.
+fn core_forward<R: FnMut(usize, &TensorF)>(
+    w: &ModelWeights,
+    mut x: Vec<f32>,
+    t: usize,
+    pos: &[f32],
+    mask: &[bool],
+    lora: Option<(&VariantWeights, usize)>,
+    mut reducer: R,
+) -> CoreOut {
+    let d = w.dims.d;
+    let (nh, nkv, dh, group) = (w.dims.n_heads, w.dims.n_kv, w.dims.dh, w.dims.group);
+    let q_dim = w.dims.q_dim;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut k_out = TensorF::zeros(vec![w.dims.n_layers, nkv, t, dh]);
+    let mut v_out = TensorF::zeros(vec![w.dims.n_layers, nkv, t, dh]);
+    let mut h_norm = Vec::new();
+    let mut q = Vec::new();
+    let mut k = Vec::new();
+    let mut v = Vec::new();
+    let mut attn_out = Vec::new();
+    let mut gate = Vec::new();
+    let mut up = Vec::new();
+    let mut down = Vec::new();
+    for (li, layer) in w.layers.iter().enumerate() {
+        rmsnorm_into(&x, t, d, &layer.attn_norm, &mut h_norm);
+        linear(&h_norm, t, d, &layer.wq, lora_for(lora, li, "wq"), &mut q);
+        linear(&h_norm, t, d, &layer.wk, lora_for(lora, li, "wk"), &mut k);
+        linear(&h_norm, t, d, &layer.wv, lora_for(lora, li, "wv"), &mut v);
+        apply_rope(&mut q, t, nh, dh, pos, w.dims.theta);
+        apply_rope(&mut k, t, nkv, dh, pos, w.dims.theta);
+
+        // attention probabilities [H, T, T]
+        let mut probs = TensorF::zeros(vec![nh, t, t]);
+        let mut attn = vec![0.0f32; t * q_dim];
+        for h in 0..nh {
+            let g = h / group;
+            for i in 0..t {
+                let qrow = &q[(i * nh + h) * dh..(i * nh + h) * dh + dh];
+                let prow = &mut probs.data[(h * t + i) * t..(h * t + i + 1) * t];
+                let mrow = &mask[i * t..(i + 1) * t];
+                let mut maxv = f32::NEG_INFINITY;
+                for j in 0..t {
+                    let krow = &k[(j * nkv + g) * dh..(j * nkv + g) * dh + dh];
+                    let mut s = 0.0f32;
+                    for e in 0..dh {
+                        s += qrow[e] * krow[e];
+                    }
+                    s = s * scale + if mrow[j] { 0.0 } else { NEG_INF };
+                    prow[j] = s;
+                    if s > maxv {
+                        maxv = s;
+                    }
+                }
+                let mut sum = 0.0f32;
+                for p in prow.iter_mut() {
+                    *p = (*p - maxv).exp();
+                    sum += *p;
+                }
+                let norm = 1.0 / sum;
+                let arow = &mut attn[i * q_dim + h * dh..i * q_dim + (h + 1) * dh];
+                for j in 0..t {
+                    prow[j] *= norm;
+                    let p = prow[j];
+                    if p == 0.0 {
+                        continue;
+                    }
+                    let vrow = &v[(j * nkv + g) * dh..(j * nkv + g) * dh + dh];
+                    for e in 0..dh {
+                        arow[e] += p * vrow[e];
+                    }
+                }
+            }
+        }
+        linear(&attn, t, q_dim, &layer.wo, lora_for(lora, li, "wo"), &mut attn_out);
+        for (xv, &av) in x.iter_mut().zip(attn_out.iter()) {
+            *xv += av;
+        }
+
+        rmsnorm_into(&x, t, d, &layer.mlp_norm, &mut h_norm);
+        linear(&h_norm, t, d, &layer.wgate, lora_for(lora, li, "wgate"), &mut gate);
+        linear(&h_norm, t, d, &layer.wup, lora_for(lora, li, "wup"), &mut up);
+        for (gv, &uv) in gate.iter_mut().zip(up.iter()) {
+            *gv = silu(*gv) * uv;
+        }
+        linear(&gate, t, w.dims.ff, &layer.wdown, lora_for(lora, li, "wdown"), &mut down);
+        for (xv, &dv) in x.iter_mut().zip(down.iter()) {
+            *xv += dv;
+        }
+
+        // collect post-RoPE KV as [Hkv, T, dh]
+        for g in 0..nkv {
+            for j in 0..t {
+                let src = &k[(j * nkv + g) * dh..(j * nkv + g) * dh + dh];
+                let off = ((li * nkv + g) * t + j) * dh;
+                k_out.data[off..off + dh].copy_from_slice(src);
+                let src = &v[(j * nkv + g) * dh..(j * nkv + g) * dh + dh];
+                v_out.data[off..off + dh].copy_from_slice(src);
+            }
+        }
+        reducer(li, &probs);
+    }
+    CoreOut { hidden: x, k: k_out, v: v_out }
+}
+
+fn head_logits(w: &ModelWeights, hidden_row: &[f32]) -> Vec<f32> {
+    let d = w.dims.d;
+    let mut normed = Vec::new();
+    rmsnorm_into(hidden_row, 1, d, &w.final_norm, &mut normed);
+    let mut logits = vec![0.0f32; w.dims.vocab];
+    matmul_acc(&normed, 1, d, &w.head.data, w.dims.vocab, &mut logits);
+    logits
+}
+
+fn embed(w: &ModelWeights, tokens: &[i32]) -> Result<Vec<f32>> {
+    let d = w.dims.d;
+    let mut x = vec![0.0f32; tokens.len() * d];
+    for (i, &tok) in tokens.iter().enumerate() {
+        anyhow::ensure!(
+            (0..w.dims.vocab as i32).contains(&tok),
+            "token {tok} out of vocab range 0..{}",
+            w.dims.vocab
+        );
+        let row = w.emb.index(&[tok as usize]);
+        x[i * d..(i + 1) * d].copy_from_slice(row);
+    }
+    Ok(x)
+}
+
+/// `prefill_base`: KV + logits + baseline score tensors
+/// (mirrors `model.prefill`).
+fn prefill_base(
+    w: &ModelWeights,
+    tokens: &TensorI,
+    length: usize,
+    logit_pos: usize,
+    window: usize,
+) -> Result<Vec<Value>> {
+    let s = tokens.data.len();
+    anyhow::ensure!(length >= 1 && length <= s, "length {length} not in 1..={s}");
+    anyhow::ensure!(logit_pos < s, "logit_pos {logit_pos} >= bucket {s}");
+    anyhow::ensure!(window <= s, "window {window} > bucket {s}");
+    let (nh, nl) = (w.dims.n_heads, w.dims.n_layers);
+    let x = embed(w, &tokens.data)?;
+    let pos: Vec<f32> = (0..s).map(|i| i as f32).collect();
+    let mut mask = vec![false; s * s];
+    for i in 0..length {
+        for j in 0..=i {
+            mask[i * s + j] = true;
+        }
+    }
+    let win_start = length.saturating_sub(window).min(s - window);
+    let mut window_scores = TensorF::zeros(vec![nl, nh, window, s]);
+    let mut h2o_scores = TensorF::zeros(vec![nl, nh, s]);
+    let out = core_forward(w, x, s, &pos, &mask, None, |li, probs| {
+        for h in 0..nh {
+            // column means over valid query rows (H2O salience)
+            let acc = &mut h2o_scores.data[(li * nh + h) * s..(li * nh + h + 1) * s];
+            for i in 0..length {
+                let prow = probs.index(&[h, i]);
+                for j in 0..s {
+                    acc[j] += prow[j];
+                }
+            }
+            let denom = 1.0 / length.max(1) as f32;
+            for a in acc.iter_mut() {
+                *a *= denom;
+            }
+            // suffix-window rows (zeroed above the last valid row)
+            for r in 0..window {
+                let qi = win_start + r;
+                if qi >= length {
+                    break;
+                }
+                let src = probs.index(&[h, qi]);
+                let off = (((li * nh + h) * window) + r) * s;
+                window_scores.data[off..off + s].copy_from_slice(src);
+            }
+        }
+    });
+    let logits = head_logits(w, &out.hidden[logit_pos * w.dims.d..(logit_pos + 1) * w.dims.d]);
+    Ok(vec![
+        Value::F32(out.k),
+        Value::F32(out.v),
+        Value::F32(TensorF::new(vec![w.dims.vocab], logits)),
+        Value::F32(window_scores),
+        Value::F32(h2o_scores),
+    ])
+}
+
+/// `prefill_lkv`: lookahead prefill (mirrors `model.prefill_lkv` /
+/// Algorithm 2): suffix rows are the learned lookahead embeddings, the
+/// exported scores are their mean attention over prompt columns.
+fn prefill_lkv(
+    w: &ModelWeights,
+    vw: &VariantWeights,
+    tokens: &TensorI,
+    length: usize,
+) -> Result<Vec<Value>> {
+    let s = tokens.data.len();
+    let n = vw.emb.shape[0];
+    anyhow::ensure!(length >= 1 && length <= s, "length {length} not in 1..={s}");
+    let (nh, nkv, nl, d, dh) = (
+        w.dims.n_heads,
+        w.dims.n_kv,
+        w.dims.n_layers,
+        w.dims.d,
+        w.dims.dh,
+    );
+    let t = s + n;
+    let mut x = embed(w, &tokens.data)?;
+    x.extend_from_slice(&vw.emb.data);
+    let pos: Vec<f32> = (0..s)
+        .map(|i| i as f32)
+        .chain((0..n).map(|r| (length + r) as f32))
+        .collect();
+    // Algorithm-2 mask: causal, with the padded prompt cols [length, s)
+    // invisible to every row (suffix cols are causally visible).
+    let mut mask = vec![false; t * t];
+    for i in 0..t {
+        for j in 0..=i {
+            if j < length || j >= s {
+                mask[i * t + j] = true;
+            }
+        }
+    }
+    let mut lkv_scores = TensorF::zeros(vec![nl, nh, s]);
+    let out = core_forward(w, x, t, &pos, &mask, Some((vw, s)), |li, probs| {
+        for h in 0..nh {
+            let acc = &mut lkv_scores.data[(li * nh + h) * s..(li * nh + h + 1) * s];
+            for r in 0..n {
+                let prow = probs.index(&[h, s + r]);
+                for j in 0..length {
+                    acc[j] += prow[j];
+                }
+            }
+            let denom = 1.0 / n.max(1) as f32;
+            for a in acc.iter_mut() {
+                *a *= denom;
+            }
+        }
+    });
+    // prompt-row KV only: [L, Hkv, S, dh] slice of the [L, Hkv, T, dh] out
+    let mut k = TensorF::zeros(vec![nl, nkv, s, dh]);
+    let mut v = TensorF::zeros(vec![nl, nkv, s, dh]);
+    for li in 0..nl {
+        for g in 0..nkv {
+            let src = out.k.index(&[li, g]);
+            let dst = (li * nkv + g) * s * dh;
+            k.data[dst..dst + s * dh].copy_from_slice(&src[..s * dh]);
+            let src = out.v.index(&[li, g]);
+            v.data[dst..dst + s * dh].copy_from_slice(&src[..s * dh]);
+        }
+    }
+    let last = length.max(1) - 1;
+    let logits = head_logits(w, &out.hidden[last * d..(last + 1) * d]);
+    Ok(vec![
+        Value::F32(k),
+        Value::F32(v),
+        Value::F32(TensorF::new(vec![w.dims.vocab], logits)),
+        Value::F32(lkv_scores),
+    ])
+}
+
+// ---------------------------------------------------------------------------
+// Decode
+// ---------------------------------------------------------------------------
+
+/// One decode step with in-place cache insertion (mirrors
+/// `model.decode_step` + `kernels.decode_attn`).
+fn decode_step_inplace(w: &ModelWeights, seq: &mut DecodeSeq<'_>) -> Result<DecodeOut> {
+    let dims = &w.dims;
+    let (nh, nkv, dh, group, d) = (dims.n_heads, dims.n_kv, dims.dh, dims.group, dims.d);
+    anyhow::ensure!(
+        seq.k.shape.len() == 4 && seq.k.shape == seq.v.shape,
+        "decode caches must be [L, Hkv, C, dh], got {:?}",
+        seq.k.shape
+    );
+    let c = seq.k.shape[2];
+    anyhow::ensure!(
+        seq.k.shape[0] == dims.n_layers && seq.k.shape[1] == nkv && seq.k.shape[3] == dh,
+        "decode cache shape {:?} does not match model [L={}, Hkv={}, ., dh={}]",
+        seq.k.shape,
+        dims.n_layers,
+        nkv,
+        dh
+    );
+    anyhow::ensure!(seq.lens.len() == dims.n_layers, "cache_lens must have one entry per layer");
+    let scale = 1.0 / (dh as f32).sqrt();
+    let pos_arr = [seq.pos as f32];
+    let mut x = embed(w, &[seq.token])?;
+    let mut probs = TensorF::zeros(vec![dims.n_layers, nh, c]);
+    let mut h_norm = Vec::new();
+    let mut q = Vec::new();
+    let mut k_new = Vec::new();
+    let mut v_new = Vec::new();
+    let mut attn_out = Vec::new();
+    let mut gate = Vec::new();
+    let mut up = Vec::new();
+    let mut down = Vec::new();
+    for (li, layer) in w.layers.iter().enumerate() {
+        let slot = seq.lens[li];
+        anyhow::ensure!(slot < c, "cache overflow at layer {li}: {slot} >= cap {c}");
+        rmsnorm_into(&x, 1, d, &layer.attn_norm, &mut h_norm);
+        linear(&h_norm, 1, d, &layer.wq, None, &mut q);
+        linear(&h_norm, 1, d, &layer.wk, None, &mut k_new);
+        linear(&h_norm, 1, d, &layer.wv, None, &mut v_new);
+        apply_rope(&mut q, 1, nh, dh, &pos_arr, dims.theta);
+        apply_rope(&mut k_new, 1, nkv, dh, &pos_arr, dims.theta);
+        // in-graph cache insertion at slot `lens[l]`
+        for g in 0..nkv {
+            let off = ((li * nkv + g) * c + slot) * dh;
+            seq.k.data[off..off + dh].copy_from_slice(&k_new[g * dh..(g + 1) * dh]);
+            seq.v.data[off..off + dh].copy_from_slice(&v_new[g * dh..(g + 1) * dh]);
+        }
+        let n_live = slot + 1;
+        let mut attn = vec![0.0f32; dims.q_dim];
+        for h in 0..nh {
+            let g = h / group;
+            let qrow = &q[h * dh..(h + 1) * dh];
+            let kbase = (li * nkv + g) * c * dh;
+            let prow = &mut probs.data[(li * nh + h) * c..(li * nh + h + 1) * c];
+            let mut maxv = f32::NEG_INFINITY;
+            for j in 0..n_live {
+                let krow = &seq.k.data[kbase + j * dh..kbase + (j + 1) * dh];
+                let mut sc = 0.0f32;
+                for e in 0..dh {
+                    sc += qrow[e] * krow[e];
+                }
+                sc *= scale;
+                prow[j] = sc;
+                if sc > maxv {
+                    maxv = sc;
+                }
+            }
+            let mut sum = 0.0f32;
+            for p in prow.iter_mut().take(n_live) {
+                *p = (*p - maxv).exp();
+                sum += *p;
+            }
+            let norm = 1.0 / sum;
+            let arow = &mut attn[h * dh..(h + 1) * dh];
+            for j in 0..n_live {
+                prow[j] *= norm;
+                let p = prow[j];
+                let vrow = &seq.v.data[kbase + j * dh..kbase + (j + 1) * dh];
+                for e in 0..dh {
+                    arow[e] += p * vrow[e];
+                }
+            }
+        }
+        linear(&attn, 1, dims.q_dim, &layer.wo, None, &mut attn_out);
+        for (xv, &av) in x.iter_mut().zip(attn_out.iter()) {
+            *xv += av;
+        }
+        rmsnorm_into(&x, 1, d, &layer.mlp_norm, &mut h_norm);
+        linear(&h_norm, 1, d, &layer.wgate, None, &mut gate);
+        linear(&h_norm, 1, d, &layer.wup, None, &mut up);
+        for (gv, &uv) in gate.iter_mut().zip(up.iter()) {
+            *gv = silu(*gv) * uv;
+        }
+        linear(&gate, 1, dims.ff, &layer.wdown, None, &mut down);
+        for (xv, &dv) in x.iter_mut().zip(down.iter()) {
+            *xv += dv;
+        }
+    }
+    Ok(DecodeOut { logits: head_logits(w, &x), probs })
+}
+
+// ---------------------------------------------------------------------------
+// Backend
+// ---------------------------------------------------------------------------
+
+pub struct ReferenceBackend {
+    manifest: Manifest,
+    models: RefCell<HashMap<String, Rc<ModelWeights>>>,
+    variants: RefCell<HashMap<String, Rc<VariantWeights>>>,
+    stats: RefCell<HashMap<String, GraphStats>>,
+}
+
+impl ReferenceBackend {
+    /// Load the manifest from `artifacts_dir` when present, else fall
+    /// back to the built-in synthetic manifest (`Manifest::synthetic`).
+    pub fn new(artifacts_dir: &Path) -> Result<ReferenceBackend> {
+        let manifest = if artifacts_dir.join("manifest.json").exists() {
+            Manifest::load(artifacts_dir)?
+        } else {
+            Manifest::synthetic()
+        };
+        log::info!(
+            "reference backend up: graphs={} models={}",
+            manifest.graphs.len(),
+            manifest.models.len()
+        );
+        Ok(ReferenceBackend {
+            manifest,
+            models: RefCell::new(HashMap::new()),
+            variants: RefCell::new(HashMap::new()),
+            stats: RefCell::new(HashMap::new()),
+        })
+    }
+
+    fn model_weights(&self, name: &str) -> Result<Rc<ModelWeights>> {
+        if let Some(w) = self.models.borrow().get(name) {
+            return Ok(Rc::clone(w));
+        }
+        let meta = self.manifest.model(name)?;
+        let t0 = Instant::now();
+        let w = Rc::new(ModelWeights::synthesize(meta));
+        let dt = t0.elapsed().as_secs_f64() * 1e3;
+        self.stats
+            .borrow_mut()
+            .entry(format!("{name}/weights"))
+            .or_default()
+            .compile_ms += dt;
+        self.models.borrow_mut().insert(name.to_string(), Rc::clone(&w));
+        Ok(w)
+    }
+
+    fn variant_weights(&self, model: &str, variant: &str) -> Result<Rc<VariantWeights>> {
+        let key = format!("{model}/{variant}");
+        if let Some(w) = self.variants.borrow().get(&key) {
+            return Ok(Rc::clone(w));
+        }
+        let mmeta = self.manifest.model(model)?;
+        let vmeta = self.manifest.variant(model, variant)?;
+        let w = Rc::new(VariantWeights::synthesize(mmeta, vmeta));
+        self.variants.borrow_mut().insert(key, Rc::clone(&w));
+        Ok(w)
+    }
+
+    fn note_exec(&self, key: &str, calls: u64, t0: Instant) {
+        let mut stats = self.stats.borrow_mut();
+        let e = stats.entry(key.to_string()).or_default();
+        e.calls += calls;
+        e.exec_ms += t0.elapsed().as_secs_f64() * 1e3;
+    }
+}
+
+impl Backend for ReferenceBackend {
+    fn name(&self) -> &'static str {
+        "reference"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn execute(
+        &self,
+        key: &str,
+        variant: Option<(&str, &str)>,
+        inputs: &[Value],
+    ) -> Result<Vec<Value>> {
+        let meta = self.manifest.graph(key)?.clone();
+        anyhow::ensure!(
+            inputs.len() == meta.inputs.len(),
+            "graph {key}: expected {} inputs, got {}",
+            meta.inputs.len(),
+            inputs.len()
+        );
+        let w = self.model_weights(&meta.model)?;
+        let t0 = Instant::now();
+        let out = match meta.kind.as_str() {
+            "prefill_base" => {
+                let tokens = inputs[0].as_i32()?;
+                let length = inputs[1].as_scalar_i32()? as usize;
+                let logit_pos = inputs[2].as_scalar_i32()? as usize;
+                let window = meta.window.unwrap_or(self.manifest.obs_window);
+                prefill_base(&w, tokens, length, logit_pos, window)
+            }
+            "prefill_lkv" => {
+                let (m, v) = variant.with_context(|| format!("graph {key} needs a variant"))?;
+                let vmeta = self.manifest.variant(m, v)?;
+                anyhow::ensure!(
+                    Some(&vmeta.graph_suffix) == meta.suffix.as_ref(),
+                    "variant {m}/{v} (suffix {}) does not run on graph {key}",
+                    vmeta.graph_suffix
+                );
+                let vw = self.variant_weights(m, v)?;
+                let tokens = inputs[0].as_i32()?;
+                let length = inputs[1].as_scalar_i32()? as usize;
+                prefill_lkv(&w, &vw, tokens, length)
+            }
+            "decode" => {
+                anyhow::ensure!(variant.is_none(), "decode graphs take no variant");
+                let token = inputs[0].as_scalar_i32()?;
+                let pos = inputs[1].as_scalar_i32()? as usize;
+                let mut k = inputs[2].as_f32()?.clone();
+                let mut v = inputs[3].as_f32()?.clone();
+                let lens: Vec<usize> =
+                    inputs[4].as_i32()?.data.iter().map(|&x| x as usize).collect();
+                let mut seq = DecodeSeq { token, pos, k: &mut k, v: &mut v, lens: &lens };
+                let out = decode_step_inplace(&w, &mut seq)?;
+                let vocab = w.dims.vocab;
+                Ok(vec![
+                    Value::F32(TensorF::new(vec![vocab], out.logits)),
+                    Value::F32(k),
+                    Value::F32(v),
+                    Value::F32(out.probs),
+                ])
+            }
+            other => anyhow::bail!("graph {key}: unknown kind {other:?}"),
+        }
+        .with_context(|| format!("executing {key} (reference)"))?;
+        anyhow::ensure!(
+            out.len() == meta.outputs.len(),
+            "graph {key}: {} outputs, manifest says {}",
+            out.len(),
+            meta.outputs.len()
+        );
+        self.note_exec(key, 1, t0);
+        Ok(out)
+    }
+
+    fn prepare(&self, key: &str) -> Result<()> {
+        let meta = self.manifest.graph(key)?.clone();
+        self.model_weights(&meta.model)?;
+        Ok(())
+    }
+
+    /// In-place batched decode: no cache serialization round-trips.
+    /// Sequences fan out onto scoped threads only when each one carries
+    /// enough work to amortize spawn/join (large caches); small models
+    /// decode faster sequentially — still in place, still one call.
+    fn decode_batch(&self, model: &str, seqs: &mut [DecodeSeq<'_>]) -> Result<Vec<DecodeOut>> {
+        const PAR_MIN_CACHE_ELEMS: usize = 64 * 1024;
+        let w = self.model_weights(model)?;
+        let t0 = Instant::now();
+        let n = seqs.len();
+        let parallel =
+            n > 1 && seqs.iter().map(|s| s.k.data.len()).min().unwrap_or(0) >= PAR_MIN_CACHE_ELEMS;
+        let results: Vec<Result<DecodeOut>> = if parallel {
+            let wref: &ModelWeights = &w;
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = seqs
+                    .iter_mut()
+                    .map(|seq| scope.spawn(move || decode_step_inplace(wref, seq)))
+                    .collect();
+                handles.into_iter().map(|h| h.join().expect("decode worker panicked")).collect()
+            })
+        } else {
+            seqs.iter_mut().map(|seq| decode_step_inplace(&w, seq)).collect()
+        };
+        let mut outs = Vec::with_capacity(n);
+        for r in results {
+            outs.push(r?);
+        }
+        self.note_exec(&format!("{model}/decode_batch"), n as u64, t0);
+        Ok(outs)
+    }
+
+    fn stats(&self) -> Vec<(String, GraphStats)> {
+        let mut v: Vec<(String, GraphStats)> =
+            self.stats.borrow().iter().map(|(k, s)| (k.clone(), s.clone())).collect();
+        v.sort_by(|a, b| b.1.exec_ms.partial_cmp(&a.1.exec_ms).unwrap());
+        v
+    }
+
+    fn reset_stats(&self) {
+        self.stats.borrow_mut().clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn backend() -> ReferenceBackend {
+        ReferenceBackend {
+            manifest: Manifest::synthetic(),
+            models: RefCell::new(HashMap::new()),
+            variants: RefCell::new(HashMap::new()),
+            stats: RefCell::new(HashMap::new()),
+        }
+    }
+
+    fn prefill_inputs(tokens: &[i32], s: usize, logit_pos: usize) -> Vec<Value> {
+        let mut padded = tokens.to_vec();
+        padded.resize(s, 256); // PAD
+        vec![
+            Value::vec_i32(padded),
+            Value::scalar_i32(tokens.len() as i32),
+            Value::scalar_i32(logit_pos as i32),
+        ]
+    }
+
+    #[test]
+    fn weights_are_deterministic_per_model() {
+        let b = backend();
+        let w1 = b.model_weights("lkv-tiny").unwrap();
+        let w2 = ModelWeights::synthesize(b.manifest.model("lkv-tiny").unwrap());
+        assert_eq!(w1.emb.data, w2.emb.data);
+        assert_eq!(w1.layers[2].wq.data, w2.layers[2].wq.data);
+        let draft = b.model_weights("lkv-draft").unwrap();
+        assert_ne!(w1.emb.data[..8], draft.emb.data[..8]);
+    }
+
+    #[test]
+    fn prefill_base_contract() {
+        let b = backend();
+        let tokens: Vec<i32> = (0..40).map(|i| 65 + (i % 26)).collect();
+        let len = tokens.len();
+        let out = b
+            .execute("lkv-tiny/prefill_base_s128", None, &prefill_inputs(&tokens, 128, len - 1))
+            .unwrap();
+        assert_eq!(out.len(), 5);
+        let k = out[0].as_f32().unwrap();
+        assert_eq!(k.shape, vec![4, 2, 128, 16]);
+        let logits = out[2].as_f32().unwrap();
+        assert_eq!(logits.shape, vec![320]);
+        assert!(logits.data.iter().all(|x| x.is_finite()));
+        // window rows: each valid row is a probability distribution over
+        // its causal prefix (win_start = 0 for a 40-token prompt, W = 32)
+        let win = out[3].as_f32().unwrap();
+        assert_eq!(win.shape, vec![4, 4, 32, 128]);
+        for r in [0usize, 10, 31] {
+            let row = win.index(&[0, 0, r]);
+            let sum: f32 = row.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-4, "row {r} mass {sum}");
+            assert!(row[len..].iter().all(|&x| x == 0.0), "row {r} leaks past prompt");
+        }
+        // h2o columns: mean over rows of probability rows sums to 1
+        let h2o = out[4].as_f32().unwrap();
+        let mass: f32 = h2o.index(&[0, 0]).iter().sum();
+        assert!((mass - 1.0).abs() < 1e-3, "h2o mass {mass}");
+    }
+
+    #[test]
+    fn prefill_lkv_contract() {
+        let b = backend();
+        let tokens: Vec<i32> = (0..30).map(|i| 97 + (i % 13)).collect();
+        let len = tokens.len();
+        let inputs = vec![
+            Value::vec_i32({
+                let mut p = tokens.clone();
+                p.resize(128, 256);
+                p
+            }),
+            Value::scalar_i32(len as i32),
+        ];
+        let out = b
+            .execute("lkv-tiny/prefill_lkv_s128_n8_all", Some(("lkv-tiny", "main")), &inputs)
+            .unwrap();
+        assert_eq!(out.len(), 4);
+        assert_eq!(out[0].as_f32().unwrap().shape, vec![4, 2, 128, 16]);
+        let scores = out[3].as_f32().unwrap();
+        assert_eq!(scores.shape, vec![4, 4, 128]);
+        let row = scores.index(&[0, 0]);
+        assert!(row[len..].iter().all(|&x| x == 0.0), "scores leak past length");
+        let mass: f32 = row[..len].iter().sum();
+        // suffix rows also attend to each other, so prompt mass < 1
+        assert!(mass > 0.05 && mass <= 1.0, "prompt mass {mass}");
+        assert!(row.iter().all(|&x| x >= 0.0 && x.is_finite()));
+    }
+
+    #[test]
+    fn lkv_needs_matching_variant() {
+        let b = backend();
+        let inputs =
+            vec![Value::vec_i32(vec![65; 128]), Value::scalar_i32(4)];
+        assert!(b.execute("lkv-tiny/prefill_lkv_s128_n8_all", None, &inputs).is_err());
+        assert!(b
+            .execute("lkv-tiny/prefill_lkv_s128_n8_all", Some(("lkv-tiny", "nope")), &inputs)
+            .is_err());
+    }
+
+    #[test]
+    fn decode_inserts_and_normalizes() {
+        let b = backend();
+        let w = b.model_weights("lkv-tiny").unwrap();
+        let mut k = TensorF::zeros(vec![4, 2, 64, 16]);
+        let mut v = TensorF::zeros(vec![4, 2, 64, 16]);
+        // seed three live slots with pseudo-random values
+        let mut rng = Rng::new(9);
+        for x in k.data.iter_mut().chain(v.data.iter_mut()) {
+            *x = rng.normal() as f32 * 0.3;
+        }
+        let lens = vec![3usize; 4];
+        let mut seq = DecodeSeq { token: 65, pos: 3, k: &mut k, v: &mut v, lens: &lens };
+        let out = decode_step_inplace(&w, &mut seq).unwrap();
+        assert_eq!(out.logits.len(), 320);
+        assert!(out.logits.iter().all(|x| x.is_finite()));
+        assert_eq!(out.probs.shape, vec![4, 4, 64]);
+        for li in 0..4 {
+            for h in 0..4 {
+                let row = out.probs.index(&[li, h]);
+                let sum: f32 = row[..4].iter().sum();
+                assert!((sum - 1.0).abs() < 1e-4, "probs mass {sum}");
+                assert!(row[4..].iter().all(|&x| x == 0.0));
+            }
+        }
+    }
+
+    #[test]
+    fn batched_decode_matches_per_sequence_execute() {
+        let b = backend();
+        let cap = 64usize;
+        let mut rng = Rng::new(4);
+        let mut k0 = TensorF::zeros(vec![4, 2, cap, 16]);
+        let mut v0 = TensorF::zeros(vec![4, 2, cap, 16]);
+        for x in k0.data.iter_mut().chain(v0.data.iter_mut()) {
+            *x = rng.normal() as f32 * 0.2;
+        }
+        let lens = vec![5usize; 4];
+        // per-sequence execute round-trip
+        let inputs = vec![
+            Value::scalar_i32(70),
+            Value::scalar_i32(5),
+            Value::F32(k0.clone()),
+            Value::F32(v0.clone()),
+            Value::vec_i32(lens.iter().map(|&x| x as i32).collect()),
+        ];
+        let out = b.execute("lkv-tiny/decode_c64", None, &inputs).unwrap();
+        let logits_a = out[0].as_f32().unwrap().data.clone();
+        let k_a = out[1].as_f32().unwrap().clone();
+        // batched in-place path on two identical sequences
+        let (mut k1, mut v1) = (k0.clone(), v0.clone());
+        let (mut k2, mut v2) = (k0.clone(), v0.clone());
+        let mut seqs = vec![
+            DecodeSeq { token: 70, pos: 5, k: &mut k1, v: &mut v1, lens: &lens },
+            DecodeSeq { token: 70, pos: 5, k: &mut k2, v: &mut v2, lens: &lens },
+        ];
+        let outs = b.decode_batch("lkv-tiny", &mut seqs).unwrap();
+        drop(seqs);
+        assert_eq!(outs.len(), 2);
+        assert_eq!(outs[0].logits, logits_a);
+        assert_eq!(outs[1].logits, logits_a);
+        assert_eq!(k1.data, k_a.data);
+        assert_eq!(k2.data, k_a.data);
+    }
+
+    #[test]
+    fn batched_decode_threads_on_large_caches() {
+        // cap 1152 ⇒ 4*2*1152*16 = 147456 elems ≥ PAR_MIN_CACHE_ELEMS,
+        // so this exercises the scoped-thread fan-out path.
+        let b = backend();
+        let cap = 1152usize;
+        let mut rng = Rng::new(11);
+        let mut k0 = TensorF::zeros(vec![4, 2, cap, 16]);
+        let v0 = TensorF::zeros(vec![4, 2, cap, 16]);
+        for x in k0.data.iter_mut().take(4096) {
+            *x = rng.normal() as f32 * 0.2;
+        }
+        let lens = vec![10usize; 4];
+        let (mut k1, mut v1) = (k0.clone(), v0.clone());
+        let (mut k2, mut v2) = (k0.clone(), v0.clone());
+        let mut seqs = vec![
+            DecodeSeq { token: 80, pos: 10, k: &mut k1, v: &mut v1, lens: &lens },
+            DecodeSeq { token: 80, pos: 10, k: &mut k2, v: &mut v2, lens: &lens },
+        ];
+        let outs = b.decode_batch("lkv-tiny", &mut seqs).unwrap();
+        drop(seqs);
+        assert_eq!(outs[0].logits, outs[1].logits);
+        assert_eq!(k1.data, k2.data);
+        assert!(outs[0].logits.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn decode_overflow_is_an_error() {
+        let b = backend();
+        let w = b.model_weights("lkv-tiny").unwrap();
+        let mut k = TensorF::zeros(vec![4, 2, 8, 16]);
+        let mut v = TensorF::zeros(vec![4, 2, 8, 16]);
+        let lens = vec![8usize; 4];
+        let mut seq = DecodeSeq { token: 65, pos: 8, k: &mut k, v: &mut v, lens: &lens };
+        assert!(decode_step_inplace(&w, &mut seq).is_err());
+    }
+}

@@ -1,188 +1,106 @@
-//! The PJRT execution engine: lazy graph compilation + cached weights.
+//! [`Runtime`]: backend selection and shared execution dispatch.
 //!
-//! Threading model: one `Runtime` lives on the engine thread (PJRT handles
-//! are raw pointers and not `Send`); the scheduler/server communicate with
-//! the engine over channels, vLLM-style. Interior mutability is therefore
-//! plain `RefCell`.
+//! The engine owns one `Runtime`, which owns one boxed [`Backend`]:
+//!
+//! * default build → [`super::reference::ReferenceBackend`] (pure Rust,
+//!   offline, synthesizes weights when no artifacts exist);
+//! * `--features pjrt` + artifacts present → the PJRT backend.
+//!
+//! `LKV_BACKEND=reference|pjrt|auto` overrides the automatic choice.
 
-use std::cell::RefCell;
-use std::collections::HashMap;
 use std::path::Path;
-use std::rc::Rc;
-use std::time::Instant;
 
-use anyhow::{Context, Result};
-use xla::{FromRawBytes, Literal, PjRtClient, PjRtLoadedExecutable};
+use anyhow::Result;
 
 use super::artifacts::Manifest;
-
-/// Per-graph execution statistics (drives the §Perf profiling tables).
-#[derive(Debug, Default, Clone)]
-pub struct GraphStats {
-    pub calls: u64,
-    pub compile_ms: f64,
-    pub exec_ms: f64,
-    pub transfer_ms: f64,
-}
-
-pub struct GraphHandle {
-    pub key: String,
-    exe: Rc<PjRtLoadedExecutable>,
-}
+use super::backend::{Backend, DecodeOut, DecodeSeq, GraphStats, Value};
+use super::reference::ReferenceBackend;
 
 pub struct Runtime {
-    client: PjRtClient,
-    manifest: Manifest,
-    graphs: RefCell<HashMap<String, Rc<PjRtLoadedExecutable>>>,
-    weights: RefCell<HashMap<String, Rc<Vec<Literal>>>>,
-    stats: RefCell<HashMap<String, GraphStats>>,
+    backend: Box<dyn Backend>,
 }
 
 impl Runtime {
+    /// Pick a backend for `artifacts_dir`, honoring `LKV_BACKEND`.
     pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
-        let manifest = Manifest::load(artifacts_dir)?;
-        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
-        log::info!(
-            "runtime up: platform={} graphs={} models={}",
-            client.platform_name(),
-            manifest.graphs.len(),
-            manifest.models.len()
-        );
-        Ok(Runtime {
-            client,
-            manifest,
-            graphs: RefCell::new(HashMap::new()),
-            weights: RefCell::new(HashMap::new()),
-            stats: RefCell::new(HashMap::new()),
-        })
+        let choice = std::env::var("LKV_BACKEND").unwrap_or_else(|_| "auto".to_string());
+        match choice.as_str() {
+            "reference" => Runtime::reference(artifacts_dir),
+            "pjrt" => Runtime::pjrt(artifacts_dir),
+            "auto" | "" => {
+                #[cfg(feature = "pjrt")]
+                if artifacts_dir.join("manifest.json").exists() {
+                    return Runtime::pjrt(artifacts_dir);
+                }
+                Runtime::reference(artifacts_dir)
+            }
+            other => anyhow::bail!("unknown LKV_BACKEND {other:?} (reference|pjrt|auto)"),
+        }
+    }
+
+    /// Force the pure-Rust reference backend.
+    pub fn reference(artifacts_dir: &Path) -> Result<Runtime> {
+        Ok(Runtime { backend: Box::new(ReferenceBackend::new(artifacts_dir)?) })
+    }
+
+    /// Force the PJRT backend (errors when not compiled in).
+    #[cfg(feature = "pjrt")]
+    pub fn pjrt(artifacts_dir: &Path) -> Result<Runtime> {
+        Ok(Runtime { backend: Box::new(super::pjrt::PjrtBackend::new(artifacts_dir)?) })
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    pub fn pjrt(_artifacts_dir: &Path) -> Result<Runtime> {
+        anyhow::bail!("this build has no PJRT support (rebuild with --features pjrt)")
+    }
+
+    /// Wrap an externally constructed backend (tests, custom engines).
+    pub fn with_backend(backend: Box<dyn Backend>) -> Runtime {
+        Runtime { backend }
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
     }
 
     pub fn manifest(&self) -> &Manifest {
-        &self.manifest
+        self.backend.manifest()
     }
 
-    /// Compile (once) and return the executable for a graph key.
-    pub fn graph(&self, key: &str) -> Result<GraphHandle> {
-        if let Some(exe) = self.graphs.borrow().get(key) {
-            return Ok(GraphHandle { key: key.to_string(), exe: Rc::clone(exe) });
-        }
-        let meta = self.manifest.graph(key)?;
-        let path = self.manifest.path(&meta.file);
-        let t0 = Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .with_context(|| format!("parsing HLO text {path:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp).with_context(|| format!("compiling {key}"))?;
-        let dt = t0.elapsed().as_secs_f64() * 1e3;
-        self.stats.borrow_mut().entry(key.to_string()).or_default().compile_ms += dt;
-        log::info!("compiled {key} in {dt:.0} ms");
-        let exe = Rc::new(exe);
-        self.graphs.borrow_mut().insert(key.to_string(), Rc::clone(&exe));
-        Ok(GraphHandle { key: key.to_string(), exe })
-    }
-
-    /// Load (once) a weights npz in the canonical order of `param_names`.
-    fn load_npz_ordered(&self, rel: &str, names: &[String]) -> Result<Rc<Vec<Literal>>> {
-        if let Some(w) = self.weights.borrow().get(rel) {
-            return Ok(Rc::clone(w));
-        }
-        let path = self.manifest.path(rel);
-        let pairs = Literal::read_npz(&path, &()).with_context(|| format!("reading {path:?}"))?;
-        let mut by_name: HashMap<String, Literal> = pairs.into_iter().collect();
-        let mut ordered = Vec::with_capacity(names.len());
-        for n in names {
-            let lit = by_name
-                .remove(n)
-                .with_context(|| format!("weights file {rel} missing tensor {n:?}"))?;
-            ordered.push(lit);
-        }
-        let rc = Rc::new(ordered);
-        self.weights.borrow_mut().insert(rel.to_string(), Rc::clone(&rc));
-        Ok(rc)
-    }
-
-    pub fn model_weights(&self, model: &str) -> Result<Rc<Vec<Literal>>> {
-        let m = self.manifest.model(model)?;
-        let (file, names) = (m.weights_file.clone(), m.param_names.clone());
-        self.load_npz_ordered(&file, &names)
-    }
-
-    pub fn variant_weights(&self, model: &str, variant: &str) -> Result<Rc<Vec<Literal>>> {
-        let v = self.manifest.variant(model, variant)?;
-        let (file, names) = (v.weights_file.clone(), v.param_names.clone());
-        self.load_npz_ordered(&file, &names)
-    }
-
-    /// Execute a graph: positional args are
-    /// `[model weights..] [variant weights..]? [runtime inputs..]`.
-    /// Returns the flattened output literals in manifest order.
+    /// Execute a graph by key; validates the runtime-input arity against
+    /// the manifest before dispatching to the backend.
     pub fn execute(
         &self,
         key: &str,
-        variant: Option<(&str, &str)>, // (model, variant) for prefill_lkv graphs
-        inputs: &[Literal],
-    ) -> Result<Vec<Literal>> {
-        let handle = self.graph(key)?;
-        let meta = self.manifest.graph(key)?.clone();
+        variant: Option<(&str, &str)>,
+        inputs: &[Value],
+    ) -> Result<Vec<Value>> {
+        let meta = self.manifest().graph(key)?;
         anyhow::ensure!(
             inputs.len() == meta.inputs.len(),
             "graph {key}: expected {} inputs, got {}",
             meta.inputs.len(),
             inputs.len()
         );
-        let weights = self.model_weights(&meta.model)?;
-        let vweights = match variant {
-            Some((m, v)) => Some(self.variant_weights(m, v)?),
-            None => {
-                anyhow::ensure!(meta.n_lkv_weight_args == 0, "graph {key} needs a variant");
-                None
-            }
-        };
-        let mut args: Vec<&Literal> = Vec::with_capacity(
-            weights.len() + vweights.as_ref().map_or(0, |v| v.len()) + inputs.len(),
-        );
-        args.extend(weights.iter());
-        if let Some(v) = &vweights {
-            anyhow::ensure!(
-                v.len() == meta.n_lkv_weight_args,
-                "graph {key}: variant weight count {} != {}",
-                v.len(),
-                meta.n_lkv_weight_args
-            );
-            args.extend(v.iter());
-        }
-        args.extend(inputs.iter());
-
-        let t0 = Instant::now();
-        let out = handle.exe.execute::<&Literal>(&args).with_context(|| format!("executing {key}"))?;
-        let exec_ms = t0.elapsed().as_secs_f64() * 1e3;
-        let t1 = Instant::now();
-        let tuple = out[0][0].to_literal_sync().context("fetching result")?;
-        let flat = tuple.to_tuple().context("untupling result")?;
-        let transfer_ms = t1.elapsed().as_secs_f64() * 1e3;
-        anyhow::ensure!(
-            flat.len() == meta.outputs.len(),
-            "graph {key}: {} outputs, manifest says {}",
-            flat.len(),
-            meta.outputs.len()
-        );
-        let mut stats = self.stats.borrow_mut();
-        let e = stats.entry(key.to_string()).or_default();
-        e.calls += 1;
-        e.exec_ms += exec_ms;
-        e.transfer_ms += transfer_ms;
-        Ok(flat)
+        self.backend.execute(key, variant, inputs)
     }
 
-    /// Snapshot of per-graph stats (sorted by total exec time, desc).
+    /// Warm a graph (compile / synthesize) without executing it.
+    pub fn prepare(&self, key: &str) -> Result<()> {
+        self.backend.prepare(key)
+    }
+
+    /// Advance a batch of sequences by one decode token in one backend
+    /// call (see [`Backend::decode_batch`]).
+    pub fn decode_batch(&self, model: &str, seqs: &mut [DecodeSeq<'_>]) -> Result<Vec<DecodeOut>> {
+        self.backend.decode_batch(model, seqs)
+    }
+
     pub fn stats(&self) -> Vec<(String, GraphStats)> {
-        let mut v: Vec<(String, GraphStats)> =
-            self.stats.borrow().iter().map(|(k, s)| (k.clone(), s.clone())).collect();
-        v.sort_by(|a, b| b.1.exec_ms.partial_cmp(&a.1.exec_ms).unwrap());
-        v
+        self.backend.stats()
     }
 
     pub fn reset_stats(&self) {
-        self.stats.borrow_mut().clear();
+        self.backend.reset_stats()
     }
 }

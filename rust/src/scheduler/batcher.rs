@@ -1,16 +1,23 @@
 //! Continuous-batching engine loop.
 //!
 //! Iteration-level scheduling in the Orca/vLLM mold, specialized to the
-//! single-stream CPU PJRT backend: each loop iteration either (a) admits
+//! single-stream CPU backends: each loop iteration either (a) admits
 //! and prefills one queued request if the KV pool has room, or (b)
-//! advances every active sequence by one decode token, round-robin.
-//! Prefill is prioritized while the active set is below `max_active`
+//! advances every active sequence by one decode token. Prefill is
+//! prioritized while the active set is below `max_active`
 //! (prefill-priority keeps TTFT low; decode fairness keeps TPOT flat).
+//!
+//! Decode dispatch is batched by default: all active sequences advance
+//! in **one** backend call per iteration (`Engine::decode_step_batch`),
+//! with caches updated in place instead of being
+//! serialized to and from the backend every token. Set
+//! `LoopConfig::batched_decode = false` for the historical per-sequence
+//! round-trip (kept for A/B benchmarking — see `bench_scheduler`).
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::engine::{Engine, GenOptions};
+use crate::engine::Engine;
 use crate::kvcache::{manager::bytes_per_slot, CacheManager, SeqCache};
 use crate::metrics::Metrics;
 use crate::model::sampler::Sampler;
@@ -24,11 +31,19 @@ pub struct LoopConfig {
     /// Global KV pool in token slots (admission control).
     pub kv_pool_slots: usize,
     pub kv_block_slots: usize,
+    /// Advance all active sequences in one backend call per iteration
+    /// (vs per-sequence decode round-trips).
+    pub batched_decode: bool,
 }
 
 impl Default for LoopConfig {
     fn default() -> Self {
-        LoopConfig { max_active: 4, kv_pool_slots: 16 * 1152, kv_block_slots: 64 }
+        LoopConfig {
+            max_active: 4,
+            kv_pool_slots: 16 * 1152,
+            kv_block_slots: 64,
+            batched_decode: true,
+        }
     }
 }
 
@@ -98,38 +113,102 @@ impl EngineLoop {
                 continue;
             }
 
-            // One decode step for every active sequence (round-robin).
+            // One decode step for every active sequence.
             let mut finished = Vec::new();
+            // Sequences whose decode errored: the error Reply has already
+            // been sent, so they are torn down without a completion Reply.
+            let mut failed = Vec::new();
+            let mut stepping: Vec<(usize, &mut ActiveSeq)> = Vec::new();
             for (i, seq) in active.iter_mut().enumerate() {
                 let tok = seq.next_token;
                 if tok == EOS_ID || seq.tokens.len() >= seq.max_new || seq.cache.headroom() == 0 {
                     finished.push(i);
-                    continue;
+                } else {
+                    stepping.push((i, seq));
                 }
-                let t0 = Instant::now();
-                match self.engine.decode_step(&model, &mut seq.cache, tok) {
-                    Ok(step) => {
-                        self.metrics.observe("decode_step_ms", t0.elapsed().as_secs_f64() * 1e3);
-                        seq.next_token = seq.sampler.sample(&step.logits);
-                        seq.tokens.push(seq.next_token);
+            }
+            if !stepping.is_empty() {
+                if self.cfg.batched_decode {
+                    // All sequences in one backend call; caches update
+                    // in place (no per-token cache serialization).
+                    let tokens: Vec<i32> = stepping.iter().map(|(_, s)| s.next_token).collect();
+                    let t0 = Instant::now();
+                    let res = {
+                        let mut caches: Vec<&mut SeqCache> =
+                            stepping.iter_mut().map(|(_, s)| &mut s.cache).collect();
+                        self.engine.decode_step_batch(&model, &mut caches, &tokens)
+                    };
+                    let dt = t0.elapsed().as_secs_f64() * 1e3;
+                    match res {
+                        Ok(steps) => {
+                            self.metrics
+                                .observe("decode_step_ms", dt / stepping.len() as f64);
+                            self.metrics.observe("decode_batch_ms", dt);
+                            for ((_, seq), step) in stepping.iter_mut().zip(steps) {
+                                seq.next_token = seq.sampler.sample(&step.logits);
+                                seq.tokens.push(seq.next_token);
+                            }
+                        }
+                        Err(e) => {
+                            // A batch-level failure fails every stepping
+                            // sequence (per-seq errors surface the same
+                            // way on the per-sequence path).
+                            let err = format!("{e:#}");
+                            for (i, seq) in stepping.iter() {
+                                let _ = seq.reply.send(Reply {
+                                    id: seq.id,
+                                    text: String::new(),
+                                    n_tokens: 0,
+                                    ttft_ms: seq.ttft_ms,
+                                    total_ms: seq.t_start.elapsed().as_secs_f64() * 1e3,
+                                    kept: seq.kept,
+                                    error: Some(err.clone()),
+                                });
+                                failed.push(*i);
+                            }
+                        }
                     }
-                    Err(e) => {
-                        let _ = seq.reply.send(Reply {
-                            id: seq.id,
-                            text: String::new(),
-                            n_tokens: 0,
-                            ttft_ms: seq.ttft_ms,
-                            total_ms: seq.t_start.elapsed().as_secs_f64() * 1e3,
-                            kept: seq.kept,
-                            error: Some(format!("{e:#}")),
-                        });
-                        finished.push(i);
+                } else {
+                    for (i, seq) in stepping.iter_mut() {
+                        let tok = seq.next_token;
+                        let t0 = Instant::now();
+                        match self.engine.decode_step(&model, &mut seq.cache, tok) {
+                            Ok(step) => {
+                                self.metrics
+                                    .observe("decode_step_ms", t0.elapsed().as_secs_f64() * 1e3);
+                                seq.next_token = seq.sampler.sample(&step.logits);
+                                seq.tokens.push(seq.next_token);
+                            }
+                            Err(e) => {
+                                let _ = seq.reply.send(Reply {
+                                    id: seq.id,
+                                    text: String::new(),
+                                    n_tokens: 0,
+                                    ttft_ms: seq.ttft_ms,
+                                    total_ms: seq.t_start.elapsed().as_secs_f64() * 1e3,
+                                    kept: seq.kept,
+                                    error: Some(format!("{e:#}")),
+                                });
+                                failed.push(*i);
+                            }
+                        }
                     }
                 }
             }
-            for i in finished.into_iter().rev() {
+            drop(stepping);
+            let mut done: Vec<(usize, bool)> = finished
+                .into_iter()
+                .map(|i| (i, false))
+                .chain(failed.into_iter().map(|i| (i, true)))
+                .collect();
+            done.sort_unstable();
+            for (i, errored) in done.into_iter().rev() {
                 let seq = active.swap_remove(i);
-                self.complete(seq, &mut mgr);
+                if errored {
+                    self.abort(seq, &mut mgr);
+                } else {
+                    self.complete(seq, &mut mgr);
+                }
             }
         }
     }
@@ -191,6 +270,14 @@ impl EngineLoop {
                 });
             }
         }
+    }
+
+    /// Tear down a sequence whose error Reply was already sent: release
+    /// its KV reservation without emitting a completion Reply or
+    /// counting it as a completion.
+    fn abort(&mut self, seq: ActiveSeq, mgr: &mut CacheManager) {
+        mgr.release(seq.id);
+        self.metrics.incr("decode_errors", 1);
     }
 
     fn complete(&mut self, seq: ActiveSeq, mgr: &mut CacheManager) {

@@ -29,6 +29,28 @@ impl Default for BenchConfig {
     }
 }
 
+/// Smoke mode (`LKV_BENCH_SMOKE=1`): clamp every benchmark to a couple of
+/// iterations so CI can exercise the whole bench surface in seconds while
+/// still producing comparable `BENCH_*.json` artifacts.
+pub fn smoke_mode() -> bool {
+    std::env::var("LKV_BENCH_SMOKE").map(|v| v != "0" && !v.is_empty()).unwrap_or(false)
+}
+
+impl BenchConfig {
+    fn effective(&self) -> BenchConfig {
+        if smoke_mode() {
+            BenchConfig {
+                warmup_iters: self.warmup_iters.min(1),
+                min_iters: self.min_iters.min(2),
+                max_iters: self.max_iters.min(2),
+                max_time: self.max_time.min(Duration::from_secs(2)),
+            }
+        } else {
+            self.clone()
+        }
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct BenchResult {
     pub name: String,
@@ -54,6 +76,7 @@ impl BenchResult {
 }
 
 pub fn run_bench<F: FnMut()>(name: &str, cfg: &BenchConfig, mut f: F) -> BenchResult {
+    let cfg = cfg.effective();
     for _ in 0..cfg.warmup_iters {
         f();
     }
@@ -87,6 +110,18 @@ pub fn record(results: &[BenchResult]) {
         std::fs::OpenOptions::new().create(true).append(true).open("results/bench.jsonl")
     {
         let _ = f.write_all(lines.as_bytes());
+    }
+}
+
+/// Record to the rolling jsonl *and* overwrite
+/// `results/BENCH_<bench>.json` with this run's full result array — the
+/// per-bench artifact CI uploads so the perf trajectory accumulates.
+pub fn record_named(bench: &str, results: &[BenchResult]) {
+    record(results);
+    let arr = Json::Arr(results.iter().map(BenchResult::to_json).collect());
+    let path = format!("results/BENCH_{bench}.json");
+    if std::fs::write(&path, arr.to_string()).is_ok() {
+        println!("wrote {path} ({} benchmarks)", results.len());
     }
 }
 

@@ -1,0 +1,188 @@
+//! API **stub** for an XLA/PJRT Rust binding.
+//!
+//! The offline build environment cannot carry a real XLA binding, but the
+//! `pjrt` cargo feature still has to compile so the PJRT backend stays
+//! honest (type-checked against the exact API surface it needs). Every
+//! entry point that would touch PJRT returns [`XlaError::Unavailable`] at
+//! runtime; to execute real AOT artifacts, point the `xla` path
+//! dependency in `rust/Cargo.toml` at an actual binding with this API.
+
+use std::path::Path;
+
+#[derive(Debug)]
+pub enum XlaError {
+    /// Stub build: no real XLA binding is linked in.
+    Unavailable(&'static str),
+}
+
+impl std::fmt::Display for XlaError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            XlaError::Unavailable(what) => write!(
+                f,
+                "xla stub: {what} requires a real XLA/PJRT binding \
+                 (swap the `xla` path dependency in rust/Cargo.toml)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+pub type Result<T> = std::result::Result<T, XlaError>;
+
+fn unavailable<T>(what: &'static str) -> Result<T> {
+    Err(XlaError::Unavailable(what))
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+/// Maps native scalar types to their XLA element type.
+pub trait ArrayElement {
+    const TY: ElementType;
+}
+
+impl ArrayElement for f32 {
+    const TY: ElementType = ElementType::F32;
+}
+
+impl ArrayElement for i32 {
+    const TY: ElementType = ElementType::S32;
+}
+
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Host-side literal (stub: carries no data).
+#[derive(Debug)]
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    pub fn scalar<T: ArrayElement>(_v: T) -> Literal {
+        Literal { _private: () }
+    }
+
+    pub fn create_from_shape_and_untyped_data(
+        _ty: ElementType,
+        _dims: &[usize],
+        _bytes: &[u8],
+    ) -> Result<Literal> {
+        unavailable("Literal::create_from_shape_and_untyped_data")
+    }
+
+    pub fn to_vec<T: ArrayElement>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        unavailable("Literal::to_tuple")
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        unavailable("Literal::array_shape")
+    }
+
+    pub fn ty(&self) -> Result<ElementType> {
+        unavailable("Literal::ty")
+    }
+
+    pub fn element_count(&self) -> usize {
+        0
+    }
+
+    pub fn copy_raw_to<T: ArrayElement>(&self, _dst: &mut [T]) -> Result<()> {
+        unavailable("Literal::copy_raw_to")
+    }
+}
+
+/// Deserialization entry points (`.npz` weight/golden archives).
+pub trait FromRawBytes: Sized {
+    type Context;
+
+    fn read_npz<P: AsRef<Path>>(path: P, ctx: &Self::Context) -> Result<Vec<(String, Self)>>;
+}
+
+impl FromRawBytes for Literal {
+    type Context = ();
+
+    fn read_npz<P: AsRef<Path>>(_path: P, _ctx: &()) -> Result<Vec<(String, Literal)>> {
+        unavailable("Literal::read_npz")
+    }
+}
+
+#[derive(Debug)]
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<HloModuleProto> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+#[derive(Debug)]
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+#[derive(Debug)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
