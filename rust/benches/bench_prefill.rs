@@ -1,5 +1,8 @@
 //! TTFT per method × context length (empirical side of paper Table 3/15
 //! and Fig. 3b): prefill + eviction + compaction until first logits.
+//! Also compares chunked vs monolithic prefill cost at chunk sizes
+//! {64, 128, 256} — same total work and bit-identical outputs, bounded
+//! per-iteration stall (see `bench_scheduler` for the stall itself).
 
 mod common;
 
@@ -33,5 +36,33 @@ fn main() {
             results.push(r);
         }
     }
+
+    // Chunked vs monolithic prefill, end to end (all chunks + finalize +
+    // score assembly). The chunked totals should track the monolithic
+    // cost closely; what chunking buys is the bounded per-chunk stall.
+    if engine.rt.supports_chunked_prefill() {
+        let suite = workload::ruler_suite(13, 1, 512);
+        let prompt = encode(&suite.samples[0].prompt(), true, false);
+        for method in [Method::SnapKV, Method::LookaheadKV { variant: "main".into() }] {
+            let name = format!("prefill/{}/ctx512/monolithic", method.name());
+            let r = run_bench(&name, &cfg, || {
+                let out = engine.prefill_for_method(&prompt, &method).expect("prefill");
+                std::hint::black_box(out.bundle.len);
+            });
+            results.push(r);
+            for chunk in [64usize, 128, 256] {
+                let name = format!("prefill/{}/ctx512/chunk{}", method.name(), chunk);
+                let r = run_bench(&name, &cfg, || {
+                    let mut job =
+                        engine.chunked_prefill_begin(&prompt, &method, chunk).expect("begin");
+                    while !job.step(&engine).expect("chunk step") {}
+                    let out = job.into_output().expect("output");
+                    std::hint::black_box(out.bundle.len);
+                });
+                results.push(r);
+            }
+        }
+    }
+
     record_named("prefill", &results);
 }

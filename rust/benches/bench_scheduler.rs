@@ -2,7 +2,10 @@
 //! plus the full continuous-batching `EngineLoop` under synthetic load,
 //! comparing batched decode dispatch (one backend call advances every
 //! active sequence, caches updated in place) against the per-sequence
-//! round-trip path.
+//! round-trip path — and chunked vs monolithic prefill under a mixed
+//! long-prompt + decode workload, where the `stall/mixed/*` rows carry
+//! the per-iteration decode-stall distribution (`max_ms` is the headline:
+//! how long active decodes froze for prefill work in the worst iteration).
 
 use std::sync::mpsc::channel;
 use std::sync::Arc;
@@ -14,7 +17,7 @@ use lookaheadkv::metrics::Metrics;
 use lookaheadkv::model::tokenizer::encode;
 use lookaheadkv::runtime::artifacts::default_artifacts_dir;
 use lookaheadkv::scheduler::{EngineLoop, LoopConfig, Request, RequestQueue};
-use lookaheadkv::util::bench::{record_named, run_bench, BenchConfig};
+use lookaheadkv::util::bench::{record_named, run_bench, BenchConfig, BenchResult};
 use lookaheadkv::workload;
 
 fn main() {
@@ -69,7 +72,93 @@ fn main() {
         println!("engine loop: per-seq {ps:.2} ms vs batched {ba:.2} ms ({:.2}x)", ps / ba);
     }
 
+    // Mixed long-prompt + decode workload: three short prompts decode
+    // while one long prompt is admitted mid-stream. With monolithic
+    // prefill every active decode stalls for the entire long prefill;
+    // chunked prefill bounds the stall to one chunk per iteration.
+    // `stall/mixed/*` rows are the decode_stall_ms histograms (max_ms =
+    // worst single-iteration stall).
+    let short_suite = workload::ruler_suite(7, 2, 96);
+    let n_short = short_suite.samples.len();
+    let shorts: Vec<Vec<i32>> = (0..3)
+        .map(|i| encode(&short_suite.samples[i % n_short].prompt(), true, false))
+        .collect();
+    let long_suite = workload::ruler_suite(9, 1, 640);
+    let long_prompt = encode(&long_suite.samples[0].prompt(), true, false);
+    for chunk in [0usize, 64, 128, 256] {
+        let tag = if chunk == 0 { "monolithic".to_string() } else { format!("chunk{chunk}") };
+        let metrics = Arc::new(Metrics::new());
+        let r = run_bench(&format!("loop/mixed/{tag}"), &loop_cfg, || {
+            run_mixed_once(&shorts, &long_prompt, chunk, &metrics);
+        });
+        results.push(r);
+        if let Some(stall) = metrics.latency_summary("decode_stall_ms") {
+            println!(
+                "  decode stall [{tag}]: max {:.2} ms, p50 {:.2} ms over {} iterations",
+                stall.max, stall.p50, stall.n
+            );
+            results.push(BenchResult {
+                name: format!("stall/mixed/{tag}"),
+                iters: stall.n,
+                ms: stall,
+            });
+        }
+    }
+    let stall_max = |tag: &str| {
+        results.iter().find(|r| r.name == format!("stall/mixed/{tag}")).map(|r| r.ms.max)
+    };
+    if let (Some(mono), Some(ch)) = (stall_max("monolithic"), stall_max("chunk64")) {
+        println!(
+            "max decode stall: monolithic {mono:.2} ms vs chunk64 {ch:.2} ms ({:.1}x)",
+            mono / ch
+        );
+    }
+
     record_named("scheduler", &results);
+}
+
+/// One mixed-workload loop run: shorts submitted first (they activate and
+/// decode), the long prompt last (it prefills while they decode).
+fn run_mixed_once(shorts: &[Vec<i32>], long_prompt: &[i32], chunk: usize, metrics: &Arc<Metrics>) {
+    let engine = Engine::new(&default_artifacts_dir(), EngineConfig::new("lkv-tiny"))
+        .expect("engine (reference backend needs no artifacts)");
+    let queue = Arc::new(RequestQueue::new(64));
+    let mut receivers = Vec::new();
+    for (i, p) in shorts.iter().enumerate() {
+        let (tx, rx) = channel();
+        receivers.push(rx);
+        queue
+            .submit(Request {
+                id: i as u64,
+                prompt: p.clone(),
+                method: Method::SnapKV,
+                budget: 24,
+                max_new: 48,
+                temperature: 0.0,
+                reply: tx,
+            })
+            .expect("submit short");
+    }
+    let (tx, rx) = channel();
+    receivers.push(rx);
+    queue
+        .submit(Request {
+            id: 99,
+            prompt: long_prompt.to_vec(),
+            method: Method::SnapKV,
+            budget: 48,
+            max_new: 8,
+            temperature: 0.0,
+            reply: tx,
+        })
+        .expect("submit long");
+    queue.close();
+    let cfg = LoopConfig { max_active: 4, prefill_chunk_tokens: chunk, ..LoopConfig::default() };
+    EngineLoop::new(engine, cfg, Arc::clone(&queue), Arc::clone(metrics)).run();
+    for rx in receivers {
+        let reply = rx.recv().expect("reply");
+        assert!(reply.error.is_none(), "loop error: {:?}", reply.error);
+    }
 }
 
 fn run_loop_once(prompts: &[Vec<i32>], batched: bool) {

@@ -40,8 +40,13 @@ fn main() -> anyhow::Result<()> {
     let (q3, m3) = (Arc::clone(&queue), Arc::clone(&metrics));
     let addr2 = addr.clone();
     std::thread::spawn(move || {
-        serve(ServerConfig { addr: addr2, workers: concurrency + 2, queue_cap: 128 }, q3, m3)
-            .expect("server");
+        let cfg = ServerConfig {
+            addr: addr2,
+            workers: concurrency + 2,
+            queue_cap: 128,
+            ..Default::default()
+        };
+        serve(cfg, q3, m3).expect("server");
     });
     for _ in 0..100 {
         std::thread::sleep(std::time::Duration::from_millis(100));

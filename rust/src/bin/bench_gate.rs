@@ -1,0 +1,140 @@
+//! `bench_gate` — the CI bench-regression gate.
+//!
+//! Compares this run's `results/BENCH_*.json` artifacts against the
+//! committed `baselines/BENCH_*.json` copies and exits non-zero when any
+//! tracked benchmark regressed more than `--threshold` (default 25%)
+//! beyond the run's median slowdown (the median-ratio calibration makes
+//! the committed baselines meaningful across machines of different
+//! absolute speed — see `util::bench::gate_compare`).
+//!
+//!   cargo run --release --bin bench_gate -- \
+//!       --baseline-dir rust/baselines --results-dir rust/results \
+//!       --threshold 0.25 --out rust/results/bench_gate_report.json
+//!
+//! `--inject <substring> --inject-factor 2.0` multiplies the matching
+//! current entries before comparing — the self-test knob used to verify
+//! the gate actually fails on a regression:
+//!
+//!   cargo run --release --bin bench_gate -- ... --inject select/SnapKV
+//!
+//! Refreshing baselines after an intentional perf change:
+//!   LKV_BENCH_SMOKE=1 cargo bench --bench bench_eviction (…prefill, …scheduler)
+//!   cp rust/results/BENCH_*.json rust/baselines/
+
+use std::path::PathBuf;
+
+use lookaheadkv::util::bench::{gate_compare, load_bench_entries, GateReport};
+use lookaheadkv::util::cli::Args;
+use lookaheadkv::util::json::Json;
+
+fn main() {
+    let args = Args::from_env(&["help"]);
+    if args.has("help") {
+        println!(
+            "bench_gate --baseline-dir <dir> --results-dir <dir> [--threshold 0.25]\n\
+             \x20          [--floor-ms 0.5] [--out report.json]\n\
+             \x20          [--inject <name-substring> --inject-factor 2.0]"
+        );
+        return;
+    }
+    let baseline_dir = PathBuf::from(args.get_or("baseline-dir", "baselines"));
+    let results_dir = PathBuf::from(args.get_or("results-dir", "results"));
+    let threshold = args.f64("threshold", 0.25);
+    let floor_ms = args.f64("floor-ms", 0.5);
+    let inject = args.get("inject").map(str::to_string);
+    let inject_factor = args.f64("inject-factor", 2.0);
+    let out = args.get_or("out", "").to_string();
+
+    let mut baseline_files: Vec<String> = match std::fs::read_dir(&baseline_dir) {
+        Ok(rd) => rd
+            .filter_map(|e| e.ok())
+            .filter_map(|e| e.file_name().into_string().ok())
+            .filter(|n| n.starts_with("BENCH_") && n.ends_with(".json"))
+            .collect(),
+        Err(e) => {
+            eprintln!("bench_gate: cannot read {}: {e}", baseline_dir.display());
+            std::process::exit(2);
+        }
+    };
+    baseline_files.sort();
+    if baseline_files.is_empty() {
+        eprintln!("bench_gate: no BENCH_*.json baselines in {}", baseline_dir.display());
+        std::process::exit(2);
+    }
+
+    let mut failed = false;
+    let mut report = Json::obj();
+    for file in &baseline_files {
+        let base = match load_bench_entries(&baseline_dir.join(file)) {
+            Ok(b) => b,
+            Err(e) => {
+                eprintln!("bench_gate: {e:#}");
+                failed = true;
+                continue;
+            }
+        };
+        let cur_path = results_dir.join(file);
+        let mut cur = match load_bench_entries(&cur_path) {
+            Ok(c) => c,
+            Err(e) => {
+                // a tracked bench that did not run at all is a failure,
+                // not a silent pass
+                eprintln!("bench_gate: {file}: current run missing ({e:#})");
+                failed = true;
+                continue;
+            }
+        };
+        if let Some(pat) = &inject {
+            for (name, ms) in cur.iter_mut() {
+                if name.contains(pat.as_str()) {
+                    println!("bench_gate: injecting {inject_factor}x into {name}");
+                    *ms *= inject_factor;
+                }
+            }
+        }
+        let rep = gate_compare(&base, &cur, threshold, floor_ms);
+        print_report(file, &rep);
+        failed |= rep.failed();
+        report.set(file, rep.to_json());
+    }
+
+    if !out.is_empty() {
+        if let Some(dir) = PathBuf::from(&out).parent() {
+            let _ = std::fs::create_dir_all(dir);
+        }
+        match std::fs::write(&out, report.to_string()) {
+            Ok(()) => println!("bench_gate: wrote {out}"),
+            Err(e) => eprintln!("bench_gate: writing {out}: {e}"),
+        }
+    }
+    if failed {
+        eprintln!("bench_gate: FAILED (regression beyond {:.0}%)", threshold * 100.0);
+        std::process::exit(1);
+    }
+    println!("bench_gate: OK ({} baseline files)", baseline_files.len());
+}
+
+fn print_report(file: &str, rep: &GateReport) {
+    println!(
+        "== {file}: {} tracked, calibration {:.3}x, threshold {:.0}% ==",
+        rep.rows.len(),
+        rep.calibration,
+        rep.threshold * 100.0
+    );
+    for r in &rep.rows {
+        let status = if r.regressed {
+            "REGRESSED"
+        } else if r.below_floor {
+            "ok (sub-floor)"
+        } else {
+            "ok"
+        };
+        println!(
+            "  {:<48} base {:>9.3} ms  cur {:>9.3} ms  norm {:>5.2}x  {status}",
+            r.name, r.base_ms, r.cur_ms, r.norm_ratio
+        );
+    }
+    for m in &rep.missing {
+        println!("  {m:<48} WARNING: missing from current run");
+    }
+}

@@ -1,0 +1,321 @@
+//! Incremental (chunked) prefill: the engine-level state machine over the
+//! backend's [`ChunkState`] contract.
+//!
+//! A [`ChunkedPrefill`] job runs one request's prefill in bounded slices
+//! so the engine loop can interleave decode steps between chunks (mixed
+//! prefill/decode batching) instead of stalling every active sequence for
+//! the whole prompt. Eviction is *deferred to the final chunk*: selection
+//! only ever sees full-prompt scores, and the finished
+//! [`PrefillOutput`] is **bit-identical** to
+//! [`Engine::prefill_for_method`] for every policy — including the
+//! multi-pass pipelines:
+//!
+//! * base family (full/random/streaming/snapkv/pyramidkv/h2o/tova): one
+//!   chunked base pass;
+//! * `lookaheadkv`: one chunked lookahead pass; the Algorithm-2 suffix
+//!   scoring runs once at finalize against the full accumulated KV;
+//! * `lkv+suffix`: chunked lookahead pass, then a chunked base pass for
+//!   the suffix-window scores;
+//! * `laq`/`speckv`: chunked pre-draft base pass, a draft step (a handful
+//!   of decode-sized calls), then a chunked rescore pass over
+//!   `[prompt; draft]`.
+
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::prefill::{PrefillBreakdown, PrefillOutput};
+use super::Engine;
+use crate::eviction::{Method, ScoreBundle};
+use crate::kvcache::SeqCache;
+use crate::runtime::ChunkState;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum PassKind {
+    /// Base prefill over the prompt (non-draft, non-lookahead methods).
+    Base,
+    /// Lookahead prefill over the prompt (`lkv`, first pass of
+    /// `lkv+suffix`).
+    Lkv,
+    /// Base pass over the prompt for the suffix-window scores
+    /// (`lkv+suffix` second pass).
+    SuffixBase,
+    /// Base pass over the prompt before drafting (LAQ on the target
+    /// model, SpecKV on the draft model).
+    PreDraft,
+    /// Base pass over `[prompt; draft]` (LAQ/SpecKV rescore).
+    Rescore,
+}
+
+enum Stage {
+    Pass { kind: PassKind, state: ChunkState },
+    /// Run the LAQ/SpecKV draft loop, then start the rescore pass.
+    Draft,
+    Done,
+}
+
+/// One request's in-flight incremental prefill.
+pub struct ChunkedPrefill {
+    method: Method,
+    prompt: Vec<i32>,
+    chunk: usize,
+    bd: PrefillBreakdown,
+    stage: Stage,
+    /// Finished lookahead pass, kept while the `lkv+suffix` base pass
+    /// runs (its k/v/logits/scores are the ones served).
+    lkv_pass: Option<ChunkState>,
+    /// Finished pre-draft pass, consumed by the draft stage.
+    pre_draft: Option<ChunkState>,
+    /// `[prompt; draft]` fed to the rescore pass.
+    concat: Vec<i32>,
+    output: Option<PrefillOutput>,
+}
+
+impl Engine {
+    /// Begin an incremental prefill for `method`; each [`ChunkedPrefill::step`]
+    /// advances it by at most `chunk` prompt tokens. Requires a backend
+    /// with chunked-prefill support (check
+    /// [`crate::runtime::Runtime::supports_chunked_prefill`]).
+    pub fn chunked_prefill_begin(
+        &self,
+        tokens: &[i32],
+        method: &Method,
+        chunk: usize,
+    ) -> Result<ChunkedPrefill> {
+        anyhow::ensure!(chunk >= 1, "prefill chunk size must be >= 1");
+        anyhow::ensure!(!tokens.is_empty(), "empty prompt");
+        anyhow::ensure!(
+            self.rt.supports_chunked_prefill(),
+            "backend {} does not support chunked prefill",
+            self.rt.backend_name()
+        );
+        let m = self.rt.manifest();
+        let model = self.cfg.model.clone();
+        let len = tokens.len();
+        let (kind, state) = if let Some(variant) = method.lkv_variant() {
+            (PassKind::Lkv, ChunkState::new(m, &model, Some(variant), len, len - 1)?)
+        } else if method.needs_draft() {
+            let pass1_model = match method {
+                Method::SpecKV => {
+                    self.cfg.draft_model.clone().context("SpecKV requires a draft model")?
+                }
+                _ => model,
+            };
+            (PassKind::PreDraft, ChunkState::new(m, &pass1_model, None, len, len - 1)?)
+        } else {
+            (PassKind::Base, ChunkState::new(m, &model, None, len, len - 1)?)
+        };
+        Ok(ChunkedPrefill {
+            method: method.clone(),
+            prompt: tokens.to_vec(),
+            chunk,
+            bd: PrefillBreakdown::default(),
+            stage: Stage::Pass { kind, state },
+            lkv_pass: None,
+            pre_draft: None,
+            concat: Vec::new(),
+            output: None,
+        })
+    }
+}
+
+impl ChunkedPrefill {
+    /// Advance by one bounded slice of work: one prompt chunk of the
+    /// current pass (plus its finalize when it is the last chunk), or the
+    /// whole draft loop for LAQ/SpecKV. Returns true once the job is
+    /// complete and [`ChunkedPrefill::into_output`] may be called.
+    pub fn step(&mut self, engine: &Engine) -> Result<bool> {
+        if matches!(self.stage, Stage::Done) {
+            return Ok(true);
+        }
+        if matches!(self.stage, Stage::Draft) {
+            let t0 = Instant::now();
+            self.run_draft(engine)?;
+            self.bd.draft_ms += ms(t0);
+            return Ok(false);
+        }
+        let t0 = Instant::now();
+        let (kind, finished) = {
+            let Stage::Pass { kind, state } = &mut self.stage else { unreachable!() };
+            let kind = *kind;
+            let toks: &[i32] = if kind == PassKind::Rescore {
+                &self.concat
+            } else {
+                &self.prompt
+            };
+            let lo = state.done;
+            let hi = (lo + self.chunk).min(state.len);
+            engine.rt.prefill_chunk(state, &toks[lo..hi])?;
+            let finished = state.done == state.len;
+            if finished {
+                engine.rt.prefill_finalize(state)?;
+            }
+            (kind, finished)
+        };
+        let dt = ms(t0);
+        // Mirror the monolithic breakdown attribution: SpecKV's pass-1
+        // (draft model) counts as draft time; lkv+suffix's base pass and
+        // the LAQ/SpecKV rescore count as rescore time.
+        match (kind, &self.method) {
+            (PassKind::PreDraft, Method::SpecKV) => self.bd.draft_ms += dt,
+            (PassKind::Base | PassKind::Lkv | PassKind::PreDraft, _) => self.bd.forward_ms += dt,
+            (PassKind::SuffixBase | PassKind::Rescore, _) => self.bd.rescore_ms += dt,
+        }
+        if finished {
+            self.advance(engine)?;
+        }
+        Ok(matches!(self.stage, Stage::Done))
+    }
+
+    pub fn is_done(&self) -> bool {
+        matches!(self.stage, Stage::Done)
+    }
+
+    /// Prompt tokens not yet prefilled in the *current* pass.
+    pub fn remaining(&self) -> usize {
+        match &self.stage {
+            Stage::Pass { state, .. } => state.remaining(),
+            Stage::Draft => self.prompt.len(), // rescore pass still ahead
+            Stage::Done => 0,
+        }
+    }
+
+    /// The finished prefill artifacts (identical to
+    /// [`Engine::prefill_for_method`] for the same prompt and method).
+    pub fn into_output(mut self) -> Result<PrefillOutput> {
+        let mut out = self.output.take().context("chunked prefill is not finished")?;
+        out.breakdown = self.bd.clone();
+        Ok(out)
+    }
+
+    /// Transition after a pass finishes.
+    fn advance(&mut self, engine: &Engine) -> Result<()> {
+        let stage = std::mem::replace(&mut self.stage, Stage::Done);
+        let Stage::Pass { kind, state } = stage else {
+            anyhow::bail!("advance without a finished pass")
+        };
+        match kind {
+            PassKind::Base => {
+                self.output = Some(base_output(state)?);
+            }
+            PassKind::Lkv => {
+                if matches!(self.method, Method::LkvSuffix { .. }) {
+                    let m = engine.rt.manifest();
+                    let next = ChunkState::new(
+                        m,
+                        &engine.cfg.model,
+                        None,
+                        self.prompt.len(),
+                        self.prompt.len() - 1,
+                    )?;
+                    self.lkv_pass = Some(state);
+                    self.stage = Stage::Pass { kind: PassKind::SuffixBase, state: next };
+                } else {
+                    self.output = Some(base_output(state)?);
+                }
+            }
+            PassKind::SuffixBase => {
+                let lkv = self.lkv_pass.take().context("suffix pass without a lookahead pass")?;
+                let logits = lkv.logits.context("lookahead pass captured no logits")?;
+                // Table-7 combination bundle, exactly as the monolithic
+                // path builds it: lookahead scores + suffix-window rows
+                // (no h2o component).
+                let mut bundle = ScoreBundle::empty(self.prompt.len());
+                bundle.lkv_scores = lkv.bundle.lkv_scores;
+                bundle.window_scores = state.bundle.window_scores;
+                bundle.win_start = state.bundle.win_start;
+                bundle.win_rows = state.bundle.win_rows;
+                self.output = Some(PrefillOutput {
+                    k: lkv.k,
+                    v: lkv.v,
+                    logits,
+                    bundle,
+                    bucket: lkv.bucket,
+                    breakdown: PrefillBreakdown::default(),
+                });
+            }
+            PassKind::PreDraft => {
+                self.pre_draft = Some(state);
+                self.stage = Stage::Draft;
+            }
+            PassKind::Rescore => {
+                let nd = self.concat.len() - self.prompt.len();
+                let logits = state.logits.context("rescore pass captured no logits")?;
+                let mut bundle = ScoreBundle::empty(self.prompt.len());
+                bundle.win_start = state.bundle.win_start;
+                bundle.win_rows = state.bundle.win_rows;
+                bundle.w_use_override = Some(nd); // aggregate exactly the draft rows
+                bundle.window_scores = state.bundle.window_scores;
+                bundle.h2o_scores = state.bundle.h2o_scores;
+                self.output = Some(PrefillOutput {
+                    k: state.k,
+                    v: state.v,
+                    logits,
+                    bundle,
+                    bucket: state.bucket,
+                    breakdown: PrefillBreakdown::default(),
+                });
+            }
+        }
+        Ok(())
+    }
+
+    /// LAQ/SpecKV draft generation between the pre-draft and rescore
+    /// passes — the same cheap-eviction + greedy-decode pipeline as the
+    /// monolithic path, so the drafted tokens (and therefore the rescore
+    /// pass) match it exactly.
+    fn run_draft(&mut self, engine: &Engine) -> Result<()> {
+        let mut state = self.pre_draft.take().context("draft stage without a pre-draft pass")?;
+        let logits = state.logits.take().context("pre-draft pass captured no logits")?;
+        let nd = engine.cfg.draft_tokens;
+        let m = engine.rt.manifest();
+        let len = self.prompt.len();
+        let draft_toks = match &self.method {
+            Method::Laq => {
+                let model = engine.cfg.model.clone();
+                let mut bundle = ScoreBundle::empty(len);
+                bundle.window_scores = state.bundle.window_scores.take();
+                bundle.win_start = state.bundle.win_start;
+                bundle.win_rows = state.bundle.win_rows;
+                let sel =
+                    Method::SnapKV.select(&engine.cfg.eviction, engine.n_layers(&model), &bundle);
+                let cap = m.decode_cap(&model, sel.max_kept() + nd)?;
+                let mut cache =
+                    SeqCache::from_selection(&state.k, &state.v, &sel.per_layer, len, cap);
+                engine.greedy_draft(&model, &mut cache, &logits, nd)?
+            }
+            Method::SpecKV => {
+                let draft =
+                    engine.cfg.draft_model.clone().context("SpecKV requires a draft model")?;
+                let cap = m.decode_cap(&draft, len + nd)?;
+                let full: Vec<Vec<usize>> = vec![(0..len).collect(); engine.n_layers(&draft)];
+                let mut cache = SeqCache::from_selection(&state.k, &state.v, &full, len, cap);
+                engine.greedy_draft(&draft, &mut cache, &logits, nd)?
+            }
+            other => anyhow::bail!("method {} has no draft stage", other.name()),
+        };
+        self.concat = self.prompt.clone();
+        self.concat.extend_from_slice(&draft_toks);
+        let rescore = ChunkState::new(m, &engine.cfg.model, None, self.concat.len(), len - 1)?;
+        self.stage = Stage::Pass { kind: PassKind::Rescore, state: rescore };
+        Ok(())
+    }
+}
+
+/// Single-pass output: the state's KV, logits and bundle are the final
+/// artifacts (base family and plain lookahead methods).
+fn base_output(state: ChunkState) -> Result<PrefillOutput> {
+    let logits = state.logits.context("chunked prefill captured no logits")?;
+    Ok(PrefillOutput {
+        k: state.k,
+        v: state.v,
+        logits,
+        bundle: state.bundle,
+        bucket: state.bucket,
+        breakdown: PrefillBreakdown::default(),
+    })
+}
+
+fn ms(t: Instant) -> f64 {
+    t.elapsed().as_secs_f64() * 1e3
+}

@@ -124,7 +124,8 @@ impl Engine {
 
     /// Greedily decode `n` draft tokens with `model` starting from
     /// `logits`, using the given cache. Returns the draft token ids.
-    fn greedy_draft(
+    /// Shared with the chunked-prefill job (`engine::chunked`).
+    pub(crate) fn greedy_draft(
         &self,
         model: &str,
         cache: &mut SeqCache,

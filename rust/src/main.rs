@@ -50,7 +50,8 @@ fn print_help() {
          usage: lkv <command> [options]\n\
          \n\
          commands:\n\
-         \x20 serve     --addr 127.0.0.1:8080 --model lkv-tiny --max-active 4 [--per-seq-decode]\n\
+         \x20 serve     --addr 127.0.0.1:8080 --model lkv-tiny --max-active 4 \\\n\
+         \x20           [--prefill-chunk 256] [--per-seq-decode]\n\
          \x20 generate  --prompt <text> --method lookaheadkv --budget 64 --max-new 32\n\
          \x20 eval      --suite ruler|longbench|qasper|longproc|mtbench --methods snapkv,lookaheadkv \\\n\
          \x20           --budgets 16,32 --ctx 256 --n 8\n\
@@ -85,6 +86,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let loop_cfg = LoopConfig {
         max_active: args.usize("max-active", 4),
         batched_decode: !args.has("per-seq-decode"),
+        // 0 = monolithic prefill; 64-256 interleaves decode steps between
+        // prompt chunks (see README "Chunked prefill").
+        prefill_chunk_tokens: args.usize_clamped("prefill-chunk", 0, 0, 1024),
         ..LoopConfig::default()
     };
     let q2 = Arc::clone(&queue);
@@ -102,6 +106,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         addr: args.get_or("addr", "127.0.0.1:8080").to_string(),
         workers: args.usize("workers", 4),
         queue_cap: args.usize("queue-cap", 64),
+        read_timeout_ms: args.usize("read-timeout-ms", 10_000) as u64,
+        write_timeout_ms: args.usize("write-timeout-ms", 10_000) as u64,
     };
     serve(server_cfg, queue, metrics)?;
     let _ = engine_thread.join();

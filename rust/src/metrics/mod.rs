@@ -5,7 +5,7 @@ use std::collections::BTreeMap;
 use std::sync::Mutex;
 
 use crate::util::json::Json;
-use crate::util::stats::summarize;
+use crate::util::stats::{summarize, Summary};
 
 /// Log-scaled latency histogram (microsecond buckets, powers of √2).
 #[derive(Debug, Default)]
@@ -69,6 +69,14 @@ impl Metrics {
 
     pub fn counter(&self, name: &str) -> u64 {
         self.inner.lock().unwrap().counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// Summary stats of one latency histogram (None when never observed).
+    /// Lets benches/tests read e.g. the max per-iteration decode stall
+    /// without round-tripping through JSON.
+    pub fn latency_summary(&self, name: &str) -> Option<Summary> {
+        let inner = self.inner.lock().unwrap();
+        inner.histograms.get(name).map(|h| summarize(&h.samples))
     }
 
     pub fn to_json(&self) -> Json {

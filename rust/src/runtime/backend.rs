@@ -21,6 +21,7 @@
 use anyhow::Result;
 
 use super::artifacts::Manifest;
+use crate::eviction::ScoreBundle;
 use crate::util::tensor::{TensorF, TensorI};
 
 /// Per-graph execution statistics (drives the §Perf profiling tables).
@@ -95,6 +96,101 @@ impl Value {
     }
 }
 
+/// Host-side state of one *chunked* prefill pass: prompt KV accumulated
+/// so far plus a running [`ScoreBundle`] accumulator. Built by
+/// [`ChunkState::new`], advanced by [`Backend::prefill_chunk`] one token
+/// chunk at a time (each chunk attends to the KV of every earlier chunk
+/// through a chunk-offset causal mask), and sealed by
+/// [`Backend::prefill_finalize`], which normalizes the running scores and
+/// — for lookahead states — runs the Algorithm-2 suffix pass over the
+/// full prompt KV.
+///
+/// The contract is **bit-identical equivalence** with the monolithic
+/// prefill graphs: after finalize, `k`/`v` rows `< len`, `logits`, and
+/// every score tensor in `bundle` must equal the corresponding
+/// `prefill_base`/`prefill_lkv` outputs exactly (rows `>= len` are dead
+/// padding either way). `tests/chunked.rs` enforces this per policy.
+#[derive(Debug, Clone)]
+pub struct ChunkState {
+    pub model: String,
+    /// `Some(variant)` for a lookahead (`prefill_lkv`) pass; the suffix
+    /// pass then runs at finalize with this variant's weights.
+    pub variant: Option<String>,
+    /// Total real tokens this pass will see (prompt, or prompt+draft for
+    /// the LAQ/SpecKV rescore pass).
+    pub len: usize,
+    /// Padded bucket; score tensors are bucket-shaped like the graphs'.
+    pub bucket: usize,
+    /// Observation-window rows exported into `bundle.window_scores`.
+    pub window: usize,
+    /// Absolute row whose logits are captured (must be `< len`).
+    pub logit_pos: usize,
+    /// Tokens processed so far.
+    pub done: usize,
+    pub finalized: bool,
+    /// `[L, Hkv, bucket, dh]` prompt KV; rows `>= done` are still zero.
+    pub k: TensorF,
+    pub v: TensorF,
+    /// Captured when the chunk containing `logit_pos` runs.
+    pub logits: Option<Vec<f32>>,
+    /// Running accumulator. Until finalize, `h2o_scores` holds raw column
+    /// *sums* (normalized by `1/len` at finalize) and `lkv_scores` is
+    /// all-zero (filled by the finalize suffix pass).
+    pub bundle: ScoreBundle,
+}
+
+impl ChunkState {
+    /// Start a chunked prefill of `len` tokens for `model` (a base pass,
+    /// or a lookahead pass when `variant` is set). Mirrors the bucket /
+    /// window / `win_start` selection of the monolithic graph path.
+    pub fn new(
+        manifest: &Manifest,
+        model: &str,
+        variant: Option<&str>,
+        len: usize,
+        logit_pos: usize,
+    ) -> Result<ChunkState> {
+        anyhow::ensure!(len >= 1, "chunked prefill needs at least one token");
+        anyhow::ensure!(logit_pos < len, "logit_pos {logit_pos} >= len {len}");
+        let meta = manifest.model(model)?;
+        if let Some(v) = variant {
+            manifest.variant(model, v)?;
+        }
+        let bucket = manifest.prefill_bucket(len)?;
+        let window = manifest.obs_window;
+        let (l, h, hkv, dh) = (meta.n_layers, meta.n_heads, meta.n_kv_heads, meta.head_dim);
+        let mut bundle = ScoreBundle::empty(len);
+        if variant.is_none() {
+            // clamp(len - W, 0, bucket - W), exactly as `prefill_base`
+            bundle.win_start = len.saturating_sub(window).min(bucket - window);
+            bundle.win_rows = window.min(len);
+            bundle.window_scores = Some(TensorF::zeros(vec![l, h, window, bucket]));
+            bundle.h2o_scores = Some(TensorF::zeros(vec![l, h, bucket]));
+        } else {
+            bundle.lkv_scores = Some(TensorF::zeros(vec![l, h, bucket]));
+        }
+        Ok(ChunkState {
+            model: model.to_string(),
+            variant: variant.map(str::to_string),
+            len,
+            bucket,
+            window,
+            logit_pos,
+            done: 0,
+            finalized: false,
+            k: TensorF::zeros(vec![l, hkv, bucket, dh]),
+            v: TensorF::zeros(vec![l, hkv, bucket, dh]),
+            logits: None,
+            bundle,
+        })
+    }
+
+    /// Tokens still to be prefilled.
+    pub fn remaining(&self) -> usize {
+        self.len - self.done
+    }
+}
+
 /// One sequence's slice of a batched decode step. `k`/`v` are the
 /// sequence's cache tensors `[L, Hkv, cap, dh]`; `lens` the live slots
 /// per layer *before* insertion. After `decode_batch` returns, the new
@@ -134,6 +230,33 @@ pub trait Backend {
     /// Warm a graph (compile / synthesize weights) without executing it.
     fn prepare(&self, key: &str) -> Result<()> {
         self.manifest().graph(key).map(|_| ())
+    }
+
+    /// Whether this backend implements the chunked prefill contract
+    /// ([`Backend::prefill_chunk`] / [`Backend::prefill_finalize`]).
+    /// Callers (the engine loop) fall back to monolithic prefill when
+    /// false.
+    fn supports_chunked_prefill(&self) -> bool {
+        false
+    }
+
+    /// Advance a chunked prefill by the next `tokens` of the prompt:
+    /// compute their KV (appended into `state.k`/`state.v` at rows
+    /// `state.done..`), fold their attention rows into the running score
+    /// bundle, and capture logits if `state.logit_pos` falls inside this
+    /// chunk. Chunks must be fed in order and need not divide `len`.
+    fn prefill_chunk(&self, state: &mut ChunkState, tokens: &[i32]) -> Result<()> {
+        let _ = (state, tokens);
+        anyhow::bail!("backend {} does not support chunked prefill", self.name())
+    }
+
+    /// Seal a fully-fed chunked prefill (`state.done == state.len`):
+    /// normalize the running scores; for lookahead states, run the
+    /// Algorithm-2 suffix pass over the accumulated prompt KV to produce
+    /// `bundle.lkv_scores`.
+    fn prefill_finalize(&self, state: &mut ChunkState) -> Result<()> {
+        let _ = state;
+        anyhow::bail!("backend {} does not support chunked prefill", self.name())
     }
 
     /// Advance every sequence by one decode token in a single call,

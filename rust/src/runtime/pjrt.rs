@@ -200,6 +200,33 @@ impl Backend for PjrtBackend {
         self.graph(key).map(|_| ())
     }
 
+    // Chunked prefill is stubbed on this backend: the AOT artifact set
+    // has no `prefill_chunk` graph family yet (it would need a KV-cache
+    // in/out prefill graph per (bucket, chunk) pair lowered by aot.py).
+    // `supports_chunked_prefill` stays false so the engine loop falls
+    // back to monolithic prefill, and direct calls error clearly.
+    fn supports_chunked_prefill(&self) -> bool {
+        false
+    }
+
+    fn prefill_chunk(
+        &self,
+        _state: &mut super::backend::ChunkState,
+        _tokens: &[i32],
+    ) -> Result<()> {
+        anyhow::bail!(
+            "pjrt backend has no chunked-prefill graphs yet; \
+             run with LKV_BACKEND=reference or use monolithic prefill"
+        )
+    }
+
+    fn prefill_finalize(&self, _state: &mut super::backend::ChunkState) -> Result<()> {
+        anyhow::bail!(
+            "pjrt backend has no chunked-prefill graphs yet; \
+             run with LKV_BACKEND=reference or use monolithic prefill"
+        )
+    }
+
     fn stats(&self) -> Vec<(String, GraphStats)> {
         let mut v: Vec<(String, GraphStats)> =
             self.stats.borrow().iter().map(|(k, s)| (k.clone(), s.clone())).collect();

@@ -30,7 +30,7 @@ use std::time::Instant;
 use anyhow::{Context, Result};
 
 use super::artifacts::{Manifest, ModelMeta, VariantMeta};
-use super::backend::{Backend, DecodeOut, DecodeSeq, GraphStats, Value};
+use super::backend::{Backend, ChunkState, DecodeOut, DecodeSeq, GraphStats, Value};
 use crate::util::rng::Rng;
 use crate::util::tensor::{TensorF, TensorI};
 
@@ -584,6 +584,281 @@ fn prefill_lkv(
 }
 
 // ---------------------------------------------------------------------------
+// Chunked prefill
+// ---------------------------------------------------------------------------
+//
+// The incremental counterpart of `prefill_base`/`prefill_lkv`, with a
+// bit-identical contract: because every op in the monolithic forward is
+// row-independent except attention — whose masked columns contribute
+// *exact* zeros (f32 `exp` underflows to 0.0 below ≈ -104, and `x + 0.0
+// == x`) — processing the prompt chunk-by-chunk against the accumulated
+// KV reproduces the monolithic hidden states, scores, and logits to the
+// bit. `tests/chunked.rs` asserts this for every eviction policy.
+
+/// Advance one chunked prefill pass by `tokens` (absolute rows
+/// `state.done ..`): run all layers over the chunk with a chunk-offset
+/// causal mask (row at absolute position `a` attends to cache columns
+/// `0..=a`), appending chunk KV into `state.k`/`state.v` and folding the
+/// chunk's attention rows into the running score bundle.
+fn prefill_chunk_ref(w: &ModelWeights, state: &mut ChunkState, tokens: &[i32]) -> Result<()> {
+    let dims = &w.dims;
+    let (nh, nkv, dh, group, d) = (dims.n_heads, dims.n_kv, dims.dh, dims.group, dims.d);
+    let c = tokens.len();
+    anyhow::ensure!(c > 0, "empty prefill chunk");
+    anyhow::ensure!(!state.finalized, "prefill state already finalized");
+    anyhow::ensure!(
+        state.done + c <= state.len,
+        "chunk overruns prompt: {} + {c} > {}",
+        state.done,
+        state.len
+    );
+    anyhow::ensure!(
+        state.k.shape[..] == [dims.n_layers, nkv, state.bucket, dh],
+        "chunk state KV shape {:?} does not match model",
+        state.k.shape
+    );
+    let bucket = state.bucket;
+    let done = state.done;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let pos: Vec<f32> = (done..done + c).map(|i| i as f32).collect();
+    let mut x = embed(w, tokens)?;
+    let mut h_norm = Vec::new();
+    let mut q = Vec::new();
+    let mut k_new = Vec::new();
+    let mut v_new = Vec::new();
+    let mut attn_out = Vec::new();
+    let mut gate = Vec::new();
+    let mut up = Vec::new();
+    let mut down = Vec::new();
+    let mut prow = vec![0.0f32; bucket];
+    for (li, layer) in w.layers.iter().enumerate() {
+        rmsnorm_into(&x, c, d, &layer.attn_norm, &mut h_norm);
+        linear(&h_norm, c, d, &layer.wq, None, &mut q);
+        linear(&h_norm, c, d, &layer.wk, None, &mut k_new);
+        linear(&h_norm, c, d, &layer.wv, None, &mut v_new);
+        apply_rope(&mut q, c, nh, dh, &pos, dims.theta);
+        apply_rope(&mut k_new, c, nkv, dh, &pos, dims.theta);
+        // append chunk KV at rows done..done+c
+        for g in 0..nkv {
+            for r in 0..c {
+                let off = ((li * nkv + g) * bucket + done + r) * dh;
+                state.k.data[off..off + dh].copy_from_slice(&k_new[(r * nkv + g) * dh..][..dh]);
+                state.v.data[off..off + dh].copy_from_slice(&v_new[(r * nkv + g) * dh..][..dh]);
+            }
+        }
+        let mut attn = vec![0.0f32; c * dims.q_dim];
+        for h in 0..nh {
+            let g = h / group;
+            let kbase = (li * nkv + g) * bucket * dh;
+            for r in 0..c {
+                let a = done + r; // absolute row
+                let n_vis = a + 1; // causal prefix
+                let qrow = &q[(r * nh + h) * dh..][..dh];
+                let mut maxv = f32::NEG_INFINITY;
+                for j in 0..n_vis {
+                    let krow = &state.k.data[kbase + j * dh..][..dh];
+                    let mut s = 0.0f32;
+                    for e in 0..dh {
+                        s += qrow[e] * krow[e];
+                    }
+                    s *= scale;
+                    prow[j] = s;
+                    if s > maxv {
+                        maxv = s;
+                    }
+                }
+                let mut sum = 0.0f32;
+                for p in prow.iter_mut().take(n_vis) {
+                    *p = (*p - maxv).exp();
+                    sum += *p;
+                }
+                let norm = 1.0 / sum;
+                let arow = &mut attn[r * dims.q_dim + h * dh..r * dims.q_dim + (h + 1) * dh];
+                for j in 0..n_vis {
+                    prow[j] *= norm;
+                    let p = prow[j];
+                    if p == 0.0 {
+                        continue;
+                    }
+                    let vrow = &state.v.data[kbase + j * dh..][..dh];
+                    for e in 0..dh {
+                        arow[e] += p * vrow[e];
+                    }
+                }
+                // running H2O column sums (normalized by 1/len at finalize)
+                if let Some(h2o) = state.bundle.h2o_scores.as_mut() {
+                    let acc = &mut h2o.data[(li * nh + h) * bucket..][..bucket];
+                    for j in 0..n_vis {
+                        acc[j] += prow[j];
+                    }
+                }
+                // observation-window rows (columns >= n_vis stay zero,
+                // exactly as the masked monolithic rows)
+                if let Some(win) = state.bundle.window_scores.as_mut() {
+                    let w0 = state.bundle.win_start;
+                    if a >= w0 && a < w0 + state.window {
+                        let off = (((li * nh + h) * state.window) + (a - w0)) * bucket;
+                        win.data[off..off + n_vis].copy_from_slice(&prow[..n_vis]);
+                    }
+                }
+            }
+        }
+        linear(&attn, c, dims.q_dim, &layer.wo, None, &mut attn_out);
+        for (xv, &av) in x.iter_mut().zip(attn_out.iter()) {
+            *xv += av;
+        }
+        rmsnorm_into(&x, c, d, &layer.mlp_norm, &mut h_norm);
+        linear(&h_norm, c, d, &layer.wgate, None, &mut gate);
+        linear(&h_norm, c, d, &layer.wup, None, &mut up);
+        for (gv, &uv) in gate.iter_mut().zip(up.iter()) {
+            *gv = silu(*gv) * uv;
+        }
+        linear(&gate, c, dims.ff, &layer.wdown, None, &mut down);
+        for (xv, &dv) in x.iter_mut().zip(down.iter()) {
+            *xv += dv;
+        }
+    }
+    if state.logit_pos >= done && state.logit_pos < done + c {
+        let r = state.logit_pos - done;
+        state.logits = Some(head_logits(w, &x[r * d..(r + 1) * d]));
+    }
+    state.done += c;
+    Ok(())
+}
+
+/// Finalize suffix pass for lookahead chunked prefill (Algorithm 2): run
+/// the `n_lookahead` learned embeddings — with selective LoRA on every
+/// row — against the full accumulated prompt KV plus their own causal
+/// prefix, producing `bundle.lkv_scores` exactly as the monolithic
+/// `prefill_lkv` suffix rows do.
+fn lkv_suffix_pass(w: &ModelWeights, vw: &VariantWeights, state: &mut ChunkState) -> Result<()> {
+    let dims = &w.dims;
+    let (nh, nkv, dh, group, d) = (dims.n_heads, dims.n_kv, dims.dh, dims.group, dims.d);
+    let n = vw.emb.shape[0];
+    let len = state.len;
+    let bucket = state.bucket;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let lora = Some((vw, 0usize)); // every row of this pass is a suffix row
+    let mut x = vw.emb.data.clone();
+    let pos: Vec<f32> = (0..n).map(|r| (len + r) as f32).collect();
+    let lkv = state
+        .bundle
+        .lkv_scores
+        .as_mut()
+        .context("lookahead chunk state is missing its lkv accumulator")?;
+    let mut h_norm = Vec::new();
+    let mut q = Vec::new();
+    let mut k_sfx = Vec::new();
+    let mut v_sfx = Vec::new();
+    let mut attn_out = Vec::new();
+    let mut gate = Vec::new();
+    let mut up = Vec::new();
+    let mut down = Vec::new();
+    let mut prompt_p = vec![0.0f32; len];
+    let mut sfx_p = vec![0.0f32; n];
+    for (li, layer) in w.layers.iter().enumerate() {
+        rmsnorm_into(&x, n, d, &layer.attn_norm, &mut h_norm);
+        linear(&h_norm, n, d, &layer.wq, lora_for(lora, li, "wq"), &mut q);
+        linear(&h_norm, n, d, &layer.wk, lora_for(lora, li, "wk"), &mut k_sfx);
+        linear(&h_norm, n, d, &layer.wv, lora_for(lora, li, "wv"), &mut v_sfx);
+        apply_rope(&mut q, n, nh, dh, &pos, dims.theta);
+        apply_rope(&mut k_sfx, n, nkv, dh, &pos, dims.theta);
+        let mut attn = vec![0.0f32; n * dims.q_dim];
+        for h in 0..nh {
+            let g = h / group;
+            let kbase = (li * nkv + g) * bucket * dh;
+            let acc = &mut lkv.data[(li * nh + h) * bucket..][..bucket];
+            for r in 0..n {
+                let qrow = &q[(r * nh + h) * dh..][..dh];
+                let mut maxv = f32::NEG_INFINITY;
+                // prompt columns 0..len from the accumulated cache …
+                for j in 0..len {
+                    let krow = &state.k.data[kbase + j * dh..][..dh];
+                    let mut s = 0.0f32;
+                    for e in 0..dh {
+                        s += qrow[e] * krow[e];
+                    }
+                    s *= scale;
+                    prompt_p[j] = s;
+                    if s > maxv {
+                        maxv = s;
+                    }
+                }
+                // … then this pass's own causal suffix columns
+                for j in 0..=r {
+                    let krow = &k_sfx[(j * nkv + g) * dh..][..dh];
+                    let mut s = 0.0f32;
+                    for e in 0..dh {
+                        s += qrow[e] * krow[e];
+                    }
+                    s *= scale;
+                    sfx_p[j] = s;
+                    if s > maxv {
+                        maxv = s;
+                    }
+                }
+                let mut sum = 0.0f32;
+                for p in prompt_p.iter_mut() {
+                    *p = (*p - maxv).exp();
+                    sum += *p;
+                }
+                for p in sfx_p.iter_mut().take(r + 1) {
+                    *p = (*p - maxv).exp();
+                    sum += *p;
+                }
+                let norm = 1.0 / sum;
+                let arow = &mut attn[r * dims.q_dim + h * dh..r * dims.q_dim + (h + 1) * dh];
+                for j in 0..len {
+                    prompt_p[j] *= norm;
+                    let p = prompt_p[j];
+                    if p == 0.0 {
+                        continue;
+                    }
+                    let vrow = &state.v.data[kbase + j * dh..][..dh];
+                    for e in 0..dh {
+                        arow[e] += p * vrow[e];
+                    }
+                }
+                for j in 0..=r {
+                    sfx_p[j] *= norm;
+                    let p = sfx_p[j];
+                    if p == 0.0 {
+                        continue;
+                    }
+                    let vrow = &v_sfx[(j * nkv + g) * dh..][..dh];
+                    for e in 0..dh {
+                        arow[e] += p * vrow[e];
+                    }
+                }
+                // mean suffix attention over prompt columns (lkv scores)
+                for j in 0..len {
+                    acc[j] += prompt_p[j];
+                }
+            }
+            let denom = 1.0 / n.max(1) as f32;
+            for a in acc.iter_mut() {
+                *a *= denom;
+            }
+        }
+        linear(&attn, n, dims.q_dim, &layer.wo, lora_for(lora, li, "wo"), &mut attn_out);
+        for (xv, &av) in x.iter_mut().zip(attn_out.iter()) {
+            *xv += av;
+        }
+        rmsnorm_into(&x, n, d, &layer.mlp_norm, &mut h_norm);
+        linear(&h_norm, n, d, &layer.wgate, lora_for(lora, li, "wgate"), &mut gate);
+        linear(&h_norm, n, d, &layer.wup, lora_for(lora, li, "wup"), &mut up);
+        for (gv, &uv) in gate.iter_mut().zip(up.iter()) {
+            *gv = silu(*gv) * uv;
+        }
+        linear(&gate, n, dims.ff, &layer.wdown, lora_for(lora, li, "wdown"), &mut down);
+        for (xv, &dv) in x.iter_mut().zip(down.iter()) {
+            *xv += dv;
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
 // Decode
 // ---------------------------------------------------------------------------
 
@@ -837,6 +1112,55 @@ impl Backend for ReferenceBackend {
     fn prepare(&self, key: &str) -> Result<()> {
         let meta = self.manifest.graph(key)?.clone();
         self.model_weights(&meta.model)?;
+        Ok(())
+    }
+
+    fn supports_chunked_prefill(&self) -> bool {
+        true
+    }
+
+    fn prefill_chunk(&self, state: &mut ChunkState, tokens: &[i32]) -> Result<()> {
+        let w = self.model_weights(&state.model)?;
+        let t0 = Instant::now();
+        prefill_chunk_ref(&w, state, tokens)
+            .with_context(|| format!("prefill_chunk for {} (reference)", state.model))?;
+        self.note_exec(&format!("{}/prefill_chunk", state.model), 1, t0);
+        Ok(())
+    }
+
+    fn prefill_finalize(&self, state: &mut ChunkState) -> Result<()> {
+        anyhow::ensure!(!state.finalized, "prefill state already finalized");
+        anyhow::ensure!(
+            state.done == state.len,
+            "prefill_finalize before all chunks fed: {}/{}",
+            state.done,
+            state.len
+        );
+        anyhow::ensure!(state.logits.is_some(), "no chunk covered logit_pos {}", state.logit_pos);
+        let t0 = Instant::now();
+        match state.variant.clone() {
+            None => {
+                // H2O salience: column means over all valid query rows,
+                // with the exact denominator of the monolithic graph.
+                let h2o = state
+                    .bundle
+                    .h2o_scores
+                    .as_mut()
+                    .context("base chunk state is missing its h2o accumulator")?;
+                let denom = 1.0 / state.len.max(1) as f32;
+                for a in h2o.data.iter_mut() {
+                    *a *= denom;
+                }
+            }
+            Some(variant) => {
+                let w = self.model_weights(&state.model)?;
+                let vw = self.variant_weights(&state.model, &variant)?;
+                lkv_suffix_pass(&w, &vw, state)
+                    .with_context(|| format!("lkv suffix pass for {}/{variant}", state.model))?;
+            }
+        }
+        state.finalized = true;
+        self.note_exec(&format!("{}/prefill_finalize", state.model), 1, t0);
         Ok(())
     }
 

@@ -13,7 +13,7 @@ use std::path::Path;
 use anyhow::Result;
 
 use super::artifacts::Manifest;
-use super::backend::{Backend, DecodeOut, DecodeSeq, GraphStats, Value};
+use super::backend::{Backend, ChunkState, DecodeOut, DecodeSeq, GraphStats, Value};
 use super::reference::ReferenceBackend;
 
 pub struct Runtime {
@@ -94,6 +94,21 @@ impl Runtime {
     /// call (see [`Backend::decode_batch`]).
     pub fn decode_batch(&self, model: &str, seqs: &mut [DecodeSeq<'_>]) -> Result<Vec<DecodeOut>> {
         self.backend.decode_batch(model, seqs)
+    }
+
+    /// Whether the backend implements the chunked prefill contract.
+    pub fn supports_chunked_prefill(&self) -> bool {
+        self.backend.supports_chunked_prefill()
+    }
+
+    /// Advance a chunked prefill pass (see [`Backend::prefill_chunk`]).
+    pub fn prefill_chunk(&self, state: &mut ChunkState, tokens: &[i32]) -> Result<()> {
+        self.backend.prefill_chunk(state, tokens)
+    }
+
+    /// Seal a chunked prefill pass (see [`Backend::prefill_finalize`]).
+    pub fn prefill_finalize(&self, state: &mut ChunkState) -> Result<()> {
+        self.backend.prefill_finalize(state)
     }
 
     pub fn stats(&self) -> Vec<(String, GraphStats)> {

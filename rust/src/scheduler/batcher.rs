@@ -1,11 +1,17 @@
 //! Continuous-batching engine loop.
 //!
 //! Iteration-level scheduling in the Orca/vLLM mold, specialized to the
-//! single-stream CPU backends: each loop iteration either (a) admits
-//! and prefills one queued request if the KV pool has room, or (b)
-//! advances every active sequence by one decode token. Prefill is
-//! prioritized while the active set is below `max_active`
-//! (prefill-priority keeps TTFT low; decode fairness keeps TPOT flat).
+//! single-stream CPU backends: each loop iteration advances every active
+//! sequence by one decode token *and* — with chunked prefill enabled —
+//! at most one pending prompt by `prefill_chunk_tokens` tokens (mixed
+//! prefill/decode batching). A long prompt therefore stalls active
+//! decodes for one chunk per iteration instead of its whole prefill;
+//! eviction/compaction is deferred to the final chunk so selection sees
+//! full-prompt scores (bit-identical to monolithic prefill — see
+//! `engine::chunked`). With `prefill_chunk_tokens = 0`, or on backends
+//! without chunked-prefill support, admission falls back to monolithic
+//! prefill: admit and fully prefill queued requests while the active set
+//! is below `max_active`.
 //!
 //! Decode dispatch is batched by default: all active sequences advance
 //! in **one** backend call per iteration (`Engine::decode_step_batch`),
@@ -13,11 +19,19 @@
 //! serialized to and from the backend every token. Set
 //! `LoopConfig::batched_decode = false` for the historical per-sequence
 //! round-trip (kept for A/B benchmarking — see `bench_scheduler`).
+//!
+//! Exported latency metrics: `decode_stall_ms` (per-iteration decode
+//! stall imposed by prefill work — one chunk, plus the final chunk's
+//! deferred eviction/compaction, when chunked; a whole admission when
+//! monolithic), `prefill_chunk_ms` (per-chunk cost), and the
+//! chunked-TTFT breakdown `chunked_ttft_ms` = `chunked_ttft_work_ms`
+//! (this request's own prefill work) + `chunked_ttft_interleave_ms`
+//! (time spent advancing other sequences' decodes between chunks).
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::engine::Engine;
+use crate::engine::{ChunkedPrefill, Engine, PrefillOutput};
 use crate::kvcache::{manager::bytes_per_slot, CacheManager, SeqCache};
 use crate::metrics::Metrics;
 use crate::model::sampler::Sampler;
@@ -34,6 +48,11 @@ pub struct LoopConfig {
     /// Advance all active sequences in one backend call per iteration
     /// (vs per-sequence decode round-trips).
     pub batched_decode: bool,
+    /// Max prompt tokens prefilled per loop iteration (iteration-level
+    /// mixed prefill/decode batching). 0 = monolithic prefill. Backends
+    /// without chunked-prefill support fall back to monolithic
+    /// regardless.
+    pub prefill_chunk_tokens: usize,
 }
 
 impl Default for LoopConfig {
@@ -43,8 +62,19 @@ impl Default for LoopConfig {
             kv_pool_slots: 16 * 1152,
             kv_block_slots: 64,
             batched_decode: true,
+            prefill_chunk_tokens: 0,
         }
     }
+}
+
+/// One request's in-flight chunked prefill (at most one per loop).
+struct PendingPrefill {
+    req: Request,
+    job: ChunkedPrefill,
+    t_start: Instant,
+    /// Cumulative prefill work time; TTFT minus this is the time this
+    /// request spent waiting while decode steps were interleaved.
+    work_ms: f64,
 }
 
 struct ActiveSeq {
@@ -84,30 +114,98 @@ impl EngineLoop {
         let _slot_bytes = bytes_per_slot(m.n_layers, m.n_kv_heads, m.head_dim);
         let mut mgr = CacheManager::new(self.cfg.kv_pool_slots, self.cfg.kv_block_slots);
         let mut active: Vec<ActiveSeq> = Vec::new();
+        let mut pending: Option<PendingPrefill> = None;
+        let chunked = self.cfg.prefill_chunk_tokens > 0
+            && self.engine.rt.supports_chunked_prefill();
 
         loop {
-            // Admission + prefill (prioritized under max_active).
-            while active.len() < self.cfg.max_active {
-                let req = if active.is_empty() {
-                    match self.queue.pop_timeout(Duration::from_millis(50)) {
-                        Some(r) => r,
-                        None if self.queue.is_closed() && self.queue.is_empty() => {
+            // Admission. Chunked mode starts at most one incremental
+            // prefill job; monolithic mode admits (fully prefills) as
+            // many queued requests as fit under max_active.
+            if chunked {
+                if pending.is_none() && active.len() < self.cfg.max_active {
+                    let idle = active.is_empty();
+                    let req = if idle {
+                        self.queue.pop_timeout(Duration::from_millis(50))
+                    } else {
+                        self.queue.try_pop()
+                    };
+                    match req {
+                        Some(req) => pending = self.begin_prefill(req),
+                        None if idle && self.queue.is_closed() && self.queue.is_empty() => {
                             self.drain(&mut active, &mut mgr);
                             return;
                         }
-                        None => break,
+                        None => {}
                     }
-                } else {
-                    match self.queue.try_pop() {
-                        Some(r) => r,
-                        None => break,
+                }
+            } else {
+                while active.len() < self.cfg.max_active {
+                    let req = if active.is_empty() {
+                        match self.queue.pop_timeout(Duration::from_millis(50)) {
+                            Some(r) => r,
+                            None if self.queue.is_closed() && self.queue.is_empty() => {
+                                self.drain(&mut active, &mut mgr);
+                                return;
+                            }
+                            None => break,
+                        }
+                    } else {
+                        match self.queue.try_pop() {
+                            Some(r) => r,
+                            None => break,
+                        }
+                    };
+                    self.admit(req, &mut active, &mut mgr);
+                }
+            }
+
+            // Advance the in-flight prefill by one chunk; the decode step
+            // below still runs this iteration (mixed batching).
+            let stepped = match pending.as_mut() {
+                Some(p) => {
+                    let t0 = Instant::now();
+                    let stepped = p.job.step(&self.engine);
+                    let dt = t0.elapsed().as_secs_f64() * 1e3;
+                    p.work_ms += dt;
+                    self.metrics.observe("prefill_chunk_ms", dt);
+                    Some((stepped, dt))
+                }
+                None => None,
+            };
+            // Per-iteration decode stall = this iteration's prefill work,
+            // including the final chunk's deferred eviction/compaction —
+            // symmetric with the monolithic path, which counts its whole
+            // admission. Sequences activated this iteration don't count
+            // as stalled.
+            let stalling = !active.is_empty();
+            match stepped {
+                None => {}
+                Some((Ok(false), dt)) => {
+                    if stalling {
+                        self.metrics.observe("decode_stall_ms", dt);
                     }
-                };
-                self.admit(req, &mut active, &mut mgr);
+                }
+                Some((Ok(true), dt)) => {
+                    let p = pending.take().expect("pending job just stepped");
+                    let t0 = Instant::now();
+                    self.finish_chunked(p, &mut active, &mut mgr);
+                    if stalling {
+                        let total = dt + t0.elapsed().as_secs_f64() * 1e3;
+                        self.metrics.observe("decode_stall_ms", total);
+                    }
+                }
+                Some((Err(e), dt)) => {
+                    let p = pending.take().expect("pending job just stepped");
+                    self.reject(p.req, p.t_start, e);
+                    if stalling {
+                        self.metrics.observe("decode_stall_ms", dt);
+                    }
+                }
             }
 
             if active.is_empty() {
-                if self.queue.is_closed() && self.queue.is_empty() {
+                if pending.is_none() && self.queue.is_closed() && self.queue.is_empty() {
                     return;
                 }
                 continue;
@@ -213,63 +311,145 @@ impl EngineLoop {
         }
     }
 
+    /// Monolithic admission: prefill + evict + compact in one blocking
+    /// call (stalls every active decode for the whole prompt).
     fn admit(&mut self, req: Request, active: &mut Vec<ActiveSeq>, mgr: &mut CacheManager) {
+        let stalling = !active.is_empty();
         let t0 = Instant::now();
-        // prefill + evict + compact
         let res = (|| -> anyhow::Result<(SeqCache, Vec<f32>, usize)> {
             let pre = self.engine.prefill_for_method(&req.prompt, &req.method)?;
-            let n_layers = self.engine.n_layers(&self.engine.cfg.model);
-            let mut evcfg = self.engine.cfg.eviction;
-            evcfg.budget = req.budget;
-            let sel = req.method.select(&evcfg, n_layers, &pre.bundle);
-            let cap = self
-                .engine
-                .rt
-                .manifest()
-                .decode_cap(&self.engine.cfg.model, sel.max_kept() + req.max_new)?;
-            anyhow::ensure!(mgr.can_admit(cap), "kv pool exhausted");
-            let cache =
-                SeqCache::from_selection(&pre.k, &pre.v, &sel.per_layer, req.prompt.len(), cap);
-            Ok((cache, pre.logits, sel.max_kept()))
+            self.select_compact(&req, pre, mgr)
+        })();
+        if stalling {
+            // every active decode waited for this entire admission
+            self.metrics.observe("decode_stall_ms", t0.elapsed().as_secs_f64() * 1e3);
+        }
+        match res {
+            Ok((cache, logits, kept)) => {
+                self.activate(req, cache, logits, kept, t0, None, active, mgr)
+            }
+            Err(e) => self.reject(req, t0, e),
+        }
+    }
+
+    /// Start a chunked prefill job for `req` (None on immediate failure,
+    /// after sending the error reply).
+    fn begin_prefill(&mut self, req: Request) -> Option<PendingPrefill> {
+        let t_start = Instant::now();
+        match self.engine.chunked_prefill_begin(
+            &req.prompt,
+            &req.method,
+            self.cfg.prefill_chunk_tokens,
+        ) {
+            Ok(job) => Some(PendingPrefill { req, job, t_start, work_ms: 0.0 }),
+            Err(e) => {
+                self.reject(req, t_start, e);
+                None
+            }
+        }
+    }
+
+    /// A chunked prefill finished its last chunk: evict + compact
+    /// (deferred until now so selection sees full-prompt scores) and
+    /// activate the sequence.
+    fn finish_chunked(
+        &mut self,
+        p: PendingPrefill,
+        active: &mut Vec<ActiveSeq>,
+        mgr: &mut CacheManager,
+    ) {
+        let PendingPrefill { req, job, t_start, work_ms } = p;
+        let res = (|| -> anyhow::Result<(SeqCache, Vec<f32>, usize)> {
+            let pre = job.into_output()?;
+            self.select_compact(&req, pre, mgr)
         })();
         match res {
             Ok((cache, logits, kept)) => {
-                let mut sampler = if req.temperature > 0.0 {
-                    Sampler::with_temperature(req.temperature, req.id)
-                } else {
-                    Sampler::greedy()
-                };
-                let first = sampler.sample(&logits);
-                let ttft_ms = t0.elapsed().as_secs_f64() * 1e3;
-                self.metrics.observe("ttft_ms", ttft_ms);
-                self.metrics.incr("prefills", 1);
-                mgr.reserve(req.id, cache.cap); // KV-pool accounting
-                active.push(ActiveSeq {
-                    id: req.id,
-                    cache,
-                    sampler,
-                    tokens: vec![first],
-                    next_token: first,
-                    max_new: req.max_new,
-                    reply: req.reply,
-                    t_start: t0,
-                    ttft_ms,
-                    kept,
-                });
+                self.activate(req, cache, logits, kept, t_start, Some(work_ms), active, mgr)
             }
-            Err(e) => {
-                self.metrics.incr("prefill_errors", 1);
-                let _ = req.reply.send(Reply {
-                    id: req.id,
-                    text: String::new(),
-                    n_tokens: 0,
-                    ttft_ms: 0.0,
-                    total_ms: t0.elapsed().as_secs_f64() * 1e3,
-                    kept: 0,
-                    error: Some(format!("{e:#}")),
-                });
-            }
+            Err(e) => self.reject(req, t_start, e),
         }
+    }
+
+    /// Shared post-prefill tail: selection with the request's budget,
+    /// decode-cap sizing, KV-pool admission check, compaction.
+    fn select_compact(
+        &self,
+        req: &Request,
+        pre: PrefillOutput,
+        mgr: &CacheManager,
+    ) -> anyhow::Result<(SeqCache, Vec<f32>, usize)> {
+        let n_layers = self.engine.n_layers(&self.engine.cfg.model);
+        let mut evcfg = self.engine.cfg.eviction;
+        evcfg.budget = req.budget;
+        let sel = req.method.select(&evcfg, n_layers, &pre.bundle);
+        let cap = self
+            .engine
+            .rt
+            .manifest()
+            .decode_cap(&self.engine.cfg.model, sel.max_kept() + req.max_new)?;
+        anyhow::ensure!(mgr.can_admit(cap), "kv pool exhausted");
+        let cache =
+            SeqCache::from_selection(&pre.k, &pre.v, &sel.per_layer, req.prompt.len(), cap);
+        Ok((cache, pre.logits, sel.max_kept()))
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn activate(
+        &mut self,
+        req: Request,
+        cache: SeqCache,
+        logits: Vec<f32>,
+        kept: usize,
+        t_start: Instant,
+        chunk_work_ms: Option<f64>,
+        active: &mut Vec<ActiveSeq>,
+        mgr: &mut CacheManager,
+    ) {
+        let mut sampler = if req.temperature > 0.0 {
+            Sampler::with_temperature(req.temperature, req.id)
+        } else {
+            Sampler::greedy()
+        };
+        let first = sampler.sample(&logits);
+        let ttft_ms = t_start.elapsed().as_secs_f64() * 1e3;
+        self.metrics.observe("ttft_ms", ttft_ms);
+        self.metrics.incr("prefills", 1);
+        if let Some(work) = chunk_work_ms {
+            // chunked-TTFT breakdown: own prefill work vs time spent
+            // interleaved with other sequences' decode steps
+            self.metrics.incr("chunked_prefills", 1);
+            self.metrics.observe("chunked_ttft_ms", ttft_ms);
+            self.metrics.observe("chunked_ttft_work_ms", work);
+            self.metrics.observe("chunked_ttft_interleave_ms", (ttft_ms - work).max(0.0));
+        }
+        mgr.reserve(req.id, cache.cap); // KV-pool accounting
+        active.push(ActiveSeq {
+            id: req.id,
+            cache,
+            sampler,
+            tokens: vec![first],
+            next_token: first,
+            max_new: req.max_new,
+            reply: req.reply,
+            t_start,
+            ttft_ms,
+            kept,
+        });
+    }
+
+    /// Send the error reply for a request that never activated.
+    fn reject(&mut self, req: Request, t_start: Instant, e: anyhow::Error) {
+        self.metrics.incr("prefill_errors", 1);
+        let _ = req.reply.send(Reply {
+            id: req.id,
+            text: String::new(),
+            n_tokens: 0,
+            ttft_ms: 0.0,
+            total_ms: t_start.elapsed().as_secs_f64() * 1e3,
+            kept: 0,
+            error: Some(format!("{e:#}")),
+        });
     }
 
     /// Tear down a sequence whose error Reply was already sent: release

@@ -2,8 +2,70 @@
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpStream;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
+
+/// Apply per-connection socket timeouts (milliseconds; 0 disables one).
+/// `read_request` treats the read timeout as a deadline for the *whole*
+/// request parse (re-arming the socket timeout with the remaining budget
+/// before every read), so neither a half-open nor a slow-drip client can
+/// pin an HTTP worker beyond roughly the configured timeout.
+pub fn configure_stream(stream: &TcpStream, read_ms: u64, write_ms: u64) -> Result<()> {
+    let to = |ms: u64| (ms > 0).then(|| Duration::from_millis(ms));
+    stream.set_read_timeout(to(read_ms)).context("set_read_timeout")?;
+    stream.set_write_timeout(to(write_ms)).context("set_write_timeout")?;
+    Ok(())
+}
+
+/// Re-arm the socket read timeout with the time left until `deadline`
+/// (no-op when no timeout is configured). The remaining budget shrinks
+/// monotonically, so total parse time is bounded by the original timeout
+/// even against a client dripping one byte per read.
+fn arm_deadline(stream: &TcpStream, deadline: Option<Instant>) -> Result<()> {
+    if let Some(d) = deadline {
+        let rem = d.saturating_duration_since(Instant::now());
+        if rem.is_zero() {
+            bail!("request read deadline exceeded");
+        }
+        stream.set_read_timeout(Some(rem)).context("set_read_timeout")?;
+    }
+    Ok(())
+}
+
+const MAX_LINE: usize = 8 << 10;
+const MAX_HEADERS: usize = 100;
+
+/// Read one CRLF-terminated line with a length cap, re-arming the parse
+/// deadline before every byte (reads come from the BufReader, so the
+/// per-byte cost is a buffer lookup; the setsockopt only happens on
+/// timeout-configured streams).
+fn read_line_bounded(
+    reader: &mut BufReader<TcpStream>,
+    stream: &TcpStream,
+    deadline: Option<Instant>,
+) -> Result<String> {
+    let mut buf = Vec::new();
+    loop {
+        arm_deadline(stream, deadline)?;
+        let mut byte = [0u8; 1];
+        let n = reader.read(&mut byte).context("read")?;
+        if n == 0 {
+            bail!("connection closed mid-request");
+        }
+        if byte[0] == b'\n' {
+            break;
+        }
+        if buf.len() >= MAX_LINE {
+            bail!("header line too long");
+        }
+        buf.push(byte[0]);
+    }
+    if buf.last() == Some(&b'\r') {
+        buf.pop();
+    }
+    Ok(String::from_utf8_lossy(&buf).into_owned())
+}
 
 #[derive(Debug, Default)]
 pub struct HttpRequest {
@@ -15,9 +77,11 @@ pub struct HttpRequest {
 const MAX_BODY: usize = 4 << 20;
 
 pub fn read_request(stream: &mut TcpStream) -> Result<HttpRequest> {
+    // The configured socket read timeout becomes a deadline for the
+    // whole request parse (see `configure_stream`).
+    let deadline = stream.read_timeout().context("read_timeout")?.map(|t| Instant::now() + t);
     let mut reader = BufReader::new(stream.try_clone()?);
-    let mut line = String::new();
-    reader.read_line(&mut line).context("request line")?;
+    let line = read_line_bounded(&mut reader, stream, deadline).context("request line")?;
     let mut parts = line.split_whitespace();
     let method = parts.next().unwrap_or("").to_string();
     let path = parts.next().unwrap_or("").to_string();
@@ -25,10 +89,13 @@ pub fn read_request(stream: &mut TcpStream) -> Result<HttpRequest> {
         bail!("malformed request line {line:?}");
     }
     let mut content_length = 0usize;
+    let mut n_headers = 0usize;
     loop {
-        let mut h = String::new();
-        reader.read_line(&mut h).context("header")?;
-        let h = h.trim_end();
+        if n_headers >= MAX_HEADERS {
+            bail!("too many headers");
+        }
+        n_headers += 1;
+        let h = read_line_bounded(&mut reader, stream, deadline).context("header")?;
         if h.is_empty() {
             break;
         }
@@ -42,8 +109,14 @@ pub fn read_request(stream: &mut TcpStream) -> Result<HttpRequest> {
         bail!("body too large: {content_length}");
     }
     let mut body = vec![0u8; content_length];
-    if content_length > 0 {
-        reader.read_exact(&mut body).context("body")?;
+    let mut got = 0usize;
+    while got < content_length {
+        arm_deadline(stream, deadline)?;
+        let n = reader.read(&mut body[got..]).context("body")?;
+        if n == 0 {
+            bail!("connection closed mid-body");
+        }
+        got += n;
     }
     Ok(HttpRequest { method, path, body: String::from_utf8_lossy(&body).into_owned() })
 }
@@ -132,5 +205,74 @@ mod tests {
         assert_eq!(status, 200);
         assert_eq!(body, "{\"ok\":true}");
         handle.join().unwrap();
+    }
+
+    /// Regression: a half-open client (request never completed) must not
+    /// pin a worker — with timeouts configured, `read_request` errors out.
+    #[test]
+    fn half_open_connection_times_out() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let handle = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            configure_stream(&s, 200, 200).unwrap();
+            let t0 = std::time::Instant::now();
+            let res = read_request(&mut s);
+            (res.is_err(), t0.elapsed())
+        });
+        // complete request line, then stall mid-header and never finish
+        let mut client = TcpStream::connect(addr).unwrap();
+        client.write_all(b"POST /generate HTTP/1.1\r\ncontent-le").unwrap();
+        let (errored, waited) = handle.join().unwrap();
+        assert!(errored, "read_request must fail on a stalled client");
+        assert!(
+            waited < std::time::Duration::from_secs(5),
+            "read timeout did not bound the stall: {waited:?}"
+        );
+        drop(client);
+    }
+
+    /// Regression: a slow-drip (slow-loris) client that sends one byte at
+    /// a time — each read succeeding within the per-read window — must
+    /// still be cut off by the whole-request deadline.
+    #[test]
+    fn slow_drip_client_is_bounded_by_deadline() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let handle = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            configure_stream(&s, 250, 250).unwrap();
+            let t0 = std::time::Instant::now();
+            let res = read_request(&mut s);
+            (res.is_err(), t0.elapsed())
+        });
+        let mut client = TcpStream::connect(addr).unwrap();
+        for b in b"POST /generate HTTP/1.1\r\nx-slow: ".iter().cycle().take(40) {
+            if client.write_all(&[*b]).is_err() {
+                break; // server gave up and closed — that's the point
+            }
+            std::thread::sleep(Duration::from_millis(60));
+        }
+        let (errored, waited) = handle.join().unwrap();
+        assert!(errored, "read_request must fail on a slow-drip client");
+        assert!(
+            waited < std::time::Duration::from_secs(2),
+            "deadline did not bound the drip: {waited:?}"
+        );
+    }
+
+    #[test]
+    fn zero_timeout_disables() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (s, _) = listener.accept().unwrap();
+        configure_stream(&s, 0, 0).unwrap();
+        assert_eq!(s.read_timeout().unwrap(), None);
+        assert_eq!(s.write_timeout().unwrap(), None);
+        configure_stream(&s, 50, 75).unwrap();
+        assert_eq!(s.read_timeout().unwrap(), Some(Duration::from_millis(50)));
+        assert_eq!(s.write_timeout().unwrap(), Some(Duration::from_millis(75)));
+        drop(client);
     }
 }

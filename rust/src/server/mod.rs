@@ -28,11 +28,23 @@ pub struct ServerConfig {
     pub addr: String,
     pub workers: usize,
     pub queue_cap: usize,
+    /// Socket read timeout while parsing a request. Without it a
+    /// half-open client (connects, never finishes its headers) pins an
+    /// HTTP worker forever. 0 = no timeout.
+    pub read_timeout_ms: u64,
+    /// Socket write timeout for the response. 0 = no timeout.
+    pub write_timeout_ms: u64,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { addr: "127.0.0.1:8080".into(), workers: 4, queue_cap: 64 }
+        ServerConfig {
+            addr: "127.0.0.1:8080".into(),
+            workers: 4,
+            queue_cap: 64,
+            read_timeout_ms: 10_000,
+            write_timeout_ms: 10_000,
+        }
     }
 }
 
@@ -43,8 +55,13 @@ pub fn serve(cfg: ServerConfig, queue: Arc<RequestQueue>, metrics: Arc<Metrics>)
     log::info!("listening on http://{}", cfg.addr);
     let pool = ThreadPool::new(cfg.workers, "http");
     let next_id = Arc::new(AtomicU64::new(1));
+    let (read_to, write_to) = (cfg.read_timeout_ms, cfg.write_timeout_ms);
     for stream in listener.incoming() {
         let Ok(stream) = stream else { continue };
+        // Bound how long a worker can be held by a slow/half-open client.
+        if http::configure_stream(&stream, read_to, write_to).is_err() {
+            continue;
+        }
         let queue = Arc::clone(&queue);
         let metrics = Arc::clone(&metrics);
         let next_id = Arc::clone(&next_id);

@@ -4,11 +4,21 @@
 //! timed iterations with early stop on time budget, summary stats, and a
 //! JSON line per benchmark appended to `results/bench.jsonl` so the paper
 //! tables can cite exact runs.
+//!
+//! The bench-regression gate lives here too (`gate_compare` +
+//! `load_bench_entries`, driven by the `bench_gate` bin): it compares a
+//! run's `BENCH_*.json` against the committed `rust/baselines/` copies,
+//! normalizing by the run's **median cur/base ratio** so absolute machine
+//! speed cancels out — only benchmarks that got slower *relative to the
+//! rest of the run* fail the gate.
 
+use std::path::Path;
 use std::time::{Duration, Instant};
 
-use crate::util::json::Json;
-use crate::util::stats::{summarize, Summary};
+use anyhow::{Context, Result};
+
+use crate::util::json::{self, Json};
+use crate::util::stats::{percentile_sorted, summarize, Summary};
 
 #[derive(Debug, Clone)]
 pub struct BenchConfig {
@@ -125,6 +135,150 @@ pub fn record_named(bench: &str, results: &[BenchResult]) {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Bench-regression gate
+// ---------------------------------------------------------------------------
+
+/// One tracked benchmark compared against its committed baseline.
+#[derive(Debug, Clone)]
+pub struct GateRow {
+    pub name: String,
+    pub base_ms: f64,
+    pub cur_ms: f64,
+    /// `cur / base`.
+    pub ratio: f64,
+    /// `ratio` divided by the run's median ratio (machine-speed
+    /// calibration: a uniformly slower host shifts every ratio equally
+    /// and cancels out).
+    pub norm_ratio: f64,
+    /// Baseline below the noise floor — reported, never failed.
+    pub below_floor: bool,
+    pub regressed: bool,
+}
+
+/// The result of gating one `BENCH_*.json` pair.
+#[derive(Debug, Clone, Default)]
+pub struct GateReport {
+    pub rows: Vec<GateRow>,
+    /// Baseline entries with no counterpart in the current run
+    /// (coverage rot — reported as warnings).
+    pub missing: Vec<String>,
+    /// Median cur/base ratio used as the machine-speed calibration.
+    pub calibration: f64,
+    pub threshold: f64,
+    pub floor_ms: f64,
+}
+
+impl GateReport {
+    pub fn failed(&self) -> bool {
+        self.rows.iter().any(|r| r.regressed)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let rows = self
+            .rows
+            .iter()
+            .map(|r| {
+                Json::from_pairs(vec![
+                    ("name", r.name.as_str().into()),
+                    ("base_ms", r.base_ms.into()),
+                    ("cur_ms", r.cur_ms.into()),
+                    ("ratio", r.ratio.into()),
+                    ("norm_ratio", r.norm_ratio.into()),
+                    ("below_floor", r.below_floor.into()),
+                    ("regressed", r.regressed.into()),
+                ])
+            })
+            .collect();
+        Json::from_pairs(vec![
+            ("failed", self.failed().into()),
+            ("calibration", self.calibration.into()),
+            ("threshold", self.threshold.into()),
+            ("floor_ms", self.floor_ms.into()),
+            ("missing", Json::Arr(self.missing.iter().map(|m| m.as_str().into()).collect())),
+            ("rows", Json::Arr(rows)),
+        ])
+    }
+}
+
+/// Compare a run against its baseline. Entries are `(name, min_ms)` —
+/// min-of-iterations is the most noise-robust point of a short smoke
+/// run. A tracked metric **regresses** when its cur/base ratio exceeds
+/// both `1 + threshold` outright *and* the run's median ratio by more
+/// than `threshold` (e.g. 0.25 = 25%) — the median normalization cancels
+/// machine speed without letting a broadly-improved run flag its
+/// untouched benchmarks. Baselines faster than `floor_ms` never fail the
+/// gate: sub-floor smoke timings are dominated by scheduler noise.
+pub fn gate_compare(
+    baseline: &[(String, f64)],
+    current: &[(String, f64)],
+    threshold: f64,
+    floor_ms: f64,
+) -> GateReport {
+    use std::collections::BTreeMap;
+    let cur: BTreeMap<&str, f64> = current.iter().map(|(n, v)| (n.as_str(), *v)).collect();
+    let mut rows = Vec::new();
+    let mut missing = Vec::new();
+    let mut ratios = Vec::new();
+    for (name, base) in baseline {
+        match cur.get(name.as_str()) {
+            Some(&c) if *base > 0.0 && c > 0.0 => {
+                let ratio = c / *base;
+                ratios.push(ratio);
+                rows.push(GateRow {
+                    name: name.clone(),
+                    base_ms: *base,
+                    cur_ms: c,
+                    ratio,
+                    norm_ratio: ratio,
+                    below_floor: *base < floor_ms,
+                    regressed: false,
+                });
+            }
+            _ => missing.push(name.clone()),
+        }
+    }
+    ratios.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut calibration = percentile_sorted(&ratios, 0.5);
+    if !calibration.is_finite() || calibration <= 0.0 {
+        calibration = 1.0;
+    }
+    for r in rows.iter_mut() {
+        r.norm_ratio = r.ratio / calibration;
+        // Both conditions must hold: slower than the rest of the run
+        // (norm) AND slower than its own baseline (raw) — otherwise a PR
+        // that genuinely speeds up most benches would shift the median
+        // below 1 and flag the untouched ones.
+        r.regressed = !r.below_floor
+            && r.norm_ratio > 1.0 + threshold
+            && r.ratio > 1.0 + threshold;
+    }
+    GateReport { rows, missing, calibration, threshold, floor_ms }
+}
+
+/// Read the `(name, min_ms)` entries of one `BENCH_*.json` artifact (the
+/// array format written by [`record_named`]).
+pub fn load_bench_entries(path: &Path) -> Result<Vec<(String, f64)>> {
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("reading {}", path.display()))?;
+    let v = json::parse(&text)
+        .map_err(|e| anyhow::anyhow!("parsing {}: {e:?}", path.display()))?;
+    let arr = v.as_arr().with_context(|| format!("{}: not a JSON array", path.display()))?;
+    let mut out = Vec::with_capacity(arr.len());
+    for item in arr {
+        let name = item
+            .get("name")
+            .and_then(Json::as_str)
+            .with_context(|| format!("{}: entry without a name", path.display()))?;
+        let ms = item
+            .get("min_ms")
+            .and_then(Json::as_f64)
+            .with_context(|| format!("{}: {name} has no min_ms", path.display()))?;
+        out.push((name.to_string(), ms));
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -140,5 +294,86 @@ mod tests {
         let r = run_bench("sleep1ms", &cfg, || std::thread::sleep(Duration::from_millis(1)));
         assert_eq!(r.iters, 5);
         assert!(r.ms.mean >= 0.9, "mean {:.3}", r.ms.mean);
+    }
+
+    fn entries(v: &[(&str, f64)]) -> Vec<(String, f64)> {
+        v.iter().map(|(n, x)| (n.to_string(), *x)).collect()
+    }
+
+    #[test]
+    fn gate_passes_on_identical_runs() {
+        let base = entries(&[("a", 10.0), ("b", 20.0), ("c", 5.0)]);
+        let rep = gate_compare(&base, &base, 0.25, 0.5);
+        assert!(!rep.failed());
+        assert!(rep.missing.is_empty());
+        assert!((rep.calibration - 1.0).abs() < 1e-9);
+        assert!(rep.rows.iter().all(|r| !r.regressed && (r.norm_ratio - 1.0).abs() < 1e-9));
+    }
+
+    /// A uniformly slower host shifts every ratio equally — the median
+    /// calibration cancels it and the gate stays green.
+    #[test]
+    fn gate_calibrates_out_machine_speed() {
+        let base = entries(&[("a", 10.0), ("b", 20.0), ("c", 5.0), ("d", 40.0)]);
+        let cur = entries(&[("a", 30.0), ("b", 60.0), ("c", 15.0), ("d", 120.0)]);
+        let rep = gate_compare(&base, &cur, 0.25, 0.5);
+        assert!(!rep.failed(), "uniform 3x slowdown must calibrate away");
+        assert!((rep.calibration - 3.0).abs() < 1e-9);
+    }
+
+    /// A run that genuinely speeds up most benches shifts the median
+    /// below 1 — the untouched benches must NOT be flagged (their raw
+    /// ratio is still 1.0).
+    #[test]
+    fn gate_ignores_untouched_benches_when_others_improve() {
+        let base = entries(&[("a", 10.0), ("b", 20.0), ("c", 40.0), ("d", 8.0), ("e", 16.0)]);
+        let cur = entries(&[("a", 5.0), ("b", 10.0), ("c", 20.0), ("d", 8.0), ("e", 16.0)]);
+        let rep = gate_compare(&base, &cur, 0.25, 0.5);
+        assert!(!rep.failed(), "a pure-improvement run must pass: {:?}", rep.rows);
+    }
+
+    /// An injected >25% regression on one benchmark fails the gate — the
+    /// scenario the CI bench-smoke job is built to catch.
+    #[test]
+    fn gate_fails_on_injected_regression() {
+        let base = entries(&[("a", 10.0), ("b", 20.0), ("c", 5.0), ("d", 40.0), ("e", 8.0)]);
+        let mut cur = base.clone();
+        cur[1].1 *= 2.0; // inject: "b" got 2x slower
+        let rep = gate_compare(&base, &cur, 0.25, 0.5);
+        assert!(rep.failed());
+        let bad: Vec<&str> =
+            rep.rows.iter().filter(|r| r.regressed).map(|r| r.name.as_str()).collect();
+        assert_eq!(bad, vec!["b"]);
+        assert!(rep.to_json().req("failed").as_bool().unwrap());
+    }
+
+    #[test]
+    fn gate_respects_noise_floor_and_reports_missing() {
+        // "tiny" is below the 0.5ms floor: 10x slower but never failed
+        let base = entries(&[("tiny", 0.01), ("a", 10.0), ("b", 20.0), ("gone", 7.0)]);
+        let cur = entries(&[("tiny", 0.1), ("a", 10.0), ("b", 20.0), ("new", 3.0)]);
+        let rep = gate_compare(&base, &cur, 0.25, 0.5);
+        assert!(!rep.failed());
+        let tiny = rep.rows.iter().find(|r| r.name == "tiny").unwrap();
+        assert!(tiny.below_floor && !tiny.regressed);
+        assert_eq!(rep.missing, vec!["gone".to_string()]);
+    }
+
+    #[test]
+    fn gate_roundtrips_bench_artifacts() {
+        let dir = std::env::temp_dir().join(format!("lkv_gate_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_demo.json");
+        let results = vec![
+            BenchResult { name: "x".into(), iters: 2, ms: summarize(&[1.0, 2.0]) },
+            BenchResult { name: "y".into(), iters: 2, ms: summarize(&[3.0, 5.0]) },
+        ];
+        let arr = Json::Arr(results.iter().map(BenchResult::to_json).collect());
+        std::fs::write(&path, arr.to_string()).unwrap();
+        let entries = load_bench_entries(&path).unwrap();
+        assert_eq!(entries, vec![("x".to_string(), 1.0), ("y".to_string(), 3.0)]);
+        let rep = gate_compare(&entries, &entries, 0.25, 0.5);
+        assert!(!rep.failed());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

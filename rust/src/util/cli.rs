@@ -59,6 +59,12 @@ impl Args {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// `usize` option clamped into `[lo, hi]` (0 stays 0 when `lo` is 0 —
+    /// used for "0 = disabled" knobs like `--prefill-chunk`).
+    pub fn usize_clamped(&self, key: &str, default: usize, lo: usize, hi: usize) -> usize {
+        self.usize(key, default).clamp(lo, hi)
+    }
+
     pub fn has(&self, flag: &str) -> bool {
         self.flags.iter().any(|f| f == flag)
     }
@@ -108,5 +114,15 @@ mod tests {
     fn trailing_key_becomes_flag() {
         let a = Args::parse(&s(&["--end"]), &[]);
         assert!(a.has("end"));
+    }
+
+    #[test]
+    fn usize_clamped_bounds() {
+        let a = Args::parse(&s(&["--prefill-chunk", "100000"]), &[]);
+        assert_eq!(a.usize_clamped("prefill-chunk", 0, 0, 1024), 1024);
+        let a = Args::parse(&s(&[]), &[]);
+        assert_eq!(a.usize_clamped("prefill-chunk", 0, 0, 1024), 0);
+        let a = Args::parse(&s(&["--prefill-chunk=64"]), &[]);
+        assert_eq!(a.usize_clamped("prefill-chunk", 0, 0, 1024), 64);
     }
 }

@@ -1,0 +1,204 @@
+//! Chunked-vs-monolithic prefill equivalence.
+//!
+//! The chunked prefill contract (`runtime::backend::ChunkState`,
+//! `engine::chunked::ChunkedPrefill`) promises **bit-identical** results
+//! to the monolithic graphs: same `ScoreBundle` tensors, same kept-slot
+//! selection, same first-token logits, and identical compacted decode
+//! caches — for every `Method::parse`-able policy and for chunk sizes
+//! that do and do not divide the prompt length. These tests enforce that
+//! promise on the reference backend, plus an end-to-end check that the
+//! mixed-batching engine loop serves identical generations with chunking
+//! on and off.
+
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+
+use lookaheadkv::engine::{Engine, EngineConfig, PrefillOutput};
+use lookaheadkv::eviction::{EvictionConfig, Method, ScoreBundle};
+use lookaheadkv::kvcache::SeqCache;
+use lookaheadkv::metrics::Metrics;
+use lookaheadkv::model::tokenizer::encode;
+use lookaheadkv::runtime::artifacts::default_artifacts_dir;
+use lookaheadkv::scheduler::{EngineLoop, LoopConfig, Request, RequestQueue};
+use lookaheadkv::util::proptest;
+use lookaheadkv::util::rng::argmax;
+
+const ALL_METHODS: &[&str] = &[
+    "full", "random", "streaming", "snapkv", "pyramidkv", "h2o", "tova", "laq", "speckv",
+    "lookaheadkv", "lkv+suffix",
+];
+
+fn engine() -> Engine {
+    Engine::new(&default_artifacts_dir(), EngineConfig::new("lkv-tiny")).expect("engine")
+}
+
+fn assert_bundles_identical(a: &ScoreBundle, b: &ScoreBundle, tag: &str) {
+    assert_eq!(a.len, b.len, "{tag}: bundle len");
+    assert_eq!(a.win_start, b.win_start, "{tag}: win_start");
+    assert_eq!(a.win_rows, b.win_rows, "{tag}: win_rows");
+    assert_eq!(a.w_use_override, b.w_use_override, "{tag}: w_use_override");
+    let pairs = [
+        ("window_scores", &a.window_scores, &b.window_scores),
+        ("h2o_scores", &a.h2o_scores, &b.h2o_scores),
+        ("lkv_scores", &a.lkv_scores, &b.lkv_scores),
+    ];
+    for (name, ta, tb) in pairs {
+        match (ta, tb) {
+            (None, None) => {}
+            (Some(x), Some(y)) => {
+                assert_eq!(x.shape, y.shape, "{tag}: {name} shape");
+                // finite probabilities: f32 equality == bit identity here
+                assert_eq!(x.data, y.data, "{tag}: {name} not bit-identical");
+            }
+            _ => panic!("{tag}: {name} presence differs (mono vs chunked)"),
+        }
+    }
+}
+
+fn run_chunked(engine: &Engine, prompt: &[i32], method: &Method, chunk: usize) -> PrefillOutput {
+    let mut job = engine.chunked_prefill_begin(prompt, method, chunk).expect("begin");
+    let mut steps = 0;
+    while !job.step(engine).expect("chunk step") {
+        steps += 1;
+        assert!(steps < 10_000, "chunked prefill does not terminate");
+    }
+    job.into_output().expect("output")
+}
+
+fn assert_equivalent(
+    engine: &Engine,
+    prompt: &[i32],
+    method: &Method,
+    mono: &PrefillOutput,
+    chunk: usize,
+) {
+    let tag = format!("{} len={} chunk={chunk}", method.name(), prompt.len());
+    let chunked = run_chunked(engine, prompt, method, chunk);
+    assert_eq!(chunked.bucket, mono.bucket, "{tag}: bucket");
+    assert_eq!(chunked.logits, mono.logits, "{tag}: first-token logits not bit-identical");
+    assert_eq!(argmax(&chunked.logits), argmax(&mono.logits), "{tag}: first decoded token");
+    assert_bundles_identical(&mono.bundle, &chunked.bundle, &tag);
+    // identical selection, and identical compacted decode caches (dead
+    // padding rows may differ between the paths; kept rows must not)
+    let evcfg = EvictionConfig::new(24);
+    let n_layers = engine.n_layers("lkv-tiny");
+    let sel_m = method.select(&evcfg, n_layers, &mono.bundle);
+    let sel_c = method.select(&evcfg, n_layers, &chunked.bundle);
+    assert_eq!(sel_m, sel_c, "{tag}: kept-slot selection");
+    let cap = engine
+        .rt
+        .manifest()
+        .decode_cap("lkv-tiny", sel_m.max_kept() + 4)
+        .expect("decode cap");
+    let cm = SeqCache::from_selection(&mono.k, &mono.v, &sel_m.per_layer, prompt.len(), cap);
+    let cc = SeqCache::from_selection(&chunked.k, &chunked.v, &sel_c.per_layer, prompt.len(), cap);
+    assert_eq!(cm.k.data, cc.k.data, "{tag}: compacted K cache");
+    assert_eq!(cm.v.data, cc.v.data, "{tag}: compacted V cache");
+    assert_eq!(cm.lens, cc.lens, "{tag}: cache lens");
+}
+
+/// Every parseable policy, at chunk sizes that do not divide the prompt
+/// (7, 16), divide it unevenly, and exceed it (single chunk).
+#[test]
+fn chunked_prefill_matches_monolithic_for_every_policy() {
+    let engine = engine();
+    assert!(engine.rt.supports_chunked_prefill(), "reference backend must support chunking");
+    let prompt = encode(
+        "lorem;ipsum;K7F=Q2Z;amet;tempor;labore;magna;aliqua;erat;sed;K7F=",
+        true,
+        false,
+    );
+    for name in ALL_METHODS {
+        let method = Method::parse(name).unwrap_or_else(|| panic!("{name:?} must parse"));
+        let mono = engine.prefill_for_method(&prompt, &method).expect("monolithic prefill");
+        for chunk in [7usize, 16, 1024] {
+            assert_equivalent(&engine, &prompt, &method, &mono, chunk);
+        }
+    }
+}
+
+/// Property: random prompt lengths and chunk sizes stay bit-identical
+/// for a representative policy mix (score-bundle heavy, lookahead, and
+/// draft-based).
+#[test]
+fn chunked_prefill_equivalence_property() {
+    let engine = engine();
+    // RefCell caches inside the reference backend are not RefUnwindSafe;
+    // the harness only unwinds on assertion failure, never mid-borrow.
+    let engine_ref = std::panic::AssertUnwindSafe(&engine);
+    let cfg = proptest::Config { cases: 8, max_size: 80, ..proptest::Config::new() };
+    proptest::check("chunked prefill == monolithic", &cfg, move |rng, size| {
+        let engine: &Engine = engine_ref.0;
+        let len = 12 + size.min(80);
+        let prompt: Vec<i32> = (0..len).map(|_| (rng.next_u64() % 256) as i32).collect();
+        let chunk = 1 + (rng.next_u64() as usize) % (len + 4);
+        let methods = ["snapkv", "lookaheadkv", "h2o", "laq"];
+        let method = Method::parse(methods[(rng.next_u64() as usize) % methods.len()]).unwrap();
+        let mono = engine.prefill_for_method(&prompt, &method).expect("monolithic prefill");
+        assert_equivalent(engine, &prompt, &method, &mono, chunk);
+    });
+}
+
+/// End to end through the engine loop: the same requests produce the
+/// same generations with mixed (chunked) batching on and off, and the
+/// chunked run records its scheduling metrics.
+#[test]
+fn engine_loop_chunked_matches_monolithic() {
+    let prompts = [
+        "A7K=Q2Z;lorem;ipsum;dolor;sit;amet;consectetur;A7K=",
+        "B3X=W9Y;tempor;incididunt;ut;labore;et;dolore;B3X=",
+        "C5M=R4T;magna;aliqua;ut;enim;ad;minim;veniam;C5M=",
+    ];
+    let run = |chunk: usize| {
+        let engine = engine();
+        let queue = Arc::new(RequestQueue::new(16));
+        let metrics = Arc::new(Metrics::new());
+        let mut receivers = Vec::new();
+        for (i, p) in prompts.iter().enumerate() {
+            let (tx, rx) = channel();
+            receivers.push(rx);
+            let method = if i % 2 == 0 { Method::SnapKV } else { Method::parse("lkv").unwrap() };
+            queue
+                .submit(Request {
+                    id: i as u64,
+                    prompt: encode(p, true, false),
+                    method,
+                    budget: 16,
+                    max_new: 5,
+                    temperature: 0.0,
+                    reply: tx,
+                })
+                .expect("submit");
+        }
+        queue.close();
+        let cfg = LoopConfig {
+            max_active: 2,
+            prefill_chunk_tokens: chunk,
+            ..LoopConfig::default()
+        };
+        EngineLoop::new(engine, cfg, Arc::clone(&queue), Arc::clone(&metrics)).run();
+        let mut replies: Vec<_> = receivers
+            .into_iter()
+            .map(|rx| rx.recv().expect("reply"))
+            .collect();
+        replies.sort_by_key(|r| r.id);
+        (replies, metrics)
+    };
+    let (mono, mono_metrics) = run(0);
+    let (chunked, chunk_metrics) = run(8);
+    assert_eq!(mono.len(), chunked.len());
+    for (a, b) in mono.iter().zip(chunked.iter()) {
+        assert!(a.error.is_none(), "monolithic loop error: {:?}", a.error);
+        assert!(b.error.is_none(), "chunked loop error: {:?}", b.error);
+        assert_eq!(a.text, b.text, "req {}: generation differs", a.id);
+        assert_eq!(a.n_tokens, b.n_tokens, "req {}: token count differs", a.id);
+        assert_eq!(a.kept, b.kept, "req {}: kept slots differ", a.id);
+    }
+    assert_eq!(mono_metrics.counter("chunked_prefills"), 0);
+    assert_eq!(chunk_metrics.counter("chunked_prefills"), prompts.len() as u64);
+    assert!(
+        chunk_metrics.latency_summary("prefill_chunk_ms").map(|s| s.n).unwrap_or(0)
+            >= prompts.len(),
+        "chunked run must record per-chunk latencies"
+    );
+}
