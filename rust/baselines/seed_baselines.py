@@ -118,6 +118,34 @@ def bench_prefill():
     return rows
 
 
+def bench_prefix():
+    """Warm (prefix-cache resume) vs cold TTFT on the shared-system-prompt
+    workload (bench_prefix; 85% shared tokens, SnapKV, chunk 128).
+
+    Cold runs the whole prompt; warm recomputes only the rows past the
+    block-aligned resume point (capped at win_start = len - 32), paying
+    attention over the full causal prefix for just those rows, plus a
+    seed-copy/lookup overhead folded into the per-chunk OVH terms."""
+    rows = []
+    window, block = 32, 64
+    for ctx in (512, 1024):
+        budget = (ctx - 24) * 9 // 10  # ctx_chars_for
+        length = budget + 6  # + BOS + query tail
+        resume = min(length - window, length - 1) // block * block
+        chunk = 128
+        sel = select_ms(length, "SnapKV")
+        cold = chunked_prefill(length, -(-length // chunk)) + sel
+        tail = length - resume
+        warm = (
+            ms(TINY_MM * tail + TINY_ATTN * (length * length - resume * resume) / 2)
+            + OVH * (-(-tail // block) + 2)  # block-split chunks + lookup/insert
+            + sel
+        ) * 1.2  # seed-copy / tree-bookkeeping overhead not in the FLOP model
+        rows.append(row(f"prefix/cold/ctx{ctx}", cold))
+        rows.append(row(f"prefix/warm/ctx{ctx}", warm))
+    return rows
+
+
 def bench_scheduler():
     rows = [
         row("queue/submit_pop_1k", 0.25),
@@ -146,6 +174,7 @@ def main():
     for name, rows in (
         ("eviction", bench_eviction()),
         ("prefill", bench_prefill()),
+        ("prefix", bench_prefix()),
         ("scheduler", bench_scheduler()),
     ):
         path = os.path.join(here, f"BENCH_{name}.json")

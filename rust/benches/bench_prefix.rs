@@ -1,0 +1,117 @@
+//! Cross-request prefix cache: warm (radix-tree resume) vs cold TTFT on
+//! a shared-system-prompt workload (`workload::shared_prefix_suite`,
+//! 85% shared tokens). Each measured iteration is a full TTFT:
+//! chunked prefill (resumed mid-prompt on the warm rows) + selection +
+//! compaction. The warm rows also pay the cache's own bookkeeping —
+//! lookup, seed copy, re-recording, insert — so the printed speedup is
+//! end to end, not just saved forward-pass work.
+
+mod common;
+
+use lookaheadkv::engine::{Engine, PrefixPlan};
+use lookaheadkv::eviction::{EvictionConfig, Method};
+use lookaheadkv::kvcache::{CacheManager, SeqCache};
+use lookaheadkv::model::tokenizer::encode;
+use lookaheadkv::util::bench::{record_named, run_bench, BenchConfig};
+use lookaheadkv::workload;
+
+const BLOCK: usize = 64;
+const CHUNK: usize = 128;
+
+/// One full time-to-first-token unit of work: (optionally prefix-cached)
+/// chunked prefill, then selection + compaction. Returns the compacted
+/// cache's live slots so the optimizer cannot elide the work.
+fn prefill_ttft(
+    engine: &Engine,
+    mut mgr: Option<&mut CacheManager>,
+    prompt: &[i32],
+    method: &Method,
+) -> usize {
+    let mut pin = None;
+    let plan = match mgr.as_deref_mut() {
+        Some(m) => {
+            let info = engine.prefix_pass_info(prompt.len(), method).expect("pass info");
+            let mat = m
+                .prefix_lookup(&info.model, prompt, info.need_scores, info.resume_cap)
+                .expect("prefix cache enabled");
+            if !mat.pin.is_empty() {
+                pin = Some(mat.pin);
+            }
+            Some(PrefixPlan { block_size: BLOCK, seed: mat.seed })
+        }
+        None => None,
+    };
+    let mut job = engine
+        .chunked_prefill_begin_with_prefix(prompt, method, CHUNK, plan)
+        .expect("begin prefill");
+    while !job.step(engine).expect("prefill step") {}
+    let records = job.take_prefix_records();
+    let out = job.into_output().expect("prefill output");
+    let evcfg = EvictionConfig::new(64);
+    let n_layers = engine.n_layers(&engine.cfg.model);
+    let sel = method.select(&evcfg, n_layers, &out.bundle);
+    let cap = engine
+        .rt
+        .manifest()
+        .decode_cap(&engine.cfg.model, sel.max_kept() + 8)
+        .expect("decode cap");
+    let cache = SeqCache::from_selection(&out.k, &out.v, &sel.per_layer, prompt.len(), cap);
+    if let Some(m) = mgr.as_deref_mut() {
+        if let Some(recs) = records {
+            m.prefix_insert(&recs.model, prompt, recs.records);
+        }
+        if let Some(pin) = pin.take() {
+            m.prefix_release(pin);
+        }
+    }
+    cache.live_slots()
+}
+
+fn main() {
+    let Some(engine) = common::engine_or_skip("prefix") else { return };
+    if !engine.rt.supports_chunked_prefill() {
+        println!("bench prefix: backend has no chunked prefill, skipping");
+        return;
+    }
+    let cfg = BenchConfig { min_iters: 6, max_iters: 16, ..Default::default() };
+    let method = Method::SnapKV;
+    let mut results = Vec::new();
+    for ctx in [512usize, 1024] {
+        let suite = workload::shared_prefix_suite(17, 4, ctx, 85);
+        let prompts: Vec<Vec<i32>> =
+            suite.samples.iter().map(|s| encode(&s.prompt(), true, false)).collect();
+
+        let mut i = 0usize;
+        let cold = run_bench(&format!("prefix/cold/ctx{ctx}"), &cfg, || {
+            let p = &prompts[i % prompts.len()];
+            i += 1;
+            std::hint::black_box(prefill_ttft(&engine, None, p, &method));
+        });
+        let cold_mean = cold.ms.mean;
+        results.push(cold);
+
+        // Warm: prime the tree with one recording pass per prompt, then
+        // measure steady-state resumed prefills.
+        let mut mgr = CacheManager::new(1 << 20, BLOCK);
+        mgr.enable_prefix_cache(0);
+        for p in &prompts {
+            prefill_ttft(&engine, Some(&mut mgr), p, &method);
+        }
+        let mut j = 0usize;
+        let warm = run_bench(&format!("prefix/warm/ctx{ctx}"), &cfg, || {
+            let p = &prompts[j % prompts.len()];
+            j += 1;
+            std::hint::black_box(prefill_ttft(&engine, Some(&mut mgr), p, &method));
+        });
+        let warm_mean = warm.ms.mean;
+        results.push(warm);
+        let stats = mgr.prefix_stats().expect("prefix stats");
+        println!(
+            "prefix cache @ctx{ctx}: {:.2}x TTFT speedup (cold {cold_mean:.2} ms -> warm \
+             {warm_mean:.2} ms; tree holds {} blocks)",
+            cold_mean / warm_mean.max(1e-9),
+            stats.blocks
+        );
+    }
+    record_named("prefix", &results);
+}

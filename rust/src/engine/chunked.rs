@@ -24,11 +24,13 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use super::prefill::{PrefillBreakdown, PrefillOutput};
+use super::prefill::{win_start, PrefillBreakdown, PrefillOutput};
 use super::Engine;
 use crate::eviction::{Method, ScoreBundle};
+use crate::kvcache::prefix::BlockRecord;
 use crate::kvcache::SeqCache;
-use crate::runtime::ChunkState;
+use crate::runtime::{ChunkState, PrefixSeed};
+use crate::util::tensor::TensorF;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum PassKind {
@@ -54,6 +56,89 @@ enum Stage {
     Done,
 }
 
+/// Prefix-cache integration for one chunked prefill: the block size at
+/// which the first pass records its state for the tree, and (on a cache
+/// hit) the seed to resume from instead of token 0.
+pub struct PrefixPlan {
+    pub block_size: usize,
+    pub seed: Option<PrefixSeed>,
+}
+
+/// Where the first prefill pass of a method runs and how far a cached
+/// prefix may seed it (see [`Engine::prefix_pass_info`]).
+#[derive(Debug, Clone)]
+pub struct PrefixPassInfo {
+    /// Model whose tree is matched (the draft model for SpecKV).
+    pub model: String,
+    /// Base passes need cached H2O sums; lookahead passes only KV.
+    pub need_scores: bool,
+    /// Deepest token position a seed may cover: `win_start` for base
+    /// passes (observation-window rows are never cached), the last
+    /// prompt row otherwise (its logits must be recomputed).
+    pub resume_cap: usize,
+}
+
+/// The first pass's newly computed blocks, handed to
+/// [`crate::kvcache::PrefixCache`] after the job completes.
+pub struct PrefixRecords {
+    pub model: String,
+    pub records: Vec<BlockRecord>,
+}
+
+/// Captures block-aligned snapshots of the first pass's state as its
+/// chunks cross block boundaries (chunks are split *at* the boundaries
+/// while recording — chunk geometry never changes results, see
+/// `tests/chunked.rs`).
+struct Recorder {
+    block: usize,
+    model: String,
+    /// Blocks below this offset came from the cache (the seed) and are
+    /// not re-recorded.
+    upto: usize,
+    /// Recording covers only the first pass; `advance` turns this off.
+    active: bool,
+    records: Vec<BlockRecord>,
+}
+
+impl Recorder {
+    /// Record the block ending at `end` (a block multiple) from the
+    /// pass state: its KV rows plus, for base passes, the *cumulative*
+    /// H2O column sums over all rows processed so far.
+    fn capture(&mut self, state: &ChunkState, toks: &[i32], end: usize) {
+        let b = self.block;
+        if end % b != 0 || end <= self.upto {
+            return;
+        }
+        let (l, hkv, bucket, dh) =
+            (state.k.shape[0], state.k.shape[1], state.k.shape[2], state.k.shape[3]);
+        let start = end - b;
+        let mut k = TensorF::zeros(vec![l, hkv, b, dh]);
+        let mut v = TensorF::zeros(vec![l, hkv, b, dh]);
+        for li in 0..l {
+            for g in 0..hkv {
+                let src = ((li * hkv + g) * bucket + start) * dh;
+                let dst = ((li * hkv + g) * b) * dh;
+                k.data[dst..dst + b * dh].copy_from_slice(&state.k.data[src..src + b * dh]);
+                v.data[dst..dst + b * dh].copy_from_slice(&state.v.data[src..src + b * dh]);
+            }
+        }
+        let h2o = state.bundle.h2o_scores.as_ref().map(|acc| {
+            let (l2, h, s) = (acc.shape[0], acc.shape[1], acc.shape[2]);
+            let mut t = TensorF::zeros(vec![l2, h, end]);
+            for li in 0..l2 {
+                for hi in 0..h {
+                    let src = (li * h + hi) * s;
+                    let dst = (li * h + hi) * end;
+                    t.data[dst..dst + end].copy_from_slice(&acc.data[src..src + end]);
+                }
+            }
+            t
+        });
+        self.records.push(BlockRecord { start, tokens: toks[start..end].to_vec(), k, v, h2o });
+        self.upto = end;
+    }
+}
+
 /// One request's in-flight incremental prefill.
 pub struct ChunkedPrefill {
     method: Method,
@@ -68,6 +153,7 @@ pub struct ChunkedPrefill {
     pre_draft: Option<ChunkState>,
     /// `[prompt; draft]` fed to the rescore pass.
     concat: Vec<i32>,
+    recorder: Option<Recorder>,
     output: Option<PrefillOutput>,
 }
 
@@ -82,6 +168,24 @@ impl Engine {
         method: &Method,
         chunk: usize,
     ) -> Result<ChunkedPrefill> {
+        self.chunked_prefill_begin_with_prefix(tokens, method, chunk, None)
+    }
+
+    /// [`Engine::chunked_prefill_begin`] with prefix-cache integration:
+    /// with a [`PrefixPlan`], the first pass resumes from `plan.seed`
+    /// (when present) instead of token 0, and records its newly computed
+    /// block-aligned state for tree insertion
+    /// ([`ChunkedPrefill::take_prefix_records`]). Only the first pass is
+    /// seeded/recorded — it is the one carrying the shared-system-prompt
+    /// win; later passes (`lkv+suffix` base, LAQ/SpecKV rescore) always
+    /// run cold.
+    pub fn chunked_prefill_begin_with_prefix(
+        &self,
+        tokens: &[i32],
+        method: &Method,
+        chunk: usize,
+        prefix: Option<PrefixPlan>,
+    ) -> Result<ChunkedPrefill> {
         anyhow::ensure!(chunk >= 1, "prefill chunk size must be >= 1");
         anyhow::ensure!(!tokens.is_empty(), "empty prompt");
         anyhow::ensure!(
@@ -89,11 +193,30 @@ impl Engine {
             "backend {} does not support chunked prefill",
             self.rt.backend_name()
         );
+        if let Some(p) = &prefix {
+            anyhow::ensure!(p.block_size >= 1, "prefix block size must be >= 1");
+            if let Some(s) = &p.seed {
+                anyhow::ensure!(
+                    s.len % p.block_size == 0,
+                    "prefix seed of {} tokens is not block-aligned (block {})",
+                    s.len,
+                    p.block_size
+                );
+            }
+        }
         let m = self.rt.manifest();
         let model = self.cfg.model.clone();
         let len = tokens.len();
-        let (kind, state) = if let Some(variant) = method.lkv_variant() {
-            (PassKind::Lkv, ChunkState::new(m, &model, Some(variant), len, len - 1)?)
+        let seed = prefix.as_ref().and_then(|p| p.seed.as_ref());
+        let mk = |pass_model: &str, variant: Option<&str>| -> Result<ChunkState> {
+            match seed {
+                Some(s) => ChunkState::resume(m, pass_model, variant, len, len - 1, s),
+                None => ChunkState::new(m, pass_model, variant, len, len - 1),
+            }
+        };
+        let (kind, pass_model, state) = if let Some(variant) = method.lkv_variant() {
+            let st = mk(&model, Some(variant))?;
+            (PassKind::Lkv, model, st)
         } else if method.needs_draft() {
             let pass1_model = match method {
                 Method::SpecKV => {
@@ -101,10 +224,19 @@ impl Engine {
                 }
                 _ => model,
             };
-            (PassKind::PreDraft, ChunkState::new(m, &pass1_model, None, len, len - 1)?)
+            let st = mk(&pass1_model, None)?;
+            (PassKind::PreDraft, pass1_model, st)
         } else {
-            (PassKind::Base, ChunkState::new(m, &model, None, len, len - 1)?)
+            let st = mk(&model, None)?;
+            (PassKind::Base, model, st)
         };
+        let recorder = prefix.map(|p| Recorder {
+            block: p.block_size,
+            model: pass_model,
+            upto: p.seed.as_ref().map(|s| s.len).unwrap_or(0),
+            active: true,
+            records: Vec::new(),
+        });
         Ok(ChunkedPrefill {
             method: method.clone(),
             prompt: tokens.to_vec(),
@@ -114,8 +246,36 @@ impl Engine {
             lkv_pass: None,
             pre_draft: None,
             concat: Vec::new(),
+            recorder,
             output: None,
         })
+    }
+
+    /// Which model/pass the prefix cache should match for `method`, and
+    /// how deep a cached prefix may seed it. Errors for prompts too short
+    /// (or too long) to resume at all.
+    pub fn prefix_pass_info(&self, len: usize, method: &Method) -> Result<PrefixPassInfo> {
+        anyhow::ensure!(len >= 2, "prompt of {len} tokens is too short for prefix reuse");
+        if method.lkv_variant().is_some() {
+            // Lookahead pass: pure KV accumulation (scores come from the
+            // finalize suffix pass); everything but the logits row is
+            // resumable.
+            return Ok(PrefixPassInfo {
+                model: self.cfg.model.clone(),
+                need_scores: false,
+                resume_cap: len - 1,
+            });
+        }
+        let model = match method {
+            Method::SpecKV => {
+                self.cfg.draft_model.clone().context("SpecKV requires a draft model")?
+            }
+            _ => self.cfg.model.clone(),
+        };
+        let m = self.rt.manifest();
+        let bucket = m.prefill_bucket(len)?;
+        let cap = win_start(len, m.obs_window, bucket).min(len - 1);
+        Ok(PrefixPassInfo { model, need_scores: true, resume_cap: cap })
     }
 }
 
@@ -144,8 +304,26 @@ impl ChunkedPrefill {
                 &self.prompt
             };
             let lo = state.done;
-            let hi = (lo + self.chunk).min(state.len);
-            engine.rt.prefill_chunk(state, &toks[lo..hi])?;
+            let target = (lo + self.chunk).min(state.len);
+            let recording = self.recorder.as_ref().is_some_and(|r| r.active);
+            // While recording, this step's work is split *at* block
+            // boundaries so cumulative score snapshots land exactly on
+            // them (chunk geometry never changes results; total work per
+            // step stays <= `chunk` tokens either way).
+            let mut cur = lo;
+            while cur < target {
+                let hi = if recording {
+                    let b = self.recorder.as_ref().unwrap().block;
+                    target.min((cur / b + 1) * b)
+                } else {
+                    target
+                };
+                engine.rt.prefill_chunk(state, &toks[cur..hi])?;
+                if recording {
+                    self.recorder.as_mut().unwrap().capture(state, toks, hi);
+                }
+                cur = hi;
+            }
             let finished = state.done == state.len;
             if finished {
                 engine.rt.prefill_finalize(state)?;
@@ -188,8 +366,24 @@ impl ChunkedPrefill {
         Ok(out)
     }
 
+    /// The blocks the first pass recorded for the prefix tree (None when
+    /// no [`PrefixPlan`] was given or nothing new was computed). Call
+    /// before [`ChunkedPrefill::into_output`].
+    pub fn take_prefix_records(&mut self) -> Option<PrefixRecords> {
+        let r = self.recorder.take()?;
+        if r.records.is_empty() {
+            return None;
+        }
+        Some(PrefixRecords { model: r.model, records: r.records })
+    }
+
     /// Transition after a pass finishes.
     fn advance(&mut self, engine: &Engine) -> Result<()> {
+        // Recording covers only the first pass; whatever pass just
+        // finished, stop capturing.
+        if let Some(r) = self.recorder.as_mut() {
+            r.active = false;
+        }
         let stage = std::mem::replace(&mut self.stage, Stage::Done);
         let Stage::Pass { kind, state } = stage else {
             anyhow::bail!("advance without a finished pass")

@@ -21,9 +21,17 @@ pub struct BlockAllocator {
 }
 
 impl BlockAllocator {
+    /// `total_slots` not divisible by `block_size` rounds *up* to the next
+    /// whole block (a budget of 65 slots at block size 8 yields 9 blocks,
+    /// never a silently smaller pool). A zero-slot budget is a
+    /// configuration error and is rejected loudly.
     pub fn new(total_slots: usize, block_size: usize) -> Self {
-        assert!(block_size > 0);
-        let n_blocks = total_slots / block_size;
+        assert!(block_size > 0, "BlockAllocator block_size must be > 0");
+        assert!(
+            total_slots > 0,
+            "BlockAllocator needs a nonzero slot budget (got total_slots = 0)"
+        );
+        let n_blocks = total_slots.div_ceil(block_size);
         let free = (0..n_blocks as u32).rev().map(BlockId).collect();
         BlockAllocator { block_size, n_blocks, free, owners: HashMap::new(), peak_used: 0 }
     }
@@ -107,6 +115,29 @@ mod tests {
         assert!(!a.can_alloc(41));
         a.free(&b1);
         assert_eq!(a.free_blocks(), 8);
+    }
+
+    /// Regression: a slot budget that does not divide the block size used
+    /// to be silently truncated (65 slots @ block 8 -> 8 blocks = 64
+    /// slots). It must round up so the full budget is always allocatable.
+    #[test]
+    fn non_divisible_budget_rounds_up() {
+        let mut a = BlockAllocator::new(65, 8);
+        assert_eq!(a.total_blocks(), 9);
+        assert!(a.can_alloc(65));
+        let b = a.alloc(1, 65).unwrap();
+        assert_eq!(b.len(), 9);
+        assert_eq!(a.free_blocks(), 0);
+        // sub-block budgets still yield one usable block
+        let a2 = BlockAllocator::new(3, 8);
+        assert_eq!(a2.total_blocks(), 1);
+        assert!(a2.can_alloc(3));
+    }
+
+    #[test]
+    #[should_panic(expected = "nonzero slot budget")]
+    fn zero_slot_budget_is_rejected() {
+        let _ = BlockAllocator::new(0, 8);
     }
 
     #[test]

@@ -1,9 +1,15 @@
-//! Cache manager: per-sequence cache registry + global memory accounting.
+//! Cache manager: per-sequence cache registry + global memory accounting,
+//! with an optional cross-request [`PrefixCache`] sharing the same block
+//! pool (tree blocks are reclaimed before an admission is allowed to
+//! fail — see [`CacheManager::prefix_reclaim_for`]).
 
 use std::collections::HashMap;
 
 use super::block::BlockAllocator;
 use super::cache::SeqCache;
+use super::prefix::{
+    BlockRecord, PrefixCache, PrefixCacheConfig, PrefixMatch, PrefixPin, PrefixStats,
+};
 
 /// Bytes per slot for a model (one token's KV across layers/heads).
 pub fn bytes_per_slot(n_layers: usize, n_kv_heads: usize, head_dim: usize) -> usize {
@@ -22,13 +28,92 @@ pub struct CacheStats {
 pub struct CacheManager {
     allocator: BlockAllocator,
     seqs: HashMap<u64, SeqCache>,
+    prefix: Option<PrefixCache>,
 }
 
 impl CacheManager {
     /// `total_slots` is the global KV budget in token slots (the analog of
     /// GPU KV memory); `block_size` the allocation granularity.
     pub fn new(total_slots: usize, block_size: usize) -> CacheManager {
-        CacheManager { allocator: BlockAllocator::new(total_slots, block_size), seqs: HashMap::new() }
+        CacheManager {
+            allocator: BlockAllocator::new(total_slots, block_size),
+            seqs: HashMap::new(),
+            prefix: None,
+        }
+    }
+
+    /// Turn on the cross-request prefix cache, capped at `max_slots` KV
+    /// slots out of the shared pool (0 = bounded only by the pool itself
+    /// plus LRU reclamation under admission pressure).
+    pub fn enable_prefix_cache(&mut self, max_slots: usize) {
+        let block = self.allocator.block_size();
+        let max_blocks =
+            if max_slots == 0 { usize::MAX } else { max_slots.div_ceil(block).max(1) };
+        self.prefix = Some(PrefixCache::new(PrefixCacheConfig { block_size: block, max_blocks }));
+    }
+
+    pub fn prefix_enabled(&self) -> bool {
+        self.prefix.is_some()
+    }
+
+    /// Longest cached-prefix match (pins the path). None when the prefix
+    /// cache is disabled.
+    pub fn prefix_lookup(
+        &mut self,
+        model: &str,
+        tokens: &[i32],
+        need_scores: bool,
+        max_len: usize,
+    ) -> Option<PrefixMatch> {
+        self.prefix.as_mut().map(|p| p.lookup(model, tokens, need_scores, max_len))
+    }
+
+    /// Insert freshly recorded prefill blocks; returns blocks added.
+    pub fn prefix_insert(
+        &mut self,
+        model: &str,
+        tokens: &[i32],
+        records: Vec<BlockRecord>,
+    ) -> usize {
+        match self.prefix.as_mut() {
+            Some(p) => p.insert(&mut self.allocator, model, tokens, records),
+            None => 0,
+        }
+    }
+
+    /// Release a pinned match path.
+    pub fn prefix_release(&mut self, pin: PrefixPin) {
+        if let Some(p) = self.prefix.as_mut() {
+            p.release(pin);
+        }
+    }
+
+    /// Free unpinned prefix-tree blocks (LRU leaves first) until `slots`
+    /// more slots are allocatable, or the tree has nothing left to give.
+    /// Returns the number of blocks reclaimed. Called by the scheduler
+    /// before letting an admission fail on "kv pool exhausted".
+    pub fn prefix_reclaim_for(&mut self, slots: usize) -> usize {
+        let Some(p) = self.prefix.as_mut() else { return 0 };
+        let mut freed = 0;
+        while !self.allocator.can_alloc(slots) {
+            // ask for the whole shortfall at once (one batched LRU sweep
+            // per iteration, not one arena scan per block)
+            let need = self
+                .allocator
+                .blocks_for_slots(slots)
+                .saturating_sub(self.allocator.free_blocks())
+                .max(1);
+            let n = p.reclaim(&mut self.allocator, need);
+            if n == 0 {
+                break;
+            }
+            freed += n;
+        }
+        freed
+    }
+
+    pub fn prefix_stats(&self) -> Option<PrefixStats> {
+        self.prefix.as_ref().map(PrefixCache::stats)
     }
 
     /// Admission check for a sequence needing `cap` slots.
@@ -115,5 +200,34 @@ mod tests {
     fn remove_unknown_is_none() {
         let mut m = CacheManager::new(64, 8);
         assert!(m.remove(99).is_none());
+    }
+
+    /// Prefix-tree blocks come out of the same pool as sequence caches,
+    /// and are given back (LRU) before an admission is allowed to fail.
+    #[test]
+    fn prefix_blocks_are_reclaimed_under_admission_pressure() {
+        let mut m = CacheManager::new(64, 8); // 8 blocks
+        m.enable_prefix_cache(0);
+        assert!(m.prefix_enabled());
+        let tokens: Vec<i32> = (0..16).collect(); // 2 blocks
+        let records: Vec<BlockRecord> = (0..2)
+            .map(|d| BlockRecord {
+                start: d * 8,
+                tokens: tokens[d * 8..(d + 1) * 8].to_vec(),
+                k: TensorF::zeros(vec![1, 1, 8, 2]),
+                v: TensorF::zeros(vec![1, 1, 8, 2]),
+                h2o: Some(TensorF::zeros(vec![1, 2, (d + 1) * 8])),
+            })
+            .collect();
+        assert_eq!(m.prefix_insert("m", &tokens, records), 2);
+        assert_eq!(m.prefix_stats().unwrap().blocks, 2);
+        // sequences fill the remaining 6 blocks; the next admission must
+        // succeed only after the tree gives its 2 blocks back
+        assert!(m.reserve(1, 48));
+        assert!(!m.can_admit(16));
+        assert_eq!(m.prefix_reclaim_for(16), 2);
+        assert!(m.can_admit(16));
+        assert_eq!(m.prefix_stats().unwrap().blocks, 0);
+        assert_eq!(m.prefix_stats().unwrap().reclaimed_blocks, 2);
     }
 }

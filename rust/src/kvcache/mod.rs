@@ -6,12 +6,21 @@
 //!   host K/V tensors shaped `[L, Hkv, cap, dh]`, per-layer live lengths,
 //!   and the slot→absolute-position map needed to interpret decode-time
 //!   attention probabilities (GT importance tracking, Table 8);
-//! * [`manager::CacheManager`] — ties both together per active sequence.
+//! * [`prefix::PrefixCache`] — the cross-request prefix cache: a radix
+//!   tree over token-id block chunks whose nodes own ref-counted blocks
+//!   of *pre-eviction* chunked-prefill state (per-layer KV + the running
+//!   H2O score accumulator), enabling prefix-aware prefill resume;
+//! * [`manager::CacheManager`] — ties all three together over one shared
+//!   block pool.
 
 pub mod block;
 pub mod cache;
 pub mod manager;
+pub mod prefix;
 
 pub use block::BlockAllocator;
 pub use cache::SeqCache;
 pub use manager::CacheManager;
+pub use prefix::{
+    BlockRecord, MatchKind, PrefixCache, PrefixCacheConfig, PrefixMatch, PrefixPin, PrefixStats,
+};

@@ -1,0 +1,746 @@
+//! Cross-request prefix cache: a radix tree over token-id block chunks
+//! whose nodes own ref-counted KV cache blocks.
+//!
+//! Serving traffic with a long shared system/tool prompt repeats the same
+//! prefill work on every request. This tree caches the *pre-eviction*
+//! chunked-prefill state — per-layer KV rows plus the running H2O column
+//! sums of the score accumulator — at [`BlockAllocator::block_size`]
+//! granularity, keyed by the exact token ids of each block. On admission
+//! the scheduler matches the longest cached prefix, **pins** its path
+//! (ref-counts), and seeds a [`crate::runtime::PrefixSeed`] so the engine
+//! resumes prefill mid-prompt ([`crate::runtime::ChunkState::resume`])
+//! instead of starting from token 0.
+//!
+//! Sharing semantics are copy-on-write: tree blocks are immutable once
+//! inserted; a resuming request *copies* the pinned rows into its private
+//! `ChunkState`, and a prompt that diverges mid-block simply stops
+//! matching — divergence at block granularity creates sibling nodes, and
+//! no shared block is ever mutated (property-tested below).
+//!
+//! Interplay with eviction: only **pre-eviction** prefill state is
+//! shareable. Eviction/compaction runs at `prefill_finalize` time on
+//! full-prompt scores, *per request* (budgets differ), so compacted
+//! post-eviction caches are never inserted here — the tree holds the
+//! method-independent dense prefix state that every policy's prefill
+//! passes through.
+//!
+//! Memory accounting shares the scheduler's [`BlockAllocator`]: every
+//! node charges one allocator block (owner [`PREFIX_OWNER`]). Under
+//! allocator pressure the scheduler reclaims unpinned leaves in LRU
+//! order ([`PrefixCache::reclaim`]) before failing an admission.
+
+use std::collections::HashMap;
+
+use crate::runtime::PrefixSeed;
+use crate::util::tensor::TensorF;
+
+use super::block::{BlockAllocator, BlockId};
+
+/// Allocator owner tag for tree-held blocks (sequence ids are small
+/// monotonically assigned integers; this can never collide).
+pub const PREFIX_OWNER: u64 = u64::MAX;
+
+#[derive(Debug, Clone)]
+pub struct PrefixCacheConfig {
+    /// Token (= slot) granularity of one tree block. Must equal the
+    /// shared allocator's block size.
+    pub block_size: usize,
+    /// Hard cap on tree-held blocks (`usize::MAX` = bounded only by the
+    /// shared pool + LRU reclamation).
+    pub max_blocks: usize,
+}
+
+/// One recorded block of chunked-prefill state, produced by the engine's
+/// recording pass (`engine::chunked`) and inserted via
+/// [`PrefixCache::insert`].
+#[derive(Debug, Clone)]
+pub struct BlockRecord {
+    /// Absolute token offset of this block (multiple of `block_size`).
+    pub start: usize,
+    /// The exact `block_size` token ids this block covers.
+    pub tokens: Vec<i32>,
+    /// `[L, Hkv, block_size, dh]` KV rows `start..start+block_size`.
+    pub k: TensorF,
+    pub v: TensorF,
+    /// `[L, H, start + block_size]` *cumulative* raw H2O column sums over
+    /// query rows `0..start+block_size` (base passes; lookahead passes
+    /// record `None`).
+    pub h2o: Option<TensorF>,
+}
+
+struct Node {
+    /// Token offset of this block (depth * block_size).
+    start: usize,
+    tokens: Vec<i32>,
+    k: TensorF,
+    v: TensorF,
+    h2o: Option<TensorF>,
+    block: BlockId,
+    parent: Option<usize>,
+    children: HashMap<Vec<i32>, usize>,
+    /// Pin count: >0 while an in-flight prefill resumes from this node.
+    refs: usize,
+    /// LRU tick of the last lookup/insert touching this node.
+    last_use: u64,
+    /// Owning model tree (needed to unlink depth-0 nodes on reclaim).
+    model: String,
+}
+
+/// Pinned path handle returned by [`PrefixCache::lookup`]; must be given
+/// back via [`PrefixCache::release`] once the resumed prefill finished
+/// (or failed). Consuming it by value makes double-release a type error.
+#[derive(Debug)]
+pub struct PrefixPin {
+    nodes: Vec<usize>,
+}
+
+impl PrefixPin {
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MatchKind {
+    /// No usable cached prefix.
+    Miss,
+    /// Some, but not all, of the prompt's resumable blocks were cached.
+    Partial,
+    /// Every resumable block of the prompt was served from the tree.
+    Full,
+}
+
+/// Result of a longest-prefix match: the seed (when any block matched)
+/// plus the pinned path.
+pub struct PrefixMatch {
+    pub kind: MatchKind,
+    /// Prompt tokens covered by `seed` (0 on a miss).
+    pub resume_len: usize,
+    pub seed: Option<PrefixSeed>,
+    pub pin: PrefixPin,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct PrefixStats {
+    pub nodes: usize,
+    pub blocks: usize,
+    pub pinned_nodes: usize,
+    pub inserted_blocks: u64,
+    pub reclaimed_blocks: u64,
+}
+
+pub struct PrefixCache {
+    cfg: PrefixCacheConfig,
+    /// Per-model root children (block tokens -> arena index).
+    roots: HashMap<String, HashMap<Vec<i32>, usize>>,
+    arena: Vec<Option<Node>>,
+    free_slots: Vec<usize>,
+    tick: u64,
+    n_blocks: usize,
+    inserted_blocks: u64,
+    reclaimed_blocks: u64,
+}
+
+impl PrefixCache {
+    pub fn new(cfg: PrefixCacheConfig) -> PrefixCache {
+        assert!(cfg.block_size > 0, "prefix cache block size must be > 0");
+        PrefixCache {
+            cfg,
+            roots: HashMap::new(),
+            arena: Vec::new(),
+            free_slots: Vec::new(),
+            tick: 0,
+            n_blocks: 0,
+            inserted_blocks: 0,
+            reclaimed_blocks: 0,
+        }
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.cfg.block_size
+    }
+
+    fn node(&self, i: usize) -> &Node {
+        self.arena[i].as_ref().expect("dangling prefix node index")
+    }
+
+    fn node_mut(&mut self, i: usize) -> &mut Node {
+        self.arena[i].as_mut().expect("dangling prefix node index")
+    }
+
+    fn next_tick(&mut self) -> u64 {
+        self.tick += 1;
+        self.tick
+    }
+
+    /// Longest-prefix match for `tokens` under `model`, usable up to
+    /// `max_len` tokens (the caller's resume cap — `win_start` for base
+    /// passes, `logit_pos` for lookahead passes). `need_scores` restricts
+    /// the resume point to nodes carrying H2O sums (base passes). The
+    /// matched path is pinned; release it with [`PrefixCache::release`].
+    pub fn lookup(
+        &mut self,
+        model: &str,
+        tokens: &[i32],
+        need_scores: bool,
+        max_len: usize,
+    ) -> PrefixMatch {
+        let b = self.cfg.block_size;
+        let tick = self.next_tick();
+        // Deepest block boundary the caller could use at all.
+        let usable_blocks = (max_len.min(tokens.len()) / b).min(tokens.len() / b);
+        let mut path: Vec<usize> = Vec::new();
+        let mut best_depth: Option<usize> = None; // index into `path`
+        {
+            let mut children = match self.roots.get(model) {
+                Some(c) => c,
+                None => {
+                    return PrefixMatch {
+                        kind: MatchKind::Miss,
+                        resume_len: 0,
+                        seed: None,
+                        pin: PrefixPin { nodes: Vec::new() },
+                    }
+                }
+            };
+            for depth in 0..usable_blocks {
+                let key = &tokens[depth * b..(depth + 1) * b];
+                let Some(&idx) = children.get(key) else { break };
+                path.push(idx);
+                let node = self.node(idx);
+                if !need_scores || node.h2o.is_some() {
+                    best_depth = Some(depth);
+                }
+                children = &self.node(idx).children;
+            }
+        }
+        let Some(best) = best_depth else {
+            // Nothing usable: pin nothing (matched-but-unusable nodes are
+            // left reclaimable; the request recomputes from token 0).
+            return PrefixMatch {
+                kind: MatchKind::Miss,
+                resume_len: 0,
+                seed: None,
+                pin: PrefixPin { nodes: Vec::new() },
+            };
+        };
+        // Pin and LRU-touch exactly the blocks the seed uses.
+        path.truncate(best + 1);
+        for &i in &path {
+            let n = self.node_mut(i);
+            n.refs += 1;
+            n.last_use = tick;
+        }
+        let resume_len = (best + 1) * b;
+        let seed = self.build_seed(&path, resume_len);
+        let kind = if best + 1 == usable_blocks { MatchKind::Full } else { MatchKind::Partial };
+        PrefixMatch { kind, resume_len, seed: Some(seed), pin: PrefixPin { nodes: path } }
+    }
+
+    /// Concatenate the path's KV blocks (and clone the deepest node's
+    /// cumulative H2O snapshot) into a private, request-owned seed — the
+    /// copy-on-write boundary: tree blocks are never handed out mutably.
+    fn build_seed(&self, path: &[usize], resume_len: usize) -> PrefixSeed {
+        let b = self.cfg.block_size;
+        let deepest = self.node(*path.last().expect("seed of an empty path"));
+        let (l, hkv, dh) = (deepest.k.shape[0], deepest.k.shape[1], deepest.k.shape[3]);
+        let mut k = TensorF::zeros(vec![l, hkv, resume_len, dh]);
+        let mut v = TensorF::zeros(vec![l, hkv, resume_len, dh]);
+        for (depth, &i) in path.iter().enumerate() {
+            let node = self.node(i);
+            debug_assert_eq!(node.start, depth * b, "prefix path out of order");
+            for li in 0..l {
+                for g in 0..hkv {
+                    let src = ((li * hkv + g) * b) * dh;
+                    let dst = ((li * hkv + g) * resume_len + depth * b) * dh;
+                    k.data[dst..dst + b * dh].copy_from_slice(&node.k.data[src..src + b * dh]);
+                    v.data[dst..dst + b * dh].copy_from_slice(&node.v.data[src..src + b * dh]);
+                }
+            }
+        }
+        let h2o = deepest.h2o.as_ref().map(|t| {
+            debug_assert_eq!(t.shape[2], resume_len, "h2o snapshot extent");
+            t.clone()
+        });
+        PrefixSeed { len: resume_len, k, v, h2o }
+    }
+
+    /// Unpin a matched path.
+    pub fn release(&mut self, pin: PrefixPin) {
+        for i in pin.nodes {
+            let n = self.node_mut(i);
+            assert!(n.refs > 0, "prefix node released more times than pinned");
+            n.refs -= 1;
+        }
+    }
+
+    /// Insert the recorded blocks of one finished prefill pass. `tokens`
+    /// is the full pass prompt (used to walk/extend the tree); `records`
+    /// hold the newly computed blocks (any already-cached prefix blocks
+    /// are absent — they were matched, not recomputed). Existing
+    /// KV-only nodes are upgraded in place when a record carries H2O
+    /// sums. Returns the number of blocks newly charged to the allocator.
+    /// Insertion stops early (never fails) when the allocator — after LRU
+    /// reclamation — or `max_blocks` cannot take another block.
+    pub fn insert(
+        &mut self,
+        alloc: &mut BlockAllocator,
+        model: &str,
+        tokens: &[i32],
+        records: Vec<BlockRecord>,
+    ) -> usize {
+        let b = self.cfg.block_size;
+        debug_assert_eq!(alloc.block_size(), b, "prefix cache / allocator block size mismatch");
+        let by_start: HashMap<usize, BlockRecord> =
+            records.into_iter().map(|r| (r.start, r)).collect();
+        let tick = self.next_tick();
+        let mut inserted = 0usize;
+        let mut parent: Option<usize> = None;
+        // The walked/created chain is temporarily pinned so mid-insert LRU
+        // reclamation can never free an ancestor of the node being added.
+        let mut path_pins: Vec<usize> = Vec::new();
+        for depth in 0..tokens.len() / b {
+            let start = depth * b;
+            let key = tokens[start..start + b].to_vec();
+            let existing = match parent {
+                None => self.roots.get(model).and_then(|c| c.get(&key)).copied(),
+                Some(p) => self.node(p).children.get(&key).copied(),
+            };
+            if let Some(idx) = existing {
+                let rec_h2o = by_start.get(&start).and_then(|r| r.h2o.clone());
+                let node = self.node_mut(idx);
+                node.last_use = tick;
+                node.refs += 1;
+                if node.h2o.is_none() {
+                    if let Some(h2o) = rec_h2o {
+                        node.h2o = Some(h2o); // upgrade a KV-only (lookahead) node
+                    }
+                }
+                path_pins.push(idx);
+                parent = Some(idx);
+                continue;
+            }
+            // New node: need its record and an allocator block.
+            let Some(rec) = by_start.get(&start) else { break };
+            if self.n_blocks >= self.cfg.max_blocks && self.reclaim(alloc, 1) == 0 {
+                break;
+            }
+            let ids = match alloc.alloc(PREFIX_OWNER, b) {
+                Some(ids) => ids,
+                None => {
+                    // allocator pressure: try to make room from our own
+                    // cold leaves before giving up on this insertion
+                    if self.reclaim(alloc, 1) == 0 {
+                        break;
+                    }
+                    match alloc.alloc(PREFIX_OWNER, b) {
+                        Some(ids) => ids,
+                        None => break,
+                    }
+                }
+            };
+            debug_assert_eq!(ids.len(), 1);
+            debug_assert_eq!(rec.tokens, key, "block record tokens disagree with the prompt");
+            let node = Node {
+                start,
+                tokens: key.clone(),
+                k: rec.k.clone(),
+                v: rec.v.clone(),
+                h2o: rec.h2o.clone(),
+                block: ids[0],
+                parent,
+                children: HashMap::new(),
+                refs: 1, // insertion-path pin, dropped below
+                last_use: tick,
+                model: model.to_string(),
+            };
+            let idx = match self.free_slots.pop() {
+                Some(slot) => {
+                    self.arena[slot] = Some(node);
+                    slot
+                }
+                None => {
+                    self.arena.push(Some(node));
+                    self.arena.len() - 1
+                }
+            };
+            match parent {
+                None => {
+                    self.roots.entry(model.to_string()).or_default().insert(key, idx);
+                }
+                Some(p) => {
+                    self.node_mut(p).children.insert(key, idx);
+                }
+            }
+            self.n_blocks += 1;
+            self.inserted_blocks += 1;
+            inserted += 1;
+            path_pins.push(idx);
+            parent = Some(idx);
+        }
+        for i in path_pins {
+            self.node_mut(i).refs -= 1;
+        }
+        inserted
+    }
+
+    /// Free up to `want_blocks` unpinned **leaves** back to the
+    /// allocator, coldest (LRU) first; interior nodes become reclaimable
+    /// as their subtrees drain. Each pass collects every current
+    /// unpinned leaf in one arena scan and drains them in LRU order, so
+    /// freeing k blocks costs O(arena · depth) rather than O(arena · k).
+    /// Returns how many blocks were freed.
+    pub fn reclaim(&mut self, alloc: &mut BlockAllocator, want_blocks: usize) -> usize {
+        let mut freed = 0usize;
+        while freed < want_blocks {
+            let mut victims: Vec<(u64, usize)> = self
+                .arena
+                .iter()
+                .enumerate()
+                .filter_map(|(i, slot)| slot.as_ref().map(|n| (i, n)))
+                .filter(|(_, n)| n.refs == 0 && n.children.is_empty())
+                .map(|(i, n)| (n.last_use, i))
+                .collect();
+            if victims.is_empty() {
+                break;
+            }
+            victims.sort_unstable();
+            for (_, i) in victims {
+                if freed >= want_blocks {
+                    break;
+                }
+                self.remove_leaf(i, alloc);
+                freed += 1;
+            }
+            // freeing leaves may have exposed their parents as new
+            // (possibly colder) leaves — the next pass picks them up
+        }
+        freed
+    }
+
+    fn remove_leaf(&mut self, i: usize, alloc: &mut BlockAllocator) {
+        let node = self.arena[i].take().expect("reclaim victim vanished");
+        debug_assert!(node.refs == 0 && node.children.is_empty());
+        match node.parent {
+            Some(p) => {
+                self.node_mut(p).children.remove(&node.tokens);
+            }
+            None => {
+                if let Some(root) = self.roots.get_mut(&node.model) {
+                    root.remove(&node.tokens);
+                }
+            }
+        }
+        alloc.free(&[node.block]);
+        self.free_slots.push(i);
+        self.n_blocks -= 1;
+        self.reclaimed_blocks += 1;
+    }
+
+    pub fn stats(&self) -> PrefixStats {
+        let live = self.arena.iter().flatten();
+        PrefixStats {
+            nodes: self.arena.iter().flatten().count(),
+            blocks: self.n_blocks,
+            pinned_nodes: live.filter(|n| n.refs > 0).count(),
+            inserted_blocks: self.inserted_blocks,
+            reclaimed_blocks: self.reclaimed_blocks,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, Config};
+    use crate::util::rng::Rng;
+
+    const B: usize = 4; // tokens per block
+    const L: usize = 1;
+    const HKV: usize = 1;
+    const H: usize = 2;
+    const DH: usize = 2;
+
+    /// Deterministic per-token synthetic "KV": lets exactness checks
+    /// verify *content*, not just lengths.
+    fn kv_of(tokens: &[i32]) -> (TensorF, TensorF) {
+        let mut k = TensorF::zeros(vec![L, HKV, tokens.len(), DH]);
+        let mut v = TensorF::zeros(vec![L, HKV, tokens.len(), DH]);
+        for (r, &t) in tokens.iter().enumerate() {
+            for e in 0..DH {
+                k.data[r * DH + e] = t as f32 + e as f32 * 0.5;
+                v.data[r * DH + e] = -(t as f32) - e as f32 * 0.25;
+            }
+        }
+        (k, v)
+    }
+
+    fn h2o_of(tokens: &[i32], end: usize) -> TensorF {
+        let mut t = TensorF::zeros(vec![L, H, end]);
+        for hi in 0..H {
+            for j in 0..end {
+                t.data[hi * end + j] = tokens[j] as f32 * (hi + 1) as f32;
+            }
+        }
+        t
+    }
+
+    /// Records for every full block of `tokens` starting at block
+    /// `from_block` (with or without H2O sums).
+    fn records(tokens: &[i32], from_block: usize, with_h2o: bool) -> Vec<BlockRecord> {
+        (from_block..tokens.len() / B)
+            .map(|d| {
+                let start = d * B;
+                let blk = &tokens[start..start + B];
+                let (k, v) = kv_of(blk);
+                BlockRecord {
+                    start,
+                    tokens: blk.to_vec(),
+                    k,
+                    v,
+                    h2o: with_h2o.then(|| h2o_of(tokens, start + B)),
+                }
+            })
+            .collect()
+    }
+
+    fn cache() -> (PrefixCache, BlockAllocator) {
+        (
+            PrefixCache::new(PrefixCacheConfig { block_size: B, max_blocks: usize::MAX }),
+            BlockAllocator::new(64 * B, B),
+        )
+    }
+
+    #[test]
+    fn match_after_insert_is_exact() {
+        let (mut c, mut a) = cache();
+        let tokens: Vec<i32> = (0..13).collect(); // 3 full blocks + tail
+        let n = c.insert(&mut a, "m", &tokens, records(&tokens, 0, true));
+        assert_eq!(n, 3);
+        assert_eq!(a.used_blocks(), 3);
+        let m = c.lookup("m", &tokens, true, tokens.len());
+        assert_eq!(m.kind, MatchKind::Full);
+        assert_eq!(m.resume_len, 12);
+        let seed = m.seed.unwrap();
+        let (k_want, v_want) = kv_of(&tokens[..12]);
+        assert_eq!(seed.k.data, k_want.data, "seed K must be the inserted rows, bit for bit");
+        assert_eq!(seed.v.data, v_want.data);
+        assert_eq!(seed.h2o.unwrap().data, h2o_of(&tokens, 12).data);
+        c.release(m.pin);
+        assert_eq!(c.stats().pinned_nodes, 0);
+    }
+
+    #[test]
+    fn resume_cap_and_score_requirement_bound_the_match() {
+        let (mut c, mut a) = cache();
+        let tokens: Vec<i32> = (0..16).collect();
+        c.insert(&mut a, "m", &tokens, records(&tokens, 0, true));
+        // cap of 9 tokens -> only 2 blocks usable
+        let m = c.lookup("m", &tokens, true, 9);
+        assert_eq!(m.resume_len, 8);
+        assert_eq!(m.kind, MatchKind::Full); // all cap-usable blocks served
+        c.release(m.pin);
+        // KV-only tree: base-pass lookups (need_scores) miss entirely
+        let (mut c2, mut a2) = cache();
+        c2.insert(&mut a2, "m", &tokens, records(&tokens, 0, false));
+        let m2 = c2.lookup("m", &tokens, true, tokens.len());
+        assert_eq!(m2.kind, MatchKind::Miss);
+        assert!(m2.pin.is_empty());
+        // ... but lookahead lookups (no score requirement) hit
+        let m3 = c2.lookup("m", &tokens, false, tokens.len());
+        assert_eq!(m3.resume_len, 16);
+        assert!(m3.seed.as_ref().unwrap().h2o.is_none());
+        c2.release(m3.pin);
+    }
+
+    #[test]
+    fn h2o_upgrade_of_kv_only_nodes() {
+        let (mut c, mut a) = cache();
+        let tokens: Vec<i32> = (0..8).collect();
+        c.insert(&mut a, "m", &tokens, records(&tokens, 0, false)); // lookahead pass
+        assert_eq!(a.used_blocks(), 2);
+        // a base pass over the same prompt recomputed everything and now
+        // carries H2O sums: nodes upgrade in place, no new blocks
+        let n = c.insert(&mut a, "m", &tokens, records(&tokens, 0, true));
+        assert_eq!(n, 0);
+        assert_eq!(a.used_blocks(), 2);
+        let m = c.lookup("m", &tokens, true, tokens.len());
+        assert_eq!(m.resume_len, 8);
+        c.release(m.pin);
+    }
+
+    #[test]
+    fn divergent_prompts_become_siblings_and_share_nothing_mutable() {
+        let (mut c, mut a) = cache();
+        let p1: Vec<i32> = vec![1, 2, 3, 4, 5, 6, 7, 8];
+        c.insert(&mut a, "m", &p1, records(&p1, 0, true));
+        // p2 shares block 0, diverges in block 1
+        let p2: Vec<i32> = vec![1, 2, 3, 4, 9, 9, 9, 9];
+        let m = c.lookup("m", &p2, true, p2.len());
+        assert_eq!(m.resume_len, 4, "shared first block matches");
+        assert_eq!(m.kind, MatchKind::Partial);
+        c.release(m.pin);
+        c.insert(&mut a, "m", &p2, records(&p2, 1, true));
+        assert_eq!(a.used_blocks(), 3); // 2 (p1) + 1 diverged sibling
+        // both full prompts still match exactly
+        let m1 = c.lookup("m", &p1, true, p1.len());
+        assert_eq!(m1.resume_len, 8);
+        let (k1, _) = kv_of(&p1);
+        assert_eq!(m1.seed.as_ref().unwrap().k.data, k1.data, "p1 blocks unchanged by p2");
+        let m2 = c.lookup("m", &p2, true, p2.len());
+        assert_eq!(m2.resume_len, 8);
+        c.release(m1.pin);
+        c.release(m2.pin);
+    }
+
+    #[test]
+    fn lru_reclaims_cold_unpinned_leaves_only() {
+        let (mut c, mut a) = cache();
+        let p1: Vec<i32> = vec![1, 2, 3, 4, 5, 6, 7, 8];
+        let p2: Vec<i32> = vec![10, 11, 12, 13];
+        c.insert(&mut a, "m", &p1, records(&p1, 0, true));
+        c.insert(&mut a, "m", &p2, records(&p2, 0, true));
+        // touch p1 so p2 is the LRU leaf
+        let m = c.lookup("m", &p1, true, p1.len());
+        let freed = c.reclaim(&mut a, 1);
+        assert_eq!(freed, 1);
+        assert_eq!(c.lookup("m", &p2, true, p2.len()).kind, MatchKind::Miss, "p2 reclaimed");
+        // p1 is pinned: reclaiming everything must leave it intact
+        let freed = c.reclaim(&mut a, 16);
+        assert_eq!(freed, 0, "pinned path must never be reclaimed");
+        c.release(m.pin);
+        // unpinned now: the leaf drains first, then the interior node
+        assert_eq!(c.reclaim(&mut a, 16), 2);
+        assert_eq!(a.used_blocks(), 0);
+        assert_eq!(c.stats().blocks, 0);
+    }
+
+    #[test]
+    fn max_blocks_cap_is_enforced_via_reclaim() {
+        let mut c = PrefixCache::new(PrefixCacheConfig { block_size: B, max_blocks: 2 });
+        let mut a = BlockAllocator::new(64 * B, B);
+        let p1: Vec<i32> = vec![1, 2, 3, 4, 5, 6, 7, 8];
+        c.insert(&mut a, "m", &p1, records(&p1, 0, true));
+        assert_eq!(c.stats().blocks, 2);
+        let p2: Vec<i32> = vec![20, 21, 22, 23, 24, 25, 26, 27];
+        c.insert(&mut a, "m", &p2, records(&p2, 0, true));
+        assert!(c.stats().blocks <= 2, "cap must hold: {}", c.stats().blocks);
+        assert_eq!(a.used_blocks(), c.stats().blocks);
+    }
+
+    /// Property: any interleaving of insert/lookup/release/reclaim keeps
+    /// the tree's invariants — pin accounting balances (no "negative"
+    /// refcounts: every release matches a pin and ends at zero), pinned
+    /// nodes are never reclaimed, allocator accounting matches the tree,
+    /// and a full re-lookup of any inserted prompt is exact.
+    #[test]
+    fn prop_tree_invariants() {
+        check("prefix tree invariants", &Config { cases: 48, max_size: 40, ..Config::new() }, |rng, size| {
+            let mut c = PrefixCache::new(PrefixCacheConfig { block_size: B, max_blocks: 24 });
+            let mut a = BlockAllocator::new(64 * B, B);
+            let mut prompts: Vec<Vec<i32>> = Vec::new();
+            let mut pins: Vec<(PrefixPin, usize)> = Vec::new(); // (pin, path len)
+            for _ in 0..size {
+                match rng.below(4) {
+                    0 => {
+                        // insert a prompt from a tiny alphabet (forces
+                        // shared prefixes and divergence)
+                        let blocks = rng.range(1, 5);
+                        let mut t: Vec<i32> = Vec::new();
+                        for _ in 0..blocks * B {
+                            t.push(rng.below(3) as i32);
+                        }
+                        c.insert(&mut a, "m", &t, records(&t, 0, rng.chance(0.7)));
+                        prompts.push(t);
+                    }
+                    1 if !prompts.is_empty() => {
+                        let t = prompts[rng.below(prompts.len())].clone();
+                        let m = c.lookup("m", &t, false, t.len());
+                        if m.resume_len > 0 {
+                            // exactness: the seed is the inserted KV
+                            let (k_want, _) = kv_of(&t[..m.resume_len]);
+                            assert_eq!(m.seed.as_ref().unwrap().k.data, k_want.data);
+                        }
+                        let n = m.pin.nodes.len();
+                        pins.push((m.pin, n));
+                    }
+                    2 if !pins.is_empty() => {
+                        let (pin, _) = pins.swap_remove(rng.below(pins.len()));
+                        c.release(pin);
+                    }
+                    _ => {
+                        c.reclaim(&mut a, rng.range(1, 4));
+                    }
+                }
+                let st = c.stats();
+                // allocator accounting matches the tree exactly
+                assert_eq!(st.blocks, a.used_blocks(), "tree/allocator divergence");
+                assert!(st.blocks <= 24, "max_blocks cap violated");
+                // pin accounting balances: total refs == total pinned path
+                // entries outstanding (never negative, never dangling)
+                let outstanding: usize = pins.iter().map(|(_, n)| n).sum();
+                let total_refs: usize =
+                    c.arena.iter().flatten().map(|n| n.refs).sum();
+                assert_eq!(total_refs, outstanding, "pin accounting out of balance");
+                // every pinned node is still present (not reclaimed)
+                for (pin, _) in &pins {
+                    for &i in &pin.nodes {
+                        assert!(c.arena[i].is_some(), "pinned node was reclaimed");
+                        assert!(c.arena[i].as_ref().unwrap().refs > 0);
+                    }
+                }
+            }
+            // draining all pins returns every refcount to exactly zero
+            for (pin, _) in pins.drain(..) {
+                c.release(pin);
+            }
+            assert_eq!(c.stats().pinned_nodes, 0);
+            // and with nothing pinned, reclaim can always drain the tree
+            c.reclaim(&mut a, usize::MAX);
+            assert_eq!(c.stats().blocks, 0);
+            assert_eq!(a.used_blocks(), 0);
+        });
+    }
+
+    /// Property: COW divergence — extending or diverging from a shared
+    /// prefix never mutates the shared blocks' bytes.
+    #[test]
+    fn prop_cow_divergence_never_mutates_shared_blocks() {
+        check("prefix COW", &Config { cases: 32, max_size: 24, ..Config::new() }, |rng, size| {
+            let mut c = PrefixCache::new(PrefixCacheConfig { block_size: B, max_blocks: usize::MAX });
+            let mut a = BlockAllocator::new(128 * B, B);
+            let shared_blocks = 1 + rng.below(3);
+            let shared: Vec<i32> = (0..shared_blocks * B).map(|_| rng.below(4) as i32).collect();
+            let mut base = shared.clone();
+            base.extend((0..B).map(|_| 100));
+            c.insert(&mut a, "m", &base, records(&base, 0, true));
+            let snapshot: Vec<(Vec<i32>, Vec<f32>, Vec<f32>)> = c
+                .arena
+                .iter()
+                .flatten()
+                .filter(|n| n.start < shared.len())
+                .map(|n| (n.tokens.clone(), n.k.data.clone(), n.v.data.clone()))
+                .collect();
+            for i in 0..size.min(6) {
+                // each iteration: a prompt sharing the prefix, diverging after
+                let mut p = shared.clone();
+                p.extend((0..B).map(|_| 101 + i as i32));
+                let m = c.lookup("m", &p, true, p.len());
+                let resume_blocks = m.resume_len / B;
+                c.insert(&mut a, "m", &p, records(&p, resume_blocks, true));
+                c.release(m.pin);
+            }
+            // shared blocks: same bytes as before any divergence
+            for (tokens, k, v) in &snapshot {
+                let node = c
+                    .arena
+                    .iter()
+                    .flatten()
+                    .find(|n| n.start < shared.len() && &n.tokens == tokens)
+                    .expect("shared block vanished");
+                assert_eq!(&node.k.data, k, "shared K block mutated by divergence");
+                assert_eq!(&node.v.data, v, "shared V block mutated by divergence");
+            }
+        });
+    }
+}

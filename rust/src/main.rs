@@ -24,7 +24,7 @@ use lookaheadkv::util::cli::Args;
 use lookaheadkv::workload;
 
 fn main() {
-    let args = Args::from_env(&["help", "verbose", "compile", "per-seq-decode"]);
+    let args = Args::from_env(&["help", "verbose", "compile", "per-seq-decode", "prefix-cache"]);
     let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
     let result = match cmd {
         "serve" => cmd_serve(&args),
@@ -51,7 +51,8 @@ fn print_help() {
          \n\
          commands:\n\
          \x20 serve     --addr 127.0.0.1:8080 --model lkv-tiny --max-active 4 \\\n\
-         \x20           [--prefill-chunk 256] [--per-seq-decode]\n\
+         \x20           [--prefill-chunk 256] [--per-seq-decode] \\\n\
+         \x20           [--prefix-cache] [--prefix-cache-slots N]\n\
          \x20 generate  --prompt <text> --method lookaheadkv --budget 64 --max-new 32\n\
          \x20 eval      --suite ruler|longbench|qasper|longproc|mtbench --methods snapkv,lookaheadkv \\\n\
          \x20           --budgets 16,32 --ctx 256 --n 8\n\
@@ -89,6 +90,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         // 0 = monolithic prefill; 64-256 interleaves decode steps between
         // prompt chunks (see README "Chunked prefill").
         prefill_chunk_tokens: args.usize_clamped("prefill-chunk", 0, 0, 1024),
+        // Cross-request prefix cache (requires --prefill-chunk > 0);
+        // --prefix-cache-slots caps the tree's share of the KV pool
+        // (0 = bounded only by the pool + LRU reclamation).
+        prefix_cache: args.has("prefix-cache"),
+        prefix_cache_slots: args.usize("prefix-cache-slots", 0),
         ..LoopConfig::default()
     };
     let q2 = Arc::clone(&queue);

@@ -50,6 +50,7 @@ pub struct Metrics {
 struct Inner {
     counters: BTreeMap<String, u64>,
     histograms: BTreeMap<String, Histogram>,
+    gauges: BTreeMap<String, f64>,
 }
 
 impl Metrics {
@@ -65,6 +66,17 @@ impl Metrics {
     pub fn observe(&self, name: &str, ms: f64) {
         let mut inner = self.inner.lock().unwrap();
         inner.histograms.entry(name.to_string()).or_default().record(ms);
+    }
+
+    /// Set a point-in-time gauge (current KV pool occupancy, prefix-tree
+    /// size, ...). Unlike counters these overwrite rather than add.
+    pub fn set_gauge(&self, name: &str, value: f64) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.gauges.insert(name.to_string(), value);
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.inner.lock().unwrap().gauges.get(name).copied()
     }
 
     pub fn counter(&self, name: &str) -> u64 {
@@ -89,7 +101,11 @@ impl Metrics {
         for (k, h) in &inner.histograms {
             hists.set(k, h.to_json());
         }
-        Json::from_pairs(vec![("counters", counters), ("latency", hists)])
+        let mut gauges = Json::obj();
+        for (k, v) in &inner.gauges {
+            gauges.set(k, (*v).into());
+        }
+        Json::from_pairs(vec![("counters", counters), ("gauges", gauges), ("latency", hists)])
     }
 }
 
@@ -108,6 +124,17 @@ mod tests {
         let j = m.to_json();
         assert_eq!(j.req("latency").req("ttft").req("count").as_usize(), Some(2));
         assert_eq!(j.req("counters").req("requests").as_usize(), Some(3));
+    }
+
+    #[test]
+    fn gauges_overwrite_and_export() {
+        let m = Metrics::new();
+        m.set_gauge("kv_free_blocks", 8.0);
+        m.set_gauge("kv_free_blocks", 5.0);
+        assert_eq!(m.gauge("kv_free_blocks"), Some(5.0));
+        assert_eq!(m.gauge("missing"), None);
+        let j = m.to_json();
+        assert_eq!(j.req("gauges").req("kv_free_blocks").as_f64(), Some(5.0));
     }
 
     #[test]

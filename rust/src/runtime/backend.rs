@@ -18,7 +18,7 @@
 //! path, which serializes the full K/V cache both ways every token);
 //! backends that can do better override it.
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use super::artifacts::Manifest;
 use crate::eviction::ScoreBundle;
@@ -185,10 +185,103 @@ impl ChunkState {
         })
     }
 
+    /// Start a chunked prefill *mid-prompt* from a cached prefix: the
+    /// first `seed.len` rows of KV (and, for base passes, the running H2O
+    /// column sums over those rows) come from `seed` instead of being
+    /// recomputed, and chunking resumes at row `seed.len`. Because every
+    /// prompt row's forward pass depends only on the rows before it, a
+    /// resumed state is **bit-identical** to a cold one fed the same
+    /// tokens — provided the seed itself came from the same model's
+    /// prefill (see `kvcache::prefix`).
+    ///
+    /// Constraints (errors otherwise):
+    /// * `seed.len` must leave at least the `logit_pos` row to compute
+    ///   (logits are captured by the chunk containing it);
+    /// * base passes must not resume past `win_start` — the observation
+    ///   window rows are recomputed, never cached;
+    /// * base passes need the seed's H2O sums (`seed.h2o`).
+    pub fn resume(
+        manifest: &Manifest,
+        model: &str,
+        variant: Option<&str>,
+        len: usize,
+        logit_pos: usize,
+        seed: &PrefixSeed,
+    ) -> Result<ChunkState> {
+        let mut st = ChunkState::new(manifest, model, variant, len, logit_pos)?;
+        let q = seed.len;
+        anyhow::ensure!(q >= 1, "empty prefix seed");
+        anyhow::ensure!(
+            q <= logit_pos,
+            "prefix seed of {q} tokens covers logit_pos {logit_pos}"
+        );
+        let meta = manifest.model(model)?;
+        let (l, h, hkv, dh) = (meta.n_layers, meta.n_heads, meta.n_kv_heads, meta.head_dim);
+        anyhow::ensure!(
+            seed.k.shape[..] == [l, hkv, q, dh] && seed.v.shape == seed.k.shape,
+            "prefix seed KV shape {:?} does not match model [{l}, {hkv}, {q}, {dh}]",
+            seed.k.shape
+        );
+        for li in 0..l {
+            for g in 0..hkv {
+                let dst = ((li * hkv + g) * st.bucket) * dh;
+                let src = ((li * hkv + g) * q) * dh;
+                st.k.data[dst..dst + q * dh].copy_from_slice(&seed.k.data[src..src + q * dh]);
+                st.v.data[dst..dst + q * dh].copy_from_slice(&seed.v.data[src..src + q * dh]);
+            }
+        }
+        if variant.is_none() {
+            anyhow::ensure!(
+                q <= st.bundle.win_start,
+                "prefix seed of {q} tokens overlaps the observation window (win_start {})",
+                st.bundle.win_start
+            );
+            let h2o_seed = seed
+                .h2o
+                .as_ref()
+                .context("base-pass resume needs the seed's accumulated H2O sums")?;
+            anyhow::ensure!(
+                h2o_seed.shape[..] == [l, h, q],
+                "prefix seed H2O shape {:?} does not match [{l}, {h}, {q}]",
+                h2o_seed.shape
+            );
+            let acc = st.bundle.h2o_scores.as_mut().expect("base state has an h2o accumulator");
+            for li in 0..l {
+                for hi in 0..h {
+                    let dst = (li * h + hi) * st.bucket;
+                    let src = (li * h + hi) * q;
+                    acc.data[dst..dst + q].copy_from_slice(&h2o_seed.data[src..src + q]);
+                }
+            }
+        }
+        st.done = q;
+        Ok(st)
+    }
+
     /// Tokens still to be prefilled.
     pub fn remaining(&self) -> usize {
         self.len - self.done
     }
+}
+
+/// A cached prompt prefix, ready to seed [`ChunkState::resume`]: the
+/// per-layer KV of the first `len` prompt rows plus (for base passes) the
+/// running H2O column sums over exactly those rows. Assembled by
+/// [`crate::kvcache::prefix::PrefixCache::lookup`] from the radix tree's
+/// ref-counted blocks; the copy into the resumed state's private tensors
+/// is what makes shared blocks copy-on-write — a request never writes
+/// through to tree-owned memory.
+#[derive(Debug, Clone)]
+pub struct PrefixSeed {
+    /// Number of prompt tokens covered (block-aligned by the cache).
+    pub len: usize,
+    /// `[L, Hkv, len, dh]` prompt KV rows `0..len`.
+    pub k: TensorF,
+    pub v: TensorF,
+    /// `[L, H, len]` raw (un-normalized) H2O column sums over query rows
+    /// `0..len` — `None` for seeds recorded from lookahead passes, which
+    /// accumulate no H2O state.
+    pub h2o: Option<TensorF>,
 }
 
 /// One sequence's slice of a batched decode step. `k`/`v` are the

@@ -31,8 +31,8 @@
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::engine::{ChunkedPrefill, Engine, PrefillOutput};
-use crate::kvcache::{manager::bytes_per_slot, CacheManager, SeqCache};
+use crate::engine::{ChunkedPrefill, Engine, PrefillOutput, PrefixPlan};
+use crate::kvcache::{manager::bytes_per_slot, CacheManager, MatchKind, PrefixPin, SeqCache};
 use crate::metrics::Metrics;
 use crate::model::sampler::Sampler;
 use crate::model::tokenizer::{decode_until_eos, EOS_ID};
@@ -53,6 +53,14 @@ pub struct LoopConfig {
     /// without chunked-prefill support fall back to monolithic
     /// regardless.
     pub prefill_chunk_tokens: usize,
+    /// Cross-request prefix cache (radix-tree KV reuse over shared
+    /// prompt prefixes). Requires chunked prefill; ignored (with a
+    /// warning) when `prefill_chunk_tokens == 0` or the backend has no
+    /// chunked-prefill support.
+    pub prefix_cache: bool,
+    /// KV-slot cap for the prefix tree out of the shared pool
+    /// (0 = bounded only by the pool + LRU reclamation).
+    pub prefix_cache_slots: usize,
 }
 
 impl Default for LoopConfig {
@@ -63,6 +71,8 @@ impl Default for LoopConfig {
             kv_block_slots: 64,
             batched_decode: true,
             prefill_chunk_tokens: 0,
+            prefix_cache: false,
+            prefix_cache_slots: 0,
         }
     }
 }
@@ -75,6 +85,9 @@ struct PendingPrefill {
     /// Cumulative prefill work time; TTFT minus this is the time this
     /// request spent waiting while decode steps were interleaved.
     work_ms: f64,
+    /// Pinned prefix-tree path this job resumes from (released once the
+    /// job finishes, after its new blocks are inserted).
+    pin: Option<PrefixPin>,
 }
 
 struct ActiveSeq {
@@ -117,6 +130,26 @@ impl EngineLoop {
         let mut pending: Option<PendingPrefill> = None;
         let chunked = self.cfg.prefill_chunk_tokens > 0
             && self.engine.rt.supports_chunked_prefill();
+        // Logged once per run, not per admission: a chunked-prefill
+        // request on a backend without support (e.g. the pjrt stub)
+        // silently degrading every prompt would otherwise be invisible.
+        if self.cfg.prefill_chunk_tokens > 0 && !chunked {
+            log::warn!(
+                "backend {} does not support chunked prefill; \
+                 falling back to monolithic prefill for every request",
+                self.engine.rt.backend_name()
+            );
+        }
+        if self.cfg.prefix_cache {
+            if chunked {
+                mgr.enable_prefix_cache(self.cfg.prefix_cache_slots);
+            } else {
+                log::warn!(
+                    "prefix cache requires chunked prefill \
+                     (--prefill-chunk > 0 and backend support); disabled"
+                );
+            }
+        }
 
         loop {
             // Admission. Chunked mode starts at most one incremental
@@ -131,7 +164,7 @@ impl EngineLoop {
                         self.queue.try_pop()
                     };
                     match req {
-                        Some(req) => pending = self.begin_prefill(req),
+                        Some(req) => pending = self.begin_prefill(req, &mut mgr),
                         None if idle && self.queue.is_closed() && self.queue.is_empty() => {
                             self.drain(&mut active, &mut mgr);
                             return;
@@ -197,6 +230,9 @@ impl EngineLoop {
                 }
                 Some((Err(e), dt)) => {
                     let p = pending.take().expect("pending job just stepped");
+                    if let Some(pin) = p.pin {
+                        mgr.prefix_release(pin);
+                    }
                     self.reject(p.req, p.t_start, e);
                     if stalling {
                         self.metrics.observe("decode_stall_ms", dt);
@@ -330,19 +366,72 @@ impl EngineLoop {
             }
             Err(e) => self.reject(req, t0, e),
         }
+        self.publish_cache_stats(mgr);
     }
 
     /// Start a chunked prefill job for `req` (None on immediate failure,
-    /// after sending the error reply).
-    fn begin_prefill(&mut self, req: Request) -> Option<PendingPrefill> {
+    /// after sending the error reply). With the prefix cache enabled,
+    /// this is where admission matches the longest cached prefix, pins
+    /// its blocks, and hands the engine a resume seed.
+    fn begin_prefill(&mut self, req: Request, mgr: &mut CacheManager) -> Option<PendingPrefill> {
         let t_start = Instant::now();
-        match self.engine.chunked_prefill_begin(
+        let mut pin = None;
+        let plan = if mgr.prefix_enabled() {
+            match self.engine.prefix_pass_info(req.prompt.len(), &req.method) {
+                Ok(info) => {
+                    let m = mgr
+                        .prefix_lookup(&info.model, &req.prompt, info.need_scores, info.resume_cap)
+                        .expect("prefix cache enabled");
+                    match m.kind {
+                        MatchKind::Full => self.metrics.incr("prefix_hits", 1),
+                        MatchKind::Partial => self.metrics.incr("prefix_partial_hits", 1),
+                        MatchKind::Miss => self.metrics.incr("prefix_misses", 1),
+                    }
+                    if m.resume_len > 0 {
+                        self.metrics.observe("prefix_resume_tokens", m.resume_len as f64);
+                    }
+                    if !m.pin.is_empty() {
+                        pin = Some(m.pin);
+                    }
+                    Some(PrefixPlan { block_size: self.cfg.kv_block_slots, seed: m.seed })
+                }
+                // Unresumable request (e.g. a one-token prompt): record
+                // anyway so future requests can match it? No — too short
+                // to hold a single block either. Run it cold.
+                Err(_) => None,
+            }
+        } else {
+            None
+        };
+        let seeded = plan.as_ref().is_some_and(|p| p.seed.is_some());
+        let begun = self.engine.chunked_prefill_begin_with_prefix(
             &req.prompt,
             &req.method,
             self.cfg.prefill_chunk_tokens,
-        ) {
-            Ok(job) => Some(PendingPrefill { req, job, t_start, work_ms: 0.0 }),
+            plan,
+        );
+        let begun = match begun {
+            // A seed the engine rejects (cache/engine contract drift)
+            // must degrade to a cold prefill, not fail the request.
+            Err(e) if seeded => {
+                log::warn!("prefix-seeded prefill begin failed ({e:#}); retrying cold");
+                if let Some(pin) = pin.take() {
+                    mgr.prefix_release(pin);
+                }
+                self.engine.chunked_prefill_begin(
+                    &req.prompt,
+                    &req.method,
+                    self.cfg.prefill_chunk_tokens,
+                )
+            }
+            other => other,
+        };
+        match begun {
+            Ok(job) => Some(PendingPrefill { req, job, t_start, work_ms: 0.0, pin }),
             Err(e) => {
+                if let Some(pin) = pin {
+                    mgr.prefix_release(pin);
+                }
                 self.reject(req, t_start, e);
                 None
             }
@@ -350,34 +439,51 @@ impl EngineLoop {
     }
 
     /// A chunked prefill finished its last chunk: evict + compact
-    /// (deferred until now so selection sees full-prompt scores) and
-    /// activate the sequence.
+    /// (deferred until now so selection sees full-prompt scores),
+    /// activate the sequence, then insert the pass's newly recorded
+    /// blocks into the prefix tree — never the compacted post-eviction
+    /// cache — and unpin the matched path.
     fn finish_chunked(
         &mut self,
         p: PendingPrefill,
         active: &mut Vec<ActiveSeq>,
         mgr: &mut CacheManager,
     ) {
-        let PendingPrefill { req, job, t_start, work_ms } = p;
+        let PendingPrefill { req, mut job, t_start, work_ms, pin } = p;
+        let records = job.take_prefix_records();
+        let prompt = req.prompt.clone();
         let res = (|| -> anyhow::Result<(SeqCache, Vec<f32>, usize)> {
             let pre = job.into_output()?;
             self.select_compact(&req, pre, mgr)
         })();
         match res {
             Ok((cache, logits, kept)) => {
-                self.activate(req, cache, logits, kept, t_start, Some(work_ms), active, mgr)
+                self.activate(req, cache, logits, kept, t_start, Some(work_ms), active, mgr);
+                // Insert after the sequence reserved its own KV so the
+                // tree only grows into genuinely spare pool space.
+                if let Some(recs) = records {
+                    let n = mgr.prefix_insert(&recs.model, &prompt, recs.records);
+                    if n > 0 {
+                        self.metrics.incr("prefix_inserted_blocks", n as u64);
+                    }
+                }
             }
             Err(e) => self.reject(req, t_start, e),
         }
+        if let Some(pin) = pin {
+            mgr.prefix_release(pin);
+        }
+        self.publish_cache_stats(mgr);
     }
 
     /// Shared post-prefill tail: selection with the request's budget,
-    /// decode-cap sizing, KV-pool admission check, compaction.
+    /// decode-cap sizing, KV-pool admission check (reclaiming unpinned
+    /// prefix-tree blocks before failing), compaction.
     fn select_compact(
         &self,
         req: &Request,
         pre: PrefillOutput,
-        mgr: &CacheManager,
+        mgr: &mut CacheManager,
     ) -> anyhow::Result<(SeqCache, Vec<f32>, usize)> {
         let n_layers = self.engine.n_layers(&self.engine.cfg.model);
         let mut evcfg = self.engine.cfg.eviction;
@@ -388,10 +494,36 @@ impl EngineLoop {
             .rt
             .manifest()
             .decode_cap(&self.engine.cfg.model, sel.max_kept() + req.max_new)?;
+        if !mgr.can_admit(cap) {
+            let freed = mgr.prefix_reclaim_for(cap);
+            if freed > 0 {
+                self.metrics.incr("prefix_reclaimed_blocks", freed as u64);
+            }
+        }
         anyhow::ensure!(mgr.can_admit(cap), "kv pool exhausted");
         let cache =
             SeqCache::from_selection(&pre.k, &pre.v, &sel.per_layer, req.prompt.len(), cap);
         Ok((cache, pre.logits, sel.max_kept()))
+    }
+
+    /// Mirror the pool + prefix-tree occupancy into `/metrics` gauges.
+    fn publish_cache_stats(&self, mgr: &CacheManager) {
+        let s = mgr.stats();
+        self.metrics.set_gauge("kv_active_seqs", s.active_seqs as f64);
+        self.metrics.set_gauge("kv_live_slots", s.live_slots as f64);
+        self.metrics.set_gauge("kv_used_blocks", s.used_blocks as f64);
+        self.metrics.set_gauge("kv_free_blocks", s.free_blocks as f64);
+        self.metrics.set_gauge("kv_peak_used_blocks", s.peak_used_blocks as f64);
+        if let Some(p) = mgr.prefix_stats() {
+            self.metrics.set_gauge("prefix_nodes", p.nodes as f64);
+            self.metrics.set_gauge("prefix_blocks", p.blocks as f64);
+            self.metrics.set_gauge("prefix_pinned_nodes", p.pinned_nodes as f64);
+            // Tree-side cumulative totals: unlike the loop counters these
+            // include blocks the tree reclaimed *internally* (insert-time
+            // LRU eviction under its own --prefix-cache-slots cap).
+            self.metrics.set_gauge("prefix_inserted_blocks_total", p.inserted_blocks as f64);
+            self.metrics.set_gauge("prefix_reclaimed_blocks_total", p.reclaimed_blocks as f64);
+        }
     }
 
     #[allow(clippy::too_many_arguments)]
@@ -462,6 +594,7 @@ impl EngineLoop {
 
     fn complete(&mut self, seq: ActiveSeq, mgr: &mut CacheManager) {
         mgr.release(seq.id);
+        self.publish_cache_stats(mgr);
         self.metrics.incr("completions", 1);
         self.metrics.incr("generated_tokens", seq.tokens.len() as u64);
         let _ = seq.reply.send(Reply {

@@ -4,7 +4,10 @@
 //! Endpoints:
 //!   POST /generate  {"prompt": str, "method": str, "budget": n,
 //!                    "max_new": n, "temperature": f}  → generation JSON
-//!   GET  /metrics   → counters + latency histograms
+//!   GET  /metrics   → counters + gauges + latency histograms, including
+//!                     the KV-pool `CacheStats` gauges (`kv_*`) and the
+//!                     prefix-cache hit/miss/reclaim counters + occupancy
+//!                     gauges (`prefix_*`) published by the engine loop
 //!   GET  /healthz   → ok
 
 pub mod http;
@@ -52,7 +55,18 @@ impl Default for ServerConfig {
 /// queue; each worker blocks on its per-request reply channel.
 pub fn serve(cfg: ServerConfig, queue: Arc<RequestQueue>, metrics: Arc<Metrics>) -> Result<()> {
     let listener = TcpListener::bind(&cfg.addr).with_context(|| format!("bind {}", cfg.addr))?;
-    log::info!("listening on http://{}", cfg.addr);
+    serve_listener(listener, cfg, queue, metrics)
+}
+
+/// [`serve`] over an already-bound listener (lets tests and embedders
+/// bind port 0 and learn the ephemeral address before serving).
+pub fn serve_listener(
+    listener: TcpListener,
+    cfg: ServerConfig,
+    queue: Arc<RequestQueue>,
+    metrics: Arc<Metrics>,
+) -> Result<()> {
+    log::info!("listening on http://{}", listener.local_addr()?);
     let pool = ThreadPool::new(cfg.workers, "http");
     let next_id = Arc::new(AtomicU64::new(1));
     let (read_to, write_to) = (cfg.read_timeout_ms, cfg.write_timeout_ms);

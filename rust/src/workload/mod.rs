@@ -11,4 +11,7 @@ pub mod spec;
 pub mod suites;
 
 pub use spec::{Sample, TaskFamily};
-pub use suites::{longbench_suite, longproc_suite, mtbench_suite, qasper_suite, ruler_suite, Suite};
+pub use suites::{
+    longbench_suite, longproc_suite, mtbench_suite, qasper_suite, ruler_suite,
+    shared_prefix_suite, Suite,
+};

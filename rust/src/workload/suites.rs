@@ -86,6 +86,36 @@ pub fn mtbench_suite(seed: u64, n: usize, ctx_tokens: usize) -> Suite {
     Suite { name: format!("mtbench@{ctx_tokens}"), samples }
 }
 
+/// Shared-system-prompt workload (the prefix-cache scenario): every
+/// sample's context starts with one fixed "system prompt" occupying
+/// `shared_pct`% of the context budget, followed by a sample-specific KV
+/// retrieval task. The shared prefix is byte-identical across samples,
+/// so with the byte tokenizer the first `1 + shared_chars` prompt tokens
+/// (BOS included) are shared — the fraction `bench_prefix` reuses.
+pub fn shared_prefix_suite(seed: u64, n: usize, ctx_tokens: usize, shared_pct: usize) -> Suite {
+    assert!(shared_pct < 100, "the per-sample tail needs some budget");
+    let mut rng = Rng::new(seed ^ 0x5afe);
+    let budget = ctx_chars_for(ctx_tokens);
+    let shared_chars = budget * shared_pct / 100;
+    // One fixed pseudo system prompt: deterministic noise + a few policy
+    // records, identical for every sample.
+    let mut shared = String::from("system:tools=ruler,eval;policy=");
+    shared.push_str(&spec::code(&mut rng, 8));
+    shared.push(';');
+    while shared.len() < shared_chars {
+        shared.push_str(&spec::noise_word(&mut rng));
+    }
+    shared.truncate(shared_chars);
+    let samples = (0..n)
+        .map(|_| {
+            let mut s = spec::gen_kv(&mut rng, budget - shared_chars);
+            s.context = format!("{shared}{}", s.context);
+            s
+        })
+        .collect();
+    Suite { name: format!("shared_prefix@{ctx_tokens}x{shared_pct}pct"), samples }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -111,5 +141,22 @@ mod tests {
     fn longproc_output_scales() {
         let s = longproc_suite(1, 1, 512, 8);
         assert!(s.samples[0].answer.len() >= 8 * 8);
+    }
+
+    #[test]
+    fn shared_prefix_suite_shares_exactly_the_prefix() {
+        let s = shared_prefix_suite(3, 4, 512, 80);
+        let budget = ctx_chars_for(512);
+        let shared = budget * 80 / 100;
+        let first = &s.samples[0].context[..shared];
+        for sample in &s.samples {
+            assert!(sample.prompt().len() + 2 <= 512, "{}", sample.prompt().len());
+            assert_eq!(&sample.context[..shared], first, "shared prefix must be byte-identical");
+        }
+        // tails diverge (distinct KV tasks)
+        assert_ne!(&s.samples[0].context[shared..], &s.samples[1].context[shared..]);
+        // deterministic
+        let s2 = shared_prefix_suite(3, 4, 512, 80);
+        assert_eq!(s.samples[2].context, s2.samples[2].context);
     }
 }

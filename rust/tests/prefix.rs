@@ -1,0 +1,412 @@
+//! Cross-request prefix cache: correctness and serving integration.
+//!
+//! The core contract is **bit-identical equivalence**: for every
+//! `Method::parse`-able policy, a warm prefix-hit prefill (a `ChunkState`
+//! resumed from radix-tree blocks) must produce exactly the score
+//! bundles, selection, logits and compacted caches of a cold monolithic
+//! prefill of the same prompt. Only pre-eviction prefill state is ever
+//! cached, so this holds for any per-request eviction budget.
+//!
+//! Also covered here: the engine loop serving identical generations with
+//! the prefix cache on/off (with hit/miss accounting), the once-per-run
+//! monolithic fallback for backends without chunked-prefill support, and
+//! the `/metrics` HTTP round-trip for `CacheStats` + prefix counters.
+
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+
+use lookaheadkv::engine::{Engine, EngineConfig, PrefillOutput, PrefixPlan};
+use lookaheadkv::eviction::{EvictionConfig, Method, ScoreBundle};
+use lookaheadkv::kvcache::{CacheManager, SeqCache};
+use lookaheadkv::metrics::Metrics;
+use lookaheadkv::model::tokenizer::encode;
+use lookaheadkv::runtime::artifacts::default_artifacts_dir;
+use lookaheadkv::runtime::{
+    Backend, DecodeOut, DecodeSeq, GraphStats, Manifest, ReferenceBackend, Runtime, Value,
+};
+use lookaheadkv::scheduler::{EngineLoop, LoopConfig, Reply, Request, RequestQueue};
+use lookaheadkv::server::{serve_listener, ServerConfig};
+use lookaheadkv::util::json;
+
+const ALL_METHODS: &[&str] = &[
+    "full", "random", "streaming", "snapkv", "pyramidkv", "h2o", "tova", "laq", "speckv",
+    "lookaheadkv", "lkv+suffix",
+];
+
+const BLOCK: usize = 16;
+
+fn engine() -> Engine {
+    Engine::new(&default_artifacts_dir(), EngineConfig::new("lkv-tiny")).expect("engine")
+}
+
+fn assert_bundles_identical(a: &ScoreBundle, b: &ScoreBundle, tag: &str) {
+    assert_eq!(a.len, b.len, "{tag}: bundle len");
+    assert_eq!(a.win_start, b.win_start, "{tag}: win_start");
+    assert_eq!(a.win_rows, b.win_rows, "{tag}: win_rows");
+    assert_eq!(a.w_use_override, b.w_use_override, "{tag}: w_use_override");
+    let pairs = [
+        ("window_scores", &a.window_scores, &b.window_scores),
+        ("h2o_scores", &a.h2o_scores, &b.h2o_scores),
+        ("lkv_scores", &a.lkv_scores, &b.lkv_scores),
+    ];
+    for (name, ta, tb) in pairs {
+        match (ta, tb) {
+            (None, None) => {}
+            (Some(x), Some(y)) => {
+                assert_eq!(x.shape, y.shape, "{tag}: {name} shape");
+                assert_eq!(x.data, y.data, "{tag}: {name} not bit-identical");
+            }
+            _ => panic!("{tag}: {name} presence differs (cold vs warm)"),
+        }
+    }
+}
+
+/// Run one chunked prefill through the prefix cache: lookup, (maybe)
+/// resume, record, insert, release. Returns the output plus how many
+/// prompt tokens were served from the tree.
+fn prefill_with_cache(
+    engine: &Engine,
+    mgr: &mut CacheManager,
+    prompt: &[i32],
+    method: &Method,
+    chunk: usize,
+) -> (PrefillOutput, usize) {
+    let info = engine.prefix_pass_info(prompt.len(), method).expect("pass info");
+    let mat = mgr
+        .prefix_lookup(&info.model, prompt, info.need_scores, info.resume_cap)
+        .expect("prefix cache enabled");
+    let resume_len = mat.resume_len;
+    let pin = mat.pin;
+    let plan = Some(PrefixPlan { block_size: BLOCK, seed: mat.seed });
+    let mut job = engine
+        .chunked_prefill_begin_with_prefix(prompt, method, chunk, plan)
+        .expect("begin prefill");
+    if resume_len > 0 {
+        // the resumed job's first pass really does skip the cached rows
+        assert_eq!(job.remaining(), prompt.len() - resume_len, "resume point");
+    }
+    let mut steps = 0;
+    while !job.step(engine).expect("prefill step") {
+        steps += 1;
+        assert!(steps < 10_000, "chunked prefill does not terminate");
+    }
+    let records = job.take_prefix_records();
+    let out = job.into_output().expect("prefill output");
+    if let Some(recs) = records {
+        mgr.prefix_insert(&recs.model, prompt, recs.records);
+    }
+    mgr.prefix_release(pin);
+    (out, resume_len)
+}
+
+fn assert_equivalent(engine: &Engine, prompt: &[i32], method: &Method, mono: &PrefillOutput, warm: &PrefillOutput, tag: &str) {
+    assert_eq!(warm.bucket, mono.bucket, "{tag}: bucket");
+    assert_eq!(warm.logits, mono.logits, "{tag}: first-token logits not bit-identical");
+    assert_bundles_identical(&mono.bundle, &warm.bundle, tag);
+    let evcfg = EvictionConfig::new(24);
+    let n_layers = engine.n_layers("lkv-tiny");
+    let sel_m = method.select(&evcfg, n_layers, &mono.bundle);
+    let sel_w = method.select(&evcfg, n_layers, &warm.bundle);
+    assert_eq!(sel_m, sel_w, "{tag}: kept-slot selection");
+    let cap = engine
+        .rt
+        .manifest()
+        .decode_cap("lkv-tiny", sel_m.max_kept() + 4)
+        .expect("decode cap");
+    let cm = SeqCache::from_selection(&mono.k, &mono.v, &sel_m.per_layer, prompt.len(), cap);
+    let cw = SeqCache::from_selection(&warm.k, &warm.v, &sel_w.per_layer, prompt.len(), cap);
+    assert_eq!(cm.k.data, cw.k.data, "{tag}: compacted K cache");
+    assert_eq!(cm.v.data, cw.v.data, "{tag}: compacted V cache");
+    assert_eq!(cm.lens, cw.lens, "{tag}: cache lens");
+}
+
+/// Acceptance: for every parseable policy, a warm prefix-hit prefill is
+/// bit-identical to a cold monolithic prefill. One tree is shared across
+/// all methods, so base passes reuse (and upgrade) blocks recorded by
+/// lookahead passes and vice versa.
+#[test]
+fn warm_prefix_hit_matches_cold_for_every_policy() {
+    let engine = engine();
+    assert!(engine.rt.supports_chunked_prefill());
+    let prompt = encode(
+        "lorem;ipsum;K7F=Q2Z;amet;tempor;labore;magna;aliqua;erat;sed;K7F=",
+        true,
+        false,
+    );
+    assert!(prompt.len() > 2 * BLOCK + 32, "prompt long enough to resume");
+    let mut mgr = CacheManager::new(1 << 16, BLOCK);
+    mgr.enable_prefix_cache(0);
+    for name in ALL_METHODS {
+        let method = Method::parse(name).unwrap_or_else(|| panic!("{name:?} must parse"));
+        let mono = engine.prefill_for_method(&prompt, &method).expect("monolithic prefill");
+        // First pass may or may not hit (depending on what earlier
+        // methods recorded) — must be identical either way.
+        let (out1, _) = prefill_with_cache(&engine, &mut mgr, &prompt, &method, 7);
+        assert_equivalent(&engine, &prompt, &method, &mono, &out1, &format!("{name} pass1"));
+        // Second pass must actually resume from the tree.
+        let (out2, resumed) = prefill_with_cache(&engine, &mut mgr, &prompt, &method, 16);
+        assert!(resumed > 0, "{name}: warm pass must resume from the prefix cache");
+        assert_eq!(resumed % BLOCK, 0, "{name}: resume point is block-aligned");
+        assert_equivalent(&engine, &prompt, &method, &mono, &out2, &format!("{name} warm"));
+    }
+    let stats = mgr.prefix_stats().expect("stats");
+    assert!(stats.blocks > 0);
+    assert_eq!(stats.pinned_nodes, 0, "all pins released");
+}
+
+/// Divergent prompts: a warm resume of a prompt sharing only a prefix
+/// with the cached one stays bit-identical to its own cold prefill.
+#[test]
+fn warm_resume_of_diverged_prompt_matches_cold() {
+    let engine = engine();
+    let shared = "system;tools;ruler;eval;policy;lorem;ipsum;dolor;sit;amet;consectetur;";
+    let p1 = encode(&format!("{shared}A7K=Q2Z;find;A7K="), true, false);
+    let p2 = encode(&format!("{shared}B3X=W9Y;scan;B3X="), true, false);
+    let method = Method::SnapKV;
+    let mut mgr = CacheManager::new(1 << 16, BLOCK);
+    mgr.enable_prefix_cache(0);
+    let (_, r0) = prefill_with_cache(&engine, &mut mgr, &p1, &method, 11);
+    assert_eq!(r0, 0, "cold tree");
+    let mono2 = engine.prefill_for_method(&p2, &method).expect("monolithic");
+    let (warm2, resumed) = prefill_with_cache(&engine, &mut mgr, &p2, &method, 11);
+    assert!(resumed > 0, "shared prefix must resume");
+    assert!(resumed <= shared.len() + 1, "resume cannot extend past the shared prefix");
+    assert_equivalent(&engine, &p2, &method, &mono2, &warm2, "diverged warm");
+    // and p1 itself still round-trips exactly
+    let mono1 = engine.prefill_for_method(&p1, &method).expect("monolithic");
+    let (warm1, r1) = prefill_with_cache(&engine, &mut mgr, &p1, &method, 32);
+    assert!(r1 >= resumed);
+    assert_equivalent(&engine, &p1, &method, &mono1, &warm1, "original warm");
+}
+
+fn run_loop(prompts: &[String], prefix_cache: bool) -> (Vec<Reply>, Arc<Metrics>) {
+    let engine = engine();
+    let queue = Arc::new(RequestQueue::new(16));
+    let metrics = Arc::new(Metrics::new());
+    let mut receivers = Vec::new();
+    for (i, p) in prompts.iter().enumerate() {
+        let (tx, rx) = channel();
+        receivers.push(rx);
+        let method = if i % 2 == 0 { Method::SnapKV } else { Method::parse("lkv").unwrap() };
+        queue
+            .submit(Request {
+                id: i as u64,
+                prompt: encode(p, true, false),
+                method,
+                budget: 16,
+                max_new: 5,
+                temperature: 0.0,
+                reply: tx,
+            })
+            .expect("submit");
+    }
+    queue.close();
+    let cfg = LoopConfig {
+        max_active: 2,
+        prefill_chunk_tokens: 16,
+        kv_block_slots: BLOCK,
+        prefix_cache,
+        ..LoopConfig::default()
+    };
+    EngineLoop::new(engine, cfg, Arc::clone(&queue), Arc::clone(&metrics)).run();
+    let mut replies: Vec<_> = receivers.into_iter().map(|rx| rx.recv().expect("reply")).collect();
+    replies.sort_by_key(|r| r.id);
+    (replies, metrics)
+}
+
+/// End to end through the engine loop: identical generations with the
+/// prefix cache on and off, and the warm run actually hits.
+#[test]
+fn engine_loop_with_prefix_cache_serves_identical_generations() {
+    let shared = "system;tools;ruler;eval;policy;lorem;ipsum;dolor;sit;amet;consectetur;elit;";
+    let prompts: Vec<String> = [
+        format!("{shared}A7K=Q2Z;find;A7K="),
+        format!("{shared}A7K=Q2Z;find;A7K="), // exact repeat -> full hit
+        format!("{shared}B3X=W9Y;scan;B3X="), // shared prefix -> partial hit
+        format!("{shared}C5M=R4T;list;C5M="),
+    ]
+    .to_vec();
+    let (off, off_metrics) = run_loop(&prompts, false);
+    let (on, on_metrics) = run_loop(&prompts, true);
+    assert_eq!(off.len(), on.len());
+    for (a, b) in off.iter().zip(on.iter()) {
+        assert!(a.error.is_none(), "prefix-off loop error: {:?}", a.error);
+        assert!(b.error.is_none(), "prefix-on loop error: {:?}", b.error);
+        assert_eq!(a.text, b.text, "req {}: generation differs", a.id);
+        assert_eq!(a.n_tokens, b.n_tokens, "req {}: token count differs", a.id);
+        assert_eq!(a.kept, b.kept, "req {}: kept slots differ", a.id);
+    }
+    assert_eq!(off_metrics.counter("prefix_hits"), 0);
+    assert_eq!(off_metrics.counter("prefix_misses"), 0);
+    let hits = on_metrics.counter("prefix_hits") + on_metrics.counter("prefix_partial_hits");
+    assert!(hits >= 2, "warm requests must hit the tree (got {hits})");
+    assert!(on_metrics.counter("prefix_misses") >= 1, "first request is a miss");
+    assert!(on_metrics.counter("prefix_inserted_blocks") >= 1);
+    assert!(on_metrics.gauge("prefix_blocks").unwrap_or(0.0) > 0.0);
+    assert_eq!(on_metrics.gauge("prefix_pinned_nodes"), Some(0.0), "pins drain");
+}
+
+/// A reference backend with chunked prefill disabled: stands in for the
+/// pjrt stub path, which advertises `supports_chunked_prefill = false`.
+struct NoChunkBackend(ReferenceBackend);
+
+impl Backend for NoChunkBackend {
+    fn name(&self) -> &'static str {
+        "reference-nochunk"
+    }
+    fn manifest(&self) -> &Manifest {
+        self.0.manifest()
+    }
+    fn execute(
+        &self,
+        key: &str,
+        variant: Option<(&str, &str)>,
+        inputs: &[Value],
+    ) -> anyhow::Result<Vec<Value>> {
+        self.0.execute(key, variant, inputs)
+    }
+    fn decode_batch(
+        &self,
+        model: &str,
+        seqs: &mut [DecodeSeq<'_>],
+    ) -> anyhow::Result<Vec<DecodeOut>> {
+        self.0.decode_batch(model, seqs)
+    }
+    fn stats(&self) -> Vec<(String, GraphStats)> {
+        self.0.stats()
+    }
+    fn reset_stats(&self) {
+        self.0.reset_stats()
+    }
+}
+
+/// Satellite: a backend without chunked-prefill support (the pjrt stub)
+/// must fall back to monolithic prefill — logged once per run, not
+/// silent — and still produce identical output for the same requests.
+#[test]
+fn monolithic_fallback_without_chunked_support_is_identical() {
+    let prompts: Vec<String> = vec![
+        "A7K=Q2Z;lorem;ipsum;dolor;sit;amet;consectetur;A7K=".into(),
+        "B3X=W9Y;tempor;incididunt;ut;labore;et;dolore;B3X=".into(),
+    ];
+    let run = |nochunk: bool| {
+        let engine = if nochunk {
+            let be = ReferenceBackend::new(&default_artifacts_dir()).expect("backend");
+            Engine {
+                rt: Runtime::with_backend(Box::new(NoChunkBackend(be))),
+                cfg: EngineConfig::new("lkv-tiny"),
+            }
+        } else {
+            engine()
+        };
+        assert_eq!(engine.rt.supports_chunked_prefill(), !nochunk);
+        let queue = Arc::new(RequestQueue::new(8));
+        let metrics = Arc::new(Metrics::new());
+        let mut receivers = Vec::new();
+        for (i, p) in prompts.iter().enumerate() {
+            let (tx, rx) = channel();
+            receivers.push(rx);
+            queue
+                .submit(Request {
+                    id: i as u64,
+                    prompt: encode(p, true, false),
+                    method: Method::SnapKV,
+                    budget: 16,
+                    max_new: 4,
+                    temperature: 0.0,
+                    reply: tx,
+                })
+                .expect("submit");
+        }
+        queue.close();
+        // chunking (and the prefix cache) requested in both runs; the
+        // nochunk backend must degrade to monolithic, not fail
+        let cfg = LoopConfig {
+            max_active: 2,
+            prefill_chunk_tokens: 8,
+            prefix_cache: true,
+            kv_block_slots: BLOCK,
+            ..LoopConfig::default()
+        };
+        EngineLoop::new(engine, cfg, Arc::clone(&queue), Arc::clone(&metrics)).run();
+        let mut replies: Vec<_> =
+            receivers.into_iter().map(|rx| rx.recv().expect("reply")).collect();
+        replies.sort_by_key(|r| r.id);
+        (replies, metrics)
+    };
+    let (chunked, chunked_metrics) = run(false);
+    let (fallback, fallback_metrics) = run(true);
+    for (a, b) in chunked.iter().zip(fallback.iter()) {
+        assert!(a.error.is_none() && b.error.is_none(), "{:?} / {:?}", a.error, b.error);
+        assert_eq!(a.text, b.text, "req {}: fallback output differs", a.id);
+        assert_eq!(a.kept, b.kept, "req {}: fallback kept differs", a.id);
+    }
+    assert_eq!(chunked_metrics.counter("chunked_prefills"), prompts.len() as u64);
+    assert_eq!(fallback_metrics.counter("chunked_prefills"), 0, "fallback is monolithic");
+    assert_eq!(fallback_metrics.counter("prefills"), prompts.len() as u64);
+    // prefix cache never engages without chunked prefill
+    assert_eq!(fallback_metrics.counter("prefix_hits"), 0);
+    assert_eq!(fallback_metrics.counter("prefix_misses"), 0);
+}
+
+/// Satellite: `GET /metrics` exposes the KV `CacheStats` gauges and the
+/// prefix-cache hit/miss/reclaim counters over real HTTP.
+#[test]
+fn metrics_http_roundtrip_exposes_cache_stats() {
+    let queue = Arc::new(RequestQueue::new(16));
+    let metrics = Arc::new(Metrics::new());
+    let q2 = Arc::clone(&queue);
+    let m2 = Arc::clone(&metrics);
+    let engine_thread = std::thread::Builder::new()
+        .name("engine-test".into())
+        .spawn(move || {
+            let cfg = LoopConfig {
+                max_active: 2,
+                prefill_chunk_tokens: 32,
+                kv_block_slots: BLOCK,
+                prefix_cache: true,
+                ..LoopConfig::default()
+            };
+            EngineLoop::new(engine(), cfg, q2, m2).run()
+        })
+        .expect("spawn engine");
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().expect("addr").to_string();
+    let q3 = Arc::clone(&queue);
+    let m3 = Arc::clone(&metrics);
+    std::thread::Builder::new()
+        .name("http-test".into())
+        .spawn(move || {
+            let cfg = ServerConfig { workers: 2, ..ServerConfig::default() };
+            let _ = serve_listener(listener, cfg, q3, m3);
+        })
+        .expect("spawn server");
+
+    let shared = "system;tools;ruler;eval;policy;lorem;ipsum;dolor;sit;amet;consectetur;\
+                  adipiscing;elit;sed;do;eiusmod;tempor;";
+    let body = format!(
+        "{{\"prompt\": \"{shared}K7F=Q2Z;find;K7F=\", \"method\": \"snapkv\", \
+         \"budget\": 16, \"max_new\": 3}}"
+    );
+    for i in 0..2 {
+        let (status, resp) =
+            lookaheadkv::server::http::http_post(&addr, "/generate", &body).expect("post");
+        assert_eq!(status, 200, "request {i}: {resp}");
+    }
+    let (status, resp) = lookaheadkv::server::http::http_get(&addr, "/metrics").expect("get");
+    assert_eq!(status, 200);
+    let j = json::parse(&resp).expect("metrics json");
+    let counters = j.req("counters");
+    assert_eq!(counters.req("prefills").as_usize(), Some(2));
+    assert_eq!(counters.req("prefix_misses").as_usize(), Some(1));
+    assert_eq!(counters.req("prefix_hits").as_usize(), Some(1), "repeat must be a full hit");
+    assert!(counters.req("prefix_inserted_blocks").as_usize().unwrap_or(0) >= 1);
+    let gauges = j.req("gauges");
+    assert!(gauges.req("kv_free_blocks").as_f64().is_some());
+    assert!(gauges.req("kv_active_seqs").as_f64().is_some());
+    assert!(gauges.req("prefix_blocks").as_f64().unwrap_or(0.0) > 0.0);
+    assert!(j.req("latency").get("ttft_ms").is_some());
+
+    queue.close();
+    engine_thread.join().expect("engine thread");
+}
