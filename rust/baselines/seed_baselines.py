@@ -13,6 +13,7 @@ benches (see README "Refreshing bench baselines"):
 
     LKV_BENCH_SMOKE=1 cargo bench --bench bench_eviction \
         && LKV_BENCH_SMOKE=1 cargo bench --bench bench_prefill \
+        && LKV_BENCH_SMOKE=1 cargo bench --bench bench_decode \
         && LKV_BENCH_SMOKE=1 cargo bench --bench bench_scheduler
     cp rust/results/BENCH_*.json rust/baselines/
 
@@ -146,6 +147,59 @@ def bench_prefix():
     return rows
 
 
+def decode_cap(need):
+    """Smallest manifest decode cap >= need (artifacts.Manifest caps)."""
+    for c in (64, 128, 256, 640, 1152):
+        if c >= need:
+            return c
+    raise ValueError(need)
+
+
+def bench_decode():
+    """bench_decode: TPOT x budget, dispatch comparison (per-seq vs
+    batched vs paged block tables), and the resident-KV "memory rows"
+    (exact megabytes recorded as deterministic pseudo-latency).
+
+    The prompt is ruler_suite(13, 1, 512): ~ctx*0.92 + BOS/query tokens,
+    long enough that every budget below 448 keeps exactly `budget` rows
+    (SnapKV keeps min(budget, len))."""
+    rows = []
+    length = int(512 * 0.92)
+    steps = 16
+    sel = select_ms(length, "SnapKV")
+    prefill = mono_prefill(512)
+    for b in (16, 32, 64, 128):
+        # generate(): prefill + select + 16 decode steps over ~b live rows
+        dec = sum(decode_step(b + 1 + i) for i in range(steps))
+        rows.append(row(f"decode16/SnapKV@C{b}", prefill + sel + dec + 0.2))
+    # FullKV keeps every prompt row (~length live slots, cap bucket 640)
+    full_dec = sum(decode_step(length + 1 + i) for i in range(steps))
+    rows.append(row("decode16/FullKV@full", prefill + full_dec + 0.4))
+    # dispatch comparison at budget 32 (cap 64): live rows 32..48
+    per_step = [decode_step(32 + i) for i in range(steps)]
+    one_seq = sum(per_step)
+    for batch in (1, 4):
+        # per-seq serializes the full cap-64 cache both ways every token
+        rows.append(row(f"decode_dispatch/perseq/b{batch}", batch * one_seq * 1.35))
+        rows.append(row(f"decode_dispatch/batched/b{batch}", batch * one_seq))
+        # paged: same math through the block table + per-iteration
+        # arena setup (gather-compaction of 32 rows per sequence)
+        rows.append(row(f"decode_dispatch/paged/b{batch}", batch * one_seq * 1.05 + 0.05))
+    # production-shaped comparison: 256 kept rows + 2*steps headroom,
+    # which lands in the decode_cap() bucket the bench names its rows by
+    cap_big = decode_cap(256 + 2 * steps)
+    big_seq = sum(decode_step(256 + i) for i in range(steps))
+    rows.append(row(f"decode_dispatch/batched_c{cap_big}/b4", 4 * big_seq))
+    rows.append(row(f"decode_dispatch/paged_c{cap_big}/b4", 4 * big_seq * 1.05 + 0.3))
+    # resident KV in MB (exact): dense = 4 seqs x [4,2,640,16] K+V f32;
+    # paged = 4 seqs x 5 64-slot blocks (256 kept + 16 inserts)
+    dense_mb = 4 * (4 * 2 * cap_big * 16) * 2 * 4 / 1e6
+    paged_mb = 4 * 5 * (4 * 2 * 16) * 64 * 2 * 4 / 1e6
+    rows.append(row("decode_mem/dense_kv_mb/b4", dense_mb))
+    rows.append(row("decode_mem/paged_kv_mb/b4", paged_mb))
+    return rows
+
+
 def bench_scheduler():
     rows = [
         row("queue/submit_pop_1k", 0.25),
@@ -174,6 +228,7 @@ def main():
     for name, rows in (
         ("eviction", bench_eviction()),
         ("prefill", bench_prefill()),
+        ("decode", bench_decode()),
         ("prefix", bench_prefix()),
         ("scheduler", bench_scheduler()),
     ):

@@ -1,19 +1,26 @@
 //! Decode throughput (TPOT) × cache budget, plus the decode *dispatch*
 //! comparison: per-sequence backend round-trips (full cache serialized
-//! both ways every token) vs the batched in-place decode step the engine
-//! loop uses. Acceptance: batched is no slower at batch 1 and faster at
-//! `max_active = 4`.
+//! both ways every token) vs the batched in-place decode step vs the
+//! paged block-table decode the engine loop now defaults to.
+//! Acceptance: batched is no slower at batch 1 and faster at
+//! `max_active = 4`; paged is no slower than dense batched at batch ≥ 4
+//! while holding strictly fewer resident KV bytes (the
+//! `decode_mem/*_kv_mb/*` rows record megabytes instead of
+//! milliseconds — deterministic, so the gate sees a flat ratio).
 
 mod common;
 
 use lookaheadkv::engine::GenOptions;
 use lookaheadkv::eviction::Method;
-use lookaheadkv::kvcache::SeqCache;
+use lookaheadkv::kvcache::{BlockAllocator, KvArena, KvDims, PagedSeqCache, SeqCache};
 use lookaheadkv::model::tokenizer::encode;
 use lookaheadkv::util::bench::{record_named, run_bench, BenchConfig, BenchResult};
+use lookaheadkv::util::stats::summarize;
+use lookaheadkv::util::tensor::TensorF;
 use lookaheadkv::workload;
 
 const DISPATCH_STEPS: usize = 16;
+const ARENA_BLOCK: usize = 64;
 
 fn main() {
     let Some(engine) = common::engine_or_skip("decode") else { return };
@@ -21,18 +28,24 @@ fn main() {
     let cfg = BenchConfig { min_iters: 4, max_iters: 8, ..Default::default() };
     let suite = workload::ruler_suite(13, 1, 512);
     let prompt = encode(&suite.samples[0].prompt(), true, false);
+    let dims = engine.kv_dims(&model).expect("dims");
     let mut results = Vec::new();
 
-    // TPOT × budget: smaller caches decode faster.
-    for budget in [16usize, 32, 64, 128, 448] {
-        let method = if budget >= prompt.len() { Method::FullKV } else { Method::SnapKV };
-        let name = format!("decode16/{}@C{}", method.name(), budget);
+    // TPOT × budget: smaller caches decode faster. The FullKV row keeps
+    // the whole prompt (budget-independent name, stable baselines).
+    for budget in [16usize, 32, 64, 128] {
+        let name = format!("decode16/SnapKV@C{budget}");
         let opts = GenOptions { max_new: 16, ..GenOptions::new(budget, 16) };
         let r = run_bench(&name, &cfg, || {
-            let _ = engine.generate(&prompt, &method, &opts).expect("generate");
+            let _ = engine.generate(&prompt, &Method::SnapKV, &opts).expect("generate");
         });
         results.push(r);
     }
+    let opts = GenOptions { max_new: 16, ..GenOptions::new(usize::MAX / 2, 16) };
+    let r = run_bench("decode16/FullKV@full", &cfg, || {
+        let _ = engine.generate(&prompt, &Method::FullKV, &opts).expect("generate");
+    });
+    results.push(r);
 
     // Dispatch comparison: same prefilled cache, DISPATCH_STEPS decode
     // tokens, batch sizes 1 and 4 (the default `max_active`).
@@ -67,10 +80,154 @@ fn main() {
             }
         });
         results.push(r);
+        let r = run_bench(&format!("decode_dispatch/paged/b{batch}"), &cfg, || {
+            run_paged(&engine, &model, dims, &pre.k, &pre.v, &sel.per_layer, prompt.len(), cap, batch);
+        });
+        results.push(r);
         report_speedup(&results, batch);
     }
 
+    // Paged-vs-dense at a production-shaped budget (256 kept rows, cap
+    // bucket 640): latency head-to-head plus resident-KV-bytes rows.
+    evcfg.budget = 256;
+    let sel_big = Method::SnapKV.select(&evcfg, n_layers, &pre.bundle);
+    let cap_big = engine
+        .rt
+        .manifest()
+        .decode_cap(&model, sel_big.max_kept() + 2 * DISPATCH_STEPS)
+        .expect("decode cap");
+    let base_big = SeqCache::from_selection(&pre.k, &pre.v, &sel_big.per_layer, prompt.len(), cap_big);
+    let batch = 4usize;
+    let r = run_bench(&format!("decode_dispatch/batched_c{cap_big}/b{batch}"), &cfg, || {
+        let mut caches: Vec<SeqCache> = (0..batch).map(|_| base_big.clone()).collect();
+        for step in 0..DISPATCH_STEPS {
+            let tokens = vec![65 + step as i32; batch];
+            let mut refs: Vec<&mut SeqCache> = caches.iter_mut().collect();
+            let _ = engine.decode_step_batch(&model, &mut refs, &tokens).expect("batch step");
+        }
+    });
+    results.push(r);
+    let r = run_bench(&format!("decode_dispatch/paged_c{cap_big}/b{batch}"), &cfg, || {
+        run_paged(
+            &engine,
+            &model,
+            dims,
+            &pre.k,
+            &pre.v,
+            &sel_big.per_layer,
+            prompt.len(),
+            cap_big,
+            batch,
+        );
+    });
+    results.push(r);
+
+    // Resident KV bytes after the same 16-step run: dense holds the full
+    // cap bucket per sequence; paged holds only the blocks its live rows
+    // occupy. Recorded in MB as deterministic pseudo-latency rows.
+    let dense_mb = (batch * base_big.k.numel() * 2 * 4) as f64 / 1e6;
+    let paged_mb = {
+        let mut arena = KvArena::new(256, ARENA_BLOCK);
+        let mut alloc = BlockAllocator::new(256 * ARENA_BLOCK, ARENA_BLOCK);
+        let mut caches: Vec<PagedSeqCache> = (0..batch)
+            .map(|i| {
+                PagedSeqCache::from_dense_selection(
+                    &mut arena,
+                    &mut alloc,
+                    i as u64,
+                    dims,
+                    &pre.k,
+                    &pre.v,
+                    &sel_big.per_layer,
+                    prompt.len(),
+                    cap_big,
+                )
+                .expect("paged compaction")
+            })
+            .collect();
+        for step in 0..DISPATCH_STEPS {
+            let tokens = vec![65 + step as i32; batch];
+            for (i, c) in caches.iter_mut().enumerate() {
+                if c.headroom() == 0 {
+                    assert!(c.grow(&mut arena, &mut alloc, i as u64), "bench pool exhausted");
+                }
+            }
+            let mut refs: Vec<&mut PagedSeqCache> = caches.iter_mut().collect();
+            let _ = engine
+                .decode_step_batch_paged(&model, &mut arena, &mut refs, &tokens)
+                .expect("paged step");
+        }
+        arena.bytes_in_use() as f64 / 1e6
+    };
+    println!(
+        "resident KV at batch {batch}, cap {cap_big}: dense {dense_mb:.2} MB vs paged \
+         {paged_mb:.2} MB ({:.2}x)",
+        dense_mb / paged_mb
+    );
+    assert!(
+        paged_mb < dense_mb,
+        "paged resident KV ({paged_mb:.2} MB) must be strictly below dense ({dense_mb:.2} MB)"
+    );
+    results.push(mem_row(&format!("decode_mem/dense_kv_mb/b{batch}"), dense_mb));
+    results.push(mem_row(&format!("decode_mem/paged_kv_mb/b{batch}"), paged_mb));
+
     record_named("decode", &results);
+}
+
+/// One paged dispatch iteration: gather-compact `batch` caches into a
+/// fresh arena and run the 16-step batched paged decode (mirrors what
+/// the engine loop does per admitted request).
+#[allow(clippy::too_many_arguments)]
+fn run_paged(
+    engine: &lookaheadkv::engine::Engine,
+    model: &str,
+    dims: KvDims,
+    k: &TensorF,
+    v: &TensorF,
+    kept: &[Vec<usize>],
+    prompt_len: usize,
+    cap: usize,
+    batch: usize,
+) {
+    let mut arena = KvArena::new(128, ARENA_BLOCK);
+    let mut alloc = BlockAllocator::new(128 * ARENA_BLOCK, ARENA_BLOCK);
+    let mut caches: Vec<PagedSeqCache> = (0..batch)
+        .map(|i| {
+            PagedSeqCache::from_dense_selection(
+                &mut arena,
+                &mut alloc,
+                i as u64,
+                dims,
+                k,
+                v,
+                kept,
+                prompt_len,
+                cap,
+            )
+            .expect("paged compaction")
+        })
+        .collect();
+    for step in 0..DISPATCH_STEPS {
+        let tokens = vec![65 + step as i32; batch];
+        for (i, c) in caches.iter_mut().enumerate() {
+            if c.headroom() == 0 {
+                assert!(c.grow(&mut arena, &mut alloc, i as u64), "bench pool exhausted");
+            }
+        }
+        let mut refs: Vec<&mut PagedSeqCache> = caches.iter_mut().collect();
+        let _ = engine
+            .decode_step_batch_paged(model, &mut arena, &mut refs, &tokens)
+            .expect("paged step");
+    }
+}
+
+/// A deterministic "megabytes" row: same JSON schema as the latency
+/// rows, so the gate tracks memory regressions with the same machinery
+/// (the value never varies run to run — ratio 1.0 unless the layout
+/// changes).
+fn mem_row(name: &str, mb: f64) -> BenchResult {
+    println!("bench {name:<48} {mb:>8.3} MB (recorded as pseudo-ms)");
+    BenchResult { name: name.to_string(), iters: 1, ms: summarize(&[mb]) }
 }
 
 fn report_speedup(results: &[BenchResult], batch: usize) {
@@ -80,7 +237,12 @@ fn report_speedup(results: &[BenchResult], batch: usize) {
             .find(|r| r.name == format!("decode_dispatch/{tag}/b{batch}"))
             .map(|r| r.ms.mean)
     };
-    if let (Some(ps), Some(ba)) = (mean("perseq"), mean("batched")) {
-        println!("dispatch b{batch}: per-seq {ps:.3} ms vs batched {ba:.3} ms ({:.2}x)", ps / ba);
+    if let (Some(ps), Some(ba), Some(pg)) = (mean("perseq"), mean("batched"), mean("paged")) {
+        println!(
+            "dispatch b{batch}: per-seq {ps:.3} ms vs batched {ba:.3} ms ({:.2}x) vs paged \
+             {pg:.3} ms ({:.2}x)",
+            ps / ba,
+            ps / pg
+        );
     }
 }

@@ -183,7 +183,14 @@ fn run_loop_once(prompts: &[Vec<i32>], batched: bool) {
             .expect("submit");
     }
     queue.close();
-    let cfg = LoopConfig { max_active: 4, batched_decode: batched, ..LoopConfig::default() };
+    // Dense caches here: the paged path always dispatches batched, which
+    // would collapse the per-seq vs batched A/B this bench exists for.
+    let cfg = LoopConfig {
+        max_active: 4,
+        batched_decode: batched,
+        paged_kv: false,
+        ..LoopConfig::default()
+    };
     EngineLoop::new(engine, cfg, Arc::clone(&queue), metrics).run();
     for rx in receivers {
         let reply = rx.recv().expect("reply");

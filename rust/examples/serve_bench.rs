@@ -1,4 +1,4 @@
-//! End-to-end serving validation (DESIGN.md §E2E): start the full stack
+//! End-to-end serving validation: start the full stack
 //! (engine loop + scheduler + HTTP server), drive it with a concurrent
 //! load generator over a real workload, and report TTFT / end-to-end
 //! latency / throughput per eviction method.

@@ -28,7 +28,7 @@ use super::prefill::{win_start, PrefillBreakdown, PrefillOutput};
 use super::Engine;
 use crate::eviction::{Method, ScoreBundle};
 use crate::kvcache::prefix::BlockRecord;
-use crate::kvcache::SeqCache;
+use crate::kvcache::{KvArena, KvDims, PagedCtx, SeqCache};
 use crate::runtime::{ChunkState, PrefixSeed};
 use crate::util::tensor::TensorF;
 
@@ -92,6 +92,9 @@ pub struct PrefixRecords {
 struct Recorder {
     block: usize,
     model: String,
+    /// KV geometry of the recorded pass's model (arena reads on the
+    /// paged path; matches `state.k.shape` on the dense path).
+    dims: KvDims,
     /// Blocks below this offset came from the cache (the seed) and are
     /// not re-recorded.
     upto: usize,
@@ -103,23 +106,46 @@ struct Recorder {
 impl Recorder {
     /// Record the block ending at `end` (a block multiple) from the
     /// pass state: its KV rows plus, for base passes, the *cumulative*
-    /// H2O column sums over all rows processed so far.
-    fn capture(&mut self, state: &ChunkState, toks: &[i32], end: usize) {
+    /// H2O column sums over all rows processed so far. Paged states read
+    /// their KV rows out of the arena (`arena` must then be `Some`).
+    fn capture(&mut self, state: &ChunkState, arena: Option<&KvArena>, toks: &[i32], end: usize) {
         let b = self.block;
         if end % b != 0 || end <= self.upto {
             return;
         }
-        let (l, hkv, bucket, dh) =
-            (state.k.shape[0], state.k.shape[1], state.k.shape[2], state.k.shape[3]);
+        let (l, hkv, dh) = (self.dims.n_layers, self.dims.n_kv_heads, self.dims.head_dim);
         let start = end - b;
         let mut k = TensorF::zeros(vec![l, hkv, b, dh]);
         let mut v = TensorF::zeros(vec![l, hkv, b, dh]);
-        for li in 0..l {
-            for g in 0..hkv {
-                let src = ((li * hkv + g) * bucket + start) * dh;
-                let dst = ((li * hkv + g) * b) * dh;
-                k.data[dst..dst + b * dh].copy_from_slice(&state.k.data[src..src + b * dh]);
-                v.data[dst..dst + b * dh].copy_from_slice(&state.v.data[src..src + b * dh]);
+        match (&state.blocks, arena) {
+            (Some(table), Some(ar)) => {
+                let bs = ar.block_size();
+                for li in 0..l {
+                    for g in 0..hkv {
+                        for r in 0..b {
+                            let slot = start + r;
+                            let src_k = ar.k_row(&self.dims, table[slot / bs], li, g, slot % bs);
+                            let src_v = ar.v_row(&self.dims, table[slot / bs], li, g, slot % bs);
+                            let dst = ((li * hkv + g) * b + r) * dh;
+                            k.data[dst..dst + dh].copy_from_slice(src_k);
+                            v.data[dst..dst + dh].copy_from_slice(src_v);
+                        }
+                    }
+                }
+            }
+            _ => {
+                let bucket = state.k.shape[2];
+                debug_assert_eq!(state.k.shape[..], [l, hkv, bucket, dh][..]);
+                for li in 0..l {
+                    for g in 0..hkv {
+                        let src = ((li * hkv + g) * bucket + start) * dh;
+                        let dst = ((li * hkv + g) * b) * dh;
+                        k.data[dst..dst + b * dh]
+                            .copy_from_slice(&state.k.data[src..src + b * dh]);
+                        v.data[dst..dst + b * dh]
+                            .copy_from_slice(&state.v.data[src..src + b * dh]);
+                    }
+                }
             }
         }
         let h2o = state.bundle.h2o_scores.as_ref().map(|acc| {
@@ -155,6 +181,9 @@ pub struct ChunkedPrefill {
     concat: Vec<i32>,
     recorder: Option<Recorder>,
     output: Option<PrefillOutput>,
+    /// Paged job: every pass's prompt KV lives in arena blocks charged
+    /// to the request; advance with [`ChunkedPrefill::step_paged`].
+    paged: bool,
 }
 
 impl Engine {
@@ -186,6 +215,38 @@ impl Engine {
         chunk: usize,
         prefix: Option<PrefixPlan>,
     ) -> Result<ChunkedPrefill> {
+        self.chunked_prefill_begin_inner(tokens, method, chunk, prefix, None)
+    }
+
+    /// [`Engine::chunked_prefill_begin_with_prefix`] with every pass's
+    /// prompt KV paged into `ctx`'s arena (blocks charged to
+    /// `ctx.owner`). The finished output carries the prompt block table
+    /// (`PrefillOutput::blocks`) for gather-compaction; on error the
+    /// job's blocks have already been freed.
+    pub fn chunked_prefill_begin_paged(
+        &self,
+        tokens: &[i32],
+        method: &Method,
+        chunk: usize,
+        prefix: Option<PrefixPlan>,
+        ctx: &mut PagedCtx<'_>,
+    ) -> Result<ChunkedPrefill> {
+        anyhow::ensure!(
+            self.rt.supports_paged_kv(),
+            "backend {} does not support paged KV",
+            self.rt.backend_name()
+        );
+        self.chunked_prefill_begin_inner(tokens, method, chunk, prefix, Some(ctx))
+    }
+
+    fn chunked_prefill_begin_inner(
+        &self,
+        tokens: &[i32],
+        method: &Method,
+        chunk: usize,
+        prefix: Option<PrefixPlan>,
+        mut ctx: Option<&mut PagedCtx<'_>>,
+    ) -> Result<ChunkedPrefill> {
         anyhow::ensure!(chunk >= 1, "prefill chunk size must be >= 1");
         anyhow::ensure!(!tokens.is_empty(), "empty prompt");
         anyhow::ensure!(
@@ -204,19 +265,12 @@ impl Engine {
                 );
             }
         }
-        let m = self.rt.manifest();
         let model = self.cfg.model.clone();
         let len = tokens.len();
+        let paged = ctx.is_some();
         let seed = prefix.as_ref().and_then(|p| p.seed.as_ref());
-        let mk = |pass_model: &str, variant: Option<&str>| -> Result<ChunkState> {
-            match seed {
-                Some(s) => ChunkState::resume(m, pass_model, variant, len, len - 1, s),
-                None => ChunkState::new(m, pass_model, variant, len, len - 1),
-            }
-        };
-        let (kind, pass_model, state) = if let Some(variant) = method.lkv_variant() {
-            let st = mk(&model, Some(variant))?;
-            (PassKind::Lkv, model, st)
+        let (kind, pass_model) = if method.lkv_variant().is_some() {
+            (PassKind::Lkv, model)
         } else if method.needs_draft() {
             let pass1_model = match method {
                 Method::SpecKV => {
@@ -224,15 +278,17 @@ impl Engine {
                 }
                 _ => model,
             };
-            let st = mk(&pass1_model, None)?;
-            (PassKind::PreDraft, pass1_model, st)
+            (PassKind::PreDraft, pass1_model)
         } else {
-            let st = mk(&model, None)?;
-            (PassKind::Base, model, st)
+            (PassKind::Base, model)
         };
+        let variant = method.lkv_variant();
+        let state =
+            self.new_pass_state(&pass_model, variant, len, len - 1, seed, ctx.as_deref_mut())?;
         let recorder = prefix.map(|p| Recorder {
             block: p.block_size,
-            model: pass_model,
+            model: pass_model.clone(),
+            dims: self.kv_dims(&pass_model).expect("pass model exists"),
             upto: p.seed.as_ref().map(|s| s.len).unwrap_or(0),
             active: true,
             records: Vec::new(),
@@ -248,7 +304,47 @@ impl Engine {
             concat: Vec::new(),
             recorder,
             output: None,
+            paged,
         })
+    }
+
+    /// Construct one pass's [`ChunkState`] — dense, or paged with fresh
+    /// arena blocks — optionally resumed from a prefix seed. On any
+    /// failure after allocation, the pass's blocks are freed before the
+    /// error is returned.
+    fn new_pass_state(
+        &self,
+        pass_model: &str,
+        variant: Option<&str>,
+        len: usize,
+        logit_pos: usize,
+        seed: Option<&PrefixSeed>,
+        ctx: Option<&mut PagedCtx<'_>>,
+    ) -> Result<ChunkState> {
+        let m = self.rt.manifest();
+        let Some(ctx) = ctx else {
+            return match seed {
+                Some(s) => ChunkState::resume(m, pass_model, variant, len, logit_pos, s),
+                None => ChunkState::new(m, pass_model, variant, len, logit_pos),
+            };
+        };
+        let dims = self.kv_dims(pass_model)?;
+        let blocks = ctx.alloc_blocks(len, dims.slot_floats())?;
+        let bs = ctx.arena.block_size();
+        let res = (|| -> Result<ChunkState> {
+            let mut st =
+                ChunkState::new_paged(m, pass_model, variant, len, logit_pos, blocks.clone(), bs)?;
+            if let Some(s) = seed {
+                st.check_seed(m, s)?;
+                ctx.arena.scatter_dense(&dims, &blocks, 0, &s.k, &s.v)?;
+                st.apply_seed_scores(m, s)?;
+            }
+            Ok(st)
+        })();
+        if res.is_err() {
+            ctx.free_blocks(&blocks);
+        }
+        res
     }
 
     /// Which model/pass the prefix cache should match for `method`, and
@@ -285,12 +381,32 @@ impl ChunkedPrefill {
     /// whole draft loop for LAQ/SpecKV. Returns true once the job is
     /// complete and [`ChunkedPrefill::into_output`] may be called.
     pub fn step(&mut self, engine: &Engine) -> Result<bool> {
+        anyhow::ensure!(!self.paged, "paged chunked prefill must be advanced with step_paged");
+        self.step_inner(engine, None)
+    }
+
+    /// [`ChunkedPrefill::step`] for paged jobs: pass transitions may
+    /// allocate/free arena blocks through `ctx`. On error the job's
+    /// blocks are *not* freed here — every block is charged to
+    /// `ctx.owner`, so the caller cleans up owner-scoped (the scheduler
+    /// uses `CacheManager::release(request_id)` before rejecting).
+    pub fn step_paged(&mut self, engine: &Engine, ctx: &mut PagedCtx<'_>) -> Result<bool> {
+        anyhow::ensure!(self.paged, "dense chunked prefill must be advanced with step");
+        self.step_inner(engine, Some(ctx))
+    }
+
+    /// Whether this job pages its prompt KV through the arena.
+    pub fn is_paged(&self) -> bool {
+        self.paged
+    }
+
+    fn step_inner(&mut self, engine: &Engine, mut ctx: Option<&mut PagedCtx<'_>>) -> Result<bool> {
         if matches!(self.stage, Stage::Done) {
             return Ok(true);
         }
         if matches!(self.stage, Stage::Draft) {
             let t0 = Instant::now();
-            self.run_draft(engine)?;
+            self.run_draft(engine, ctx)?;
             self.bd.draft_ms += ms(t0);
             return Ok(false);
         }
@@ -318,15 +434,22 @@ impl ChunkedPrefill {
                 } else {
                     target
                 };
-                engine.rt.prefill_chunk(state, &toks[cur..hi])?;
+                match ctx.as_deref_mut() {
+                    Some(c) => engine.rt.prefill_chunk_paged(c.arena, state, &toks[cur..hi])?,
+                    None => engine.rt.prefill_chunk(state, &toks[cur..hi])?,
+                }
                 if recording {
-                    self.recorder.as_mut().unwrap().capture(state, toks, hi);
+                    let arena = ctx.as_deref().map(|c| &*c.arena);
+                    self.recorder.as_mut().unwrap().capture(state, arena, toks, hi);
                 }
                 cur = hi;
             }
             let finished = state.done == state.len;
             if finished {
-                engine.rt.prefill_finalize(state)?;
+                match ctx.as_deref_mut() {
+                    Some(c) => engine.rt.prefill_finalize_paged(c.arena, state)?,
+                    None => engine.rt.prefill_finalize(state)?,
+                }
             }
             (kind, finished)
         };
@@ -340,7 +463,7 @@ impl ChunkedPrefill {
             (PassKind::SuffixBase | PassKind::Rescore, _) => self.bd.rescore_ms += dt,
         }
         if finished {
-            self.advance(engine)?;
+            self.advance(engine, ctx)?;
         }
         Ok(matches!(self.stage, Stage::Done))
     }
@@ -378,7 +501,7 @@ impl ChunkedPrefill {
     }
 
     /// Transition after a pass finishes.
-    fn advance(&mut self, engine: &Engine) -> Result<()> {
+    fn advance(&mut self, engine: &Engine, mut ctx: Option<&mut PagedCtx<'_>>) -> Result<()> {
         // Recording covers only the first pass; whatever pass just
         // finished, stop capturing.
         if let Some(r) = self.recorder.as_mut() {
@@ -394,13 +517,13 @@ impl ChunkedPrefill {
             }
             PassKind::Lkv => {
                 if matches!(self.method, Method::LkvSuffix { .. }) {
-                    let m = engine.rt.manifest();
-                    let next = ChunkState::new(
-                        m,
+                    let next = engine.new_pass_state(
                         &engine.cfg.model,
                         None,
                         self.prompt.len(),
                         self.prompt.len() - 1,
+                        None,
+                        ctx.as_deref_mut(),
                     )?;
                     self.lkv_pass = Some(state);
                     self.stage = Stage::Pass { kind: PassKind::SuffixBase, state: next };
@@ -409,17 +532,25 @@ impl ChunkedPrefill {
                 }
             }
             PassKind::SuffixBase => {
-                let lkv = self.lkv_pass.take().context("suffix pass without a lookahead pass")?;
-                let logits = lkv.logits.context("lookahead pass captured no logits")?;
+                // The suffix pass's own KV was only needed for its
+                // attention; the blocks go back to the pool right away.
+                let mut state = state;
+                if let (Some(c), Some(t)) = (ctx.as_deref_mut(), state.blocks.take()) {
+                    c.free_blocks(&t);
+                }
+                let mut lkv =
+                    self.lkv_pass.take().context("suffix pass without a lookahead pass")?;
+                let logits = lkv.logits.take().context("lookahead pass captured no logits")?;
                 // Table-7 combination bundle, exactly as the monolithic
                 // path builds it: lookahead scores + suffix-window rows
                 // (no h2o component).
                 let mut bundle = ScoreBundle::empty(self.prompt.len());
-                bundle.lkv_scores = lkv.bundle.lkv_scores;
+                bundle.lkv_scores = lkv.bundle.lkv_scores.take();
                 bundle.window_scores = state.bundle.window_scores;
                 bundle.win_start = state.bundle.win_start;
                 bundle.win_rows = state.bundle.win_rows;
                 self.output = Some(PrefillOutput {
+                    blocks: lkv.blocks.take(),
                     k: lkv.k,
                     v: lkv.v,
                     logits,
@@ -433,8 +564,9 @@ impl ChunkedPrefill {
                 self.stage = Stage::Draft;
             }
             PassKind::Rescore => {
+                let mut state = state;
                 let nd = self.concat.len() - self.prompt.len();
-                let logits = state.logits.context("rescore pass captured no logits")?;
+                let logits = state.logits.take().context("rescore pass captured no logits")?;
                 let mut bundle = ScoreBundle::empty(self.prompt.len());
                 bundle.win_start = state.bundle.win_start;
                 bundle.win_rows = state.bundle.win_rows;
@@ -442,6 +574,7 @@ impl ChunkedPrefill {
                 bundle.window_scores = state.bundle.window_scores;
                 bundle.h2o_scores = state.bundle.h2o_scores;
                 self.output = Some(PrefillOutput {
+                    blocks: state.blocks.take(),
                     k: state.k,
                     v: state.v,
                     logits,
@@ -457,13 +590,29 @@ impl ChunkedPrefill {
     /// LAQ/SpecKV draft generation between the pre-draft and rescore
     /// passes — the same cheap-eviction + greedy-decode pipeline as the
     /// monolithic path, so the drafted tokens (and therefore the rescore
-    /// pass) match it exactly.
-    fn run_draft(&mut self, engine: &Engine) -> Result<()> {
+    /// pass) match it exactly. On the paged path, the pre-draft pass's
+    /// prompt KV is gathered out of the arena for the transient draft
+    /// cache and its blocks are freed before the rescore pass allocates
+    /// its own.
+    fn run_draft(&mut self, engine: &Engine, mut ctx: Option<&mut PagedCtx<'_>>) -> Result<()> {
         let mut state = self.pre_draft.take().context("draft stage without a pre-draft pass")?;
         let logits = state.logits.take().context("pre-draft pass captured no logits")?;
         let nd = engine.cfg.draft_tokens;
         let m = engine.rt.manifest();
         let len = self.prompt.len();
+        // Dense view of the pre-draft prompt KV (borrowed for the draft
+        // cache's compaction; gathered from the arena on the paged path).
+        let gathered: Option<(TensorF, TensorF)> = match (&state.blocks, ctx.as_deref()) {
+            (Some(table), Some(c)) => {
+                let dims = engine.kv_dims(&state.model)?;
+                Some(c.arena.gather_dense(&dims, table, len)?)
+            }
+            _ => None,
+        };
+        let (k_full, v_full): (&TensorF, &TensorF) = match &gathered {
+            Some((k, v)) => (k, v),
+            None => (&state.k, &state.v),
+        };
         let draft_toks = match &self.method {
             Method::Laq => {
                 let model = engine.cfg.model.clone();
@@ -475,7 +624,7 @@ impl ChunkedPrefill {
                     Method::SnapKV.select(&engine.cfg.eviction, engine.n_layers(&model), &bundle);
                 let cap = m.decode_cap(&model, sel.max_kept() + nd)?;
                 let mut cache =
-                    SeqCache::from_selection(&state.k, &state.v, &sel.per_layer, len, cap);
+                    SeqCache::from_selection(k_full, v_full, &sel.per_layer, len, cap);
                 engine.greedy_draft(&model, &mut cache, &logits, nd)?
             }
             Method::SpecKV => {
@@ -483,24 +632,38 @@ impl ChunkedPrefill {
                     engine.cfg.draft_model.clone().context("SpecKV requires a draft model")?;
                 let cap = m.decode_cap(&draft, len + nd)?;
                 let full: Vec<Vec<usize>> = vec![(0..len).collect(); engine.n_layers(&draft)];
-                let mut cache = SeqCache::from_selection(&state.k, &state.v, &full, len, cap);
+                let mut cache = SeqCache::from_selection(k_full, v_full, &full, len, cap);
                 engine.greedy_draft(&draft, &mut cache, &logits, nd)?
             }
             other => anyhow::bail!("method {} has no draft stage", other.name()),
         };
+        // The pre-draft pass is fully consumed: free its blocks before
+        // the rescore pass allocates over [prompt; draft].
+        if let (Some(c), Some(t)) = (ctx.as_deref_mut(), state.blocks.take()) {
+            c.free_blocks(&t);
+        }
         self.concat = self.prompt.clone();
         self.concat.extend_from_slice(&draft_toks);
-        let rescore = ChunkState::new(m, &engine.cfg.model, None, self.concat.len(), len - 1)?;
+        let rescore = engine.new_pass_state(
+            &engine.cfg.model,
+            None,
+            self.concat.len(),
+            len - 1,
+            None,
+            ctx.as_deref_mut(),
+        )?;
         self.stage = Stage::Pass { kind: PassKind::Rescore, state: rescore };
         Ok(())
     }
 }
 
-/// Single-pass output: the state's KV, logits and bundle are the final
-/// artifacts (base family and plain lookahead methods).
-fn base_output(state: ChunkState) -> Result<PrefillOutput> {
-    let logits = state.logits.context("chunked prefill captured no logits")?;
+/// Single-pass output: the state's KV (dense tensors or block table),
+/// logits and bundle are the final artifacts (base family and plain
+/// lookahead methods).
+fn base_output(mut state: ChunkState) -> Result<PrefillOutput> {
+    let logits = state.logits.take().context("chunked prefill captured no logits")?;
     Ok(PrefillOutput {
+        blocks: state.blocks.take(),
         k: state.k,
         v: state.v,
         logits,

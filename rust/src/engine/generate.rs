@@ -11,6 +11,37 @@ use crate::model::sampler::Sampler;
 use crate::model::tokenizer::{decode_until_eos, EOS_ID};
 use crate::util::tensor::TensorF;
 
+/// Why a generation stopped. Surfaced in [`GenResult`], the scheduler's
+/// `Reply`, and the HTTP response so cap/pool-driven truncation is
+/// observable instead of silent.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    /// The model emitted the end-of-sequence token.
+    Eos,
+    /// `max_new` tokens were generated.
+    Length,
+    /// The sequence ran out of KV memory mid-decode (dense cache at its
+    /// cap, or a paged cache that could not grow — pool exhausted even
+    /// after prefix-tree reclamation).
+    KvExhausted,
+    /// The serving loop shut down with the sequence still active.
+    Stopped,
+    /// The request failed; see the reply's `error`.
+    Error,
+}
+
+impl FinishReason {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            FinishReason::Eos => "eos",
+            FinishReason::Length => "length",
+            FinishReason::KvExhausted => "kv_exhausted",
+            FinishReason::Stopped => "stopped",
+            FinishReason::Error => "error",
+        }
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct GenOptions {
     pub budget: usize,
@@ -89,6 +120,7 @@ pub struct GenResult {
     pub n_decode_steps: usize,
     pub kept_per_layer: Vec<usize>,
     pub cache_cap: usize,
+    pub finish_reason: FinishReason,
     pub gt_scores: Option<TensorF>,
 }
 
@@ -147,6 +179,13 @@ impl Engine {
         }
         let decode_ms_total = t_dec.elapsed().as_secs_f64() * 1e3;
 
+        let finish_reason = if token == EOS_ID {
+            FinishReason::Eos
+        } else if tokens.len() >= opts.max_new {
+            FinishReason::Length
+        } else {
+            FinishReason::KvExhausted
+        };
         let kept_per_layer: Vec<usize> = sel.per_layer.iter().map(Vec::len).collect();
         Ok(GenResult {
             text: decode_until_eos(&tokens),
@@ -159,6 +198,7 @@ impl Engine {
             decode_ms_total,
             kept_per_layer,
             cache_cap: cap,
+            finish_reason,
             gt_scores: gt.map(GtAccumulator::finish),
         })
     }

@@ -11,10 +11,10 @@ use anyhow::{Context, Result};
 
 use super::Engine;
 use crate::eviction::{Method, ScoreBundle};
-use crate::kvcache::SeqCache;
+use crate::kvcache::{KvArena, KvDims, PagedSeqCache, SeqCache};
 use crate::model::tokenizer::pad_to;
 use crate::runtime::backend::decode_seq_via_execute;
-use crate::runtime::{DecodeSeq, Value};
+use crate::runtime::{DecodeSeq, PagedDecodeSeq, Value};
 use crate::util::rng::argmax;
 use crate::util::tensor::TensorF;
 
@@ -46,12 +46,18 @@ impl PrefillBreakdown {
 
 /// Raw prefill artifacts before selection.
 pub struct PrefillOutput {
+    /// Dense full-prompt KV (`[L, Hkv, bucket, dh]`) — empty placeholder
+    /// tensors when `blocks` is set.
     pub k: TensorF,
     pub v: TensorF,
     pub logits: Vec<f32>,
     pub bundle: ScoreBundle,
     pub bucket: usize,
     pub breakdown: PrefillBreakdown,
+    /// Arena block table holding the prompt KV of a *paged* chunked
+    /// prefill (owned by the request; the scheduler frees it right after
+    /// gather-compaction). `None` for the dense paths.
+    pub blocks: Option<Vec<crate::kvcache::BlockId>>,
 }
 
 struct RawPrefill {
@@ -168,7 +174,7 @@ impl Engine {
                 bundle.win_rows = obs_w.min(len);
                 bd.rescore_ms = ms(t1);
             }
-            return Ok(PrefillOutput { k, v, logits, bundle, bucket, breakdown: bd });
+            return Ok(PrefillOutput { k, v, logits, bundle, bucket, breakdown: bd, blocks: None });
         }
 
         // Draft-based methods: LAQ / SpecKV.
@@ -236,6 +242,7 @@ impl Engine {
                 bundle,
                 bucket,
                 breakdown: bd,
+                blocks: None,
             });
         }
 
@@ -248,7 +255,7 @@ impl Engine {
         bundle.h2o_scores = Some(raw.h2o_scores);
         bundle.win_start = win_start(len, obs_w, bucket);
         bundle.win_rows = obs_w.min(len);
-        Ok(PrefillOutput { k: raw.k, v: raw.v, logits: raw.logits, bundle, bucket, breakdown: bd })
+        Ok(PrefillOutput { k: raw.k, v: raw.v, logits: raw.logits, bundle, bucket, breakdown: bd, blocks: None })
     }
 
     /// One decode step for one sequence; serializes the full cache into
@@ -302,6 +309,53 @@ impl Engine {
         anyhow::ensure!(outs.len() == caches.len(), "decode_batch returned a short batch");
         let mut steps = Vec::with_capacity(outs.len());
         for ((cache, out), pos) in caches.iter_mut().zip(outs).zip(positions) {
+            cache.note_insert(pos);
+            cache.next_pos += 1;
+            steps.push(StepOutput { logits: out.logits, probs: out.probs });
+        }
+        Ok(steps)
+    }
+
+    /// KV geometry of `model` (arena addressing).
+    pub fn kv_dims(&self, model: &str) -> Result<KvDims> {
+        Ok(KvDims::of(self.rt.manifest().model(model)?))
+    }
+
+    /// [`Engine::decode_step_batch`] over *paged* caches: every
+    /// sequence advances one token through its arena block table in a
+    /// single backend call; host-side slot bookkeeping is applied here.
+    /// Callers must have ensured one slot of headroom per sequence
+    /// (growing by a block first when needed).
+    pub fn decode_step_batch_paged(
+        &self,
+        model: &str,
+        arena: &mut KvArena,
+        caches: &mut [&mut PagedSeqCache],
+        tokens: &[i32],
+    ) -> Result<Vec<StepOutput>> {
+        anyhow::ensure!(
+            caches.len() == tokens.len(),
+            "decode_step_batch_paged: {} caches vs {} tokens",
+            caches.len(),
+            tokens.len()
+        );
+        let outs = {
+            let seqs: Vec<PagedDecodeSeq<'_>> = caches
+                .iter()
+                .zip(tokens.iter())
+                .map(|(cache, &token)| PagedDecodeSeq {
+                    token,
+                    pos: cache.next_pos,
+                    blocks: &cache.blocks,
+                    lens: &cache.lens,
+                })
+                .collect();
+            self.rt.decode_batch_paged(model, arena, &seqs)?
+        };
+        anyhow::ensure!(outs.len() == caches.len(), "decode_batch_paged returned a short batch");
+        let mut steps = Vec::with_capacity(outs.len());
+        for (cache, out) in caches.iter_mut().zip(outs) {
+            let pos = cache.next_pos;
             cache.note_insert(pos);
             cache.next_pos += 1;
             steps.push(StepOutput { logits: out.logits, probs: out.probs });

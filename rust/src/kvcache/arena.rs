@@ -1,0 +1,609 @@
+//! Shared physical KV arena: the block-granular storage behind every
+//! paged cache in the system.
+//!
+//! The [`super::block::BlockAllocator`] decides *who* owns which
+//! [`BlockId`]; the [`KvArena`] owns the *bytes* — one pair of K/V
+//! buffers per bound block, each holding `block_size` token slots laid
+//! out `[L, Hkv, block_size, dh]`. Decode caches
+//! ([`super::paged::PagedSeqCache`]), in-flight chunked-prefill state
+//! ([`crate::runtime::ChunkState`] with a block table) and prefix-tree
+//! nodes ([`super::prefix::PrefixCache`]) are all views over the same
+//! pool of blocks, so admission control charges actual bound bytes
+//! rather than dense-bucket estimates.
+//!
+//! Buffers are materialized on [`KvArena::bind`] and dropped on
+//! [`KvArena::release`], so `bytes_in_use` tracks *resident* KV — a
+//! paged cache of 80 live rows costs two 64-slot blocks, not a 640-slot
+//! dense bucket. The arena is dimension-agnostic: callers pass a
+//! [`KvDims`] per access, which lets one pool serve models with
+//! different layer/head geometry (e.g. the SpecKV draft model).
+//!
+//! Concurrency: the batched paged decode step temporarily *moves* each
+//! sequence's [`KvBlock`]s out of the arena ([`KvArena::take`]), hands
+//! the owned buffers to worker threads, and puts them back afterwards
+//! ([`KvArena::put`]) — disjointness across sequences is enforced by
+//! construction (a block can only be taken once), with no unsafe code.
+
+use anyhow::{Context, Result};
+
+use crate::util::tensor::TensorF;
+
+use super::block::{BlockAllocator, BlockId};
+
+/// Per-model KV geometry (everything but the sequence axis).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KvDims {
+    pub n_layers: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+}
+
+impl KvDims {
+    pub fn of(meta: &crate::runtime::ModelMeta) -> KvDims {
+        KvDims {
+            n_layers: meta.n_layers,
+            n_kv_heads: meta.n_kv_heads,
+            head_dim: meta.head_dim,
+        }
+    }
+
+    /// Floats per token slot, per side (K or V).
+    pub fn slot_floats(&self) -> usize {
+        self.n_layers * self.n_kv_heads * self.head_dim
+    }
+}
+
+/// One bound block's buffers: `block_size` slots of K and V, laid out
+/// `[L, Hkv, block_size, dh]` per side.
+#[derive(Debug, Clone)]
+pub struct KvBlock {
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+/// Uniform row-level access to a sequence's KV, whatever its physical
+/// layout. The reference backend's prefill/decode kernels are generic
+/// over this trait, so the dense and paged paths run the *same* float
+/// operations in the same order — bit-identical by construction.
+pub trait KvAccess {
+    /// Allocated slot capacity visible to the kernel.
+    fn n_slots(&self) -> usize;
+    /// The `dh`-float K row of `slot` in layer `li`, KV head `g`.
+    fn k_row(&self, li: usize, g: usize, slot: usize) -> &[f32];
+    fn v_row(&self, li: usize, g: usize, slot: usize) -> &[f32];
+    /// Store one slot's K/V rows (decode insertion, prefill append).
+    fn write_row(&mut self, li: usize, g: usize, slot: usize, k: &[f32], v: &[f32]);
+}
+
+/// [`KvAccess`] over borrowed dense `[L, Hkv, cap, dh]` tensors (the
+/// historical cache layout; still the prefill-bucket scratch layout).
+pub struct DenseKvRef<'a> {
+    k: &'a mut TensorF,
+    v: &'a mut TensorF,
+    hkv: usize,
+    cap: usize,
+    dh: usize,
+}
+
+impl<'a> DenseKvRef<'a> {
+    /// `k`/`v` must be `[L, Hkv, cap, dh]`-shaped (callers validate).
+    pub fn new(k: &'a mut TensorF, v: &'a mut TensorF) -> DenseKvRef<'a> {
+        debug_assert_eq!(k.shape.len(), 4);
+        debug_assert_eq!(k.shape, v.shape);
+        let (hkv, cap, dh) = (k.shape[1], k.shape[2], k.shape[3]);
+        DenseKvRef { k, v, hkv, cap, dh }
+    }
+
+    #[inline(always)]
+    fn off(&self, li: usize, g: usize, slot: usize) -> usize {
+        ((li * self.hkv + g) * self.cap + slot) * self.dh
+    }
+}
+
+impl KvAccess for DenseKvRef<'_> {
+    #[inline(always)]
+    fn n_slots(&self) -> usize {
+        self.cap
+    }
+
+    #[inline(always)]
+    fn k_row(&self, li: usize, g: usize, slot: usize) -> &[f32] {
+        let o = self.off(li, g, slot);
+        &self.k.data[o..o + self.dh]
+    }
+
+    #[inline(always)]
+    fn v_row(&self, li: usize, g: usize, slot: usize) -> &[f32] {
+        let o = self.off(li, g, slot);
+        &self.v.data[o..o + self.dh]
+    }
+
+    #[inline(always)]
+    fn write_row(&mut self, li: usize, g: usize, slot: usize, k: &[f32], v: &[f32]) {
+        let o = self.off(li, g, slot);
+        self.k.data[o..o + self.dh].copy_from_slice(k);
+        self.v.data[o..o + self.dh].copy_from_slice(v);
+    }
+}
+
+/// [`KvAccess`] over blocks taken out of the arena (the paged layout).
+/// Owning the buffers makes it `Send`, so batched decode can fan
+/// sequences out onto scoped threads with no aliasing questions.
+pub struct OwnedKv {
+    blocks: Vec<KvBlock>,
+    dims: KvDims,
+    block_size: usize,
+}
+
+impl OwnedKv {
+    pub fn new(blocks: Vec<KvBlock>, dims: KvDims, block_size: usize) -> OwnedKv {
+        let want = dims.slot_floats() * block_size;
+        for (i, b) in blocks.iter().enumerate() {
+            assert_eq!(b.k.len(), want, "block {i}: K buffer does not match {dims:?}");
+            assert_eq!(b.v.len(), want, "block {i}: V buffer does not match {dims:?}");
+        }
+        OwnedKv { blocks, dims, block_size }
+    }
+
+    pub fn into_blocks(self) -> Vec<KvBlock> {
+        self.blocks
+    }
+
+    #[inline(always)]
+    fn off(&self, li: usize, g: usize, within: usize) -> usize {
+        ((li * self.dims.n_kv_heads + g) * self.block_size + within) * self.dims.head_dim
+    }
+}
+
+impl KvAccess for OwnedKv {
+    #[inline(always)]
+    fn n_slots(&self) -> usize {
+        self.blocks.len() * self.block_size
+    }
+
+    #[inline(always)]
+    fn k_row(&self, li: usize, g: usize, slot: usize) -> &[f32] {
+        let (b, within) = (slot / self.block_size, slot % self.block_size);
+        let o = self.off(li, g, within);
+        &self.blocks[b].k[o..o + self.dims.head_dim]
+    }
+
+    #[inline(always)]
+    fn v_row(&self, li: usize, g: usize, slot: usize) -> &[f32] {
+        let (b, within) = (slot / self.block_size, slot % self.block_size);
+        let o = self.off(li, g, within);
+        &self.blocks[b].v[o..o + self.dims.head_dim]
+    }
+
+    #[inline(always)]
+    fn write_row(&mut self, li: usize, g: usize, slot: usize, k: &[f32], v: &[f32]) {
+        let (b, within) = (slot / self.block_size, slot % self.block_size);
+        let o = self.off(li, g, within);
+        let dh = self.dims.head_dim;
+        self.blocks[b].k[o..o + dh].copy_from_slice(k);
+        self.blocks[b].v[o..o + dh].copy_from_slice(v);
+    }
+}
+
+/// The shared physical block store. Indexed by [`BlockId`]; one slot per
+/// allocator block, `None` until bound (or while temporarily taken).
+#[derive(Debug)]
+pub struct KvArena {
+    block_size: usize,
+    slots: Vec<Option<KvBlock>>,
+    bytes: usize,
+    peak_bytes: usize,
+}
+
+impl KvArena {
+    pub fn new(n_blocks: usize, block_size: usize) -> KvArena {
+        assert!(block_size > 0, "KvArena block_size must be > 0");
+        KvArena {
+            block_size,
+            slots: (0..n_blocks).map(|_| None).collect(),
+            bytes: 0,
+            peak_bytes: 0,
+        }
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Resident KV bytes (K + V of every bound block).
+    pub fn bytes_in_use(&self) -> usize {
+        self.bytes
+    }
+
+    pub fn peak_bytes(&self) -> usize {
+        self.peak_bytes
+    }
+
+    /// Bound blocks (excludes blocks currently taken by a kernel — stats
+    /// are read between engine iterations, never mid-call).
+    pub fn blocks_bound(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    fn idx(&self, b: BlockId) -> usize {
+        let i = b.0 as usize;
+        assert!(i < self.slots.len(), "block {b:?} outside the arena ({})", self.slots.len());
+        i
+    }
+
+    /// Materialize zeroed buffers for freshly allocated blocks.
+    /// `slot_floats` is the per-slot float count of the owning model
+    /// ([`KvDims::slot_floats`]).
+    pub fn bind(&mut self, blocks: &[BlockId], slot_floats: usize) {
+        assert!(slot_floats > 0, "binding zero-sized KV slots");
+        let n = slot_floats * self.block_size;
+        for &b in blocks {
+            let i = self.idx(b);
+            assert!(self.slots[i].is_none(), "binding already-bound block {b:?}");
+            self.slots[i] = Some(KvBlock { k: vec![0.0; n], v: vec![0.0; n] });
+            self.bytes += n * 2 * 4;
+        }
+        self.peak_bytes = self.peak_bytes.max(self.bytes);
+    }
+
+    /// Drop the buffers of freed blocks. Blocks that were never bound
+    /// (accounting-only reservations) are skipped silently.
+    pub fn release(&mut self, blocks: &[BlockId]) {
+        for &b in blocks {
+            let i = self.idx(b);
+            if let Some(kvb) = self.slots[i].take() {
+                self.bytes -= (kvb.k.len() + kvb.v.len()) * 4;
+            }
+        }
+    }
+
+    /// Move the blocks' buffers out (for an [`OwnedKv`] view). Fails —
+    /// with no side effects — if any block is unbound or already taken,
+    /// which also catches overlapping block tables in a batch.
+    pub fn take(&mut self, blocks: &[BlockId]) -> Result<Vec<KvBlock>> {
+        for &b in blocks {
+            let i = self.idx(b);
+            anyhow::ensure!(
+                self.slots[i].is_some(),
+                "arena block {b:?} is unbound or already taken"
+            );
+        }
+        Ok(blocks.iter().map(|&b| self.slots[b.0 as usize].take().unwrap()).collect())
+    }
+
+    /// Return buffers taken via [`KvArena::take`].
+    pub fn put(&mut self, blocks: &[BlockId], kvs: Vec<KvBlock>) {
+        assert_eq!(blocks.len(), kvs.len(), "put: table/buffer length mismatch");
+        for (&b, kvb) in blocks.iter().zip(kvs) {
+            let i = self.idx(b);
+            assert!(self.slots[i].is_none(), "putting into occupied arena slot {b:?}");
+            self.slots[i] = Some(kvb);
+        }
+    }
+
+    fn block(&self, b: BlockId) -> &KvBlock {
+        self.slots[self.idx(b)].as_ref().unwrap_or_else(|| panic!("reading unbound block {b:?}"))
+    }
+
+    #[inline]
+    fn row_off(&self, dims: &KvDims, li: usize, g: usize, within: usize) -> usize {
+        ((li * dims.n_kv_heads + g) * self.block_size + within) * dims.head_dim
+    }
+
+    /// Read one K row: `slot` is the *global* slot index of a block
+    /// table, resolved to `(blocks[slot / bs], slot % bs)` by the caller.
+    pub fn k_row(&self, dims: &KvDims, b: BlockId, li: usize, g: usize, within: usize) -> &[f32] {
+        let o = self.row_off(dims, li, g, within);
+        &self.block(b).k[o..o + dims.head_dim]
+    }
+
+    pub fn v_row(&self, dims: &KvDims, b: BlockId, li: usize, g: usize, within: usize) -> &[f32] {
+        let o = self.row_off(dims, li, g, within);
+        &self.block(b).v[o..o + dims.head_dim]
+    }
+
+    /// Write one `dh`-float K/V row pair at `(layer, head, offset)` of a
+    /// bound block.
+    pub fn write_row(
+        &mut self,
+        dims: &KvDims,
+        b: BlockId,
+        li: usize,
+        g: usize,
+        within: usize,
+        k: &[f32],
+        v: &[f32],
+    ) {
+        let o = self.row_off(dims, li, g, within);
+        let dh = dims.head_dim;
+        let i = self.idx(b);
+        let blk = self.slots[i].as_mut().unwrap_or_else(|| panic!("writing unbound block {b:?}"));
+        blk.k[o..o + dh].copy_from_slice(k);
+        blk.v[o..o + dh].copy_from_slice(v);
+    }
+
+    /// Copy whole block buffers in (prefix-tree insertion: a
+    /// [`super::prefix::BlockRecord`]'s `[L, Hkv, bs, dh]` tensors have
+    /// exactly the block layout).
+    pub fn write_block(&mut self, b: BlockId, k: &[f32], v: &[f32]) {
+        let i = self.idx(b);
+        let blk = self.slots[i].as_mut().unwrap_or_else(|| panic!("writing unbound block {b:?}"));
+        assert_eq!(blk.k.len(), k.len(), "write_block: K length mismatch");
+        assert_eq!(blk.v.len(), v.len(), "write_block: V length mismatch");
+        blk.k.copy_from_slice(k);
+        blk.v.copy_from_slice(v);
+    }
+
+    /// Raw buffers of one bound block (prefix seed assembly, tests).
+    pub fn block_kv(&self, b: BlockId) -> Option<(&[f32], &[f32])> {
+        self.slots[self.idx(b)].as_ref().map(|blk| (&blk.k[..], &blk.v[..]))
+    }
+
+    /// Gather rows `0..rows` of a block table into dense
+    /// `[L, Hkv, rows, dh]` tensors.
+    pub fn gather_dense(
+        &self,
+        dims: &KvDims,
+        blocks: &[BlockId],
+        rows: usize,
+    ) -> Result<(TensorF, TensorF)> {
+        anyhow::ensure!(
+            rows <= blocks.len() * self.block_size,
+            "gather of {rows} rows exceeds the table's {} slots",
+            blocks.len() * self.block_size
+        );
+        let (l, hkv, dh) = (dims.n_layers, dims.n_kv_heads, dims.head_dim);
+        let mut k = TensorF::zeros(vec![l, hkv, rows, dh]);
+        let mut v = TensorF::zeros(vec![l, hkv, rows, dh]);
+        for li in 0..l {
+            for g in 0..hkv {
+                for r in 0..rows {
+                    let b = blocks[r / self.block_size];
+                    let within = r % self.block_size;
+                    let dst = ((li * hkv + g) * rows + r) * dh;
+                    k.data[dst..dst + dh].copy_from_slice(self.k_row(dims, b, li, g, within));
+                    v.data[dst..dst + dh].copy_from_slice(self.v_row(dims, b, li, g, within));
+                }
+            }
+        }
+        Ok((k, v))
+    }
+
+    /// Scatter dense `[L, Hkv, rows, dh]` tensors into rows
+    /// `start..start + rows` of a block table (prefix-seed resume, the
+    /// default backend's paged write-through).
+    pub fn scatter_dense(
+        &mut self,
+        dims: &KvDims,
+        blocks: &[BlockId],
+        start: usize,
+        k: &TensorF,
+        v: &TensorF,
+    ) -> Result<()> {
+        let (l, hkv, dh) = (dims.n_layers, dims.n_kv_heads, dims.head_dim);
+        anyhow::ensure!(
+            k.shape.len() == 4 && k.shape[0] == l && k.shape[1] == hkv && k.shape[3] == dh,
+            "scatter source shape {:?} does not match {dims:?}",
+            k.shape
+        );
+        anyhow::ensure!(k.shape == v.shape, "scatter K/V shape mismatch");
+        let rows = k.shape[2];
+        anyhow::ensure!(
+            start + rows <= blocks.len() * self.block_size,
+            "scatter of rows {start}..{} exceeds the table's {} slots",
+            start + rows,
+            blocks.len() * self.block_size
+        );
+        for li in 0..l {
+            for g in 0..hkv {
+                for r in 0..rows {
+                    let slot = start + r;
+                    let b = blocks[slot / self.block_size];
+                    let within = slot % self.block_size;
+                    let src = ((li * hkv + g) * rows + r) * dh;
+                    self.write_row(
+                        dims,
+                        b,
+                        li,
+                        g,
+                        within,
+                        &k.data[src..src + dh],
+                        &v.data[src..src + dh],
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Allocator + arena + owner bundle threaded through paged prefill (one
+/// per in-flight request; see `engine::chunked`). Allocation and byte
+/// binding always happen together so accounting can never skew.
+pub struct PagedCtx<'a> {
+    pub arena: &'a mut KvArena,
+    pub alloc: &'a mut BlockAllocator,
+    /// The shared prefix tree, when enabled: unpinned LRU leaves are
+    /// reclaimed before any allocation through this context is allowed
+    /// to fail — mid-job pass allocations (lkv+suffix second pass,
+    /// LAQ/SpecKV rescore) get the same before-failing-reclaim guarantee
+    /// as admission.
+    pub prefix: Option<&'a mut super::prefix::PrefixCache>,
+    pub owner: u64,
+}
+
+impl PagedCtx<'_> {
+    /// Allocate and bind enough blocks for `slots` token slots,
+    /// LRU-reclaiming unpinned prefix-tree blocks first under pool
+    /// pressure. "kv pool exhausted" means genuinely exhausted.
+    pub fn alloc_blocks(&mut self, slots: usize, slot_floats: usize) -> Result<Vec<BlockId>> {
+        let slots = slots.max(1);
+        if let Some(p) = self.prefix.as_deref_mut() {
+            while !self.alloc.can_alloc(slots) {
+                let need = self
+                    .alloc
+                    .blocks_for_slots(slots)
+                    .saturating_sub(self.alloc.free_blocks())
+                    .max(1);
+                if p.reclaim(self.alloc, self.arena, need) == 0 {
+                    break;
+                }
+            }
+        }
+        let ids = self.alloc.alloc(self.owner, slots).context("kv pool exhausted")?;
+        self.arena.bind(&ids, slot_floats);
+        Ok(ids)
+    }
+
+    /// Free blocks back to the pool and drop their buffers.
+    pub fn free_blocks(&mut self, ids: &[BlockId]) {
+        self.arena.release(ids);
+        self.alloc.free(ids);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, Config};
+
+    const DIMS: KvDims = KvDims { n_layers: 2, n_kv_heads: 2, head_dim: 4 };
+
+    #[test]
+    fn bind_take_put_release_accounting() {
+        let mut a = KvArena::new(4, 8);
+        let ids = [BlockId(0), BlockId(2)];
+        a.bind(&ids, DIMS.slot_floats());
+        let per_block = DIMS.slot_floats() * 8 * 2 * 4;
+        assert_eq!(a.bytes_in_use(), 2 * per_block);
+        assert_eq!(a.blocks_bound(), 2);
+        let taken = a.take(&ids).unwrap();
+        assert_eq!(taken.len(), 2);
+        // double-take (aliasing) is an error with no side effects
+        assert!(a.take(&[BlockId(0)]).is_err());
+        a.put(&ids, taken);
+        assert_eq!(a.blocks_bound(), 2);
+        a.release(&ids);
+        assert_eq!(a.bytes_in_use(), 0);
+        // releasing never-bound blocks is a no-op (dense reservations)
+        a.release(&[BlockId(1)]);
+        assert_eq!(a.bytes_in_use(), 0);
+    }
+
+    #[test]
+    fn rows_roundtrip_through_blocks() {
+        let mut a = KvArena::new(2, 4);
+        let ids = [BlockId(1), BlockId(0)]; // order of the table, not of ids
+        a.bind(&ids, DIMS.slot_floats());
+        let bs = a.block_size();
+        // write slots 0..7 through the table, read them back
+        for slot in 0..2 * bs {
+            let b = ids[slot / bs];
+            let within = slot % bs;
+            for li in 0..DIMS.n_layers {
+                for g in 0..DIMS.n_kv_heads {
+                    let val = (slot * 100 + li * 10 + g) as f32;
+                    let row = [val; 4];
+                    a.write_row(&DIMS, b, li, g, within, &row, &row);
+                }
+            }
+        }
+        assert_eq!(a.k_row(&DIMS, ids[1], 1, 0, 2)[0], (6 * 100 + 10) as f32);
+        let (k, v) = a.gather_dense(&DIMS, &ids, 7).unwrap();
+        assert_eq!(k.shape, vec![2, 2, 7, 4]);
+        assert_eq!(k.index(&[0, 1, 5])[0], 501.0);
+        assert_eq!(v.index(&[1, 1, 6])[0], 611.0);
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        let mut a = KvArena::new(3, 4);
+        let ids = [BlockId(2), BlockId(0), BlockId(1)];
+        a.bind(&ids, DIMS.slot_floats());
+        let rows = 10;
+        let n = DIMS.n_layers * DIMS.n_kv_heads * rows * DIMS.head_dim;
+        let k = TensorF::new(
+            vec![DIMS.n_layers, DIMS.n_kv_heads, rows, DIMS.head_dim],
+            (0..n).map(|x| x as f32).collect(),
+        );
+        let v = TensorF::new(k.shape.clone(), (0..n).map(|x| -(x as f32)).collect());
+        a.scatter_dense(&DIMS, &ids, 0, &k, &v).unwrap();
+        let (k2, v2) = a.gather_dense(&DIMS, &ids, rows).unwrap();
+        assert_eq!(k.data, k2.data);
+        assert_eq!(v.data, v2.data);
+        // out-of-capacity gathers/scatters error
+        assert!(a.gather_dense(&DIMS, &ids, 13).is_err());
+    }
+
+    /// Property: slot -> (block, offset) resolution round-trips for any
+    /// block size and table permutation — writing each slot through the
+    /// mapping and reading it back yields the written row, and distinct
+    /// slots never alias.
+    #[test]
+    fn prop_slot_block_offset_roundtrip() {
+        check("slot/block mapping", &Config { cases: 64, max_size: 24, ..Config::new() }, |rng, size| {
+            let bs = rng.range(1, 9);
+            let n_blocks = rng.range(1, 5 + size.min(8));
+            let mut a = KvArena::new(n_blocks, bs);
+            // a random permutation of all blocks as the table
+            let mut table: Vec<BlockId> = (0..n_blocks as u32).map(BlockId).collect();
+            for i in (1..table.len()).rev() {
+                let j = rng.below(i + 1);
+                table.swap(i, j);
+            }
+            let dims = KvDims { n_layers: rng.range(1, 3), n_kv_heads: rng.range(1, 3), head_dim: 2 };
+            a.bind(&table, dims.slot_floats());
+            let slots = n_blocks * bs;
+            for slot in 0..slots {
+                let (b, within) = (table[slot / bs], slot % bs);
+                for li in 0..dims.n_layers {
+                    for g in 0..dims.n_kv_heads {
+                        let val = (slot * 1000 + li * 10 + g) as f32;
+                        a.write_row(&dims, b, li, g, within, &[val, val + 0.5], &[-val, val]);
+                    }
+                }
+            }
+            for slot in 0..slots {
+                let (b, within) = (table[slot / bs], slot % bs);
+                for li in 0..dims.n_layers {
+                    for g in 0..dims.n_kv_heads {
+                        let want = (slot * 1000 + li * 10 + g) as f32;
+                        assert_eq!(a.k_row(&dims, b, li, g, within), &[want, want + 0.5][..]);
+                        assert_eq!(a.v_row(&dims, b, li, g, within), &[-want, want][..]);
+                    }
+                }
+            }
+            // OwnedKv sees the same bytes through global slot indices
+            let taken = a.take(&table).unwrap();
+            let kv = OwnedKv::new(taken, dims, bs);
+            for slot in 0..slots {
+                let want = (slot * 1000) as f32;
+                assert_eq!(kv.k_row(0, 0, slot)[0], want);
+            }
+            a.put(&table, kv.into_blocks());
+        });
+    }
+
+    #[test]
+    fn paged_ctx_allocates_and_frees() {
+        let mut arena = KvArena::new(8, 8);
+        let mut alloc = BlockAllocator::new(64, 8);
+        let mut ctx = PagedCtx { arena: &mut arena, alloc: &mut alloc, prefix: None, owner: 7 };
+        let ids = ctx.alloc_blocks(20, DIMS.slot_floats()).unwrap(); // 3 blocks
+        assert_eq!(ids.len(), 3);
+        assert!(ctx.arena.bytes_in_use() > 0);
+        assert_eq!(ctx.alloc.used_blocks(), 3);
+        ctx.free_blocks(&ids);
+        assert_eq!(ctx.arena.bytes_in_use(), 0);
+        assert_eq!(ctx.alloc.used_blocks(), 0);
+        // zero-slot requests still pin one block (a live sequence always
+        // has at least one block to append into)
+        let ids = ctx.alloc_blocks(0, DIMS.slot_floats()).unwrap();
+        assert_eq!(ids.len(), 1);
+        ctx.free_blocks(&ids);
+    }
+}

@@ -91,11 +91,25 @@ impl BlockAllocator {
 
     /// Free every block owned by `owner`; returns how many were freed.
     pub fn free_owner(&mut self, owner: u64) -> usize {
+        self.take_owner(owner).len()
+    }
+
+    /// Free every block owned by `owner` and return their ids (so the
+    /// caller can release the matching [`super::arena::KvArena`] buffers).
+    pub fn take_owner(&mut self, owner: u64) -> Vec<BlockId> {
         let mine: Vec<BlockId> =
             self.owners.iter().filter(|(_, &o)| o == owner).map(|(&b, _)| b).collect();
-        let n = mine.len();
         self.free(&mine);
-        n
+        mine
+    }
+
+    /// Allocated block count per owner (per-owner occupancy metrics).
+    pub fn owner_block_counts(&self) -> HashMap<u64, usize> {
+        let mut counts: HashMap<u64, usize> = HashMap::new();
+        for &o in self.owners.values() {
+            *counts.entry(o).or_insert(0) += 1;
+        }
+        counts
     }
 }
 

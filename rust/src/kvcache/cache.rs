@@ -1,4 +1,7 @@
-//! Per-sequence compacted KV cache (host side of the decode loop).
+//! Per-sequence compacted KV cache, dense layout (host side of the
+//! decode loop). This is the bit-exact *reference* layout; the serving
+//! loop defaults to the paged [`super::paged::PagedSeqCache`], which
+//! must match it exactly (see `tests/paged.rs`).
 
 use crate::util::tensor::TensorF;
 
@@ -71,7 +74,9 @@ impl SeqCache {
     }
 
     /// Replace the K/V tensors with the updated ones returned by the
-    /// decode graph (host round-trip; see DESIGN.md §Perf).
+    /// decode graph (the historical per-sequence host round-trip; the
+    /// serving loop's paged path appends in place through the arena
+    /// instead — see README "Paged KV arena").
     pub fn update_tensors(&mut self, k: TensorF, v: TensorF) {
         debug_assert_eq!(k.shape, self.k.shape);
         self.k = k;

@@ -1,19 +1,35 @@
-//! Cache manager: per-sequence cache registry + global memory accounting,
-//! with an optional cross-request [`PrefixCache`] sharing the same block
-//! pool (tree blocks are reclaimed before an admission is allowed to
-//! fail — see [`CacheManager::prefix_reclaim_for`]).
+//! Cache manager: the single home of the physical KV pool — a
+//! [`BlockAllocator`] (who owns which block) plus a [`KvArena`] (the
+//! bytes) — with a per-sequence dense-cache registry kept for the
+//! reference path and an optional cross-request [`PrefixCache`] whose
+//! nodes page into the same arena (tree blocks are reclaimed before an
+//! admission is allowed to fail — see
+//! [`CacheManager::prefix_reclaim_for`]).
 
 use std::collections::HashMap;
 
+use super::arena::{KvArena, PagedCtx};
 use super::block::BlockAllocator;
 use super::cache::SeqCache;
+use super::paged::PagedSeqCache;
 use super::prefix::{
     BlockRecord, PrefixCache, PrefixCacheConfig, PrefixMatch, PrefixPin, PrefixStats,
+    PREFIX_OWNER,
 };
 
 /// Bytes per slot for a model (one token's KV across layers/heads).
 pub fn bytes_per_slot(n_layers: usize, n_kv_heads: usize, head_dim: usize) -> usize {
     n_layers * n_kv_heads * head_dim * 4 * 2 // K and V, f32
+}
+
+/// What a (non-prefix) owner's blocks are charged as, for the per-owner
+/// occupancy breakdown exported under `/metrics`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OwnerClass {
+    /// An active sequence's decode cache (also dense reservations).
+    Decode,
+    /// An in-flight chunked prefill's prompt blocks.
+    Prefill,
 }
 
 #[derive(Debug, Clone, Default)]
@@ -23,23 +39,80 @@ pub struct CacheStats {
     pub used_blocks: usize,
     pub free_blocks: usize,
     pub peak_used_blocks: usize,
+    /// Resident arena bytes (bound K+V buffers).
+    pub arena_bytes: usize,
+    pub arena_peak_bytes: usize,
+    /// Arena blocks with bound buffers (≤ `used_blocks`: dense
+    /// reservations charge the allocator without binding bytes).
+    pub arena_blocks: usize,
+    /// Allocator-block breakdown by owner class.
+    pub blocks_decode: usize,
+    pub blocks_prefix: usize,
+    pub blocks_prefill: usize,
 }
 
 pub struct CacheManager {
     allocator: BlockAllocator,
+    arena: KvArena,
     seqs: HashMap<u64, SeqCache>,
     prefix: Option<PrefixCache>,
+    classes: HashMap<u64, OwnerClass>,
 }
 
 impl CacheManager {
     /// `total_slots` is the global KV budget in token slots (the analog of
     /// GPU KV memory); `block_size` the allocation granularity.
     pub fn new(total_slots: usize, block_size: usize) -> CacheManager {
+        let allocator = BlockAllocator::new(total_slots, block_size);
+        let arena = KvArena::new(allocator.total_blocks(), block_size);
         CacheManager {
-            allocator: BlockAllocator::new(total_slots, block_size),
+            allocator,
+            arena,
             seqs: HashMap::new(),
             prefix: None,
+            classes: HashMap::new(),
         }
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.allocator.block_size()
+    }
+
+    pub fn arena(&self) -> &KvArena {
+        &self.arena
+    }
+
+    /// Split borrow of the physical pool for engine calls that thread
+    /// both halves (paged prefill, batched paged decode).
+    pub fn paged_parts(&mut self) -> (&mut KvArena, &mut BlockAllocator) {
+        (&mut self.arena, &mut self.allocator)
+    }
+
+    /// A [`PagedCtx`] charging `owner` for whatever it allocates (with
+    /// the prefix tree wired in for before-failing LRU reclamation).
+    pub fn paged_ctx(&mut self, owner: u64) -> PagedCtx<'_> {
+        PagedCtx {
+            arena: &mut self.arena,
+            alloc: &mut self.allocator,
+            prefix: self.prefix.as_mut(),
+            owner,
+        }
+    }
+
+    /// Tag `owner`'s blocks for the per-class occupancy breakdown.
+    pub fn tag(&mut self, owner: u64, class: OwnerClass) {
+        self.classes.insert(owner, class);
+    }
+
+    /// Grow a paged cache by one block, LRU-reclaiming prefix-tree blocks
+    /// first when the pool is empty. False = genuine pool exhaustion
+    /// (the caller finishes the sequence with `kv_exhausted`).
+    pub fn grow_paged(&mut self, owner: u64, cache: &mut PagedSeqCache) -> bool {
+        let bs = self.allocator.block_size();
+        if !self.allocator.can_alloc(bs) {
+            self.prefix_reclaim_for(bs);
+        }
+        cache.grow(&mut self.arena, &mut self.allocator, owner)
     }
 
     /// Turn on the cross-request prefix cache, capped at `max_slots` KV
@@ -65,7 +138,8 @@ impl CacheManager {
         need_scores: bool,
         max_len: usize,
     ) -> Option<PrefixMatch> {
-        self.prefix.as_mut().map(|p| p.lookup(model, tokens, need_scores, max_len))
+        let arena = &self.arena;
+        self.prefix.as_mut().map(|p| p.lookup(arena, model, tokens, need_scores, max_len))
     }
 
     /// Insert freshly recorded prefill blocks; returns blocks added.
@@ -76,7 +150,7 @@ impl CacheManager {
         records: Vec<BlockRecord>,
     ) -> usize {
         match self.prefix.as_mut() {
-            Some(p) => p.insert(&mut self.allocator, model, tokens, records),
+            Some(p) => p.insert(&mut self.allocator, &mut self.arena, model, tokens, records),
             None => 0,
         }
     }
@@ -97,13 +171,13 @@ impl CacheManager {
         let mut freed = 0;
         while !self.allocator.can_alloc(slots) {
             // ask for the whole shortfall at once (one batched LRU sweep
-            // per iteration, not one arena scan per block)
+            // per iteration, not one tree scan per block)
             let need = self
                 .allocator
                 .blocks_for_slots(slots)
                 .saturating_sub(self.allocator.free_blocks())
                 .max(1);
-            let n = p.reclaim(&mut self.allocator, need);
+            let n = p.reclaim(&mut self.allocator, &mut self.arena, need);
             if n == 0 {
                 break;
             }
@@ -128,6 +202,7 @@ impl CacheManager {
         if self.allocator.alloc(seq_id, cache.cap).is_none() {
             return false;
         }
+        self.classes.insert(seq_id, OwnerClass::Decode);
         self.seqs.insert(seq_id, cache);
         true
     }
@@ -143,30 +218,55 @@ impl CacheManager {
     /// Accounting-only reservation (cache owned elsewhere, e.g. by the
     /// engine loop's active set). Pairs with [`CacheManager::release`].
     pub fn reserve(&mut self, seq_id: u64, slots: usize) -> bool {
-        self.allocator.alloc(seq_id, slots).is_some()
+        if self.allocator.alloc(seq_id, slots).is_none() {
+            return false;
+        }
+        self.classes.insert(seq_id, OwnerClass::Decode);
+        true
     }
 
-    /// Release an accounting-only reservation.
+    /// Release everything an owner holds: allocator blocks, any bound
+    /// arena buffers, and its class tag. Returns blocks freed.
     pub fn release(&mut self, seq_id: u64) -> usize {
-        self.allocator.free_owner(seq_id)
+        let ids = self.allocator.take_owner(seq_id);
+        self.arena.release(&ids);
+        self.classes.remove(&seq_id);
+        ids.len()
     }
 
     /// Release a finished sequence's memory.
     pub fn remove(&mut self, seq_id: u64) -> Option<SeqCache> {
         let c = self.seqs.remove(&seq_id);
         if c.is_some() {
-            self.allocator.free_owner(seq_id);
+            self.release(seq_id);
         }
         c
     }
 
     pub fn stats(&self) -> CacheStats {
+        let mut by_class = [0usize; 3]; // decode, prefix, prefill
+        for (owner, n) in self.allocator.owner_block_counts() {
+            if owner == PREFIX_OWNER {
+                by_class[1] += n;
+            } else {
+                match self.classes.get(&owner) {
+                    Some(OwnerClass::Prefill) => by_class[2] += n,
+                    _ => by_class[0] += n,
+                }
+            }
+        }
         CacheStats {
             active_seqs: self.seqs.len(),
             live_slots: self.seqs.values().map(SeqCache::live_slots).sum(),
             used_blocks: self.allocator.used_blocks(),
             free_blocks: self.allocator.free_blocks(),
             peak_used_blocks: self.allocator.peak_used_blocks(),
+            arena_bytes: self.arena.bytes_in_use(),
+            arena_peak_bytes: self.arena.peak_bytes(),
+            arena_blocks: self.arena.blocks_bound(),
+            blocks_decode: by_class[0],
+            blocks_prefix: by_class[1],
+            blocks_prefill: by_class[2],
         }
     }
 }
@@ -174,6 +274,7 @@ impl CacheManager {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::kvcache::arena::KvDims;
     use crate::util::tensor::TensorF;
 
     fn mk_cache(cap: usize) -> SeqCache {
@@ -194,12 +295,67 @@ mod tests {
         let s = m.stats();
         assert_eq!(s.active_seqs, 1);
         assert_eq!(s.peak_used_blocks, 8);
+        assert_eq!(s.blocks_decode, 4);
+        assert_eq!(s.arena_blocks, 0, "dense registrations bind no arena bytes");
     }
 
     #[test]
     fn remove_unknown_is_none() {
         let mut m = CacheManager::new(64, 8);
         assert!(m.remove(99).is_none());
+    }
+
+    #[test]
+    fn paged_owner_release_returns_arena_bytes() {
+        let mut m = CacheManager::new(64, 8);
+        let dims = KvDims { n_layers: 1, n_kv_heads: 1, head_dim: 2 };
+        m.tag(7, OwnerClass::Prefill);
+        let ids = m.paged_ctx(7).alloc_blocks(20, dims.slot_floats()).unwrap();
+        assert_eq!(ids.len(), 3);
+        let s = m.stats();
+        assert_eq!(s.blocks_prefill, 3);
+        assert_eq!(s.arena_blocks, 3);
+        assert!(s.arena_bytes > 0);
+        assert_eq!(m.release(7), 3);
+        let s = m.stats();
+        assert_eq!(s.arena_bytes, 0);
+        assert_eq!(s.blocks_prefill, 0);
+        assert_eq!(s.used_blocks, 0);
+    }
+
+    #[test]
+    fn grow_paged_reclaims_tree_blocks_under_pressure() {
+        let mut m = CacheManager::new(32, 8); // 4 blocks
+        m.enable_prefix_cache(0);
+        let dims = KvDims { n_layers: 1, n_kv_heads: 1, head_dim: 2 };
+        // tree holds one block
+        let tokens: Vec<i32> = (0..8).collect();
+        let records = vec![BlockRecord {
+            start: 0,
+            tokens: tokens.clone(),
+            k: TensorF::zeros(vec![1, 1, 8, 2]),
+            v: TensorF::zeros(vec![1, 1, 8, 2]),
+            h2o: None,
+        }];
+        assert_eq!(m.prefix_insert("m", &tokens, records), 1);
+        // a paged cache takes the remaining 3 blocks
+        let k = TensorF::zeros(vec![1, 1, 8, 2]);
+        let kept = vec![(0..8).collect::<Vec<usize>>()];
+        let (arena, alloc) = m.paged_parts();
+        let mut cache = PagedSeqCache::from_dense_selection(
+            arena, alloc, 1, dims, &k, &k, &kept, 8, 64,
+        )
+        .unwrap();
+        assert_eq!(cache.blocks.len(), 1);
+        assert!(m.grow_paged(1, &mut cache));
+        assert!(m.grow_paged(1, &mut cache));
+        // pool is now full (3 decode + 1 tree): growth must evict the tree
+        assert!(!m.can_admit(8));
+        assert!(m.grow_paged(1, &mut cache), "grow must reclaim the unpinned tree block");
+        assert_eq!(m.prefix_stats().unwrap().blocks, 0);
+        assert_eq!(cache.blocks.len(), 4);
+        // nothing left anywhere: growth finally fails
+        assert!(!m.grow_paged(1, &mut cache));
     }
 
     /// Prefix-tree blocks come out of the same pool as sequence caches,
@@ -221,6 +377,7 @@ mod tests {
             .collect();
         assert_eq!(m.prefix_insert("m", &tokens, records), 2);
         assert_eq!(m.prefix_stats().unwrap().blocks, 2);
+        assert_eq!(m.stats().blocks_prefix, 2);
         // sequences fill the remaining 6 blocks; the next admission must
         // succeed only after the tree gives its 2 blocks back
         assert!(m.reserve(1, 48));
@@ -229,5 +386,6 @@ mod tests {
         assert!(m.can_admit(16));
         assert_eq!(m.prefix_stats().unwrap().blocks, 0);
         assert_eq!(m.prefix_stats().unwrap().reclaimed_blocks, 2);
+        assert_eq!(m.stats().arena_bytes, 0, "reclaimed tree blocks must release bytes");
     }
 }

@@ -2,25 +2,39 @@
 //!
 //! * [`block::BlockAllocator`] — a vLLM-style fixed-size block pool with
 //!   global capacity accounting (admission control for the scheduler);
-//! * [`cache::SeqCache`] — one sequence's compacted post-eviction cache:
-//!   host K/V tensors shaped `[L, Hkv, cap, dh]`, per-layer live lengths,
-//!   and the slot→absolute-position map needed to interpret decode-time
+//! * [`arena::KvArena`] — the *physical* side of the pool: per-block K/V
+//!   buffers shared by decode caches, in-flight chunked-prefill state
+//!   and prefix-tree nodes, plus the [`arena::KvAccess`] row abstraction
+//!   the reference kernels are generic over (dense and paged paths run
+//!   the same math, bit for bit);
+//! * [`cache::SeqCache`] — one sequence's compacted post-eviction cache
+//!   in the dense reference layout: host K/V tensors shaped
+//!   `[L, Hkv, cap, dh]`, per-layer live lengths, and the
+//!   slot→absolute-position map needed to interpret decode-time
 //!   attention probabilities (GT importance tracking, Table 8);
+//! * [`paged::PagedSeqCache`] — the serving default: the same cache as a
+//!   block table over the arena, built by gather-compaction and grown
+//!   block-by-block during decode instead of finishing at a fixed cap;
 //! * [`prefix::PrefixCache`] — the cross-request prefix cache: a radix
-//!   tree over token-id block chunks whose nodes own ref-counted blocks
-//!   of *pre-eviction* chunked-prefill state (per-layer KV + the running
-//!   H2O score accumulator), enabling prefix-aware prefill resume;
-//! * [`manager::CacheManager`] — ties all three together over one shared
-//!   block pool.
+//!   tree over token-id block chunks whose nodes own ref-counted arena
+//!   blocks of *pre-eviction* chunked-prefill state (per-layer KV + the
+//!   running H2O score accumulator), enabling prefix-aware prefill
+//!   resume;
+//! * [`manager::CacheManager`] — ties all of it together over one shared
+//!   block pool, with per-owner-class occupancy accounting.
 
+pub mod arena;
 pub mod block;
 pub mod cache;
 pub mod manager;
+pub mod paged;
 pub mod prefix;
 
-pub use block::BlockAllocator;
+pub use arena::{DenseKvRef, KvAccess, KvArena, KvBlock, KvDims, OwnedKv, PagedCtx};
+pub use block::{BlockAllocator, BlockId};
 pub use cache::SeqCache;
-pub use manager::CacheManager;
+pub use manager::{CacheManager, OwnerClass};
+pub use paged::PagedSeqCache;
 pub use prefix::{
     BlockRecord, MatchKind, PrefixCache, PrefixCacheConfig, PrefixMatch, PrefixPin, PrefixStats,
 };

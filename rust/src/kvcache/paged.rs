@@ -1,0 +1,355 @@
+//! Per-sequence *paged* decode cache: a block table over the shared
+//! [`KvArena`] instead of a dense `[L, Hkv, cap, dh]` tensor pair.
+//!
+//! Compared with [`super::cache::SeqCache`] (kept as the bit-exact
+//! reference layout), a paged cache:
+//!
+//! * allocates only the blocks its live rows need — a 90-row cache costs
+//!   two 64-slot blocks, not a 640-slot decode bucket — so resident KV
+//!   bytes track actual occupancy;
+//! * is built by **gathering** kept rows straight into freshly allocated
+//!   blocks ([`PagedSeqCache::from_arena_selection`] from paged prefill
+//!   state, [`PagedSeqCache::from_dense_selection`] from a monolithic
+//!   prefill), after which the prompt's blocks are freed immediately;
+//! * **grows** one block at a time when decode fills its last slot
+//!   ([`PagedSeqCache::grow`]), subject to pool backpressure, instead of
+//!   finishing the sequence at a fixed cap.
+//!
+//! Slot semantics are identical to the dense cache: slot `i` of layer
+//! `l` lives at row `i` (block `i / bs`, offset `i % bs`), layers are
+//! ragged via `lens`, and `slot_pos` maps slots back to absolute prompt
+//! positions for GT tracking.
+
+use anyhow::{Context, Result};
+
+use crate::util::tensor::TensorF;
+
+use super::arena::{KvArena, KvDims, OwnedKv};
+use super::block::{BlockAllocator, BlockId};
+use super::cache::SeqCache;
+
+#[derive(Debug, Clone)]
+pub struct PagedSeqCache {
+    /// Physical block table: global slot `i` lives in
+    /// `blocks[i / block_size]` at offset `i % block_size`.
+    pub blocks: Vec<BlockId>,
+    pub block_size: usize,
+    pub dims: KvDims,
+    /// Live slots per layer (ragged after per-layer budgets).
+    pub lens: Vec<usize>,
+    /// Absolute token position of each live slot, per layer.
+    pub slot_pos: Vec<Vec<usize>>,
+    /// Next absolute RoPE position (counts over the full prompt).
+    pub next_pos: usize,
+    /// The decode cap the dense path would have used (reporting parity;
+    /// the paged cache is *not* bounded by it — it grows by blocks).
+    pub cap: usize,
+    pub n_layers: usize,
+}
+
+impl PagedSeqCache {
+    /// Blocks needed for the kept rows of a selection (the admission
+    /// charge of a gather-compaction).
+    pub fn blocks_for_selection(kept: &[Vec<usize>], block_size: usize) -> usize {
+        let max_rows = kept.iter().map(Vec::len).max().unwrap_or(0).max(1);
+        max_rows.div_ceil(block_size)
+    }
+
+    /// Gather-compact kept rows of dense full-prompt KV
+    /// (`[L, Hkv, S, dh]`) into freshly allocated blocks owned by
+    /// `owner`. Fails with "kv pool exhausted" when the pool cannot take
+    /// the kept rows.
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_dense_selection(
+        arena: &mut KvArena,
+        alloc: &mut BlockAllocator,
+        owner: u64,
+        dims: KvDims,
+        k_full: &TensorF,
+        v_full: &TensorF,
+        kept: &[Vec<usize>],
+        prompt_len: usize,
+        cap: usize,
+    ) -> Result<PagedSeqCache> {
+        anyhow::ensure!(
+            k_full.shape.len() == 4
+                && k_full.shape[0] == dims.n_layers
+                && k_full.shape[1] == dims.n_kv_heads
+                && k_full.shape[3] == dims.head_dim,
+            "full KV shape {:?} does not match {dims:?}",
+            k_full.shape
+        );
+        anyhow::ensure!(kept.len() == dims.n_layers, "selection layer count mismatch");
+        let mut cache = Self::alloc_for(arena, alloc, owner, dims, kept, prompt_len, cap)?;
+        let bs = cache.block_size;
+        for (li, idx) in kept.iter().enumerate() {
+            for (slot, &p) in idx.iter().enumerate() {
+                for g in 0..dims.n_kv_heads {
+                    arena.write_row(
+                        &dims,
+                        cache.blocks[slot / bs],
+                        li,
+                        g,
+                        slot % bs,
+                        k_full.index(&[li, g, p]),
+                        v_full.index(&[li, g, p]),
+                    );
+                }
+            }
+        }
+        cache.note_selection(kept);
+        Ok(cache)
+    }
+
+    /// Gather-compact kept rows of *paged* full-prompt KV (the chunked
+    /// prefill's block table) into freshly allocated blocks. The source
+    /// blocks are left untouched — the caller frees them right after.
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_arena_selection(
+        arena: &mut KvArena,
+        alloc: &mut BlockAllocator,
+        owner: u64,
+        dims: KvDims,
+        src_blocks: &[BlockId],
+        kept: &[Vec<usize>],
+        prompt_len: usize,
+        cap: usize,
+    ) -> Result<PagedSeqCache> {
+        anyhow::ensure!(kept.len() == dims.n_layers, "selection layer count mismatch");
+        let bs = arena.block_size();
+        let src_slots = src_blocks.len() * bs;
+        for idx in kept {
+            for &p in idx {
+                anyhow::ensure!(p < src_slots, "kept row {p} outside prompt blocks");
+            }
+        }
+        let mut cache = Self::alloc_for(arena, alloc, owner, dims, kept, prompt_len, cap)?;
+        // Take the destination blocks out so source reads and destination
+        // writes cannot alias (they are distinct blocks by construction).
+        let taken = arena.take(&cache.blocks)?;
+        let mut dst = OwnedKv::new(taken, dims, bs);
+        for (li, idx) in kept.iter().enumerate() {
+            for (slot, &p) in idx.iter().enumerate() {
+                for g in 0..dims.n_kv_heads {
+                    let kr = arena.k_row(&dims, src_blocks[p / bs], li, g, p % bs);
+                    let vr = arena.v_row(&dims, src_blocks[p / bs], li, g, p % bs);
+                    dst.write_row(li, g, slot, kr, vr);
+                }
+            }
+        }
+        let blocks = cache.blocks.clone();
+        arena.put(&blocks, dst.into_blocks());
+        cache.note_selection(kept);
+        Ok(cache)
+    }
+
+    /// Allocate + bind the destination blocks of a gather-compaction.
+    fn alloc_for(
+        arena: &mut KvArena,
+        alloc: &mut BlockAllocator,
+        owner: u64,
+        dims: KvDims,
+        kept: &[Vec<usize>],
+        prompt_len: usize,
+        cap: usize,
+    ) -> Result<PagedSeqCache> {
+        let bs = arena.block_size();
+        let max_rows = kept.iter().map(Vec::len).max().unwrap_or(0).max(1);
+        for (li, idx) in kept.iter().enumerate() {
+            anyhow::ensure!(idx.len() <= cap, "layer {li}: {} kept > cap {cap}", idx.len());
+        }
+        let ids = alloc.alloc(owner, max_rows).context("kv pool exhausted")?;
+        arena.bind(&ids, dims.slot_floats());
+        Ok(PagedSeqCache {
+            blocks: ids,
+            block_size: bs,
+            dims,
+            lens: vec![0; dims.n_layers],
+            slot_pos: vec![Vec::new(); dims.n_layers],
+            next_pos: prompt_len,
+            cap,
+            n_layers: dims.n_layers,
+        })
+    }
+
+    fn note_selection(&mut self, kept: &[Vec<usize>]) {
+        self.lens = kept.iter().map(Vec::len).collect();
+        self.slot_pos = kept.to_vec();
+    }
+
+    /// Total slots the block table can hold right now.
+    pub fn allocated_slots(&self) -> usize {
+        self.blocks.len() * self.block_size
+    }
+
+    /// Free slots before the next append would need a new block
+    /// (min across layers, like the dense cache).
+    pub fn headroom(&self) -> usize {
+        let max_len = self.lens.iter().copied().max().unwrap_or(0);
+        self.allocated_slots() - max_len
+    }
+
+    /// Append one more block from the pool; false when the pool is
+    /// exhausted (caller decides between reclaim and `kv_exhausted`).
+    pub fn grow(&mut self, arena: &mut KvArena, alloc: &mut BlockAllocator, owner: u64) -> bool {
+        match alloc.alloc(owner, self.block_size) {
+            Some(ids) => {
+                arena.bind(&ids, self.dims.slot_floats());
+                self.blocks.extend(ids);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Record the insertion performed by the decode kernel at slot
+    /// `lens[l]` of each layer, at absolute `pos`.
+    pub fn note_insert(&mut self, pos: usize) {
+        let slots = self.allocated_slots();
+        for l in 0..self.n_layers {
+            assert!(self.lens[l] < slots, "paged cache overflow at layer {l}");
+            self.slot_pos[l].push(pos);
+            self.lens[l] += 1;
+        }
+    }
+
+    pub fn lens_i32(&self) -> Vec<i32> {
+        self.lens.iter().map(|&x| x as i32).collect()
+    }
+
+    /// Total live slots across layers (memory-accounting unit).
+    pub fn live_slots(&self) -> usize {
+        self.lens.iter().sum()
+    }
+
+    /// Materialize a dense [`SeqCache`] copy padded to `cap` slots
+    /// (equivalence tests, the default backend's gather fallback).
+    pub fn gather_dense(&self, arena: &KvArena, cap: usize) -> Result<SeqCache> {
+        let dims = self.dims;
+        let (l, hkv, dh) = (dims.n_layers, dims.n_kv_heads, dims.head_dim);
+        let mut k = TensorF::zeros(vec![l, hkv, cap, dh]);
+        let mut v = TensorF::zeros(vec![l, hkv, cap, dh]);
+        for li in 0..l {
+            anyhow::ensure!(self.lens[li] <= cap, "layer {li} has more rows than cap {cap}");
+            for g in 0..hkv {
+                for slot in 0..self.lens[li] {
+                    let b = self.blocks[slot / self.block_size];
+                    let within = slot % self.block_size;
+                    let dst = ((li * hkv + g) * cap + slot) * dh;
+                    k.data[dst..dst + dh].copy_from_slice(arena.k_row(&dims, b, li, g, within));
+                    v.data[dst..dst + dh].copy_from_slice(arena.v_row(&dims, b, li, g, within));
+                }
+            }
+        }
+        Ok(SeqCache {
+            k,
+            v,
+            lens: self.lens.clone(),
+            slot_pos: self.slot_pos.clone(),
+            next_pos: self.next_pos,
+            cap,
+            n_layers: self.n_layers,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DIMS: KvDims = KvDims { n_layers: 2, n_kv_heads: 2, head_dim: 4 };
+
+    fn full_kv(l: usize, hkv: usize, s: usize, dh: usize) -> TensorF {
+        TensorF::new(
+            vec![l, hkv, s, dh],
+            (0..l * hkv * s * dh).map(|x| x as f32).collect(),
+        )
+    }
+
+    fn pool(n_blocks: usize, bs: usize) -> (KvArena, BlockAllocator) {
+        (KvArena::new(n_blocks, bs), BlockAllocator::new(n_blocks * bs, bs))
+    }
+
+    #[test]
+    fn dense_selection_gathers_and_matches_seq_cache() {
+        let (mut arena, mut alloc) = pool(8, 4);
+        let k = full_kv(2, 2, 8, 4);
+        let v = full_kv(2, 2, 8, 4);
+        let kept = vec![vec![1, 3, 7], vec![0, 2]];
+        let paged =
+            PagedSeqCache::from_dense_selection(&mut arena, &mut alloc, 1, DIMS, &k, &v, &kept, 8, 6)
+                .unwrap();
+        assert_eq!(paged.lens, vec![3, 2]);
+        assert_eq!(paged.slot_pos[0], vec![1, 3, 7]);
+        assert_eq!(paged.blocks.len(), 1); // 3 rows -> one 4-slot block
+        assert_eq!(paged.headroom(), 1);
+        // bit-for-bit the same compaction as the dense reference path
+        let dense = SeqCache::from_selection(&k, &v, &kept, 8, 6);
+        let roundtrip = paged.gather_dense(&arena, 6).unwrap();
+        assert_eq!(roundtrip.k.data, dense.k.data);
+        assert_eq!(roundtrip.v.data, dense.v.data);
+        assert_eq!(roundtrip.lens, dense.lens);
+        assert_eq!(roundtrip.next_pos, dense.next_pos);
+    }
+
+    #[test]
+    fn arena_selection_matches_dense_selection() {
+        let (mut arena, mut alloc) = pool(8, 4);
+        let k = full_kv(2, 2, 8, 4);
+        let v = full_kv(2, 2, 8, 4);
+        // stage the "prompt" KV in arena blocks (2 blocks of 4 rows)
+        let src = alloc.alloc(99, 8).unwrap();
+        arena.bind(&src, DIMS.slot_floats());
+        arena.scatter_dense(&DIMS, &src, 0, &k, &v).unwrap();
+        let kept = vec![vec![0, 4, 5, 6, 7], vec![2, 3]];
+        let a = PagedSeqCache::from_arena_selection(
+            &mut arena, &mut alloc, 1, DIMS, &src, &kept, 8, 8,
+        )
+        .unwrap();
+        let b = PagedSeqCache::from_dense_selection(
+            &mut arena, &mut alloc, 2, DIMS, &k, &v, &kept, 8, 8,
+        )
+        .unwrap();
+        assert_eq!(a.blocks.len(), 2); // 5 rows -> two 4-slot blocks
+        let da = a.gather_dense(&arena, 8).unwrap();
+        let db = b.gather_dense(&arena, 8).unwrap();
+        assert_eq!(da.k.data, db.k.data);
+        assert_eq!(da.v.data, db.v.data);
+        // freeing the prompt's blocks leaves the gathered cache intact
+        arena.release(&src);
+        alloc.free(&src);
+        let da2 = a.gather_dense(&arena, 8).unwrap();
+        assert_eq!(da.k.data, da2.k.data);
+    }
+
+    #[test]
+    fn grow_on_full_appends_blocks() {
+        let (mut arena, mut alloc) = pool(3, 4);
+        let k = full_kv(2, 2, 8, 4);
+        let kept = vec![vec![0, 1, 2, 3], vec![0, 1]];
+        let mut c =
+            PagedSeqCache::from_dense_selection(&mut arena, &mut alloc, 1, DIMS, &k, &k, &kept, 8, 32)
+                .unwrap();
+        assert_eq!(c.headroom(), 0);
+        assert!(c.grow(&mut arena, &mut alloc, 1));
+        assert_eq!(c.headroom(), 4);
+        c.note_insert(8);
+        assert_eq!(c.lens, vec![5, 3]);
+        assert_eq!(c.slot_pos[0], vec![0, 1, 2, 3, 8]);
+        // pool exhausted: one block left, then growth fails
+        assert!(c.grow(&mut arena, &mut alloc, 1));
+        assert!(!c.grow(&mut arena, &mut alloc, 1));
+    }
+
+    #[test]
+    fn selection_over_cap_is_rejected() {
+        let (mut arena, mut alloc) = pool(4, 4);
+        let k = full_kv(1, 2, 8, 4);
+        let dims = KvDims { n_layers: 1, ..DIMS };
+        let kept = vec![vec![0, 1, 2]];
+        assert!(PagedSeqCache::from_dense_selection(
+            &mut arena, &mut alloc, 1, dims, &k, &k, &kept, 8, 2,
+        )
+        .is_err());
+    }
+}

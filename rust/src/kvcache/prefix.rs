@@ -24,16 +24,21 @@
 //! method-independent dense prefix state that every policy's prefill
 //! passes through.
 //!
-//! Memory accounting shares the scheduler's [`BlockAllocator`]: every
-//! node charges one allocator block (owner [`PREFIX_OWNER`]). Under
-//! allocator pressure the scheduler reclaims unpinned leaves in LRU
-//! order ([`PrefixCache::reclaim`]) before failing an admission.
+//! Memory is shared *physically* with the serving pool: every node owns
+//! one [`BlockAllocator`] block (owner [`PREFIX_OWNER`]) whose KV bytes
+//! live in the same [`KvArena`] the decode caches and in-flight prefills
+//! page into — a tree block and a decode block are interchangeable
+//! storage, not separate accounting columns. Under allocator pressure
+//! the scheduler reclaims unpinned leaves in LRU order
+//! ([`PrefixCache::reclaim`]) before failing an admission, returning
+//! both the block and its arena buffers.
 
 use std::collections::HashMap;
 
 use crate::runtime::PrefixSeed;
 use crate::util::tensor::TensorF;
 
+use super::arena::{KvArena, KvDims};
 use super::block::{BlockAllocator, BlockId};
 
 /// Allocator owner tag for tree-held blocks (sequence ids are small
@@ -72,8 +77,10 @@ struct Node {
     /// Token offset of this block (depth * block_size).
     start: usize,
     tokens: Vec<i32>,
-    k: TensorF,
-    v: TensorF,
+    /// KV geometry of the arena block (needed to assemble seeds).
+    dims: KvDims,
+    /// Cumulative raw H2O column sums (small score state; KV bytes live
+    /// in the arena block, not here).
     h2o: Option<TensorF>,
     block: BlockId,
     parent: Option<usize>,
@@ -180,6 +187,7 @@ impl PrefixCache {
     /// matched path is pinned; release it with [`PrefixCache::release`].
     pub fn lookup(
         &mut self,
+        arena: &KvArena,
         model: &str,
         tokens: &[i32],
         need_scores: bool,
@@ -232,29 +240,35 @@ impl PrefixCache {
             n.last_use = tick;
         }
         let resume_len = (best + 1) * b;
-        let seed = self.build_seed(&path, resume_len);
+        let seed = self.build_seed(arena, &path, resume_len);
         let kind = if best + 1 == usable_blocks { MatchKind::Full } else { MatchKind::Partial };
         PrefixMatch { kind, resume_len, seed: Some(seed), pin: PrefixPin { nodes: path } }
     }
 
-    /// Concatenate the path's KV blocks (and clone the deepest node's
-    /// cumulative H2O snapshot) into a private, request-owned seed — the
-    /// copy-on-write boundary: tree blocks are never handed out mutably.
-    fn build_seed(&self, path: &[usize], resume_len: usize) -> PrefixSeed {
+    /// Concatenate the path's arena KV blocks (and clone the deepest
+    /// node's cumulative H2O snapshot) into a private, request-owned
+    /// seed — the copy-on-write boundary: tree blocks are never handed
+    /// out mutably.
+    fn build_seed(&self, arena: &KvArena, path: &[usize], resume_len: usize) -> PrefixSeed {
         let b = self.cfg.block_size;
         let deepest = self.node(*path.last().expect("seed of an empty path"));
-        let (l, hkv, dh) = (deepest.k.shape[0], deepest.k.shape[1], deepest.k.shape[3]);
+        let dims = deepest.dims;
+        let (l, hkv, dh) = (dims.n_layers, dims.n_kv_heads, dims.head_dim);
         let mut k = TensorF::zeros(vec![l, hkv, resume_len, dh]);
         let mut v = TensorF::zeros(vec![l, hkv, resume_len, dh]);
         for (depth, &i) in path.iter().enumerate() {
             let node = self.node(i);
             debug_assert_eq!(node.start, depth * b, "prefix path out of order");
+            debug_assert_eq!(node.dims, dims, "prefix path mixes model geometries");
+            let (bk, bv) = arena
+                .block_kv(node.block)
+                .expect("prefix node lost its arena block");
             for li in 0..l {
                 for g in 0..hkv {
                     let src = ((li * hkv + g) * b) * dh;
                     let dst = ((li * hkv + g) * resume_len + depth * b) * dh;
-                    k.data[dst..dst + b * dh].copy_from_slice(&node.k.data[src..src + b * dh]);
-                    v.data[dst..dst + b * dh].copy_from_slice(&node.v.data[src..src + b * dh]);
+                    k.data[dst..dst + b * dh].copy_from_slice(&bk[src..src + b * dh]);
+                    v.data[dst..dst + b * dh].copy_from_slice(&bv[src..src + b * dh]);
                 }
             }
         }
@@ -285,6 +299,7 @@ impl PrefixCache {
     pub fn insert(
         &mut self,
         alloc: &mut BlockAllocator,
+        arena: &mut KvArena,
         model: &str,
         tokens: &[i32],
         records: Vec<BlockRecord>,
@@ -322,7 +337,7 @@ impl PrefixCache {
             }
             // New node: need its record and an allocator block.
             let Some(rec) = by_start.get(&start) else { break };
-            if self.n_blocks >= self.cfg.max_blocks && self.reclaim(alloc, 1) == 0 {
+            if self.n_blocks >= self.cfg.max_blocks && self.reclaim(alloc, arena, 1) == 0 {
                 break;
             }
             let ids = match alloc.alloc(PREFIX_OWNER, b) {
@@ -330,7 +345,7 @@ impl PrefixCache {
                 None => {
                     // allocator pressure: try to make room from our own
                     // cold leaves before giving up on this insertion
-                    if self.reclaim(alloc, 1) == 0 {
+                    if self.reclaim(alloc, arena, 1) == 0 {
                         break;
                     }
                     match alloc.alloc(PREFIX_OWNER, b) {
@@ -341,11 +356,20 @@ impl PrefixCache {
             };
             debug_assert_eq!(ids.len(), 1);
             debug_assert_eq!(rec.tokens, key, "block record tokens disagree with the prompt");
+            // The record's [L, Hkv, b, dh] tensors have exactly the
+            // arena's block layout: bind and copy the whole buffers.
+            let dims = KvDims {
+                n_layers: rec.k.shape[0],
+                n_kv_heads: rec.k.shape[1],
+                head_dim: rec.k.shape[3],
+            };
+            debug_assert_eq!(rec.k.shape[2], b, "record rows disagree with the block size");
+            arena.bind(&ids, dims.slot_floats());
+            arena.write_block(ids[0], &rec.k.data, &rec.v.data);
             let node = Node {
                 start,
                 tokens: key.clone(),
-                k: rec.k.clone(),
-                v: rec.v.clone(),
+                dims,
                 h2o: rec.h2o.clone(),
                 block: ids[0],
                 parent,
@@ -385,12 +409,18 @@ impl PrefixCache {
     }
 
     /// Free up to `want_blocks` unpinned **leaves** back to the
-    /// allocator, coldest (LRU) first; interior nodes become reclaimable
-    /// as their subtrees drain. Each pass collects every current
-    /// unpinned leaf in one arena scan and drains them in LRU order, so
-    /// freeing k blocks costs O(arena · depth) rather than O(arena · k).
-    /// Returns how many blocks were freed.
-    pub fn reclaim(&mut self, alloc: &mut BlockAllocator, want_blocks: usize) -> usize {
+    /// allocator (and their buffers back to the arena), coldest (LRU)
+    /// first; interior nodes become reclaimable as their subtrees drain.
+    /// Each pass collects every current unpinned leaf in one node-table
+    /// scan and drains them in LRU order, so freeing k blocks costs
+    /// O(nodes · depth) rather than O(nodes · k). Returns how many
+    /// blocks were freed.
+    pub fn reclaim(
+        &mut self,
+        alloc: &mut BlockAllocator,
+        arena: &mut KvArena,
+        want_blocks: usize,
+    ) -> usize {
         let mut freed = 0usize;
         while freed < want_blocks {
             let mut victims: Vec<(u64, usize)> = self
@@ -409,7 +439,7 @@ impl PrefixCache {
                 if freed >= want_blocks {
                     break;
                 }
-                self.remove_leaf(i, alloc);
+                self.remove_leaf(i, alloc, arena);
                 freed += 1;
             }
             // freeing leaves may have exposed their parents as new
@@ -418,7 +448,7 @@ impl PrefixCache {
         freed
     }
 
-    fn remove_leaf(&mut self, i: usize, alloc: &mut BlockAllocator) {
+    fn remove_leaf(&mut self, i: usize, alloc: &mut BlockAllocator, arena: &mut KvArena) {
         let node = self.arena[i].take().expect("reclaim victim vanished");
         debug_assert!(node.refs == 0 && node.children.is_empty());
         match node.parent {
@@ -431,6 +461,7 @@ impl PrefixCache {
                 }
             }
         }
+        arena.release(&[node.block]);
         alloc.free(&[node.block]);
         self.free_slots.push(i);
         self.n_blocks -= 1;
@@ -504,21 +535,23 @@ mod tests {
             .collect()
     }
 
-    fn cache() -> (PrefixCache, BlockAllocator) {
+    fn cache() -> (PrefixCache, BlockAllocator, KvArena) {
         (
             PrefixCache::new(PrefixCacheConfig { block_size: B, max_blocks: usize::MAX }),
             BlockAllocator::new(64 * B, B),
+            KvArena::new(64, B),
         )
     }
 
     #[test]
     fn match_after_insert_is_exact() {
-        let (mut c, mut a) = cache();
+        let (mut c, mut a, mut ar) = cache();
         let tokens: Vec<i32> = (0..13).collect(); // 3 full blocks + tail
-        let n = c.insert(&mut a, "m", &tokens, records(&tokens, 0, true));
+        let n = c.insert(&mut a, &mut ar, "m", &tokens, records(&tokens, 0, true));
         assert_eq!(n, 3);
         assert_eq!(a.used_blocks(), 3);
-        let m = c.lookup("m", &tokens, true, tokens.len());
+        assert_eq!(ar.blocks_bound(), 3, "tree KV must be arena-resident");
+        let m = c.lookup(&ar, "m", &tokens, true, tokens.len());
         assert_eq!(m.kind, MatchKind::Full);
         assert_eq!(m.resume_len, 12);
         let seed = m.seed.unwrap();
@@ -532,22 +565,22 @@ mod tests {
 
     #[test]
     fn resume_cap_and_score_requirement_bound_the_match() {
-        let (mut c, mut a) = cache();
+        let (mut c, mut a, mut ar) = cache();
         let tokens: Vec<i32> = (0..16).collect();
-        c.insert(&mut a, "m", &tokens, records(&tokens, 0, true));
+        c.insert(&mut a, &mut ar, "m", &tokens, records(&tokens, 0, true));
         // cap of 9 tokens -> only 2 blocks usable
-        let m = c.lookup("m", &tokens, true, 9);
+        let m = c.lookup(&ar, "m", &tokens, true, 9);
         assert_eq!(m.resume_len, 8);
         assert_eq!(m.kind, MatchKind::Full); // all cap-usable blocks served
         c.release(m.pin);
         // KV-only tree: base-pass lookups (need_scores) miss entirely
-        let (mut c2, mut a2) = cache();
-        c2.insert(&mut a2, "m", &tokens, records(&tokens, 0, false));
-        let m2 = c2.lookup("m", &tokens, true, tokens.len());
+        let (mut c2, mut a2, mut ar2) = cache();
+        c2.insert(&mut a2, &mut ar2, "m", &tokens, records(&tokens, 0, false));
+        let m2 = c2.lookup(&ar2, "m", &tokens, true, tokens.len());
         assert_eq!(m2.kind, MatchKind::Miss);
         assert!(m2.pin.is_empty());
         // ... but lookahead lookups (no score requirement) hit
-        let m3 = c2.lookup("m", &tokens, false, tokens.len());
+        let m3 = c2.lookup(&ar2, "m", &tokens, false, tokens.len());
         assert_eq!(m3.resume_len, 16);
         assert!(m3.seed.as_ref().unwrap().h2o.is_none());
         c2.release(m3.pin);
@@ -555,39 +588,39 @@ mod tests {
 
     #[test]
     fn h2o_upgrade_of_kv_only_nodes() {
-        let (mut c, mut a) = cache();
+        let (mut c, mut a, mut ar) = cache();
         let tokens: Vec<i32> = (0..8).collect();
-        c.insert(&mut a, "m", &tokens, records(&tokens, 0, false)); // lookahead pass
+        c.insert(&mut a, &mut ar, "m", &tokens, records(&tokens, 0, false)); // lookahead pass
         assert_eq!(a.used_blocks(), 2);
         // a base pass over the same prompt recomputed everything and now
         // carries H2O sums: nodes upgrade in place, no new blocks
-        let n = c.insert(&mut a, "m", &tokens, records(&tokens, 0, true));
+        let n = c.insert(&mut a, &mut ar, "m", &tokens, records(&tokens, 0, true));
         assert_eq!(n, 0);
         assert_eq!(a.used_blocks(), 2);
-        let m = c.lookup("m", &tokens, true, tokens.len());
+        let m = c.lookup(&ar, "m", &tokens, true, tokens.len());
         assert_eq!(m.resume_len, 8);
         c.release(m.pin);
     }
 
     #[test]
     fn divergent_prompts_become_siblings_and_share_nothing_mutable() {
-        let (mut c, mut a) = cache();
+        let (mut c, mut a, mut ar) = cache();
         let p1: Vec<i32> = vec![1, 2, 3, 4, 5, 6, 7, 8];
-        c.insert(&mut a, "m", &p1, records(&p1, 0, true));
+        c.insert(&mut a, &mut ar, "m", &p1, records(&p1, 0, true));
         // p2 shares block 0, diverges in block 1
         let p2: Vec<i32> = vec![1, 2, 3, 4, 9, 9, 9, 9];
-        let m = c.lookup("m", &p2, true, p2.len());
+        let m = c.lookup(&ar, "m", &p2, true, p2.len());
         assert_eq!(m.resume_len, 4, "shared first block matches");
         assert_eq!(m.kind, MatchKind::Partial);
         c.release(m.pin);
-        c.insert(&mut a, "m", &p2, records(&p2, 1, true));
+        c.insert(&mut a, &mut ar, "m", &p2, records(&p2, 1, true));
         assert_eq!(a.used_blocks(), 3); // 2 (p1) + 1 diverged sibling
         // both full prompts still match exactly
-        let m1 = c.lookup("m", &p1, true, p1.len());
+        let m1 = c.lookup(&ar, "m", &p1, true, p1.len());
         assert_eq!(m1.resume_len, 8);
         let (k1, _) = kv_of(&p1);
         assert_eq!(m1.seed.as_ref().unwrap().k.data, k1.data, "p1 blocks unchanged by p2");
-        let m2 = c.lookup("m", &p2, true, p2.len());
+        let m2 = c.lookup(&ar, "m", &p2, true, p2.len());
         assert_eq!(m2.resume_len, 8);
         c.release(m1.pin);
         c.release(m2.pin);
@@ -595,23 +628,25 @@ mod tests {
 
     #[test]
     fn lru_reclaims_cold_unpinned_leaves_only() {
-        let (mut c, mut a) = cache();
+        let (mut c, mut a, mut ar) = cache();
         let p1: Vec<i32> = vec![1, 2, 3, 4, 5, 6, 7, 8];
         let p2: Vec<i32> = vec![10, 11, 12, 13];
-        c.insert(&mut a, "m", &p1, records(&p1, 0, true));
-        c.insert(&mut a, "m", &p2, records(&p2, 0, true));
+        c.insert(&mut a, &mut ar, "m", &p1, records(&p1, 0, true));
+        c.insert(&mut a, &mut ar, "m", &p2, records(&p2, 0, true));
         // touch p1 so p2 is the LRU leaf
-        let m = c.lookup("m", &p1, true, p1.len());
-        let freed = c.reclaim(&mut a, 1);
+        let m = c.lookup(&ar, "m", &p1, true, p1.len());
+        let freed = c.reclaim(&mut a, &mut ar, 1);
         assert_eq!(freed, 1);
-        assert_eq!(c.lookup("m", &p2, true, p2.len()).kind, MatchKind::Miss, "p2 reclaimed");
+        assert_eq!(c.lookup(&ar, "m", &p2, true, p2.len()).kind, MatchKind::Miss, "p2 reclaimed");
         // p1 is pinned: reclaiming everything must leave it intact
-        let freed = c.reclaim(&mut a, 16);
+        let freed = c.reclaim(&mut a, &mut ar, 16);
         assert_eq!(freed, 0, "pinned path must never be reclaimed");
         c.release(m.pin);
         // unpinned now: the leaf drains first, then the interior node
-        assert_eq!(c.reclaim(&mut a, 16), 2);
+        assert_eq!(c.reclaim(&mut a, &mut ar, 16), 2);
         assert_eq!(a.used_blocks(), 0);
+        assert_eq!(ar.blocks_bound(), 0, "reclaim must return arena buffers too");
+        assert_eq!(ar.bytes_in_use(), 0);
         assert_eq!(c.stats().blocks, 0);
     }
 
@@ -619,13 +654,15 @@ mod tests {
     fn max_blocks_cap_is_enforced_via_reclaim() {
         let mut c = PrefixCache::new(PrefixCacheConfig { block_size: B, max_blocks: 2 });
         let mut a = BlockAllocator::new(64 * B, B);
+        let mut ar = KvArena::new(64, B);
         let p1: Vec<i32> = vec![1, 2, 3, 4, 5, 6, 7, 8];
-        c.insert(&mut a, "m", &p1, records(&p1, 0, true));
+        c.insert(&mut a, &mut ar, "m", &p1, records(&p1, 0, true));
         assert_eq!(c.stats().blocks, 2);
         let p2: Vec<i32> = vec![20, 21, 22, 23, 24, 25, 26, 27];
-        c.insert(&mut a, "m", &p2, records(&p2, 0, true));
+        c.insert(&mut a, &mut ar, "m", &p2, records(&p2, 0, true));
         assert!(c.stats().blocks <= 2, "cap must hold: {}", c.stats().blocks);
         assert_eq!(a.used_blocks(), c.stats().blocks);
+        assert_eq!(ar.blocks_bound(), c.stats().blocks);
     }
 
     /// Property: any interleaving of insert/lookup/release/reclaim keeps
@@ -638,6 +675,7 @@ mod tests {
         check("prefix tree invariants", &Config { cases: 48, max_size: 40, ..Config::new() }, |rng, size| {
             let mut c = PrefixCache::new(PrefixCacheConfig { block_size: B, max_blocks: 24 });
             let mut a = BlockAllocator::new(64 * B, B);
+            let mut ar = KvArena::new(64, B);
             let mut prompts: Vec<Vec<i32>> = Vec::new();
             let mut pins: Vec<(PrefixPin, usize)> = Vec::new(); // (pin, path len)
             for _ in 0..size {
@@ -650,12 +688,12 @@ mod tests {
                         for _ in 0..blocks * B {
                             t.push(rng.below(3) as i32);
                         }
-                        c.insert(&mut a, "m", &t, records(&t, 0, rng.chance(0.7)));
+                        c.insert(&mut a, &mut ar, "m", &t, records(&t, 0, rng.chance(0.7)));
                         prompts.push(t);
                     }
                     1 if !prompts.is_empty() => {
                         let t = prompts[rng.below(prompts.len())].clone();
-                        let m = c.lookup("m", &t, false, t.len());
+                        let m = c.lookup(&ar, "m", &t, false, t.len());
                         if m.resume_len > 0 {
                             // exactness: the seed is the inserted KV
                             let (k_want, _) = kv_of(&t[..m.resume_len]);
@@ -669,12 +707,13 @@ mod tests {
                         c.release(pin);
                     }
                     _ => {
-                        c.reclaim(&mut a, rng.range(1, 4));
+                        c.reclaim(&mut a, &mut ar, rng.range(1, 4));
                     }
                 }
                 let st = c.stats();
-                // allocator accounting matches the tree exactly
+                // allocator, arena and tree accounting match exactly
                 assert_eq!(st.blocks, a.used_blocks(), "tree/allocator divergence");
+                assert_eq!(st.blocks, ar.blocks_bound(), "tree/arena divergence");
                 assert!(st.blocks <= 24, "max_blocks cap violated");
                 // pin accounting balances: total refs == total pinned path
                 // entries outstanding (never negative, never dangling)
@@ -696,9 +735,10 @@ mod tests {
             }
             assert_eq!(c.stats().pinned_nodes, 0);
             // and with nothing pinned, reclaim can always drain the tree
-            c.reclaim(&mut a, usize::MAX);
+            c.reclaim(&mut a, &mut ar, usize::MAX);
             assert_eq!(c.stats().blocks, 0);
             assert_eq!(a.used_blocks(), 0);
+            assert_eq!(ar.bytes_in_use(), 0, "arena bytes leaked by the tree");
         });
     }
 
@@ -709,25 +749,29 @@ mod tests {
         check("prefix COW", &Config { cases: 32, max_size: 24, ..Config::new() }, |rng, size| {
             let mut c = PrefixCache::new(PrefixCacheConfig { block_size: B, max_blocks: usize::MAX });
             let mut a = BlockAllocator::new(128 * B, B);
+            let mut ar = KvArena::new(128, B);
             let shared_blocks = 1 + rng.below(3);
             let shared: Vec<i32> = (0..shared_blocks * B).map(|_| rng.below(4) as i32).collect();
             let mut base = shared.clone();
             base.extend((0..B).map(|_| 100));
-            c.insert(&mut a, "m", &base, records(&base, 0, true));
+            c.insert(&mut a, &mut ar, "m", &base, records(&base, 0, true));
             let snapshot: Vec<(Vec<i32>, Vec<f32>, Vec<f32>)> = c
                 .arena
                 .iter()
                 .flatten()
                 .filter(|n| n.start < shared.len())
-                .map(|n| (n.tokens.clone(), n.k.data.clone(), n.v.data.clone()))
+                .map(|n| {
+                    let (bk, bv) = ar.block_kv(n.block).expect("node block unbound");
+                    (n.tokens.clone(), bk.to_vec(), bv.to_vec())
+                })
                 .collect();
             for i in 0..size.min(6) {
                 // each iteration: a prompt sharing the prefix, diverging after
                 let mut p = shared.clone();
                 p.extend((0..B).map(|_| 101 + i as i32));
-                let m = c.lookup("m", &p, true, p.len());
+                let m = c.lookup(&ar, "m", &p, true, p.len());
                 let resume_blocks = m.resume_len / B;
-                c.insert(&mut a, "m", &p, records(&p, resume_blocks, true));
+                c.insert(&mut a, &mut ar, "m", &p, records(&p, resume_blocks, true));
                 c.release(m.pin);
             }
             // shared blocks: same bytes as before any divergence
@@ -738,8 +782,9 @@ mod tests {
                     .flatten()
                     .find(|n| n.start < shared.len() && &n.tokens == tokens)
                     .expect("shared block vanished");
-                assert_eq!(&node.k.data, k, "shared K block mutated by divergence");
-                assert_eq!(&node.v.data, v, "shared V block mutated by divergence");
+                let (bk, bv) = ar.block_kv(node.block).expect("node block unbound");
+                assert_eq!(bk, &k[..], "shared K block mutated by divergence");
+                assert_eq!(bv, &v[..], "shared V block mutated by divergence");
             }
         });
     }

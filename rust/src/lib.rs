@@ -19,8 +19,9 @@
 //! (`make artifacts`) and the `pjrt` feature, the `lkv` binary serves the
 //! AOT graphs instead.
 //!
-//! See `DESIGN.md` for the full system inventory and the experiment index
-//! mapping every paper table/figure to a harness binary.
+//! See `README.md` for the system inventory (backend feature matrix,
+//! serving flags, bench/CI workflows) and `ROADMAP.md` for the
+//! experiment index and open items.
 
 // Host-tensor math is index-heavy by design, and the config builders
 // intentionally mirror the Python dataclasses (no Default).

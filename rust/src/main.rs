@@ -24,7 +24,14 @@ use lookaheadkv::util::cli::Args;
 use lookaheadkv::workload;
 
 fn main() {
-    let args = Args::from_env(&["help", "verbose", "compile", "per-seq-decode", "prefix-cache"]);
+    let args = Args::from_env(&[
+        "help",
+        "verbose",
+        "compile",
+        "per-seq-decode",
+        "prefix-cache",
+        "dense-kv",
+    ]);
     let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
     let result = match cmd {
         "serve" => cmd_serve(&args),
@@ -52,6 +59,7 @@ fn print_help() {
          commands:\n\
          \x20 serve     --addr 127.0.0.1:8080 --model lkv-tiny --max-active 4 \\\n\
          \x20           [--prefill-chunk 256] [--per-seq-decode] \\\n\
+         \x20           [--kv-pool SLOTS] [--kv-block SLOTS] [--dense-kv] \\\n\
          \x20           [--prefix-cache] [--prefix-cache-slots N]\n\
          \x20 generate  --prompt <text> --method lookaheadkv --budget 64 --max-new 32\n\
          \x20 eval      --suite ruler|longbench|qasper|longproc|mtbench --methods snapkv,lookaheadkv \\\n\
@@ -84,8 +92,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // lifetime.
     let queue = Arc::new(RequestQueue::new(args.usize("queue-cap", 64)));
     let metrics = Arc::new(Metrics::new());
+    let defaults = LoopConfig::default();
     let loop_cfg = LoopConfig {
         max_active: args.usize("max-active", 4),
+        // Shared KV pool: --kv-pool is the global slot budget (the
+        // GPU-KV-memory analog), --kv-block the paging granularity, and
+        // --dense-kv opts out of the paged arena back into dense
+        // cap-sized per-sequence caches (see README "Paged KV arena").
+        kv_pool_slots: args.usize("kv-pool", defaults.kv_pool_slots),
+        kv_block_slots: args.usize_clamped("kv-block", defaults.kv_block_slots, 1, 4096),
+        paged_kv: !args.has("dense-kv"),
         batched_decode: !args.has("per-seq-decode"),
         // 0 = monolithic prefill; 64-256 interleaves decode steps between
         // prompt chunks (see README "Chunked prefill").
@@ -95,7 +111,6 @@ fn cmd_serve(args: &Args) -> Result<()> {
         // (0 = bounded only by the pool + LRU reclamation).
         prefix_cache: args.has("prefix-cache"),
         prefix_cache_slots: args.usize("prefix-cache-slots", 0),
-        ..LoopConfig::default()
     };
     let q2 = Arc::clone(&queue);
     let m2 = Arc::clone(&metrics);

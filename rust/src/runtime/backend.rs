@@ -22,6 +22,8 @@ use anyhow::{Context, Result};
 
 use super::artifacts::Manifest;
 use crate::eviction::ScoreBundle;
+use crate::kvcache::arena::{KvArena, KvDims};
+use crate::kvcache::block::BlockId;
 use crate::util::tensor::{TensorF, TensorI};
 
 /// Per-graph execution statistics (drives the §Perf profiling tables).
@@ -129,8 +131,15 @@ pub struct ChunkState {
     pub done: usize,
     pub finalized: bool,
     /// `[L, Hkv, bucket, dh]` prompt KV; rows `>= done` are still zero.
+    /// For *paged* states (`blocks` set) these are empty `[L, Hkv, 0,
+    /// dh]` placeholders — the prompt KV lives in arena blocks instead.
     pub k: TensorF,
     pub v: TensorF,
+    /// Arena block table holding the prompt KV of a paged pass (slot `i`
+    /// = block `i / bs`, offset `i % bs`). `None` = dense state; `Some`
+    /// states must be advanced through the `*_paged` backend entry
+    /// points. The engine owns allocation/free of these blocks.
+    pub blocks: Option<Vec<BlockId>>,
     /// Captured when the chunk containing `logit_pos` runs.
     pub logits: Option<Vec<f32>>,
     /// Running accumulator. Until finalize, `h2o_scores` holds raw column
@@ -150,6 +159,20 @@ impl ChunkState {
         len: usize,
         logit_pos: usize,
     ) -> Result<ChunkState> {
+        Self::with_backing(manifest, model, variant, len, logit_pos, true)
+    }
+
+    /// Shared constructor: `dense_kv = false` skips allocating the
+    /// bucket-sized prompt-KV tensors (paged states keep their KV in
+    /// arena blocks; score tensors are bucket-shaped either way).
+    fn with_backing(
+        manifest: &Manifest,
+        model: &str,
+        variant: Option<&str>,
+        len: usize,
+        logit_pos: usize,
+        dense_kv: bool,
+    ) -> Result<ChunkState> {
         anyhow::ensure!(len >= 1, "chunked prefill needs at least one token");
         anyhow::ensure!(logit_pos < len, "logit_pos {logit_pos} >= len {len}");
         let meta = manifest.model(model)?;
@@ -159,6 +182,7 @@ impl ChunkState {
         let bucket = manifest.prefill_bucket(len)?;
         let window = manifest.obs_window;
         let (l, h, hkv, dh) = (meta.n_layers, meta.n_heads, meta.n_kv_heads, meta.head_dim);
+        let kv_rows = if dense_kv { bucket } else { 0 };
         let mut bundle = ScoreBundle::empty(len);
         if variant.is_none() {
             // clamp(len - W, 0, bucket - W), exactly as `prefill_base`
@@ -178,11 +202,37 @@ impl ChunkState {
             logit_pos,
             done: 0,
             finalized: false,
-            k: TensorF::zeros(vec![l, hkv, bucket, dh]),
-            v: TensorF::zeros(vec![l, hkv, bucket, dh]),
+            k: TensorF::zeros(vec![l, hkv, kv_rows, dh]),
+            v: TensorF::zeros(vec![l, hkv, kv_rows, dh]),
+            blocks: None,
             logits: None,
             bundle,
         })
+    }
+
+    /// Start a *paged* chunked prefill: score bookkeeping is identical
+    /// to [`ChunkState::new`], but the prompt KV lives in the given
+    /// arena block table (which must cover at least `len` slots) and the
+    /// dense `k`/`v` tensors stay empty — never allocated. Advance with
+    /// [`Backend::prefill_chunk_paged`] /
+    /// [`Backend::prefill_finalize_paged`].
+    pub fn new_paged(
+        manifest: &Manifest,
+        model: &str,
+        variant: Option<&str>,
+        len: usize,
+        logit_pos: usize,
+        blocks: Vec<BlockId>,
+        block_size: usize,
+    ) -> Result<ChunkState> {
+        anyhow::ensure!(
+            blocks.len() * block_size >= len,
+            "paged prefill table of {} blocks x {block_size} cannot hold {len} tokens",
+            blocks.len()
+        );
+        let mut st = Self::with_backing(manifest, model, variant, len, logit_pos, false)?;
+        st.blocks = Some(blocks);
+        Ok(st)
     }
 
     /// Start a chunked prefill *mid-prompt* from a cached prefix: the
@@ -209,19 +259,10 @@ impl ChunkState {
         seed: &PrefixSeed,
     ) -> Result<ChunkState> {
         let mut st = ChunkState::new(manifest, model, variant, len, logit_pos)?;
-        let q = seed.len;
-        anyhow::ensure!(q >= 1, "empty prefix seed");
-        anyhow::ensure!(
-            q <= logit_pos,
-            "prefix seed of {q} tokens covers logit_pos {logit_pos}"
-        );
+        st.check_seed(manifest, seed)?;
         let meta = manifest.model(model)?;
-        let (l, h, hkv, dh) = (meta.n_layers, meta.n_heads, meta.n_kv_heads, meta.head_dim);
-        anyhow::ensure!(
-            seed.k.shape[..] == [l, hkv, q, dh] && seed.v.shape == seed.k.shape,
-            "prefix seed KV shape {:?} does not match model [{l}, {hkv}, {q}, {dh}]",
-            seed.k.shape
-        );
+        let (l, hkv, dh) = (meta.n_layers, meta.n_kv_heads, meta.head_dim);
+        let q = seed.len;
         for li in 0..l {
             for g in 0..hkv {
                 let dst = ((li * hkv + g) * st.bucket) * dh;
@@ -230,11 +271,33 @@ impl ChunkState {
                 st.v.data[dst..dst + q * dh].copy_from_slice(&seed.v.data[src..src + q * dh]);
             }
         }
-        if variant.is_none() {
+        st.apply_seed_scores(manifest, seed)?;
+        Ok(st)
+    }
+
+    /// Validate a prefix seed against this freshly constructed state —
+    /// shared by the dense resume (above) and the paged resume (which
+    /// scatters the seed KV into arena blocks instead of `k`/`v`).
+    pub fn check_seed(&self, manifest: &Manifest, seed: &PrefixSeed) -> Result<()> {
+        let q = seed.len;
+        anyhow::ensure!(q >= 1, "empty prefix seed");
+        anyhow::ensure!(
+            q <= self.logit_pos,
+            "prefix seed of {q} tokens covers logit_pos {}",
+            self.logit_pos
+        );
+        let meta = manifest.model(&self.model)?;
+        let (l, h, hkv, dh) = (meta.n_layers, meta.n_heads, meta.n_kv_heads, meta.head_dim);
+        anyhow::ensure!(
+            seed.k.shape[..] == [l, hkv, q, dh] && seed.v.shape == seed.k.shape,
+            "prefix seed KV shape {:?} does not match model [{l}, {hkv}, {q}, {dh}]",
+            seed.k.shape
+        );
+        if self.variant.is_none() {
             anyhow::ensure!(
-                q <= st.bundle.win_start,
+                q <= self.bundle.win_start,
                 "prefix seed of {q} tokens overlaps the observation window (win_start {})",
-                st.bundle.win_start
+                self.bundle.win_start
             );
             let h2o_seed = seed
                 .h2o
@@ -245,17 +308,34 @@ impl ChunkState {
                 "prefix seed H2O shape {:?} does not match [{l}, {h}, {q}]",
                 h2o_seed.shape
             );
-            let acc = st.bundle.h2o_scores.as_mut().expect("base state has an h2o accumulator");
+        }
+        Ok(())
+    }
+
+    /// Seed the running score accumulators (H2O column sums for base
+    /// passes) and mark rows `0..seed.len` done. KV placement is the
+    /// caller's job; validate with [`ChunkState::check_seed`] first.
+    pub fn apply_seed_scores(&mut self, manifest: &Manifest, seed: &PrefixSeed) -> Result<()> {
+        let q = seed.len;
+        if self.variant.is_none() {
+            let meta = manifest.model(&self.model)?;
+            let (l, h) = (meta.n_layers, meta.n_heads);
+            let h2o_seed = seed
+                .h2o
+                .as_ref()
+                .context("base-pass resume needs the seed's accumulated H2O sums")?;
+            let bucket = self.bucket;
+            let acc = self.bundle.h2o_scores.as_mut().expect("base state has an h2o accumulator");
             for li in 0..l {
                 for hi in 0..h {
-                    let dst = (li * h + hi) * st.bucket;
+                    let dst = (li * h + hi) * bucket;
                     let src = (li * h + hi) * q;
                     acc.data[dst..dst + q].copy_from_slice(&h2o_seed.data[src..src + q]);
                 }
             }
         }
-        st.done = q;
-        Ok(st)
+        self.done = q;
+        Ok(())
     }
 
     /// Tokens still to be prefilled.
@@ -300,8 +380,23 @@ pub struct DecodeSeq<'a> {
 /// Per-sequence result of a batched decode step.
 pub struct DecodeOut {
     pub logits: Vec<f32>,
-    /// `[L, H, cap]` attention over the cache after insertion.
+    /// `[L, H, cap]` attention over the cache after insertion (`cap` =
+    /// the sequence's allocated slots: the dense cap, or
+    /// `blocks.len() * block_size` on the paged path).
     pub probs: TensorF,
+}
+
+/// One sequence's slice of a *paged* batched decode step: a block table
+/// over the shared [`KvArena`] instead of dense cache tensors. `lens`
+/// are the live slots per layer *before* insertion; after
+/// `decode_batch_paged` returns, the new token's KV has been written at
+/// global slot `lens[l]` of each layer (block `lens[l] / bs`).
+pub struct PagedDecodeSeq<'a> {
+    pub token: i32,
+    /// Absolute RoPE position of the new token.
+    pub pos: usize,
+    pub blocks: &'a [BlockId],
+    pub lens: &'a [usize],
 }
 
 pub trait Backend {
@@ -368,6 +463,73 @@ pub trait Backend {
             )?);
         }
         Ok(outs)
+    }
+
+    /// Whether this backend implements the paged-KV contract natively
+    /// ([`Backend::decode_batch_paged`] without the gather/scatter
+    /// fallback, plus [`Backend::prefill_chunk_paged`] /
+    /// [`Backend::prefill_finalize_paged`]). The engine loop falls back
+    /// to dense caches when false.
+    fn supports_paged_kv(&self) -> bool {
+        false
+    }
+
+    /// Advance every sequence by one decode token, reading and writing
+    /// KV through each sequence's arena block table.
+    ///
+    /// Default: gather each block table into dense `[L, Hkv, C, dh]`
+    /// tensors, run [`Backend::decode_batch`], and scatter the updated
+    /// rows (including the inserted token) back into the blocks — a
+    /// correct-but-copying bridge for backends whose decode graphs only
+    /// speak dense caps. Note the gathered `C = blocks * block_size`
+    /// must then be a cap the backend can execute.
+    fn decode_batch_paged(
+        &self,
+        model: &str,
+        arena: &mut KvArena,
+        seqs: &[PagedDecodeSeq<'_>],
+    ) -> Result<Vec<DecodeOut>> {
+        let meta = self.manifest().model(model)?;
+        let dims = KvDims::of(meta);
+        let bs = arena.block_size();
+        let mut dense: Vec<(TensorF, TensorF)> = Vec::with_capacity(seqs.len());
+        for s in seqs {
+            dense.push(arena.gather_dense(&dims, s.blocks, s.blocks.len() * bs)?);
+        }
+        let outs = {
+            let mut dseqs: Vec<DecodeSeq<'_>> = dense
+                .iter_mut()
+                .zip(seqs.iter())
+                .map(|((k, v), s)| DecodeSeq { token: s.token, pos: s.pos, k, v, lens: s.lens })
+                .collect();
+            self.decode_batch(model, &mut dseqs)?
+        };
+        for ((k, v), s) in dense.iter().zip(seqs.iter()) {
+            arena.scatter_dense(&dims, s.blocks, 0, k, v)?;
+        }
+        Ok(outs)
+    }
+
+    /// Advance a *paged* chunked prefill by the next `tokens`: exactly
+    /// [`Backend::prefill_chunk`], but prompt KV is read from and
+    /// appended into `state.blocks` arena blocks instead of `state.k` /
+    /// `state.v`.
+    fn prefill_chunk_paged(
+        &self,
+        arena: &mut KvArena,
+        state: &mut ChunkState,
+        tokens: &[i32],
+    ) -> Result<()> {
+        let _ = (arena, state, tokens);
+        anyhow::bail!("backend {} does not support paged chunked prefill", self.name())
+    }
+
+    /// Seal a fully-fed *paged* chunked prefill (the paged counterpart
+    /// of [`Backend::prefill_finalize`]; lookahead states read the
+    /// accumulated prompt KV from the arena for the suffix pass).
+    fn prefill_finalize_paged(&self, arena: &mut KvArena, state: &mut ChunkState) -> Result<()> {
+        let _ = (arena, state);
+        anyhow::bail!("backend {} does not support paged chunked prefill", self.name())
     }
 
     /// Snapshot of per-graph stats (sorted by total exec time, desc).

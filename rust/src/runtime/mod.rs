@@ -28,6 +28,8 @@ pub mod reference;
 pub mod runtime;
 
 pub use artifacts::{GraphMeta, Manifest, ModelMeta, VariantMeta};
-pub use backend::{Backend, ChunkState, DecodeOut, DecodeSeq, GraphStats, PrefixSeed, Value};
+pub use backend::{
+    Backend, ChunkState, DecodeOut, DecodeSeq, GraphStats, PagedDecodeSeq, PrefixSeed, Value,
+};
 pub use reference::ReferenceBackend;
 pub use runtime::Runtime;

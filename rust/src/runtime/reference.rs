@@ -30,12 +30,18 @@ use std::time::Instant;
 use anyhow::{Context, Result};
 
 use super::artifacts::{Manifest, ModelMeta, VariantMeta};
-use super::backend::{Backend, ChunkState, DecodeOut, DecodeSeq, GraphStats, Value};
+use super::backend::{Backend, ChunkState, DecodeOut, DecodeSeq, GraphStats, PagedDecodeSeq, Value};
+use crate::eviction::ScoreBundle;
+use crate::kvcache::arena::{DenseKvRef, KvAccess, KvArena, KvDims, OwnedKv};
 use crate::util::rng::Rng;
 use crate::util::tensor::{TensorF, TensorI};
 
 const NEG_INF: f32 = -1e9;
 const EPS: f32 = 1e-5;
+
+/// Minimum per-sequence cache elements before batched decode fans out
+/// onto scoped threads (below this, spawn/join costs more than it buys).
+const PAR_MIN_CACHE_ELEMS: usize = 64 * 1024;
 
 // ---------------------------------------------------------------------------
 // Weights
@@ -57,6 +63,10 @@ struct Dims {
 }
 
 impl Dims {
+    fn kv_dims(&self) -> KvDims {
+        KvDims { n_layers: self.n_layers, n_kv_heads: self.n_kv, head_dim: self.dh }
+    }
+
     fn of(m: &ModelMeta) -> Dims {
         Dims {
             d: m.d_model,
@@ -595,30 +605,44 @@ fn prefill_lkv(
 // KV reproduces the monolithic hidden states, scores, and logits to the
 // bit. `tests/chunked.rs` asserts this for every eviction policy.
 
+/// The non-KV mutable pieces of one chunked pass, split out of
+/// [`ChunkState`] so the kernel can borrow them alongside a
+/// [`KvAccess`] view of the prompt KV (dense bucket tensors or arena
+/// blocks — same code either way).
+struct ChunkScratch<'a> {
+    len: usize,
+    bucket: usize,
+    window: usize,
+    logit_pos: usize,
+    done: usize,
+    bundle: &'a mut ScoreBundle,
+    logits: &'a mut Option<Vec<f32>>,
+}
+
 /// Advance one chunked prefill pass by `tokens` (absolute rows
-/// `state.done ..`): run all layers over the chunk with a chunk-offset
+/// `pass.done ..`): run all layers over the chunk with a chunk-offset
 /// causal mask (row at absolute position `a` attends to cache columns
-/// `0..=a`), appending chunk KV into `state.k`/`state.v` and folding the
-/// chunk's attention rows into the running score bundle.
-fn prefill_chunk_ref(w: &ModelWeights, state: &mut ChunkState, tokens: &[i32]) -> Result<()> {
+/// `0..=a`), appending chunk KV through `kv` and folding the chunk's
+/// attention rows into the running score bundle. Generic over the KV
+/// layout: the dense and paged paths execute this exact code, so their
+/// results are bit-identical by construction.
+fn prefill_chunk_core<A: KvAccess>(
+    w: &ModelWeights,
+    kv: &mut A,
+    pass: &mut ChunkScratch<'_>,
+    tokens: &[i32],
+) -> Result<()> {
     let dims = &w.dims;
     let (nh, nkv, dh, group, d) = (dims.n_heads, dims.n_kv, dims.dh, dims.group, dims.d);
     let c = tokens.len();
-    anyhow::ensure!(c > 0, "empty prefill chunk");
-    anyhow::ensure!(!state.finalized, "prefill state already finalized");
     anyhow::ensure!(
-        state.done + c <= state.len,
-        "chunk overruns prompt: {} + {c} > {}",
-        state.done,
-        state.len
+        kv.n_slots() >= pass.len,
+        "prompt KV store of {} slots cannot hold {} tokens",
+        kv.n_slots(),
+        pass.len
     );
-    anyhow::ensure!(
-        state.k.shape[..] == [dims.n_layers, nkv, state.bucket, dh],
-        "chunk state KV shape {:?} does not match model",
-        state.k.shape
-    );
-    let bucket = state.bucket;
-    let done = state.done;
+    let bucket = pass.bucket;
+    let done = pass.done;
     let scale = 1.0 / (dh as f32).sqrt();
     let pos: Vec<f32> = (done..done + c).map(|i| i as f32).collect();
     let mut x = embed(w, tokens)?;
@@ -641,22 +665,25 @@ fn prefill_chunk_ref(w: &ModelWeights, state: &mut ChunkState, tokens: &[i32]) -
         // append chunk KV at rows done..done+c
         for g in 0..nkv {
             for r in 0..c {
-                let off = ((li * nkv + g) * bucket + done + r) * dh;
-                state.k.data[off..off + dh].copy_from_slice(&k_new[(r * nkv + g) * dh..][..dh]);
-                state.v.data[off..off + dh].copy_from_slice(&v_new[(r * nkv + g) * dh..][..dh]);
+                kv.write_row(
+                    li,
+                    g,
+                    done + r,
+                    &k_new[(r * nkv + g) * dh..][..dh],
+                    &v_new[(r * nkv + g) * dh..][..dh],
+                );
             }
         }
         let mut attn = vec![0.0f32; c * dims.q_dim];
         for h in 0..nh {
             let g = h / group;
-            let kbase = (li * nkv + g) * bucket * dh;
             for r in 0..c {
                 let a = done + r; // absolute row
                 let n_vis = a + 1; // causal prefix
                 let qrow = &q[(r * nh + h) * dh..][..dh];
                 let mut maxv = f32::NEG_INFINITY;
                 for j in 0..n_vis {
-                    let krow = &state.k.data[kbase + j * dh..][..dh];
+                    let krow = kv.k_row(li, g, j);
                     let mut s = 0.0f32;
                     for e in 0..dh {
                         s += qrow[e] * krow[e];
@@ -680,13 +707,13 @@ fn prefill_chunk_ref(w: &ModelWeights, state: &mut ChunkState, tokens: &[i32]) -
                     if p == 0.0 {
                         continue;
                     }
-                    let vrow = &state.v.data[kbase + j * dh..][..dh];
+                    let vrow = kv.v_row(li, g, j);
                     for e in 0..dh {
                         arow[e] += p * vrow[e];
                     }
                 }
                 // running H2O column sums (normalized by 1/len at finalize)
-                if let Some(h2o) = state.bundle.h2o_scores.as_mut() {
+                if let Some(h2o) = pass.bundle.h2o_scores.as_mut() {
                     let acc = &mut h2o.data[(li * nh + h) * bucket..][..bucket];
                     for j in 0..n_vis {
                         acc[j] += prow[j];
@@ -694,10 +721,10 @@ fn prefill_chunk_ref(w: &ModelWeights, state: &mut ChunkState, tokens: &[i32]) -
                 }
                 // observation-window rows (columns >= n_vis stay zero,
                 // exactly as the masked monolithic rows)
-                if let Some(win) = state.bundle.window_scores.as_mut() {
-                    let w0 = state.bundle.win_start;
-                    if a >= w0 && a < w0 + state.window {
-                        let off = (((li * nh + h) * state.window) + (a - w0)) * bucket;
+                if let Some(win) = pass.bundle.window_scores.as_mut() {
+                    let w0 = pass.bundle.win_start;
+                    if a >= w0 && a < w0 + pass.window {
+                        let off = (((li * nh + h) * pass.window) + (a - w0)) * bucket;
                         win.data[off..off + n_vis].copy_from_slice(&prow[..n_vis]);
                     }
                 }
@@ -718,10 +745,49 @@ fn prefill_chunk_ref(w: &ModelWeights, state: &mut ChunkState, tokens: &[i32]) -
             *xv += dv;
         }
     }
-    if state.logit_pos >= done && state.logit_pos < done + c {
-        let r = state.logit_pos - done;
-        state.logits = Some(head_logits(w, &x[r * d..(r + 1) * d]));
+    if pass.logit_pos >= done && pass.logit_pos < done + c {
+        let r = pass.logit_pos - done;
+        *pass.logits = Some(head_logits(w, &x[r * d..(r + 1) * d]));
     }
+    Ok(())
+}
+
+/// Shared pre-flight checks for a chunked-pass advance.
+fn check_chunk(state: &ChunkState, tokens: &[i32]) -> Result<()> {
+    anyhow::ensure!(!tokens.is_empty(), "empty prefill chunk");
+    anyhow::ensure!(!state.finalized, "prefill state already finalized");
+    anyhow::ensure!(
+        state.done + tokens.len() <= state.len,
+        "chunk overruns prompt: {} + {} > {}",
+        state.done,
+        tokens.len(),
+        state.len
+    );
+    Ok(())
+}
+
+/// Dense entry point: prompt KV lives in `state.k` / `state.v`.
+fn prefill_chunk_ref(w: &ModelWeights, state: &mut ChunkState, tokens: &[i32]) -> Result<()> {
+    let dims = &w.dims;
+    check_chunk(state, tokens)?;
+    anyhow::ensure!(
+        state.k.shape[..] == [dims.n_layers, dims.n_kv, state.bucket, dims.dh],
+        "chunk state KV shape {:?} does not match model",
+        state.k.shape
+    );
+    let c = tokens.len();
+    let ChunkState { k, v, bundle, logits, len, bucket, window, logit_pos, done, .. } = state;
+    let mut kv = DenseKvRef::new(k, v);
+    let mut pass = ChunkScratch {
+        len: *len,
+        bucket: *bucket,
+        window: *window,
+        logit_pos: *logit_pos,
+        done: *done,
+        bundle,
+        logits,
+    };
+    prefill_chunk_core(w, &mut kv, &mut pass, tokens)?;
     state.done += c;
     Ok(())
 }
@@ -730,22 +796,24 @@ fn prefill_chunk_ref(w: &ModelWeights, state: &mut ChunkState, tokens: &[i32]) -
 /// the `n_lookahead` learned embeddings — with selective LoRA on every
 /// row — against the full accumulated prompt KV plus their own causal
 /// prefix, producing `bundle.lkv_scores` exactly as the monolithic
-/// `prefill_lkv` suffix rows do.
-fn lkv_suffix_pass(w: &ModelWeights, vw: &VariantWeights, state: &mut ChunkState) -> Result<()> {
+/// `prefill_lkv` suffix rows do. Generic over the prompt-KV layout
+/// (dense state tensors or arena blocks), read-only on the KV.
+fn lkv_suffix_core<A: KvAccess>(
+    w: &ModelWeights,
+    vw: &VariantWeights,
+    kv: &A,
+    len: usize,
+    bucket: usize,
+    lkv: &mut TensorF,
+) -> Result<()> {
     let dims = &w.dims;
     let (nh, nkv, dh, group, d) = (dims.n_heads, dims.n_kv, dims.dh, dims.group, dims.d);
+    anyhow::ensure!(kv.n_slots() >= len, "prompt KV store cannot hold {len} rows");
     let n = vw.emb.shape[0];
-    let len = state.len;
-    let bucket = state.bucket;
     let scale = 1.0 / (dh as f32).sqrt();
     let lora = Some((vw, 0usize)); // every row of this pass is a suffix row
     let mut x = vw.emb.data.clone();
     let pos: Vec<f32> = (0..n).map(|r| (len + r) as f32).collect();
-    let lkv = state
-        .bundle
-        .lkv_scores
-        .as_mut()
-        .context("lookahead chunk state is missing its lkv accumulator")?;
     let mut h_norm = Vec::new();
     let mut q = Vec::new();
     let mut k_sfx = Vec::new();
@@ -766,14 +834,13 @@ fn lkv_suffix_pass(w: &ModelWeights, vw: &VariantWeights, state: &mut ChunkState
         let mut attn = vec![0.0f32; n * dims.q_dim];
         for h in 0..nh {
             let g = h / group;
-            let kbase = (li * nkv + g) * bucket * dh;
             let acc = &mut lkv.data[(li * nh + h) * bucket..][..bucket];
             for r in 0..n {
                 let qrow = &q[(r * nh + h) * dh..][..dh];
                 let mut maxv = f32::NEG_INFINITY;
                 // prompt columns 0..len from the accumulated cache …
                 for j in 0..len {
-                    let krow = &state.k.data[kbase + j * dh..][..dh];
+                    let krow = kv.k_row(li, g, j);
                     let mut s = 0.0f32;
                     for e in 0..dh {
                         s += qrow[e] * krow[e];
@@ -814,7 +881,7 @@ fn lkv_suffix_pass(w: &ModelWeights, vw: &VariantWeights, state: &mut ChunkState
                     if p == 0.0 {
                         continue;
                     }
-                    let vrow = &state.v.data[kbase + j * dh..][..dh];
+                    let vrow = kv.v_row(li, g, j);
                     for e in 0..dh {
                         arow[e] += p * vrow[e];
                     }
@@ -858,33 +925,68 @@ fn lkv_suffix_pass(w: &ModelWeights, vw: &VariantWeights, state: &mut ChunkState
     Ok(())
 }
 
+/// Dense entry point of the suffix pass (prompt KV in `state.k`/`state.v`).
+fn lkv_suffix_pass(w: &ModelWeights, vw: &VariantWeights, state: &mut ChunkState) -> Result<()> {
+    let ChunkState { k, v, bundle, len, bucket, .. } = state;
+    let lkv = bundle
+        .lkv_scores
+        .as_mut()
+        .context("lookahead chunk state is missing its lkv accumulator")?;
+    let kv = DenseKvRef::new(k, v);
+    lkv_suffix_core(w, vw, &kv, *len, *bucket, lkv)
+}
+
+/// Base-pass finalize: normalize the running H2O column sums by the
+/// exact denominator of the monolithic graph (shared by the dense and
+/// paged finalize entry points — no KV access involved).
+fn finalize_base_scores(state: &mut ChunkState) -> Result<()> {
+    let denom = 1.0 / state.len.max(1) as f32;
+    let h2o = state
+        .bundle
+        .h2o_scores
+        .as_mut()
+        .context("base chunk state is missing its h2o accumulator")?;
+    for a in h2o.data.iter_mut() {
+        *a *= denom;
+    }
+    Ok(())
+}
+
+/// Shared pre-flight checks for sealing a chunked pass.
+fn check_finalize(state: &ChunkState) -> Result<()> {
+    anyhow::ensure!(!state.finalized, "prefill state already finalized");
+    anyhow::ensure!(
+        state.done == state.len,
+        "prefill_finalize before all chunks fed: {}/{}",
+        state.done,
+        state.len
+    );
+    anyhow::ensure!(state.logits.is_some(), "no chunk covered logit_pos {}", state.logit_pos);
+    Ok(())
+}
+
 // ---------------------------------------------------------------------------
 // Decode
 // ---------------------------------------------------------------------------
 
 /// One decode step with in-place cache insertion (mirrors
-/// `model.decode_step` + `kernels.decode_attn`).
-fn decode_step_inplace(w: &ModelWeights, seq: &mut DecodeSeq<'_>) -> Result<DecodeOut> {
+/// `model.decode_step` + `kernels.decode_attn`). Generic over the KV
+/// layout: dense caches and paged block tables run this exact code, so
+/// their logits/probs/cache bytes are bit-identical by construction.
+fn decode_core<A: KvAccess>(
+    w: &ModelWeights,
+    kv: &mut A,
+    token: i32,
+    pos: usize,
+    lens: &[usize],
+) -> Result<DecodeOut> {
     let dims = &w.dims;
     let (nh, nkv, dh, group, d) = (dims.n_heads, dims.n_kv, dims.dh, dims.group, dims.d);
-    anyhow::ensure!(
-        seq.k.shape.len() == 4 && seq.k.shape == seq.v.shape,
-        "decode caches must be [L, Hkv, C, dh], got {:?}",
-        seq.k.shape
-    );
-    let c = seq.k.shape[2];
-    anyhow::ensure!(
-        seq.k.shape[0] == dims.n_layers && seq.k.shape[1] == nkv && seq.k.shape[3] == dh,
-        "decode cache shape {:?} does not match model [L={}, Hkv={}, ., dh={}]",
-        seq.k.shape,
-        dims.n_layers,
-        nkv,
-        dh
-    );
-    anyhow::ensure!(seq.lens.len() == dims.n_layers, "cache_lens must have one entry per layer");
+    let c = kv.n_slots();
+    anyhow::ensure!(lens.len() == dims.n_layers, "cache_lens must have one entry per layer");
     let scale = 1.0 / (dh as f32).sqrt();
-    let pos_arr = [seq.pos as f32];
-    let mut x = embed(w, &[seq.token])?;
+    let pos_arr = [pos as f32];
+    let mut x = embed(w, &[token])?;
     let mut probs = TensorF::zeros(vec![dims.n_layers, nh, c]);
     let mut h_norm = Vec::new();
     let mut q = Vec::new();
@@ -895,7 +997,7 @@ fn decode_step_inplace(w: &ModelWeights, seq: &mut DecodeSeq<'_>) -> Result<Deco
     let mut up = Vec::new();
     let mut down = Vec::new();
     for (li, layer) in w.layers.iter().enumerate() {
-        let slot = seq.lens[li];
+        let slot = lens[li];
         anyhow::ensure!(slot < c, "cache overflow at layer {li}: {slot} >= cap {c}");
         rmsnorm_into(&x, 1, d, &layer.attn_norm, &mut h_norm);
         linear(&h_norm, 1, d, &layer.wq, None, &mut q);
@@ -905,20 +1007,17 @@ fn decode_step_inplace(w: &ModelWeights, seq: &mut DecodeSeq<'_>) -> Result<Deco
         apply_rope(&mut k_new, 1, nkv, dh, &pos_arr, dims.theta);
         // in-graph cache insertion at slot `lens[l]`
         for g in 0..nkv {
-            let off = ((li * nkv + g) * c + slot) * dh;
-            seq.k.data[off..off + dh].copy_from_slice(&k_new[g * dh..(g + 1) * dh]);
-            seq.v.data[off..off + dh].copy_from_slice(&v_new[g * dh..(g + 1) * dh]);
+            kv.write_row(li, g, slot, &k_new[g * dh..(g + 1) * dh], &v_new[g * dh..(g + 1) * dh]);
         }
         let n_live = slot + 1;
         let mut attn = vec![0.0f32; dims.q_dim];
         for h in 0..nh {
             let g = h / group;
             let qrow = &q[h * dh..(h + 1) * dh];
-            let kbase = (li * nkv + g) * c * dh;
             let prow = &mut probs.data[(li * nh + h) * c..(li * nh + h + 1) * c];
             let mut maxv = f32::NEG_INFINITY;
             for j in 0..n_live {
-                let krow = &seq.k.data[kbase + j * dh..kbase + (j + 1) * dh];
+                let krow = kv.k_row(li, g, j);
                 let mut sc = 0.0f32;
                 for e in 0..dh {
                     sc += qrow[e] * krow[e];
@@ -939,7 +1038,7 @@ fn decode_step_inplace(w: &ModelWeights, seq: &mut DecodeSeq<'_>) -> Result<Deco
             for j in 0..n_live {
                 prow[j] *= norm;
                 let p = prow[j];
-                let vrow = &seq.v.data[kbase + j * dh..kbase + (j + 1) * dh];
+                let vrow = kv.v_row(li, g, j);
                 for e in 0..dh {
                     arow[e] += p * vrow[e];
                 }
@@ -961,6 +1060,27 @@ fn decode_step_inplace(w: &ModelWeights, seq: &mut DecodeSeq<'_>) -> Result<Deco
         }
     }
     Ok(DecodeOut { logits: head_logits(w, &x), probs })
+}
+
+/// Dense entry point: validate the cache tensors, then run the shared
+/// kernel over them.
+fn decode_step_inplace(w: &ModelWeights, seq: &mut DecodeSeq<'_>) -> Result<DecodeOut> {
+    let dims = &w.dims;
+    anyhow::ensure!(
+        seq.k.shape.len() == 4 && seq.k.shape == seq.v.shape,
+        "decode caches must be [L, Hkv, C, dh], got {:?}",
+        seq.k.shape
+    );
+    anyhow::ensure!(
+        seq.k.shape[0] == dims.n_layers && seq.k.shape[1] == dims.n_kv && seq.k.shape[3] == dims.dh,
+        "decode cache shape {:?} does not match model [L={}, Hkv={}, ., dh={}]",
+        seq.k.shape,
+        dims.n_layers,
+        dims.n_kv,
+        dims.dh
+    );
+    let mut kv = DenseKvRef::new(&mut *seq.k, &mut *seq.v);
+    decode_core(w, &mut kv, seq.token, seq.pos, seq.lens)
 }
 
 // ---------------------------------------------------------------------------
@@ -1129,28 +1249,13 @@ impl Backend for ReferenceBackend {
     }
 
     fn prefill_finalize(&self, state: &mut ChunkState) -> Result<()> {
-        anyhow::ensure!(!state.finalized, "prefill state already finalized");
-        anyhow::ensure!(
-            state.done == state.len,
-            "prefill_finalize before all chunks fed: {}/{}",
-            state.done,
-            state.len
-        );
-        anyhow::ensure!(state.logits.is_some(), "no chunk covered logit_pos {}", state.logit_pos);
+        check_finalize(state)?;
         let t0 = Instant::now();
         match state.variant.clone() {
             None => {
                 // H2O salience: column means over all valid query rows,
                 // with the exact denominator of the monolithic graph.
-                let h2o = state
-                    .bundle
-                    .h2o_scores
-                    .as_mut()
-                    .context("base chunk state is missing its h2o accumulator")?;
-                let denom = 1.0 / state.len.max(1) as f32;
-                for a in h2o.data.iter_mut() {
-                    *a *= denom;
-                }
+                finalize_base_scores(state)?;
             }
             Some(variant) => {
                 let w = self.model_weights(&state.model)?;
@@ -1164,12 +1269,149 @@ impl Backend for ReferenceBackend {
         Ok(())
     }
 
+    fn supports_paged_kv(&self) -> bool {
+        true
+    }
+
+    /// Paged chunked prefill: same kernel as [`Backend::prefill_chunk`],
+    /// reading and appending prompt KV through the state's arena block
+    /// table (the blocks are temporarily taken out of the arena, so no
+    /// copies and no aliasing).
+    fn prefill_chunk_paged(
+        &self,
+        arena: &mut KvArena,
+        state: &mut ChunkState,
+        tokens: &[i32],
+    ) -> Result<()> {
+        let w = self.model_weights(&state.model)?;
+        let t0 = Instant::now();
+        check_chunk(state, tokens)?;
+        let table = state.blocks.clone().context("paged prefill_chunk on a dense chunk state")?;
+        let taken = arena.take(&table)?;
+        let mut kv = OwnedKv::new(taken, w.dims.kv_dims(), arena.block_size());
+        let c = tokens.len();
+        let res = {
+            let ChunkState { bundle, logits, len, bucket, window, logit_pos, done, .. } =
+                &mut *state;
+            let mut pass = ChunkScratch {
+                len: *len,
+                bucket: *bucket,
+                window: *window,
+                logit_pos: *logit_pos,
+                done: *done,
+                bundle,
+                logits,
+            };
+            prefill_chunk_core(&w, &mut kv, &mut pass, tokens)
+        };
+        arena.put(&table, kv.into_blocks());
+        res.with_context(|| format!("prefill_chunk for {} (paged reference)", state.model))?;
+        state.done += c;
+        self.note_exec(&format!("{}/prefill_chunk", state.model), 1, t0);
+        Ok(())
+    }
+
+    fn prefill_finalize_paged(&self, arena: &mut KvArena, state: &mut ChunkState) -> Result<()> {
+        check_finalize(state)?;
+        let t0 = Instant::now();
+        match state.variant.clone() {
+            None => {
+                finalize_base_scores(state)?;
+            }
+            Some(variant) => {
+                let w = self.model_weights(&state.model)?;
+                let vw = self.variant_weights(&state.model, &variant)?;
+                let table = state
+                    .blocks
+                    .clone()
+                    .context("paged prefill_finalize on a dense chunk state")?;
+                let taken = arena.take(&table)?;
+                let kv = OwnedKv::new(taken, w.dims.kv_dims(), arena.block_size());
+                let res = (|| -> Result<()> {
+                    let ChunkState { bundle, len, bucket, .. } = &mut *state;
+                    let lkv = bundle
+                        .lkv_scores
+                        .as_mut()
+                        .context("lookahead chunk state is missing its lkv accumulator")?;
+                    lkv_suffix_core(&w, &vw, &kv, *len, *bucket, lkv)
+                })();
+                arena.put(&table, kv.into_blocks());
+                res.with_context(|| format!("lkv suffix pass for {}/{variant}", state.model))?;
+            }
+        }
+        state.finalized = true;
+        self.note_exec(&format!("{}/prefill_finalize", state.model), 1, t0);
+        Ok(())
+    }
+
+    /// In-place paged batched decode: each sequence's blocks are taken
+    /// out of the arena into an owned view (disjointness enforced by the
+    /// take), decoded — fanning out onto scoped threads exactly like the
+    /// dense path — and put back.
+    fn decode_batch_paged(
+        &self,
+        model: &str,
+        arena: &mut KvArena,
+        seqs: &[PagedDecodeSeq<'_>],
+    ) -> Result<Vec<DecodeOut>> {
+        let w = self.model_weights(model)?;
+        let t0 = Instant::now();
+        let dims = w.dims.kv_dims();
+        let bs = arena.block_size();
+        let n = seqs.len();
+        let mut owned: Vec<OwnedKv> = Vec::with_capacity(n);
+        for s in seqs.iter() {
+            match arena.take(s.blocks) {
+                Ok(blocks) => owned.push(OwnedKv::new(blocks, dims, bs)),
+                Err(e) => {
+                    // undo partial takes before surfacing the error
+                    for (prev, kvb) in seqs.iter().zip(owned.drain(..)) {
+                        arena.put(prev.blocks, kvb.into_blocks());
+                    }
+                    return Err(e.context("taking paged decode blocks"));
+                }
+            }
+        }
+        let slot_floats = dims.slot_floats();
+        let parallel = n > 1
+            && owned.iter().map(|o| o.n_slots() * slot_floats).min().unwrap_or(0)
+                >= PAR_MIN_CACHE_ELEMS;
+        let results: Vec<Result<DecodeOut>> = if parallel {
+            let wref: &ModelWeights = &w;
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = owned
+                    .iter_mut()
+                    .zip(seqs.iter())
+                    .map(|(kv, s)| {
+                        let (token, pos, lens) = (s.token, s.pos, s.lens);
+                        scope.spawn(move || decode_core(wref, kv, token, pos, lens))
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().expect("decode worker panicked")).collect()
+            })
+        } else {
+            owned
+                .iter_mut()
+                .zip(seqs.iter())
+                .map(|(kv, s)| decode_core(&w, kv, s.token, s.pos, s.lens))
+                .collect()
+        };
+        for (s, kvb) in seqs.iter().zip(owned.into_iter()) {
+            arena.put(s.blocks, kvb.into_blocks());
+        }
+        let mut outs = Vec::with_capacity(n);
+        for r in results {
+            outs.push(r?);
+        }
+        self.note_exec(&format!("{model}/decode_batch"), n as u64, t0);
+        Ok(outs)
+    }
+
     /// In-place batched decode: no cache serialization round-trips.
     /// Sequences fan out onto scoped threads only when each one carries
     /// enough work to amortize spawn/join (large caches); small models
     /// decode faster sequentially — still in place, still one call.
     fn decode_batch(&self, model: &str, seqs: &mut [DecodeSeq<'_>]) -> Result<Vec<DecodeOut>> {
-        const PAR_MIN_CACHE_ELEMS: usize = 64 * 1024;
         let w = self.model_weights(model)?;
         let t0 = Instant::now();
         let n = seqs.len();
@@ -1399,6 +1641,43 @@ mod tests {
         assert_eq!(outs[0].logits, outs[1].logits);
         assert_eq!(k1.data, k2.data);
         assert!(outs[0].logits.iter().all(|x| x.is_finite()));
+    }
+
+    /// The paged decode step runs the same kernel through a block table:
+    /// logits, probs and cache bytes must equal the dense path exactly.
+    #[test]
+    fn paged_decode_batch_matches_dense_bit_for_bit() {
+        use crate::kvcache::block::BlockId;
+        let b = backend();
+        let cap = 64usize;
+        let mut rng = Rng::new(21);
+        let mut k0 = TensorF::zeros(vec![4, 2, cap, 16]);
+        let mut v0 = TensorF::zeros(vec![4, 2, cap, 16]);
+        for x in k0.data.iter_mut().chain(v0.data.iter_mut()) {
+            *x = rng.normal() as f32 * 0.2;
+        }
+        let lens = vec![5usize; 4];
+        // dense reference result
+        let (mut k1, mut v1) = (k0.clone(), v0.clone());
+        let dense_outs = {
+            let mut seqs =
+                vec![DecodeSeq { token: 70, pos: 5, k: &mut k1, v: &mut v1, lens: &lens }];
+            b.decode_batch("lkv-tiny", &mut seqs).unwrap()
+        };
+        // paged: same bytes behind a 16-slot-block table
+        let dims = KvDims { n_layers: 4, n_kv_heads: 2, head_dim: 16 };
+        let mut arena = KvArena::new(8, 16);
+        let table: Vec<BlockId> = (0..4u32).map(BlockId).collect();
+        arena.bind(&table, dims.slot_floats());
+        arena.scatter_dense(&dims, &table, 0, &k0, &v0).unwrap();
+        let pseqs = vec![PagedDecodeSeq { token: 70, pos: 5, blocks: &table, lens: &lens }];
+        let paged_outs = b.decode_batch_paged("lkv-tiny", &mut arena, &pseqs).unwrap();
+        assert_eq!(paged_outs.len(), 1);
+        assert_eq!(paged_outs[0].logits, dense_outs[0].logits, "paged logits diverged");
+        assert_eq!(paged_outs[0].probs.data, dense_outs[0].probs.data, "paged probs diverged");
+        let (gk, gv) = arena.gather_dense(&dims, &table, cap).unwrap();
+        assert_eq!(gk.data, k1.data, "paged K cache bytes diverged");
+        assert_eq!(gv.data, v1.data, "paged V cache bytes diverged");
     }
 
     #[test]

@@ -13,8 +13,9 @@ use std::path::Path;
 use anyhow::Result;
 
 use super::artifacts::Manifest;
-use super::backend::{Backend, ChunkState, DecodeOut, DecodeSeq, GraphStats, Value};
+use super::backend::{Backend, ChunkState, DecodeOut, DecodeSeq, GraphStats, PagedDecodeSeq, Value};
 use super::reference::ReferenceBackend;
+use crate::kvcache::arena::KvArena;
 
 pub struct Runtime {
     backend: Box<dyn Backend>,
@@ -96,9 +97,42 @@ impl Runtime {
         self.backend.decode_batch(model, seqs)
     }
 
+    /// Advance a batch of sequences by one decode token through their
+    /// arena block tables (see [`Backend::decode_batch_paged`]).
+    pub fn decode_batch_paged(
+        &self,
+        model: &str,
+        arena: &mut KvArena,
+        seqs: &[PagedDecodeSeq<'_>],
+    ) -> Result<Vec<DecodeOut>> {
+        self.backend.decode_batch_paged(model, arena, seqs)
+    }
+
     /// Whether the backend implements the chunked prefill contract.
     pub fn supports_chunked_prefill(&self) -> bool {
         self.backend.supports_chunked_prefill()
+    }
+
+    /// Whether the backend implements the paged-KV contract natively.
+    pub fn supports_paged_kv(&self) -> bool {
+        self.backend.supports_paged_kv()
+    }
+
+    /// Advance a paged chunked prefill pass
+    /// (see [`Backend::prefill_chunk_paged`]).
+    pub fn prefill_chunk_paged(
+        &self,
+        arena: &mut KvArena,
+        state: &mut ChunkState,
+        tokens: &[i32],
+    ) -> Result<()> {
+        self.backend.prefill_chunk_paged(arena, state, tokens)
+    }
+
+    /// Seal a paged chunked prefill pass
+    /// (see [`Backend::prefill_finalize_paged`]).
+    pub fn prefill_finalize_paged(&self, arena: &mut KvArena, state: &mut ChunkState) -> Result<()> {
+        self.backend.prefill_finalize_paged(arena, state)
     }
 
     /// Advance a chunked prefill pass (see [`Backend::prefill_chunk`]).

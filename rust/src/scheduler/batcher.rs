@@ -13,10 +13,23 @@
 //! prefill: admit and fully prefill queued requests while the active set
 //! is below `max_active`.
 //!
+//! KV memory is **paged** by default (`LoopConfig::paged_kv`): prompt
+//! KV, decode caches and prefix-tree nodes are all block tables over one
+//! shared [`crate::kvcache::KvArena`]. Compaction gathers kept rows into
+//! freshly allocated blocks and frees the prompt's blocks immediately;
+//! decode appends write only the tail block in place; a sequence that
+//! fills its blocks mid-decode *grows* by another block (reclaiming
+//! unpinned prefix-tree blocks first) instead of finishing early — only
+//! genuine pool exhaustion ends it, with `finish_reason =
+//! "kv_exhausted"` and a `decode_truncated_total` increment. Admission
+//! charges actual allocated blocks, not dense-bucket estimates. Set
+//! `paged_kv = false` (CLI `--dense-kv`) for the historical dense
+//! caches — bit-identical outputs, more resident memory (see
+//! `tests/paged.rs` and `bench_decode`).
+//!
 //! Decode dispatch is batched by default: all active sequences advance
-//! in **one** backend call per iteration (`Engine::decode_step_batch`),
-//! with caches updated in place instead of being
-//! serialized to and from the backend every token. Set
+//! in **one** backend call per iteration, with caches updated in place
+//! instead of being serialized to and from the backend every token. Set
 //! `LoopConfig::batched_decode = false` for the historical per-sequence
 //! round-trip (kept for A/B benchmarking — see `bench_scheduler`).
 //!
@@ -31,8 +44,11 @@
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::engine::{ChunkedPrefill, Engine, PrefillOutput, PrefixPlan};
-use crate::kvcache::{manager::bytes_per_slot, CacheManager, MatchKind, PrefixPin, SeqCache};
+use crate::engine::{ChunkedPrefill, Engine, FinishReason, PrefillOutput, PrefixPlan};
+use crate::kvcache::{
+    manager::bytes_per_slot, CacheManager, MatchKind, OwnerClass, PagedSeqCache, PrefixPin,
+    SeqCache,
+};
 use crate::metrics::Metrics;
 use crate::model::sampler::Sampler;
 use crate::model::tokenizer::{decode_until_eos, EOS_ID};
@@ -45,6 +61,10 @@ pub struct LoopConfig {
     /// Global KV pool in token slots (admission control).
     pub kv_pool_slots: usize,
     pub kv_block_slots: usize,
+    /// Page all KV (prompt, decode, prefix tree) through the shared
+    /// block arena (vs dense per-sequence cap-sized tensors). Requires
+    /// backend support; falls back to dense (with a warning) otherwise.
+    pub paged_kv: bool,
     /// Advance all active sequences in one backend call per iteration
     /// (vs per-sequence decode round-trips).
     pub batched_decode: bool,
@@ -69,6 +89,7 @@ impl Default for LoopConfig {
             max_active: 4,
             kv_pool_slots: 16 * 1152,
             kv_block_slots: 64,
+            paged_kv: true,
             batched_decode: true,
             prefill_chunk_tokens: 0,
             prefix_cache: false,
@@ -90,9 +111,24 @@ struct PendingPrefill {
     pin: Option<PrefixPin>,
 }
 
+/// An active sequence's KV, in whichever layout the loop runs.
+enum ActiveKv {
+    Dense(SeqCache),
+    Paged(PagedSeqCache),
+}
+
+impl ActiveKv {
+    fn headroom(&self) -> usize {
+        match self {
+            ActiveKv::Dense(c) => c.headroom(),
+            ActiveKv::Paged(c) => c.headroom(),
+        }
+    }
+}
+
 struct ActiveSeq {
     id: u64,
-    cache: SeqCache,
+    cache: ActiveKv,
     sampler: Sampler,
     tokens: Vec<i32>,
     next_token: i32,
@@ -108,6 +144,8 @@ pub struct EngineLoop {
     cfg: LoopConfig,
     queue: Arc<RequestQueue>,
     metrics: Arc<Metrics>,
+    /// Resolved at `run`: `cfg.paged_kv` and the backend supports it.
+    paged: bool,
 }
 
 impl EngineLoop {
@@ -117,7 +155,7 @@ impl EngineLoop {
         queue: Arc<RequestQueue>,
         metrics: Arc<Metrics>,
     ) -> EngineLoop {
-        EngineLoop { engine, cfg, queue, metrics }
+        EngineLoop { engine, cfg, queue, metrics, paged: false }
     }
 
     /// Run until the queue is closed and drained.
@@ -137,6 +175,14 @@ impl EngineLoop {
             log::warn!(
                 "backend {} does not support chunked prefill; \
                  falling back to monolithic prefill for every request",
+                self.engine.rt.backend_name()
+            );
+        }
+        self.paged = self.cfg.paged_kv && self.engine.rt.supports_paged_kv();
+        if self.cfg.paged_kv && !self.paged {
+            log::warn!(
+                "backend {} does not support paged KV; \
+                 falling back to dense per-sequence caches",
                 self.engine.rt.backend_name()
             );
         }
@@ -198,7 +244,12 @@ impl EngineLoop {
             let stepped = match pending.as_mut() {
                 Some(p) => {
                     let t0 = Instant::now();
-                    let stepped = p.job.step(&self.engine);
+                    let stepped = if p.job.is_paged() {
+                        let mut ctx = mgr.paged_ctx(p.req.id);
+                        p.job.step_paged(&self.engine, &mut ctx)
+                    } else {
+                        p.job.step(&self.engine)
+                    };
                     let dt = t0.elapsed().as_secs_f64() * 1e3;
                     p.work_ms += dt;
                     self.metrics.observe("prefill_chunk_ms", dt);
@@ -230,6 +281,9 @@ impl EngineLoop {
                 }
                 Some((Err(e), dt)) => {
                     let p = pending.take().expect("pending job just stepped");
+                    // Owner-scoped cleanup: frees every arena block the
+                    // failed job charged to this request.
+                    mgr.release(p.req.id);
                     if let Some(pin) = p.pin {
                         mgr.prefix_release(pin);
                     }
@@ -247,29 +301,69 @@ impl EngineLoop {
                 continue;
             }
 
-            // One decode step for every active sequence.
-            let mut finished = Vec::new();
+            // One decode step for every active sequence. A sequence out
+            // of slots grows by a block (paged) before it is given up on.
+            let mut finished: Vec<(usize, FinishReason)> = Vec::new();
             // Sequences whose decode errored: the error Reply has already
             // been sent, so they are torn down without a completion Reply.
             let mut failed = Vec::new();
             let mut stepping: Vec<(usize, &mut ActiveSeq)> = Vec::new();
             for (i, seq) in active.iter_mut().enumerate() {
                 let tok = seq.next_token;
-                if tok == EOS_ID || seq.tokens.len() >= seq.max_new || seq.cache.headroom() == 0 {
-                    finished.push(i);
+                let done = if tok == EOS_ID {
+                    Some(FinishReason::Eos)
+                } else if seq.tokens.len() >= seq.max_new {
+                    Some(FinishReason::Length)
+                } else if seq.cache.headroom() == 0 {
+                    match &mut seq.cache {
+                        ActiveKv::Paged(c) => {
+                            if mgr.grow_paged(seq.id, c) {
+                                None
+                            } else {
+                                Some(FinishReason::KvExhausted)
+                            }
+                        }
+                        ActiveKv::Dense(_) => Some(FinishReason::KvExhausted),
+                    }
                 } else {
-                    stepping.push((i, seq));
+                    None
+                };
+                match done {
+                    Some(reason) => {
+                        if reason == FinishReason::KvExhausted {
+                            self.metrics.incr("decode_truncated_total", 1);
+                        }
+                        finished.push((i, reason));
+                    }
+                    None => stepping.push((i, seq)),
                 }
             }
             if !stepping.is_empty() {
-                if self.cfg.batched_decode {
+                if self.cfg.batched_decode || self.paged {
                     // All sequences in one backend call; caches update
-                    // in place (no per-token cache serialization).
+                    // in place (no per-token cache serialization). The
+                    // paged path always dispatches batched — per-block
+                    // writes make the per-sequence round-trip pointless.
                     let tokens: Vec<i32> = stepping.iter().map(|(_, s)| s.next_token).collect();
                     let t0 = Instant::now();
-                    let res = {
-                        let mut caches: Vec<&mut SeqCache> =
-                            stepping.iter_mut().map(|(_, s)| &mut s.cache).collect();
+                    let res = if self.paged {
+                        let mut caches: Vec<&mut PagedSeqCache> = stepping
+                            .iter_mut()
+                            .map(|(_, s)| match &mut s.cache {
+                                ActiveKv::Paged(c) => c,
+                                ActiveKv::Dense(_) => unreachable!("dense cache in paged loop"),
+                            })
+                            .collect();
+                        let (arena, _) = mgr.paged_parts();
+                        self.engine.decode_step_batch_paged(&model, arena, &mut caches, &tokens)
+                    } else {
+                        let mut caches: Vec<&mut SeqCache> = stepping
+                            .iter_mut()
+                            .map(|(_, s)| match &mut s.cache {
+                                ActiveKv::Dense(c) => c,
+                                ActiveKv::Paged(_) => unreachable!("paged cache in dense loop"),
+                            })
+                            .collect();
                         self.engine.decode_step_batch(&model, &mut caches, &tokens)
                     };
                     let dt = t0.elapsed().as_secs_f64() * 1e3;
@@ -296,6 +390,7 @@ impl EngineLoop {
                                     ttft_ms: seq.ttft_ms,
                                     total_ms: seq.t_start.elapsed().as_secs_f64() * 1e3,
                                     kept: seq.kept,
+                                    finish_reason: FinishReason::Error,
                                     error: Some(err.clone()),
                                 });
                                 failed.push(*i);
@@ -305,8 +400,11 @@ impl EngineLoop {
                 } else {
                     for (i, seq) in stepping.iter_mut() {
                         let tok = seq.next_token;
+                        let ActiveKv::Dense(cache) = &mut seq.cache else {
+                            unreachable!("paged cache in dense loop")
+                        };
                         let t0 = Instant::now();
-                        match self.engine.decode_step(&model, &mut seq.cache, tok) {
+                        match self.engine.decode_step(&model, cache, tok) {
                             Ok(step) => {
                                 self.metrics
                                     .observe("decode_step_ms", t0.elapsed().as_secs_f64() * 1e3);
@@ -321,6 +419,7 @@ impl EngineLoop {
                                     ttft_ms: seq.ttft_ms,
                                     total_ms: seq.t_start.elapsed().as_secs_f64() * 1e3,
                                     kept: seq.kept,
+                                    finish_reason: FinishReason::Error,
                                     error: Some(format!("{e:#}")),
                                 });
                                 failed.push(*i);
@@ -330,18 +429,17 @@ impl EngineLoop {
                 }
             }
             drop(stepping);
-            let mut done: Vec<(usize, bool)> = finished
+            let mut done: Vec<(usize, Option<FinishReason>)> = finished
                 .into_iter()
-                .map(|i| (i, false))
-                .chain(failed.into_iter().map(|i| (i, true)))
+                .map(|(i, r)| (i, Some(r)))
+                .chain(failed.into_iter().map(|i| (i, None)))
                 .collect();
-            done.sort_unstable();
-            for (i, errored) in done.into_iter().rev() {
+            done.sort_unstable_by_key(|&(i, _)| i);
+            for (i, reason) in done.into_iter().rev() {
                 let seq = active.swap_remove(i);
-                if errored {
-                    self.abort(seq, &mut mgr);
-                } else {
-                    self.complete(seq, &mut mgr);
+                match reason {
+                    Some(r) => self.complete(seq, r, &mut mgr),
+                    None => self.abort(seq, &mut mgr),
                 }
             }
         }
@@ -352,7 +450,7 @@ impl EngineLoop {
     fn admit(&mut self, req: Request, active: &mut Vec<ActiveSeq>, mgr: &mut CacheManager) {
         let stalling = !active.is_empty();
         let t0 = Instant::now();
-        let res = (|| -> anyhow::Result<(SeqCache, Vec<f32>, usize)> {
+        let res = (|| -> anyhow::Result<(ActiveKv, Vec<f32>, usize)> {
             let pre = self.engine.prefill_for_method(&req.prompt, &req.method)?;
             self.select_compact(&req, pre, mgr)
         })();
@@ -372,7 +470,9 @@ impl EngineLoop {
     /// Start a chunked prefill job for `req` (None on immediate failure,
     /// after sending the error reply). With the prefix cache enabled,
     /// this is where admission matches the longest cached prefix, pins
-    /// its blocks, and hands the engine a resume seed.
+    /// its blocks, and hands the engine a resume seed. Paged jobs charge
+    /// the prompt's blocks to the request up front (reclaiming unpinned
+    /// tree blocks first under pool pressure).
     fn begin_prefill(&mut self, req: Request, mgr: &mut CacheManager) -> Option<PendingPrefill> {
         let t_start = Instant::now();
         let mut pin = None;
@@ -404,12 +504,30 @@ impl EngineLoop {
             None
         };
         let seeded = plan.as_ref().is_some_and(|p| p.seed.is_some());
-        let begun = self.engine.chunked_prefill_begin_with_prefix(
-            &req.prompt,
-            &req.method,
-            self.cfg.prefill_chunk_tokens,
-            plan,
-        );
+        let begun = if self.paged {
+            // Make room for the prompt's in-flight blocks before starting.
+            if !mgr.can_admit(req.prompt.len()) {
+                let freed = mgr.prefix_reclaim_for(req.prompt.len());
+                if freed > 0 {
+                    self.metrics.incr("prefix_reclaimed_blocks", freed as u64);
+                }
+            }
+            mgr.tag(req.id, OwnerClass::Prefill);
+            self.engine.chunked_prefill_begin_paged(
+                &req.prompt,
+                &req.method,
+                self.cfg.prefill_chunk_tokens,
+                plan,
+                &mut mgr.paged_ctx(req.id),
+            )
+        } else {
+            self.engine.chunked_prefill_begin_with_prefix(
+                &req.prompt,
+                &req.method,
+                self.cfg.prefill_chunk_tokens,
+                plan,
+            )
+        };
         let begun = match begun {
             // A seed the engine rejects (cache/engine contract drift)
             // must degrade to a cold prefill, not fail the request.
@@ -418,17 +536,28 @@ impl EngineLoop {
                 if let Some(pin) = pin.take() {
                     mgr.prefix_release(pin);
                 }
-                self.engine.chunked_prefill_begin(
-                    &req.prompt,
-                    &req.method,
-                    self.cfg.prefill_chunk_tokens,
-                )
+                if self.paged {
+                    self.engine.chunked_prefill_begin_paged(
+                        &req.prompt,
+                        &req.method,
+                        self.cfg.prefill_chunk_tokens,
+                        None,
+                        &mut mgr.paged_ctx(req.id),
+                    )
+                } else {
+                    self.engine.chunked_prefill_begin(
+                        &req.prompt,
+                        &req.method,
+                        self.cfg.prefill_chunk_tokens,
+                    )
+                }
             }
             other => other,
         };
         match begun {
             Ok(job) => Some(PendingPrefill { req, job, t_start, work_ms: 0.0, pin }),
             Err(e) => {
+                mgr.release(req.id);
                 if let Some(pin) = pin {
                     mgr.prefix_release(pin);
                 }
@@ -452,7 +581,7 @@ impl EngineLoop {
         let PendingPrefill { req, mut job, t_start, work_ms, pin } = p;
         let records = job.take_prefix_records();
         let prompt = req.prompt.clone();
-        let res = (|| -> anyhow::Result<(SeqCache, Vec<f32>, usize)> {
+        let res = (|| -> anyhow::Result<(ActiveKv, Vec<f32>, usize)> {
             let pre = job.into_output()?;
             self.select_compact(&req, pre, mgr)
         })();
@@ -468,7 +597,12 @@ impl EngineLoop {
                     }
                 }
             }
-            Err(e) => self.reject(req, t_start, e),
+            Err(e) => {
+                // Owner-scoped cleanup (paged prompt blocks the failed
+                // compaction may have left charged to this request).
+                mgr.release(req.id);
+                self.reject(req, t_start, e);
+            }
         }
         if let Some(pin) = pin {
             mgr.prefix_release(pin);
@@ -478,13 +612,17 @@ impl EngineLoop {
 
     /// Shared post-prefill tail: selection with the request's budget,
     /// decode-cap sizing, KV-pool admission check (reclaiming unpinned
-    /// prefix-tree blocks before failing), compaction.
+    /// prefix-tree blocks before failing), compaction. Paged mode
+    /// gathers kept rows into freshly allocated blocks — straight from
+    /// the prompt's arena blocks when the prefill was paged — and frees
+    /// the prompt's blocks immediately; admission charges the blocks
+    /// actually allocated, not the dense cap.
     fn select_compact(
         &self,
         req: &Request,
         pre: PrefillOutput,
         mgr: &mut CacheManager,
-    ) -> anyhow::Result<(SeqCache, Vec<f32>, usize)> {
+    ) -> anyhow::Result<(ActiveKv, Vec<f32>, usize)> {
         let n_layers = self.engine.n_layers(&self.engine.cfg.model);
         let mut evcfg = self.engine.cfg.eviction;
         evcfg.budget = req.budget;
@@ -494,19 +632,67 @@ impl EngineLoop {
             .rt
             .manifest()
             .decode_cap(&self.engine.cfg.model, sel.max_kept() + req.max_new)?;
-        if !mgr.can_admit(cap) {
-            let freed = mgr.prefix_reclaim_for(cap);
-            if freed > 0 {
-                self.metrics.incr("prefix_reclaimed_blocks", freed as u64);
+        if self.paged {
+            let need = PagedSeqCache::blocks_for_selection(&sel.per_layer, mgr.block_size())
+                * mgr.block_size();
+            if !mgr.can_admit(need) {
+                let freed = mgr.prefix_reclaim_for(need);
+                if freed > 0 {
+                    self.metrics.incr("prefix_reclaimed_blocks", freed as u64);
+                }
             }
+            let dims = self.engine.kv_dims(&self.engine.cfg.model)?;
+            let src_blocks = pre.blocks;
+            let res = {
+                let (arena, alloc) = mgr.paged_parts();
+                match &src_blocks {
+                    Some(src) => PagedSeqCache::from_arena_selection(
+                        arena,
+                        alloc,
+                        req.id,
+                        dims,
+                        src,
+                        &sel.per_layer,
+                        req.prompt.len(),
+                        cap,
+                    ),
+                    None => PagedSeqCache::from_dense_selection(
+                        arena,
+                        alloc,
+                        req.id,
+                        dims,
+                        &pre.k,
+                        &pre.v,
+                        &sel.per_layer,
+                        req.prompt.len(),
+                        cap,
+                    ),
+                }
+            };
+            // Free the prompt's blocks immediately, gather or no gather.
+            if let Some(src) = src_blocks {
+                mgr.paged_ctx(req.id).free_blocks(&src);
+            }
+            let cache = res?;
+            mgr.tag(req.id, OwnerClass::Decode);
+            Ok((ActiveKv::Paged(cache), pre.logits, sel.max_kept()))
+        } else {
+            debug_assert!(pre.blocks.is_none(), "paged prefill output in a dense loop");
+            if !mgr.can_admit(cap) {
+                let freed = mgr.prefix_reclaim_for(cap);
+                if freed > 0 {
+                    self.metrics.incr("prefix_reclaimed_blocks", freed as u64);
+                }
+            }
+            anyhow::ensure!(mgr.can_admit(cap), "kv pool exhausted");
+            let cache =
+                SeqCache::from_selection(&pre.k, &pre.v, &sel.per_layer, req.prompt.len(), cap);
+            Ok((ActiveKv::Dense(cache), pre.logits, sel.max_kept()))
         }
-        anyhow::ensure!(mgr.can_admit(cap), "kv pool exhausted");
-        let cache =
-            SeqCache::from_selection(&pre.k, &pre.v, &sel.per_layer, req.prompt.len(), cap);
-        Ok((cache, pre.logits, sel.max_kept()))
     }
 
-    /// Mirror the pool + prefix-tree occupancy into `/metrics` gauges.
+    /// Mirror the pool + arena + prefix-tree occupancy into `/metrics`
+    /// gauges.
     fn publish_cache_stats(&self, mgr: &CacheManager) {
         let s = mgr.stats();
         self.metrics.set_gauge("kv_active_seqs", s.active_seqs as f64);
@@ -514,6 +700,14 @@ impl EngineLoop {
         self.metrics.set_gauge("kv_used_blocks", s.used_blocks as f64);
         self.metrics.set_gauge("kv_free_blocks", s.free_blocks as f64);
         self.metrics.set_gauge("kv_peak_used_blocks", s.peak_used_blocks as f64);
+        // Physical arena occupancy: resident bytes and the per-owner
+        // breakdown (active decode vs prefix tree vs in-flight prefill).
+        self.metrics.set_gauge("kv_arena_blocks_used", s.arena_blocks as f64);
+        self.metrics.set_gauge("kv_arena_bytes", s.arena_bytes as f64);
+        self.metrics.set_gauge("kv_arena_peak_bytes", s.arena_peak_bytes as f64);
+        self.metrics.set_gauge("kv_arena_blocks_decode", s.blocks_decode as f64);
+        self.metrics.set_gauge("kv_arena_blocks_prefix", s.blocks_prefix as f64);
+        self.metrics.set_gauge("kv_arena_blocks_prefill", s.blocks_prefill as f64);
         if let Some(p) = mgr.prefix_stats() {
             self.metrics.set_gauge("prefix_nodes", p.nodes as f64);
             self.metrics.set_gauge("prefix_blocks", p.blocks as f64);
@@ -530,7 +724,7 @@ impl EngineLoop {
     fn activate(
         &mut self,
         req: Request,
-        cache: SeqCache,
+        cache: ActiveKv,
         logits: Vec<f32>,
         kept: usize,
         t_start: Instant,
@@ -555,7 +749,12 @@ impl EngineLoop {
             self.metrics.observe("chunked_ttft_work_ms", work);
             self.metrics.observe("chunked_ttft_interleave_ms", (ttft_ms - work).max(0.0));
         }
-        mgr.reserve(req.id, cache.cap); // KV-pool accounting
+        if let ActiveKv::Dense(c) = &cache {
+            // Dense caches are owned host tensors: charge the pool with
+            // an accounting-only reservation of the full cap. (Paged
+            // caches already charged their actual blocks at gather.)
+            mgr.reserve(req.id, c.cap);
+        }
         active.push(ActiveSeq {
             id: req.id,
             cache,
@@ -580,19 +779,20 @@ impl EngineLoop {
             ttft_ms: 0.0,
             total_ms: t_start.elapsed().as_secs_f64() * 1e3,
             kept: 0,
+            finish_reason: FinishReason::Error,
             error: Some(format!("{e:#}")),
         });
     }
 
     /// Tear down a sequence whose error Reply was already sent: release
-    /// its KV reservation without emitting a completion Reply or
-    /// counting it as a completion.
+    /// its KV without emitting a completion Reply or counting it as a
+    /// completion.
     fn abort(&mut self, seq: ActiveSeq, mgr: &mut CacheManager) {
         mgr.release(seq.id);
         self.metrics.incr("decode_errors", 1);
     }
 
-    fn complete(&mut self, seq: ActiveSeq, mgr: &mut CacheManager) {
+    fn complete(&mut self, seq: ActiveSeq, reason: FinishReason, mgr: &mut CacheManager) {
         mgr.release(seq.id);
         self.publish_cache_stats(mgr);
         self.metrics.incr("completions", 1);
@@ -604,13 +804,14 @@ impl EngineLoop {
             ttft_ms: seq.ttft_ms,
             total_ms: seq.t_start.elapsed().as_secs_f64() * 1e3,
             kept: seq.kept,
+            finish_reason: reason,
             error: None,
         });
     }
 
     fn drain(&mut self, active: &mut Vec<ActiveSeq>, mgr: &mut CacheManager) {
         for seq in active.drain(..) {
-            self.complete(seq, mgr);
+            self.complete(seq, FinishReason::Stopped, mgr);
         }
     }
 }

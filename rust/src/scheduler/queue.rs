@@ -5,6 +5,7 @@ use std::collections::VecDeque;
 use std::sync::mpsc::Sender;
 use std::sync::{Condvar, Mutex};
 
+use crate::engine::FinishReason;
 use crate::eviction::Method;
 
 /// One generation request, as submitted by a front-end.
@@ -28,6 +29,9 @@ pub struct Reply {
     pub ttft_ms: f64,
     pub total_ms: f64,
     pub kept: usize,
+    /// Why generation stopped (`eos` / `length` / `kv_exhausted` / ...);
+    /// makes cap- and pool-driven truncation observable.
+    pub finish_reason: FinishReason,
     pub error: Option<String>,
 }
 

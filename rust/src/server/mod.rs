@@ -4,6 +4,9 @@
 //! Endpoints:
 //!   POST /generate  {"prompt": str, "method": str, "budget": n,
 //!                    "max_new": n, "temperature": f}  → generation JSON
+//!                    (includes "finish_reason": eos | length |
+//!                    kv_exhausted | stopped — cap/pool-driven
+//!                    truncation is observable, not silent)
 //!   GET  /metrics   → counters + gauges + latency histograms, including
 //!                     the KV-pool `CacheStats` gauges (`kv_*`) and the
 //!                     prefix-cache hit/miss/reclaim counters + occupancy
@@ -152,6 +155,7 @@ fn generate(req: &HttpRequest, queue: &RequestQueue, next_id: &AtomicU64) -> (u1
                         ("ttft_ms", reply.ttft_ms.into()),
                         ("total_ms", reply.total_ms.into()),
                         ("kept", reply.kept.into()),
+                        ("finish_reason", reply.finish_reason.as_str().into()),
                     ]),
                 )
             }

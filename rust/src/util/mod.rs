@@ -3,7 +3,7 @@
 //! The offline vendor tree only carries the `xla` crate's dependency
 //! closure, so the roles usually played by serde/clap/criterion/tokio/
 //! proptest/rand are covered by the small, dependency-free modules here
-//! (see DESIGN.md §1).
+//! (exercised by the README "Tier-1 verify" workflow).
 
 pub mod bench;
 pub mod cli;

@@ -1,7 +1,8 @@
 //! Synthetic evaluation workloads — the Rust mirror of
 //! `python/compile/data.py` (same task families and format contract,
 //! disjoint seeds), standing in for LongBench / RULER / QASPER /
-//! LongProc / MT-Bench as documented in DESIGN.md §1.
+//! LongProc / MT-Bench (task families documented alongside the
+//! generators in `python/compile/data.py`).
 //!
 //! Each [`Sample`] carries its prompt, the reference answer(s) and enough
 //! metadata (needle positions are implied by the format) for the scorers

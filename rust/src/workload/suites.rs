@@ -1,5 +1,6 @@
 //! Benchmark suites: named collections of samples sized to a token
-//! budget, mirroring the paper's evaluation sets (DESIGN.md §1).
+//! budget, mirroring the paper's evaluation sets (task families:
+//! see [`crate::workload`] module docs).
 //!
 //! Context sizes are specified in *tokens* (≈ characters + BOS for the
 //! byte tokenizer); generators are given a character budget slightly

@@ -392,6 +392,13 @@ fn metrics_http_roundtrip_exposes_cache_stats() {
         let (status, resp) =
             lookaheadkv::server::http::http_post(&addr, "/generate", &body).expect("post");
         assert_eq!(status, 200, "request {i}: {resp}");
+        // finish_reason is part of the public response contract
+        let r = json::parse(&resp).expect("generate json");
+        let reason = r.req("finish_reason").as_str().expect("finish_reason").to_string();
+        assert!(
+            ["eos", "length", "kv_exhausted"].contains(&reason.as_str()),
+            "request {i}: unexpected finish_reason {reason:?}"
+        );
     }
     let (status, resp) = lookaheadkv::server::http::http_get(&addr, "/metrics").expect("get");
     assert_eq!(status, 200);
@@ -405,6 +412,15 @@ fn metrics_http_roundtrip_exposes_cache_stats() {
     assert!(gauges.req("kv_free_blocks").as_f64().is_some());
     assert!(gauges.req("kv_active_seqs").as_f64().is_some());
     assert!(gauges.req("prefix_blocks").as_f64().unwrap_or(0.0) > 0.0);
+    // arena occupancy: bytes + per-owner block breakdown; with requests
+    // drained, only the prefix tree still holds resident KV
+    assert!(gauges.req("kv_arena_bytes").as_f64().unwrap_or(0.0) > 0.0);
+    assert!(
+        gauges.req("kv_arena_blocks_prefix").as_f64().unwrap_or(0.0) > 0.0,
+        "tree blocks must show up in the per-owner breakdown"
+    );
+    assert!(gauges.req("kv_arena_blocks_decode").as_f64().is_some());
+    assert!(gauges.req("kv_arena_blocks_prefill").as_f64().is_some());
     assert!(j.req("latency").get("ttft_ms").is_some());
 
     queue.close();
