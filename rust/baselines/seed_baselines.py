@@ -89,13 +89,30 @@ def bench_eviction():
     return rows
 
 
+# Streaming tiled kernel suite (PR 5, the default path): real rows only,
+# causal column pairs (half of naive's dense T x T), blocked packed GEMM
+# and 4-thread head/row-tile fan-out instead of scalar zero-skip loops.
+STREAM_MM_SPEED = 4.0  # blocked GEMM + row-tile workers vs scalar k-inner
+STREAM_ATTN_SPEED = 4.0  # unrolled dots + per-head workers (LKV_THREADS=4)
+
+
+def stream_prefill(length, mm=TINY_MM, attn=TINY_ATTN, n_chunks=1):
+    """Streaming prefill over `length` real rows (monolithic or chunked:
+    same float work, chunking only adds per-chunk dispatch overhead)."""
+    return (
+        ms(mm * length / STREAM_MM_SPEED + attn * length * length / 2 / STREAM_ATTN_SPEED)
+        + OVH * n_chunks
+    )
+
+
 def bench_prefill():
     rows = []
     for ctx in (128, 256, 512, 1024):
         length = int(ctx * 0.92)  # prompts leave bucket slack (ctx_chars_for)
-        base = mono_prefill(ctx)
-        lkv = mono_prefill(ctx) * ((ctx + 8) / ctx) ** 2  # T = S + n_lookahead
-        draft_pre = ms(DRAFT_MM * ctx + DRAFT_ATTN * ctx * ctx) + OVH
+        base = stream_prefill(length)
+        # lookahead: suffix rows re-score the whole prompt (+8 rows)
+        lkv = stream_prefill(length) + ms(8 * length * TINY_ATTN / STREAM_ATTN_SPEED) + OVH
+        draft_pre = stream_prefill(length, mm=DRAFT_MM, attn=DRAFT_ATTN)
         draft_loop_tiny = 8 * decode_step(64)
         draft_loop_draft = 8 * decode_step(160, mm=DRAFT_MM, attn_cols=DRAFT_ATTN)
         ttft = {
@@ -108,14 +125,33 @@ def bench_prefill():
         }
         for m, v in ttft.items():
             rows.append(row(f"ttft/{m}/ctx{ctx}", v))
+    # long-prompt rows (2k/4k): streaming kernels only (SnapKV + lkv)
+    for ctx in (2048, 4096):
+        length = int(ctx * 0.92)
+        base = stream_prefill(length)
+        lkv = stream_prefill(length) + ms(8 * length * TINY_ATTN / STREAM_ATTN_SPEED) + OVH
+        rows.append(row(f"ttft/SnapKV/ctx{ctx}", base + select_ms(length, "SnapKV")))
+        rows.append(row(f"ttft/LookaheadKV/ctx{ctx}", lkv + select_ms(length, "LookaheadKV")))
     length = int(512 * 0.92)
-    for m, extra in (("SnapKV", 0.0), ("LookaheadKV", ms(8 * length * TINY_ATTN) + 2.0)):
-        rows.append(row(f"prefill/{m}/ctx512/monolithic", mono_prefill(512) + extra))
+    for m, extra in (
+        ("SnapKV", 0.0),
+        ("LookaheadKV", ms(8 * length * TINY_ATTN / STREAM_ATTN_SPEED) + 2.0),
+    ):
+        rows.append(row(f"prefill/{m}/ctx512/monolithic", stream_prefill(length) + extra))
         for chunk in (64, 128, 256):
             n_chunks = -(-length // chunk)
             rows.append(
-                row(f"prefill/{m}/ctx512/chunk{chunk}", chunked_prefill(length, n_chunks) + extra)
+                row(
+                    f"prefill/{m}/ctx512/chunk{chunk}",
+                    stream_prefill(length, n_chunks=n_chunks + 1) + extra,
+                )
             )
+    # kernel A/B at 2k: streaming vs the frozen naive oracle (dense
+    # [H, T, T] probs + scalar matmuls over the whole padded bucket)
+    length = int(2048 * 0.92)
+    sel = select_ms(length, "SnapKV")
+    rows.append(row("prefill/kernels/ctx2048/streaming", stream_prefill(length) + sel))
+    rows.append(row("prefill/kernels/ctx2048/naive", mono_prefill(2048) + sel))
     return rows
 
 

@@ -227,7 +227,7 @@ fn run_paged(
 /// changes).
 fn mem_row(name: &str, mb: f64) -> BenchResult {
     println!("bench {name:<48} {mb:>8.3} MB (recorded as pseudo-ms)");
-    BenchResult { name: name.to_string(), iters: 1, ms: summarize(&[mb]) }
+    BenchResult { name: name.to_string(), iters: 1, ms: summarize(&[mb]), extras: Vec::new() }
 }
 
 fn report_speedup(results: &[BenchResult], batch: usize) {

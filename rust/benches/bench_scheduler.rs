@@ -101,6 +101,7 @@ fn main() {
                 name: format!("stall/mixed/{tag}"),
                 iters: stall.n,
                 ms: stall,
+                extras: Vec::new(),
             });
         }
     }

@@ -72,9 +72,10 @@ fn main() -> anyhow::Result<()> {
                 let prompt = s.prompt();
                 let addr = addr.clone();
                 let results = Arc::clone(&results);
-                let done = wg.done_handle();
+                let guard = wg.guard();
                 let method = method.to_string();
-                pool.execute(move || {
+                let submitted = pool.execute(move || {
+                    let _g = guard;
                     let mut o = json::Json::obj();
                     o.set("prompt", prompt.as_str().into());
                     o.set("method", method.as_str().into());
@@ -87,8 +88,8 @@ fn main() -> anyhow::Result<()> {
                             results.lock().unwrap().push((ttft, total));
                         }
                     }
-                    done();
                 });
+                submitted.expect("loadgen pool alive");
             }
         }
         wg.wait();

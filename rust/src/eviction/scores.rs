@@ -1,8 +1,175 @@
 //! Score aggregation helpers: collapse `[L, H, ...]` score tensors into a
 //! per-layer `[len]` ranking vector (head-mean reduction, the paper's GQA
 //! compatibility choice), with optional suffix-row windows.
+//!
+//! This module also defines the **online** side of score harvesting: the
+//! [`ScoreSink`] trait consumed by the reference backend's streaming
+//! attention kernels. Instead of materializing `[H, T, T]` probability
+//! tensors and reducing them afterwards (the naive `reducer(layer,
+//! probs)` contract), the kernel hands each query row's normalized
+//! attention probabilities to a per-(layer, head) sink *as it is
+//! computed*, so H2O column sums, SnapKV/TOVA observation-window rows and
+//! lkv suffix scores all accumulate inside the attention loop with O(T)
+//! scratch. Sinks are built per layer by splitting the bundle's
+//! accumulator tensors into disjoint per-head `&mut` slices
+//! ([`chunk_head_sinks`] / [`lkv_head_sinks`]), which is what lets the
+//! kernel fan heads out across scoped threads with no locking: one head
+//! == one worker == one sink, and rows arrive in ascending query order
+//! within a head, preserving the exact accumulation order of the
+//! monolithic graphs.
 
+use super::ScoreBundle;
 use crate::util::tensor::TensorF;
+
+/// Consumes one query row's normalized attention probabilities, online.
+///
+/// `qi` is the absolute query position; `probs` covers the row's visible
+/// columns `0..n_vis` (normalized — each row is a probability
+/// distribution over its visible prefix). The kernel calls `row` in
+/// ascending `qi` order within a (layer, head), which sinks may rely on
+/// (sequential accumulation keeps chunked and monolithic prefill
+/// bit-identical).
+pub trait ScoreSink {
+    fn row(&mut self, qi: usize, probs: &[f32]);
+}
+
+/// Base-pass sink for one (layer, head): running H2O column sums plus
+/// observation-window row capture — exactly the quantities the
+/// `prefill_base` graph exports, accumulated without ever materializing
+/// the probability matrix. Either part may be absent (lookahead prompt
+/// passes accumulate nothing).
+pub struct ChunkHeadSink<'a> {
+    /// `[bucket]` running column sums (normalized by `1/len` at finalize).
+    h2o: Option<&'a mut [f32]>,
+    /// `[window * bucket]` captured rows of the observation window.
+    win: Option<&'a mut [f32]>,
+    win_start: usize,
+    window: usize,
+    bucket: usize,
+}
+
+impl ScoreSink for ChunkHeadSink<'_> {
+    #[inline]
+    fn row(&mut self, qi: usize, probs: &[f32]) {
+        if let Some(acc) = self.h2o.as_deref_mut() {
+            for (a, &p) in acc.iter_mut().zip(probs.iter()) {
+                *a += p;
+            }
+        }
+        if let Some(win) = self.win.as_deref_mut() {
+            if qi >= self.win_start && qi < self.win_start + self.window {
+                let off = (qi - self.win_start) * self.bucket;
+                win[off..off + probs.len()].copy_from_slice(probs);
+            }
+        }
+    }
+}
+
+/// Split `bundle`'s accumulators for layer `li` into one sink per head.
+/// The returned sinks borrow disjoint slices, so they can be moved onto
+/// worker threads together. `window`/`bucket` are the shapes the bundle
+/// tensors were allocated with (`[L, H, window, bucket]` / `[L, H,
+/// bucket]`).
+pub fn chunk_head_sinks<'a>(
+    bundle: &'a mut ScoreBundle,
+    li: usize,
+    nh: usize,
+    window: usize,
+    bucket: usize,
+) -> Vec<ChunkHeadSink<'a>> {
+    let win_start = bundle.win_start;
+    let mut h2o: Vec<Option<&'a mut [f32]>> = match bundle.h2o_scores.as_mut() {
+        Some(t) => t.data[li * nh * bucket..(li + 1) * nh * bucket]
+            .chunks_mut(bucket)
+            .map(Some)
+            .collect(),
+        None => (0..nh).map(|_| None).collect(),
+    };
+    let win_span = window * bucket;
+    let mut win: Vec<Option<&'a mut [f32]>> = match bundle.window_scores.as_mut() {
+        Some(t) if win_span > 0 => t.data[li * nh * win_span..(li + 1) * nh * win_span]
+            .chunks_mut(win_span)
+            .map(Some)
+            .collect(),
+        _ => (0..nh).map(|_| None).collect(),
+    };
+    (0..nh)
+        .map(|h| ChunkHeadSink {
+            h2o: h2o[h].take(),
+            win: win[h].take(),
+            win_start,
+            window,
+            bucket,
+        })
+        .collect()
+}
+
+/// Lookahead-suffix sink for one (layer, head): sums the suffix rows'
+/// attention over prompt columns (mean taken by the kernel after the last
+/// row, matching the monolithic `prefill_lkv` reducer order).
+pub struct LkvHeadSink<'a> {
+    acc: &'a mut [f32],
+}
+
+impl LkvHeadSink<'_> {
+    /// Normalize the accumulated sums into the mean over `n` suffix rows.
+    pub fn finish(&mut self, n: usize) {
+        let denom = 1.0 / n.max(1) as f32;
+        for a in self.acc.iter_mut() {
+            *a *= denom;
+        }
+    }
+}
+
+impl ScoreSink for LkvHeadSink<'_> {
+    #[inline]
+    fn row(&mut self, _qi: usize, probs: &[f32]) {
+        for (a, &p) in self.acc.iter_mut().zip(probs.iter()) {
+            *a += p;
+        }
+    }
+}
+
+/// Split an `[L, H, bucket]` lkv score tensor into per-head sinks for
+/// layer `li`.
+pub fn lkv_head_sinks<'a>(
+    lkv: &'a mut TensorF,
+    li: usize,
+    nh: usize,
+    bucket: usize,
+) -> Vec<LkvHeadSink<'a>> {
+    lkv.data[li * nh * bucket..(li + 1) * nh * bucket]
+        .chunks_mut(bucket)
+        .map(|acc| LkvHeadSink { acc })
+        .collect()
+}
+
+/// Decode sink for one (layer, head): exports the normalized row into
+/// the `[L, H, C]` probs tensor (the decode graph's GT-tracking output).
+pub struct ProbsHeadSink<'a> {
+    out: &'a mut [f32],
+}
+
+impl ScoreSink for ProbsHeadSink<'_> {
+    #[inline]
+    fn row(&mut self, _qi: usize, probs: &[f32]) {
+        self.out[..probs.len()].copy_from_slice(probs);
+    }
+}
+
+/// Split an `[L, H, C]` decode probs tensor into per-head sinks for
+/// layer `li`.
+pub fn probs_head_sinks<'a>(
+    probs: &'a mut TensorF,
+    li: usize,
+    nh: usize,
+    cap: usize,
+) -> Vec<ProbsHeadSink<'a>> {
+    probs.data[li * nh * cap..(li + 1) * nh * cap]
+        .chunks_mut(cap)
+        .map(|out| ProbsHeadSink { out })
+        .collect()
+}
 
 /// Mean over heads of `[L, H, S]` scores, truncated to `len`: returns
 /// per-layer vectors of length `len`.
@@ -124,5 +291,55 @@ mod tests {
         let t = TensorF::new(vec![1, 1, 2, 2], vec![1.0, 2.0, 7.0, 8.0]);
         let m = window_row_per_layer(&t, 2, 1);
         assert_eq!(m[0], vec![7.0, 8.0]);
+    }
+
+    /// Feeding rows through per-head chunk sinks reproduces the naive
+    /// reduction: column sums into h2o, row capture into the window.
+    #[test]
+    fn chunk_sinks_accumulate_like_the_naive_reducer() {
+        let (l, nh, window, bucket) = (2usize, 2usize, 2usize, 4usize);
+        let mut bundle = ScoreBundle::empty(3);
+        bundle.win_start = 1;
+        bundle.window_scores = Some(TensorF::zeros(vec![l, nh, window, bucket]));
+        bundle.h2o_scores = Some(TensorF::zeros(vec![l, nh, bucket]));
+        for li in 0..l {
+            let mut sinks = chunk_head_sinks(&mut bundle, li, nh, window, bucket);
+            assert_eq!(sinks.len(), nh);
+            for (h, sink) in sinks.iter_mut().enumerate() {
+                // three rows of a causal pass: row qi has qi+1 visible cols
+                for qi in 0..3usize {
+                    let row: Vec<f32> = (0..=qi).map(|j| (h + j + 1) as f32).collect();
+                    sink.row(qi, &row);
+                }
+            }
+        }
+        let h2o = bundle.h2o_scores.as_ref().unwrap();
+        // column 0 summed over rows 0..3 for head 0: 1 + 1 + 1
+        assert_eq!(h2o.index(&[0, 0]), &[3.0, 4.0, 3.0, 0.0]);
+        assert_eq!(h2o.index(&[1, 1]), &[6.0, 6.0, 4.0, 0.0]);
+        let win = bundle.window_scores.as_ref().unwrap();
+        // window rows capture qi = 1 and qi = 2 (win_start = 1)
+        assert_eq!(win.index(&[0, 0, 0]), &[1.0, 2.0, 0.0, 0.0]);
+        assert_eq!(win.index(&[0, 0, 1]), &[1.0, 2.0, 3.0, 0.0]);
+    }
+
+    #[test]
+    fn lkv_and_probs_sinks_fill_their_head_slices() {
+        let (nh, bucket) = (2usize, 3usize);
+        let mut lkv = TensorF::zeros(vec![1, nh, bucket]);
+        {
+            let mut sinks = lkv_head_sinks(&mut lkv, 0, nh, bucket);
+            sinks[1].row(0, &[1.0, 3.0]);
+            sinks[1].row(1, &[1.0, 1.0]);
+            sinks[1].finish(2);
+        }
+        assert_eq!(lkv.index(&[0, 0]), &[0.0, 0.0, 0.0]);
+        assert_eq!(lkv.index(&[0, 1]), &[1.0, 2.0, 0.0]);
+        let mut probs = TensorF::zeros(vec![1, nh, bucket]);
+        {
+            let mut sinks = probs_head_sinks(&mut probs, 0, nh, bucket);
+            sinks[0].row(5, &[0.25, 0.75]);
+        }
+        assert_eq!(probs.index(&[0, 0]), &[0.25, 0.75, 0.0]);
     }
 }

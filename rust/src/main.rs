@@ -31,7 +31,9 @@ fn main() {
         "per-seq-decode",
         "prefix-cache",
         "dense-kv",
+        "ref-naive",
     ]);
+    apply_kernel_flags(&args);
     let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
     let result = match cmd {
         "serve" => cmd_serve(&args),
@@ -60,7 +62,8 @@ fn print_help() {
          \x20 serve     --addr 127.0.0.1:8080 --model lkv-tiny --max-active 4 \\\n\
          \x20           [--prefill-chunk 256] [--per-seq-decode] \\\n\
          \x20           [--kv-pool SLOTS] [--kv-block SLOTS] [--dense-kv] \\\n\
-         \x20           [--prefix-cache] [--prefix-cache-slots N]\n\
+         \x20           [--prefix-cache] [--prefix-cache-slots N] \\\n\
+         \x20           [--threads N] [--ref-naive]\n\
          \x20 generate  --prompt <text> --method lookaheadkv --budget 64 --max-new 32\n\
          \x20 eval      --suite ruler|longbench|qasper|longproc|mtbench --methods snapkv,lookaheadkv \\\n\
          \x20           --budgets 16,32 --ctx 256 --n 8\n\
@@ -71,12 +74,30 @@ fn print_help() {
          \x20        lookaheadkv[:variant] lkv+suffix[:variant]\n\
          \n\
          backend: LKV_BACKEND=reference|pjrt|auto (default auto: pjrt when\n\
-         \x20        compiled in and artifacts exist, else pure-Rust reference)"
+         \x20        compiled in and artifacts exist, else pure-Rust reference)\n\
+         kernels: --threads N (LKV_THREADS) caps kernel worker threads;\n\
+         \x20        --ref-naive (LKV_REF_NAIVE=1) runs the frozen naive oracle\n\
+         \x20        instead of the streaming tiled suite; LKV_TILE_K tunes the\n\
+         \x20        attention column tile (never changes results)"
     );
 }
 
 fn artifacts(args: &Args) -> PathBuf {
     args.get("artifacts").map(PathBuf::from).unwrap_or_else(default_artifacts_dir)
+}
+
+/// Reference-backend kernel knobs, applied before any engine exists:
+/// `--ref-naive` selects the frozen naive kernel suite (the streaming
+/// A/B oracle), `--threads N` caps kernel worker threads. Both map onto
+/// the env vars the backend reads at construction (`LKV_REF_NAIVE`,
+/// `LKV_THREADS`) so the engine thread inherits them.
+fn apply_kernel_flags(args: &Args) {
+    if args.has("ref-naive") {
+        std::env::set_var("LKV_REF_NAIVE", "1");
+    }
+    if let Some(t) = args.get("threads") {
+        std::env::set_var("LKV_THREADS", t);
+    }
 }
 
 fn engine_from_args(args: &Args) -> Result<Engine> {

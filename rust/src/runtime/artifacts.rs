@@ -290,11 +290,14 @@ impl Manifest {
     }
 
     /// The built-in manifest used by the reference backend when no AOT
-    /// artifacts exist: the same models, shape buckets and graph keys
+    /// artifacts exist: the same models and graph keys
     /// `python/compile/aot.py` lowers (`config.py` constants), with empty
-    /// file entries since every computation is done in-process.
+    /// file entries since every computation is done in-process. The
+    /// prefill buckets extend `config.py`'s (128..1024) with 2048/4096
+    /// long-context buckets — the streaming reference kernels serve them
+    /// directly; AOT-lowered manifests list only what was compiled.
     pub fn synthetic() -> Manifest {
-        let buckets = vec![128usize, 256, 512, 1024];
+        let buckets = vec![128usize, 256, 512, 1024, 2048, 4096];
         let caps = vec![64usize, 128, 256, 640, 1152];
         let draft_caps: Vec<usize> = buckets.iter().map(|s| s + 32).collect();
         let mut m = Manifest {

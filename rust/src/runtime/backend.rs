@@ -36,6 +36,22 @@ pub struct GraphStats {
     pub transfer_ms: f64,
 }
 
+/// Kernel-level execution gauges of a backend (reference backend: the
+/// streaming kernel suite's thread fan-out and scratch high-water mark).
+/// Exported as `/metrics` gauges by the engine loop and as the
+/// `prefill_scratch_bytes` bench column.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct KernelStats {
+    /// Worker threads the kernels may fan out on (1 = sequential).
+    pub threads: usize,
+    /// Peak per-call scratch estimate (bytes) since the last
+    /// `reset_stats` — O(T) per layer on the streaming path vs the naive
+    /// path's dense `[H, T, T]` probability tensor.
+    pub peak_scratch_bytes: usize,
+    /// Whether the naive (A/B oracle) kernels are active.
+    pub naive: bool,
+}
+
 /// A host tensor argument/result of a graph execution.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Value {
@@ -536,6 +552,12 @@ pub trait Backend {
     fn stats(&self) -> Vec<(String, GraphStats)>;
 
     fn reset_stats(&self);
+
+    /// Kernel-level gauges (thread fan-out, peak scratch bytes). `None`
+    /// for backends that don't track them (PJRT owns its own scratch).
+    fn kernel_stats(&self) -> Option<KernelStats> {
+        None
+    }
 }
 
 /// Decode one sequence through the `execute` contract: serialize the

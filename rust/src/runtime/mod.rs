@@ -29,7 +29,8 @@ pub mod runtime;
 
 pub use artifacts::{GraphMeta, Manifest, ModelMeta, VariantMeta};
 pub use backend::{
-    Backend, ChunkState, DecodeOut, DecodeSeq, GraphStats, PagedDecodeSeq, PrefixSeed, Value,
+    Backend, ChunkState, DecodeOut, DecodeSeq, GraphStats, KernelStats, PagedDecodeSeq,
+    PrefixSeed, Value,
 };
-pub use reference::ReferenceBackend;
+pub use reference::{KernelConfig, ReferenceBackend};
 pub use runtime::Runtime;

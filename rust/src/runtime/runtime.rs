@@ -13,7 +13,9 @@ use std::path::Path;
 use anyhow::Result;
 
 use super::artifacts::Manifest;
-use super::backend::{Backend, ChunkState, DecodeOut, DecodeSeq, GraphStats, PagedDecodeSeq, Value};
+use super::backend::{
+    Backend, ChunkState, DecodeOut, DecodeSeq, GraphStats, KernelStats, PagedDecodeSeq, Value,
+};
 use super::reference::ReferenceBackend;
 use crate::kvcache::arena::KvArena;
 
@@ -147,6 +149,11 @@ impl Runtime {
 
     pub fn stats(&self) -> Vec<(String, GraphStats)> {
         self.backend.stats()
+    }
+
+    /// Kernel-level gauges (see [`Backend::kernel_stats`]).
+    pub fn kernel_stats(&self) -> Option<KernelStats> {
+        self.backend.kernel_stats()
     }
 
     pub fn reset_stats(&self) {

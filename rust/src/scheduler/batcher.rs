@@ -708,6 +708,13 @@ impl EngineLoop {
         self.metrics.set_gauge("kv_arena_blocks_decode", s.blocks_decode as f64);
         self.metrics.set_gauge("kv_arena_blocks_prefix", s.blocks_prefix as f64);
         self.metrics.set_gauge("kv_arena_blocks_prefill", s.blocks_prefill as f64);
+        // Backend kernel gauges: streaming-suite thread fan-out and the
+        // peak per-call scratch estimate (O(T) on the default path; the
+        // naive oracle's dense [H, T, T] probs dominate it instead).
+        if let Some(ks) = self.engine.rt.kernel_stats() {
+            self.metrics.set_gauge("prefill_threads_used", ks.threads as f64);
+            self.metrics.set_gauge("prefill_scratch_peak_bytes", ks.peak_scratch_bytes as f64);
+        }
         if let Some(p) = mgr.prefix_stats() {
             self.metrics.set_gauge("prefix_nodes", p.nodes as f64);
             self.metrics.set_gauge("prefix_blocks", p.blocks as f64);

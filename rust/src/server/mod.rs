@@ -82,9 +82,16 @@ pub fn serve_listener(
         let queue = Arc::clone(&queue);
         let metrics = Arc::clone(&metrics);
         let next_id = Arc::clone(&next_id);
-        pool.execute(move || {
-            let _ = handle_conn(stream, &queue, &metrics, &next_id);
-        });
+        if pool
+            .execute(move || {
+                let _ = handle_conn(stream, &queue, &metrics, &next_id);
+            })
+            .is_err()
+        {
+            // Pool closed (shutdown in progress): stop accepting.
+            log::warn!("http worker pool closed; dropping connection");
+            break;
+        }
     }
     Ok(())
 }

@@ -67,11 +67,21 @@ pub struct BenchResult {
     pub iters: usize,
     /// Per-iteration wallclock in milliseconds.
     pub ms: Summary,
+    /// Extra named columns serialized alongside the timing stats (e.g.
+    /// `prefill_scratch_bytes`). Never read by the regression gate —
+    /// informational artifact columns only.
+    pub extras: Vec<(String, f64)>,
 }
 
 impl BenchResult {
+    /// Attach an extra named column (builder-style).
+    pub fn with_extra(mut self, name: &str, value: f64) -> BenchResult {
+        self.extras.push((name.to_string(), value));
+        self
+    }
+
     pub fn to_json(&self) -> Json {
-        Json::from_pairs(vec![
+        let mut j = Json::from_pairs(vec![
             ("name", self.name.as_str().into()),
             ("iters", self.iters.into()),
             ("mean_ms", self.ms.mean.into()),
@@ -81,7 +91,11 @@ impl BenchResult {
             ("p99_ms", self.ms.p99.into()),
             ("min_ms", self.ms.min.into()),
             ("max_ms", self.ms.max.into()),
-        ])
+        ]);
+        for (k, v) in &self.extras {
+            j.set(k, (*v).into());
+        }
+        j
     }
 }
 
@@ -99,7 +113,12 @@ pub fn run_bench<F: FnMut()>(name: &str, cfg: &BenchConfig, mut f: F) -> BenchRe
         f();
         samples.push(t0.elapsed().as_secs_f64() * 1e3);
     }
-    let res = BenchResult { name: name.to_string(), iters: samples.len(), ms: summarize(&samples) };
+    let res = BenchResult {
+        name: name.to_string(),
+        iters: samples.len(),
+        ms: summarize(&samples),
+        extras: Vec::new(),
+    };
     println!(
         "bench {:<48} {:>8.3} ms/iter  (p50 {:.3}, p99 {:.3}, n={})",
         res.name, res.ms.mean, res.ms.p50, res.ms.p99, res.iters
@@ -365,8 +384,9 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("BENCH_demo.json");
         let results = vec![
-            BenchResult { name: "x".into(), iters: 2, ms: summarize(&[1.0, 2.0]) },
-            BenchResult { name: "y".into(), iters: 2, ms: summarize(&[3.0, 5.0]) },
+            BenchResult { name: "x".into(), iters: 2, ms: summarize(&[1.0, 2.0]), extras: vec![] }
+                .with_extra("prefill_scratch_bytes", 1024.0),
+            BenchResult { name: "y".into(), iters: 2, ms: summarize(&[3.0, 5.0]), extras: vec![] },
         ];
         let arr = Json::Arr(results.iter().map(BenchResult::to_json).collect());
         std::fs::write(&path, arr.to_string()).unwrap();

@@ -1,6 +1,9 @@
 //! Host-side dense tensors (f32 / i32) with the small operation surface
 //! the coordinator needs: shape bookkeeping, slicing along the leading
-//! axes, and gather along a middle axis (the eviction compaction step).
+//! axes, and gather along a middle axis (the eviction compaction step) —
+//! plus the blocked GEMM microkernel suite ([`PackedMat`],
+//! [`gemm_acc_packed`], [`gemm_acc_packed_par`]) behind the reference
+//! backend's streaming kernels.
 //!
 //! These mirror `xla::Literal` contents; conversion lives in
 //! `runtime::literal`.
@@ -136,6 +139,148 @@ impl TensorI {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Blocked GEMM microkernel (packed weight panels + register tiling)
+// ---------------------------------------------------------------------------
+
+/// Column register tile of the GEMM microkernel (independent accumulator
+/// lanes — SIMD-friendly without float reassociation).
+pub const GEMM_NR: usize = 16;
+/// Row register tile (query rows advanced together per panel sweep).
+pub const GEMM_MR: usize = 4;
+/// Output rows per parallel work item of [`gemm_acc_packed_par`].
+pub const GEMM_ROW_TILE: usize = 16;
+
+/// A weight matrix pre-packed into `GEMM_NR`-column panels: panel `p`
+/// stores `w[k][p*NR + c]` at `panels[(p*n_in + k)*NR + c]`, so the
+/// microkernel streams one contiguous `NR`-wide row slice per `k` step
+/// regardless of `n_out`. The last panel is zero-padded (the pad lanes
+/// accumulate into scratch that is never written back).
+///
+/// Packing is done once per weight at model-synthesis time; the kernel
+/// itself has no per-element branches (the naive `matmul_acc`'s
+/// zero-skip branch is the thing this replaces).
+#[derive(Debug, Clone)]
+pub struct PackedMat {
+    pub n_in: usize,
+    pub n_out: usize,
+    panels: Vec<f32>,
+}
+
+impl PackedMat {
+    /// Pack a row-major `[n_in, n_out]` weight matrix.
+    pub fn pack(w: &TensorF) -> PackedMat {
+        assert_eq!(w.shape.len(), 2, "PackedMat::pack wants [n_in, n_out]");
+        let (n_in, n_out) = (w.shape[0], w.shape[1]);
+        let n_panels = n_out.div_ceil(GEMM_NR).max(1);
+        let mut panels = vec![0.0f32; n_panels * n_in * GEMM_NR];
+        for p in 0..n_panels {
+            let j0 = p * GEMM_NR;
+            let cols = n_out.saturating_sub(j0).min(GEMM_NR);
+            for k in 0..n_in {
+                let src = &w.data[k * n_out + j0..k * n_out + j0 + cols];
+                panels[(p * n_in + k) * GEMM_NR..(p * n_in + k) * GEMM_NR + cols]
+                    .copy_from_slice(src);
+            }
+        }
+        PackedMat { n_in, n_out, panels }
+    }
+
+    /// Bytes held by the packed panels (scratch accounting).
+    pub fn packed_bytes(&self) -> usize {
+        self.panels.len() * std::mem::size_of::<f32>()
+    }
+}
+
+/// `out[t, n_out] += x[t, n_in] @ w` through the packed panels:
+/// `GEMM_MR x GEMM_NR` register tiles, `k` innermost and strictly
+/// ascending per output element — so results are independent of row
+/// grouping (full vs remainder tiles) and therefore of how callers
+/// partition rows across chunks or threads.
+pub fn gemm_acc_packed(x: &[f32], t: usize, n_in: usize, w: &PackedMat, out: &mut [f32]) {
+    debug_assert_eq!(x.len(), t * n_in);
+    debug_assert_eq!(w.n_in, n_in);
+    debug_assert_eq!(out.len(), t * w.n_out);
+    let n_out = w.n_out;
+    let n_panels = n_out.div_ceil(GEMM_NR).max(1);
+    let mut i0 = 0usize;
+    while i0 < t {
+        let mr = (t - i0).min(GEMM_MR);
+        for p in 0..n_panels {
+            let j0 = p * GEMM_NR;
+            let jn = n_out.saturating_sub(j0).min(GEMM_NR);
+            let panel = &w.panels[p * n_in * GEMM_NR..(p + 1) * n_in * GEMM_NR];
+            let mut acc = [[0.0f32; GEMM_NR]; GEMM_MR];
+            for k in 0..n_in {
+                let wrow = &panel[k * GEMM_NR..(k + 1) * GEMM_NR];
+                for r in 0..mr {
+                    let xv = x[(i0 + r) * n_in + k];
+                    let a = &mut acc[r];
+                    for c in 0..GEMM_NR {
+                        a[c] += xv * wrow[c];
+                    }
+                }
+            }
+            for r in 0..mr {
+                let orow = &mut out[(i0 + r) * n_out + j0..(i0 + r) * n_out + j0 + jn];
+                for (o, &a) in orow.iter_mut().zip(acc[r].iter()) {
+                    *o += a;
+                }
+            }
+        }
+        i0 += mr;
+    }
+}
+
+/// Row-parallel [`gemm_acc_packed`]: output rows are partitioned into
+/// [`GEMM_ROW_TILE`]-row tiles fanned out over scoped workers. Each row
+/// is computed by exactly one worker with the same per-element op order
+/// as the serial kernel, so results are bit-identical for any thread
+/// count or row partition.
+pub fn gemm_acc_packed_par(
+    threads: usize,
+    x: &[f32],
+    t: usize,
+    n_in: usize,
+    w: &PackedMat,
+    out: &mut [f32],
+) {
+    if threads <= 1 || t < 2 * GEMM_ROW_TILE {
+        gemm_acc_packed(x, t, n_in, w, out);
+        return;
+    }
+    let n_out = w.n_out;
+    crate::util::threadpool::parallel_chunks_mut(
+        threads,
+        out,
+        GEMM_ROW_TILE * n_out,
+        |ci, chunk| {
+            let r0 = ci * GEMM_ROW_TILE;
+            let rows = chunk.len() / n_out;
+            gemm_acc_packed(&x[r0 * n_in..(r0 + rows) * n_in], rows, n_in, w, chunk);
+        },
+    );
+}
+
+/// Unpacked `out[t, n_out] += x[t, n_in] @ w` (row-major `w`), k-outer
+/// with independent column accumulator lanes and no per-element branch.
+/// Used where packing isn't worth it (tiny LoRA factors).
+pub fn gemm_acc(x: &[f32], t: usize, n_in: usize, w: &[f32], n_out: usize, out: &mut [f32]) {
+    debug_assert_eq!(x.len(), t * n_in);
+    debug_assert_eq!(w.len(), n_in * n_out);
+    debug_assert!(out.len() >= t * n_out);
+    for i in 0..t {
+        let xrow = &x[i * n_in..(i + 1) * n_in];
+        let orow = &mut out[i * n_out..(i + 1) * n_out];
+        for (k, &xv) in xrow.iter().enumerate() {
+            let wrow = &w[k * n_out..(k + 1) * n_out];
+            for (o, &wv) in orow.iter_mut().zip(wrow.iter()) {
+                *o += xv * wv;
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -189,5 +334,87 @@ mod tests {
     #[should_panic]
     fn bad_shape_panics() {
         TensorF::new(vec![2, 2], vec![0.0; 3]);
+    }
+
+    /// Reference scalar matmul for the GEMM equivalence checks.
+    fn matmul_ref(x: &[f32], t: usize, n_in: usize, w: &TensorF) -> Vec<f32> {
+        let n_out = w.shape[1];
+        let mut out = vec![0.0f32; t * n_out];
+        for i in 0..t {
+            for k in 0..n_in {
+                let xv = x[i * n_in + k];
+                for j in 0..n_out {
+                    out[i * n_out + j] += xv * w.data[k * n_out + j];
+                }
+            }
+        }
+        out
+    }
+
+    fn pseudo(n: usize, seed: u64) -> Vec<f32> {
+        // tiny deterministic LCG; values in [-1, 1)
+        let mut s = seed.wrapping_mul(0x9e37_79b9_7f4a_7c15).max(1);
+        (0..n)
+            .map(|_| {
+                s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                ((s >> 33) as f32 / (1u64 << 31) as f32) - 1.0
+            })
+            .collect()
+    }
+
+    /// Packed GEMM matches the scalar reference over shapes that do and
+    /// do not divide the register tiles.
+    #[test]
+    fn packed_gemm_matches_reference_over_odd_shapes() {
+        for &(t, n_in, n_out) in
+            &[(1usize, 3usize, 5usize), (4, 16, 16), (7, 13, 33), (19, 64, 17), (33, 5, 1)]
+        {
+            let x = pseudo(t * n_in, (t * 131 + n_in) as u64);
+            let w = TensorF::new(vec![n_in, n_out], pseudo(n_in * n_out, n_out as u64 + 7));
+            let want = matmul_ref(&x, t, n_in, &w);
+            let packed = PackedMat::pack(&w);
+            let mut got = vec![0.0f32; t * n_out];
+            gemm_acc_packed(&x, t, n_in, &packed, &mut got);
+            for (a, b) in want.iter().zip(got.iter()) {
+                assert!(
+                    (a - b).abs() <= 1e-5 * a.abs().max(1.0),
+                    "({t},{n_in},{n_out}): {a} vs {b}"
+                );
+            }
+            // unpacked branch-free kernel too
+            let mut got2 = vec![0.0f32; t * n_out];
+            gemm_acc(&x, t, n_in, &w.data, n_out, &mut got2);
+            for (a, b) in want.iter().zip(got2.iter()) {
+                assert!((a - b).abs() <= 1e-5 * a.abs().max(1.0));
+            }
+        }
+    }
+
+    /// Row-parallel GEMM must be bit-identical to the serial kernel for
+    /// any thread count (each row is computed by exactly one worker with
+    /// the same op order).
+    #[test]
+    fn parallel_gemm_is_bit_identical_to_serial() {
+        let (t, n_in, n_out) = (70usize, 24usize, 21usize);
+        let x = pseudo(t * n_in, 3);
+        let w = TensorF::new(vec![n_in, n_out], pseudo(n_in * n_out, 4));
+        let packed = PackedMat::pack(&w);
+        let mut serial = vec![0.0f32; t * n_out];
+        gemm_acc_packed(&x, t, n_in, &packed, &mut serial);
+        for threads in [2usize, 3, 5] {
+            let mut par = vec![0.0f32; t * n_out];
+            gemm_acc_packed_par(threads, &x, t, n_in, &packed, &mut par);
+            assert_eq!(serial, par, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn gemm_accumulates_into_existing_output() {
+        let w = TensorF::new(vec![2, 2], vec![1.0, 0.0, 0.0, 1.0]); // identity
+        let packed = PackedMat::pack(&w);
+        let mut out = vec![10.0f32, 20.0, 30.0, 40.0];
+        gemm_acc_packed(&[1.0, 2.0, 3.0, 4.0], 2, 2, &packed, &mut out);
+        assert_eq!(out, vec![11.0, 22.0, 33.0, 44.0]);
+        assert!(packed.packed_bytes() >= 2 * 2 * 4);
     }
 }

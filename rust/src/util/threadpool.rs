@@ -1,19 +1,42 @@
 //! Fixed-size thread pool over std channels (tokio is unavailable offline;
-//! the serving hot path is CPU-bound PJRT execution, so blocking worker
-//! threads are the right model anyway).
+//! the serving hot path is CPU-bound kernel execution, so blocking worker
+//! threads are the right model anyway), plus the scoped data-parallel
+//! helpers the reference backend's streaming kernels fan out on.
 //!
-//! Used by the HTTP server for connection handling and by the bench
-//! harness for load generation.
+//! Used by the HTTP server for connection handling, by the bench harness
+//! for load generation, and by `runtime::reference` (via
+//! [`parallel_items`] / [`parallel_chunks_mut`]) for per-head and
+//! query-row-tile kernel parallelism.
+//!
+//! Panic safety: a job that panics is caught at the worker (`catch_unwind`
+//! + a panic counter) and never kills the worker thread or wedges a
+//! [`WaitGroup`] — completion is counted by RAII [`WgGuard`]s that
+//! decrement on drop, including during unwinding.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
+/// Error returned by [`ThreadPool::execute`] once the pool has been
+/// [`ThreadPool::shutdown`] (or its sender is otherwise gone).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolClosed;
+
+impl std::fmt::Display for PoolClosed {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "thread pool is closed")
+    }
+}
+
+impl std::error::Error for PoolClosed {}
+
 pub struct ThreadPool {
     workers: Vec<thread::JoinHandle<()>>,
     tx: Option<mpsc::Sender<Job>>,
+    panics: Arc<AtomicUsize>,
 }
 
 impl ThreadPool {
@@ -21,30 +44,84 @@ impl ThreadPool {
         assert!(size > 0);
         let (tx, rx) = mpsc::channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
+        let panics = Arc::new(AtomicUsize::new(0));
         let workers = (0..size)
             .map(|i| {
                 let rx = Arc::clone(&rx);
+                let panics = Arc::clone(&panics);
                 thread::Builder::new()
                     .name(format!("{name}-{i}"))
                     .spawn(move || loop {
                         let job = { rx.lock().unwrap().recv() };
                         match job {
-                            Ok(job) => job(),
+                            Ok(job) => {
+                                // A panicking job must not take the worker
+                                // down (or poison anything): count it and
+                                // keep serving.
+                                let r = std::panic::catch_unwind(
+                                    std::panic::AssertUnwindSafe(job),
+                                );
+                                if r.is_err() {
+                                    panics.fetch_add(1, Ordering::SeqCst);
+                                    log::warn!("thread pool: worker job panicked");
+                                }
+                            }
                             Err(_) => break, // sender dropped: shut down
                         }
                     })
                     .expect("spawn worker")
             })
             .collect();
-        ThreadPool { workers, tx: Some(tx) }
+        ThreadPool { workers, tx: Some(tx), panics }
     }
 
-    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
-        self.tx.as_ref().expect("pool closed").send(Box::new(f)).expect("pool closed");
+    /// Submit a job. Returns [`PoolClosed`] (instead of panicking) when
+    /// the pool no longer accepts work.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) -> Result<(), PoolClosed> {
+        match self.tx.as_ref() {
+            Some(tx) => tx.send(Box::new(f)).map_err(|_| PoolClosed),
+            None => Err(PoolClosed),
+        }
+    }
+
+    /// Stop accepting new jobs; already-queued jobs still run. Idempotent.
+    /// (Workers are joined on drop.)
+    pub fn shutdown(&mut self) {
+        drop(self.tx.take());
+    }
+
+    /// Number of jobs that have panicked so far.
+    pub fn panics(&self) -> usize {
+        self.panics.load(Ordering::SeqCst)
     }
 
     pub fn size(&self) -> usize {
         self.workers.len()
+    }
+
+    /// Data-parallel helper over the pool's persistent workers: run
+    /// `f(i)` for every `i < n` and wait for all of them. Completion is
+    /// counted by RAII guards, so panicking iterations (counted in
+    /// [`ThreadPool::panics`]) never wedge the wait. Requires a `'static`
+    /// closure; kernels with borrowed data use the scoped
+    /// [`parallel_items`] / [`parallel_chunks_mut`] free functions
+    /// instead.
+    pub fn parallel_for<F>(&self, n: usize, f: F) -> Result<(), PoolClosed>
+    where
+        F: Fn(usize) + Send + Sync + 'static,
+    {
+        let f = Arc::new(f);
+        let wg = WaitGroup::new(n);
+        for i in 0..n {
+            let f = Arc::clone(&f);
+            let guard = wg.guard();
+            self.execute(move || {
+                let _g = guard;
+                f(i);
+            })?;
+        }
+        wg.wait();
+        Ok(())
     }
 }
 
@@ -57,16 +134,43 @@ impl Drop for ThreadPool {
     }
 }
 
-/// Await-able single-value slot (a poor man's oneshot future).
+/// Counted completion barrier. Prefer [`WaitGroup::guard`] (RAII —
+/// panic-safe) over [`WaitGroup::done_handle`] for new code.
 pub struct WaitGroup {
-    counter: Arc<(Mutex<usize>, std::sync::Condvar)>,
+    counter: Arc<(Mutex<usize>, Condvar)>,
+}
+
+/// RAII completion token of a [`WaitGroup`]: decrements the count when
+/// dropped — including while unwinding from a panic — so
+/// [`WaitGroup::wait`] can never wedge on a failed job.
+pub struct WgGuard {
+    counter: Arc<(Mutex<usize>, Condvar)>,
+}
+
+impl Drop for WgGuard {
+    fn drop(&mut self) {
+        let (lock, cv) = &*self.counter;
+        let mut n = lock.lock().unwrap();
+        *n = n.saturating_sub(1);
+        if *n == 0 {
+            cv.notify_all();
+        }
+    }
 }
 
 impl WaitGroup {
     pub fn new(n: usize) -> Self {
-        WaitGroup { counter: Arc::new((Mutex::new(n), std::sync::Condvar::new())) }
+        WaitGroup { counter: Arc::new((Mutex::new(n), Condvar::new())) }
     }
 
+    /// One RAII completion token (see [`WgGuard`]).
+    pub fn guard(&self) -> WgGuard {
+        WgGuard { counter: Arc::clone(&self.counter) }
+    }
+
+    /// Closure-style completion (legacy; not panic-safe — if the job
+    /// panics before calling it, the count is only released if the
+    /// closure itself is dropped with the job).
     pub fn done_handle(&self) -> impl Fn() + Send + 'static {
         let c = Arc::clone(&self.counter);
         move || {
@@ -88,6 +192,54 @@ impl WaitGroup {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Scoped data-parallel helpers (borrow-friendly; used by kernels)
+// ---------------------------------------------------------------------------
+
+/// Distribute an iterator's items over up to `threads` scoped workers;
+/// `f(i, item)` receives each item with its enumeration index. Items are
+/// handed out one at a time under a mutex, so `Iterator::Item` may hold
+/// `&mut` borrows (e.g. `chunks_mut` windows zipped with per-head score
+/// sinks) with no unsafe code. Blocks until every item is processed.
+pub fn parallel_items<I, F>(threads: usize, items: I, f: F)
+where
+    I: Iterator + Send,
+    I::Item: Send,
+    F: Fn(usize, I::Item) + Sync,
+{
+    if threads <= 1 {
+        for (i, item) in items.enumerate() {
+            f(i, item);
+        }
+        return;
+    }
+    let it = Mutex::new(items.enumerate());
+    thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let next = { it.lock().unwrap().next() };
+                match next {
+                    Some((i, item)) => f(i, item),
+                    None => break,
+                }
+            });
+        }
+    });
+}
+
+/// [`parallel_items`] over `chunk`-sized mutable windows of `data`:
+/// `f(ci, window)` gets the `ci`-th window (the last one may be short).
+/// The per-window work must not depend on the partition for results to
+/// be thread-count invariant — true for row-partitioned GEMM.
+pub fn parallel_chunks_mut<T, F>(threads: usize, data: &mut [T], chunk: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let chunk = chunk.max(1);
+    parallel_items(threads, data.chunks_mut(chunk), f)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -100,14 +252,16 @@ mod tests {
         let wg = WaitGroup::new(100);
         for _ in 0..100 {
             let c = Arc::clone(&count);
-            let done = wg.done_handle();
+            let guard = wg.guard();
             pool.execute(move || {
+                let _g = guard;
                 c.fetch_add(1, Ordering::SeqCst);
-                done();
-            });
+            })
+            .unwrap();
         }
         wg.wait();
         assert_eq!(count.load(Ordering::SeqCst), 100);
+        assert_eq!(pool.panics(), 0);
     }
 
     #[test]
@@ -119,9 +273,95 @@ mod tests {
             pool.execute(move || {
                 std::thread::sleep(std::time::Duration::from_millis(1));
                 c.fetch_add(1, Ordering::SeqCst);
-            });
+            })
+            .unwrap();
         }
         drop(pool); // must wait for queued jobs' workers to exit
         assert_eq!(count.load(Ordering::SeqCst), 10);
+    }
+
+    /// A panicking job must neither wedge `WaitGroup::wait` nor take the
+    /// worker down — the pool keeps serving afterwards.
+    #[test]
+    fn panicking_job_does_not_wedge_or_poison() {
+        let pool = ThreadPool::new(2, "p");
+        let wg = WaitGroup::new(3);
+        for i in 0..3 {
+            let guard = wg.guard();
+            pool.execute(move || {
+                let _g = guard;
+                if i == 1 {
+                    panic!("job {i} exploded");
+                }
+            })
+            .unwrap();
+        }
+        wg.wait(); // must return despite the panic
+        assert_eq!(pool.panics(), 1);
+        // pool still functional
+        let done = Arc::new(AtomicUsize::new(0));
+        let wg2 = WaitGroup::new(4);
+        for _ in 0..4 {
+            let d = Arc::clone(&done);
+            let guard = wg2.guard();
+            pool.execute(move || {
+                let _g = guard;
+                d.fetch_add(1, Ordering::SeqCst);
+            })
+            .unwrap();
+        }
+        wg2.wait();
+        assert_eq!(done.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn execute_on_closed_pool_is_an_error() {
+        let mut pool = ThreadPool::new(1, "c");
+        pool.execute(|| {}).unwrap();
+        pool.shutdown();
+        assert_eq!(pool.execute(|| {}), Err(PoolClosed));
+        pool.shutdown(); // idempotent
+        assert_eq!(pool.parallel_for(3, |_| {}), Err(PoolClosed));
+    }
+
+    #[test]
+    fn pool_parallel_for_covers_all_indices() {
+        let pool = ThreadPool::new(3, "pf");
+        let hits: Arc<Vec<AtomicUsize>> =
+            Arc::new((0..50).map(|_| AtomicUsize::new(0)).collect());
+        let h = Arc::clone(&hits);
+        pool.parallel_for(50, move |i| {
+            h[i].fetch_add(1, Ordering::SeqCst);
+        })
+        .unwrap();
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn scoped_parallel_items_borrows_and_covers() {
+        let data: Vec<usize> = (0..97).collect();
+        let sum = AtomicUsize::new(0);
+        parallel_items(4, data.iter(), |_, v| {
+            sum.fetch_add(*v, Ordering::SeqCst);
+        });
+        assert_eq!(sum.load(Ordering::SeqCst), 97 * 96 / 2);
+        // serial path gives the same coverage
+        let sum1 = AtomicUsize::new(0);
+        parallel_items(1, data.iter(), |_, v| {
+            sum1.fetch_add(*v, Ordering::SeqCst);
+        });
+        assert_eq!(sum1.load(Ordering::SeqCst), 97 * 96 / 2);
+    }
+
+    #[test]
+    fn parallel_chunks_mut_partitions_disjointly() {
+        let mut data = vec![0usize; 103]; // non-dividing chunk size
+        parallel_chunks_mut(4, &mut data, 16, |ci, chunk| {
+            for (k, v) in chunk.iter_mut().enumerate() {
+                *v = ci * 16 + k + 1;
+            }
+        });
+        let want: Vec<usize> = (1..=103).collect();
+        assert_eq!(data, want);
     }
 }

@@ -1,0 +1,225 @@
+//! Streaming-vs-naive kernel equivalence (the PR's A/B oracle contract):
+//! the default streaming tiled suite must reproduce the frozen naive
+//! kernels — logits and score tensors to tight tolerance, and *identical*
+//! eviction selections and generated token ids for every
+//! `Method::parse`-able policy — across GQA group sizes (lkv-tiny H4/Hkv2,
+//! lkv-base H5/Hkv1, lkv-draft H2/Hkv1), shapes that do not divide the
+//! register/row tiles, chunked offsets, and LoRA on/off (base vs
+//! lookahead prefill). Separately, the streaming suite itself must be
+//! **bit-identical** under any thread count or attention tile size, and
+//! the naive suite keeps its historical chunked == monolithic guarantee.
+
+use std::path::Path;
+
+use lookaheadkv::engine::{Engine, EngineConfig, GenOptions};
+use lookaheadkv::eviction::{EvictionConfig, Method};
+use lookaheadkv::model::tokenizer::encode;
+use lookaheadkv::runtime::{Backend, KernelConfig, ReferenceBackend, Runtime, Value};
+
+const ALL_METHODS: &[&str] = &[
+    "full", "random", "streaming", "snapkv", "pyramidkv", "h2o", "tova", "laq", "speckv",
+    "lookaheadkv", "lkv+suffix",
+];
+
+fn backend(kcfg: KernelConfig) -> ReferenceBackend {
+    // No artifacts on disk -> built-in synthetic manifest.
+    ReferenceBackend::with_config(Path::new("/nonexistent-artifacts"), kcfg).expect("backend")
+}
+
+fn engine(kcfg: KernelConfig, model: &str) -> Engine {
+    Engine { rt: Runtime::with_backend(Box::new(backend(kcfg))), cfg: EngineConfig::new(model) }
+}
+
+/// |a - b| within combined absolute + relative tolerance.
+fn close(a: f32, b: f32, tol: f32) -> bool {
+    (a - b).abs() <= tol + tol * a.abs().max(b.abs())
+}
+
+fn assert_close_slice(a: &[f32], b: &[f32], tol: f32, tag: &str) {
+    assert_eq!(a.len(), b.len(), "{tag}: length");
+    let mut worst = 0.0f32;
+    let mut at = 0usize;
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        let err = (x - y).abs() / (1.0f32).max(x.abs().max(y.abs()));
+        if err > worst {
+            worst = err;
+            at = i;
+        }
+    }
+    assert!(
+        a.iter().zip(b.iter()).all(|(x, y)| close(*x, *y, tol)),
+        "{tag}: max rel err {worst:.2e} at {at} ({} vs {})",
+        a[at],
+        b[at]
+    );
+}
+
+fn prefill_inputs(tokens: &[i32], bucket: usize, logit_pos: usize) -> Vec<Value> {
+    let mut padded = tokens.to_vec();
+    padded.resize(bucket, 256); // PAD
+    vec![
+        Value::vec_i32(padded),
+        Value::scalar_i32(tokens.len() as i32),
+        Value::scalar_i32(logit_pos as i32),
+    ]
+}
+
+/// prefill_base equivalence over every synthetic model geometry (GQA
+/// group sizes 2, 5 and 2 with Hkv=1) and odd prompt lengths that do not
+/// divide the GEMM row/column tiles or the attention column tile.
+#[test]
+fn streaming_matches_naive_prefill_base_across_geometries() {
+    let naive = backend(KernelConfig::naive_oracle());
+    let stream = backend(KernelConfig::streaming(3));
+    for model in ["lkv-tiny", "lkv-base", "lkv-draft"] {
+        for len in [3usize, 37, 101] {
+            let tokens: Vec<i32> = (0..len as i32).map(|i| 65 + (i % 26)).collect();
+            let key = format!("{model}/prefill_base_s128");
+            let inputs = prefill_inputs(&tokens, 128, len - 1);
+            let a = naive.execute(&key, None, &inputs).expect("naive prefill");
+            let b = stream.execute(&key, None, &inputs).expect("streaming prefill");
+            let tag = format!("{model}/len{len}");
+            // logits
+            assert_close_slice(
+                &a[2].as_f32().unwrap().data,
+                &b[2].as_f32().unwrap().data,
+                1e-3,
+                &format!("{tag}: logits"),
+            );
+            // window + h2o score tensors (identical shapes, tight tolerance)
+            for (i, name) in [(3usize, "window"), (4, "h2o")] {
+                let (x, y) = (a[i].as_f32().unwrap(), b[i].as_f32().unwrap());
+                assert_eq!(x.shape, y.shape, "{tag}: {name} shape");
+                assert_close_slice(&x.data, &y.data, 1e-3, &format!("{tag}: {name}"));
+            }
+            // KV rows < len must agree (rows >= len are dead padding:
+            // garbage under naive, zero under streaming)
+            let (ka, kb) = (a[0].as_f32().unwrap(), b[0].as_f32().unwrap());
+            let (l, hkv, s, dh) = (ka.shape[0], ka.shape[1], ka.shape[2], ka.shape[3]);
+            assert_eq!(kb.shape, ka.shape);
+            for li in 0..l {
+                for g in 0..hkv {
+                    let base = ((li * hkv + g) * s) * dh;
+                    assert_close_slice(
+                        &ka.data[base..base + len * dh],
+                        &kb.data[base..base + len * dh],
+                        1e-3,
+                        &format!("{tag}: K rows<len l{li} g{g}"),
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// prefill_lkv (LoRA live on suffix rows) equivalence.
+#[test]
+fn streaming_matches_naive_prefill_lkv() {
+    let naive = backend(KernelConfig::naive_oracle());
+    let stream = backend(KernelConfig::streaming(2));
+    for len in [5usize, 61] {
+        let tokens: Vec<i32> = (0..len as i32).map(|i| 97 + (i % 13)).collect();
+        let mut padded = tokens.clone();
+        padded.resize(128, 256);
+        let inputs = vec![Value::vec_i32(padded), Value::scalar_i32(len as i32)];
+        let key = "lkv-tiny/prefill_lkv_s128_n8_all";
+        let a = naive.execute(key, Some(("lkv-tiny", "main")), &inputs).expect("naive lkv");
+        let b = stream.execute(key, Some(("lkv-tiny", "main")), &inputs).expect("stream lkv");
+        assert_close_slice(
+            &a[2].as_f32().unwrap().data,
+            &b[2].as_f32().unwrap().data,
+            1e-3,
+            &format!("lkv len{len}: logits"),
+        );
+        let (x, y) = (a[3].as_f32().unwrap(), b[3].as_f32().unwrap());
+        assert_eq!(x.shape, y.shape);
+        assert_close_slice(&x.data, &y.data, 1e-3, &format!("lkv len{len}: scores"));
+    }
+}
+
+/// End-to-end: identical eviction selections (kept slots per layer) and
+/// identical greedily generated token ids for every parseable policy.
+#[test]
+fn selections_and_token_ids_identical_for_every_policy() {
+    let naive = engine(KernelConfig::naive_oracle(), "lkv-tiny");
+    let stream = engine(KernelConfig::streaming(3), "lkv-tiny");
+    let prompt = encode("A7K=Q2Z;lorem;ipsum;dolor;sit;amet;consectetur;A7K=", true, false);
+    for name in ALL_METHODS {
+        let method = Method::parse(name).unwrap_or_else(|| panic!("{name:?} must parse"));
+        let opts = GenOptions::new(24, 4);
+        let a = naive.generate(&prompt, &method, &opts).expect("naive generate");
+        let b = stream.generate(&prompt, &method, &opts).expect("streaming generate");
+        assert_eq!(a.kept_per_layer, b.kept_per_layer, "{name}: kept slots diverged");
+        assert_eq!(a.tokens, b.tokens, "{name}: generated token ids diverged");
+        assert_eq!(a.text, b.text, "{name}: text diverged");
+    }
+}
+
+/// The streaming suite must be **bit-identical** across thread counts
+/// and attention tile sizes (including tiles that do not divide the
+/// visible column count) — partitioning must never change a float op.
+#[test]
+fn streaming_is_bit_identical_across_threads_and_tiles() {
+    let reference = backend(KernelConfig { naive: false, threads: 1, tile_k: 512 });
+    let tokens: Vec<i32> = (0..90).map(|i| 65 + (i % 26)).collect();
+    let inputs = prefill_inputs(&tokens, 128, 89);
+    let base = reference.execute("lkv-tiny/prefill_base_s128", None, &inputs).unwrap();
+    for (threads, tile_k) in [(3usize, 512usize), (2, 7), (5, 33), (1, 1)] {
+        let alt = backend(KernelConfig { naive: false, threads, tile_k });
+        let out = alt.execute("lkv-tiny/prefill_base_s128", None, &inputs).unwrap();
+        for i in 0..base.len() {
+            assert_eq!(
+                base[i].as_f32().unwrap().data,
+                out[i].as_f32().unwrap().data,
+                "output {i} not bit-identical at threads={threads} tile_k={tile_k}"
+            );
+        }
+    }
+}
+
+/// Chunked prefill under the naive oracle keeps its historical
+/// bit-identity with naive monolithic prefill (the streaming-mode
+/// counterpart is enforced for every policy by tests/chunked.rs), and
+/// chunked offsets agree across suites to tolerance.
+#[test]
+fn chunked_offsets_agree_within_and_across_suites() {
+    let naive = engine(KernelConfig::naive_oracle(), "lkv-tiny");
+    let stream = engine(KernelConfig::streaming(2), "lkv-tiny");
+    let prompt = encode("pack;my;box;with;five;dozen;liquor;jugs;and;then;some;more", true, false);
+    let method = Method::SnapKV;
+    let mono_naive = naive.prefill_for_method(&prompt, &method).expect("naive mono");
+    for chunk in [7usize, 64] {
+        let run = |engine: &Engine| {
+            let mut job = engine.chunked_prefill_begin(&prompt, &method, chunk).expect("begin");
+            let mut steps = 0;
+            while !job.step(engine).expect("step") {
+                steps += 1;
+                assert!(steps < 10_000, "chunked prefill does not terminate");
+            }
+            job.into_output().expect("output")
+        };
+        let cn = run(&naive);
+        assert_eq!(
+            cn.logits, mono_naive.logits,
+            "chunk {chunk}: naive chunked logits != naive monolithic"
+        );
+        let h2o_n = cn.bundle.h2o_scores.as_ref().unwrap();
+        let h2o_m = mono_naive.bundle.h2o_scores.as_ref().unwrap();
+        assert_eq!(h2o_n.data, h2o_m.data, "chunk {chunk}: naive chunked h2o");
+        let cs = run(&stream);
+        assert_close_slice(&cs.logits, &cn.logits, 1e-3, &format!("chunk {chunk}: cross-suite"));
+        let h2o_s = cs.bundle.h2o_scores.as_ref().unwrap();
+        assert_close_slice(
+            &h2o_s.data,
+            &h2o_n.data,
+            1e-3,
+            &format!("chunk {chunk}: cross-suite h2o"),
+        );
+    }
+    // selections from the two suites' bundles agree exactly
+    let cfg = EvictionConfig::new(16);
+    let mono_stream = stream.prefill_for_method(&prompt, &method).expect("stream mono");
+    let sel_n = method.select(&cfg, 4, &mono_naive.bundle);
+    let sel_s = method.select(&cfg, 4, &mono_stream.bundle);
+    assert_eq!(sel_n, sel_s, "eviction selections diverged across kernel suites");
+}

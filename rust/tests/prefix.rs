@@ -421,6 +421,16 @@ fn metrics_http_roundtrip_exposes_cache_stats() {
     );
     assert!(gauges.req("kv_arena_blocks_decode").as_f64().is_some());
     assert!(gauges.req("kv_arena_blocks_prefill").as_f64().is_some());
+    // backend kernel gauges: streaming-suite worker budget and the peak
+    // per-call scratch estimate (requests ran, so both must be live)
+    assert!(
+        gauges.req("prefill_threads_used").as_f64().unwrap_or(0.0) >= 1.0,
+        "prefill_threads_used gauge missing or zero"
+    );
+    assert!(
+        gauges.req("prefill_scratch_peak_bytes").as_f64().unwrap_or(0.0) > 0.0,
+        "prefill_scratch_peak_bytes gauge missing or zero"
+    );
     assert!(j.req("latency").get("ttft_ms").is_some());
 
     queue.close();
