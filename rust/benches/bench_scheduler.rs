@@ -16,7 +16,7 @@ use lookaheadkv::kvcache::CacheManager;
 use lookaheadkv::metrics::Metrics;
 use lookaheadkv::model::tokenizer::encode;
 use lookaheadkv::runtime::artifacts::default_artifacts_dir;
-use lookaheadkv::scheduler::{EngineLoop, LoopConfig, Request, RequestQueue};
+use lookaheadkv::scheduler::{EngineLoop, LoopConfig, Priority, Request, RequestQueue};
 use lookaheadkv::util::bench::{record_named, run_bench, BenchConfig, BenchResult};
 use lookaheadkv::workload;
 
@@ -35,6 +35,8 @@ fn main() {
                 budget: 8,
                 max_new: 4,
                 temperature: 0.0,
+                tenant: 0,
+                priority: Priority::Normal,
                 reply: tx,
             })
             .unwrap();
@@ -136,6 +138,8 @@ fn run_mixed_once(shorts: &[Vec<i32>], long_prompt: &[i32], chunk: usize, metric
                 budget: 24,
                 max_new: 48,
                 temperature: 0.0,
+                tenant: 0,
+                priority: Priority::Normal,
                 reply: tx,
             })
             .expect("submit short");
@@ -150,6 +154,8 @@ fn run_mixed_once(shorts: &[Vec<i32>], long_prompt: &[i32], chunk: usize, metric
             budget: 48,
             max_new: 8,
             temperature: 0.0,
+            tenant: 0,
+            priority: Priority::Normal,
             reply: tx,
         })
         .expect("submit long");
@@ -179,6 +185,8 @@ fn run_loop_once(prompts: &[Vec<i32>], batched: bool) {
                 budget: 24,
                 max_new: 16,
                 temperature: 0.0,
+                tenant: 0,
+                priority: Priority::Normal,
                 reply: tx,
             })
             .expect("submit");

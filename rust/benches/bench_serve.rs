@@ -1,0 +1,277 @@
+//! Multi-tenant serving benchmark: replay a bursty open-loop trace
+//! (Poisson arrivals, heavy-tailed prompt lengths, three tenants)
+//! through the full `EngineLoop` with a deliberately constrained KV
+//! pool, and compare two configurations:
+//!
+//! - **spill**: priority classes honored, preemptive spill-to-host on
+//!   pool pressure (the PR-6 scheduler).
+//! - **baseline**: every request `Normal`, preemption disabled — the
+//!   old truncating FIFO behavior (`kv_exhausted` on growth failure).
+//!
+//! The recorded rows are *per-run p99* values summarized across runs,
+//! so the `min_ms` the CI bench gate reads is itself a p99 — the gate
+//! therefore gates tail latency, not means. Counters (preemptions,
+//! spilled blocks, restores, truncations) ride along as ungated extras.
+//!
+//! Acceptance (asserted here, not just reported): under the spill
+//! configuration the high-priority tenant sees zero `kv_exhausted`
+//! truncations and zero rejections, and its mean p99 TTFT beats the
+//! truncating baseline's.
+
+use std::collections::HashMap;
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use lookaheadkv::engine::{Engine, EngineConfig, FinishReason};
+use lookaheadkv::eviction::Method;
+use lookaheadkv::metrics::Metrics;
+use lookaheadkv::model::tokenizer::encode;
+use lookaheadkv::runtime::artifacts::default_artifacts_dir;
+use lookaheadkv::scheduler::{EngineLoop, LoopConfig, Priority, Reply, Request, RequestQueue};
+use lookaheadkv::util::bench::{record_named, smoke_mode, BenchResult};
+use lookaheadkv::util::stats::{percentile_sorted, summarize};
+use lookaheadkv::workload::{bursty_open_loop_suite, OpenLoopSuite};
+
+const BLOCK: usize = 16;
+/// Six blocks total: three concurrent high-tenant sequences (≤ 2 blocks
+/// each, see the budget split below) exactly fill it, so background
+/// tenants genuinely oversubscribe the pool.
+const POOL_BLOCKS: usize = 6;
+const TENANTS: usize = 3;
+const ARRIVALS: usize = 28;
+
+struct RunStats {
+    ttft_p99_all: f64,
+    ttft_p99_high: f64,
+    stall_p99: f64,
+    preemptions: u64,
+    spill_blocks: u64,
+    restores: u64,
+    truncated: u64,
+    high_kv_exhausted: usize,
+    high_errors: usize,
+    deferred: u64,
+}
+
+fn p99(mut xs: Vec<f64>) -> f64 {
+    if xs.is_empty() {
+        return f64::INFINITY;
+    }
+    xs.sort_by(f64::total_cmp);
+    percentile_sorted(&xs, 0.99)
+}
+
+/// Replay the trace once: engine loop on its own thread, this thread
+/// plays the open-loop client (sleeps to each arrival offset, submits,
+/// then collects every reply). Returns tail latencies + counters.
+fn run_trace(suite: &OpenLoopSuite, preemption: bool) -> RunStats {
+    let engine =
+        Engine::new(&default_artifacts_dir(), EngineConfig::new("lkv-tiny")).expect("engine");
+    let queue = Arc::new(RequestQueue::new(suite.arrivals.len() + 1));
+    let metrics = Arc::new(Metrics::new());
+    let cfg = LoopConfig {
+        max_active: 3,
+        kv_pool_slots: POOL_BLOCKS * BLOCK,
+        kv_block_slots: BLOCK,
+        paged_kv: true,
+        preemption,
+        tenants: TENANTS,
+        ..LoopConfig::default()
+    };
+    let loop_queue = Arc::clone(&queue);
+    let loop_metrics = Arc::clone(&metrics);
+    let handle = std::thread::spawn(move || {
+        EngineLoop::new(engine, cfg, loop_queue, loop_metrics).run();
+    });
+
+    let (tx, rx) = channel::<Reply>();
+    let mut info: HashMap<u64, (u32, Instant)> = HashMap::new();
+    let t0 = Instant::now();
+    for (i, a) in suite.arrivals.iter().enumerate() {
+        let due = Duration::from_secs_f64(a.at_ms / 1e3);
+        let elapsed = t0.elapsed();
+        if due > elapsed {
+            std::thread::sleep(due - elapsed);
+        }
+        // Tenant 0 is the latency tenant: a small budget keeps its
+        // worst-case footprint at 2 blocks, so three concurrent highs
+        // always fit the pool. Background tenants get the big budgets
+        // that create the pressure.
+        let (budget, max_new) = if a.tenant == 0 { (16, 8) } else { (40, 32) };
+        // The baseline has no priority classes: plain FIFO.
+        let priority = if preemption { a.priority } else { Priority::Normal };
+        let id = i as u64;
+        info.insert(id, (a.tenant, Instant::now()));
+        queue
+            .submit(Request {
+                id,
+                prompt: encode(&a.sample.prompt(), true, false),
+                method: Method::SnapKV,
+                budget,
+                max_new,
+                temperature: 0.0,
+                tenant: a.tenant,
+                priority,
+                reply: tx.clone(),
+            })
+            .expect("submit");
+    }
+    queue.close();
+
+    let mut ttft_all = Vec::new();
+    let mut ttft_high = Vec::new();
+    let mut high_kv_exhausted = 0usize;
+    let mut high_errors = 0usize;
+    for _ in 0..suite.arrivals.len() {
+        let reply = rx.recv_timeout(Duration::from_secs(120)).expect("reply");
+        let recv_at = Instant::now();
+        let (tenant, submitted) = info[&reply.id];
+        if reply.error.is_some() {
+            if tenant == 0 {
+                high_errors += 1;
+            }
+            continue;
+        }
+        if tenant == 0 && reply.finish_reason == FinishReason::KvExhausted {
+            high_kv_exhausted += 1;
+        }
+        // Client-side TTFT: wall time from submit to reply, minus the
+        // post-first-token decode time the service itself reported.
+        let wall = recv_at.duration_since(submitted).as_secs_f64() * 1e3;
+        let ttft = (wall - (reply.total_ms - reply.ttft_ms)).max(0.0);
+        ttft_all.push(ttft);
+        if tenant == 0 {
+            ttft_high.push(ttft);
+        }
+    }
+    handle.join().expect("engine loop thread");
+
+    RunStats {
+        ttft_p99_all: p99(ttft_all),
+        ttft_p99_high: p99(ttft_high),
+        stall_p99: metrics.latency_summary("decode_stall_ms").map_or(0.0, |s| s.p99),
+        preemptions: metrics.counter("preemptions_total"),
+        spill_blocks: metrics.counter("spill_blocks_total"),
+        restores: metrics.counter("restores_total"),
+        truncated: metrics.counter("decode_truncated_total"),
+        high_kv_exhausted,
+        high_errors,
+        deferred: metrics.counter("admission_deferred_total"),
+    }
+}
+
+fn mean(xs: &[f64]) -> f64 {
+    xs.iter().sum::<f64>() / xs.len().max(1) as f64
+}
+
+/// Clamp the non-finite sentinel (no samples) before recording: the
+/// baseline config may reject every high request outright.
+fn finite(xs: &[f64]) -> Vec<f64> {
+    xs.iter().map(|&x| if x.is_finite() { x } else { 1e6 }).collect()
+}
+
+fn main() {
+    let runs = if smoke_mode() { 2 } else { 4 };
+    // First seed whose trace actually mixes tenant 0 with the others —
+    // deterministic, and robust to reparameterizing the suite later.
+    let suite = (23u64..40)
+        .map(|s| bursty_open_loop_suite(s, ARRIVALS, 4.0, 256, TENANTS))
+        .find(|s| {
+            s.arrivals.iter().any(|a| a.tenant == 0)
+                && s.arrivals.iter().any(|a| a.tenant != 0)
+        })
+        .expect("no mixed-tenant trace in seed range");
+    println!("suite {}: {ARRIVALS} arrivals x {runs} runs per config", suite.name);
+
+    let mut spill_runs = Vec::new();
+    let mut base_runs = Vec::new();
+    for r in 0..runs {
+        let s = run_trace(&suite, true);
+        let b = run_trace(&suite, false);
+        println!(
+            "run {r}: spill high p99 {:.2} ms (preempt {} spill {} restore {} trunc {}) | \
+             baseline high p99 {:.2} ms (trunc {})",
+            s.ttft_p99_high, s.preemptions, s.spill_blocks, s.restores, s.truncated,
+            b.ttft_p99_high, b.truncated,
+        );
+        spill_runs.push(s);
+        base_runs.push(b);
+    }
+
+    // Acceptance: the high-priority tenant never gets truncated or
+    // rejected under preemptive spill, and its tail TTFT beats the
+    // truncating baseline.
+    let high_exhausted: usize = spill_runs.iter().map(|r| r.high_kv_exhausted).sum();
+    let high_errs: usize = spill_runs.iter().map(|r| r.high_errors).sum();
+    assert_eq!(
+        high_exhausted, 0,
+        "high-priority tenant was kv_exhausted-truncated under preemptive spill"
+    );
+    assert_eq!(high_errs, 0, "high-priority tenant was rejected under preemptive spill");
+    let spill_high: Vec<f64> = spill_runs.iter().map(|r| r.ttft_p99_high).collect();
+    let base_high: Vec<f64> = finite(&base_runs.iter().map(|r| r.ttft_p99_high).collect::<Vec<_>>());
+    assert!(
+        mean(&spill_high) < mean(&base_high),
+        "preemptive spill must beat the truncating baseline on high-tenant p99 TTFT: \
+         {:.2} ms vs {:.2} ms",
+        mean(&spill_high),
+        mean(&base_high),
+    );
+
+    // Rows: the timing summary is over per-run p99s, so `min_ms` (what
+    // the gate compares) is the best run's p99.
+    let col = |f: fn(&RunStats) -> f64, runs: &[RunStats]| -> Vec<f64> {
+        finite(&runs.iter().map(f).collect::<Vec<_>>())
+    };
+    let sum_c = |f: fn(&RunStats) -> u64, runs: &[RunStats]| -> f64 {
+        runs.iter().map(|r| f(r) as f64).sum()
+    };
+    let n = spill_runs.len();
+    let results = vec![
+        BenchResult {
+            name: "serve/bursty/ttft_p99_high_ms".into(),
+            iters: n,
+            ms: summarize(&col(|r| r.ttft_p99_high, &spill_runs)),
+            extras: Vec::new(),
+        }
+        .with_extra("preemptions_total", sum_c(|r| r.preemptions, &spill_runs))
+        .with_extra("spill_blocks_total", sum_c(|r| r.spill_blocks, &spill_runs))
+        .with_extra("restores_total", sum_c(|r| r.restores, &spill_runs))
+        .with_extra("high_kv_exhausted", high_exhausted as f64),
+        BenchResult {
+            name: "serve/bursty/ttft_p99_all_ms".into(),
+            iters: n,
+            ms: summarize(&col(|r| r.ttft_p99_all, &spill_runs)),
+            extras: Vec::new(),
+        }
+        .with_extra("admission_deferred_total", sum_c(|r| r.deferred, &spill_runs)),
+        BenchResult {
+            name: "serve/bursty/stall_p99_ms".into(),
+            iters: n,
+            ms: summarize(&col(|r| r.stall_p99, &spill_runs)),
+            extras: Vec::new(),
+        }
+        .with_extra("decode_truncated_total", sum_c(|r| r.truncated, &spill_runs)),
+        BenchResult {
+            name: "serve/bursty/baseline_ttft_p99_high_ms".into(),
+            iters: n,
+            ms: summarize(&base_high),
+            extras: Vec::new(),
+        }
+        .with_extra("baseline_truncated_total", sum_c(|r| r.truncated, &base_runs))
+        .with_extra("baseline_preemptions_total", sum_c(|r| r.preemptions, &base_runs)),
+    ];
+    for r in &results {
+        println!(
+            "{}: p99-of-p99 {:.2} ms, min {:.2} ms over {} runs",
+            r.name, r.ms.p99, r.ms.min, r.iters
+        );
+    }
+    record_named("serve", &results);
+    println!(
+        "spill high p99 mean {:.2} ms vs baseline {:.2} ms",
+        mean(&spill_high),
+        mean(&base_high)
+    );
+}

@@ -23,7 +23,7 @@
 
 use std::path::PathBuf;
 
-use lookaheadkv::util::bench::{gate_compare, load_bench_entries, GateReport};
+use lookaheadkv::util::bench::{gate_compare, load_bench_entries, worst_rows_markdown, GateReport};
 use lookaheadkv::util::cli::Args;
 use lookaheadkv::util::json::Json;
 
@@ -64,6 +64,7 @@ fn main() {
 
     let mut failed = false;
     let mut report = Json::obj();
+    let mut reports: Vec<(String, GateReport)> = Vec::new();
     for file in &baseline_files {
         let base = match load_bench_entries(&baseline_dir.join(file)) {
             Ok(b) => b,
@@ -96,6 +97,7 @@ fn main() {
         print_report(file, &rep);
         failed |= rep.failed();
         report.set(file, rep.to_json());
+        reports.push((file.clone(), rep));
     }
 
     if !out.is_empty() {
@@ -108,6 +110,23 @@ fn main() {
         }
     }
     if failed {
+        // Surface the worst regressing rows where CI reviewers look
+        // first: the job's step summary. Best-effort — absent or
+        // unwritable $GITHUB_STEP_SUMMARY (e.g. a local run) is fine.
+        if let Ok(summary) = std::env::var("GITHUB_STEP_SUMMARY") {
+            if !summary.is_empty() {
+                let md = worst_rows_markdown(&reports, 10);
+                let write = std::fs::OpenOptions::new()
+                    .create(true)
+                    .append(true)
+                    .open(&summary)
+                    .and_then(|mut f| std::io::Write::write_all(&mut f, md.as_bytes()));
+                match write {
+                    Ok(()) => println!("bench_gate: appended worst rows to {summary}"),
+                    Err(e) => eprintln!("bench_gate: step summary {summary}: {e}"),
+                }
+            }
+        }
         eprintln!("bench_gate: FAILED (regression beyond {:.0}%)", threshold * 100.0);
         std::process::exit(1);
     }

@@ -275,6 +275,33 @@ impl KvArena {
         Ok(blocks.iter().map(|&b| self.slots[b.0 as usize].take().unwrap()).collect())
     }
 
+    /// Move the blocks' buffers out of the arena *permanently* (cold
+    /// spill tier): unlike [`KvArena::take`], the bytes leave resident
+    /// accounting, because the caller is about to free the block ids and
+    /// park the buffers host-side. Fails with no side effects if any
+    /// block is unbound or currently taken.
+    pub fn spill(&mut self, blocks: &[BlockId]) -> Result<Vec<KvBlock>> {
+        let kvs = self.take(blocks).context("spill")?;
+        for kvb in &kvs {
+            self.bytes -= (kvb.k.len() + kvb.v.len()) * 4;
+        }
+        Ok(kvs)
+    }
+
+    /// Re-bind spilled buffers to freshly allocated blocks, bringing
+    /// their bytes back into resident accounting. The buffers move
+    /// verbatim, so a spill → restore round trip is bit-identical.
+    pub fn restore(&mut self, blocks: &[BlockId], kvs: Vec<KvBlock>) {
+        assert_eq!(blocks.len(), kvs.len(), "restore: table/buffer length mismatch");
+        for (&b, kvb) in blocks.iter().zip(kvs) {
+            let i = self.idx(b);
+            assert!(self.slots[i].is_none(), "restoring into occupied arena slot {b:?}");
+            self.bytes += (kvb.k.len() + kvb.v.len()) * 4;
+            self.slots[i] = Some(kvb);
+        }
+        self.peak_bytes = self.peak_bytes.max(self.bytes);
+    }
+
     /// Return buffers taken via [`KvArena::take`].
     pub fn put(&mut self, blocks: &[BlockId], kvs: Vec<KvBlock>) {
         assert_eq!(blocks.len(), kvs.len(), "put: table/buffer length mismatch");

@@ -8,7 +8,7 @@
 
 use std::collections::HashMap;
 
-use super::arena::{KvArena, PagedCtx};
+use super::arena::{KvArena, KvBlock, PagedCtx};
 use super::block::BlockAllocator;
 use super::cache::SeqCache;
 use super::paged::PagedSeqCache;
@@ -51,12 +51,50 @@ pub struct CacheStats {
     pub blocks_prefill: usize,
 }
 
+/// Cold spill tier: preempted sequences' KV blocks parked in host-side
+/// byte buffers, out of the arena's resident accounting. Buffers move
+/// verbatim (no re-encoding), so a spill → restore round trip is
+/// bit-identical by construction.
+#[derive(Debug, Default)]
+pub struct SpillStore {
+    seqs: HashMap<u64, Vec<KvBlock>>,
+    bytes: usize,
+    peak_bytes: usize,
+    spilled_blocks_total: usize,
+    restored_blocks_total: usize,
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SpillStats {
+    /// Sequences currently parked host-side.
+    pub seqs: usize,
+    /// Blocks currently parked host-side.
+    pub blocks: usize,
+    pub bytes: usize,
+    pub peak_bytes: usize,
+    /// Cumulative blocks ever spilled / restored.
+    pub spilled_blocks_total: usize,
+    pub restored_blocks_total: usize,
+}
+
+/// Result of [`CacheManager::try_restore_seq`].
+#[derive(Debug, PartialEq, Eq)]
+pub enum RestoreOutcome {
+    /// Restored; `.0` blocks were re-bound into the arena.
+    Restored(usize),
+    /// Still spilled: the pool has no room for the sequence's blocks.
+    NoSpace,
+    /// The owner has nothing in the spill store.
+    NotSpilled,
+}
+
 pub struct CacheManager {
     allocator: BlockAllocator,
     arena: KvArena,
     seqs: HashMap<u64, SeqCache>,
     prefix: Option<PrefixCache>,
     classes: HashMap<u64, OwnerClass>,
+    spill: SpillStore,
 }
 
 impl CacheManager {
@@ -71,6 +109,7 @@ impl CacheManager {
             seqs: HashMap::new(),
             prefix: None,
             classes: HashMap::new(),
+            spill: SpillStore::default(),
         }
     }
 
@@ -188,6 +227,89 @@ impl CacheManager {
 
     pub fn prefix_stats(&self) -> Option<PrefixStats> {
         self.prefix.as_ref().map(PrefixCache::stats)
+    }
+
+    /// Preempt a paged sequence: move its bound arena buffers into the
+    /// host-side spill store and free its allocator blocks. The cache's
+    /// block table goes stale until [`CacheManager::try_restore_seq`]
+    /// rebinds it — callers must not decode against a spilled sequence.
+    /// Returns the number of blocks spilled.
+    pub fn spill_seq(
+        &mut self,
+        owner: u64,
+        cache: &PagedSeqCache,
+    ) -> anyhow::Result<usize> {
+        anyhow::ensure!(
+            !self.spill.seqs.contains_key(&owner),
+            "owner {owner} already has spilled blocks"
+        );
+        let bufs = self.arena.spill(&cache.blocks)?;
+        self.allocator.free(&cache.blocks);
+        let bytes: usize = bufs.iter().map(|b| (b.k.len() + b.v.len()) * 4).sum();
+        let n = bufs.len();
+        self.spill.bytes += bytes;
+        self.spill.peak_bytes = self.spill.peak_bytes.max(self.spill.bytes);
+        self.spill.spilled_blocks_total += n;
+        self.spill.seqs.insert(owner, bufs);
+        Ok(n)
+    }
+
+    pub fn is_spilled(&self, owner: u64) -> bool {
+        self.spill.seqs.contains_key(&owner)
+    }
+
+    /// Blocks a restore of `owner` would need (0 when not spilled).
+    pub fn spilled_blocks(&self, owner: u64) -> usize {
+        self.spill.seqs.get(&owner).map_or(0, Vec::len)
+    }
+
+    /// Resume a preempted sequence: allocate fresh blocks (reclaiming
+    /// prefix-tree blocks first under pressure), re-bind the parked
+    /// buffers verbatim, and rewrite the cache's block table. The KV
+    /// contents are bit-identical to the moment of preemption.
+    pub fn try_restore_seq(&mut self, owner: u64, cache: &mut PagedSeqCache) -> RestoreOutcome {
+        let Some(bufs) = self.spill.seqs.get(&owner) else {
+            return RestoreOutcome::NotSpilled;
+        };
+        let need_slots = bufs.len() * self.allocator.block_size();
+        if !self.allocator.can_alloc(need_slots) {
+            self.prefix_reclaim_for(need_slots);
+        }
+        let Some(ids) = self.allocator.alloc(owner, need_slots) else {
+            return RestoreOutcome::NoSpace;
+        };
+        let bufs = self.spill.seqs.remove(&owner).unwrap();
+        let bytes: usize = bufs.iter().map(|b| (b.k.len() + b.v.len()) * 4).sum();
+        let n = bufs.len();
+        self.spill.bytes -= bytes;
+        self.spill.restored_blocks_total += n;
+        self.arena.restore(&ids, bufs);
+        cache.blocks = ids;
+        RestoreOutcome::Restored(n)
+    }
+
+    /// Drop a spilled sequence without restoring it (abort/shutdown of
+    /// a preempted request). Returns blocks dropped.
+    pub fn drop_spilled(&mut self, owner: u64) -> usize {
+        match self.spill.seqs.remove(&owner) {
+            Some(bufs) => {
+                let bytes: usize = bufs.iter().map(|b| (b.k.len() + b.v.len()) * 4).sum();
+                self.spill.bytes -= bytes;
+                bufs.len()
+            }
+            None => 0,
+        }
+    }
+
+    pub fn spill_stats(&self) -> SpillStats {
+        SpillStats {
+            seqs: self.spill.seqs.len(),
+            blocks: self.spill.seqs.values().map(Vec::len).sum(),
+            bytes: self.spill.bytes,
+            peak_bytes: self.spill.peak_bytes,
+            spilled_blocks_total: self.spill.spilled_blocks_total,
+            restored_blocks_total: self.spill.restored_blocks_total,
+        }
     }
 
     /// Admission check for a sequence needing `cap` slots.
@@ -356,6 +478,80 @@ mod tests {
         assert_eq!(cache.blocks.len(), 4);
         // nothing left anywhere: growth finally fails
         assert!(!m.grow_paged(1, &mut cache));
+    }
+
+    #[test]
+    fn spill_restore_roundtrip_bit_identical() {
+        let mut m = CacheManager::new(64, 8); // 8 blocks
+        let dims = KvDims { n_layers: 2, n_kv_heads: 1, head_dim: 2 };
+        let mut k = TensorF::zeros(vec![2, 1, 12, 2]);
+        let mut v = TensorF::zeros(vec![2, 1, 12, 2]);
+        for (i, x) in k.data.iter_mut().enumerate() {
+            *x = i as f32 * 0.5 + 1.0;
+        }
+        for (i, x) in v.data.iter_mut().enumerate() {
+            *x = -(i as f32) * 0.25;
+        }
+        let kept = vec![(0..12).collect::<Vec<usize>>(), (2..12).collect::<Vec<usize>>()];
+        let (arena, alloc) = m.paged_parts();
+        let mut cache =
+            PagedSeqCache::from_dense_selection(arena, alloc, 1, dims, &k, &v, &kept, 12, 32)
+                .unwrap();
+        m.tag(1, OwnerClass::Decode);
+        let before = cache.gather_dense(m.arena(), 32).unwrap();
+        let bytes_resident = m.stats().arena_bytes;
+        assert!(bytes_resident > 0);
+
+        let spilled = m.spill_seq(1, &cache).unwrap();
+        assert_eq!(spilled, cache.blocks.len());
+        assert!(m.is_spilled(1));
+        assert_eq!(m.stats().arena_bytes, 0, "spilled bytes must leave resident accounting");
+        assert_eq!(m.stats().used_blocks, 0, "spilled blocks must return to the allocator");
+        let ss = m.spill_stats();
+        assert_eq!((ss.seqs, ss.blocks, ss.spilled_blocks_total), (1, spilled, spilled));
+        assert!(ss.bytes > 0);
+
+        // double-spill is rejected, restore of an unknown owner is NotSpilled
+        assert!(m.spill_seq(1, &cache).is_err());
+        let mut other = cache.gather_dense(m.arena(), 32);
+        assert!(other.is_err() || m.try_restore_seq(99, &mut cache) == RestoreOutcome::NotSpilled);
+
+        match m.try_restore_seq(1, &mut cache) {
+            RestoreOutcome::Restored(n) => assert_eq!(n, spilled),
+            o => panic!("restore failed: {o:?}"),
+        }
+        assert!(!m.is_spilled(1));
+        assert_eq!(m.stats().arena_bytes, bytes_resident);
+        let after = cache.gather_dense(m.arena(), 32).unwrap();
+        assert_eq!(before.k.data, after.k.data, "K must survive spill/restore bit-identically");
+        assert_eq!(before.v.data, after.v.data, "V must survive spill/restore bit-identically");
+        assert_eq!(m.spill_stats().restored_blocks_total, spilled);
+        assert_eq!(m.spill_stats().bytes, 0);
+        other = cache.gather_dense(m.arena(), 32);
+        assert!(other.is_ok());
+    }
+
+    #[test]
+    fn restore_reports_no_space_when_pool_full() {
+        let mut m = CacheManager::new(32, 8); // 4 blocks
+        let dims = KvDims { n_layers: 1, n_kv_heads: 1, head_dim: 2 };
+        let k = TensorF::zeros(vec![1, 1, 8, 2]);
+        let kept = vec![(0..8).collect::<Vec<usize>>()];
+        let (arena, alloc) = m.paged_parts();
+        let mut cache =
+            PagedSeqCache::from_dense_selection(arena, alloc, 1, dims, &k, &k, &kept, 8, 32)
+                .unwrap();
+        m.spill_seq(1, &mut cache).unwrap();
+        assert!(m.reserve(2, 32), "another owner grabs the whole pool");
+        assert_eq!(m.try_restore_seq(1, &mut cache), RestoreOutcome::NoSpace);
+        assert!(m.is_spilled(1), "NoSpace must leave the spill entry intact");
+        m.release(2);
+        assert!(matches!(m.try_restore_seq(1, &mut cache), RestoreOutcome::Restored(1)));
+        // dropping a restored owner is a no-op; dropping a spilled one frees it
+        assert_eq!(m.drop_spilled(1), 0);
+        m.spill_seq(1, &cache).unwrap();
+        assert_eq!(m.drop_spilled(1), 1);
+        assert_eq!(m.spill_stats().bytes, 0);
     }
 
     /// Prefix-tree blocks come out of the same pool as sequence caches,

@@ -33,7 +33,7 @@ pub mod prefix;
 pub use arena::{DenseKvRef, KvAccess, KvArena, KvBlock, KvDims, OwnedKv, PagedCtx};
 pub use block::{BlockAllocator, BlockId};
 pub use cache::SeqCache;
-pub use manager::{CacheManager, OwnerClass};
+pub use manager::{CacheManager, OwnerClass, RestoreOutcome, SpillStats, SpillStore};
 pub use paged::PagedSeqCache;
 pub use prefix::{
     BlockRecord, MatchKind, PrefixCache, PrefixCacheConfig, PrefixMatch, PrefixPin, PrefixStats,

@@ -32,6 +32,7 @@ fn main() {
         "prefix-cache",
         "dense-kv",
         "ref-naive",
+        "no-preemption",
     ]);
     apply_kernel_flags(&args);
     let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
@@ -63,7 +64,8 @@ fn print_help() {
          \x20           [--prefill-chunk 256] [--per-seq-decode] \\\n\
          \x20           [--kv-pool SLOTS] [--kv-block SLOTS] [--dense-kv] \\\n\
          \x20           [--prefix-cache] [--prefix-cache-slots N] \\\n\
-         \x20           [--threads N] [--ref-naive]\n\
+         \x20           [--tenants N] [--quota-tokens N] [--stall-slo-ms MS] \\\n\
+         \x20           [--no-preemption] [--threads N] [--ref-naive]\n\
          \x20 generate  --prompt <text> --method lookaheadkv --budget 64 --max-new 32\n\
          \x20 eval      --suite ruler|longbench|qasper|longproc|mtbench --methods snapkv,lookaheadkv \\\n\
          \x20           --budgets 16,32 --ctx 256 --n 8\n\
@@ -132,6 +134,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
         // (0 = bounded only by the pool + LRU reclamation).
         prefix_cache: args.has("prefix-cache"),
         prefix_cache_slots: args.usize("prefix-cache-slots", 0),
+        // Multi-tenant scheduling: --tenants sizes per-tenant TTFT
+        // metrics, --quota-tokens caps each tenant's in-flight tokens,
+        // --stall-slo-ms defers new admissions while recent decode
+        // stalls exceed the SLO, and --no-preemption reverts pool
+        // pressure to kv_exhausted truncation instead of spilling
+        // lower-priority sequences to host (see README "Multi-tenant
+        // serving").
+        tenants: args.usize_clamped("tenants", defaults.tenants, 1, 4096),
+        quota_tokens: args.usize("quota-tokens", defaults.quota_tokens),
+        stall_slo_ms: args.f64("stall-slo-ms", defaults.stall_slo_ms),
+        preemption: !args.has("no-preemption"),
     };
     let q2 = Arc::clone(&queue);
     let m2 = Arc::clone(&metrics);

@@ -19,13 +19,30 @@
 //! freshly allocated blocks and frees the prompt's blocks immediately;
 //! decode appends write only the tail block in place; a sequence that
 //! fills its blocks mid-decode *grows* by another block (reclaiming
-//! unpinned prefix-tree blocks first) instead of finishing early — only
-//! genuine pool exhaustion ends it, with `finish_reason =
-//! "kv_exhausted"` and a `decode_truncated_total` increment. Admission
-//! charges actual allocated blocks, not dense-bucket estimates. Set
-//! `paged_kv = false` (CLI `--dense-kv`) for the historical dense
-//! caches — bit-identical outputs, more resident memory (see
-//! `tests/paged.rs` and `bench_decode`).
+//! unpinned prefix-tree blocks first) instead of finishing early.
+//! Admission charges actual allocated blocks, not dense-bucket
+//! estimates. Set `paged_kv = false` (CLI `--dense-kv`) for the
+//! historical dense caches — bit-identical outputs, more resident
+//! memory (see `tests/paged.rs` and `bench_decode`).
+//!
+//! **Multi-tenant scheduling.** Requests carry a [`Priority`] class and
+//! a tenant id; the queue pops highest class first. With
+//! `quota_tokens > 0` each tenant's in-flight tokens (prompt + max_new)
+//! are capped — over-quota tenants' requests wait in place without
+//! blocking anyone else. Under KV pool pressure, instead of truncating,
+//! the loop **preempts** the lowest-priority (then most recently
+//! started) running sequence whose priority is strictly below the
+//! requester's: its arena blocks move verbatim into a host-side
+//! [`crate::kvcache::SpillStore`] and are restored bit-identically once
+//! the pool has room (preempted sequences resume before new admissions,
+//! unless a strictly higher-priority request is queued). Only when no
+//! victim exists does a sequence finish with `finish_reason =
+//! "kv_exhausted"` (+ `decode_truncated_total`), so single-priority
+//! workloads behave exactly as before. With `stall_slo_ms > 0`,
+//! admission of new prefill work is deferred while the recent
+//! per-iteration decode stall p99 exceeds the SLO (`decode_stall_ms`
+//! keeps recording either way; deferrals count in
+//! `admission_deferred_total`).
 //!
 //! Decode dispatch is batched by default: all active sequences advance
 //! in **one** backend call per iteration, with caches updated in place
@@ -36,23 +53,31 @@
 //! Exported latency metrics: `decode_stall_ms` (per-iteration decode
 //! stall imposed by prefill work — one chunk, plus the final chunk's
 //! deferred eviction/compaction, when chunked; a whole admission when
-//! monolithic), `prefill_chunk_ms` (per-chunk cost), and the
+//! monolithic), `prefill_chunk_ms` (per-chunk cost), the
 //! chunked-TTFT breakdown `chunked_ttft_ms` = `chunked_ttft_work_ms`
 //! (this request's own prefill work) + `chunked_ttft_interleave_ms`
-//! (time spent advancing other sequences' decodes between chunks).
+//! (time spent advancing other sequences' decodes between chunks),
+//! `restore_ms` (spill-tier resume cost), and — with `tenants > 1` —
+//! per-tenant `ttft_ms_tenant_<t>` histograms. Counters:
+//! `preemptions_total`, `spill_blocks_total`, `restores_total`,
+//! `restore_blocks_total`; gauges: `kv_spill_{seqs,blocks,bytes}`.
 
+use std::collections::{HashMap, VecDeque};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::engine::{ChunkedPrefill, Engine, FinishReason, PrefillOutput, PrefixPlan};
 use crate::kvcache::{
     manager::bytes_per_slot, CacheManager, MatchKind, OwnerClass, PagedSeqCache, PrefixPin,
-    SeqCache,
+    RestoreOutcome, SeqCache,
 };
 use crate::metrics::Metrics;
 use crate::model::sampler::Sampler;
 use crate::model::tokenizer::{decode_until_eos, EOS_ID};
-use crate::scheduler::queue::{Reply, Request, RequestQueue};
+use crate::scheduler::queue::{Priority, Reply, Request, RequestQueue};
+
+/// Recent-stall window length for the SLO admission gate.
+const STALL_WINDOW: usize = 64;
 
 #[derive(Debug, Clone)]
 pub struct LoopConfig {
@@ -81,6 +106,24 @@ pub struct LoopConfig {
     /// KV-slot cap for the prefix tree out of the shared pool
     /// (0 = bounded only by the pool + LRU reclamation).
     pub prefix_cache_slots: usize,
+    /// Declared tenant count (CLI `--tenants`). Only used for the
+    /// per-tenant TTFT breakdown (`ttft_ms_tenant_<t>`): quotas apply
+    /// to whatever tenant ids requests actually carry. 1 = the
+    /// single-tenant default (no per-tenant histograms).
+    pub tenants: usize,
+    /// Per-tenant cap on in-flight tokens (`prompt + max_new`, CLI
+    /// `--quota-tokens`); 0 = unlimited. A request larger than the
+    /// whole quota is rejected outright rather than left to clog the
+    /// queue.
+    pub quota_tokens: usize,
+    /// Defer admitting new prefill work while the recent per-iteration
+    /// decode-stall p99 exceeds this (milliseconds); 0 = off.
+    pub stall_slo_ms: f64,
+    /// Preempt lower-priority sequences (KV spill-to-host) instead of
+    /// truncating with `kv_exhausted` under pool pressure. Only strictly
+    /// lower-priority victims are eligible, so single-priority
+    /// workloads never preempt regardless of this flag.
+    pub preemption: bool,
 }
 
 impl Default for LoopConfig {
@@ -94,6 +137,10 @@ impl Default for LoopConfig {
             prefill_chunk_tokens: 0,
             prefix_cache: false,
             prefix_cache_slots: 0,
+            tenants: 1,
+            quota_tokens: 0,
+            stall_slo_ms: 0.0,
+            preemption: true,
         }
     }
 }
@@ -137,6 +184,36 @@ struct ActiveSeq {
     t_start: Instant,
     ttft_ms: f64,
     kept: usize,
+    tenant: u32,
+    priority: Priority,
+    /// Tokens charged against the tenant's quota at admission
+    /// (`prompt + max_new`), released when the sequence leaves.
+    charge: usize,
+}
+
+/// Lowest-priority (then most recently started) active paged sequence
+/// strictly below `pri` — the preemption victim order. `exclude` is the
+/// requesting sequence's index; `gone`/`finished` are ids logically
+/// removed this iteration (already-picked victims, finishing sequences).
+fn pick_victim(
+    active: &[ActiveSeq],
+    exclude: Option<usize>,
+    gone: &[u64],
+    finished: &[(u64, FinishReason)],
+    pri: Priority,
+) -> Option<usize> {
+    active
+        .iter()
+        .enumerate()
+        .filter(|(j, s)| {
+            Some(*j) != exclude
+                && s.priority < pri
+                && matches!(s.cache, ActiveKv::Paged(_))
+                && !gone.contains(&s.id)
+                && !finished.iter().any(|(id, _)| *id == s.id)
+        })
+        .min_by(|(_, a), (_, b)| a.priority.cmp(&b.priority).then(b.t_start.cmp(&a.t_start)))
+        .map(|(j, _)| j)
 }
 
 pub struct EngineLoop {
@@ -146,6 +223,12 @@ pub struct EngineLoop {
     metrics: Arc<Metrics>,
     /// Resolved at `run`: `cfg.paged_kv` and the backend supports it.
     paged: bool,
+    /// Last `STALL_WINDOW` per-iteration decode-stall values (zeros
+    /// included, so the SLO gate recovers once prefill pressure stops).
+    stall_window: VecDeque<f64>,
+    /// In-flight quota tokens per tenant (only tracked with
+    /// `quota_tokens > 0`).
+    tenant_used: HashMap<u32, usize>,
 }
 
 impl EngineLoop {
@@ -155,7 +238,143 @@ impl EngineLoop {
         queue: Arc<RequestQueue>,
         metrics: Arc<Metrics>,
     ) -> EngineLoop {
-        EngineLoop { engine, cfg, queue, metrics, paged: false }
+        EngineLoop {
+            engine,
+            cfg,
+            queue,
+            metrics,
+            paged: false,
+            stall_window: VecDeque::new(),
+            tenant_used: HashMap::new(),
+        }
+    }
+
+    fn note_stall(&mut self, ms: f64) {
+        if self.stall_window.len() >= STALL_WINDOW {
+            self.stall_window.pop_front();
+        }
+        self.stall_window.push_back(ms);
+    }
+
+    fn stall_p99(&self) -> f64 {
+        if self.stall_window.is_empty() {
+            return 0.0;
+        }
+        let mut v: Vec<f64> = self.stall_window.iter().copied().collect();
+        v.sort_by(f64::total_cmp);
+        let idx = ((v.len() as f64 * 0.99).ceil() as usize).clamp(1, v.len()) - 1;
+        v[idx]
+    }
+
+    /// May a *new* request be admitted this iteration? Preempted
+    /// sequences get their memory back first unless a strictly
+    /// higher-priority request is waiting, and the stall SLO (when set)
+    /// defers new prefill work while recent stalls are over budget.
+    fn admit_gate(&self, active: &[ActiveSeq], preempted: &[ActiveSeq]) -> bool {
+        if let Some(bp) = preempted.iter().map(|s| s.priority).max() {
+            if !self.queue.peek_priority().is_some_and(|qp| qp > bp) {
+                return false;
+            }
+        }
+        if self.cfg.stall_slo_ms > 0.0
+            && !active.is_empty()
+            && self.stall_p99() > self.cfg.stall_slo_ms
+        {
+            if !self.queue.is_empty() {
+                self.metrics.incr("admission_deferred_total", 1);
+            }
+            return false;
+        }
+        true
+    }
+
+    /// Pop the next admissible request (quota-aware: over-quota tenants
+    /// are skipped without losing their place). The blocking form is
+    /// only used when nothing is in flight — all quota charges are zero
+    /// then, so the plain priority pop is equivalent.
+    fn pop_ready(&self, timeout: Option<Duration>) -> Option<Request> {
+        let quota = self.cfg.quota_tokens;
+        if quota > 0 {
+            let popped = self.queue.try_pop_where(|r| {
+                let charge = r.prompt.len() + r.max_new;
+                charge > quota
+                    || self.tenant_used.get(&r.tenant).copied().unwrap_or(0) + charge <= quota
+            });
+            if popped.is_some() {
+                return popped;
+            }
+        } else if let Some(r) = self.queue.try_pop() {
+            return Some(r);
+        }
+        timeout.and_then(|t| self.queue.pop_timeout(t))
+    }
+
+    /// Charge the request against its tenant's quota; a request larger
+    /// than the whole quota is rejected here (it could never run).
+    fn charge_or_reject(&mut self, req: Request) -> Option<Request> {
+        let quota = self.cfg.quota_tokens;
+        if quota == 0 {
+            return Some(req);
+        }
+        let charge = req.prompt.len() + req.max_new;
+        *self.tenant_used.entry(req.tenant).or_default() += charge;
+        if charge > quota {
+            let t0 = Instant::now();
+            self.reject(
+                req,
+                t0,
+                anyhow::anyhow!("request needs {charge} tokens, over the per-tenant quota {quota}"),
+            );
+            return None;
+        }
+        Some(req)
+    }
+
+    fn release_tenant(&mut self, tenant: u32, charge: usize) {
+        if self.cfg.quota_tokens == 0 {
+            return;
+        }
+        if let Some(used) = self.tenant_used.get_mut(&tenant) {
+            *used = used.saturating_sub(charge);
+            if *used == 0 {
+                self.tenant_used.remove(&tenant);
+            }
+        }
+    }
+
+    /// Spill strictly-lower-priority victims until `slots` are
+    /// allocatable (admission-side preemption). Returns whether the
+    /// pool can now satisfy the allocation.
+    fn preempt_for(
+        &self,
+        mgr: &mut CacheManager,
+        active: &mut Vec<ActiveSeq>,
+        preempted: &mut Vec<ActiveSeq>,
+        slots: usize,
+        pri: Priority,
+    ) -> bool {
+        if !self.cfg.preemption || !self.paged {
+            return mgr.can_admit(slots);
+        }
+        while !mgr.can_admit(slots) {
+            let Some(j) = pick_victim(active, None, &[], &[], pri) else {
+                return false;
+            };
+            let vid = active[j].id;
+            let ActiveKv::Paged(c) = &active[j].cache else { unreachable!() };
+            match mgr.spill_seq(vid, c) {
+                Ok(n) => {
+                    self.metrics.incr("preemptions_total", 1);
+                    self.metrics.incr("spill_blocks_total", n as u64);
+                    preempted.push(active.swap_remove(j));
+                }
+                Err(e) => {
+                    log::warn!("preemption spill of seq {vid} failed: {e:#}");
+                    return false;
+                }
+            }
+        }
+        true
     }
 
     /// Run until the queue is closed and drained.
@@ -165,6 +384,7 @@ impl EngineLoop {
         let _slot_bytes = bytes_per_slot(m.n_layers, m.n_kv_heads, m.head_dim);
         let mut mgr = CacheManager::new(self.cfg.kv_pool_slots, self.cfg.kv_block_slots);
         let mut active: Vec<ActiveSeq> = Vec::new();
+        let mut preempted: Vec<ActiveSeq> = Vec::new();
         let mut pending: Option<PendingPrefill> = None;
         let chunked = self.cfg.prefill_chunk_tokens > 0
             && self.engine.rt.supports_chunked_prefill();
@@ -198,45 +418,96 @@ impl EngineLoop {
         }
 
         loop {
+            // Resume preempted sequences before admitting anything new:
+            // they already paid their prefill, and restoring is a
+            // verbatim host-buffer re-bind. Highest priority (then
+            // oldest) first; stop at the first that doesn't fit.
+            if !preempted.is_empty() && active.len() < self.cfg.max_active {
+                preempted
+                    .sort_by(|a, b| b.priority.cmp(&a.priority).then(a.t_start.cmp(&b.t_start)));
+                while active.len() < self.cfg.max_active && !preempted.is_empty() {
+                    let t0 = Instant::now();
+                    let seq = &mut preempted[0];
+                    let id = seq.id;
+                    let outcome = match &mut seq.cache {
+                        ActiveKv::Paged(c) => mgr.try_restore_seq(id, c),
+                        ActiveKv::Dense(_) => RestoreOutcome::NotSpilled,
+                    };
+                    match outcome {
+                        RestoreOutcome::Restored(n) => {
+                            self.metrics.observe("restore_ms", t0.elapsed().as_secs_f64() * 1e3);
+                            self.metrics.incr("restores_total", 1);
+                            self.metrics.incr("restore_blocks_total", n as u64);
+                            active.push(preempted.remove(0));
+                        }
+                        RestoreOutcome::NoSpace => break,
+                        // Defensive: a sequence that was never actually
+                        // spilled just rejoins the active set.
+                        RestoreOutcome::NotSpilled => active.push(preempted.remove(0)),
+                    }
+                }
+                self.publish_cache_stats(&mgr);
+            }
+
             // Admission. Chunked mode starts at most one incremental
-            // prefill job; monolithic mode admits (fully prefills) as
-            // many queued requests as fit under max_active.
+            // prefill job; monolithic mode admits (fully prefills)
+            // queued requests while the active set is below max_active.
             if chunked {
-                if pending.is_none() && active.len() < self.cfg.max_active {
-                    let idle = active.is_empty();
+                if pending.is_none()
+                    && active.len() < self.cfg.max_active
+                    && self.admit_gate(&active, &preempted)
+                {
+                    let idle = active.is_empty() && preempted.is_empty();
                     let req = if idle {
-                        self.queue.pop_timeout(Duration::from_millis(50))
+                        self.pop_ready(Some(Duration::from_millis(50)))
                     } else {
-                        self.queue.try_pop()
+                        self.pop_ready(None)
                     };
                     match req {
-                        Some(req) => pending = self.begin_prefill(req, &mut mgr),
+                        Some(req) => {
+                            if let Some(req) = self.charge_or_reject(req) {
+                                pending =
+                                    self.begin_prefill(req, &mut mgr, &mut active, &mut preempted);
+                            }
+                        }
                         None if idle && self.queue.is_closed() && self.queue.is_empty() => {
-                            self.drain(&mut active, &mut mgr);
+                            self.drain(&mut active, &mut preempted, &mut mgr);
                             return;
                         }
                         None => {}
                     }
                 }
             } else {
-                while active.len() < self.cfg.max_active {
-                    let req = if active.is_empty() {
-                        match self.queue.pop_timeout(Duration::from_millis(50)) {
+                let stalling_before = !active.is_empty();
+                let t_adm = Instant::now();
+                let mut admitted = false;
+                while active.len() < self.cfg.max_active && self.admit_gate(&active, &preempted) {
+                    let idle = active.is_empty() && preempted.is_empty();
+                    let req = if idle {
+                        match self.pop_ready(Some(Duration::from_millis(50))) {
                             Some(r) => r,
                             None if self.queue.is_closed() && self.queue.is_empty() => {
-                                self.drain(&mut active, &mut mgr);
+                                self.drain(&mut active, &mut preempted, &mut mgr);
                                 return;
                             }
                             None => break,
                         }
                     } else {
-                        match self.queue.try_pop() {
+                        match self.pop_ready(None) {
                             Some(r) => r,
                             None => break,
                         }
                     };
-                    self.admit(req, &mut active, &mut mgr);
+                    if let Some(req) = self.charge_or_reject(req) {
+                        self.admit(req, &mut active, &mut preempted, &mut mgr);
+                        admitted = true;
+                    }
                 }
+                self.note_stall(if stalling_before && admitted {
+                    t_adm.elapsed().as_secs_f64() * 1e3
+                } else {
+                    0.0
+                });
             }
 
             // Advance the in-flight prefill by one chunk; the decode step
@@ -264,20 +535,26 @@ impl EngineLoop {
             // as stalled.
             let stalling = !active.is_empty();
             match stepped {
-                None => {}
+                None => {
+                    if chunked {
+                        self.note_stall(0.0);
+                    }
+                }
                 Some((Ok(false), dt)) => {
                     if stalling {
                         self.metrics.observe("decode_stall_ms", dt);
                     }
+                    self.note_stall(if stalling { dt } else { 0.0 });
                 }
                 Some((Ok(true), dt)) => {
                     let p = pending.take().expect("pending job just stepped");
                     let t0 = Instant::now();
-                    self.finish_chunked(p, &mut active, &mut mgr);
+                    self.finish_chunked(p, &mut active, &mut preempted, &mut mgr);
+                    let total = dt + t0.elapsed().as_secs_f64() * 1e3;
                     if stalling {
-                        let total = dt + t0.elapsed().as_secs_f64() * 1e3;
                         self.metrics.observe("decode_stall_ms", total);
                     }
+                    self.note_stall(if stalling { total } else { 0.0 });
                 }
                 Some((Err(e), dt)) => {
                     let p = pending.take().expect("pending job just stepped");
@@ -291,50 +568,108 @@ impl EngineLoop {
                     if stalling {
                         self.metrics.observe("decode_stall_ms", dt);
                     }
+                    self.note_stall(if stalling { dt } else { 0.0 });
                 }
             }
 
             if active.is_empty() {
-                if pending.is_none() && self.queue.is_closed() && self.queue.is_empty() {
+                if pending.is_none()
+                    && preempted.is_empty()
+                    && self.queue.is_closed()
+                    && self.queue.is_empty()
+                {
                     return;
+                }
+                // Nothing decodable and nothing restorable right now
+                // (restore reported NoSpace, or admission is gated):
+                // yield instead of spinning on the restore check.
+                if pending.is_none() && !preempted.is_empty() {
+                    std::thread::sleep(Duration::from_millis(2));
                 }
                 continue;
             }
 
-            // One decode step for every active sequence. A sequence out
-            // of slots grows by a block (paged) before it is given up on.
+            // Growth/finish pre-pass, by id (preemption moves sequences
+            // out of `active`, so indices are assigned afterwards). A
+            // sequence out of slots grows by a block; if the pool is dry
+            // it preempts a strictly-lower-priority victim before being
+            // given up on with `kv_exhausted`.
+            let mut finished_ids: Vec<(u64, FinishReason)> = Vec::new();
+            let mut victim_ids: Vec<u64> = Vec::new();
+            let mut i = 0;
+            while i < active.len() {
+                let id = active[i].id;
+                if victim_ids.contains(&id) {
+                    i += 1;
+                    continue;
+                }
+                let tok = active[i].next_token;
+                let done = if tok == EOS_ID {
+                    Some(FinishReason::Eos)
+                } else if active[i].tokens.len() >= active[i].max_new {
+                    Some(FinishReason::Length)
+                } else if active[i].cache.headroom() == 0 {
+                    loop {
+                        let grown = match &mut active[i].cache {
+                            ActiveKv::Paged(c) => mgr.grow_paged(id, c),
+                            ActiveKv::Dense(_) => false,
+                        };
+                        if grown {
+                            break None;
+                        }
+                        if !self.cfg.preemption
+                            || !matches!(active[i].cache, ActiveKv::Paged(_))
+                        {
+                            break Some(FinishReason::KvExhausted);
+                        }
+                        let pri = active[i].priority;
+                        let Some(j) =
+                            pick_victim(&active, Some(i), &victim_ids, &finished_ids, pri)
+                        else {
+                            break Some(FinishReason::KvExhausted);
+                        };
+                        let vid = active[j].id;
+                        let ActiveKv::Paged(vc) = &active[j].cache else { unreachable!() };
+                        match mgr.spill_seq(vid, vc) {
+                            Ok(n) => {
+                                self.metrics.incr("preemptions_total", 1);
+                                self.metrics.incr("spill_blocks_total", n as u64);
+                                victim_ids.push(vid);
+                            }
+                            Err(e) => {
+                                log::warn!("preemption spill of seq {vid} failed: {e:#}");
+                                break Some(FinishReason::KvExhausted);
+                            }
+                        }
+                    }
+                } else {
+                    None
+                };
+                if let Some(reason) = done {
+                    if reason == FinishReason::KvExhausted {
+                        self.metrics.incr("decode_truncated_total", 1);
+                    }
+                    finished_ids.push((id, reason));
+                }
+                i += 1;
+            }
+            if !victim_ids.is_empty() {
+                for vid in &victim_ids {
+                    let j = active.iter().position(|s| s.id == *vid).expect("victim in active");
+                    preempted.push(active.swap_remove(j));
+                }
+                self.publish_cache_stats(&mgr);
+            }
+
+            // One decode step for every remaining sequence.
             let mut finished: Vec<(usize, FinishReason)> = Vec::new();
             // Sequences whose decode errored: the error Reply has already
             // been sent, so they are torn down without a completion Reply.
             let mut failed = Vec::new();
             let mut stepping: Vec<(usize, &mut ActiveSeq)> = Vec::new();
             for (i, seq) in active.iter_mut().enumerate() {
-                let tok = seq.next_token;
-                let done = if tok == EOS_ID {
-                    Some(FinishReason::Eos)
-                } else if seq.tokens.len() >= seq.max_new {
-                    Some(FinishReason::Length)
-                } else if seq.cache.headroom() == 0 {
-                    match &mut seq.cache {
-                        ActiveKv::Paged(c) => {
-                            if mgr.grow_paged(seq.id, c) {
-                                None
-                            } else {
-                                Some(FinishReason::KvExhausted)
-                            }
-                        }
-                        ActiveKv::Dense(_) => Some(FinishReason::KvExhausted),
-                    }
-                } else {
-                    None
-                };
-                match done {
-                    Some(reason) => {
-                        if reason == FinishReason::KvExhausted {
-                            self.metrics.incr("decode_truncated_total", 1);
-                        }
-                        finished.push((i, reason));
-                    }
+                match finished_ids.iter().find(|(id, _)| *id == seq.id) {
+                    Some((_, r)) => finished.push((i, *r)),
                     None => stepping.push((i, seq)),
                 }
             }
@@ -447,12 +782,18 @@ impl EngineLoop {
 
     /// Monolithic admission: prefill + evict + compact in one blocking
     /// call (stalls every active decode for the whole prompt).
-    fn admit(&mut self, req: Request, active: &mut Vec<ActiveSeq>, mgr: &mut CacheManager) {
+    fn admit(
+        &mut self,
+        req: Request,
+        active: &mut Vec<ActiveSeq>,
+        preempted: &mut Vec<ActiveSeq>,
+        mgr: &mut CacheManager,
+    ) {
         let stalling = !active.is_empty();
         let t0 = Instant::now();
         let res = (|| -> anyhow::Result<(ActiveKv, Vec<f32>, usize)> {
             let pre = self.engine.prefill_for_method(&req.prompt, &req.method)?;
-            self.select_compact(&req, pre, mgr)
+            self.select_compact(&req, pre, mgr, active, preempted)
         })();
         if stalling {
             // every active decode waited for this entire admission
@@ -472,8 +813,15 @@ impl EngineLoop {
     /// this is where admission matches the longest cached prefix, pins
     /// its blocks, and hands the engine a resume seed. Paged jobs charge
     /// the prompt's blocks to the request up front (reclaiming unpinned
-    /// tree blocks first under pool pressure).
-    fn begin_prefill(&mut self, req: Request, mgr: &mut CacheManager) -> Option<PendingPrefill> {
+    /// tree blocks, then preempting lower-priority sequences, under pool
+    /// pressure).
+    fn begin_prefill(
+        &mut self,
+        req: Request,
+        mgr: &mut CacheManager,
+        active: &mut Vec<ActiveSeq>,
+        preempted: &mut Vec<ActiveSeq>,
+    ) -> Option<PendingPrefill> {
         let t_start = Instant::now();
         let mut pin = None;
         let plan = if mgr.prefix_enabled() {
@@ -511,6 +859,7 @@ impl EngineLoop {
                 if freed > 0 {
                     self.metrics.incr("prefix_reclaimed_blocks", freed as u64);
                 }
+                self.preempt_for(mgr, active, preempted, req.prompt.len(), req.priority);
             }
             mgr.tag(req.id, OwnerClass::Prefill);
             self.engine.chunked_prefill_begin_paged(
@@ -576,6 +925,7 @@ impl EngineLoop {
         &mut self,
         p: PendingPrefill,
         active: &mut Vec<ActiveSeq>,
+        preempted: &mut Vec<ActiveSeq>,
         mgr: &mut CacheManager,
     ) {
         let PendingPrefill { req, mut job, t_start, work_ms, pin } = p;
@@ -583,7 +933,7 @@ impl EngineLoop {
         let prompt = req.prompt.clone();
         let res = (|| -> anyhow::Result<(ActiveKv, Vec<f32>, usize)> {
             let pre = job.into_output()?;
-            self.select_compact(&req, pre, mgr)
+            self.select_compact(&req, pre, mgr, active, preempted)
         })();
         match res {
             Ok((cache, logits, kept)) => {
@@ -612,16 +962,19 @@ impl EngineLoop {
 
     /// Shared post-prefill tail: selection with the request's budget,
     /// decode-cap sizing, KV-pool admission check (reclaiming unpinned
-    /// prefix-tree blocks before failing), compaction. Paged mode
-    /// gathers kept rows into freshly allocated blocks — straight from
-    /// the prompt's arena blocks when the prefill was paged — and frees
-    /// the prompt's blocks immediately; admission charges the blocks
-    /// actually allocated, not the dense cap.
+    /// prefix-tree blocks, then preempting lower-priority sequences,
+    /// before failing), compaction. Paged mode gathers kept rows into
+    /// freshly allocated blocks — straight from the prompt's arena
+    /// blocks when the prefill was paged — and frees the prompt's
+    /// blocks immediately; admission charges the blocks actually
+    /// allocated, not the dense cap.
     fn select_compact(
         &self,
         req: &Request,
         pre: PrefillOutput,
         mgr: &mut CacheManager,
+        active: &mut Vec<ActiveSeq>,
+        preempted: &mut Vec<ActiveSeq>,
     ) -> anyhow::Result<(ActiveKv, Vec<f32>, usize)> {
         let n_layers = self.engine.n_layers(&self.engine.cfg.model);
         let mut evcfg = self.engine.cfg.eviction;
@@ -640,6 +993,7 @@ impl EngineLoop {
                 if freed > 0 {
                     self.metrics.incr("prefix_reclaimed_blocks", freed as u64);
                 }
+                self.preempt_for(mgr, active, preempted, need, req.priority);
             }
             let dims = self.engine.kv_dims(&self.engine.cfg.model)?;
             let src_blocks = pre.blocks;
@@ -691,8 +1045,8 @@ impl EngineLoop {
         }
     }
 
-    /// Mirror the pool + arena + prefix-tree occupancy into `/metrics`
-    /// gauges.
+    /// Mirror the pool + arena + prefix-tree + spill-tier occupancy into
+    /// `/metrics` gauges.
     fn publish_cache_stats(&self, mgr: &CacheManager) {
         let s = mgr.stats();
         self.metrics.set_gauge("kv_active_seqs", s.active_seqs as f64);
@@ -708,6 +1062,12 @@ impl EngineLoop {
         self.metrics.set_gauge("kv_arena_blocks_decode", s.blocks_decode as f64);
         self.metrics.set_gauge("kv_arena_blocks_prefix", s.blocks_prefix as f64);
         self.metrics.set_gauge("kv_arena_blocks_prefill", s.blocks_prefill as f64);
+        // Cold spill tier: preempted sequences parked host-side.
+        let sp = mgr.spill_stats();
+        self.metrics.set_gauge("kv_spill_seqs", sp.seqs as f64);
+        self.metrics.set_gauge("kv_spill_blocks", sp.blocks as f64);
+        self.metrics.set_gauge("kv_spill_bytes", sp.bytes as f64);
+        self.metrics.set_gauge("kv_spill_peak_bytes", sp.peak_bytes as f64);
         // Backend kernel gauges: streaming-suite thread fan-out and the
         // peak per-call scratch estimate (O(T) on the default path; the
         // naive oracle's dense [H, T, T] probs dominate it instead).
@@ -747,6 +1107,9 @@ impl EngineLoop {
         let first = sampler.sample(&logits);
         let ttft_ms = t_start.elapsed().as_secs_f64() * 1e3;
         self.metrics.observe("ttft_ms", ttft_ms);
+        if self.cfg.tenants > 1 {
+            self.metrics.observe(&format!("ttft_ms_tenant_{}", req.tenant), ttft_ms);
+        }
         self.metrics.incr("prefills", 1);
         if let Some(work) = chunk_work_ms {
             // chunked-TTFT breakdown: own prefill work vs time spent
@@ -769,15 +1132,20 @@ impl EngineLoop {
             tokens: vec![first],
             next_token: first,
             max_new: req.max_new,
+            charge: req.prompt.len() + req.max_new,
             reply: req.reply,
             t_start,
             ttft_ms,
             kept,
+            tenant: req.tenant,
+            priority: req.priority,
         });
     }
 
-    /// Send the error reply for a request that never activated.
+    /// Send the error reply for a request that never activated (also
+    /// releases its tenant-quota charge).
     fn reject(&mut self, req: Request, t_start: Instant, e: anyhow::Error) {
+        self.release_tenant(req.tenant, req.prompt.len() + req.max_new);
         self.metrics.incr("prefill_errors", 1);
         let _ = req.reply.send(Reply {
             id: req.id,
@@ -795,12 +1163,16 @@ impl EngineLoop {
     /// its KV without emitting a completion Reply or counting it as a
     /// completion.
     fn abort(&mut self, seq: ActiveSeq, mgr: &mut CacheManager) {
+        mgr.drop_spilled(seq.id);
         mgr.release(seq.id);
+        self.release_tenant(seq.tenant, seq.charge);
         self.metrics.incr("decode_errors", 1);
     }
 
     fn complete(&mut self, seq: ActiveSeq, reason: FinishReason, mgr: &mut CacheManager) {
+        mgr.drop_spilled(seq.id);
         mgr.release(seq.id);
+        self.release_tenant(seq.tenant, seq.charge);
         self.publish_cache_stats(mgr);
         self.metrics.incr("completions", 1);
         self.metrics.incr("generated_tokens", seq.tokens.len() as u64);
@@ -816,8 +1188,13 @@ impl EngineLoop {
         });
     }
 
-    fn drain(&mut self, active: &mut Vec<ActiveSeq>, mgr: &mut CacheManager) {
-        for seq in active.drain(..) {
+    fn drain(
+        &mut self,
+        active: &mut Vec<ActiveSeq>,
+        preempted: &mut Vec<ActiveSeq>,
+        mgr: &mut CacheManager,
+    ) {
+        for seq in active.drain(..).chain(preempted.drain(..)) {
             self.complete(seq, FinishReason::Stopped, mgr);
         }
     }

@@ -8,4 +8,4 @@ pub mod batcher;
 pub mod queue;
 
 pub use batcher::{EngineLoop, LoopConfig};
-pub use queue::{Reply, Request, RequestQueue, SubmitError};
+pub use queue::{Priority, Reply, Request, RequestQueue, SubmitError};

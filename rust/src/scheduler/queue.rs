@@ -1,5 +1,8 @@
 //! Bounded request queue shared between the server front-end and the
-//! engine loop.
+//! engine loop. Requests carry a [`Priority`] class and a tenant id;
+//! the queue pops highest-priority-first (FIFO within a class) and
+//! supports predicate pops so the engine loop can skip tenants that
+//! are over their token quota without reordering anyone else.
 
 use std::collections::VecDeque;
 use std::sync::mpsc::Sender;
@@ -7,6 +10,37 @@ use std::sync::{Condvar, Mutex};
 
 use crate::engine::FinishReason;
 use crate::eviction::Method;
+
+/// Scheduling class. Higher classes are admitted first and are the
+/// last to be preempted when the KV pool runs out of blocks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub enum Priority {
+    Low = 0,
+    #[default]
+    Normal = 1,
+    High = 2,
+}
+
+impl Priority {
+    pub const ALL: [Priority; 3] = [Priority::Low, Priority::Normal, Priority::High];
+
+    pub fn parse(s: &str) -> Option<Priority> {
+        match s {
+            "low" => Some(Priority::Low),
+            "normal" => Some(Priority::Normal),
+            "high" => Some(Priority::High),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Priority::Low => "low",
+            Priority::Normal => "normal",
+            Priority::High => "high",
+        }
+    }
+}
 
 /// One generation request, as submitted by a front-end.
 #[derive(Debug)]
@@ -17,6 +51,9 @@ pub struct Request {
     pub budget: usize,
     pub max_new: usize,
     pub temperature: f32,
+    /// Tenant this request is billed to (token quotas are per tenant).
+    pub tenant: u32,
+    pub priority: Priority,
     pub reply: Sender<Reply>,
 }
 
@@ -43,8 +80,9 @@ pub enum SubmitError {
     Closed,
 }
 
-/// MPMC bounded FIFO with shutdown; producers are server threads,
-/// the single consumer is the engine loop.
+/// MPMC bounded queue with shutdown; producers are server threads,
+/// the single consumer is the engine loop. One FIFO per priority
+/// class; pops drain the highest non-empty class first.
 pub struct RequestQueue {
     inner: Mutex<Inner>,
     cv: Condvar,
@@ -52,13 +90,30 @@ pub struct RequestQueue {
 }
 
 struct Inner {
-    q: VecDeque<Request>,
+    classes: [VecDeque<Request>; 3],
+    len: usize,
     closed: bool,
+}
+
+impl Inner {
+    fn pop_where(&mut self, pred: &dyn Fn(&Request) -> bool) -> Option<Request> {
+        for class in self.classes.iter_mut().rev() {
+            if let Some(i) = class.iter().position(pred) {
+                self.len -= 1;
+                return class.remove(i);
+            }
+        }
+        None
+    }
 }
 
 impl RequestQueue {
     pub fn new(cap: usize) -> RequestQueue {
-        RequestQueue { inner: Mutex::new(Inner { q: VecDeque::new(), closed: false }), cv: Condvar::new(), cap }
+        RequestQueue {
+            inner: Mutex::new(Inner { classes: Default::default(), len: 0, closed: false }),
+            cv: Condvar::new(),
+            cap,
+        }
     }
 
     pub fn submit(&self, req: Request) -> Result<(), SubmitError> {
@@ -66,34 +121,53 @@ impl RequestQueue {
         if inner.closed {
             return Err(SubmitError::Closed);
         }
-        if inner.q.len() >= self.cap {
+        if inner.len >= self.cap {
             return Err(SubmitError::Full); // backpressure
         }
-        inner.q.push_back(req);
+        inner.len += 1;
+        inner.classes[req.priority as usize].push_back(req);
         self.cv.notify_one();
         Ok(())
     }
 
-    /// Non-blocking pop.
+    /// Non-blocking pop: highest priority class first, FIFO within one.
     pub fn try_pop(&self) -> Option<Request> {
-        self.inner.lock().unwrap().q.pop_front()
+        self.try_pop_where(|_| true)
+    }
+
+    /// Non-blocking pop of the first request (in priority-then-FIFO
+    /// order) satisfying `pred`; requests failing the predicate keep
+    /// their position. Lets the loop skip over-quota tenants.
+    pub fn try_pop_where(&self, pred: impl Fn(&Request) -> bool) -> Option<Request> {
+        self.inner.lock().unwrap().pop_where(&pred)
+    }
+
+    /// Priority of the request `try_pop` would return, if any.
+    pub fn peek_priority(&self) -> Option<Priority> {
+        let inner = self.inner.lock().unwrap();
+        for p in Priority::ALL.iter().rev() {
+            if !inner.classes[*p as usize].is_empty() {
+                return Some(*p);
+            }
+        }
+        None
     }
 
     /// Blocking pop with timeout; None on timeout or close-with-empty.
     pub fn pop_timeout(&self, timeout: std::time::Duration) -> Option<Request> {
         let mut inner = self.inner.lock().unwrap();
-        if let Some(r) = inner.q.pop_front() {
+        if let Some(r) = inner.pop_where(&|_| true) {
             return Some(r);
         }
         if inner.closed {
             return None;
         }
         let (mut inner, _t) = self.cv.wait_timeout(inner, timeout).unwrap();
-        inner.q.pop_front()
+        inner.pop_where(&|_| true)
     }
 
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().q.len()
+        self.inner.lock().unwrap().len
     }
 
     pub fn is_empty(&self) -> bool {
@@ -117,6 +191,10 @@ mod tests {
     use std::sync::mpsc::channel;
 
     fn req(id: u64) -> (Request, std::sync::mpsc::Receiver<Reply>) {
+        req_pt(id, Priority::Normal, 0)
+    }
+
+    fn req_pt(id: u64, priority: Priority, tenant: u32) -> (Request, std::sync::mpsc::Receiver<Reply>) {
         let (tx, rx) = channel();
         (
             Request {
@@ -126,6 +204,8 @@ mod tests {
                 budget: 8,
                 max_new: 4,
                 temperature: 0.0,
+                tenant,
+                priority,
                 reply: tx,
             },
             rx,
@@ -144,6 +224,37 @@ mod tests {
     }
 
     #[test]
+    fn priority_order_fifo_within_class() {
+        let q = RequestQueue::new(8);
+        let mut keep = Vec::new();
+        for (id, p) in [(1, Priority::Low), (2, Priority::High), (3, Priority::Normal), (4, Priority::High)] {
+            let (r, k) = req_pt(id, p, 0);
+            keep.push(k);
+            q.submit(r).unwrap();
+        }
+        assert_eq!(q.peek_priority(), Some(Priority::High));
+        let order: Vec<u64> = std::iter::from_fn(|| q.try_pop()).map(|r| r.id).collect();
+        assert_eq!(order, vec![2, 4, 3, 1]);
+        assert_eq!(q.peek_priority(), None);
+    }
+
+    #[test]
+    fn predicate_pop_skips_without_reordering() {
+        let q = RequestQueue::new(8);
+        let mut keep = Vec::new();
+        for (id, tenant) in [(1, 0), (2, 1), (3, 0)] {
+            let (r, k) = req_pt(id, Priority::Normal, tenant);
+            keep.push(k);
+            q.submit(r).unwrap();
+        }
+        // Tenant 0 over quota: first eligible is id 2.
+        assert_eq!(q.try_pop_where(|r| r.tenant != 0).unwrap().id, 2);
+        // Skipped requests kept their FIFO position.
+        assert_eq!(q.try_pop().unwrap().id, 1);
+        assert_eq!(q.try_pop().unwrap().id, 3);
+    }
+
+    #[test]
     fn backpressure_full() {
         let q = RequestQueue::new(1);
         let (r1, _k1) = req(1);
@@ -158,6 +269,89 @@ mod tests {
         q.close();
         let (r, _k) = req(1);
         assert_eq!(q.submit(r).unwrap_err(), SubmitError::Closed);
+    }
+
+    #[test]
+    fn submit_after_close_rejects_even_with_space() {
+        let q = RequestQueue::new(8);
+        let (r1, _k1) = req(1);
+        q.submit(r1).unwrap();
+        q.close();
+        assert!(q.is_closed());
+        let (r2, _k2) = req(2);
+        assert_eq!(q.submit(r2).unwrap_err(), SubmitError::Closed);
+        // Already-queued work stays drainable after close.
+        assert_eq!(q.try_pop().unwrap().id, 1);
+        assert!(q.try_pop().is_none());
+    }
+
+    #[test]
+    fn pop_timeout_expires_empty() {
+        let q = RequestQueue::new(4);
+        let t0 = std::time::Instant::now();
+        assert!(q.pop_timeout(std::time::Duration::from_millis(30)).is_none());
+        assert!(t0.elapsed() >= std::time::Duration::from_millis(25), "{:?}", t0.elapsed());
+    }
+
+    #[test]
+    fn pop_timeout_wakes_on_submit() {
+        use std::sync::Arc;
+        let q = Arc::new(RequestQueue::new(4));
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || q2.pop_timeout(std::time::Duration::from_secs(10)));
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        let (r, _k) = req(7);
+        q.submit(r).unwrap();
+        let got = h.join().unwrap();
+        assert_eq!(got.unwrap().id, 7);
+    }
+
+    #[test]
+    fn pop_timeout_returns_none_on_close() {
+        use std::sync::Arc;
+        let q = Arc::new(RequestQueue::new(4));
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || q2.pop_timeout(std::time::Duration::from_secs(10)));
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q.close();
+        assert!(h.join().unwrap().is_none());
+    }
+
+    #[test]
+    fn concurrent_submitters_full_accounting() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        use std::sync::Arc;
+        const CAP: usize = 8;
+        const THREADS: usize = 4;
+        const PER_THREAD: usize = 16;
+        let q = Arc::new(RequestQueue::new(CAP));
+        let ok = Arc::new(AtomicUsize::new(0));
+        let full = Arc::new(AtomicUsize::new(0));
+        let handles: Vec<_> = (0..THREADS)
+            .map(|t| {
+                let (q, ok, full) = (Arc::clone(&q), Arc::clone(&ok), Arc::clone(&full));
+                std::thread::spawn(move || {
+                    let mut keep = Vec::new();
+                    for i in 0..PER_THREAD {
+                        let (r, k) = req((t * PER_THREAD + i) as u64);
+                        keep.push(k);
+                        match q.submit(r) {
+                            Ok(()) => ok.fetch_add(1, Ordering::SeqCst),
+                            Err(SubmitError::Full) => full.fetch_add(1, Ordering::SeqCst),
+                            Err(SubmitError::Closed) => panic!("queue not closed"),
+                        };
+                    }
+                    keep
+                })
+            })
+            .collect();
+        let _keep: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        // Every submit either landed or was refused as Full, and the
+        // accepted-but-unpopped count is exactly the queue length (≤ cap).
+        assert_eq!(ok.load(Ordering::SeqCst) + full.load(Ordering::SeqCst), THREADS * PER_THREAD);
+        assert_eq!(q.len(), ok.load(Ordering::SeqCst).min(CAP));
+        assert!(q.len() <= CAP);
+        assert_eq!(q.len(), CAP, "cap-many submits must have succeeded");
     }
 
     #[test]

@@ -3,7 +3,9 @@
 //!
 //! Endpoints:
 //!   POST /generate  {"prompt": str, "method": str, "budget": n,
-//!                    "max_new": n, "temperature": f}  → generation JSON
+//!                    "max_new": n, "temperature": f,
+//!                    "tenant": n, "priority": low|normal|high}
+//!                    → generation JSON
 //!                    (includes "finish_reason": eos | length |
 //!                    kv_exhausted | stopped — cap/pool-driven
 //!                    truncation is observable, not silent)
@@ -25,7 +27,7 @@ use anyhow::{Context, Result};
 use crate::eviction::Method;
 use crate::metrics::Metrics;
 use crate::model::tokenizer::encode;
-use crate::scheduler::{Reply, Request, RequestQueue};
+use crate::scheduler::{Priority, Reply, Request, RequestQueue};
 use crate::util::json::{self, Json};
 use crate::util::threadpool::ThreadPool;
 use http::{read_request, write_response, HttpRequest};
@@ -137,6 +139,19 @@ fn generate(req: &HttpRequest, queue: &RequestQueue, next_id: &AtomicU64) -> (u1
         budget: body.get("budget").and_then(Json::as_usize).unwrap_or(64),
         max_new: body.get("max_new").and_then(Json::as_usize).unwrap_or(32).min(96),
         temperature: body.get("temperature").and_then(Json::as_f64).unwrap_or(0.0) as f32,
+        tenant: body.get("tenant").and_then(Json::as_usize).unwrap_or(0) as u32,
+        priority: match body.get("priority").and_then(Json::as_str) {
+            None => Priority::default(),
+            Some(s) => match Priority::parse(s) {
+                Some(p) => p,
+                None => {
+                    return (
+                        400,
+                        Json::from_pairs(vec![("error", format!("unknown priority {s}").into())]),
+                    )
+                }
+            },
+        },
         reply: tx,
     };
     match queue.submit(request) {

@@ -275,6 +275,51 @@ pub fn gate_compare(
     GateReport { rows, missing, calibration, threshold, floor_ms }
 }
 
+/// Render the worst regressing rows across a set of gate reports as a
+/// GitHub-flavored-markdown fragment (what CI appends to
+/// `$GITHUB_STEP_SUMMARY` when the gate fails). Rows above the noise
+/// floor and slower than their calibrated baseline (`norm_ratio > 1`)
+/// are sorted worst-first and truncated to `limit`; baseline entries
+/// missing from the current run are appended as warnings.
+pub fn worst_rows_markdown(reports: &[(String, GateReport)], limit: usize) -> String {
+    let mut rows: Vec<(&str, &GateRow)> = reports
+        .iter()
+        .flat_map(|(file, rep)| {
+            rep.rows
+                .iter()
+                .filter(|r| !r.below_floor && r.norm_ratio > 1.0)
+                .map(move |r| (file.as_str(), r))
+        })
+        .collect();
+    rows.sort_by(|a, b| b.1.norm_ratio.total_cmp(&a.1.norm_ratio));
+    rows.truncate(limit);
+    let mut md = String::from("## Bench gate: worst regressing rows\n\n");
+    if rows.is_empty() {
+        md.push_str("No current row is slower than its calibrated baseline.\n");
+    } else {
+        md.push_str("| file | benchmark | base ms | cur ms | norm ratio | status |\n");
+        md.push_str("|---|---|---:|---:|---:|---|\n");
+        for (file, r) in rows {
+            let status = if r.regressed { "**REGRESSED**" } else { "ok" };
+            md.push_str(&format!(
+                "| {file} | {} | {:.3} | {:.3} | {:.2}x | {status} |\n",
+                r.name, r.base_ms, r.cur_ms, r.norm_ratio
+            ));
+        }
+    }
+    let missing: Vec<String> = reports
+        .iter()
+        .flat_map(|(file, rep)| rep.missing.iter().map(move |m| format!("`{file}`: {m}")))
+        .collect();
+    if !missing.is_empty() {
+        md.push_str("\n**Tracked benchmarks missing from the current run:**\n\n");
+        for m in &missing {
+            md.push_str(&format!("- {m}\n"));
+        }
+    }
+    md
+}
+
 /// Read the `(name, min_ms)` entries of one `BENCH_*.json` artifact (the
 /// array format written by [`record_named`]).
 pub fn load_bench_entries(path: &Path) -> Result<Vec<(String, f64)>> {
@@ -376,6 +421,58 @@ mod tests {
         let tiny = rep.rows.iter().find(|r| r.name == "tiny").unwrap();
         assert!(tiny.below_floor && !tiny.regressed);
         assert_eq!(rep.missing, vec!["gone".to_string()]);
+    }
+
+    /// The step-summary table leads with the worst offender, bolds only
+    /// genuinely regressed rows, and drops sub-floor noise. Ratios here:
+    /// c/d/e 1.0, a 1.3, b 2.0, tiny 20 (sub-floor) — calibration is the
+    /// interpolated median 1.15, so a (norm 1.13) is slow-but-ok and b
+    /// (norm 1.74) is the only regression.
+    #[test]
+    fn worst_rows_markdown_ranks_and_flags() {
+        let base = entries(&[
+            ("a", 10.0),
+            ("b", 20.0),
+            ("c", 5.0),
+            ("d", 8.0),
+            ("e", 16.0),
+            ("tiny", 0.01),
+            ("gone", 4.0),
+        ]);
+        let cur = entries(&[
+            ("a", 13.0),
+            ("b", 40.0),
+            ("c", 5.0),
+            ("d", 8.0),
+            ("e", 16.0),
+            ("tiny", 0.2),
+        ]);
+        let rep = gate_compare(&base, &cur, 0.25, 0.5);
+        assert!(rep.failed());
+        let md = worst_rows_markdown(&[("BENCH_demo.json".to_string(), rep)], 10);
+        let lines: Vec<&str> = md.lines().collect();
+        let b_at = lines.iter().position(|l| l.contains("| b |")).expect("b row");
+        let a_at = lines.iter().position(|l| l.contains("| a |")).expect("a row");
+        assert!(b_at < a_at, "rows must be sorted worst-first:\n{md}");
+        assert!(lines[b_at].contains("**REGRESSED**"), "{md}");
+        assert!(lines[a_at].contains("| ok |"), "{md}");
+        assert!(!md.contains("| c |"), "at-calibration rows must not appear:\n{md}");
+        assert!(!md.contains("tiny"), "sub-floor rows must not appear:\n{md}");
+        assert!(md.contains("gone"), "missing baselines must be warned about:\n{md}");
+    }
+
+    /// Ratios 4/3/2/1 calibrate to 2.5: a (1.6) and b (1.2) are above
+    /// calibration, and `limit = 1` keeps only the worst.
+    #[test]
+    fn worst_rows_markdown_truncates_and_handles_empty() {
+        let base = entries(&[("a", 10.0), ("b", 10.0), ("c", 10.0), ("d", 10.0)]);
+        let cur = entries(&[("a", 40.0), ("b", 30.0), ("c", 20.0), ("d", 10.0)]);
+        let rep = gate_compare(&base, &cur, 0.25, 0.5);
+        let md = worst_rows_markdown(&[("BENCH_x.json".to_string(), rep)], 1);
+        assert!(md.contains("| a |") && !md.contains("| b |"), "limit must truncate:\n{md}");
+        let clean = gate_compare(&base, &base, 0.25, 0.5);
+        let md = worst_rows_markdown(&[("BENCH_x.json".to_string(), clean)], 10);
+        assert!(md.contains("No current row"), "{md}");
     }
 
     #[test]

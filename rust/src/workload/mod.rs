@@ -13,6 +13,6 @@ pub mod suites;
 
 pub use spec::{Sample, TaskFamily};
 pub use suites::{
-    longbench_suite, longproc_suite, mtbench_suite, qasper_suite, ruler_suite,
-    shared_prefix_suite, Suite,
+    bursty_open_loop_suite, longbench_suite, longproc_suite, mtbench_suite, qasper_suite,
+    ruler_suite, shared_prefix_suite, Arrival, OpenLoopSuite, Suite,
 };

@@ -7,6 +7,7 @@
 //! below the target bucket so prompts always fit.
 
 use super::spec::{self, Sample, TaskFamily};
+use crate::scheduler::Priority;
 use crate::util::rng::Rng;
 
 #[derive(Debug, Clone)]
@@ -117,6 +118,71 @@ pub fn shared_prefix_suite(seed: u64, n: usize, ctx_tokens: usize, shared_pct: u
     Suite { name: format!("shared_prefix@{ctx_tokens}x{shared_pct}pct"), samples }
 }
 
+/// One request of an open-loop serving trace: what to ask, when it
+/// arrives, and who it belongs to.
+#[derive(Debug, Clone)]
+pub struct Arrival {
+    pub sample: Sample,
+    /// Arrival offset from trace start (the driver sleeps or fast-forwards
+    /// to it; arrivals are non-decreasing).
+    pub at_ms: f64,
+    pub tenant: u32,
+    pub priority: Priority,
+}
+
+/// A timed request trace (open-loop: arrivals don't wait for service).
+#[derive(Debug, Clone)]
+pub struct OpenLoopSuite {
+    pub name: String,
+    pub arrivals: Vec<Arrival>,
+}
+
+/// Bursty multi-tenant open-loop trace (the serving-bench scenario):
+/// Poisson arrivals (exponential inter-arrival gaps around
+/// `mean_gap_ms`), heavy-tailed prompt lengths (bounded Pareto,
+/// α≈1.2 — mostly short prompts with an occasional near-`ctx_tokens`
+/// monster), tenants assigned uniformly. Tenant 0 is the
+/// latency-sensitive one: always [`Priority::High`]; other tenants are
+/// mostly [`Priority::Normal`] with a [`Priority::Low`] batch-job tail.
+/// With `tenants == 1` every arrival is tenant 0 / High (degenerate
+/// single-tenant trace).
+pub fn bursty_open_loop_suite(
+    seed: u64,
+    n: usize,
+    mean_gap_ms: f64,
+    ctx_tokens: usize,
+    tenants: usize,
+) -> OpenLoopSuite {
+    assert!(tenants >= 1, "need at least one tenant");
+    let mut rng = Rng::new(seed ^ 0xb065);
+    let mut t = 0.0f64;
+    let xm = (ctx_tokens / 8).max(48) as f64;
+    let mut arrivals = Vec::with_capacity(n);
+    for _ in 0..n {
+        // Exponential inter-arrival gap: -mean * ln(1 - U), U ∈ [0, 1).
+        t += -mean_gap_ms * (1.0 - rng.f64()).ln();
+        // Bounded Pareto length: xm / (1 - U)^(1/α), clamped to the bucket.
+        let toks =
+            (xm / (1.0 - rng.f64()).powf(1.0 / 1.2)).min(ctx_tokens as f64) as usize;
+        let toks = toks.clamp(48, ctx_tokens);
+        let tenant = rng.below(tenants) as u32;
+        let priority = if tenant == 0 {
+            Priority::High
+        } else if rng.chance(0.25) {
+            Priority::Low
+        } else {
+            Priority::Normal
+        };
+        arrivals.push(Arrival {
+            sample: spec::generate(&mut rng, TaskFamily::Kv, ctx_chars_for(toks)),
+            at_ms: t,
+            tenant,
+            priority,
+        });
+    }
+    OpenLoopSuite { name: format!("bursty@{ctx_tokens}x{tenants}t"), arrivals }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -142,6 +208,42 @@ mod tests {
     fn longproc_output_scales() {
         let s = longproc_suite(1, 1, 512, 8);
         assert!(s.samples[0].answer.len() >= 8 * 8);
+    }
+
+    #[test]
+    fn bursty_trace_is_deterministic_and_well_formed() {
+        let a = bursty_open_loop_suite(11, 64, 20.0, 512, 3);
+        let b = bursty_open_loop_suite(11, 64, 20.0, 512, 3);
+        assert_eq!(a.arrivals.len(), 64);
+        let mut prev = 0.0;
+        for (x, y) in a.arrivals.iter().zip(&b.arrivals) {
+            assert_eq!(x.sample.context, y.sample.context, "trace must be deterministic");
+            assert_eq!(x.tenant, y.tenant);
+            assert_eq!(x.priority, y.priority);
+            assert!(x.at_ms >= prev, "arrivals must be non-decreasing");
+            prev = x.at_ms;
+            assert!(x.tenant < 3);
+            assert!(x.sample.prompt().len() + 2 <= 512, "{}", x.sample.prompt().len());
+            if x.tenant == 0 {
+                assert_eq!(x.priority, Priority::High, "tenant 0 is the latency tenant");
+            } else {
+                assert_ne!(x.priority, Priority::High);
+            }
+        }
+        // The trace actually mixes tenants and priorities.
+        assert!(a.arrivals.iter().any(|x| x.tenant == 0));
+        assert!(a.arrivals.iter().any(|x| x.tenant != 0));
+        assert!(a.arrivals.iter().any(|x| x.priority == Priority::Low));
+        assert!(a.arrivals.iter().any(|x| x.priority == Priority::Normal));
+        // Heavy tail: lengths genuinely vary.
+        let lens: Vec<usize> = a.arrivals.iter().map(|x| x.sample.prompt().len()).collect();
+        assert!(lens.iter().max().unwrap() > &(2 * lens.iter().min().unwrap()));
+    }
+
+    #[test]
+    fn bursty_trace_single_tenant_degenerates() {
+        let s = bursty_open_loop_suite(5, 16, 10.0, 256, 1);
+        assert!(s.arrivals.iter().all(|x| x.tenant == 0 && x.priority == Priority::High));
     }
 
     #[test]

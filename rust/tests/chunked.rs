@@ -19,7 +19,7 @@ use lookaheadkv::kvcache::SeqCache;
 use lookaheadkv::metrics::Metrics;
 use lookaheadkv::model::tokenizer::encode;
 use lookaheadkv::runtime::artifacts::default_artifacts_dir;
-use lookaheadkv::scheduler::{EngineLoop, LoopConfig, Request, RequestQueue};
+use lookaheadkv::scheduler::{EngineLoop, LoopConfig, Priority, Request, RequestQueue};
 use lookaheadkv::util::proptest;
 use lookaheadkv::util::rng::argmax;
 
@@ -166,6 +166,8 @@ fn engine_loop_chunked_matches_monolithic() {
                     budget: 16,
                     max_new: 5,
                     temperature: 0.0,
+                    tenant: 0,
+                    priority: Priority::Normal,
                     reply: tx,
                 })
                 .expect("submit");

@@ -16,7 +16,7 @@ use lookaheadkv::metrics::Metrics;
 use lookaheadkv::model::tokenizer::{encode, EOS_ID};
 use lookaheadkv::runtime::artifacts::default_artifacts_dir;
 use lookaheadkv::runtime::Value;
-use lookaheadkv::scheduler::{EngineLoop, LoopConfig, Request, RequestQueue};
+use lookaheadkv::scheduler::{EngineLoop, LoopConfig, Priority, Request, RequestQueue};
 
 fn engine() -> Engine {
     Engine::new(&default_artifacts_dir(), EngineConfig::new("lkv-tiny")).expect("engine")
@@ -168,6 +168,8 @@ fn engine_loop_serves_requests_batched() {
                 budget: 16,
                 max_new: 5,
                 temperature: 0.0,
+                tenant: 0,
+                priority: Priority::Normal,
                 reply: tx,
             })
             .expect("submit");

@@ -22,7 +22,7 @@ use lookaheadkv::kvcache::{
 use lookaheadkv::metrics::Metrics;
 use lookaheadkv::model::tokenizer::encode;
 use lookaheadkv::runtime::artifacts::default_artifacts_dir;
-use lookaheadkv::scheduler::{EngineLoop, LoopConfig, Reply, Request, RequestQueue};
+use lookaheadkv::scheduler::{EngineLoop, LoopConfig, Priority, Reply, Request, RequestQueue};
 use lookaheadkv::util::rng::argmax;
 
 const ALL_METHODS: &[&str] = &[
@@ -243,6 +243,8 @@ fn run_loop(
                 budget,
                 max_new,
                 temperature: 0.0,
+                tenant: 0,
+                priority: Priority::Normal,
                 reply: tx,
             })
             .expect("submit");

@@ -1,0 +1,286 @@
+//! Preemptive KV spill-to-host: correctness of the multi-tenant
+//! scheduler's preemption path.
+//!
+//! The contract is the same shape as `tests/paged.rs`: preemption
+//! changes *where bytes live* (arena vs host-side spill store), never
+//! *what is computed*. For every `Method::parse`-able policy, a
+//! sequence that is preempted mid-decode and later restored must
+//! generate exactly the tokens of the unpreempted run — spill/restore
+//! moves buffers verbatim, and greedy decoding is per-sequence
+//! deterministic regardless of interleaving. On top of the equivalence:
+//! the truncating baseline contrast (preemption off ⇒ `kv_exhausted`),
+//! per-tenant quota rejection, and an arena-level spill/restore
+//! round-trip property over random pool shapes.
+
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+
+use lookaheadkv::engine::{Engine, EngineConfig, FinishReason};
+use lookaheadkv::eviction::Method;
+use lookaheadkv::kvcache::{BlockAllocator, KvArena};
+use lookaheadkv::metrics::Metrics;
+use lookaheadkv::model::tokenizer::encode;
+use lookaheadkv::runtime::artifacts::default_artifacts_dir;
+use lookaheadkv::scheduler::{EngineLoop, LoopConfig, Priority, Reply, Request, RequestQueue};
+use lookaheadkv::util::proptest::{check, Config};
+
+const ALL_METHODS: &[&str] = &[
+    "full", "random", "streaming", "snapkv", "pyramidkv", "h2o", "tova", "laq", "speckv",
+    "lookaheadkv", "lkv+suffix",
+];
+
+const MODEL: &str = "lkv-tiny";
+const BLOCK: usize = 16;
+
+fn engine() -> Engine {
+    Engine::new(&default_artifacts_dir(), EngineConfig::new(MODEL)).expect("engine")
+}
+
+/// Two same-prompt requests — id 0 High, id 1 Low — through the paged
+/// monolithic loop. Same prompt + method + budget means identical kept
+/// sets and lockstep growth, so a pool sized to exactly two compacted
+/// caches forces a deterministic preemption at the first grow.
+fn run_pair(
+    method: &str,
+    pool_slots: usize,
+    preemption: bool,
+    budget: usize,
+    max_new: usize,
+) -> (Vec<Reply>, Arc<Metrics>) {
+    let engine = engine();
+    let queue = Arc::new(RequestQueue::new(4));
+    let metrics = Arc::new(Metrics::new());
+    let prompt = encode("lorem;ipsum;dolor;sit;amet;A7K=Q2Z;consectetur;elit;A7K=", true, false);
+    let mut receivers = Vec::new();
+    for (id, priority) in [(0u64, Priority::High), (1u64, Priority::Low)] {
+        let (tx, rx) = channel();
+        receivers.push(rx);
+        queue
+            .submit(Request {
+                id,
+                prompt: prompt.clone(),
+                method: Method::parse(method).expect("method"),
+                budget,
+                max_new,
+                temperature: 0.0,
+                tenant: id as u32,
+                priority,
+                reply: tx,
+            })
+            .expect("submit");
+    }
+    queue.close();
+    let cfg = LoopConfig {
+        max_active: 2,
+        kv_pool_slots: pool_slots,
+        kv_block_slots: BLOCK,
+        paged_kv: true,
+        preemption,
+        tenants: 2,
+        ..LoopConfig::default()
+    };
+    EngineLoop::new(engine, cfg, Arc::clone(&queue), Arc::clone(&metrics)).run();
+    let mut replies: Vec<Reply> =
+        receivers.into_iter().map(|rx| rx.recv().expect("reply")).collect();
+    replies.sort_by_key(|r| r.id);
+    (replies, metrics)
+}
+
+/// For every policy: the Low-priority sequence is preempted (KV spilled
+/// to host) when the High one grows into a full pool, restored after it
+/// finishes, and both generations are bit-identical to an ample-pool
+/// run — with zero `kv_exhausted` truncations.
+#[test]
+fn preempted_generation_bit_identical_for_every_policy() {
+    for name in ALL_METHODS {
+        // Reference trajectories under an ample pool (no pressure).
+        let (full, fm) = run_pair(name, 16 * 1152, true, 16, 16);
+        assert!(full[0].error.is_none(), "{name}: ample high errored: {:?}", full[0].error);
+        assert!(full[1].error.is_none(), "{name}: ample low errored: {:?}", full[1].error);
+        assert_eq!(fm.counter("preemptions_total"), 0, "{name}: ample pool must not preempt");
+        let kept = full[0].kept;
+        assert_eq!(kept, full[1].kept, "{name}: same prompt+budget must keep the same rows");
+        let blocks = kept.div_ceil(BLOCK).max(1);
+
+        // Exactly two compacted caches fit; the first grow must preempt.
+        let (tiny, tm) = run_pair(name, 2 * blocks * BLOCK, true, 16, 16);
+        for (a, b) in full.iter().zip(tiny.iter()) {
+            assert!(b.error.is_none(), "{name} req {}: {:?}", b.id, b.error);
+            assert_eq!(a.text, b.text, "{name} req {}: generation differs under preemption", a.id);
+            assert_eq!(a.n_tokens, b.n_tokens, "{name} req {}: token count differs", a.id);
+            assert_eq!(
+                a.finish_reason, b.finish_reason,
+                "{name} req {}: finish reason differs",
+                a.id
+            );
+        }
+        assert_eq!(
+            tm.counter("decode_truncated_total"),
+            0,
+            "{name}: preemption must replace truncation"
+        );
+        // Everything drains: pool, arena, and the spill tier.
+        assert_eq!(tm.gauge("kv_used_blocks"), Some(0.0), "{name}: pool leak");
+        assert_eq!(tm.gauge("kv_arena_bytes"), Some(0.0), "{name}: arena leak");
+        assert_eq!(tm.gauge("kv_spill_seqs"), Some(0.0), "{name}: spill-tier seq leak");
+        assert_eq!(tm.gauge("kv_spill_bytes"), Some(0.0), "{name}: spill-tier byte leak");
+
+        // KV writes happen for all but the last generated token; growth
+        // (and therefore preemption) triggers only once they exceed the
+        // compacted cache's block slack.
+        let writes = full[0].n_tokens.saturating_sub(1);
+        let slack = blocks * BLOCK - kept;
+        if writes > slack {
+            assert!(tm.counter("preemptions_total") >= 1, "{name}: expected a preemption");
+            assert!(tm.counter("spill_blocks_total") >= 1, "{name}: expected spilled blocks");
+            assert!(tm.counter("restores_total") >= 1, "{name}: the victim must be restored");
+            assert_eq!(
+                tm.counter("restore_blocks_total"),
+                tm.counter("spill_blocks_total"),
+                "{name}: every spilled block must come back"
+            );
+
+            // Baseline contrast: the same pressure without preemption
+            // truncates with `kv_exhausted` instead.
+            let (trunc, xm) = run_pair(name, 2 * blocks * BLOCK, false, 16, 16);
+            assert!(
+                xm.counter("decode_truncated_total") >= 1,
+                "{name}: preemption off must fall back to truncation"
+            );
+            assert!(
+                trunc.iter().any(|r| r.finish_reason == FinishReason::KvExhausted),
+                "{name}: no kv_exhausted finish in the truncating baseline"
+            );
+            assert_eq!(xm.counter("preemptions_total"), 0, "{name}: preemption was disabled");
+        } else {
+            eprintln!(
+                "{name}: no growth needed (writes {writes} <= slack {slack}); \
+                 preemption not exercised"
+            );
+        }
+    }
+}
+
+/// A request whose `prompt + max_new` charge exceeds the whole
+/// per-tenant quota is rejected with an error (it could never run);
+/// requests within quota still complete normally.
+#[test]
+fn over_quota_request_is_rejected_not_queued() {
+    let engine = engine();
+    let queue = Arc::new(RequestQueue::new(4));
+    let metrics = Arc::new(Metrics::new());
+    let big = encode("lorem;ipsum;dolor;sit;amet;A7K=Q2Z;consectetur;elit;A7K=", true, false);
+    let small = encode("a;b;c", true, false);
+    assert!(big.len() + 16 > 32, "the big request must exceed the quota");
+    assert!(small.len() + 8 <= 32, "the small request must fit the quota");
+    let mut receivers = Vec::new();
+    for (id, prompt, max_new) in [(0u64, big, 16usize), (1u64, small, 8usize)] {
+        let (tx, rx) = channel();
+        receivers.push(rx);
+        queue
+            .submit(Request {
+                id,
+                prompt,
+                method: Method::SnapKV,
+                budget: 16,
+                max_new,
+                temperature: 0.0,
+                tenant: 0,
+                priority: Priority::Normal,
+                reply: tx,
+            })
+            .expect("submit");
+    }
+    queue.close();
+    let cfg = LoopConfig { quota_tokens: 32, ..LoopConfig::default() };
+    EngineLoop::new(engine, cfg, Arc::clone(&queue), Arc::clone(&metrics)).run();
+    let replies: Vec<Reply> =
+        receivers.into_iter().map(|rx| rx.recv().expect("reply")).collect();
+    let over = &replies[0];
+    assert_eq!(over.finish_reason, FinishReason::Error);
+    let msg = over.error.as_deref().expect("over-quota request must carry an error");
+    assert!(msg.contains("quota"), "unexpected rejection message: {msg}");
+    let ok = &replies[1];
+    assert!(ok.error.is_none(), "in-quota request failed: {:?}", ok.error);
+    assert!(ok.n_tokens > 0);
+}
+
+/// Arena-level spill/restore property: over random pool shapes, block
+/// sizes, buffer widths and id-permuting interlopers, a spill → realloc
+/// → restore round trip is bit-identical and byte accounting returns to
+/// exactly its pre-spill state.
+#[test]
+fn arena_spill_restore_roundtrip_property() {
+    check(
+        "arena spill/restore round trip",
+        &Config { cases: 48, max_size: 10, ..Config::new() },
+        |rng, size| {
+            let bs = 1 + rng.below(6);
+            let nb = 3 + rng.below(size.max(1) + 4);
+            let sf = 1 + rng.below(12);
+            let mut arena = KvArena::new(nb, bs);
+            let mut alloc = BlockAllocator::new(nb * bs, bs);
+
+            // Owner 1: the spill victim, with a random KV pattern.
+            let na = 1 + rng.below(nb - 1);
+            let ids = alloc.alloc(1, na * bs).expect("victim alloc");
+            arena.bind(&ids, sf);
+            let mut bufs = arena.take(&ids).expect("take for fill");
+            for b in &mut bufs {
+                for x in b.k.iter_mut() {
+                    *x = rng.f32();
+                }
+                for x in b.v.iter_mut() {
+                    *x = rng.f32();
+                }
+            }
+            let expected = bufs.clone();
+            arena.put(&ids, bufs);
+
+            // Owner 2 (optional): a bystander that stays resident.
+            let spare = nb - na;
+            let n2 = rng.below(spare + 1);
+            let other = if n2 > 0 {
+                let ids2 = alloc.alloc(2, n2 * bs).expect("bystander alloc");
+                arena.bind(&ids2, sf);
+                ids2
+            } else {
+                Vec::new()
+            };
+            let bytes_before = arena.bytes_in_use();
+            let victim_bytes = na * bs * sf * 2 * 4;
+
+            let spilled = arena.spill(&ids).expect("spill");
+            alloc.free(&ids);
+            assert_eq!(spilled.len(), na);
+            assert_eq!(arena.bytes_in_use(), bytes_before - victim_bytes);
+
+            // An interloper grabs some of the freed ids so the restore
+            // lands on a (generally) different block table.
+            let n3 = rng.below(nb - n2 - na + 1);
+            let interloper = if n3 > 0 { alloc.alloc(3, n3 * bs).expect("interloper") } else { Vec::new() };
+            // Spilling allocator-only (unbound) blocks must fail cleanly.
+            if !interloper.is_empty() {
+                assert!(arena.spill(&interloper).is_err());
+            }
+
+            let ids_new = alloc.alloc(1, na * bs).expect("realloc after spill");
+            arena.restore(&ids_new, spilled);
+            assert_eq!(arena.bytes_in_use(), bytes_before);
+            for (id, exp) in ids_new.iter().zip(&expected) {
+                let (k, v) = arena.block_kv(*id).expect("restored block bound");
+                assert_eq!(k, &exp.k[..], "K must survive spill/restore bit-identically");
+                assert_eq!(v, &exp.v[..], "V must survive spill/restore bit-identically");
+            }
+
+            // Full teardown leaves nothing resident.
+            arena.release(&ids_new);
+            arena.release(&other);
+            alloc.free(&ids_new);
+            alloc.free(&other);
+            alloc.free(&interloper);
+            assert_eq!(arena.bytes_in_use(), 0);
+            assert_eq!(alloc.used_blocks(), 0);
+        },
+    );
+}

@@ -24,7 +24,7 @@ use lookaheadkv::runtime::artifacts::default_artifacts_dir;
 use lookaheadkv::runtime::{
     Backend, DecodeOut, DecodeSeq, GraphStats, Manifest, ReferenceBackend, Runtime, Value,
 };
-use lookaheadkv::scheduler::{EngineLoop, LoopConfig, Reply, Request, RequestQueue};
+use lookaheadkv::scheduler::{EngineLoop, LoopConfig, Priority, Reply, Request, RequestQueue};
 use lookaheadkv::server::{serve_listener, ServerConfig};
 use lookaheadkv::util::json;
 
@@ -196,6 +196,8 @@ fn run_loop(prompts: &[String], prefix_cache: bool) -> (Vec<Reply>, Arc<Metrics>
                 budget: 16,
                 max_new: 5,
                 temperature: 0.0,
+                tenant: 0,
+                priority: Priority::Normal,
                 reply: tx,
             })
             .expect("submit");
@@ -314,6 +316,8 @@ fn monolithic_fallback_without_chunked_support_is_identical() {
                     budget: 16,
                     max_new: 4,
                     temperature: 0.0,
+                    tenant: 0,
+                    priority: Priority::Normal,
                     reply: tx,
                 })
                 .expect("submit");
