@@ -89,6 +89,34 @@ def lkv_unflatten(flat, cfg, lkv_cfg):
     return {"emb": emb, "lora": lora}
 
 
+def pred_weight_order(cfg) -> list[str]:
+    names = []
+    for i in range(cfg.n_layers):
+        for g in range(cfg.n_kv_heads):
+            names += [f"l{i}.h{g}.w1", f"l{i}.h{g}.b1", f"l{i}.h{g}.w2", f"l{i}.h{g}.b2"]
+    return names
+
+
+def pred_flatten(pred, cfg):
+    flat = []
+    for i in range(cfg.n_layers):
+        for g in range(cfg.n_kv_heads):
+            m = pred[i][g]
+            flat += [m["w1"], m["b1"], m["w2"], m["b2"]]
+    return flat
+
+
+def pred_unflatten(flat, cfg):
+    it = iter(flat)
+    out = []
+    for _ in range(cfg.n_layers):
+        layer = []
+        for _ in range(cfg.n_kv_heads):
+            layer.append({"w1": next(it), "b1": next(it), "w2": next(it), "b2": next(it)})
+        out.append(layer)
+    return out
+
+
 class Builder:
     def __init__(self, out_dir: str):
         self.out = out_dir
@@ -108,6 +136,7 @@ class Builder:
             "decode_caps": list(DECODE_CAPS),
             "models": {},
             "lkv_variants": {},
+            "predictors": {},
             "graphs": {},
             "goldens": {},
         }
@@ -140,6 +169,25 @@ class Builder:
             "weights": wfile, "param_names": order,
             "trainable_params": int(LK.lkv_param_count(cfg, lkv_cfg)),
             "graph_suffix": graph_suffix(lkv_cfg),
+        }
+
+    def add_predictor(self, model: str, cfg, pred, hidden: int):
+        """Importance-predictor weights for one model: per-(layer, KV-head)
+        Linear(dh->hidden)->ReLU->Linear(hidden->1) over pre-RoPE keys.
+        The Rust runtime rejects ``method=predictor`` for models without a
+        ``predictors`` entry; an empty weights file in a synthetic manifest
+        means the reference backend synthesizes the weights itself."""
+        order = pred_weight_order(cfg)
+        flat = pred_flatten(pred, cfg)
+        wfile = f"weights/pred_{model}.npz"
+        np.savez(os.path.join(self.out, wfile), **{n: np.asarray(a) for n, a in zip(order, flat)})
+        per_head = cfg.head_dim * hidden + 2 * hidden + 1
+        self.manifest["predictors"][model] = {
+            "model": model,
+            "hidden": hidden,
+            "weights": wfile,
+            "param_names": order,
+            "trainable_params": int(cfg.n_layers * cfg.n_kv_heads * per_head),
         }
 
     # -- graphs ------------------------------------------------------------
@@ -199,6 +247,7 @@ def graph_suffix(lkv_cfg: LookaheadConfig) -> str:
 # --------------------------------------------------------------------------
 
 PREFILL_OUTS = ["k", "v", "logits", "window_scores", "h2o_scores"]
+PREFILL_PRED_OUTS = PREFILL_OUTS + ["pred_scores"]
 PREFILL_LKV_OUTS = ["k", "v", "logits", "lkv_scores"]
 DECODE_OUTS = ["logits", "k_cache", "v_cache", "probs"]
 
@@ -271,6 +320,52 @@ def lower_model(b: Builder, name: str, golden: bool, buckets=PREFILL_BUCKETS, ca
     return cfg, params, wspecs
 
 
+def lower_pred_graphs(b: Builder, name: str, cfg, params, wspecs, pred, buckets, golden: bool):
+    """Predictor-augmented base prefill: the prefill_base outputs plus
+    streamed per-KV-head MLP scores over pre-RoPE keys. Predictor weights
+    are runtime inputs after the model weights, so a retrained predictor
+    reuses the same HLO."""
+    n_w = len(wspecs)
+    pred_specs = [_spec(a.shape, a.dtype) for a in pred_flatten(pred, cfg)]
+    n_pw = len(pred_specs)
+    rng = np.random.default_rng(2)
+
+    for s in buckets:
+        def pred_fn(*args, _s=s):
+            params_ = M.unflatten_params(cfg, list(args[:n_w]))
+            pred_ = pred_unflatten(list(args[n_w:n_w + n_pw]), cfg)
+            tokens, length, logit_pos = args[n_w + n_pw:]
+            out = M.prefill_pred(
+                params_, cfg, pred_, tokens, length, logit_pos, window=OBS_WINDOW
+            )
+            return tuple(out[k] for k in PREFILL_PRED_OUTS)
+
+        specs = wspecs + pred_specs + [_spec((s,), I32), _spec((), I32), _spec((), I32)]
+        golden_args = None
+        if golden and s == buckets[0]:
+            golden_args = (
+                M.flatten_params(cfg, params)
+                + pred_flatten(pred, cfg)
+                + [
+                    jnp.asarray(rng.integers(0, 255, (s,)), I32),
+                    jnp.asarray(100, I32),
+                    jnp.asarray(99, I32),
+                ]
+            )
+        b.lower(
+            f"{name}/prefill_pred_s{s}",
+            pred_fn,
+            specs,
+            ["tokens", "length", "logit_pos"],
+            PREFILL_PRED_OUTS,
+            {
+                "kind": "prefill_pred", "model": name, "s": s, "window": OBS_WINDOW,
+                "n_pred_weight_args": n_pw,
+            },
+            golden_args,
+        )
+
+
 def lower_lkv_graphs(b: Builder, name: str, cfg, params, wspecs, lkv_cfg, buckets, golden: bool):
     """One graph per (shape bucket, n_lookahead, target-set); lkv weights
     are runtime inputs so trained variants with identical shapes share it."""
@@ -335,6 +430,15 @@ def main():
             print(f"[aot] {name}: no checkpoint, skipping")
             continue
         cfg, params, wspecs = lower_model(b, name, golden=(name == "lkv-tiny"))
+        # Importance predictor: export weights (deterministic init until a
+        # training recipe lands) and lower the pred-augmented prefill.
+        pred_hidden = 64
+        pred = M.init_predictor(cfg, pred_hidden, jax.random.PRNGKey(7))
+        b.add_predictor(name, cfg, pred, pred_hidden)
+        lower_pred_graphs(
+            b, name, cfg, params, wspecs, pred, PREFILL_BUCKETS,
+            golden=(name == "lkv-tiny"),
+        )
         # Register every trained LookaheadKV variant for this model and
         # lower the graphs its shapes require.
         for fn in sorted(os.listdir(CKPT_DIR)):

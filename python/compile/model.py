@@ -163,21 +163,26 @@ def core_forward(
     lora: Optional[LoraSpec] = None,
     reducer: Optional[Reducer] = None,
     collect_kv: bool = False,
+    collect_pre_rope: bool = False,
 ):
     """Runs all layers; returns (hidden [T, d], aux dict).
 
     aux["k"]/aux["v"]: [L, Hkv, T, dh] post-RoPE keys / values when
-    collect_kv; aux["reduced"]: list of reducer outputs per layer.
+    collect_kv; aux["k_pre"]: [L, Hkv, T, dh] pre-RoPE keys when
+    collect_pre_rope (the importance predictor's input); aux["reduced"]:
+    list of reducer outputs per layer.
     """
     t = x.shape[0]
     cos, sin = rope_cos_sin(pos_ids, cfg.head_dim, cfg.rope_theta)
     add_mask = jnp.where(mask, 0.0, NEG_INF)  # [T, T]
-    ks, vs, reduced = [], [], []
+    ks, vs, kpres, reduced = [], [], [], []
     for li, layer in enumerate(params["layers"]):
         h = rmsnorm(x, layer["attn_norm"])
         q = _linear(h, layer["wq"], "wq", li, lora).reshape(t, cfg.n_heads, cfg.head_dim)
         k = _linear(h, layer["wk"], "wk", li, lora).reshape(t, cfg.n_kv_heads, cfg.head_dim)
         v = _linear(h, layer["wv"], "wv", li, lora).reshape(t, cfg.n_kv_heads, cfg.head_dim)
+        if collect_pre_rope:
+            kpres.append(jnp.transpose(k, (1, 0, 2)))  # [Hkv, T, dh]
         q = apply_rope(q, cos, sin)
         k = apply_rope(k, cos, sin)
         k_rep = jnp.repeat(k, cfg.group, axis=1)  # [T, H, dh]
@@ -199,6 +204,8 @@ def core_forward(
     if collect_kv:
         aux["k"] = jnp.stack(ks)  # [L, Hkv, T, dh]
         aux["v"] = jnp.stack(vs)
+    if collect_pre_rope:
+        aux["k_pre"] = jnp.stack(kpres)  # [L, Hkv, T, dh]
     if reducer is not None:
         aux["reduced"] = reduced
     return x, aux
@@ -277,6 +284,87 @@ def prefill(
         "logits": logits,
         "window_scores": jnp.stack([r["win"] for r in aux["reduced"]]),
         "h2o_scores": jnp.stack([r["h2o"] for r in aux["reduced"]]),
+    }
+
+
+# --------------------------------------------------------------------------
+# Serving prefill with the learned importance predictor (pred_scores)
+# --------------------------------------------------------------------------
+
+
+def init_predictor(cfg: ModelConfig, hidden: int, key: jax.Array) -> list:
+    """Per-(layer, KV-head) ``Linear(dh->hidden)->ReLU->Linear(hidden->1)``
+    importance-predictor modules over pre-RoPE keys. Returns an
+    [L][Hkv] nested list of dicts with w1 [dh, hidden], b1 [hidden],
+    w2 [hidden], b2 [] (small-normal init; stands in until a predictor
+    training recipe lands)."""
+    heads = []
+    for _ in range(cfg.n_layers):
+        layer = []
+        for _ in range(cfg.n_kv_heads):
+            key, k1, k2, k3, k4 = jax.random.split(key, 5)
+            layer.append(
+                {
+                    "w1": jax.random.normal(k1, (cfg.head_dim, hidden)) * 0.02,
+                    "b1": jax.random.normal(k2, (hidden,)) * 0.02,
+                    "w2": jax.random.normal(k3, (hidden,)) * 0.02,
+                    "b2": jax.random.normal(k4, ()) * 0.02,
+                }
+            )
+        heads.append(layer)
+    return heads
+
+
+def prefill_pred(
+    params: dict,
+    cfg: ModelConfig,
+    pred: list,
+    tokens: jnp.ndarray,
+    length: jnp.ndarray,
+    logit_pos: Optional[jnp.ndarray] = None,
+    window: int = OBS_WINDOW,
+):
+    """``prefill`` plus ``pred_scores [L, Hkv, S]``: every pre-RoPE key row
+    scored by its (layer, KV-head) predictor MLP, padded rows zeroed —
+    the AOT twin of the reference backend's streamed predictor sinks."""
+    s = tokens.shape[0]
+    x = params["emb"][tokens]
+    pos = jnp.arange(s)
+    valid = pos < length
+    mask = (pos[None, :] <= pos[:, None]) & valid[None, :] & valid[:, None]
+    win_start = jnp.clip(length - window, 0, s - window)
+
+    def reducer(li, q, k_rep, v, probs):
+        probs = probs * valid[None, :, None]  # zero padded query rows
+        h2o = jnp.sum(probs, axis=1) / jnp.maximum(length, 1).astype(jnp.float32)
+        win = jax.lax.dynamic_slice(
+            probs, (0, win_start, 0), (cfg.n_heads, window, s)
+        )  # [H, W, S]
+        return {"h2o": h2o, "win": win}
+
+    hidden, aux = core_forward(
+        params, cfg, x, pos, mask, reducer=reducer, collect_kv=True, collect_pre_rope=True
+    )
+    if logit_pos is None:
+        logit_pos = jnp.maximum(length - 1, 0)
+    logits = _head_logits(params, hidden[logit_pos])
+    k_pre = aux["k_pre"]  # [L, Hkv, S, dh]
+    layers = []
+    for li in range(cfg.n_layers):
+        per_head = []
+        for g in range(cfg.n_kv_heads):
+            m = pred[li][g]
+            act = jax.nn.relu(k_pre[li, g] @ m["w1"] + m["b1"])  # [S, hidden]
+            per_head.append(act @ m["w2"] + m["b2"])  # [S]
+        layers.append(jnp.stack(per_head))
+    pred_scores = jnp.stack(layers) * valid[None, None, :]
+    return {
+        "k": aux["k"],
+        "v": aux["v"],
+        "logits": logits,
+        "window_scores": jnp.stack([r["win"] for r in aux["reduced"]]),
+        "h2o_scores": jnp.stack([r["h2o"] for r in aux["reduced"]]),
+        "pred_scores": pred_scores,
     }
 
 

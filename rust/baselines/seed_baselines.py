@@ -62,6 +62,9 @@ def select_ms(len_, kind):
         "TOVA": 80,
         "StreamingLLM": 6,
         "LookaheadKV": 90,
+        # Predictor selection reuses H2O's post-processing (head-mean +
+        # pool + top-k) over precomputed per-key MLP scores.
+        "Predictor": 90,
     }[kind]
     return ms(per_len * len_) + 0.02
 
@@ -84,7 +87,15 @@ def row(name, mean):
 def bench_eviction():
     rows = []
     for ln in (128, 512, 1024, 4096):
-        for m in ("SnapKV", "PyramidKV", "H2O", "TOVA", "StreamingLLM", "LookaheadKV"):
+        for m in (
+            "SnapKV",
+            "PyramidKV",
+            "H2O",
+            "TOVA",
+            "StreamingLLM",
+            "LookaheadKV",
+            "Predictor",
+        ):
             rows.append(row(f"select/{m}/len{ln}", select_ms(ln, m)))
     return rows
 

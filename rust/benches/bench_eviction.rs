@@ -17,6 +17,7 @@ fn synth_bundle(rng: &mut Rng, len: usize, l: usize, h: usize, w: usize) -> Scor
         win_rows: w,
         h2o_scores: Some(TensorF::new(vec![l, h, s], rand(rng, l * h * s))),
         lkv_scores: Some(TensorF::new(vec![l, h, s], rand(rng, l * h * s))),
+        pred_scores: Some(TensorF::new(vec![l, h, s], rand(rng, l * h * s))),
         w_use_override: None,
     }
 }
@@ -32,6 +33,7 @@ fn main() {
         Method::Tova,
         Method::StreamingLLM,
         Method::LookaheadKV { variant: "main".into() },
+        Method::Predictor,
     ];
     let mut results = Vec::new();
     for len in [128usize, 512, 1024, 4096] {
@@ -45,6 +47,19 @@ fn main() {
             });
             results.push(r);
         }
+        // Predictor selection consumes precomputed per-key MLP scores, so
+        // its per-token cost must stay in H2O's ballpark (same head-mean +
+        // pool + top-k post-processing; the +0.05 ms absorbs timer noise
+        // on the sub-0.1 ms rows).
+        let min_of = |name: &str| {
+            results.iter().find(|r| r.name == name).map(|r| r.ms.min).unwrap_or(f64::MAX)
+        };
+        let (pred, h2o) =
+            (min_of(&format!("select/Predictor/len{len}")), min_of(&format!("select/H2O/len{len}")));
+        assert!(
+            pred <= h2o * 1.1 + 0.05,
+            "predictor selection overhead {pred:.4} ms exceeds 1.1x H2O ({h2o:.4} ms) at len {len}"
+        );
     }
     record_named("eviction", &results);
 }

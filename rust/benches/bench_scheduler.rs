@@ -35,6 +35,7 @@ fn main() {
                 budget: 8,
                 max_new: 4,
                 temperature: 0.0,
+                knobs: Default::default(),
                 tenant: 0,
                 priority: Priority::Normal,
                 reply: tx,
@@ -138,6 +139,7 @@ fn run_mixed_once(shorts: &[Vec<i32>], long_prompt: &[i32], chunk: usize, metric
                 budget: 24,
                 max_new: 48,
                 temperature: 0.0,
+                knobs: Default::default(),
                 tenant: 0,
                 priority: Priority::Normal,
                 reply: tx,
@@ -154,6 +156,7 @@ fn run_mixed_once(shorts: &[Vec<i32>], long_prompt: &[i32], chunk: usize, metric
             budget: 48,
             max_new: 8,
             temperature: 0.0,
+            knobs: Default::default(),
             tenant: 0,
             priority: Priority::Normal,
             reply: tx,
@@ -185,6 +188,7 @@ fn run_loop_once(prompts: &[Vec<i32>], batched: bool) {
                 budget: 24,
                 max_new: 16,
                 temperature: 0.0,
+                knobs: Default::default(),
                 tenant: 0,
                 priority: Priority::Normal,
                 reply: tx,

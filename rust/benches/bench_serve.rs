@@ -111,6 +111,7 @@ fn run_trace(suite: &OpenLoopSuite, preemption: bool) -> RunStats {
                 budget,
                 max_new,
                 temperature: 0.0,
+                knobs: Default::default(),
                 tenant: a.tenant,
                 priority,
                 reply: tx.clone(),

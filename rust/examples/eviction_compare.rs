@@ -32,6 +32,8 @@ fn main() -> anyhow::Result<()> {
         Method::Laq,
         Method::SpecKV,
         Method::LookaheadKV { variant: "main".into() },
+        // Learned importance predictor (synthesized weights offline).
+        Method::Predictor,
     ];
 
     // GT importance per sample (FullKV greedy decode attention, Eq. 1).

@@ -283,8 +283,9 @@ impl Engine {
             (PassKind::Base, model)
         };
         let variant = method.lkv_variant();
+        let pred = matches!(method, Method::Predictor);
         let state =
-            self.new_pass_state(&pass_model, variant, len, len - 1, seed, ctx.as_deref_mut())?;
+            self.new_pass_state(&pass_model, variant, len, len - 1, pred, seed, ctx.as_deref_mut())?;
         let recorder = prefix.map(|p| Recorder {
             block: p.block_size,
             model: pass_model.clone(),
@@ -318,6 +319,7 @@ impl Engine {
         variant: Option<&str>,
         len: usize,
         logit_pos: usize,
+        pred: bool,
         seed: Option<&PrefixSeed>,
         ctx: Option<&mut PagedCtx<'_>>,
     ) -> Result<ChunkState> {
@@ -325,15 +327,23 @@ impl Engine {
         let Some(ctx) = ctx else {
             return match seed {
                 Some(s) => ChunkState::resume(m, pass_model, variant, len, logit_pos, s),
-                None => ChunkState::new(m, pass_model, variant, len, logit_pos),
+                None => ChunkState::new(m, pass_model, variant, len, logit_pos, pred),
             };
         };
         let dims = self.kv_dims(pass_model)?;
         let blocks = ctx.alloc_blocks(len, dims.slot_floats())?;
         let bs = ctx.arena.block_size();
         let res = (|| -> Result<ChunkState> {
-            let mut st =
-                ChunkState::new_paged(m, pass_model, variant, len, logit_pos, blocks.clone(), bs)?;
+            let mut st = ChunkState::new_paged(
+                m,
+                pass_model,
+                variant,
+                len,
+                logit_pos,
+                pred,
+                blocks.clone(),
+                bs,
+            )?;
             if let Some(s) = seed {
                 st.check_seed(m, s)?;
                 ctx.arena.scatter_dense(&dims, &blocks, 0, &s.k, &s.v)?;
@@ -352,6 +362,10 @@ impl Engine {
     /// (or too long) to resume at all.
     pub fn prefix_pass_info(&self, len: usize, method: &Method) -> Result<PrefixPassInfo> {
         anyhow::ensure!(len >= 2, "prompt of {len} tokens is too short for prefix reuse");
+        anyhow::ensure!(
+            !matches!(method, Method::Predictor),
+            "predictor prefills do not use the prefix cache (per-key scores are not recorded)"
+        );
         if method.lkv_variant().is_some() {
             // Lookahead pass: pure KV accumulation (scores come from the
             // finalize suffix pass); everything but the logits row is
@@ -522,6 +536,7 @@ impl ChunkedPrefill {
                         None,
                         self.prompt.len(),
                         self.prompt.len() - 1,
+                        false,
                         None,
                         ctx.as_deref_mut(),
                     )?;
@@ -649,6 +664,7 @@ impl ChunkedPrefill {
             None,
             self.concat.len(),
             len - 1,
+            false,
             None,
             ctx.as_deref_mut(),
         )?;

@@ -5,6 +5,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use super::Engine;
+use crate::eviction::spec::PolicyKnobs;
 use crate::eviction::Method;
 use crate::kvcache::SeqCache;
 use crate::model::sampler::Sampler;
@@ -51,11 +52,21 @@ pub struct GenOptions {
     /// Accumulate ground-truth importance from decode attention (Table 8);
     /// only meaningful with `Method::FullKV`.
     pub collect_gt: bool,
+    /// Per-request eviction knob overrides (window/kernel/sinks) from a
+    /// [`crate::eviction::spec::PolicySpec`]; empty = engine defaults.
+    pub knobs: PolicyKnobs,
 }
 
 impl GenOptions {
     pub fn new(budget: usize, max_new: usize) -> GenOptions {
-        GenOptions { budget, max_new, temperature: 0.0, seed: 0, collect_gt: false }
+        GenOptions {
+            budget,
+            max_new,
+            temperature: 0.0,
+            seed: 0,
+            collect_gt: false,
+            knobs: PolicyKnobs::default(),
+        }
     }
 }
 
@@ -141,6 +152,7 @@ impl Engine {
         // 1-2. prefill + select
         let mut evcfg = self.cfg.eviction;
         evcfg.budget = opts.budget;
+        opts.knobs.apply(&mut evcfg);
         let pre = self.prefill_for_method(prompt, method)?;
         let t_sel = Instant::now();
         let sel = method.select(&evcfg, n_layers, &pre.bundle);
@@ -218,6 +230,7 @@ impl Engine {
             temperature,
             seed,
             collect_gt: true,
+            knobs: PolicyKnobs::default(),
         };
         let res = self.generate(prompt, &Method::FullKV, &opts)?;
         Ok(res.gt_scores.expect("collect_gt was set"))

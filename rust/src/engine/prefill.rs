@@ -102,6 +102,41 @@ impl Engine {
         ))
     }
 
+    /// Run `prefill_pred` (base prefill plus the streamed per-KV-head
+    /// importance MLP over pre-RoPE keys) for `model` over `tokens`.
+    fn run_prefill_pred(
+        &self,
+        model: &str,
+        tokens: &[i32],
+        length: usize,
+        logit_pos: usize,
+    ) -> Result<(RawPrefill, TensorF, usize)> {
+        let m = self.rt.manifest();
+        anyhow::ensure!(
+            m.predictor(model).is_some(),
+            "no importance predictor for model {model:?} (manifest has no predictors entry)"
+        );
+        let bucket = m.prefill_bucket(length)?;
+        let key = m.graph_key_prefill_pred(model, bucket);
+        let inputs = vec![
+            Value::vec_i32(pad_to(tokens, bucket)),
+            Value::scalar_i32(length as i32),
+            Value::scalar_i32(logit_pos as i32),
+        ];
+        let out = self.rt.execute(&key, None, &inputs)?;
+        anyhow::ensure!(out.len() == 6, "predictor graph {key}: {} outputs, want 6", out.len());
+        // outputs: k, v, logits, window_scores, h2o_scores, pred_scores
+        let mut it = out.into_iter();
+        let raw = RawPrefill {
+            k: it.next().unwrap().into_f32()?,
+            v: it.next().unwrap().into_f32()?,
+            logits: it.next().unwrap().into_vec_f32().context("logits")?,
+            window_scores: it.next().unwrap().into_f32()?,
+            h2o_scores: it.next().unwrap().into_f32()?,
+        };
+        Ok((raw, it.next().unwrap().into_f32()?, bucket))
+    }
+
     fn run_prefill_lkv(
         &self,
         model: &str,
@@ -235,6 +270,30 @@ impl Engine {
             bundle.w_use_override = Some(nd); // aggregate exactly the draft rows
             bundle.window_scores = Some(raw.window_scores);
             bundle.h2o_scores = Some(raw.h2o_scores);
+            return Ok(PrefillOutput {
+                k: raw.k,
+                v: raw.v,
+                logits: raw.logits,
+                bundle,
+                bucket,
+                breakdown: bd,
+                blocks: None,
+            });
+        }
+
+        // Learned importance predictor: one predictor-augmented base
+        // prefill (the MLP scores stream out of the same forward pass).
+        if matches!(method, Method::Predictor) {
+            let t0 = Instant::now();
+            let (raw, pred_scores, bucket) =
+                self.run_prefill_pred(&model, tokens, len, len - 1)?;
+            bd.forward_ms = ms(t0);
+            let mut bundle = ScoreBundle::empty(len);
+            bundle.window_scores = Some(raw.window_scores);
+            bundle.h2o_scores = Some(raw.h2o_scores);
+            bundle.pred_scores = Some(pred_scores);
+            bundle.win_start = win_start(len, obs_w, bucket);
+            bundle.win_rows = obs_w.min(len);
             return Ok(PrefillOutput {
                 k: raw.k,
                 v: raw.v,

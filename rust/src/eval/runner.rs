@@ -58,6 +58,7 @@ pub fn run_suite(
             temperature: cfg.temperature,
             seed: cfg.seed ^ i as u64,
             collect_gt: false,
+            knobs: Default::default(),
         };
         let prompt = encode(&sample.prompt(), true, false);
         let res = engine.generate(&prompt, method, &opts)?;

@@ -23,10 +23,17 @@
 //! | `lkv+suffix`  | mean of normalized lookahead + suffix scores   | Table 7 ablation |
 //! | `laq`         | draft re-query scores (2-pass, target model)   | Lookahead Q-Cache |
 //! | `speckv`      | draft re-query scores (draft model)            | SpecKV |
+//! | `predictor`   | learned per-head MLP over pre-RoPE keys        | SmartKV-style learned policy |
+//!
+//! Policies are constructed through [`spec::PolicySpec`], the structured
+//! policy API shared by the CLI, the HTTP server and the eval/bench
+//! harnesses; `Method::parse` strings remain supported as a thin
+//! compatibility layer over it.
 
 pub mod policies;
 pub mod pooling;
 pub mod scores;
+pub mod spec;
 
 use crate::util::tensor::TensorF;
 
@@ -47,6 +54,10 @@ pub struct ScoreBundle {
     pub h2o_scores: Option<TensorF>,
     /// `[L, H, S]` learned lookahead importance scores.
     pub lkv_scores: Option<TensorF>,
+    /// `[L, Hkv, S]` learned importance-predictor scores: one per-head
+    /// MLP evaluation of each pre-RoPE key row (KV heads, not query
+    /// heads — the predictor reads key states).
+    pub pred_scores: Option<TensorF>,
     /// Override for how many suffix rows the SnapKV-family aggregation
     /// uses (draft bundles aggregate exactly the draft rows, which may be
     /// fewer than the config window).
@@ -62,6 +73,7 @@ impl ScoreBundle {
             win_rows: 0,
             h2o_scores: None,
             lkv_scores: None,
+            pred_scores: None,
             w_use_override: None,
         }
     }
@@ -142,6 +154,10 @@ pub enum Method {
     LkvSuffix { variant: String },
     Laq,
     SpecKV,
+    /// Learned importance predictor: a per-head `Linear(dh→64)→ReLU→
+    /// Linear(64→1)` MLP over pre-RoPE keys, scored inside the prefill
+    /// attention loop (no extra pass, no draft generation).
+    Predictor,
 }
 
 impl Method {
@@ -157,6 +173,7 @@ impl Method {
             "tova" => Method::Tova,
             "laq" => Method::Laq,
             "speckv" => Method::SpecKV,
+            "predictor" => Method::Predictor,
             _ => {
                 // Prefix-parsed families. `variant_of` only accepts an
                 // exact name or `name:variant`, so no family can shadow
@@ -186,9 +203,11 @@ impl Method {
             Method::Tova => "TOVA".into(),
             Method::LookaheadKV { variant } if variant == "main" => "LookaheadKV".into(),
             Method::LookaheadKV { variant } => format!("LookaheadKV:{variant}"),
-            Method::LkvSuffix { .. } => "LKV+Suffix".into(),
+            Method::LkvSuffix { variant } if variant == "main" => "LKV+Suffix".into(),
+            Method::LkvSuffix { variant } => format!("LKV+Suffix:{variant}"),
             Method::Laq => "LAQ".into(),
             Method::SpecKV => "SpecKV".into(),
+            Method::Predictor => "Predictor".into(),
         }
     }
 
@@ -218,6 +237,7 @@ impl Method {
             Method::Tova => tova(cfg, n_layers, bundle),
             Method::LookaheadKV { .. } => lookaheadkv(cfg, n_layers, bundle),
             Method::LkvSuffix { .. } => lkv_suffix(cfg, n_layers, bundle),
+            Method::Predictor => predictor(cfg, n_layers, bundle),
         };
         #[cfg(debug_assertions)]
         {
@@ -284,5 +304,42 @@ mod tests {
         assert!(Method::Laq.needs_draft());
         assert!(Method::SpecKV.needs_draft());
         assert!(!Method::SnapKV.needs_draft());
+        assert!(!Method::Predictor.needs_draft());
+    }
+
+    /// `name()` must round-trip through `parse` for every family —
+    /// including non-"main" variants, which `LkvSuffix::name()` used to
+    /// drop (always rendering "LKV+Suffix", so `lkv+suffix:n4_qv` and
+    /// `lkv+suffix:main` were indistinguishable in bench/eval rows).
+    #[test]
+    fn name_parse_round_trip_every_family() {
+        let methods = [
+            Method::FullKV,
+            Method::Random { seed: 0 },
+            Method::StreamingLLM,
+            Method::SnapKV,
+            Method::PyramidKV,
+            Method::H2O,
+            Method::Tova,
+            Method::LookaheadKV { variant: "main".into() },
+            Method::LookaheadKV { variant: "ctx64".into() },
+            Method::LkvSuffix { variant: "main".into() },
+            Method::LkvSuffix { variant: "n4_qv".into() },
+            Method::Laq,
+            Method::SpecKV,
+            Method::Predictor,
+        ];
+        for m in methods {
+            let name = m.name();
+            let parsed = Method::parse(&name.to_lowercase())
+                .unwrap_or_else(|| panic!("{name:?} must parse back"));
+            assert_eq!(parsed, m, "round trip through {name:?}");
+        }
+        // The variant now survives the name: distinct variants render
+        // distinctly.
+        assert_ne!(
+            Method::LkvSuffix { variant: "main".into() }.name(),
+            Method::LkvSuffix { variant: "n4_qv".into() }.name()
+        );
     }
 }

@@ -168,6 +168,23 @@ pub fn lookaheadkv(cfg: &EvictionConfig, n_layers: usize, bundle: &ScoreBundle) 
     Selection { per_layer }
 }
 
+/// Learned importance predictor: per-KV-head MLP scores over pre-RoPE
+/// keys, head-averaged, max-pooled and top-k'd with the suffix window
+/// protected (same post-processing as H2O/SnapKV so the comparison
+/// isolates the score source).
+pub fn predictor(cfg: &EvictionConfig, n_layers: usize, bundle: &ScoreBundle) -> Selection {
+    let ps = bundle.pred_scores.as_ref().expect("predictor selection needs pred_scores");
+    let scores = head_mean_per_layer(ps, bundle.len);
+    let win = protect_window(cfg, bundle.len);
+    let per_layer = (0..n_layers)
+        .map(|l| {
+            let pooled = maxpool1d(&scores[l], cfg.kernel);
+            keep_window_plus_topk(&pooled, bundle.len, cfg.budget, win)
+        })
+        .collect();
+    Selection { per_layer }
+}
+
 /// Table 7: L1-normalize both the lookahead scores and the suffix-window
 /// scores, average them, then select (the paper finds this *hurts*).
 pub fn lkv_suffix(cfg: &EvictionConfig, n_layers: usize, bundle: &ScoreBundle) -> Selection {
@@ -200,6 +217,7 @@ mod tests {
         let mut win = vec![0.0f32; l * h * w * s];
         let mut h2o = vec![0.0f32; l * h * s];
         let mut lkv = vec![0.0f32; l * h * s];
+        let mut pred = vec![0.0f32; l * h * s];
         for li in 0..l {
             for hi in 0..h {
                 for r in 0..w {
@@ -207,6 +225,7 @@ mod tests {
                 }
                 h2o[(li * h + hi) * s + peak] = 1.0;
                 lkv[(li * h + hi) * s + peak] = 1.0;
+                pred[(li * h + hi) * s + peak] = 1.0;
             }
         }
         ScoreBundle {
@@ -216,6 +235,7 @@ mod tests {
             win_rows: 4,
             h2o_scores: Some(TensorF::new(vec![l, h, s], h2o)),
             lkv_scores: Some(TensorF::new(vec![l, h, s], lkv)),
+            pred_scores: Some(TensorF::new(vec![l, h, s], pred)),
             w_use_override: None,
         }
     }
@@ -303,6 +323,20 @@ mod tests {
     }
 
     #[test]
+    fn predictor_keeps_peak_and_window() {
+        let cfg = EvictionConfig { budget: 8, window: 4, kernel: 1, sinks: 2 };
+        let b = bundle_with_peak(32, 32, 9);
+        let sel = predictor(&cfg, 2, &b);
+        for idx in &sel.per_layer {
+            assert_eq!(idx.len(), 8);
+            assert!(idx.contains(&9), "peak kept: {idx:?}");
+            for j in 28..32 {
+                assert!(idx.contains(&j), "window kept: {idx:?}");
+            }
+        }
+    }
+
+    #[test]
     fn lkv_suffix_combines() {
         let cfg = EvictionConfig { budget: 4, window: 4, kernel: 1, sinks: 2 };
         let b = bundle_with_peak(32, 32, 13);
@@ -337,6 +371,7 @@ mod tests {
                 win_rows: w.min(len),
                 h2o_scores: Some(TensorF::new(vec![l, h, s], rnd(rng, l * h * s))),
                 lkv_scores: Some(TensorF::new(vec![l, h, s], rnd(rng, l * h * s))),
+                pred_scores: Some(TensorF::new(vec![l, h, s], rnd(rng, l * h * s))),
                 w_use_override: None,
             };
             let budget = rng.range(1, len + 8);
@@ -348,6 +383,7 @@ mod tests {
                 tova(&cfg, l, &bundle),
                 lookaheadkv(&cfg, l, &bundle),
                 lkv_suffix(&cfg, l, &bundle),
+                predictor(&cfg, l, &bundle),
                 streaming_llm(&cfg, l, len),
                 random(&cfg, l, len, 7),
             ] {

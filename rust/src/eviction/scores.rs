@@ -144,6 +144,83 @@ pub fn lkv_head_sinks<'a>(
         .collect()
 }
 
+/// One per-(layer, KV-head) importance-predictor MLP:
+/// `Linear(dh→hidden) → ReLU → Linear(hidden→1)` over a pre-RoPE key
+/// row. `w1` is `[dh, hidden]` row-major (input-major — the layout
+/// `aot.py` exports), `b1`/`w2` are `[hidden]`, `b2` a scalar.
+#[derive(Clone, Copy)]
+pub struct PredictorMlp<'a> {
+    pub w1: &'a [f32],
+    pub b1: &'a [f32],
+    pub w2: &'a [f32],
+    pub b2: f32,
+}
+
+impl PredictorMlp<'_> {
+    pub fn hidden(&self) -> usize {
+        self.b1.len()
+    }
+
+    /// Score one pre-RoPE key row. `hidden_buf` is caller-provided
+    /// scratch of length `hidden()` so the hot loop allocates nothing.
+    #[inline]
+    pub fn score(&self, key: &[f32], hidden_buf: &mut [f32]) -> f32 {
+        let hid = self.b1.len();
+        hidden_buf[..hid].copy_from_slice(self.b1);
+        for (e, &x) in key.iter().enumerate() {
+            let wrow = &self.w1[e * hid..(e + 1) * hid];
+            for (h, &w) in hidden_buf[..hid].iter_mut().zip(wrow) {
+                *h += x * w;
+            }
+        }
+        let mut out = self.b2;
+        for (&w, &h) in self.w2.iter().zip(hidden_buf[..hid].iter()) {
+            out += w * h.max(0.0);
+        }
+        out
+    }
+}
+
+/// Streaming sink over pre-RoPE **key rows** (not attention probs): each
+/// appended row is scored once by the head's MLP and written at its
+/// absolute position. The predictor analogue of [`ChunkHeadSink`],
+/// driven from the same per-chunk kernel loop, so chunked, monolithic
+/// and paged prefill stay bit-identical by construction (a row's score
+/// depends only on that row's own key).
+pub struct PredictorHeadSink<'a> {
+    mlp: PredictorMlp<'a>,
+    out: &'a mut [f32],
+    hidden: Vec<f32>,
+}
+
+impl PredictorHeadSink<'_> {
+    #[inline]
+    pub fn key_row(&mut self, pos: usize, key: &[f32]) {
+        self.out[pos] = self.mlp.score(key, &mut self.hidden);
+    }
+}
+
+/// Split `bundle.pred_scores` for layer `li` into one sink per KV head,
+/// pairing each head's `[bucket]` slice with its MLP.
+pub fn pred_head_sinks<'a>(
+    bundle: &'a mut ScoreBundle,
+    li: usize,
+    n_kv: usize,
+    bucket: usize,
+    mlps: Vec<PredictorMlp<'a>>,
+) -> Vec<PredictorHeadSink<'a>> {
+    assert_eq!(mlps.len(), n_kv);
+    let t = bundle.pred_scores.as_mut().expect("pred_head_sinks needs pred_scores");
+    t.data[li * n_kv * bucket..(li + 1) * n_kv * bucket]
+        .chunks_mut(bucket)
+        .zip(mlps)
+        .map(|(out, mlp)| {
+            let hidden = vec![0.0; mlp.hidden()];
+            PredictorHeadSink { mlp, out, hidden }
+        })
+        .collect()
+}
+
 /// Decode sink for one (layer, head): exports the normalized row into
 /// the `[L, H, C]` probs tensor (the decode graph's GT-tracking output).
 pub struct ProbsHeadSink<'a> {
@@ -321,6 +398,37 @@ mod tests {
         // window rows capture qi = 1 and qi = 2 (win_start = 1)
         assert_eq!(win.index(&[0, 0, 0]), &[1.0, 2.0, 0.0, 0.0]);
         assert_eq!(win.index(&[0, 0, 1]), &[1.0, 2.0, 3.0, 0.0]);
+    }
+
+    /// The predictor MLP is an exact two-layer perceptron: hand-check a
+    /// tiny instance (dh=2, hidden=2) including the ReLU clamp, then
+    /// check the sink writes at absolute positions per head.
+    #[test]
+    fn predictor_mlp_and_sinks() {
+        // w1 = [[1, -1], [0, 2]] (row-major [dh][hidden]), b1 = [0, -3]
+        // key [2, 1] → pre-act [2*1+1*0, 2*(-1)+1*2-3] = [2, -3]
+        // ReLU → [2, 0]; w2 = [0.5, 10], b2 = 1 → 0.5*2 + 1 = 2
+        let mlp = PredictorMlp {
+            w1: &[1.0, -1.0, 0.0, 2.0],
+            b1: &[0.0, -3.0],
+            w2: &[0.5, 10.0],
+            b2: 1.0,
+        };
+        let mut buf = vec![0.0; 2];
+        assert_eq!(mlp.score(&[2.0, 1.0], &mut buf), 2.0);
+
+        let (n_kv, bucket) = (2usize, 4usize);
+        let mut bundle = ScoreBundle::empty(3);
+        bundle.pred_scores = Some(TensorF::zeros(vec![1, n_kv, bucket]));
+        {
+            let mlps = vec![mlp, mlp];
+            let mut sinks = pred_head_sinks(&mut bundle, 0, n_kv, bucket, mlps);
+            sinks[0].key_row(2, &[2.0, 1.0]);
+            sinks[1].key_row(0, &[2.0, 1.0]);
+        }
+        let ps = bundle.pred_scores.as_ref().unwrap();
+        assert_eq!(ps.index(&[0, 0]), &[0.0, 0.0, 2.0, 0.0]);
+        assert_eq!(ps.index(&[0, 1]), &[2.0, 0.0, 0.0, 0.0]);
     }
 
     #[test]

@@ -1,0 +1,528 @@
+//! Structured policy API: [`PolicySpec`] is the single construction path
+//! for eviction policies across the CLI (`--method`), per-request HTTP
+//! JSON overrides on `/generate`, the eval runner and every bench.
+//!
+//! A spec names a policy *family* (the canonical slug) plus optional
+//! family-specific parameters (trained-variant name, random seed) and
+//! per-request knob overrides over the engine's base
+//! [`EvictionConfig`] (budget / window / kernel / sinks). It serializes
+//! to and from JSON with strict unknown-field rejection, and legacy
+//! `Method::parse` strings ("snapkv", "lkv+suffix:n4_qv", ...) remain a
+//! thin compatibility parser mapped through [`PolicySpec::parse_str`] —
+//! guaranteed to resolve to the identical [`Method`] (and therefore
+//! bit-identical selections).
+
+use super::{EvictionConfig, Method};
+use crate::util::json::Json;
+
+/// Optional per-request overrides of the engine's base eviction knobs.
+/// `None` means "use the engine default".
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PolicyKnobs {
+    pub window: Option<usize>,
+    pub kernel: Option<usize>,
+    pub sinks: Option<usize>,
+}
+
+impl PolicyKnobs {
+    pub fn apply(&self, cfg: &mut EvictionConfig) {
+        if let Some(w) = self.window {
+            cfg.window = w;
+        }
+        if let Some(k) = self.kernel {
+            cfg.kernel = k;
+        }
+        if let Some(s) = self.sinks {
+            cfg.sinks = s;
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.window.is_none() && self.kernel.is_none() && self.sinks.is_none()
+    }
+}
+
+/// A structured, serializable eviction-policy specification.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PolicySpec {
+    /// Canonical family slug (see [`families`]).
+    pub family: String,
+    /// Trained-module variant for the lookahead families (default "main").
+    pub variant: Option<String>,
+    /// Seed for the `random` family (default 0).
+    pub seed: Option<u64>,
+    /// Per-request budget override (kept KV per layer).
+    pub budget: Option<usize>,
+    pub knobs: PolicyKnobs,
+}
+
+/// Static metadata for one policy family — what `GET /policies` reports.
+pub struct FamilyInfo {
+    pub family: &'static str,
+    /// Legacy `Method::parse` strings accepted for this family.
+    pub aliases: &'static [&'static str],
+    pub takes_variant: bool,
+    pub takes_seed: bool,
+    /// Runs draft generation before selection (needs a draft model).
+    pub needs_draft: bool,
+    /// Needs importance-predictor weights (manifest `predictors` entry).
+    pub needs_predictor: bool,
+    pub summary: &'static str,
+}
+
+/// Every policy family, in the order they appear in docs and benches.
+pub fn families() -> &'static [FamilyInfo] {
+    const NONE: &[&str] = &[];
+    &[
+        FamilyInfo {
+            family: "full",
+            aliases: &["fullkv"],
+            takes_variant: false,
+            takes_seed: false,
+            needs_draft: false,
+            needs_predictor: false,
+            summary: "keep everything (upper bound)",
+        },
+        FamilyInfo {
+            family: "random",
+            aliases: NONE,
+            takes_variant: false,
+            takes_seed: true,
+            needs_draft: false,
+            needs_predictor: false,
+            summary: "seeded uniform keep-set (sanity floor)",
+        },
+        FamilyInfo {
+            family: "streaming",
+            aliases: &["streamingllm"],
+            takes_variant: false,
+            takes_seed: false,
+            needs_draft: false,
+            needs_predictor: false,
+            summary: "attention sinks + recents (StreamingLLM)",
+        },
+        FamilyInfo {
+            family: "snapkv",
+            aliases: &["snap"],
+            takes_variant: false,
+            takes_seed: false,
+            needs_draft: false,
+            needs_predictor: false,
+            summary: "suffix-window cross-attention (SnapKV)",
+        },
+        FamilyInfo {
+            family: "pyramidkv",
+            aliases: &["pyramid"],
+            takes_variant: false,
+            takes_seed: false,
+            needs_draft: false,
+            needs_predictor: false,
+            summary: "snapkv scores with funnel per-layer budgets (PyramidKV)",
+        },
+        FamilyInfo {
+            family: "h2o",
+            aliases: NONE,
+            takes_variant: false,
+            takes_seed: false,
+            needs_draft: false,
+            needs_predictor: false,
+            summary: "whole-prompt column means + recents (H2O)",
+        },
+        FamilyInfo {
+            family: "tova",
+            aliases: NONE,
+            takes_variant: false,
+            takes_seed: false,
+            needs_draft: false,
+            needs_predictor: false,
+            summary: "last-token attention row (TOVA)",
+        },
+        FamilyInfo {
+            family: "lookaheadkv",
+            aliases: &["lkv"],
+            takes_variant: true,
+            takes_seed: false,
+            needs_draft: false,
+            needs_predictor: false,
+            summary: "learned lookahead-token scores (LookaheadKV)",
+        },
+        FamilyInfo {
+            family: "lkv+suffix",
+            aliases: NONE,
+            takes_variant: true,
+            takes_seed: false,
+            needs_draft: false,
+            needs_predictor: false,
+            summary: "mean of normalized lookahead + suffix scores (Table 7)",
+        },
+        FamilyInfo {
+            family: "laq",
+            aliases: NONE,
+            takes_variant: false,
+            takes_seed: false,
+            needs_draft: true,
+            needs_predictor: false,
+            summary: "draft re-query scores, target model (Lookahead Q-Cache)",
+        },
+        FamilyInfo {
+            family: "speckv",
+            aliases: NONE,
+            takes_variant: false,
+            takes_seed: false,
+            needs_draft: true,
+            needs_predictor: false,
+            summary: "draft re-query scores, draft model (SpecKV)",
+        },
+        FamilyInfo {
+            family: "predictor",
+            aliases: NONE,
+            takes_variant: false,
+            takes_seed: false,
+            needs_draft: false,
+            needs_predictor: true,
+            summary: "learned per-head MLP over pre-RoPE keys (importance predictor)",
+        },
+    ]
+}
+
+fn family_info(family: &str) -> Option<&'static FamilyInfo> {
+    families().iter().find(|f| f.family == family)
+}
+
+impl PolicySpec {
+    /// A bare spec for `family` with no overrides.
+    pub fn new(family: &str) -> PolicySpec {
+        PolicySpec {
+            family: family.to_string(),
+            variant: None,
+            seed: None,
+            budget: None,
+            knobs: PolicyKnobs::default(),
+        }
+    }
+
+    /// The canonical spec of an already-parsed [`Method`].
+    pub fn from_method(m: &Method) -> PolicySpec {
+        let mut spec = match m {
+            Method::FullKV => PolicySpec::new("full"),
+            Method::Random { seed } => {
+                let mut s = PolicySpec::new("random");
+                if *seed != 0 {
+                    s.seed = Some(*seed);
+                }
+                s
+            }
+            Method::StreamingLLM => PolicySpec::new("streaming"),
+            Method::SnapKV => PolicySpec::new("snapkv"),
+            Method::PyramidKV => PolicySpec::new("pyramidkv"),
+            Method::H2O => PolicySpec::new("h2o"),
+            Method::Tova => PolicySpec::new("tova"),
+            Method::LookaheadKV { variant } => {
+                let mut s = PolicySpec::new("lookaheadkv");
+                if variant != "main" {
+                    s.variant = Some(variant.clone());
+                }
+                s
+            }
+            Method::LkvSuffix { variant } => {
+                let mut s = PolicySpec::new("lkv+suffix");
+                if variant != "main" {
+                    s.variant = Some(variant.clone());
+                }
+                s
+            }
+            Method::Laq => PolicySpec::new("laq"),
+            Method::SpecKV => PolicySpec::new("speckv"),
+            Method::Predictor => PolicySpec::new("predictor"),
+        };
+        spec.validate().expect("from_method specs are always valid");
+        spec
+    }
+
+    /// Compatibility parser: every legacy `Method::parse` string maps to
+    /// the spec that resolves back to the identical `Method`.
+    pub fn parse_str(s: &str) -> Option<PolicySpec> {
+        Method::parse(s).map(|m| PolicySpec::from_method(&m))
+    }
+
+    /// Structural validation: known family, family-applicable parameters,
+    /// sane knob values. Returns a human-readable error for 4xx bodies.
+    pub fn validate(&self) -> Result<(), String> {
+        let info = family_info(&self.family)
+            .ok_or_else(|| format!("unknown policy family {:?}", self.family))?;
+        if self.variant.is_some() && !info.takes_variant {
+            return Err(format!("policy family {:?} takes no variant", self.family));
+        }
+        if self.seed.is_some() && !info.takes_seed {
+            return Err(format!("policy family {:?} takes no seed", self.family));
+        }
+        if let Some(v) = &self.variant {
+            if v.is_empty() {
+                return Err("policy variant must be non-empty".to_string());
+            }
+        }
+        if self.budget == Some(0) {
+            return Err("invalid knob budget: must be >= 1".to_string());
+        }
+        if self.knobs.window == Some(0) {
+            return Err("invalid knob window: must be >= 1".to_string());
+        }
+        match self.knobs.kernel {
+            Some(k) if k == 0 || k % 2 == 0 => {
+                return Err(format!("invalid knob kernel: must be odd, got {k}"));
+            }
+            _ => {}
+        }
+        Ok(())
+    }
+
+    /// Resolve to the executable [`Method`].
+    pub fn resolve(&self) -> Result<Method, String> {
+        self.validate()?;
+        let variant = || self.variant.clone().unwrap_or_else(|| "main".to_string());
+        Ok(match self.family.as_str() {
+            "full" => Method::FullKV,
+            "random" => Method::Random { seed: self.seed.unwrap_or(0) },
+            "streaming" => Method::StreamingLLM,
+            "snapkv" => Method::SnapKV,
+            "pyramidkv" => Method::PyramidKV,
+            "h2o" => Method::H2O,
+            "tova" => Method::Tova,
+            "lookaheadkv" => Method::LookaheadKV { variant: variant() },
+            "lkv+suffix" => Method::LkvSuffix { variant: variant() },
+            "laq" => Method::Laq,
+            "speckv" => Method::SpecKV,
+            "predictor" => Method::Predictor,
+            other => return Err(format!("unknown policy family {other:?}")),
+        })
+    }
+
+    /// Apply this spec's knob overrides (not the budget) to a config.
+    pub fn apply_knobs(&self, cfg: &mut EvictionConfig) {
+        self.knobs.apply(cfg);
+    }
+
+    /// Strict JSON deserialization: unknown fields are an error (catches
+    /// typos like "kernal" instead of silently ignoring them).
+    pub fn from_json(v: &Json) -> Result<PolicySpec, String> {
+        let obj = v.as_obj().ok_or_else(|| "policy must be a JSON object".to_string())?;
+        const KNOWN: &[&str] = &["family", "variant", "seed", "budget", "window", "kernel", "sinks"];
+        for k in obj.keys() {
+            if !KNOWN.contains(&k.as_str()) {
+                return Err(format!("unknown policy field {k:?}"));
+            }
+        }
+        let family = v
+            .get("family")
+            .and_then(Json::as_str)
+            .ok_or_else(|| "policy requires a string \"family\"".to_string())?
+            .to_string();
+        let usize_field = |name: &str| -> Result<Option<usize>, String> {
+            match v.get(name) {
+                None => Ok(None),
+                Some(j) => j
+                    .as_usize()
+                    .map(Some)
+                    .ok_or_else(|| format!("policy field {name:?} must be a non-negative integer")),
+            }
+        };
+        let spec = PolicySpec {
+            family,
+            variant: match v.get("variant") {
+                None => None,
+                Some(j) => Some(
+                    j.as_str()
+                        .ok_or_else(|| "policy field \"variant\" must be a string".to_string())?
+                        .to_string(),
+                ),
+            },
+            seed: usize_field("seed")?.map(|s| s as u64),
+            budget: usize_field("budget")?,
+            knobs: PolicyKnobs {
+                window: usize_field("window")?,
+                kernel: usize_field("kernel")?,
+                sinks: usize_field("sinks")?,
+            },
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Serialize; only present fields are emitted, so
+    /// `from_json(to_json(s)) == s` round-trips exactly.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("family", self.family.as_str().into());
+        if let Some(v) = &self.variant {
+            o.set("variant", v.as_str().into());
+        }
+        if let Some(s) = self.seed {
+            o.set("seed", s.into());
+        }
+        if let Some(b) = self.budget {
+            o.set("budget", b.into());
+        }
+        if let Some(w) = self.knobs.window {
+            o.set("window", w.into());
+        }
+        if let Some(k) = self.knobs.kernel {
+            o.set("kernel", k.into());
+        }
+        if let Some(s) = self.knobs.sinks {
+            o.set("sinks", s.into());
+        }
+        o
+    }
+}
+
+/// The `GET /policies` payload: every family with its accepted knobs,
+/// the engine's base knob defaults, and whether predictor weights are
+/// available for the serving model.
+pub fn registry_json(base: &EvictionConfig, predictor_loaded: bool) -> Json {
+    let mut fams = Vec::new();
+    for f in families() {
+        let mut o = Json::obj();
+        o.set("family", f.family.into());
+        o.set("aliases", f.aliases.iter().map(|a| Json::from(*a)).collect::<Vec<_>>().into());
+        let mut knobs = vec!["budget", "window", "kernel", "sinks"];
+        if f.takes_variant {
+            knobs.push("variant");
+        }
+        if f.takes_seed {
+            knobs.push("seed");
+        }
+        o.set("knobs", knobs.into_iter().map(Json::from).collect::<Vec<_>>().into());
+        o.set("needs_draft", f.needs_draft.into());
+        o.set("needs_predictor", f.needs_predictor.into());
+        o.set("summary", f.summary.into());
+        if f.needs_predictor {
+            o.set("available", predictor_loaded.into());
+        }
+        fams.push(o);
+    }
+    let defaults = Json::from_pairs(vec![
+        ("budget", base.budget.into()),
+        ("window", base.window.into()),
+        ("kernel", base.kernel.into()),
+        ("sinks", base.sinks.into()),
+    ]);
+    Json::from_pairs(vec![
+        ("families", fams.into()),
+        ("defaults", defaults),
+        ("predictor_loaded", predictor_loaded.into()),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    /// Every legacy string resolves through PolicySpec to the identical
+    /// Method — the compatibility guarantee for bit-identical selection.
+    #[test]
+    fn every_legacy_string_maps_through_spec() {
+        let strings = [
+            "full",
+            "fullkv",
+            "random",
+            "streaming",
+            "streamingllm",
+            "snapkv",
+            "snap",
+            "pyramidkv",
+            "pyramid",
+            "h2o",
+            "tova",
+            "laq",
+            "speckv",
+            "predictor",
+            "lookaheadkv",
+            "lookaheadkv:ctx64",
+            "lkv",
+            "lkv:n4_qv",
+            "lkv+suffix",
+            "lkv+suffix:n4_qv",
+        ];
+        for s in strings {
+            let m = Method::parse(s).unwrap_or_else(|| panic!("{s:?} must parse"));
+            let spec = PolicySpec::parse_str(s).unwrap_or_else(|| panic!("{s:?} must map to a spec"));
+            assert_eq!(spec.resolve().unwrap(), m, "resolve({s:?})");
+        }
+        assert!(PolicySpec::parse_str("bogus").is_none());
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let samples = [
+            r#"{"family":"snapkv"}"#,
+            r#"{"family":"random","seed":7}"#,
+            r#"{"family":"lookaheadkv","variant":"ctx64","budget":48}"#,
+            r#"{"family":"predictor","budget":32,"window":4,"kernel":5,"sinks":1}"#,
+        ];
+        for s in samples {
+            let spec = PolicySpec::from_json(&json::parse(s).unwrap()).unwrap();
+            let back = PolicySpec::from_json(&spec.to_json()).unwrap();
+            assert_eq!(spec, back, "{s}");
+            // and string-level: to_string → parse → from_json
+            let text = spec.to_json().to_string();
+            let again = PolicySpec::from_json(&json::parse(&text).unwrap()).unwrap();
+            assert_eq!(spec, again, "{text}");
+        }
+    }
+
+    #[test]
+    fn unknown_fields_and_families_rejected() {
+        let bad = [
+            (r#"{"family":"snapkv","kernal":3}"#, "unknown policy field"),
+            (r#"{"family":"zoomkv"}"#, "unknown policy family"),
+            (r#"{"family":"snapkv","variant":"x"}"#, "takes no variant"),
+            (r#"{"family":"h2o","seed":1}"#, "takes no seed"),
+            (r#"{"family":"snapkv","kernel":2}"#, "must be odd"),
+            (r#"{"family":"snapkv","budget":0}"#, "budget"),
+            (r#"{"family":"snapkv","window":0}"#, "window"),
+            (r#"{"budget":8}"#, "requires a string \"family\""),
+            (r#"[1,2]"#, "must be a JSON object"),
+        ];
+        for (text, needle) in bad {
+            let err = PolicySpec::from_json(&json::parse(text).unwrap())
+                .expect_err(&format!("{text} must be rejected"));
+            assert!(err.contains(needle), "{text}: {err:?} should mention {needle:?}");
+        }
+    }
+
+    #[test]
+    fn knob_overrides_apply() {
+        let spec = PolicySpec::from_json(
+            &json::parse(r#"{"family":"h2o","window":4,"kernel":5,"sinks":1}"#).unwrap(),
+        )
+        .unwrap();
+        let mut cfg = EvictionConfig::new(64);
+        spec.apply_knobs(&mut cfg);
+        assert_eq!((cfg.window, cfg.kernel, cfg.sinks), (4, 5, 1));
+        assert_eq!(cfg.budget, 64, "budget is not a knob override");
+        // empty knobs leave the config untouched
+        let mut cfg2 = EvictionConfig::new(64);
+        PolicySpec::new("h2o").apply_knobs(&mut cfg2);
+        assert_eq!((cfg2.window, cfg2.kernel, cfg2.sinks), (8, 3, 2));
+    }
+
+    #[test]
+    fn registry_lists_every_family() {
+        let j = registry_json(&EvictionConfig::new(64), true);
+        let fams = j.req("families").as_arr().unwrap();
+        assert_eq!(fams.len(), families().len());
+        let pred = fams
+            .iter()
+            .find(|f| f.req("family").as_str() == Some("predictor"))
+            .expect("predictor listed");
+        assert_eq!(pred.req("available").as_bool(), Some(true));
+        assert_eq!(j.req("defaults").req("window").as_usize(), Some(8));
+        assert_eq!(j.req("predictor_loaded").as_bool(), Some(true));
+        // every listed family resolves
+        for f in fams {
+            let fam = f.req("family").as_str().unwrap();
+            assert!(PolicySpec::new(fam).resolve().is_ok(), "{fam}");
+        }
+    }
+}

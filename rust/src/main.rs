@@ -14,6 +14,7 @@ use anyhow::Result;
 use lookaheadkv::costmodel::{self, methods::CostConfig, profiles};
 use lookaheadkv::engine::{Engine, EngineConfig, GenOptions};
 use lookaheadkv::eval::{runner, tables};
+use lookaheadkv::eviction::spec::PolicySpec;
 use lookaheadkv::eviction::Method;
 use lookaheadkv::metrics::Metrics;
 use lookaheadkv::model::tokenizer::encode;
@@ -73,7 +74,9 @@ fn print_help() {
          \x20 graphs    [--compile]                           (artifact inventory)\n\
          \n\
          methods: full random streaming snapkv pyramidkv h2o tova laq speckv\n\
-         \x20        lookaheadkv[:variant] lkv+suffix[:variant]\n\
+         \x20        predictor lookaheadkv[:variant] lkv+suffix[:variant]\n\
+         \x20        (all routed through the structured PolicySpec; see\n\
+         \x20        GET /policies or README \"Eviction policies\")\n\
          \n\
          backend: LKV_BACKEND=reference|pjrt|auto (default auto: pjrt when\n\
          \x20        compiled in and artifacts exist, else pure-Rust reference)\n\
@@ -172,14 +175,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
 fn cmd_generate(args: &Args) -> Result<()> {
     let engine = engine_from_args(args)?;
     let prompt_text = args.get_or("prompt", "A7K=Q2Z;lorem;ipsum;dolor;A7K=");
-    let method = Method::parse(args.get_or("method", "lookaheadkv"))
-        .ok_or_else(|| anyhow::anyhow!("unknown method"))?;
+    // `--method` strings go through the structured PolicySpec — the same
+    // construction path the HTTP policy API uses.
+    let method_name = args.get_or("method", "lookaheadkv");
+    let spec = PolicySpec::parse_str(method_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown method {method_name}"))?;
+    let method = spec.resolve().map_err(|e| anyhow::anyhow!(e))?;
     let opts = GenOptions {
-        budget: args.usize("budget", 64),
+        budget: spec.budget.unwrap_or_else(|| args.usize("budget", 64)),
         max_new: args.usize("max-new", 32),
         temperature: args.f64("temperature", 0.0) as f32,
         seed: args.usize("seed", 0) as u64,
         collect_gt: false,
+        knobs: spec.knobs,
     };
     let res = engine.generate(&encode(prompt_text, true, false), &method, &opts)?;
     println!("text: {}", res.text);
@@ -215,7 +223,11 @@ fn cmd_eval(args: &Args) -> Result<()> {
     let methods: Vec<Method> = args
         .list("methods", &["full", "streaming", "snapkv", "lookaheadkv"])
         .iter()
-        .map(|m| Method::parse(m).ok_or_else(|| anyhow::anyhow!("unknown method {m}")))
+        .map(|m| {
+            PolicySpec::parse_str(m)
+                .ok_or_else(|| anyhow::anyhow!("unknown method {m}"))
+                .and_then(|s| s.resolve().map_err(|e| anyhow::anyhow!(e)))
+        })
         .collect::<Result<_>>()?;
     let budgets = args.usize_list("budgets", &[32]);
     let mut rows = Vec::new();

@@ -58,6 +58,18 @@ pub struct VariantMeta {
     pub graph_suffix: String,
 }
 
+/// One trained importance-predictor module set: per-(layer, KV-head)
+/// `Linear(dh→hidden)→ReLU→Linear(hidden→1)` MLPs over pre-RoPE keys,
+/// exported by `aot.py`. An empty `weights_file` means the reference
+/// backend synthesizes the weights deterministically (offline tests).
+#[derive(Debug, Clone)]
+pub struct PredictorMeta {
+    pub model: String,
+    pub hidden: usize,
+    pub weights_file: String,
+    pub trainable_params: usize,
+}
+
 /// Input spec of one runtime (non-weight) argument.
 #[derive(Debug, Clone)]
 pub struct InputSpec {
@@ -96,6 +108,8 @@ pub struct Manifest {
     pub decode_caps: Vec<usize>,
     pub models: BTreeMap<String, ModelMeta>,
     pub variants: BTreeMap<String, VariantMeta>,
+    /// Importance predictors, keyed by model name (one per model).
+    pub predictors: BTreeMap<String, PredictorMeta>,
     pub graphs: BTreeMap<String, GraphMeta>,
     pub goldens: BTreeMap<String, String>,
 }
@@ -158,6 +172,23 @@ impl Manifest {
                 );
             }
         }
+        let mut predictors = BTreeMap::new();
+        if let Some(obj) = v.get("predictors").and_then(Json::as_obj) {
+            for (key, m) in obj {
+                predictors.insert(
+                    key.clone(),
+                    PredictorMeta {
+                        model: m.req("model").as_str().unwrap().to_string(),
+                        hidden: m.req("hidden").as_usize().unwrap(),
+                        weights_file: m.req("weights").as_str().unwrap().to_string(),
+                        trainable_params: m
+                            .get("trainable_params")
+                            .and_then(Json::as_usize)
+                            .unwrap_or(0),
+                    },
+                );
+            }
+        }
         let mut graphs = BTreeMap::new();
         for (key, g) in v.req("graphs").as_obj().context("graphs")? {
             let inputs = g
@@ -209,6 +240,7 @@ impl Manifest {
             decode_caps: v.req("decode_caps").usize_arr(),
             models,
             variants,
+            predictors,
             graphs,
             goldens,
         })
@@ -222,6 +254,13 @@ impl Manifest {
         self.variants
             .get(&format!("{model}/{variant}"))
             .with_context(|| format!("unknown lkv variant {model}/{variant}"))
+    }
+
+    /// The model's importance predictor, if trained/synthesized weights
+    /// are available. `None` is how the serving path rejects
+    /// `method=predictor` for models without a predictor module.
+    pub fn predictor(&self, model: &str) -> Option<&PredictorMeta> {
+        self.predictors.get(model)
     }
 
     pub fn graph(&self, key: &str) -> Result<&GraphMeta> {
@@ -260,6 +299,10 @@ impl Manifest {
         format!("{model}/prefill_lkv_s{s}_{suffix}")
     }
 
+    pub fn graph_key_prefill_pred(&self, model: &str, s: usize) -> String {
+        format!("{model}/prefill_pred_s{s}")
+    }
+
     pub fn graph_key_decode(&self, model: &str, cap: usize) -> String {
         format!("{model}/decode_c{cap}")
     }
@@ -284,6 +327,11 @@ impl Manifest {
         for m in self.models.values() {
             if !m.weights_file.is_empty() && !self.path(&m.weights_file).exists() {
                 bail!("weights missing for {}", m.name);
+            }
+        }
+        for p in self.predictors.values() {
+            if !p.weights_file.is_empty() && !self.path(&p.weights_file).exists() {
+                bail!("predictor weights missing for {}", p.model);
             }
         }
         Ok(())
@@ -311,6 +359,7 @@ impl Manifest {
             decode_caps: caps.clone(),
             models: BTreeMap::new(),
             variants: BTreeMap::new(),
+            predictors: BTreeMap::new(),
             graphs: BTreeMap::new(),
             goldens: BTreeMap::new(),
         };
@@ -330,6 +379,7 @@ impl Manifest {
                 format!("{name}/main"),
                 synthetic_variant(&meta, "main", 8, 4, 16.0),
             );
+            m.predictors.insert(name.to_string(), synthetic_predictor(&meta, 64));
         }
         let draft = m.models["lkv-draft"].clone();
         add_synthetic_graphs(&mut m, &draft, &buckets, &draft_caps, false);
@@ -420,6 +470,17 @@ fn synthetic_variant(
     }
 }
 
+fn synthetic_predictor(model: &ModelMeta, hidden: usize) -> PredictorMeta {
+    // per (layer, kv-head): w1 [dh, hidden] + b1 [hidden] + w2 [hidden] + b2
+    let per_head = model.head_dim * hidden + 2 * hidden + 1;
+    PredictorMeta {
+        model: model.name.clone(),
+        hidden,
+        weights_file: String::new(),
+        trainable_params: model.n_layers * model.n_kv_heads * per_head,
+    }
+}
+
 fn add_synthetic_graphs(
     m: &mut Manifest,
     meta: &ModelMeta,
@@ -462,6 +523,29 @@ fn add_synthetic_graphs(
             },
         );
         if with_lkv {
+            // Predictor-augmented base prefill: identical to prefill_base
+            // plus the streamed per-KV-head MLP scores over pre-RoPE keys.
+            m.graphs.insert(
+                format!("{name}/prefill_pred_s{s}"),
+                GraphMeta {
+                    key: format!("{name}/prefill_pred_s{s}"),
+                    kind: "prefill_pred".to_string(),
+                    model: name.clone(),
+                    file: String::new(),
+                    s: Some(s),
+                    cap: None,
+                    window: Some(m.obs_window),
+                    n_lookahead: None,
+                    suffix: None,
+                    n_weight_args,
+                    n_lkv_weight_args: 0,
+                    inputs: vec![kv_in(s), scalar("length"), scalar("logit_pos")],
+                    outputs: ["k", "v", "logits", "window_scores", "h2o_scores", "pred_scores"]
+                        .iter()
+                        .map(|o| o.to_string())
+                        .collect(),
+                },
+            );
             let suffix = "n8_all";
             let n_lkv_weight_args = 1 + meta.n_layers * 7 * 2;
             m.graphs.insert(
@@ -596,7 +680,16 @@ mod tests {
         for &s in &m.prefill_buckets {
             assert!(m.graphs.contains_key(&m.graph_key_prefill_base("lkv-tiny", s)));
             assert!(m.graphs.contains_key(&m.graph_key_prefill_lkv("lkv-tiny", s, "n8_all")));
+            assert!(m.graphs.contains_key(&m.graph_key_prefill_pred("lkv-tiny", s)));
         }
+        // predictors exist for the served models, not the draft model —
+        // the absence is the serving path's clean rejection signal
+        for name in ["lkv-tiny", "lkv-base"] {
+            let p = m.predictor(name).expect("predictor meta");
+            assert_eq!(p.hidden, 64);
+            assert!(p.trainable_params > 0);
+        }
+        assert!(m.predictor("lkv-draft").is_none());
         assert_eq!(m.decode_cap("lkv-tiny", 100).unwrap(), 128);
         // draft caps are bucket+32 (SpecKV holds prompt + draft tokens)
         assert_eq!(m.decode_cap("lkv-draft", 100).unwrap(), 160);

@@ -168,14 +168,19 @@ impl ChunkState {
     /// Start a chunked prefill of `len` tokens for `model` (a base pass,
     /// or a lookahead pass when `variant` is set). Mirrors the bucket /
     /// window / `win_start` selection of the monolithic graph path.
+    /// `pred` additionally allocates the `[L, Hkv, bucket]` predictor
+    /// score accumulator on base passes — its presence is what tells the
+    /// backend to run the importance-predictor MLPs over pre-RoPE keys
+    /// (other policies pay nothing).
     pub fn new(
         manifest: &Manifest,
         model: &str,
         variant: Option<&str>,
         len: usize,
         logit_pos: usize,
+        pred: bool,
     ) -> Result<ChunkState> {
-        Self::with_backing(manifest, model, variant, len, logit_pos, true)
+        Self::with_backing(manifest, model, variant, len, logit_pos, true, pred)
     }
 
     /// Shared constructor: `dense_kv = false` skips allocating the
@@ -188,6 +193,7 @@ impl ChunkState {
         len: usize,
         logit_pos: usize,
         dense_kv: bool,
+        pred: bool,
     ) -> Result<ChunkState> {
         anyhow::ensure!(len >= 1, "chunked prefill needs at least one token");
         anyhow::ensure!(logit_pos < len, "logit_pos {logit_pos} >= len {len}");
@@ -206,6 +212,13 @@ impl ChunkState {
             bundle.win_rows = window.min(len);
             bundle.window_scores = Some(TensorF::zeros(vec![l, h, window, bucket]));
             bundle.h2o_scores = Some(TensorF::zeros(vec![l, h, bucket]));
+            if pred {
+                anyhow::ensure!(
+                    manifest.predictor(model).is_some(),
+                    "no importance predictor for model {model:?} (manifest has no predictors entry)"
+                );
+                bundle.pred_scores = Some(TensorF::zeros(vec![l, hkv, bucket]));
+            }
         } else {
             bundle.lkv_scores = Some(TensorF::zeros(vec![l, h, bucket]));
         }
@@ -238,6 +251,7 @@ impl ChunkState {
         variant: Option<&str>,
         len: usize,
         logit_pos: usize,
+        pred: bool,
         blocks: Vec<BlockId>,
         block_size: usize,
     ) -> Result<ChunkState> {
@@ -246,7 +260,7 @@ impl ChunkState {
             "paged prefill table of {} blocks x {block_size} cannot hold {len} tokens",
             blocks.len()
         );
-        let mut st = Self::with_backing(manifest, model, variant, len, logit_pos, false)?;
+        let mut st = Self::with_backing(manifest, model, variant, len, logit_pos, false, pred)?;
         st.blocks = Some(blocks);
         Ok(st)
     }
@@ -274,7 +288,7 @@ impl ChunkState {
         logit_pos: usize,
         seed: &PrefixSeed,
     ) -> Result<ChunkState> {
-        let mut st = ChunkState::new(manifest, model, variant, len, logit_pos)?;
+        let mut st = ChunkState::new(manifest, model, variant, len, logit_pos, false)?;
         st.check_seed(manifest, seed)?;
         let meta = manifest.model(model)?;
         let (l, hkv, dh) = (meta.n_layers, meta.n_kv_heads, meta.head_dim);

@@ -348,6 +348,52 @@ impl VariantWeights {
     }
 }
 
+/// One (layer, KV-head) importance-predictor MLP:
+/// `Linear(dh→hidden)→ReLU→Linear(hidden→1)` over the head's pre-RoPE
+/// key (input-major `w1`, matching the `aot.py` export layout).
+#[derive(Debug)]
+struct PredictorHead {
+    w1: Vec<f32>, // [dh, hidden]
+    b1: Vec<f32>, // [hidden]
+    w2: Vec<f32>, // [hidden]
+    b2: f32,
+}
+
+/// Synthesized importance-predictor weights for one model: one MLP per
+/// (layer, KV head), drawn from their *own* RNG stream
+/// (`name_seed("{model}/predictor")`) so adding a predictor never
+/// perturbs the model's synthesized forward weights.
+#[derive(Debug)]
+pub struct PredictorWeights {
+    heads: Vec<PredictorHead>, // [n_layers * n_kv]
+    n_kv: usize,
+}
+
+impl PredictorWeights {
+    fn synthesize(model: &ModelMeta, hidden: usize) -> PredictorWeights {
+        let dims = Dims::of(model);
+        let mut rng = Rng::new(name_seed(&format!("{}/predictor", model.name)));
+        let heads = (0..dims.n_layers * dims.n_kv)
+            .map(|_| {
+                let w1 = dense(&mut rng, dims.dh, hidden);
+                let b1 = (0..hidden).map(|_| rng.normal() as f32 * 0.02).collect();
+                let w2 = dense(&mut rng, hidden, 1);
+                let b2 = rng.normal() as f32 * 0.02;
+                PredictorHead { w1: w1.data, b1, w2: w2.data, b2 }
+            })
+            .collect();
+        PredictorWeights { heads, n_kv: dims.n_kv }
+    }
+
+    /// Borrowed MLP views for layer `li`, one per KV head.
+    fn layer_mlps(&self, li: usize) -> Vec<scores::PredictorMlp<'_>> {
+        self.heads[li * self.n_kv..(li + 1) * self.n_kv]
+            .iter()
+            .map(|h| scores::PredictorMlp { w1: &h.w1, b1: &h.b1, w2: &h.w2, b2: h.b2 })
+            .collect()
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Math primitives
 // ---------------------------------------------------------------------------
@@ -908,7 +954,7 @@ fn prefill_base_stream(
             bundle: &mut bundle,
             logits: &mut logits_slot,
         };
-        prefill_chunk_stream(w, kc, &mut kv, &mut pass, &tokens.data[..length])?;
+        prefill_chunk_stream(w, kc, None, &mut kv, &mut pass, &tokens.data[..length])?;
     }
     // column means over valid query rows (H2O salience) — the exact
     // denominator of the monolithic graph
@@ -958,7 +1004,7 @@ fn prefill_lkv_stream(
             bundle: &mut bundle,
             logits: &mut logits_slot,
         };
-        prefill_chunk_stream(w, kc, &mut kv, &mut pass, &tokens.data[..length])?;
+        prefill_chunk_stream(w, kc, None, &mut kv, &mut pass, &tokens.data[..length])?;
     }
     let mut lkv_scores = TensorF::zeros(vec![nl, nh, s]);
     {
@@ -1007,6 +1053,7 @@ struct ChunkScratch<'a> {
 fn prefill_chunk_naive<A: KvAccess>(
     w: &ModelWeights,
     kc: &KernelConfig,
+    pred: Option<&PredictorWeights>,
     kv: &mut A,
     pass: &mut ChunkScratch<'_>,
     tokens: &[i32],
@@ -1039,6 +1086,7 @@ fn prefill_chunk_naive<A: KvAccess>(
         linear(&h_norm, c, d, &layer.wq.w, None, &mut q);
         linear(&h_norm, c, d, &layer.wk.w, None, &mut k_new);
         linear(&h_norm, c, d, &layer.wv.w, None, &mut v_new);
+        score_pred_keys(pred, pass, li, dh, done, &k_new);
         apply_rope(&mut q, c, nh, dh, &pos, &w.rope_inv);
         apply_rope(&mut k_new, c, nkv, dh, &pos, &w.rope_inv);
         // append chunk KV at rows done..done+c
@@ -1150,6 +1198,7 @@ fn prefill_chunk_naive<A: KvAccess>(
 fn prefill_chunk_stream<A: KvAccess + Sync>(
     w: &ModelWeights,
     kc: &KernelConfig,
+    pred: Option<&PredictorWeights>,
     kv: &mut A,
     pass: &mut ChunkScratch<'_>,
     tokens: &[i32],
@@ -1183,6 +1232,7 @@ fn prefill_chunk_stream<A: KvAccess + Sync>(
         linear_k(kc, &h_norm, c, d, &layer.wq, None, &mut q);
         linear_k(kc, &h_norm, c, d, &layer.wk, None, &mut k_new);
         linear_k(kc, &h_norm, c, d, &layer.wv, None, &mut v_new);
+        score_pred_keys(pred, pass, li, dh, done, &k_new);
         apply_rope(&mut q, c, nh, dh, &pos, &w.rope_inv);
         apply_rope(&mut k_new, c, nkv, dh, &pos, &w.rope_inv);
         // append chunk KV at rows done..done+c
@@ -1308,6 +1358,36 @@ fn chunk_head_attention<A: KvAccess, S: ScoreSink>(
     }
 }
 
+/// Score one chunk's freshly projected **pre-RoPE** keys with the
+/// per-(layer, KV-head) importance MLPs, writing into
+/// `bundle.pred_scores` at the rows' absolute positions. A no-op unless
+/// both the weights and the accumulator are present, so every other
+/// policy pays nothing. Each score depends only on its own key row, so
+/// chunked, monolithic and paged prefill stay bit-identical by
+/// construction.
+fn score_pred_keys(
+    pred: Option<&PredictorWeights>,
+    pass: &mut ChunkScratch<'_>,
+    li: usize,
+    dh: usize,
+    done: usize,
+    k_new: &[f32],
+) {
+    let Some(pw) = pred else { return };
+    if pass.bundle.pred_scores.is_none() {
+        return;
+    }
+    let nkv = pw.n_kv;
+    let c = k_new.len() / (nkv * dh);
+    let bucket = pass.bucket;
+    let mut sinks = scores::pred_head_sinks(pass.bundle, li, nkv, bucket, pw.layer_mlps(li));
+    for (g, sink) in sinks.iter_mut().enumerate() {
+        for r in 0..c {
+            sink.key_row(done + r, &k_new[(r * nkv + g) * dh..(r * nkv + g) * dh + dh]);
+        }
+    }
+}
+
 /// Shared pre-flight checks for a chunked-pass advance.
 fn check_chunk(state: &ChunkState, tokens: &[i32]) -> Result<()> {
     anyhow::ensure!(!tokens.is_empty(), "empty prefill chunk");
@@ -1326,14 +1406,15 @@ fn check_chunk(state: &ChunkState, tokens: &[i32]) -> Result<()> {
 fn prefill_chunk_dispatch<A: KvAccess + Sync>(
     w: &ModelWeights,
     kc: &KernelConfig,
+    pred: Option<&PredictorWeights>,
     kv: &mut A,
     pass: &mut ChunkScratch<'_>,
     tokens: &[i32],
 ) -> Result<()> {
     if kc.naive {
-        prefill_chunk_naive(w, kc, kv, pass, tokens)
+        prefill_chunk_naive(w, kc, pred, kv, pass, tokens)
     } else {
-        prefill_chunk_stream(w, kc, kv, pass, tokens)
+        prefill_chunk_stream(w, kc, pred, kv, pass, tokens)
     }
 }
 
@@ -1341,6 +1422,7 @@ fn prefill_chunk_dispatch<A: KvAccess + Sync>(
 fn prefill_chunk_ref(
     w: &ModelWeights,
     kc: &KernelConfig,
+    pred: Option<&PredictorWeights>,
     state: &mut ChunkState,
     tokens: &[i32],
 ) -> Result<()> {
@@ -1363,7 +1445,7 @@ fn prefill_chunk_ref(
         bundle,
         logits,
     };
-    prefill_chunk_dispatch(w, kc, &mut kv, &mut pass, tokens)?;
+    prefill_chunk_dispatch(w, kc, pred, &mut kv, &mut pass, tokens)?;
     state.done += c;
     Ok(())
 }
@@ -1971,6 +2053,7 @@ pub struct ReferenceBackend {
     manifest: Manifest,
     models: RefCell<HashMap<String, Rc<ModelWeights>>>,
     variants: RefCell<HashMap<String, Rc<VariantWeights>>>,
+    predictors: RefCell<HashMap<String, Rc<PredictorWeights>>>,
     stats: RefCell<HashMap<String, GraphStats>>,
     kcfg: KernelConfig,
     /// High-water mark of the per-call scratch estimate since the last
@@ -2007,6 +2090,7 @@ impl ReferenceBackend {
             manifest,
             models: RefCell::new(HashMap::new()),
             variants: RefCell::new(HashMap::new()),
+            predictors: RefCell::new(HashMap::new()),
             stats: RefCell::new(HashMap::new()),
             kcfg,
             peak_scratch: Cell::new(0),
@@ -2046,6 +2130,20 @@ impl ReferenceBackend {
         let vmeta = self.manifest.variant(model, variant)?;
         let w = Rc::new(VariantWeights::synthesize(mmeta, vmeta));
         self.variants.borrow_mut().insert(key, Rc::clone(&w));
+        Ok(w)
+    }
+
+    fn predictor_weights(&self, model: &str) -> Result<Rc<PredictorWeights>> {
+        if let Some(w) = self.predictors.borrow().get(model) {
+            return Ok(Rc::clone(w));
+        }
+        let mmeta = self.manifest.model(model)?;
+        let pmeta = self
+            .manifest
+            .predictor(model)
+            .with_context(|| format!("no importance predictor for model {model:?}"))?;
+        let w = Rc::new(PredictorWeights::synthesize(mmeta, pmeta.hidden));
+        self.predictors.borrow_mut().insert(model.to_string(), Rc::clone(&w));
         Ok(w)
     }
 
@@ -2100,6 +2198,35 @@ impl Backend for ReferenceBackend {
                 } else {
                     prefill_base_stream(&w, kc, tokens, length, logit_pos, window)
                 }
+            }
+            "prefill_pred" => {
+                anyhow::ensure!(variant.is_none(), "prefill_pred graphs take no variant");
+                let tokens = inputs[0].as_i32()?;
+                let length = inputs[1].as_scalar_i32()? as usize;
+                let logit_pos = inputs[2].as_scalar_i32()? as usize;
+                let s = tokens.data.len();
+                let rows = if kc.naive { s } else { length.min(s) };
+                self.note_scratch(scratch_estimate(&w.dims, rows, s, kc));
+                let pw = self.predictor_weights(&meta.model)?;
+                // The monolithic predictor prefill is the one-chunk
+                // special case of the chunked kernel — bit-identical to
+                // the chunked/paged paths by construction.
+                let mut state =
+                    ChunkState::new(&self.manifest, &meta.model, None, length, logit_pos, true)?;
+                (|| -> Result<()> {
+                    prefill_chunk_ref(&w, kc, Some(&*pw), &mut state, &tokens.data[..length])?;
+                    finalize_base_scores(&mut state)
+                })()?;
+                let logits = state.logits.take().context("prefill_pred covered no logit row")?;
+                let bundle = state.bundle;
+                Ok(vec![
+                    Value::F32(state.k),
+                    Value::F32(state.v),
+                    Value::F32(TensorF::new(vec![w.dims.vocab], logits)),
+                    Value::F32(bundle.window_scores.context("missing window scores")?),
+                    Value::F32(bundle.h2o_scores.context("missing h2o scores")?),
+                    Value::F32(bundle.pred_scores.context("missing pred scores")?),
+                ])
             }
             "prefill_lkv" => {
                 let (m, v) = variant.with_context(|| format!("graph {key} needs a variant"))?;
@@ -2178,7 +2305,12 @@ impl Backend for ReferenceBackend {
             state.done + tokens.len(),
             &self.kcfg,
         ));
-        prefill_chunk_ref(&w, &self.kcfg, state, tokens)
+        let pred = if state.bundle.pred_scores.is_some() {
+            Some(self.predictor_weights(&state.model)?)
+        } else {
+            None
+        };
+        prefill_chunk_ref(&w, &self.kcfg, pred.as_deref(), state, tokens)
             .with_context(|| format!("prefill_chunk for {} (reference)", state.model))?;
         self.note_exec(&format!("{}/prefill_chunk", state.model), 1, t0);
         Ok(())
@@ -2225,6 +2357,11 @@ impl Backend for ReferenceBackend {
         let t0 = Instant::now();
         check_chunk(state, tokens)?;
         let table = state.blocks.clone().context("paged prefill_chunk on a dense chunk state")?;
+        let pred = if state.bundle.pred_scores.is_some() {
+            Some(self.predictor_weights(&state.model)?)
+        } else {
+            None
+        };
         let taken = arena.take(&table)?;
         let mut kv = OwnedKv::new(taken, w.dims.kv_dims(), arena.block_size());
         let c = tokens.len();
@@ -2241,7 +2378,7 @@ impl Backend for ReferenceBackend {
                 bundle,
                 logits,
             };
-            prefill_chunk_dispatch(&w, &self.kcfg, &mut kv, &mut pass, tokens)
+            prefill_chunk_dispatch(&w, &self.kcfg, pred.as_deref(), &mut kv, &mut pass, tokens)
         };
         arena.put(&table, kv.into_blocks());
         res.with_context(|| format!("prefill_chunk for {} (paged reference)", state.model))?;

@@ -398,6 +398,12 @@ impl EngineLoop {
                 self.engine.rt.backend_name()
             );
         }
+        // Published once so the HTTP front-end can answer `/policies`
+        // (and reject predictor requests early) without a manifest hop.
+        self.metrics.set_gauge(
+            "policy_predictor_loaded",
+            if self.engine.rt.manifest().predictor(&model).is_some() { 1.0 } else { 0.0 },
+        );
         self.paged = self.cfg.paged_kv && self.engine.rt.supports_paged_kv();
         if self.cfg.paged_kv && !self.paged {
             log::warn!(
@@ -979,6 +985,7 @@ impl EngineLoop {
         let n_layers = self.engine.n_layers(&self.engine.cfg.model);
         let mut evcfg = self.engine.cfg.eviction;
         evcfg.budget = req.budget;
+        req.knobs.apply(&mut evcfg);
         let sel = req.method.select(&evcfg, n_layers, &pre.bundle);
         let cap = self
             .engine

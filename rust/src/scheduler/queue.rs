@@ -9,6 +9,7 @@ use std::sync::mpsc::Sender;
 use std::sync::{Condvar, Mutex};
 
 use crate::engine::FinishReason;
+use crate::eviction::spec::PolicyKnobs;
 use crate::eviction::Method;
 
 /// Scheduling class. Higher classes are admitted first and are the
@@ -51,6 +52,9 @@ pub struct Request {
     pub budget: usize,
     pub max_new: usize,
     pub temperature: f32,
+    /// Per-request eviction knob overrides (window/kernel/sinks) from an
+    /// inline [`crate::eviction::spec::PolicySpec`]; empty = defaults.
+    pub knobs: PolicyKnobs,
     /// Tenant this request is billed to (token quotas are per tenant).
     pub tenant: u32,
     pub priority: Priority,
@@ -204,6 +208,7 @@ mod tests {
                 budget: 8,
                 max_new: 4,
                 temperature: 0.0,
+                knobs: PolicyKnobs::default(),
                 tenant,
                 priority,
                 reply: tx,

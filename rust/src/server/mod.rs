@@ -4,11 +4,25 @@
 //! Endpoints:
 //!   POST /generate  {"prompt": str, "method": str, "budget": n,
 //!                    "max_new": n, "temperature": f,
-//!                    "tenant": n, "priority": low|normal|high}
+//!                    "tenant": n, "priority": low|normal|high,
+//!                    "policy": {...}}
 //!                    → generation JSON
 //!                    (includes "finish_reason": eos | length |
 //!                    kv_exhausted | stopped — cap/pool-driven
-//!                    truncation is observable, not silent)
+//!                    truncation is observable, not silent).
+//!                    The optional inline "policy" object is a
+//!                    structured [`crate::eviction::spec::PolicySpec`]
+//!                    ({"family", "variant", "seed", "budget",
+//!                    "window", "kernel", "sinks"}); it supersedes
+//!                    "method"/"budget", and unknown families, unknown
+//!                    fields or invalid knob values are a 400 with an
+//!                    "error" body. Both paths construct the policy
+//!                    through `PolicySpec` — the legacy "method" string
+//!                    is a thin compatibility parser.
+//!   GET  /policies  → the policy registry: every family with its
+//!                     accepted knobs + aliases, the engine's knob
+//!                     defaults, and whether trained predictor weights
+//!                     are loaded for the serving model
 //!   GET  /metrics   → counters + gauges + latency histograms, including
 //!                     the KV-pool `CacheStats` gauges (`kv_*`) and the
 //!                     prefix-cache hit/miss/reclaim counters + occupancy
@@ -24,7 +38,8 @@ use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
-use crate::eviction::Method;
+use crate::eviction::spec::{self, PolicySpec};
+use crate::eviction::EvictionConfig;
 use crate::metrics::Metrics;
 use crate::model::tokenizer::encode;
 use crate::scheduler::{Priority, Reply, Request, RequestQueue};
@@ -114,12 +129,30 @@ fn route(req: &HttpRequest, queue: &RequestQueue, metrics: &Metrics, next_id: &A
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/healthz") => (200, Json::from_pairs(vec![("ok", true.into())])),
         ("GET", "/metrics") => (200, metrics.to_json()),
-        ("POST", "/generate") => generate(req, queue, next_id),
+        ("GET", "/policies") => (200, policies(metrics)),
+        ("POST", "/generate") => generate(req, queue, metrics, next_id),
         _ => (404, Json::from_pairs(vec![("error", "not found".into())])),
     }
 }
 
-fn generate(req: &HttpRequest, queue: &RequestQueue, next_id: &AtomicU64) -> (u16, Json) {
+/// Whether the engine loop reported trained/synthesized predictor
+/// weights for the serving model (published once at startup).
+fn predictor_loaded(metrics: &Metrics) -> bool {
+    metrics.gauge("policy_predictor_loaded") == Some(1.0)
+}
+
+fn policies(metrics: &Metrics) -> Json {
+    // The registry's knob defaults mirror the per-request defaults of
+    // `/generate` (budget 64 + `EvictionConfig` window/kernel/sinks).
+    spec::registry_json(&EvictionConfig::new(64), predictor_loaded(metrics))
+}
+
+fn generate(
+    req: &HttpRequest,
+    queue: &RequestQueue,
+    metrics: &Metrics,
+    next_id: &AtomicU64,
+) -> (u16, Json) {
     let body = match json::parse(&req.body) {
         Ok(b) => b,
         Err(e) => return (400, Json::from_pairs(vec![("error", format!("{e}").into())])),
@@ -127,18 +160,54 @@ fn generate(req: &HttpRequest, queue: &RequestQueue, next_id: &AtomicU64) -> (u1
     let Some(prompt) = body.get("prompt").and_then(Json::as_str) else {
         return (400, Json::from_pairs(vec![("error", "missing prompt".into())]));
     };
-    let method_name = body.get("method").and_then(Json::as_str).unwrap_or("lookaheadkv");
-    let Some(method) = Method::parse(method_name) else {
-        return (400, Json::from_pairs(vec![("error", format!("unknown method {method_name}").into())]));
+    // Policy construction: the inline structured "policy" object when
+    // present, else the legacy "method" string — both through PolicySpec.
+    let spec = match body.get("policy") {
+        Some(p) => match PolicySpec::from_json(p) {
+            Ok(s) => s,
+            Err(e) => return (400, Json::from_pairs(vec![("error", e.into())])),
+        },
+        None => {
+            let method_name = body.get("method").and_then(Json::as_str).unwrap_or("lookaheadkv");
+            let Some(s) = PolicySpec::parse_str(method_name) else {
+                return (
+                    400,
+                    Json::from_pairs(vec![(
+                        "error",
+                        format!("unknown method {method_name}").into(),
+                    )]),
+                );
+            };
+            s
+        }
     };
+    let method = match spec.resolve() {
+        Ok(m) => m,
+        Err(e) => return (400, Json::from_pairs(vec![("error", e.into())])),
+    };
+    if spec.family == "predictor" && !predictor_loaded(metrics) {
+        return (
+            400,
+            Json::from_pairs(vec![(
+                "error",
+                "policy family \"predictor\" requires importance-predictor weights, \
+                 which are not loaded for the serving model"
+                    .into(),
+            )]),
+        );
+    }
     let (tx, rx) = channel::<Reply>();
     let request = Request {
         id: next_id.fetch_add(1, Ordering::SeqCst),
         prompt: encode(prompt, true, false),
         method,
-        budget: body.get("budget").and_then(Json::as_usize).unwrap_or(64),
+        budget: spec
+            .budget
+            .or_else(|| body.get("budget").and_then(Json::as_usize))
+            .unwrap_or(64),
         max_new: body.get("max_new").and_then(Json::as_usize).unwrap_or(32).min(96),
         temperature: body.get("temperature").and_then(Json::as_f64).unwrap_or(0.0) as f32,
+        knobs: spec.knobs,
         tenant: body.get("tenant").and_then(Json::as_usize).unwrap_or(0) as u32,
         priority: match body.get("priority").and_then(Json::as_str) {
             None => Priority::default(),

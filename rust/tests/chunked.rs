@@ -25,7 +25,7 @@ use lookaheadkv::util::rng::argmax;
 
 const ALL_METHODS: &[&str] = &[
     "full", "random", "streaming", "snapkv", "pyramidkv", "h2o", "tova", "laq", "speckv",
-    "lookaheadkv", "lkv+suffix",
+    "lookaheadkv", "lkv+suffix", "predictor",
 ];
 
 fn engine() -> Engine {
@@ -41,6 +41,7 @@ fn assert_bundles_identical(a: &ScoreBundle, b: &ScoreBundle, tag: &str) {
         ("window_scores", &a.window_scores, &b.window_scores),
         ("h2o_scores", &a.h2o_scores, &b.h2o_scores),
         ("lkv_scores", &a.lkv_scores, &b.lkv_scores),
+        ("pred_scores", &a.pred_scores, &b.pred_scores),
     ];
     for (name, ta, tb) in pairs {
         match (ta, tb) {
@@ -166,6 +167,7 @@ fn engine_loop_chunked_matches_monolithic() {
                     budget: 16,
                     max_new: 5,
                     temperature: 0.0,
+                    knobs: Default::default(),
                     tenant: 0,
                     priority: Priority::Normal,
                     reply: tx,

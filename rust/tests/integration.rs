@@ -168,6 +168,7 @@ fn engine_loop_serves_requests_batched() {
                 budget: 16,
                 max_new: 5,
                 temperature: 0.0,
+                knobs: Default::default(),
                 tenant: 0,
                 priority: Priority::Normal,
                 reply: tx,

@@ -243,6 +243,7 @@ fn run_loop(
                 budget,
                 max_new,
                 temperature: 0.0,
+                knobs: Default::default(),
                 tenant: 0,
                 priority: Priority::Normal,
                 reply: tx,

@@ -63,6 +63,7 @@ fn run_pair(
                 budget,
                 max_new,
                 temperature: 0.0,
+                knobs: Default::default(),
                 tenant: id as u32,
                 priority,
                 reply: tx,
@@ -185,6 +186,7 @@ fn over_quota_request_is_rejected_not_queued() {
                 budget: 16,
                 max_new,
                 temperature: 0.0,
+                knobs: Default::default(),
                 tenant: 0,
                 priority: Priority::Normal,
                 reply: tx,

@@ -196,6 +196,7 @@ fn run_loop(prompts: &[String], prefix_cache: bool) -> (Vec<Reply>, Arc<Metrics>
                 budget: 16,
                 max_new: 5,
                 temperature: 0.0,
+                knobs: Default::default(),
                 tenant: 0,
                 priority: Priority::Normal,
                 reply: tx,
@@ -316,6 +317,7 @@ fn monolithic_fallback_without_chunked_support_is_identical() {
                     budget: 16,
                     max_new: 4,
                     temperature: 0.0,
+                    knobs: Default::default(),
                     tenant: 0,
                     priority: Priority::Normal,
                     reply: tx,
@@ -436,6 +438,130 @@ fn metrics_http_roundtrip_exposes_cache_stats() {
         "prefill_scratch_peak_bytes gauge missing or zero"
     );
     assert!(j.req("latency").get("ttft_ms").is_some());
+
+    queue.close();
+    engine_thread.join().expect("engine thread");
+}
+
+/// Satellite: the structured policy API over real HTTP — `GET /policies`
+/// introspection, inline `policy` objects on `/generate` (valid and the
+/// 4xx rejection paths), and the legacy `method` string still serving
+/// through the same `PolicySpec` construction path.
+#[test]
+fn policy_api_http_roundtrip() {
+    let queue = Arc::new(RequestQueue::new(16));
+    let metrics = Arc::new(Metrics::new());
+    let q2 = Arc::clone(&queue);
+    let m2 = Arc::clone(&metrics);
+    let engine_thread = std::thread::Builder::new()
+        .name("engine-test".into())
+        .spawn(move || {
+            let cfg = LoopConfig { max_active: 2, ..LoopConfig::default() };
+            EngineLoop::new(engine(), cfg, q2, m2).run()
+        })
+        .expect("spawn engine");
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().expect("addr").to_string();
+    let q3 = Arc::clone(&queue);
+    let m3 = Arc::clone(&metrics);
+    std::thread::Builder::new()
+        .name("http-test".into())
+        .spawn(move || {
+            let cfg = ServerConfig { workers: 2, ..ServerConfig::default() };
+            let _ = serve_listener(listener, cfg, q3, m3);
+        })
+        .expect("spawn server");
+
+    // The predictor-loaded flag is published by the engine loop at
+    // startup; wait for it so the assertions below don't race the spawn.
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+    loop {
+        let (status, resp) = lookaheadkv::server::http::http_get(&addr, "/metrics").expect("get");
+        assert_eq!(status, 200);
+        let j = json::parse(&resp).expect("metrics json");
+        if j.req("gauges").get("policy_predictor_loaded").is_some() {
+            break;
+        }
+        assert!(std::time::Instant::now() < deadline, "predictor gauge never published");
+        std::thread::sleep(std::time::Duration::from_millis(20));
+    }
+
+    // GET /policies: every family listed, predictor marked available
+    // (lkv-tiny ships synthesized predictor weights).
+    let (status, resp) = lookaheadkv::server::http::http_get(&addr, "/policies").expect("get");
+    assert_eq!(status, 200, "{resp}");
+    let j = json::parse(&resp).expect("policies json");
+    assert_eq!(j.req("predictor_loaded").as_bool(), Some(true));
+    let fams = j.req("families").as_arr().expect("families");
+    for expect in ["full", "snapkv", "h2o", "lookaheadkv", "predictor"] {
+        assert!(
+            fams.iter().any(|f| f.req("family").as_str() == Some(expect)),
+            "family {expect} missing from /policies"
+        );
+    }
+    let pred = fams
+        .iter()
+        .find(|f| f.req("family").as_str() == Some("predictor"))
+        .expect("predictor family");
+    assert_eq!(pred.req("available").as_bool(), Some(true));
+    assert!(j.req("defaults").req("window").as_usize().is_some());
+    assert!(j.req("defaults").req("kernel").as_usize().is_some());
+
+    let post = |body: &str| {
+        lookaheadkv::server::http::http_post(&addr, "/generate", body).expect("post")
+    };
+    let prompt = "A7K=Q2Z;lorem;ipsum;dolor;A7K=";
+
+    // Inline structured policy: overrides budget + knobs, serves 200.
+    let (status, resp) = post(&format!(
+        "{{\"prompt\": \"{prompt}\", \"max_new\": 3, \
+         \"policy\": {{\"family\": \"snapkv\", \"budget\": 16, \"window\": 4}}}}"
+    ));
+    assert_eq!(status, 200, "inline policy: {resp}");
+    assert!(json::parse(&resp).expect("json").get("text").is_some());
+
+    // Predictor family end-to-end over HTTP (weights are loaded).
+    let (status, resp) = post(&format!(
+        "{{\"prompt\": \"{prompt}\", \"max_new\": 3, \
+         \"policy\": {{\"family\": \"predictor\", \"budget\": 16}}}}"
+    ));
+    assert_eq!(status, 200, "predictor policy: {resp}");
+
+    // Legacy method string routes through the same PolicySpec path.
+    let (status, resp) =
+        post(&format!("{{\"prompt\": \"{prompt}\", \"method\": \"h2o\", \"max_new\": 3}}"));
+    assert_eq!(status, 200, "legacy method: {resp}");
+
+    // Rejection paths: each is a 400 with a structured "error" body.
+    for bad in [
+        // unknown family
+        format!("{{\"prompt\": \"{prompt}\", \"policy\": {{\"family\": \"zoomkv\"}}}}"),
+        // unknown field (typo'd knob)
+        format!(
+            "{{\"prompt\": \"{prompt}\", \
+             \"policy\": {{\"family\": \"snapkv\", \"kernal\": 5}}}}"
+        ),
+        // invalid knob value (pooling kernel must be odd)
+        format!(
+            "{{\"prompt\": \"{prompt}\", \
+             \"policy\": {{\"family\": \"snapkv\", \"kernel\": 4}}}}"
+        ),
+        // variant on a family that takes none
+        format!(
+            "{{\"prompt\": \"{prompt}\", \
+             \"policy\": {{\"family\": \"h2o\", \"variant\": \"main\"}}}}"
+        ),
+        // unknown legacy method string
+        format!("{{\"prompt\": \"{prompt}\", \"method\": \"zoomkv\"}}"),
+    ] {
+        let (status, resp) = post(&bad);
+        assert_eq!(status, 400, "{bad} should be rejected: {resp}");
+        let err = json::parse(&resp).expect("error json");
+        assert!(
+            err.req("error").as_str().map(|s| !s.is_empty()).unwrap_or(false),
+            "rejection must carry an error body: {resp}"
+        );
+    }
 
     queue.close();
     engine_thread.join().expect("engine thread");
