@@ -6,6 +6,9 @@
 //! long-prompt + decode workload, where the `stall/mixed/*` rows carry
 //! the per-iteration decode-stall distribution (`max_ms` is the headline:
 //! how long active decodes froze for prefill work in the worst iteration).
+//! The `loop/metrics_noop/*` and `metrics/hot_path_*` rows bound the
+//! metrics-core overhead in the decode loop (asserted < 2% of a mean
+//! decode iteration).
 
 use std::sync::mpsc::channel;
 use std::sync::Arc;
@@ -38,6 +41,7 @@ fn main() {
                 knobs: Default::default(),
                 tenant: 0,
                 priority: Priority::Normal,
+                submitted_at: std::time::Instant::now(),
                 reply: tx,
             })
             .unwrap();
@@ -61,10 +65,11 @@ fn main() {
     let suite = workload::ruler_suite(17, 2, 128);
     let prompts: Vec<Vec<i32>> =
         suite.samples.iter().map(|s| encode(&s.prompt(), true, false)).collect();
+    let live = Arc::new(Metrics::new());
     for batched in [false, true] {
         let tag = if batched { "batched" } else { "perseq" };
         let r = run_bench(&format!("loop/{tag}/active4"), &loop_cfg, || {
-            run_loop_once(&prompts, batched);
+            run_loop_once(&prompts, batched, &live);
         });
         results.push(r);
     }
@@ -74,6 +79,51 @@ fn main() {
     if let (Some(ps), Some(ba)) = (mean("perseq"), mean("batched")) {
         println!("engine loop: per-seq {ps:.2} ms vs batched {ba:.2} ms ({:.2}x)", ps / ba);
     }
+
+    // Metrics-core overhead in the decode loop. Two measurements:
+    // the same batched loop against the no-op sink (informational A/B —
+    // a sub-percent effect drowns in loop wall-clock noise), and the
+    // per-op hot-path cost, which backs the hard bound: a decode
+    // iteration touches ~8 metric sites (per-seq step + batch observe,
+    // stall, token/tenant counters), so 8 × per-op cost must stay under
+    // 2% of the measured mean decode iteration time.
+    let noop = Arc::new(Metrics::noop());
+    let r_noop = run_bench("loop/metrics_noop/active4", &loop_cfg, || {
+        run_loop_once(&prompts, true, &noop);
+    });
+    if let Some(on) = mean("batched") {
+        println!(
+            "metrics A/B: live {on:.2} ms vs no-op {:.2} ms per loop run",
+            r_noop.ms.mean
+        );
+    }
+    results.push(r_noop);
+
+    let hot = run_bench("metrics/hot_path_2k_ops", &cfg, || {
+        for i in 0..1000u64 {
+            live.incr("bench_hot_ops_total", 1);
+            live.observe("bench_hot_ms", (i % 7) as f64 * 0.1);
+        }
+    });
+    let per_op_ms = hot.ms.mean / 2000.0;
+    let decode_mean = live
+        .latency_summary("decode_batch_ms")
+        .expect("batched loop runs recorded decode_batch_ms")
+        .mean;
+    let overhead_ms = 8.0 * per_op_ms;
+    println!(
+        "metrics hot path: {:.1} ns/op -> {:.4} ms per decode iteration \
+         ({:.3}% of the {decode_mean:.3} ms mean iteration)",
+        per_op_ms * 1e6,
+        overhead_ms,
+        100.0 * overhead_ms / decode_mean,
+    );
+    assert!(
+        overhead_ms < 0.02 * decode_mean,
+        "metrics hot path too hot: 8 ops x {per_op_ms:.6} ms = {overhead_ms:.4} ms \
+         >= 2% of the {decode_mean:.3} ms mean decode iteration"
+    );
+    results.push(hot);
 
     // Mixed long-prompt + decode workload: three short prompts decode
     // while one long prompt is admitted mid-stream. With monolithic
@@ -142,6 +192,7 @@ fn run_mixed_once(shorts: &[Vec<i32>], long_prompt: &[i32], chunk: usize, metric
                 knobs: Default::default(),
                 tenant: 0,
                 priority: Priority::Normal,
+                submitted_at: std::time::Instant::now(),
                 reply: tx,
             })
             .expect("submit short");
@@ -159,6 +210,7 @@ fn run_mixed_once(shorts: &[Vec<i32>], long_prompt: &[i32], chunk: usize, metric
             knobs: Default::default(),
             tenant: 0,
             priority: Priority::Normal,
+            submitted_at: std::time::Instant::now(),
             reply: tx,
         })
         .expect("submit long");
@@ -171,11 +223,10 @@ fn run_mixed_once(shorts: &[Vec<i32>], long_prompt: &[i32], chunk: usize, metric
     }
 }
 
-fn run_loop_once(prompts: &[Vec<i32>], batched: bool) {
+fn run_loop_once(prompts: &[Vec<i32>], batched: bool, metrics: &Arc<Metrics>) {
     let engine = Engine::new(&default_artifacts_dir(), EngineConfig::new("lkv-tiny"))
         .expect("engine (reference backend needs no artifacts)");
     let queue = Arc::new(RequestQueue::new(64));
-    let metrics = Arc::new(Metrics::new());
     let mut receivers = Vec::new();
     for i in 0..8u64 {
         let (tx, rx) = channel();
@@ -191,6 +242,7 @@ fn run_loop_once(prompts: &[Vec<i32>], batched: bool) {
                 knobs: Default::default(),
                 tenant: 0,
                 priority: Priority::Normal,
+                submitted_at: std::time::Instant::now(),
                 reply: tx,
             })
             .expect("submit");
@@ -204,7 +256,7 @@ fn run_loop_once(prompts: &[Vec<i32>], batched: bool) {
         paged_kv: false,
         ..LoopConfig::default()
     };
-    EngineLoop::new(engine, cfg, Arc::clone(&queue), metrics).run();
+    EngineLoop::new(engine, cfg, Arc::clone(&queue), Arc::clone(metrics)).run();
     for rx in receivers {
         let reply = rx.recv().expect("reply");
         assert!(reply.error.is_none(), "loop error: {:?}", reply.error);

@@ -19,6 +19,7 @@
 //! truncating baseline's.
 
 use std::collections::HashMap;
+use std::path::PathBuf;
 use std::sync::mpsc::channel;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -29,7 +30,9 @@ use lookaheadkv::metrics::Metrics;
 use lookaheadkv::model::tokenizer::encode;
 use lookaheadkv::runtime::artifacts::default_artifacts_dir;
 use lookaheadkv::scheduler::{EngineLoop, LoopConfig, Priority, Reply, Request, RequestQueue};
+use lookaheadkv::trace::{Phase, Tracer};
 use lookaheadkv::util::bench::{record_named, smoke_mode, BenchResult};
+use lookaheadkv::util::cli::Args;
 use lookaheadkv::util::stats::{percentile_sorted, summarize};
 use lookaheadkv::workload::{bursty_open_loop_suite, OpenLoopSuite};
 
@@ -62,10 +65,40 @@ fn p99(mut xs: Vec<f64>) -> f64 {
     percentile_sorted(&xs, 0.99)
 }
 
+/// Acceptance check: for every completed request, the lifecycle spans
+/// the tracer recorded (everything after queue wait) must tile the
+/// service time — their sum matches the reply's `total_ms` to within
+/// 5% (plus a 0.5 ms absolute floor absorbing the per-span microsecond
+/// truncation over up-to-`max_new` decode spans).
+fn assert_spans_tile(tracer: &Tracer, totals: &[(u64, f64)]) {
+    if tracer.dropped() > 0 {
+        eprintln!(
+            "trace ring dropped {} spans; skipping the tiling check",
+            tracer.dropped()
+        );
+        return;
+    }
+    for &(id, total_ms) in totals {
+        let spans = tracer.spans_for(id);
+        assert!(!spans.is_empty(), "request {id}: no spans recorded");
+        let sum_ms: f64 = spans
+            .iter()
+            .filter(|s| s.phase != Phase::Queue)
+            .map(|s| s.dur_us as f64 / 1e3)
+            .sum();
+        assert!(
+            (sum_ms - total_ms).abs() <= total_ms * 0.05 + 0.5,
+            "request {id}: lifecycle spans sum to {sum_ms:.3} ms but the \
+             reply reported total_ms {total_ms:.3}"
+        );
+    }
+}
+
 /// Replay the trace once: engine loop on its own thread, this thread
 /// plays the open-loop client (sleeps to each arrival offset, submits,
-/// then collects every reply). Returns tail latencies + counters.
-fn run_trace(suite: &OpenLoopSuite, preemption: bool) -> RunStats {
+/// then collects every reply). Returns tail latencies + counters plus
+/// the run's span tracer (already tiling-checked against every reply).
+fn run_trace(suite: &OpenLoopSuite, preemption: bool) -> (RunStats, Arc<Tracer>) {
     let engine =
         Engine::new(&default_artifacts_dir(), EngineConfig::new("lkv-tiny")).expect("engine");
     let queue = Arc::new(RequestQueue::new(suite.arrivals.len() + 1));
@@ -79,10 +112,12 @@ fn run_trace(suite: &OpenLoopSuite, preemption: bool) -> RunStats {
         tenants: TENANTS,
         ..LoopConfig::default()
     };
+    let tracer = Arc::new(Tracer::new());
     let loop_queue = Arc::clone(&queue);
     let loop_metrics = Arc::clone(&metrics);
+    let loop_tracer = Arc::clone(&tracer);
     let handle = std::thread::spawn(move || {
-        EngineLoop::new(engine, cfg, loop_queue, loop_metrics).run();
+        EngineLoop::new(engine, cfg, loop_queue, loop_metrics).with_tracer(loop_tracer).run();
     });
 
     let (tx, rx) = channel::<Reply>();
@@ -114,6 +149,7 @@ fn run_trace(suite: &OpenLoopSuite, preemption: bool) -> RunStats {
                 knobs: Default::default(),
                 tenant: a.tenant,
                 priority,
+                submitted_at: Instant::now(),
                 reply: tx.clone(),
             })
             .expect("submit");
@@ -122,12 +158,14 @@ fn run_trace(suite: &OpenLoopSuite, preemption: bool) -> RunStats {
 
     let mut ttft_all = Vec::new();
     let mut ttft_high = Vec::new();
+    let mut totals = Vec::new();
     let mut high_kv_exhausted = 0usize;
     let mut high_errors = 0usize;
     for _ in 0..suite.arrivals.len() {
         let reply = rx.recv_timeout(Duration::from_secs(120)).expect("reply");
         let recv_at = Instant::now();
         let (tenant, submitted) = info[&reply.id];
+        totals.push((reply.id, reply.total_ms));
         if reply.error.is_some() {
             if tenant == 0 {
                 high_errors += 1;
@@ -147,8 +185,9 @@ fn run_trace(suite: &OpenLoopSuite, preemption: bool) -> RunStats {
         }
     }
     handle.join().expect("engine loop thread");
+    assert_spans_tile(&tracer, &totals);
 
-    RunStats {
+    let stats = RunStats {
         ttft_p99_all: p99(ttft_all),
         ttft_p99_high: p99(ttft_high),
         stall_p99: metrics.latency_summary("decode_stall_ms").map_or(0.0, |s| s.p99),
@@ -159,7 +198,8 @@ fn run_trace(suite: &OpenLoopSuite, preemption: bool) -> RunStats {
         high_kv_exhausted,
         high_errors,
         deferred: metrics.counter("admission_deferred_total"),
-    }
+    };
+    (stats, tracer)
 }
 
 fn mean(xs: &[f64]) -> f64 {
@@ -173,6 +213,13 @@ fn finite(xs: &[f64]) -> Vec<f64> {
 }
 
 fn main() {
+    let args = Args::from_env(&[]);
+    // `--trace-out PATH` (or LKV_TRACE_OUT=PATH) exports the final
+    // spill run's request-lifecycle spans as Chrome trace-event JSON.
+    let trace_out = args
+        .get("trace-out")
+        .map(PathBuf::from)
+        .or_else(|| std::env::var("LKV_TRACE_OUT").ok().map(PathBuf::from));
     let runs = if smoke_mode() { 2 } else { 4 };
     // First seed whose trace actually mixes tenant 0 with the others —
     // deterministic, and robust to reparameterizing the suite later.
@@ -187,9 +234,11 @@ fn main() {
 
     let mut spill_runs = Vec::new();
     let mut base_runs = Vec::new();
+    let mut last_tracer = None;
     for r in 0..runs {
-        let s = run_trace(&suite, true);
-        let b = run_trace(&suite, false);
+        let (s, tracer) = run_trace(&suite, true);
+        let (b, _) = run_trace(&suite, false);
+        last_tracer = Some(tracer);
         println!(
             "run {r}: spill high p99 {:.2} ms (preempt {} spill {} restore {} trunc {}) | \
              baseline high p99 {:.2} ms (trunc {})",
@@ -275,4 +324,12 @@ fn main() {
         mean(&spill_high),
         mean(&base_high)
     );
+    if let (Some(path), Some(tracer)) = (trace_out, last_tracer) {
+        tracer.write_chrome_trace(&path).expect("write trace");
+        println!(
+            "wrote Chrome trace ({} spans) to {}",
+            tracer.snapshot().len(),
+            path.display()
+        );
+    }
 }

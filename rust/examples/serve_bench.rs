@@ -46,7 +46,7 @@ fn main() -> anyhow::Result<()> {
             queue_cap: 128,
             ..Default::default()
         };
-        serve(cfg, q3, m3).expect("server");
+        serve(cfg, q3, m3, None).expect("server");
     });
     for _ in 0..100 {
         std::thread::sleep(std::time::Duration::from_millis(100));

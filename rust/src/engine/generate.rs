@@ -117,6 +117,52 @@ impl GtAccumulator {
     }
 }
 
+/// Per-request serving statistics: where this request's time and KV
+/// bytes went. Filled by both the offline path ([`Engine::generate`],
+/// where queue/spill phases are zero) and the serving loop
+/// (`scheduler::batcher`), and surfaced verbatim as the `stats` object
+/// of the `POST /generate` response.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RequestStats {
+    /// Submit → popped by the engine loop.
+    pub queue_ms: f64,
+    /// Pop → first token sampled.
+    pub ttft_ms: f64,
+    /// Prefill steps run (1 = monolithic).
+    pub prefill_chunks: usize,
+    /// Decode iterations this request participated in.
+    pub decode_iters: usize,
+    /// Prompt positions evicted at selection, per layer.
+    pub evicted_per_layer: Vec<usize>,
+    /// High-water mark of arena blocks held (0 for dense caches).
+    pub peak_arena_blocks: usize,
+    /// Times this request was preempted to the host spill store.
+    pub spills: usize,
+    /// Times its spilled blocks were restored.
+    pub restores: usize,
+}
+
+impl RequestStats {
+    pub fn evicted_total(&self) -> usize {
+        self.evicted_per_layer.iter().sum()
+    }
+
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::from_pairs(vec![
+            ("queue_ms", self.queue_ms.into()),
+            ("ttft_ms", self.ttft_ms.into()),
+            ("prefill_chunks", self.prefill_chunks.into()),
+            ("decode_iters", self.decode_iters.into()),
+            ("evicted_per_layer", self.evicted_per_layer.clone().into()),
+            ("evicted_total", self.evicted_total().into()),
+            ("peak_arena_blocks", self.peak_arena_blocks.into()),
+            ("spills", self.spills.into()),
+            ("restores", self.restores.into()),
+        ])
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct GenResult {
     pub text: String,
@@ -133,6 +179,10 @@ pub struct GenResult {
     pub cache_cap: usize,
     pub finish_reason: FinishReason,
     pub gt_scores: Option<TensorF>,
+    /// Per-request serving stats (offline path: queue/spill phases zero).
+    pub stats: RequestStats,
+    /// What the eviction policy decided, auditable per request.
+    pub eviction: Option<crate::eviction::DecisionSummary>,
 }
 
 impl GenResult {
@@ -157,6 +207,7 @@ impl Engine {
         let t_sel = Instant::now();
         let sel = method.select(&evcfg, n_layers, &pre.bundle);
         let select_ms = t_sel.elapsed().as_secs_f64() * 1e3;
+        let decision = crate::eviction::DecisionSummary::new(method, &evcfg, &sel, &pre.bundle);
 
         // 3. compact
         let t_cmp = Instant::now();
@@ -199,9 +250,23 @@ impl Engine {
             FinishReason::KvExhausted
         };
         let kept_per_layer: Vec<usize> = sel.per_layer.iter().map(Vec::len).collect();
+        let n_decode_steps = tokens.len().saturating_sub(1);
+        let stats = RequestStats {
+            queue_ms: 0.0,
+            ttft_ms,
+            prefill_chunks: 1,
+            decode_iters: n_decode_steps,
+            evicted_per_layer: kept_per_layer
+                .iter()
+                .map(|&k| prompt.len().saturating_sub(k))
+                .collect(),
+            peak_arena_blocks: 0,
+            spills: 0,
+            restores: 0,
+        };
         Ok(GenResult {
             text: decode_until_eos(&tokens),
-            n_decode_steps: tokens.len().saturating_sub(1),
+            n_decode_steps,
             tokens,
             prompt_len: prompt.len(),
             ttft_ms,
@@ -212,6 +277,8 @@ impl Engine {
             cache_cap: cap,
             finish_reason,
             gt_scores: gt.map(GtAccumulator::finish),
+            stats,
+            eviction: Some(decision),
         })
     }
 

@@ -125,6 +125,108 @@ impl EvictionConfig {
     }
 }
 
+/// Auditable record of one eviction decision: which policy ran, under
+/// what budget, what it kept/evicted per layer, and a quantile digest of
+/// the score distribution it acted on. Attached to `GenResult` /
+/// `Reply` and surfaced in the `POST /generate` response so
+/// predictor-vs-heuristic choices can be compared offline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DecisionSummary {
+    /// Canonical policy name (`Method::name()`), e.g. "LookaheadKV:ctx64".
+    pub policy: String,
+    /// Configured per-layer cache budget C.
+    pub budget: usize,
+    /// Prompt length the selection ran over.
+    pub prompt_len: usize,
+    /// Kept positions summed over layers.
+    pub kept_total: usize,
+    /// Evicted positions summed over layers.
+    pub evicted_total: usize,
+    pub kept_per_layer: Vec<usize>,
+    /// `[p0, p25, p50, p75, p100]` over per-position mean scores of the
+    /// tensor the policy selected on; `None` for score-free policies
+    /// (full/random/streaming).
+    pub score_quantiles: Option<[f64; 5]>,
+}
+
+impl DecisionSummary {
+    pub fn new(
+        method: &Method,
+        cfg: &EvictionConfig,
+        sel: &Selection,
+        bundle: &ScoreBundle,
+    ) -> DecisionSummary {
+        let kept_per_layer: Vec<usize> = sel.per_layer.iter().map(Vec::len).collect();
+        let kept_total: usize = kept_per_layer.iter().sum();
+        let evicted_total = kept_per_layer
+            .iter()
+            .map(|&k| bundle.len.saturating_sub(k))
+            .sum();
+        DecisionSummary {
+            policy: method.name(),
+            budget: cfg.budget,
+            prompt_len: bundle.len,
+            kept_total,
+            evicted_total,
+            kept_per_layer,
+            score_quantiles: score_quantiles(method, bundle),
+        }
+    }
+
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mut o = Json::from_pairs(vec![
+            ("policy", self.policy.as_str().into()),
+            ("budget", self.budget.into()),
+            ("prompt_len", self.prompt_len.into()),
+            ("kept_total", self.kept_total.into()),
+            ("evicted_total", self.evicted_total.into()),
+            ("kept_per_layer", self.kept_per_layer.clone().into()),
+        ]);
+        match &self.score_quantiles {
+            Some(q) => o.set("score_quantiles", q.to_vec().into()),
+            None => o.set("score_quantiles", Json::Null),
+        }
+        o
+    }
+}
+
+/// `[p0, p25, p50, p75, p100]` over the per-position mean of the score
+/// tensor this method selects on (positions `0..len`, averaged over all
+/// leading dims). `None` when the method is score-free or the bundle
+/// lacks the tensor.
+fn score_quantiles(method: &Method, bundle: &ScoreBundle) -> Option<[f64; 5]> {
+    let t = match method {
+        Method::FullKV | Method::Random { .. } | Method::StreamingLLM => return None,
+        Method::H2O => bundle.h2o_scores.as_ref()?,
+        Method::LookaheadKV { .. } => bundle.lkv_scores.as_ref()?,
+        Method::LkvSuffix { .. } => bundle.lkv_scores.as_ref().or(bundle.window_scores.as_ref())?,
+        Method::Predictor => bundle.pred_scores.as_ref()?,
+        // SnapKV family (incl. draft-bundle LAQ/SpecKV and PyramidKV/TOVA)
+        // selects on the suffix-window attention rows.
+        _ => bundle.window_scores.as_ref()?,
+    };
+    let s = *t.shape.last()?;
+    if s == 0 || bundle.len == 0 || t.data.is_empty() {
+        return None;
+    }
+    let rows = t.data.len() / s;
+    let n = bundle.len.min(s);
+    let mut means = vec![0f64; n];
+    for r in 0..rows {
+        let row = &t.data[r * s..r * s + n];
+        for (m, &x) in means.iter_mut().zip(row) {
+            *m += x as f64;
+        }
+    }
+    for m in &mut means {
+        *m /= rows as f64;
+    }
+    means.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let q = |p: f64| means[((p * (n - 1) as f64).round() as usize).min(n - 1)];
+    Some([q(0.0), q(0.25), q(0.5), q(0.75), q(1.0)])
+}
+
 /// Parse `name` or `name:variant` (and nothing else): returns the
 /// variant ("main" when unspecified), or None when `s` is not this
 /// family — including when `s` merely starts with `name`, which is what
@@ -296,6 +398,47 @@ mod tests {
         );
         for bad in ["lkvx", "lkv+", "lkv+suffixx", "lkv:", "lookaheadkvx", "lkv+suffix:"] {
             assert_eq!(Method::parse(bad), None, "{bad:?} must not parse");
+        }
+    }
+
+    #[test]
+    fn decision_summary_counts_and_quantiles() {
+        use crate::util::tensor::TensorF;
+        let len = 8;
+        let cfg = EvictionConfig::new(4);
+        let mut bundle = ScoreBundle::empty(len);
+        // [1, 2, 8]: per-position means 0..7 after averaging the two heads.
+        let data: Vec<f32> = (0..16).map(|i| (i % 8) as f32).collect();
+        bundle.h2o_scores = Some(TensorF::new(vec![1, 2, 8], data));
+        let m = Method::H2O;
+        let sel = m.select(&cfg, 2, &bundle);
+        let ds = DecisionSummary::new(&m, &cfg, &sel, &bundle);
+        assert_eq!(ds.policy, "H2O");
+        assert_eq!(ds.prompt_len, 8);
+        assert_eq!(ds.kept_per_layer, vec![4, 4]);
+        assert_eq!(ds.kept_total, 8);
+        assert_eq!(ds.evicted_total, 8);
+        let q = ds.score_quantiles.expect("h2o has scores");
+        assert_eq!(q[0], 0.0);
+        assert_eq!(q[4], 7.0);
+        assert!(q[0] <= q[1] && q[1] <= q[2] && q[2] <= q[3] && q[3] <= q[4]);
+        // JSON shape round-trips.
+        let j = crate::util::json::parse(&ds.to_json().to_string()).unwrap();
+        assert_eq!(j.req("policy").as_str(), Some("H2O"));
+        assert_eq!(j.req("kept_per_layer").usize_arr(), vec![4, 4]);
+        assert_eq!(j.req("score_quantiles").as_arr().unwrap().len(), 5);
+    }
+
+    #[test]
+    fn decision_summary_score_free_policies_have_no_quantiles() {
+        let len = 8;
+        let cfg = EvictionConfig::new(4);
+        let bundle = ScoreBundle::empty(len);
+        for m in [Method::FullKV, Method::Random { seed: 1 }, Method::StreamingLLM] {
+            let sel = m.select(&cfg, 2, &bundle);
+            let ds = DecisionSummary::new(&m, &cfg, &sel, &bundle);
+            assert!(ds.score_quantiles.is_none(), "{}", m.name());
+            assert_eq!(ds.to_json().req("score_quantiles"), &crate::util::json::Json::Null);
         }
     }
 

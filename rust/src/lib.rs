@@ -37,5 +37,6 @@ pub mod model;
 pub mod runtime;
 pub mod scheduler;
 pub mod server;
+pub mod trace;
 pub mod util;
 pub mod workload;

@@ -21,6 +21,7 @@ use lookaheadkv::model::tokenizer::encode;
 use lookaheadkv::runtime::artifacts::default_artifacts_dir;
 use lookaheadkv::scheduler::{EngineLoop, LoopConfig, RequestQueue};
 use lookaheadkv::server::{serve, ServerConfig};
+use lookaheadkv::trace::Tracer;
 use lookaheadkv::util::cli::Args;
 use lookaheadkv::workload;
 
@@ -66,7 +67,9 @@ fn print_help() {
          \x20           [--kv-pool SLOTS] [--kv-block SLOTS] [--dense-kv] \\\n\
          \x20           [--prefix-cache] [--prefix-cache-slots N] \\\n\
          \x20           [--tenants N] [--quota-tokens N] [--stall-slo-ms MS] \\\n\
-         \x20           [--no-preemption] [--threads N] [--ref-naive]\n\
+         \x20           [--no-preemption] [--threads N] [--ref-naive] \\\n\
+         \x20           [--trace-out PATH]   (Chrome trace-event JSON on shutdown;\n\
+         \x20                                 spans also served at GET /trace/<id>)\n\
          \x20 generate  --prompt <text> --method lookaheadkv --budget 64 --max-new 32\n\
          \x20 eval      --suite ruler|longbench|qasper|longproc|mtbench --methods snapkv,lookaheadkv \\\n\
          \x20           --budgets 16,32 --ctx 256 --n 8\n\
@@ -149,8 +152,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         stall_slo_ms: args.f64("stall-slo-ms", defaults.stall_slo_ms),
         preemption: !args.has("no-preemption"),
     };
+    // Request-lifecycle tracing: always queryable via GET /trace/<id>;
+    // --trace-out PATH additionally writes a Chrome trace-event JSON
+    // (Perfetto-loadable) when the server shuts down.
+    let trace_out = args.get("trace-out").map(PathBuf::from);
+    let tracer = Arc::new(Tracer::new());
     let q2 = Arc::clone(&queue);
     let m2 = Arc::clone(&metrics);
+    let t2 = Arc::clone(&tracer);
     let model = args.get_or("model", "lkv-tiny").to_string();
     let draft_tokens = args.usize("draft-tokens", 8);
     let art = artifacts(args);
@@ -158,7 +167,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let mut cfg = EngineConfig::new(&model);
         cfg.draft_tokens = draft_tokens;
         let engine = Engine::new(&art, cfg).expect("engine init");
-        EngineLoop::new(engine, loop_cfg, q2, m2).run()
+        EngineLoop::new(engine, loop_cfg, q2, m2).with_tracer(t2).run()
     })?;
     let server_cfg = ServerConfig {
         addr: args.get_or("addr", "127.0.0.1:8080").to_string(),
@@ -167,8 +176,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         read_timeout_ms: args.usize("read-timeout-ms", 10_000) as u64,
         write_timeout_ms: args.usize("write-timeout-ms", 10_000) as u64,
     };
-    serve(server_cfg, queue, metrics)?;
+    serve(server_cfg, queue, metrics, Some(Arc::clone(&tracer)))?;
     let _ = engine_thread.join();
+    if let Some(path) = trace_out {
+        tracer.write_chrome_trace(&path)?;
+        println!("wrote Chrome trace ({} spans) to {}", tracer.snapshot().len(), path.display());
+    }
     Ok(())
 }
 

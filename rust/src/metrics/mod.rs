@@ -1,33 +1,185 @@
-//! Serving metrics: counters + latency histograms, exported as JSON by
-//! the server's `/metrics` endpoint and by the bench harnesses.
+//! Low-overhead serving metrics: atomic counters/gauges and fixed
+//! log-bucket latency histograms, exported as JSON (`GET /metrics`) and
+//! Prometheus text exposition (`GET /metrics?format=prometheus`).
+//!
+//! The hot path (engine-loop `incr`/`observe`/`set_gauge`) is a
+//! read-locked registry lookup plus one or two atomic RMW ops — no
+//! global mutex, no allocation after a metric's first touch. Histograms
+//! use fixed √2-power buckets (1 µs … ~35 min) with an exact total
+//! count and sum, so `count`/`mean` never underreport no matter how many
+//! observations land (the old implementation decimated a 4096-sample
+//! reservoir with a deterministic-biased overwrite and summarized only
+//! the survivors). Percentiles are bucket-interpolated and clamped to
+//! the observed `[min, max]`.
 
 use std::collections::BTreeMap;
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
 
 use crate::util::json::Json;
-use crate::util::stats::{summarize, Summary};
+use crate::util::stats::Summary;
 
-/// Log-scaled latency histogram (microsecond buckets, powers of √2).
-#[derive(Debug, Default)]
-pub struct Histogram {
-    samples: Vec<f64>, // ms; bounded reservoir
+/// Number of finite histogram buckets; bucket `i` covers
+/// `(bound(i-1), bound(i)]` with `bound(i) = 0.001 · 2^(i/2)` ms, i.e.
+/// √2-power steps from 1 µs. The last bucket is open-ended (+Inf).
+const N_BUCKETS: usize = 64;
+
+/// Upper bound (ms) of finite bucket `i`.
+fn bucket_bound_ms(i: usize) -> f64 {
+    0.001 * 2f64.powf(i as f64 / 2.0)
 }
 
-const RESERVOIR: usize = 4096;
+/// Index of the bucket an observation lands in.
+fn bucket_for(ms: f64) -> usize {
+    if ms <= 0.001 {
+        return 0;
+    }
+    // Smallest i with 0.001·2^(i/2) >= ms.
+    let i = (2.0 * (ms / 0.001).log2()).ceil() as usize;
+    i.min(N_BUCKETS - 1)
+}
+
+fn atomic_f64_add(cell: &AtomicU64, x: f64) {
+    let mut cur = cell.load(Ordering::Relaxed);
+    loop {
+        let next = (f64::from_bits(cur) + x).to_bits();
+        match cell.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(now) => cur = now,
+        }
+    }
+}
+
+fn atomic_f64_extreme(cell: &AtomicU64, x: f64, keep_min: bool) {
+    let mut cur = cell.load(Ordering::Relaxed);
+    loop {
+        let cur_f = f64::from_bits(cur);
+        let better = if keep_min { x < cur_f } else { x > cur_f };
+        if !better {
+            return;
+        }
+        match cell.compare_exchange_weak(cur, x.to_bits(), Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(now) => cur = now,
+        }
+    }
+}
+
+/// Fixed log-bucket latency histogram with exact count/sum/sum-of-squares
+/// and observed min/max. Concurrent `record` is lock-free; readers see a
+/// consistent-enough snapshot (each field is individually atomic).
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [AtomicU64; N_BUCKETS],
+    count: AtomicU64,
+    sum_bits: AtomicU64,
+    sumsq_bits: AtomicU64,
+    min_bits: AtomicU64,
+    max_bits: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_bits: AtomicU64::new(0f64.to_bits()),
+            sumsq_bits: AtomicU64::new(0f64.to_bits()),
+            min_bits: AtomicU64::new(f64::INFINITY.to_bits()),
+            max_bits: AtomicU64::new(f64::NEG_INFINITY.to_bits()),
+        }
+    }
+}
 
 impl Histogram {
-    pub fn record(&mut self, ms: f64) {
-        if self.samples.len() < RESERVOIR {
-            self.samples.push(ms);
-        } else {
-            // reservoir decimation: overwrite pseudo-randomly
-            let i = (self.samples.len() * 31 + ms.to_bits() as usize) % RESERVOIR;
-            self.samples[i] = ms;
+    pub fn new() -> Histogram {
+        Histogram::default()
+    }
+
+    pub fn record(&self, ms: f64) {
+        if !ms.is_finite() {
+            return;
+        }
+        let ms = ms.max(0.0); // latencies; a negative clock skew clamps to 0
+        self.buckets[bucket_for(ms)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        atomic_f64_add(&self.sum_bits, ms);
+        atomic_f64_add(&self.sumsq_bits, ms * ms);
+        atomic_f64_extreme(&self.min_bits, ms, true);
+        atomic_f64_extreme(&self.max_bits, ms, false);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum_ms(&self) -> f64 {
+        f64::from_bits(self.sum_bits.load(Ordering::Relaxed))
+    }
+
+    fn min(&self) -> f64 {
+        f64::from_bits(self.min_bits.load(Ordering::Relaxed))
+    }
+
+    fn max(&self) -> f64 {
+        f64::from_bits(self.max_bits.load(Ordering::Relaxed))
+    }
+
+    /// Cumulative bucket counts up to each finite bound (Prometheus `le`
+    /// semantics; the total count doubles as the `+Inf` bucket).
+    fn bucket_snapshot(&self) -> [u64; N_BUCKETS] {
+        std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed))
+    }
+
+    /// Bucket-interpolated percentile, clamped to the observed range.
+    pub fn percentile(&self, q: f64) -> f64 {
+        let counts = self.bucket_snapshot();
+        let n: u64 = counts.iter().sum();
+        if n == 0 {
+            return 0.0;
+        }
+        let (min, max) = (self.min(), self.max());
+        let rank = (q.clamp(0.0, 1.0) * n as f64).max(1.0);
+        let mut cum = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if (cum + c) as f64 >= rank {
+                let lo = if i == 0 { 0.0 } else { bucket_bound_ms(i - 1) };
+                let hi = bucket_bound_ms(i).min(max);
+                let frac = (rank - cum as f64) / c as f64;
+                return (lo + frac * (hi - lo)).clamp(min, max);
+            }
+            cum += c;
+        }
+        max
+    }
+
+    /// Summary over everything ever observed (exact n/mean/std/min/max,
+    /// bucket-interpolated percentiles).
+    pub fn summary(&self) -> Summary {
+        let n = self.count();
+        if n == 0 {
+            return Summary::default();
+        }
+        let mean = self.sum_ms() / n as f64;
+        let sumsq = f64::from_bits(self.sumsq_bits.load(Ordering::Relaxed));
+        let var = (sumsq / n as f64 - mean * mean).max(0.0);
+        Summary {
+            n: n as usize,
+            mean,
+            std: var.sqrt(),
+            min: self.min(),
+            max: self.max(),
+            p50: self.percentile(0.50),
+            p90: self.percentile(0.90),
+            p99: self.percentile(0.99),
         }
     }
 
     pub fn to_json(&self) -> Json {
-        let s = summarize(&self.samples);
+        let s = self.summary();
         Json::from_pairs(vec![
             ("count", s.n.into()),
             ("mean_ms", s.mean.into()),
@@ -39,18 +191,27 @@ impl Histogram {
     }
 }
 
-/// Global metrics registry (server-side; engine thread writes, HTTP
-/// threads read snapshots).
+/// Global metrics registry (engine thread writes, HTTP threads read).
+///
+/// Registries are `RwLock`-guarded name→`Arc` maps: steady-state writes
+/// take the read lock and an atomic op; the write lock is only held the
+/// first time a name appears. [`Metrics::noop`] builds a disabled sink
+/// whose write paths return immediately — the A/B baseline for the
+/// instrumentation-overhead bench.
 #[derive(Debug, Default)]
 pub struct Metrics {
-    inner: Mutex<Inner>,
+    disabled: bool,
+    counters: RwLock<BTreeMap<String, Arc<AtomicU64>>>,
+    gauges: RwLock<BTreeMap<String, Arc<AtomicU64>>>, // f64 bit patterns
+    histograms: RwLock<BTreeMap<String, Arc<Histogram>>>,
 }
 
-#[derive(Debug, Default)]
-struct Inner {
-    counters: BTreeMap<String, u64>,
-    histograms: BTreeMap<String, Histogram>,
-    gauges: BTreeMap<String, f64>,
+fn handle<T>(reg: &RwLock<BTreeMap<String, Arc<T>>>, name: &str, init: impl Fn() -> T) -> Arc<T> {
+    if let Some(h) = reg.read().unwrap().get(name) {
+        return Arc::clone(h);
+    }
+    let mut w = reg.write().unwrap();
+    Arc::clone(w.entry(name.to_string()).or_insert_with(|| Arc::new(init())))
 }
 
 impl Metrics {
@@ -58,55 +219,280 @@ impl Metrics {
         Metrics::default()
     }
 
+    /// A disabled sink: `incr`/`observe`/`set_gauge` are no-ops. Used to
+    /// measure instrumentation overhead (see `bench_scheduler`).
+    pub fn noop() -> Metrics {
+        Metrics { disabled: true, ..Metrics::default() }
+    }
+
     pub fn incr(&self, name: &str, by: u64) {
-        let mut inner = self.inner.lock().unwrap();
-        *inner.counters.entry(name.to_string()).or_insert(0) += by;
+        if self.disabled {
+            return;
+        }
+        handle(&self.counters, name, || AtomicU64::new(0)).fetch_add(by, Ordering::Relaxed);
     }
 
     pub fn observe(&self, name: &str, ms: f64) {
-        let mut inner = self.inner.lock().unwrap();
-        inner.histograms.entry(name.to_string()).or_default().record(ms);
+        if self.disabled {
+            return;
+        }
+        handle(&self.histograms, name, Histogram::new).record(ms);
     }
 
     /// Set a point-in-time gauge (current KV pool occupancy, prefix-tree
     /// size, ...). Unlike counters these overwrite rather than add.
     pub fn set_gauge(&self, name: &str, value: f64) {
-        let mut inner = self.inner.lock().unwrap();
-        inner.gauges.insert(name.to_string(), value);
+        if self.disabled {
+            return;
+        }
+        handle(&self.gauges, name, || AtomicU64::new(0))
+            .store(value.to_bits(), Ordering::Relaxed);
     }
 
     pub fn gauge(&self, name: &str) -> Option<f64> {
-        self.inner.lock().unwrap().gauges.get(name).copied()
+        self.gauges
+            .read()
+            .unwrap()
+            .get(name)
+            .map(|g| f64::from_bits(g.load(Ordering::Relaxed)))
     }
 
     pub fn counter(&self, name: &str) -> u64 {
-        self.inner.lock().unwrap().counters.get(name).copied().unwrap_or(0)
+        self.counters
+            .read()
+            .unwrap()
+            .get(name)
+            .map_or(0, |c| c.load(Ordering::Relaxed))
     }
 
     /// Summary stats of one latency histogram (None when never observed).
     /// Lets benches/tests read e.g. the max per-iteration decode stall
     /// without round-tripping through JSON.
     pub fn latency_summary(&self, name: &str) -> Option<Summary> {
-        let inner = self.inner.lock().unwrap();
-        inner.histograms.get(name).map(|h| summarize(&h.samples))
+        self.histograms.read().unwrap().get(name).map(|h| h.summary())
     }
 
     pub fn to_json(&self) -> Json {
-        let inner = self.inner.lock().unwrap();
         let mut counters = Json::obj();
-        for (k, v) in &inner.counters {
-            counters.set(k, (*v).into());
+        for (k, v) in self.counters.read().unwrap().iter() {
+            counters.set(k, v.load(Ordering::Relaxed).into());
         }
         let mut hists = Json::obj();
-        for (k, h) in &inner.histograms {
+        for (k, h) in self.histograms.read().unwrap().iter() {
             hists.set(k, h.to_json());
         }
         let mut gauges = Json::obj();
-        for (k, v) in &inner.gauges {
-            gauges.set(k, (*v).into());
+        for (k, v) in self.gauges.read().unwrap().iter() {
+            gauges.set(k, f64::from_bits(v.load(Ordering::Relaxed)).into());
         }
         Json::from_pairs(vec![("counters", counters), ("gauges", gauges), ("latency", hists)])
     }
+
+    /// Prometheus text exposition (format 0.0.4). Metric names are
+    /// mangled into valid Prometheus identifiers (`ttft_ms_tenant_0`
+    /// stays as-is, `stall/mixed/chunk64` becomes
+    /// `stall_mixed_chunk64`); when two source names mangle to the same
+    /// identifier the first (in BTreeMap order) wins and the duplicate
+    /// is noted in a comment rather than emitted twice.
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::new();
+        let mut seen = std::collections::BTreeSet::new();
+        let mut emit_name = |out: &mut String, orig: &str| -> Option<String> {
+            let name = prometheus_name(orig);
+            if !seen.insert(name.clone()) {
+                out.push_str(&format!("# duplicate after mangling, skipped: {orig}\n"));
+                return None;
+            }
+            Some(name)
+        };
+        for (k, v) in self.counters.read().unwrap().iter() {
+            let Some(name) = emit_name(&mut out, k) else { continue };
+            out.push_str(&format!("# TYPE {name} counter\n"));
+            out.push_str(&format!("{name} {}\n", v.load(Ordering::Relaxed)));
+        }
+        for (k, v) in self.gauges.read().unwrap().iter() {
+            let Some(name) = emit_name(&mut out, k) else { continue };
+            out.push_str(&format!("# TYPE {name} gauge\n"));
+            out.push_str(&format!("{name} {}\n", fmt_f64(f64::from_bits(v.load(Ordering::Relaxed)))));
+        }
+        for (k, h) in self.histograms.read().unwrap().iter() {
+            let Some(name) = emit_name(&mut out, k) else { continue };
+            out.push_str(&format!("# TYPE {name} histogram\n"));
+            let counts = h.bucket_snapshot();
+            let total = h.count();
+            // Emit cumulative buckets up to the last non-empty one (the
+            // remaining finite bounds all equal the total), then +Inf.
+            let last = counts.iter().rposition(|&c| c > 0).unwrap_or(0);
+            let mut cum = 0u64;
+            for (i, &c) in counts.iter().enumerate().take(last + 1) {
+                cum += c;
+                out.push_str(&format!(
+                    "{name}_bucket{{le=\"{}\"}} {cum}\n",
+                    fmt_f64(bucket_bound_ms(i))
+                ));
+            }
+            out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {total}\n"));
+            out.push_str(&format!("{name}_sum {}\n", fmt_f64(h.sum_ms())));
+            out.push_str(&format!("{name}_count {total}\n"));
+        }
+        out
+    }
+}
+
+/// Shortest round-trippable float rendering Prometheus accepts.
+fn fmt_f64(x: f64) -> String {
+    if x == x.trunc() && x.abs() < 1e15 {
+        format!("{}", x as i64)
+    } else {
+        format!("{x}")
+    }
+}
+
+/// Mangle an internal metric name into a valid Prometheus identifier:
+/// every character outside `[a-zA-Z0-9_]` becomes `_`, and a leading
+/// digit gets a `_` prefix.
+pub fn prometheus_name(name: &str) -> String {
+    let mut out = String::with_capacity(name.len() + 1);
+    for (i, ch) in name.chars().enumerate() {
+        if ch.is_ascii_alphanumeric() || ch == '_' {
+            if i == 0 && ch.is_ascii_digit() {
+                out.push('_');
+            }
+            out.push(ch);
+        } else {
+            out.push('_');
+        }
+    }
+    if out.is_empty() {
+        out.push('_');
+    }
+    out
+}
+
+fn valid_metric_name(s: &str) -> bool {
+    !s.is_empty()
+        && s.chars().next().is_some_and(|c| c.is_ascii_alphabetic() || c == '_' || c == ':')
+        && s.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+}
+
+fn valid_label_name(s: &str) -> bool {
+    !s.is_empty()
+        && s.chars().next().is_some_and(|c| c.is_ascii_alphabetic() || c == '_')
+        && s.chars().all(|c| c.is_ascii_alphanumeric() || c == '_')
+}
+
+/// Line-level linter for the text exposition format: every line must be
+/// a comment, blank, or a `name[{labels}] value` sample with a valid
+/// metric name, well-formed labels and a parseable value; `# TYPE` lines
+/// must be well-formed and unique per metric. Histogram `_bucket` series
+/// must be cumulative with a final `+Inf` bucket equal to `_count`.
+/// Returns the first violation. Used by unit tests (so malformed names
+/// fail CI, not scrapes) and the HTTP round-trip test.
+pub fn lint_exposition(text: &str) -> Result<(), String> {
+    let mut types: BTreeMap<String, String> = BTreeMap::new();
+    // histogram base -> (last cumulative bucket, inf bucket, count)
+    let mut hist: BTreeMap<String, (Option<u64>, Option<u64>, Option<u64>)> = BTreeMap::new();
+    for (ln, line) in text.lines().enumerate() {
+        let err = |msg: String| Err(format!("line {}: {msg}: {line:?}", ln + 1));
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut parts = rest.split_whitespace();
+            let (Some(name), Some(kind), None) = (parts.next(), parts.next(), parts.next()) else {
+                return err("malformed TYPE line".into());
+            };
+            if !valid_metric_name(name) {
+                return err(format!("invalid metric name {name:?}"));
+            }
+            if !matches!(kind, "counter" | "gauge" | "histogram" | "summary" | "untyped") {
+                return err(format!("unknown metric type {kind:?}"));
+            }
+            if types.insert(name.to_string(), kind.to_string()).is_some() {
+                return err(format!("duplicate TYPE for {name:?}"));
+            }
+            continue;
+        }
+        if line.starts_with('#') {
+            continue; // other comments (HELP, collision notes)
+        }
+        // Sample line: name[{labels}] value
+        let (name_part, value_part) = match line.find(|c| c == '{') {
+            Some(brace) => {
+                let close = match line.rfind('}') {
+                    Some(c) if c > brace => c,
+                    _ => return err("unbalanced label braces".into()),
+                };
+                let labels = &line[brace + 1..close];
+                for pair in labels.split(',').filter(|p| !p.is_empty()) {
+                    let Some((k, v)) = pair.split_once('=') else {
+                        return err(format!("malformed label {pair:?}"));
+                    };
+                    if !valid_label_name(k) {
+                        return err(format!("invalid label name {k:?}"));
+                    }
+                    if !(v.len() >= 2 && v.starts_with('"') && v.ends_with('"')) {
+                        return err(format!("unquoted label value {v:?}"));
+                    }
+                }
+                (&line[..brace], line[close + 1..].trim())
+            }
+            None => {
+                let Some((n, v)) = line.split_once(' ') else {
+                    return err("sample line without value".into());
+                };
+                (n, v.trim())
+            }
+        };
+        if !valid_metric_name(name_part) {
+            return err(format!("invalid metric name {name_part:?}"));
+        }
+        let value = match value_part {
+            "+Inf" => f64::INFINITY,
+            "-Inf" => f64::NEG_INFINITY,
+            "NaN" => f64::NAN,
+            v => match v.parse::<f64>() {
+                Ok(x) => x,
+                Err(_) => return err(format!("unparseable value {value_part:?}")),
+            },
+        };
+        // Histogram series bookkeeping.
+        for (suffix, slot) in [("_bucket", 0usize), ("_count", 2)] {
+            if let Some(base) = name_part.strip_suffix(suffix) {
+                if types.get(base).map(String::as_str) == Some("histogram") {
+                    let entry = hist.entry(base.to_string()).or_default();
+                    let v = value as u64;
+                    match slot {
+                        0 => {
+                            if line.contains("le=\"+Inf\"") {
+                                entry.1 = Some(v);
+                            } else {
+                                if entry.0.is_some_and(|prev| v < prev) {
+                                    return err(format!(
+                                        "non-cumulative bucket for {base:?}"
+                                    ));
+                                }
+                                entry.0 = Some(v);
+                            }
+                        }
+                        _ => entry.2 = Some(v),
+                    }
+                }
+            }
+        }
+    }
+    for (base, (last, inf, count)) in &hist {
+        let (Some(inf), Some(count)) = (inf, count) else {
+            return Err(format!("histogram {base:?} missing +Inf bucket or _count"));
+        };
+        if inf != count {
+            return Err(format!("histogram {base:?}: +Inf bucket {inf} != _count {count}"));
+        }
+        if last.is_some_and(|l| l > *inf) {
+            return Err(format!("histogram {base:?}: finite bucket above +Inf"));
+        }
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -137,12 +523,153 @@ mod tests {
         assert_eq!(j.req("gauges").req("kv_free_blocks").as_f64(), Some(5.0));
     }
 
+    /// Regression for the reservoir-era honesty bugs: the old histogram
+    /// decimated past 4096 samples and summarized only the survivors, so
+    /// `count` and `mean` underreported. The fixed-bucket histogram must
+    /// keep the exact total count and sum at any volume.
     #[test]
-    fn histogram_reservoir_bounded() {
-        let mut h = Histogram::default();
-        for i in 0..10_000 {
+    fn histogram_exact_count_and_sum_past_4096() {
+        let h = Histogram::new();
+        let n = 10_000u64;
+        let mut sum = 0.0;
+        for i in 0..n {
+            let ms = (i % 100) as f64 + 0.5;
+            h.record(ms);
+            sum += ms;
+        }
+        assert_eq!(h.count(), n);
+        assert!((h.sum_ms() - sum).abs() < 1e-6 * sum);
+        let s = h.summary();
+        assert_eq!(s.n, n as usize);
+        assert!((s.mean - sum / n as f64).abs() < 1e-9);
+        assert_eq!(s.min, 0.5);
+        assert_eq!(s.max, 99.5);
+    }
+
+    #[test]
+    fn histogram_percentiles_bucket_accurate() {
+        let h = Histogram::new();
+        for i in 1..=1000 {
             h.record(i as f64);
         }
-        assert!(h.samples.len() <= RESERVOIR);
+        // √2 buckets: relative error per bucket is at most ~41%.
+        let p50 = h.percentile(0.50);
+        assert!((350.0..=720.0).contains(&p50), "p50 {p50}");
+        let p99 = h.percentile(0.99);
+        assert!((700.0..=1000.0).contains(&p99), "p99 {p99}");
+        // Clamped to observed extremes.
+        assert!(h.percentile(0.0) >= 1.0);
+        assert!(h.percentile(1.0) <= 1000.0);
+    }
+
+    #[test]
+    fn histogram_concurrent_records_exact_count() {
+        let h = Arc::new(Histogram::new());
+        let threads: Vec<_> = (0..4)
+            .map(|t| {
+                let h = Arc::clone(&h);
+                std::thread::spawn(move || {
+                    for i in 0..2500 {
+                        h.record((t * 2500 + i) as f64 * 0.01);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(h.count(), 10_000);
+        let expect: f64 = (0..10_000).map(|i| i as f64 * 0.01).sum();
+        assert!((h.sum_ms() - expect).abs() < 1e-6 * expect);
+    }
+
+    #[test]
+    fn noop_sink_records_nothing() {
+        let m = Metrics::noop();
+        m.incr("requests", 5);
+        m.observe("ttft", 10.0);
+        m.set_gauge("g", 1.0);
+        assert_eq!(m.counter("requests"), 0);
+        assert!(m.latency_summary("ttft").is_none());
+        assert_eq!(m.gauge("g"), None);
+    }
+
+    #[test]
+    fn name_mangling() {
+        assert_eq!(prometheus_name("ttft_ms_tenant_0"), "ttft_ms_tenant_0");
+        assert_eq!(prometheus_name("stall/mixed/chunk64"), "stall_mixed_chunk64");
+        assert_eq!(prometheus_name("serve/bursty/ttft_p99_high_ms"), "serve_bursty_ttft_p99_high_ms");
+        assert_eq!(prometheus_name("lkv+suffix"), "lkv_suffix");
+        assert_eq!(prometheus_name("9lives"), "_9lives");
+        assert_eq!(prometheus_name(""), "_");
+    }
+
+    /// Every line the exposition emits — including mangled slash/plus
+    /// names and full histogram series — must pass the linter.
+    #[test]
+    fn exposition_lints_clean() {
+        let m = Metrics::new();
+        m.incr("completions", 3);
+        m.incr("stall/mixed/chunk64_total", 1);
+        m.set_gauge("kv_free_blocks", 5.0);
+        m.set_gauge("9starts_with_digit", 1.5);
+        for i in 0..5000 {
+            m.observe("ttft_ms_tenant_0", (i % 50) as f64 + 0.25);
+        }
+        m.observe("decode_stall_ms", 3.5);
+        let text = m.to_prometheus();
+        lint_exposition(&text).unwrap();
+        assert!(text.contains("# TYPE completions counter"));
+        assert!(text.contains("# TYPE kv_free_blocks gauge"));
+        assert!(text.contains("# TYPE ttft_ms_tenant_0 histogram"));
+        assert!(text.contains("stall_mixed_chunk64_total 1"));
+        assert!(text.contains("_9starts_with_digit 1.5"));
+        assert!(text.contains("ttft_ms_tenant_0_count 5000"));
+        assert!(text.contains("ttft_ms_tenant_0_bucket{le=\"+Inf\"} 5000"));
+    }
+
+    #[test]
+    fn exposition_agrees_with_json() {
+        let m = Metrics::new();
+        m.incr("completions", 7);
+        m.set_gauge("kv_free_blocks", 4.0);
+        for i in 0..100 {
+            m.observe("ttft_ms", i as f64);
+        }
+        let j = m.to_json();
+        let p = m.to_prometheus();
+        assert!(p.contains(&format!(
+            "completions {}",
+            j.req("counters").req("completions").as_usize().unwrap()
+        )));
+        assert!(p.contains(&format!(
+            "ttft_ms_count {}",
+            j.req("latency").req("ttft_ms").req("count").as_usize().unwrap()
+        )));
+    }
+
+    #[test]
+    fn linter_rejects_malformed() {
+        assert!(lint_exposition("bad name 1\n").is_err());
+        assert!(lint_exposition("metric{le=unquoted} 1\n").is_err());
+        assert!(lint_exposition("metric notanumber\n").is_err());
+        assert!(lint_exposition("# TYPE m bogus\n").is_err());
+        assert!(lint_exposition("# TYPE m counter\n# TYPE m counter\nm 1\n").is_err());
+        assert!(lint_exposition(
+            "# TYPE h histogram\nh_bucket{le=\"1\"} 5\nh_bucket{le=\"+Inf\"} 3\nh_sum 1\nh_count 3\n"
+        )
+        .is_err());
+        assert!(lint_exposition("ok_metric 1.5\n# comment\n").is_ok());
+    }
+
+    #[test]
+    fn mangling_collision_emitted_once() {
+        let m = Metrics::new();
+        m.incr("a/b", 1);
+        m.incr("a_b", 2);
+        let text = m.to_prometheus();
+        lint_exposition(&text).unwrap();
+        assert_eq!(text.matches("# TYPE a_b counter").count(), 1);
+        assert!(text.contains("# duplicate after mangling, skipped"));
     }
 }

@@ -66,7 +66,8 @@ use std::collections::{HashMap, VecDeque};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::engine::{ChunkedPrefill, Engine, FinishReason, PrefillOutput, PrefixPlan};
+use crate::engine::{ChunkedPrefill, Engine, FinishReason, PrefillOutput, PrefixPlan, RequestStats};
+use crate::eviction::DecisionSummary;
 use crate::kvcache::{
     manager::bytes_per_slot, CacheManager, MatchKind, OwnerClass, PagedSeqCache, PrefixPin,
     RestoreOutcome, SeqCache,
@@ -75,9 +76,14 @@ use crate::metrics::Metrics;
 use crate::model::sampler::Sampler;
 use crate::model::tokenizer::{decode_until_eos, EOS_ID};
 use crate::scheduler::queue::{Priority, Reply, Request, RequestQueue};
+use crate::trace::{Phase, Tracer};
 
 /// Recent-stall window length for the SLO admission gate.
 const STALL_WINDOW: usize = 64;
+
+fn ms_between(a: Instant, b: Instant) -> f64 {
+    b.saturating_duration_since(a).as_secs_f64() * 1e3
+}
 
 #[derive(Debug, Clone)]
 pub struct LoopConfig {
@@ -156,6 +162,13 @@ struct PendingPrefill {
     /// Pinned prefix-tree path this job resumes from (released once the
     /// job finishes, after its new blocks are inserted).
     pin: Option<PrefixPin>,
+    /// End of this request's last recorded span — the next span starts
+    /// here, so spans tile the request's lifetime exactly.
+    mark: Instant,
+    /// Chunks stepped so far.
+    chunks: usize,
+    /// Submit → engine-loop pop.
+    queue_ms: f64,
 }
 
 /// An active sequence's KV, in whichever layout the loop runs.
@@ -189,6 +202,10 @@ struct ActiveSeq {
     /// Tokens charged against the tenant's quota at admission
     /// (`prompt + max_new`), released when the sequence leaves.
     charge: usize,
+    /// End of this sequence's last recorded span (lifecycle tiling).
+    mark: Instant,
+    stats: RequestStats,
+    eviction: Option<DecisionSummary>,
 }
 
 /// Lowest-priority (then most recently started) active paged sequence
@@ -221,6 +238,9 @@ pub struct EngineLoop {
     cfg: LoopConfig,
     queue: Arc<RequestQueue>,
     metrics: Arc<Metrics>,
+    /// Lifecycle span sink (`--trace-out` / `GET /trace/<id>`); None =
+    /// tracing off, spans are skipped entirely.
+    tracer: Option<Arc<Tracer>>,
     /// Resolved at `run`: `cfg.paged_kv` and the backend supports it.
     paged: bool,
     /// Last `STALL_WINDOW` per-iteration decode-stall values (zeros
@@ -243,9 +263,22 @@ impl EngineLoop {
             cfg,
             queue,
             metrics,
+            tracer: None,
             paged: false,
             stall_window: VecDeque::new(),
             tenant_used: HashMap::new(),
+        }
+    }
+
+    /// Record request-lifecycle spans into `tracer`.
+    pub fn with_tracer(mut self, tracer: Arc<Tracer>) -> EngineLoop {
+        self.tracer = Some(tracer);
+        self
+    }
+
+    fn span(&self, request_id: u64, phase: Phase, start: Instant, end: Instant) {
+        if let Some(t) = &self.tracer {
+            t.record(request_id, phase, start, end);
         }
     }
 
@@ -320,8 +353,10 @@ impl EngineLoop {
         *self.tenant_used.entry(req.tenant).or_default() += charge;
         if charge > quota {
             let t0 = Instant::now();
+            self.span(req.id, Phase::Queue, req.submitted_at, t0);
             self.reject(
                 req,
+                t0,
                 t0,
                 anyhow::anyhow!("request needs {charge} tokens, over the per-tenant quota {quota}"),
             );
@@ -366,6 +401,7 @@ impl EngineLoop {
                 Ok(n) => {
                     self.metrics.incr("preemptions_total", 1);
                     self.metrics.incr("spill_blocks_total", n as u64);
+                    active[j].stats.spills += 1;
                     preempted.push(active.swap_remove(j));
                 }
                 Err(e) => {
@@ -441,9 +477,16 @@ impl EngineLoop {
                     };
                     match outcome {
                         RestoreOutcome::Restored(n) => {
-                            self.metrics.observe("restore_ms", t0.elapsed().as_secs_f64() * 1e3);
+                            let now = Instant::now();
+                            self.metrics.observe("restore_ms", ms_between(t0, now));
                             self.metrics.incr("restores_total", 1);
                             self.metrics.incr("restore_blocks_total", n as u64);
+                            let seq = &mut preempted[0];
+                            // Parked-in-spill time tiles up to the restore.
+                            self.span(id, Phase::Spill, seq.mark, t0);
+                            self.span(id, Phase::Restore, t0, now);
+                            seq.mark = now;
+                            seq.stats.restores += 1;
                             active.push(preempted.remove(0));
                         }
                         RestoreOutcome::NoSpace => break,
@@ -527,8 +570,16 @@ impl EngineLoop {
                     } else {
                         p.job.step(&self.engine)
                     };
-                    let dt = t0.elapsed().as_secs_f64() * 1e3;
+                    let now = Instant::now();
+                    let dt = ms_between(t0, now);
                     p.work_ms += dt;
+                    p.chunks += 1;
+                    // The chunk span starts at the previous mark, so it
+                    // also absorbs the interleaved decode time since the
+                    // last chunk (lifecycle tiling; `work_ms` keeps the
+                    // pure-work number for the TTFT breakdown).
+                    self.span(p.req.id, Phase::PrefillChunk, p.mark, now);
+                    p.mark = now;
                     self.metrics.observe("prefill_chunk_ms", dt);
                     Some((stepped, dt))
                 }
@@ -563,14 +614,15 @@ impl EngineLoop {
                     self.note_stall(if stalling { total } else { 0.0 });
                 }
                 Some((Err(e), dt)) => {
-                    let p = pending.take().expect("pending job just stepped");
+                    let PendingPrefill { req, t_start, pin, mark, .. } =
+                        pending.take().expect("pending job just stepped");
                     // Owner-scoped cleanup: frees every arena block the
                     // failed job charged to this request.
-                    mgr.release(p.req.id);
-                    if let Some(pin) = p.pin {
+                    mgr.release(req.id);
+                    if let Some(pin) = pin {
                         mgr.prefix_release(pin);
                     }
-                    self.reject(p.req, p.t_start, e);
+                    self.reject(req, t_start, mark, e);
                     if stalling {
                         self.metrics.observe("decode_stall_ms", dt);
                     }
@@ -621,6 +673,12 @@ impl EngineLoop {
                             ActiveKv::Dense(_) => false,
                         };
                         if grown {
+                            if let ActiveKv::Paged(c) = &active[i].cache {
+                                let bs = mgr.block_size();
+                                let blocks = c.allocated_slots().div_ceil(bs);
+                                let s = &mut active[i].stats;
+                                s.peak_arena_blocks = s.peak_arena_blocks.max(blocks);
+                            }
                             break None;
                         }
                         if !self.cfg.preemption
@@ -640,6 +698,7 @@ impl EngineLoop {
                             Ok(n) => {
                                 self.metrics.incr("preemptions_total", 1);
                                 self.metrics.incr("spill_blocks_total", n as u64);
+                                active[j].stats.spills += 1;
                                 victim_ids.push(vid);
                             }
                             Err(e) => {
@@ -713,9 +772,13 @@ impl EngineLoop {
                             self.metrics
                                 .observe("decode_step_ms", dt / stepping.len() as f64);
                             self.metrics.observe("decode_batch_ms", dt);
+                            let now = Instant::now();
                             for ((_, seq), step) in stepping.iter_mut().zip(steps) {
                                 seq.next_token = seq.sampler.sample(&step.logits);
                                 seq.tokens.push(seq.next_token);
+                                seq.stats.decode_iters += 1;
+                                self.span(seq.id, Phase::Decode, seq.mark, now);
+                                seq.mark = now;
                             }
                         }
                         Err(e) => {
@@ -723,16 +786,20 @@ impl EngineLoop {
                             // sequence (per-seq errors surface the same
                             // way on the per-sequence path).
                             let err = format!("{e:#}");
+                            let now = Instant::now();
                             for (i, seq) in stepping.iter() {
+                                self.span(seq.id, Phase::Finish, seq.mark, now);
                                 let _ = seq.reply.send(Reply {
                                     id: seq.id,
                                     text: String::new(),
                                     n_tokens: 0,
                                     ttft_ms: seq.ttft_ms,
-                                    total_ms: seq.t_start.elapsed().as_secs_f64() * 1e3,
+                                    total_ms: ms_between(seq.t_start, now),
                                     kept: seq.kept,
                                     finish_reason: FinishReason::Error,
                                     error: Some(err.clone()),
+                                    stats: seq.stats.clone(),
+                                    eviction: seq.eviction.clone(),
                                 });
                                 failed.push(*i);
                             }
@@ -747,21 +814,28 @@ impl EngineLoop {
                         let t0 = Instant::now();
                         match self.engine.decode_step(&model, cache, tok) {
                             Ok(step) => {
-                                self.metrics
-                                    .observe("decode_step_ms", t0.elapsed().as_secs_f64() * 1e3);
+                                let now = Instant::now();
+                                self.metrics.observe("decode_step_ms", ms_between(t0, now));
                                 seq.next_token = seq.sampler.sample(&step.logits);
                                 seq.tokens.push(seq.next_token);
+                                seq.stats.decode_iters += 1;
+                                self.span(seq.id, Phase::Decode, seq.mark, now);
+                                seq.mark = now;
                             }
                             Err(e) => {
+                                let now = Instant::now();
+                                self.span(seq.id, Phase::Finish, seq.mark, now);
                                 let _ = seq.reply.send(Reply {
                                     id: seq.id,
                                     text: String::new(),
                                     n_tokens: 0,
                                     ttft_ms: seq.ttft_ms,
-                                    total_ms: seq.t_start.elapsed().as_secs_f64() * 1e3,
+                                    total_ms: ms_between(seq.t_start, now),
                                     kept: seq.kept,
                                     finish_reason: FinishReason::Error,
                                     error: Some(format!("{e:#}")),
+                                    stats: seq.stats.clone(),
+                                    eviction: seq.eviction.clone(),
                                 });
                                 failed.push(*i);
                             }
@@ -797,19 +871,30 @@ impl EngineLoop {
     ) {
         let stalling = !active.is_empty();
         let t0 = Instant::now();
-        let res = (|| -> anyhow::Result<(ActiveKv, Vec<f32>, usize)> {
-            let pre = self.engine.prefill_for_method(&req.prompt, &req.method)?;
-            self.select_compact(&req, pre, mgr, active, preempted)
-        })();
+        self.span(req.id, Phase::Queue, req.submitted_at, t0);
+        let queue_ms = ms_between(req.submitted_at, t0);
+        // Split at the prefill/selection boundary so the Admission and
+        // Eviction spans tile the blocking admission.
+        let res = match self.engine.prefill_for_method(&req.prompt, &req.method) {
+            Ok(pre) => {
+                let t_mid = Instant::now();
+                self.span(req.id, Phase::Admission, t0, t_mid);
+                self.select_compact(&req, pre, mgr, active, preempted)
+                    .map(|ok| (ok, t_mid))
+                    .map_err(|e| (e, t_mid))
+            }
+            Err(e) => Err((e, t0)),
+        };
         if stalling {
             // every active decode waited for this entire admission
             self.metrics.observe("decode_stall_ms", t0.elapsed().as_secs_f64() * 1e3);
         }
         match res {
-            Ok((cache, logits, kept)) => {
-                self.activate(req, cache, logits, kept, t0, None, active, mgr)
+            Ok(((cache, logits, kept, decision), t_mid)) => {
+                let stats = RequestStats { queue_ms, prefill_chunks: 1, ..Default::default() };
+                self.activate(req, cache, logits, kept, t0, None, t_mid, stats, decision, active, mgr)
             }
-            Err(e) => self.reject(req, t0, e),
+            Err((e, mark)) => self.reject(req, t0, mark, e),
         }
         self.publish_cache_stats(mgr);
     }
@@ -829,6 +914,7 @@ impl EngineLoop {
         preempted: &mut Vec<ActiveSeq>,
     ) -> Option<PendingPrefill> {
         let t_start = Instant::now();
+        self.span(req.id, Phase::Queue, req.submitted_at, t_start);
         let mut pin = None;
         let plan = if mgr.prefix_enabled() {
             match self.engine.prefix_pass_info(req.prompt.len(), &req.method) {
@@ -910,13 +996,27 @@ impl EngineLoop {
             other => other,
         };
         match begun {
-            Ok(job) => Some(PendingPrefill { req, job, t_start, work_ms: 0.0, pin }),
+            Ok(job) => {
+                let now = Instant::now();
+                self.span(req.id, Phase::Admission, t_start, now);
+                let queue_ms = ms_between(req.submitted_at, t_start);
+                Some(PendingPrefill {
+                    req,
+                    job,
+                    t_start,
+                    work_ms: 0.0,
+                    pin,
+                    mark: now,
+                    chunks: 0,
+                    queue_ms,
+                })
+            }
             Err(e) => {
                 mgr.release(req.id);
                 if let Some(pin) = pin {
                     mgr.prefix_release(pin);
                 }
-                self.reject(req, t_start, e);
+                self.reject(req, t_start, t_start, e);
                 None
             }
         }
@@ -934,16 +1034,30 @@ impl EngineLoop {
         preempted: &mut Vec<ActiveSeq>,
         mgr: &mut CacheManager,
     ) {
-        let PendingPrefill { req, mut job, t_start, work_ms, pin } = p;
+        let PendingPrefill { req, mut job, t_start, work_ms, pin, mark, chunks, queue_ms } = p;
         let records = job.take_prefix_records();
         let prompt = req.prompt.clone();
-        let res = (|| -> anyhow::Result<(ActiveKv, Vec<f32>, usize)> {
+        let res = (|| -> anyhow::Result<(ActiveKv, Vec<f32>, usize, DecisionSummary)> {
             let pre = job.into_output()?;
             self.select_compact(&req, pre, mgr, active, preempted)
         })();
         match res {
-            Ok((cache, logits, kept)) => {
-                self.activate(req, cache, logits, kept, t_start, Some(work_ms), active, mgr);
+            Ok((cache, logits, kept, decision)) => {
+                let stats =
+                    RequestStats { queue_ms, prefill_chunks: chunks, ..Default::default() };
+                self.activate(
+                    req,
+                    cache,
+                    logits,
+                    kept,
+                    t_start,
+                    Some(work_ms),
+                    mark,
+                    stats,
+                    decision,
+                    active,
+                    mgr,
+                );
                 // Insert after the sequence reserved its own KV so the
                 // tree only grows into genuinely spare pool space.
                 if let Some(recs) = records {
@@ -957,7 +1071,7 @@ impl EngineLoop {
                 // Owner-scoped cleanup (paged prompt blocks the failed
                 // compaction may have left charged to this request).
                 mgr.release(req.id);
-                self.reject(req, t_start, e);
+                self.reject(req, t_start, mark, e);
             }
         }
         if let Some(pin) = pin {
@@ -981,12 +1095,13 @@ impl EngineLoop {
         mgr: &mut CacheManager,
         active: &mut Vec<ActiveSeq>,
         preempted: &mut Vec<ActiveSeq>,
-    ) -> anyhow::Result<(ActiveKv, Vec<f32>, usize)> {
+    ) -> anyhow::Result<(ActiveKv, Vec<f32>, usize, DecisionSummary)> {
         let n_layers = self.engine.n_layers(&self.engine.cfg.model);
         let mut evcfg = self.engine.cfg.eviction;
         evcfg.budget = req.budget;
         req.knobs.apply(&mut evcfg);
         let sel = req.method.select(&evcfg, n_layers, &pre.bundle);
+        let decision = DecisionSummary::new(&req.method, &evcfg, &sel, &pre.bundle);
         let cap = self
             .engine
             .rt
@@ -1036,7 +1151,7 @@ impl EngineLoop {
             }
             let cache = res?;
             mgr.tag(req.id, OwnerClass::Decode);
-            Ok((ActiveKv::Paged(cache), pre.logits, sel.max_kept()))
+            Ok((ActiveKv::Paged(cache), pre.logits, sel.max_kept(), decision))
         } else {
             debug_assert!(pre.blocks.is_none(), "paged prefill output in a dense loop");
             if !mgr.can_admit(cap) {
@@ -1048,7 +1163,7 @@ impl EngineLoop {
             anyhow::ensure!(mgr.can_admit(cap), "kv pool exhausted");
             let cache =
                 SeqCache::from_selection(&pre.k, &pre.v, &sel.per_layer, req.prompt.len(), cap);
-            Ok((ActiveKv::Dense(cache), pre.logits, sel.max_kept()))
+            Ok((ActiveKv::Dense(cache), pre.logits, sel.max_kept(), decision))
         }
     }
 
@@ -1103,6 +1218,9 @@ impl EngineLoop {
         kept: usize,
         t_start: Instant,
         chunk_work_ms: Option<f64>,
+        evict_start: Instant,
+        mut stats: RequestStats,
+        decision: DecisionSummary,
         active: &mut Vec<ActiveSeq>,
         mgr: &mut CacheManager,
     ) {
@@ -1112,7 +1230,20 @@ impl EngineLoop {
             Sampler::greedy()
         };
         let first = sampler.sample(&logits);
-        let ttft_ms = t_start.elapsed().as_secs_f64() * 1e3;
+        let t_act = Instant::now();
+        // Selection + compaction + activation tile from the end of the
+        // last prefill span to the first-token instant.
+        self.span(req.id, Phase::Eviction, evict_start, t_act);
+        let ttft_ms = ms_between(t_start, t_act);
+        stats.ttft_ms = ttft_ms;
+        stats.evicted_per_layer = decision
+            .kept_per_layer
+            .iter()
+            .map(|&k| decision.prompt_len.saturating_sub(k))
+            .collect();
+        if let ActiveKv::Paged(c) = &cache {
+            stats.peak_arena_blocks = c.allocated_slots().div_ceil(mgr.block_size());
+        }
         self.metrics.observe("ttft_ms", ttft_ms);
         if self.cfg.tenants > 1 {
             self.metrics.observe(&format!("ttft_ms_tenant_{}", req.tenant), ttft_ms);
@@ -1146,23 +1277,36 @@ impl EngineLoop {
             kept,
             tenant: req.tenant,
             priority: req.priority,
+            mark: t_act,
+            stats,
+            eviction: Some(decision),
         });
     }
 
     /// Send the error reply for a request that never activated (also
-    /// releases its tenant-quota charge).
-    fn reject(&mut self, req: Request, t_start: Instant, e: anyhow::Error) {
+    /// releases its tenant-quota charge). `mark` is the end of the
+    /// request's last recorded span; the Finish span covers [mark, now]
+    /// so even failed requests' spans tile their lifetime.
+    fn reject(&mut self, req: Request, t_start: Instant, mark: Instant, e: anyhow::Error) {
         self.release_tenant(req.tenant, req.prompt.len() + req.max_new);
         self.metrics.incr("prefill_errors", 1);
+        let now = Instant::now();
+        self.span(req.id, Phase::Finish, mark, now);
+        let stats = RequestStats {
+            queue_ms: ms_between(req.submitted_at, t_start),
+            ..Default::default()
+        };
         let _ = req.reply.send(Reply {
             id: req.id,
             text: String::new(),
             n_tokens: 0,
             ttft_ms: 0.0,
-            total_ms: t_start.elapsed().as_secs_f64() * 1e3,
+            total_ms: ms_between(t_start, now),
             kept: 0,
             finish_reason: FinishReason::Error,
             error: Some(format!("{e:#}")),
+            stats,
+            eviction: None,
         });
     }
 
@@ -1176,22 +1320,30 @@ impl EngineLoop {
         self.metrics.incr("decode_errors", 1);
     }
 
-    fn complete(&mut self, seq: ActiveSeq, reason: FinishReason, mgr: &mut CacheManager) {
+    fn complete(&mut self, mut seq: ActiveSeq, reason: FinishReason, mgr: &mut CacheManager) {
+        if let ActiveKv::Paged(c) = &seq.cache {
+            let blocks = c.allocated_slots().div_ceil(mgr.block_size());
+            seq.stats.peak_arena_blocks = seq.stats.peak_arena_blocks.max(blocks);
+        }
         mgr.drop_spilled(seq.id);
         mgr.release(seq.id);
         self.release_tenant(seq.tenant, seq.charge);
         self.publish_cache_stats(mgr);
         self.metrics.incr("completions", 1);
         self.metrics.incr("generated_tokens", seq.tokens.len() as u64);
+        let now = Instant::now();
+        self.span(seq.id, Phase::Finish, seq.mark, now);
         let _ = seq.reply.send(Reply {
             id: seq.id,
             text: decode_until_eos(&seq.tokens),
             n_tokens: seq.tokens.len(),
             ttft_ms: seq.ttft_ms,
-            total_ms: seq.t_start.elapsed().as_secs_f64() * 1e3,
+            total_ms: ms_between(seq.t_start, now),
             kept: seq.kept,
             finish_reason: reason,
             error: None,
+            stats: seq.stats,
+            eviction: seq.eviction,
         });
     }
 

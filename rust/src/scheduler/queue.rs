@@ -8,9 +8,9 @@ use std::collections::VecDeque;
 use std::sync::mpsc::Sender;
 use std::sync::{Condvar, Mutex};
 
-use crate::engine::FinishReason;
+use crate::engine::{FinishReason, RequestStats};
 use crate::eviction::spec::PolicyKnobs;
-use crate::eviction::Method;
+use crate::eviction::{DecisionSummary, Method};
 
 /// Scheduling class. Higher classes are admitted first and are the
 /// last to be preempted when the KV pool runs out of blocks.
@@ -58,6 +58,9 @@ pub struct Request {
     /// Tenant this request is billed to (token quotas are per tenant).
     pub tenant: u32,
     pub priority: Priority,
+    /// When the front-end submitted the request; queue-wait time is
+    /// measured from here to the engine-loop pop.
+    pub submitted_at: std::time::Instant,
     pub reply: Sender<Reply>,
 }
 
@@ -74,6 +77,11 @@ pub struct Reply {
     /// makes cap- and pool-driven truncation observable.
     pub finish_reason: FinishReason,
     pub error: Option<String>,
+    /// Per-request lifecycle stats (queue wait, chunks, decode iters,
+    /// evictions, arena high-water, spill/restore counts).
+    pub stats: RequestStats,
+    /// What the eviction policy decided for this request, if it ran.
+    pub eviction: Option<DecisionSummary>,
 }
 
 #[derive(Debug, PartialEq, Eq)]
@@ -211,6 +219,7 @@ mod tests {
                 knobs: PolicyKnobs::default(),
                 tenant,
                 priority,
+                submitted_at: std::time::Instant::now(),
                 reply: tx,
             },
             rx,

@@ -122,6 +122,17 @@ pub fn read_request(stream: &mut TcpStream) -> Result<HttpRequest> {
 }
 
 pub fn write_response(stream: &mut TcpStream, status: u16, body: &str) -> Result<()> {
+    write_response_typed(stream, status, "application/json", body)
+}
+
+/// [`write_response`] with an explicit content type (the Prometheus
+/// exposition is `text/plain`, everything else JSON).
+pub fn write_response_typed(
+    stream: &mut TcpStream,
+    status: u16,
+    content_type: &str,
+    body: &str,
+) -> Result<()> {
     let reason = match status {
         200 => "OK",
         400 => "Bad Request",
@@ -133,7 +144,7 @@ pub fn write_response(stream: &mut TcpStream, status: u16, body: &str) -> Result
         _ => "Unknown",
     };
     let resp = format!(
-        "HTTP/1.1 {status} {reason}\r\ncontent-type: application/json\r\ncontent-length: {}\r\nconnection: close\r\n\r\n{body}",
+        "HTTP/1.1 {status} {reason}\r\ncontent-type: {content_type}\r\ncontent-length: {}\r\nconnection: close\r\n\r\n{body}",
         body.len()
     );
     stream.write_all(resp.as_bytes())?;

@@ -9,7 +9,12 @@
 //!                    → generation JSON
 //!                    (includes "finish_reason": eos | length |
 //!                    kv_exhausted | stopped — cap/pool-driven
-//!                    truncation is observable, not silent).
+//!                    truncation is observable, not silent — plus a
+//!                    per-request "stats" object: queue_ms, ttft_ms,
+//!                    prefill_chunks, decode_iters, evicted_per_layer,
+//!                    peak_arena_blocks, spills, restores — and an
+//!                    "eviction" decision summary: policy, budget,
+//!                    kept/evicted counts, score-quantile digest).
 //!                    The optional inline "policy" object is a
 //!                    structured [`crate::eviction::spec::PolicySpec`]
 //!                    ({"family", "variant", "seed", "budget",
@@ -26,7 +31,14 @@
 //!   GET  /metrics   → counters + gauges + latency histograms, including
 //!                     the KV-pool `CacheStats` gauges (`kv_*`) and the
 //!                     prefix-cache hit/miss/reclaim counters + occupancy
-//!                     gauges (`prefix_*`) published by the engine loop
+//!                     gauges (`prefix_*`) published by the engine loop.
+//!                     `?format=prometheus` returns the same registry as
+//!                     Prometheus text exposition 0.0.4 (`text/plain`).
+//!   GET  /trace/<id> → the request's recorded lifecycle spans (queue →
+//!                     admission → prefill chunks → eviction → decode →
+//!                     spill/restore → finish), when the server runs
+//!                     with tracing enabled (`--trace-out` or embedder
+//!                     tracer); 404 otherwise.
 //!   GET  /healthz   → ok
 
 pub mod http;
@@ -43,9 +55,13 @@ use crate::eviction::EvictionConfig;
 use crate::metrics::Metrics;
 use crate::model::tokenizer::encode;
 use crate::scheduler::{Priority, Reply, Request, RequestQueue};
+use crate::trace::Tracer;
 use crate::util::json::{self, Json};
 use crate::util::threadpool::ThreadPool;
-use http::{read_request, write_response, HttpRequest};
+use http::{read_request, write_response_typed, HttpRequest};
+
+/// Prometheus text exposition format 0.0.4 content type.
+const PROMETHEUS_CT: &str = "text/plain; version=0.0.4";
 
 pub struct ServerConfig {
     pub addr: String,
@@ -72,10 +88,16 @@ impl Default for ServerConfig {
 }
 
 /// Accept loop: HTTP workers parse requests and push them to the engine
-/// queue; each worker blocks on its per-request reply channel.
-pub fn serve(cfg: ServerConfig, queue: Arc<RequestQueue>, metrics: Arc<Metrics>) -> Result<()> {
+/// queue; each worker blocks on its per-request reply channel. `tracer`
+/// (shared with the engine loop) enables `GET /trace/<id>`.
+pub fn serve(
+    cfg: ServerConfig,
+    queue: Arc<RequestQueue>,
+    metrics: Arc<Metrics>,
+    tracer: Option<Arc<Tracer>>,
+) -> Result<()> {
     let listener = TcpListener::bind(&cfg.addr).with_context(|| format!("bind {}", cfg.addr))?;
-    serve_listener(listener, cfg, queue, metrics)
+    serve_listener(listener, cfg, queue, metrics, tracer)
 }
 
 /// [`serve`] over an already-bound listener (lets tests and embedders
@@ -85,6 +107,7 @@ pub fn serve_listener(
     cfg: ServerConfig,
     queue: Arc<RequestQueue>,
     metrics: Arc<Metrics>,
+    tracer: Option<Arc<Tracer>>,
 ) -> Result<()> {
     log::info!("listening on http://{}", listener.local_addr()?);
     let pool = ThreadPool::new(cfg.workers, "http");
@@ -99,9 +122,10 @@ pub fn serve_listener(
         let queue = Arc::clone(&queue);
         let metrics = Arc::clone(&metrics);
         let next_id = Arc::clone(&next_id);
+        let tracer = tracer.clone();
         if pool
             .execute(move || {
-                let _ = handle_conn(stream, &queue, &metrics, &next_id);
+                let _ = handle_conn(stream, &queue, &metrics, &next_id, tracer.as_deref());
             })
             .is_err()
         {
@@ -118,21 +142,75 @@ fn handle_conn(
     queue: &RequestQueue,
     metrics: &Metrics,
     next_id: &AtomicU64,
+    tracer: Option<&Tracer>,
 ) -> Result<()> {
     let req = read_request(&mut stream)?;
     metrics.incr("http_requests", 1);
-    let (status, body) = route(&req, queue, metrics, next_id);
-    write_response(&mut stream, status, &body.to_string())
+    let (status, content_type, body) = route(&req, queue, metrics, next_id, tracer);
+    write_response_typed(&mut stream, status, content_type, &body)
 }
 
-fn route(req: &HttpRequest, queue: &RequestQueue, metrics: &Metrics, next_id: &AtomicU64) -> (u16, Json) {
-    match (req.method.as_str(), req.path.as_str()) {
-        ("GET", "/healthz") => (200, Json::from_pairs(vec![("ok", true.into())])),
-        ("GET", "/metrics") => (200, metrics.to_json()),
-        ("GET", "/policies") => (200, policies(metrics)),
-        ("POST", "/generate") => generate(req, queue, metrics, next_id),
-        _ => (404, Json::from_pairs(vec![("error", "not found".into())])),
+fn route(
+    req: &HttpRequest,
+    queue: &RequestQueue,
+    metrics: &Metrics,
+    next_id: &AtomicU64,
+    tracer: Option<&Tracer>,
+) -> (u16, &'static str, String) {
+    let (path, query) = match req.path.split_once('?') {
+        Some((p, q)) => (p, q),
+        None => (req.path.as_str(), ""),
+    };
+    let json = |status: u16, body: Json| (status, "application/json", body.to_string());
+    match (req.method.as_str(), path) {
+        ("GET", "/healthz") => json(200, Json::from_pairs(vec![("ok", true.into())])),
+        ("GET", "/metrics") if has_query(query, "format", "prometheus") => {
+            (200, PROMETHEUS_CT, metrics.to_prometheus())
+        }
+        ("GET", "/metrics") => json(200, metrics.to_json()),
+        ("GET", "/policies") => json(200, policies(metrics)),
+        ("GET", p) if p.starts_with("/trace/") => {
+            let (status, body) = trace_request(p, tracer);
+            json(status, body)
+        }
+        ("POST", "/generate") => {
+            let (status, body) = generate(req, queue, metrics, next_id);
+            json(status, body)
+        }
+        _ => json(404, Json::from_pairs(vec![("error", "not found".into())])),
     }
+}
+
+/// Does the raw query string contain `key=value`?
+fn has_query(query: &str, key: &str, value: &str) -> bool {
+    query
+        .split('&')
+        .any(|kv| kv.split_once('=').is_some_and(|(k, v)| k == key && v == value))
+}
+
+/// `GET /trace/<request_id>`: the request's recorded lifecycle spans.
+fn trace_request(path: &str, tracer: Option<&Tracer>) -> (u16, Json) {
+    let Some(t) = tracer else {
+        return (404, Json::from_pairs(vec![("error", "tracing is not enabled".into())]));
+    };
+    let id_part = path.trim_start_matches("/trace/");
+    let Ok(id) = id_part.parse::<u64>() else {
+        return (
+            400,
+            Json::from_pairs(vec![("error", format!("bad request id {id_part:?}").into())]),
+        );
+    };
+    let body = t.request_json(id);
+    if body.req("spans").as_arr().is_some_and(<[Json]>::is_empty) {
+        return (
+            404,
+            Json::from_pairs(vec![(
+                "error",
+                format!("no spans recorded for request {id} (unknown id, or evicted from the trace ring)").into(),
+            )]),
+        );
+    }
+    (200, body)
 }
 
 /// Whether the engine loop reported trained/synthesized predictor
@@ -221,6 +299,7 @@ fn generate(
                 }
             },
         },
+        submitted_at: std::time::Instant::now(),
         reply: tx,
     };
     match queue.submit(request) {
@@ -247,6 +326,11 @@ fn generate(
                         ("total_ms", reply.total_ms.into()),
                         ("kept", reply.kept.into()),
                         ("finish_reason", reply.finish_reason.as_str().into()),
+                        ("stats", reply.stats.to_json()),
+                        (
+                            "eviction",
+                            reply.eviction.map_or(Json::Null, |d| d.to_json()),
+                        ),
                     ]),
                 )
             }

@@ -1,0 +1,417 @@
+//! Request-lifecycle tracing: lock-free per-iteration span recording.
+//!
+//! The engine loop records one [`SpanEvent`] per request phase
+//! transition — queue wait, admission, each prefill chunk, eviction
+//! selection/compaction, each decode iteration, spill/restore parking,
+//! finish — into a fixed-capacity ring of seqlock-guarded slots. The
+//! single writer (the engine thread) never blocks and never allocates;
+//! concurrent readers (HTTP `GET /trace/<id>`, `--trace-out` export)
+//! retry or skip slots that are mid-write, so a scrape can never stall
+//! the serving loop.
+//!
+//! **Span semantics: phases tile the request lifetime.** Every span
+//! starts where the previous span of the same request ended, so for any
+//! request the recorded spans sum exactly to its wall time (the
+//! acceptance test in `tests/trace.rs` and the in-bench assertion in
+//! `bench_serve` both lean on this). A decode span therefore measures
+//! "time this request spent in decode-iteration cadence", not backend
+//! CPU attribution — a prefill chunk interleaved between two of a
+//! request's decode steps lands in that request's decode span and in the
+//! prefilling request's prefill-chunk span.
+//!
+//! Export is Chrome trace-event JSON (`ph: "X"` complete events, one
+//! `tid` per request), loadable directly in Perfetto / `chrome://tracing`.
+
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Request lifecycle phase of one span.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Submit → popped by the engine loop.
+    Queue,
+    /// Admission bookkeeping: quota charge, prefix-cache lookup, paged
+    /// block reservation, chunked-job begin (or, monolithic, the whole
+    /// blocking prefill).
+    Admission,
+    /// One chunked-prefill step (plus interleaved loop work since the
+    /// previous chunk — lifecycle tiling, see module docs).
+    PrefillChunk,
+    /// Eviction selection + gather-compaction + activation.
+    Eviction,
+    /// One decode iteration.
+    Decode,
+    /// Preempted: KV parked in the host spill store.
+    Spill,
+    /// Spilled blocks re-bound into the arena.
+    Restore,
+    /// Completion: final bookkeeping + reply send.
+    Finish,
+}
+
+impl Phase {
+    pub const ALL: [Phase; 8] = [
+        Phase::Queue,
+        Phase::Admission,
+        Phase::PrefillChunk,
+        Phase::Eviction,
+        Phase::Decode,
+        Phase::Spill,
+        Phase::Restore,
+        Phase::Finish,
+    ];
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Phase::Queue => "queue",
+            Phase::Admission => "admission",
+            Phase::PrefillChunk => "prefill_chunk",
+            Phase::Eviction => "eviction",
+            Phase::Decode => "decode",
+            Phase::Spill => "spill",
+            Phase::Restore => "restore",
+            Phase::Finish => "finish",
+        }
+    }
+
+    fn from_u64(x: u64) -> Option<Phase> {
+        Phase::ALL.get(x as usize).copied()
+    }
+}
+
+/// One recorded span (snapshot of a ring slot).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SpanEvent {
+    pub request_id: u64,
+    pub phase: Phase,
+    /// Microseconds since the tracer's epoch.
+    pub start_us: u64,
+    pub dur_us: u64,
+}
+
+/// One ring slot: a per-slot seqlock. `seq` is odd while the writer is
+/// mid-update; readers snapshot the fields and discard the read if `seq`
+/// changed (or was odd) around it.
+struct Slot {
+    seq: AtomicU64,
+    request_id: AtomicU64,
+    phase: AtomicU64,
+    start_us: AtomicU64,
+    dur_us: AtomicU64,
+}
+
+impl Slot {
+    fn new() -> Slot {
+        Slot {
+            seq: AtomicU64::new(0),
+            request_id: AtomicU64::new(0),
+            phase: AtomicU64::new(0),
+            start_us: AtomicU64::new(0),
+            dur_us: AtomicU64::new(0),
+        }
+    }
+}
+
+/// Default ring capacity (events). At one decode span per request per
+/// iteration this holds minutes of serving history for small fleets;
+/// older events are overwritten, counted in [`Tracer::dropped`].
+pub const DEFAULT_CAPACITY: usize = 1 << 16;
+
+pub struct Tracer {
+    epoch: Instant,
+    slots: Vec<Slot>,
+    /// Total events ever recorded; slot index is `head % slots.len()`.
+    head: AtomicU64,
+}
+
+impl Default for Tracer {
+    fn default() -> Tracer {
+        Tracer::new()
+    }
+}
+
+impl Tracer {
+    pub fn new() -> Tracer {
+        Tracer::with_capacity(DEFAULT_CAPACITY)
+    }
+
+    pub fn with_capacity(capacity: usize) -> Tracer {
+        let cap = capacity.max(2).next_power_of_two();
+        Tracer {
+            epoch: Instant::now(),
+            slots: (0..cap).map(|_| Slot::new()).collect(),
+            head: AtomicU64::new(0),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Events recorded since construction.
+    pub fn recorded(&self) -> u64 {
+        self.head.load(Ordering::Acquire)
+    }
+
+    /// Events overwritten by ring wraparound (no longer readable).
+    pub fn dropped(&self) -> u64 {
+        self.recorded().saturating_sub(self.slots.len() as u64)
+    }
+
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    fn instant_us(&self, t: Instant) -> u64 {
+        t.saturating_duration_since(self.epoch).as_micros() as u64
+    }
+
+    /// Record one span. Single-writer: only the engine thread calls this
+    /// (concurrent writers would need a CAS head claim; the loop is the
+    /// sole producer by construction).
+    pub fn record(&self, request_id: u64, phase: Phase, start: Instant, end: Instant) {
+        let start_us = self.instant_us(start);
+        let end_us = self.instant_us(end);
+        self.record_us(request_id, phase, start_us, end_us.saturating_sub(start_us));
+    }
+
+    pub fn record_us(&self, request_id: u64, phase: Phase, start_us: u64, dur_us: u64) {
+        let head = self.head.load(Ordering::Relaxed);
+        let slot = &self.slots[(head as usize) & (self.slots.len() - 1)];
+        let s = slot.seq.load(Ordering::Relaxed);
+        slot.seq.store(s + 1, Ordering::Release); // odd: write in progress
+        slot.request_id.store(request_id, Ordering::Relaxed);
+        slot.phase.store(phase as u64, Ordering::Relaxed);
+        slot.start_us.store(start_us, Ordering::Relaxed);
+        slot.dur_us.store(dur_us, Ordering::Relaxed);
+        slot.seq.store(s + 2, Ordering::Release); // even: stable
+        self.head.store(head + 1, Ordering::Release);
+    }
+
+    fn read_slot(&self, i: usize) -> Option<SpanEvent> {
+        let slot = &self.slots[i];
+        for _ in 0..4 {
+            let s1 = slot.seq.load(Ordering::Acquire);
+            if s1 == 0 || s1 % 2 == 1 {
+                return None; // never written, or mid-write
+            }
+            let ev = SpanEvent {
+                request_id: slot.request_id.load(Ordering::Relaxed),
+                phase: Phase::from_u64(slot.phase.load(Ordering::Relaxed))?,
+                start_us: slot.start_us.load(Ordering::Relaxed),
+                dur_us: slot.dur_us.load(Ordering::Relaxed),
+            };
+            if slot.seq.load(Ordering::Acquire) == s1 {
+                return Some(ev);
+            }
+        }
+        None // writer lapped us repeatedly; skip the slot
+    }
+
+    /// Snapshot every readable span, oldest first.
+    pub fn snapshot(&self) -> Vec<SpanEvent> {
+        let head = self.head.load(Ordering::Acquire);
+        let cap = self.slots.len() as u64;
+        let first = head.saturating_sub(cap);
+        let mut out = Vec::with_capacity((head - first) as usize);
+        for i in first..head {
+            if let Some(ev) = self.read_slot((i as usize) & (self.slots.len() - 1)) {
+                out.push(ev);
+            }
+        }
+        out.sort_by_key(|e| e.start_us);
+        out
+    }
+
+    /// Every readable span of one request, oldest first.
+    pub fn spans_for(&self, request_id: u64) -> Vec<SpanEvent> {
+        let mut v = self.snapshot();
+        v.retain(|e| e.request_id == request_id);
+        v
+    }
+
+    /// One request's spans as the `GET /trace/<id>` JSON body.
+    pub fn request_json(&self, request_id: u64) -> Json {
+        let spans = self.spans_for(request_id);
+        let total_us: u64 = spans.iter().map(|s| s.dur_us).sum();
+        let arr = spans
+            .iter()
+            .map(|s| {
+                Json::from_pairs(vec![
+                    ("phase", s.phase.as_str().into()),
+                    ("start_us", (s.start_us as f64).into()),
+                    ("dur_us", (s.dur_us as f64).into()),
+                ])
+            })
+            .collect();
+        Json::from_pairs(vec![
+            ("request_id", (request_id as f64).into()),
+            ("spans", Json::Arr(arr)),
+            ("total_us", (total_us as f64).into()),
+        ])
+    }
+
+    /// Chrome trace-event JSON (the "JSON Array Format" with a
+    /// `traceEvents` wrapper): complete (`ph: "X"`) events, one thread
+    /// lane per request id. Loadable in Perfetto / `chrome://tracing`.
+    pub fn to_chrome_json(&self) -> Json {
+        let events = self
+            .snapshot()
+            .into_iter()
+            .map(|e| {
+                Json::from_pairs(vec![
+                    ("name", e.phase.as_str().into()),
+                    ("cat", "request".into()),
+                    ("ph", "X".into()),
+                    ("ts", (e.start_us as f64).into()),
+                    ("dur", (e.dur_us as f64).into()),
+                    ("pid", 1.0.into()),
+                    ("tid", (e.request_id as f64).into()),
+                ])
+            })
+            .collect();
+        Json::from_pairs(vec![
+            ("traceEvents", Json::Arr(events)),
+            ("displayTimeUnit", "ms".into()),
+        ])
+    }
+
+    pub fn write_chrome_trace(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, self.to_chrome_json().to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn ev(t: &Tracer, req: u64, phase: Phase, start: u64, dur: u64) {
+        t.record_us(req, phase, start, dur);
+    }
+
+    #[test]
+    fn record_and_query_per_request() {
+        let t = Tracer::with_capacity(64);
+        ev(&t, 1, Phase::Queue, 0, 100);
+        ev(&t, 2, Phase::Queue, 50, 25);
+        ev(&t, 1, Phase::Admission, 100, 30);
+        ev(&t, 1, Phase::Decode, 130, 70);
+        let spans = t.spans_for(1);
+        assert_eq!(spans.len(), 3);
+        assert_eq!(spans[0].phase, Phase::Queue);
+        assert_eq!(spans[2].phase, Phase::Decode);
+        assert_eq!(spans.iter().map(|s| s.dur_us).sum::<u64>(), 200);
+        assert_eq!(t.spans_for(2).len(), 1);
+        assert_eq!(t.spans_for(99).len(), 0);
+        assert_eq!(t.dropped(), 0);
+    }
+
+    #[test]
+    fn ring_overwrites_oldest() {
+        let t = Tracer::with_capacity(8);
+        for i in 0..20 {
+            ev(&t, i, Phase::Decode, i * 10, 5);
+        }
+        let snap = t.snapshot();
+        assert_eq!(snap.len(), 8);
+        // Only the newest 8 survive.
+        assert!(snap.iter().all(|e| e.request_id >= 12));
+        assert_eq!(t.dropped(), 12);
+    }
+
+    #[test]
+    fn spans_tile_with_instant_recording() {
+        let t = Tracer::new();
+        let t0 = Instant::now();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        let t1 = Instant::now();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        let t2 = Instant::now();
+        t.record(7, Phase::Queue, t0, t1);
+        t.record(7, Phase::Decode, t1, t2);
+        let spans = t.spans_for(7);
+        assert_eq!(spans.len(), 2);
+        // Tiling: span 2 starts exactly where span 1 ended.
+        assert_eq!(spans[0].start_us + spans[0].dur_us, spans[1].start_us);
+        let sum_us = spans.iter().map(|s| s.dur_us).sum::<u64>();
+        let wall_us = t2.duration_since(t0).as_micros() as u64;
+        assert!(sum_us.abs_diff(wall_us) <= 2, "sum {sum_us} vs wall {wall_us}");
+    }
+
+    #[test]
+    fn chrome_export_shape() {
+        let t = Tracer::with_capacity(16);
+        ev(&t, 3, Phase::PrefillChunk, 10, 20);
+        ev(&t, 3, Phase::Eviction, 30, 5);
+        let j = t.to_chrome_json();
+        let events = j.req("traceEvents").as_arr().unwrap();
+        assert_eq!(events.len(), 2);
+        for e in events {
+            assert_eq!(e.req("ph").as_str(), Some("X"));
+            assert_eq!(e.req("cat").as_str(), Some("request"));
+            assert_eq!(e.req("tid").as_usize(), Some(3));
+            assert!(e.req("ts").as_f64().is_some());
+            assert!(e.req("dur").as_f64().is_some());
+        }
+        assert_eq!(events[0].req("name").as_str(), Some("prefill_chunk"));
+        // Round-trips through our own parser (valid JSON).
+        let parsed = crate::util::json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.req("traceEvents").as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn write_trace_file() {
+        let t = Tracer::with_capacity(16);
+        ev(&t, 1, Phase::Decode, 0, 10);
+        let dir = std::env::temp_dir().join("lkv_trace_test");
+        let path = dir.join("trace.json");
+        t.write_chrome_trace(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let parsed = crate::util::json::parse(&text).unwrap();
+        assert_eq!(parsed.req("traceEvents").as_arr().unwrap().len(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Readers racing the writer never panic and only ever see complete
+    /// events (seqlock torn-read protection).
+    #[test]
+    fn concurrent_reader_sees_only_complete_events() {
+        let t = Arc::new(Tracer::with_capacity(64));
+        let stop = Arc::new(AtomicU64::new(0));
+        let readers: Vec<_> = (0..2)
+            .map(|_| {
+                let t = Arc::clone(&t);
+                let stop = Arc::clone(&stop);
+                std::thread::spawn(move || {
+                    let mut seen = 0usize;
+                    while stop.load(Ordering::Relaxed) == 0 {
+                        for e in t.snapshot() {
+                            // Writer always records dur = start/2 + 1:
+                            // a torn read would break the invariant.
+                            assert_eq!(e.dur_us, e.start_us / 2 + 1);
+                            seen += 1;
+                        }
+                    }
+                    seen
+                })
+            })
+            .collect();
+        for i in 0..50_000u64 {
+            t.record_us(i % 7, Phase::Decode, i, i / 2 + 1);
+        }
+        stop.store(1, Ordering::Relaxed);
+        for r in readers {
+            r.join().unwrap();
+        }
+        assert_eq!(t.recorded(), 50_000);
+    }
+}

@@ -170,6 +170,7 @@ fn engine_loop_chunked_matches_monolithic() {
                     knobs: Default::default(),
                     tenant: 0,
                     priority: Priority::Normal,
+                    submitted_at: std::time::Instant::now(),
                     reply: tx,
                 })
                 .expect("submit");

@@ -171,6 +171,7 @@ fn engine_loop_serves_requests_batched() {
                 knobs: Default::default(),
                 tenant: 0,
                 priority: Priority::Normal,
+                submitted_at: std::time::Instant::now(),
                 reply: tx,
             })
             .expect("submit");

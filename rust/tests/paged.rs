@@ -246,6 +246,7 @@ fn run_loop(
                 knobs: Default::default(),
                 tenant: 0,
                 priority: Priority::Normal,
+                submitted_at: std::time::Instant::now(),
                 reply: tx,
             })
             .expect("submit");

@@ -66,6 +66,7 @@ fn run_pair(
                 knobs: Default::default(),
                 tenant: id as u32,
                 priority,
+                submitted_at: std::time::Instant::now(),
                 reply: tx,
             })
             .expect("submit");
@@ -189,6 +190,7 @@ fn over_quota_request_is_rejected_not_queued() {
                 knobs: Default::default(),
                 tenant: 0,
                 priority: Priority::Normal,
+                submitted_at: std::time::Instant::now(),
                 reply: tx,
             })
             .expect("submit");

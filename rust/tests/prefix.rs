@@ -18,7 +18,7 @@ use std::sync::Arc;
 use lookaheadkv::engine::{Engine, EngineConfig, PrefillOutput, PrefixPlan};
 use lookaheadkv::eviction::{EvictionConfig, Method, ScoreBundle};
 use lookaheadkv::kvcache::{CacheManager, SeqCache};
-use lookaheadkv::metrics::Metrics;
+use lookaheadkv::metrics::{lint_exposition, Metrics};
 use lookaheadkv::model::tokenizer::encode;
 use lookaheadkv::runtime::artifacts::default_artifacts_dir;
 use lookaheadkv::runtime::{
@@ -199,6 +199,7 @@ fn run_loop(prompts: &[String], prefix_cache: bool) -> (Vec<Reply>, Arc<Metrics>
                 knobs: Default::default(),
                 tenant: 0,
                 priority: Priority::Normal,
+                submitted_at: std::time::Instant::now(),
                 reply: tx,
             })
             .expect("submit");
@@ -320,6 +321,7 @@ fn monolithic_fallback_without_chunked_support_is_identical() {
                     knobs: Default::default(),
                     tenant: 0,
                     priority: Priority::Normal,
+                    submitted_at: std::time::Instant::now(),
                     reply: tx,
                 })
                 .expect("submit");
@@ -384,7 +386,7 @@ fn metrics_http_roundtrip_exposes_cache_stats() {
         .name("http-test".into())
         .spawn(move || {
             let cfg = ServerConfig { workers: 2, ..ServerConfig::default() };
-            let _ = serve_listener(listener, cfg, q3, m3);
+            let _ = serve_listener(listener, cfg, q3, m3, None);
         })
         .expect("spawn server");
 
@@ -443,6 +445,85 @@ fn metrics_http_roundtrip_exposes_cache_stats() {
     engine_thread.join().expect("engine thread");
 }
 
+/// Satellite: `GET /metrics?format=prometheus` serves a lint-clean text
+/// exposition over real HTTP that agrees with the JSON endpoint scraped
+/// in the same idle window — counter values and histogram counts match,
+/// and `# TYPE` lines are present for both kinds.
+#[test]
+fn prometheus_exposition_http_roundtrip_agrees_with_json() {
+    let queue = Arc::new(RequestQueue::new(16));
+    let metrics = Arc::new(Metrics::new());
+    let q2 = Arc::clone(&queue);
+    let m2 = Arc::clone(&metrics);
+    let engine_thread = std::thread::Builder::new()
+        .name("engine-test".into())
+        .spawn(move || {
+            let cfg = LoopConfig { max_active: 2, ..LoopConfig::default() };
+            EngineLoop::new(engine(), cfg, q2, m2).run()
+        })
+        .expect("spawn engine");
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().expect("addr").to_string();
+    let q3 = Arc::clone(&queue);
+    let m3 = Arc::clone(&metrics);
+    std::thread::Builder::new()
+        .name("http-test".into())
+        .spawn(move || {
+            let cfg = ServerConfig { workers: 2, ..ServerConfig::default() };
+            let _ = serve_listener(listener, cfg, q3, m3, None);
+        })
+        .expect("spawn server");
+
+    let body = "{\"prompt\": \"A7K=Q2Z;lorem;ipsum;dolor;A7K=\", \
+                \"method\": \"snapkv\", \"budget\": 16, \"max_new\": 3}";
+    for _ in 0..2 {
+        let (status, resp) =
+            lookaheadkv::server::http::http_post(&addr, "/generate", body).expect("post");
+        assert_eq!(status, 200, "{resp}");
+    }
+
+    // Both replies are in hand and nothing else is queued, so the
+    // back-to-back scrapes below see the same registry state.
+    let (status, json_body) =
+        lookaheadkv::server::http::http_get(&addr, "/metrics").expect("get json");
+    assert_eq!(status, 200);
+    let (status, prom) = lookaheadkv::server::http::http_get(&addr, "/metrics?format=prometheus")
+        .expect("get prometheus");
+    assert_eq!(status, 200);
+    lint_exposition(&prom).unwrap_or_else(|e| panic!("exposition lint: {e}\n{prom}"));
+
+    // `name value` sample lookup (skips `name_bucket{...}` etc. by
+    // requiring a space right after the metric name).
+    let sample = |name: &str| -> Option<f64> {
+        prom.lines()
+            .find(|l| {
+                !l.starts_with('#')
+                    && l.starts_with(name)
+                    && l[name.len()..].starts_with(' ')
+            })
+            .and_then(|l| l[name.len()..].trim().parse().ok())
+    };
+    let j = json::parse(&json_body).expect("metrics json");
+    let prefills = j.req("counters").req("prefills").as_usize().expect("prefills counter");
+    assert!(prefills >= 2);
+    assert_eq!(
+        sample("prefills"),
+        Some(prefills as f64),
+        "counter out of sync between JSON and Prometheus:\n{prom}"
+    );
+    let ttft_n = j.req("latency").req("ttft_ms").req("count").as_usize().expect("ttft count");
+    assert_eq!(
+        sample("ttft_ms_count"),
+        Some(ttft_n as f64),
+        "histogram count out of sync between JSON and Prometheus"
+    );
+    assert!(prom.contains("# TYPE prefills counter"), "missing counter TYPE line:\n{prom}");
+    assert!(prom.contains("# TYPE ttft_ms histogram"), "missing histogram TYPE line");
+
+    queue.close();
+    engine_thread.join().expect("engine thread");
+}
+
 /// Satellite: the structured policy API over real HTTP — `GET /policies`
 /// introspection, inline `policy` objects on `/generate` (valid and the
 /// 4xx rejection paths), and the legacy `method` string still serving
@@ -468,7 +549,7 @@ fn policy_api_http_roundtrip() {
         .name("http-test".into())
         .spawn(move || {
             let cfg = ServerConfig { workers: 2, ..ServerConfig::default() };
-            let _ = serve_listener(listener, cfg, q3, m3);
+            let _ = serve_listener(listener, cfg, q3, m3, None);
         })
         .expect("spawn server");
 

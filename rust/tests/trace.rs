@@ -1,0 +1,253 @@
+//! Request-lifecycle tracing through the serving stack.
+//!
+//! The tracer's contract is **lifecycle tiling**: every span of a
+//! request starts exactly where its previous span ended, so the spans
+//! partition the request's wall time. The acceptance test here holds
+//! the engine loop to it — for every reply, the recorded non-queue
+//! spans must sum to the reply's own `total_ms` within 5% (ISSUE-8
+//! acceptance) — and the HTTP test covers `GET /trace/<id>` plus the
+//! per-request `stats` / `eviction` fields on `POST /generate`.
+
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+
+use lookaheadkv::engine::{Engine, EngineConfig};
+use lookaheadkv::eviction::Method;
+use lookaheadkv::metrics::Metrics;
+use lookaheadkv::model::tokenizer::encode;
+use lookaheadkv::runtime::artifacts::default_artifacts_dir;
+use lookaheadkv::scheduler::{EngineLoop, LoopConfig, Priority, Reply, Request, RequestQueue};
+use lookaheadkv::server::{serve_listener, ServerConfig};
+use lookaheadkv::trace::{Phase, Tracer};
+use lookaheadkv::util::json;
+
+const PROMPT: &str =
+    "system;tools;ruler;eval;policy;lorem;ipsum;dolor;sit;amet;consectetur;X9Y=Z3W;find;X9Y=";
+
+fn engine() -> Engine {
+    Engine::new(&default_artifacts_dir(), EngineConfig::new("lkv-tiny")).expect("engine")
+}
+
+/// Drive `n` requests through a traced engine loop; replies sorted by id.
+fn run_traced(n: usize, chunk: usize, max_new: usize) -> (Vec<Reply>, Arc<Tracer>) {
+    let queue = Arc::new(RequestQueue::new(16));
+    let metrics = Arc::new(Metrics::new());
+    let tracer = Arc::new(Tracer::new());
+    let mut receivers = Vec::new();
+    for i in 0..n {
+        let (tx, rx) = channel();
+        receivers.push(rx);
+        let method =
+            if i % 2 == 0 { Method::SnapKV } else { Method::parse("lookaheadkv").unwrap() };
+        queue
+            .submit(Request {
+                id: i as u64,
+                prompt: encode(PROMPT, true, false),
+                method,
+                budget: 16,
+                max_new,
+                temperature: 0.0,
+                knobs: Default::default(),
+                tenant: 0,
+                priority: Priority::Normal,
+                submitted_at: std::time::Instant::now(),
+                reply: tx,
+            })
+            .expect("submit");
+    }
+    queue.close();
+    let cfg = LoopConfig { max_active: 2, prefill_chunk_tokens: chunk, ..LoopConfig::default() };
+    EngineLoop::new(engine(), cfg, Arc::clone(&queue), metrics)
+        .with_tracer(Arc::clone(&tracer))
+        .run();
+    let mut replies: Vec<Reply> =
+        receivers.into_iter().map(|rx| rx.recv().expect("reply")).collect();
+    replies.sort_by_key(|r| r.id);
+    (replies, tracer)
+}
+
+/// Tiling + the 5% acceptance bound for one reply. The sum is compared
+/// against `total_ms` with a 0.5 ms absolute floor absorbing per-span
+/// microsecond truncation.
+fn assert_spans_tile(tracer: &Tracer, reply: &Reply) {
+    let spans = tracer.spans_for(reply.id);
+    assert!(!spans.is_empty(), "request {}: no spans recorded", reply.id);
+    for w in spans.windows(2) {
+        assert_eq!(
+            w[0].start_us + w[0].dur_us,
+            w[1].start_us,
+            "request {}: {} -> {} spans do not tile",
+            reply.id,
+            w[0].phase.as_str(),
+            w[1].phase.as_str()
+        );
+    }
+    let sum_ms: f64 = spans
+        .iter()
+        .filter(|s| s.phase != Phase::Queue)
+        .map(|s| s.dur_us as f64 / 1e3)
+        .sum();
+    assert!(
+        (sum_ms - reply.total_ms).abs() <= reply.total_ms * 0.05 + 0.5,
+        "request {}: lifecycle spans sum to {sum_ms:.3} ms but the reply \
+         reported total_ms {:.3}",
+        reply.id,
+        reply.total_ms
+    );
+}
+
+/// Acceptance: monolithic-prefill serving — every request's spans tile
+/// its wall time within 5%, cover the expected phases, and agree with
+/// the per-request stats threaded onto the reply.
+#[test]
+fn lifecycle_spans_tile_wall_time_monolithic() {
+    let (replies, tracer) = run_traced(4, 0, 6);
+    assert_eq!(tracer.dropped(), 0);
+    for r in &replies {
+        assert!(r.error.is_none(), "req {}: {:?}", r.id, r.error);
+        assert_spans_tile(&tracer, r);
+        let spans = tracer.spans_for(r.id);
+        let count = |p: Phase| spans.iter().filter(|s| s.phase == p).count();
+        assert_eq!(count(Phase::Queue), 1, "req {}", r.id);
+        assert_eq!(count(Phase::Admission), 1, "req {}", r.id);
+        assert_eq!(count(Phase::Eviction), 1, "req {}", r.id);
+        assert_eq!(count(Phase::Finish), 1, "req {}", r.id);
+        assert_eq!(
+            count(Phase::Decode),
+            r.stats.decode_iters,
+            "req {}: one span per decode iteration",
+            r.id
+        );
+        // Stats ride the same clock as the spans.
+        assert!(r.stats.queue_ms >= 0.0);
+        assert!(r.stats.ttft_ms <= r.total_ms + 1e-6, "req {}", r.id);
+        assert_eq!(r.stats.prefill_chunks, 1, "monolithic prefill is one chunk");
+        assert!(!r.stats.evicted_per_layer.is_empty(), "req {}", r.id);
+        // An ample dense-cache run never spills.
+        assert_eq!(r.stats.spills, 0);
+        assert_eq!(r.stats.restores, 0);
+        let d = r.eviction.as_ref().expect("eviction decision summary");
+        assert_eq!(d.prompt_len, encode(PROMPT, true, false).len());
+        assert!(d.kept_total > 0 && d.kept_total <= d.prompt_len * d.kept_per_layer.len());
+        assert_eq!(
+            r.stats.evicted_per_layer.iter().sum::<usize>(),
+            d.evicted_total,
+            "req {}: stats and decision summary disagree on evictions",
+            r.id
+        );
+    }
+}
+
+/// Acceptance: chunked-prefill serving — one span per prefill chunk
+/// (matching `stats.prefill_chunks`), still tiling within 5% even with
+/// chunks and decodes interleaving across the two active requests.
+#[test]
+fn lifecycle_spans_tile_wall_time_chunked() {
+    let (replies, tracer) = run_traced(4, 16, 5);
+    assert_eq!(tracer.dropped(), 0);
+    for r in &replies {
+        assert!(r.error.is_none(), "req {}: {:?}", r.id, r.error);
+        assert_spans_tile(&tracer, r);
+        let spans = tracer.spans_for(r.id);
+        let chunks = spans.iter().filter(|s| s.phase == Phase::PrefillChunk).count();
+        assert!(chunks >= 2, "req {}: prompt must need several chunks (got {chunks})", r.id);
+        assert_eq!(chunks, r.stats.prefill_chunks, "req {}", r.id);
+        assert!(r.stats.ttft_ms > 0.0);
+    }
+}
+
+/// `GET /trace/<id>` over real HTTP, plus the `stats`/`eviction`
+/// objects on the `/generate` response itself.
+#[test]
+fn trace_endpoint_http_roundtrip() {
+    let queue = Arc::new(RequestQueue::new(16));
+    let metrics = Arc::new(Metrics::new());
+    let tracer = Arc::new(Tracer::new());
+    let q2 = Arc::clone(&queue);
+    let m2 = Arc::clone(&metrics);
+    let t2 = Arc::clone(&tracer);
+    let engine_thread = std::thread::Builder::new()
+        .name("engine-test".into())
+        .spawn(move || {
+            let cfg = LoopConfig { max_active: 2, ..LoopConfig::default() };
+            EngineLoop::new(engine(), cfg, q2, m2).with_tracer(t2).run()
+        })
+        .expect("spawn engine");
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().expect("addr").to_string();
+    let q3 = Arc::clone(&queue);
+    let m3 = Arc::clone(&metrics);
+    let t3 = Arc::clone(&tracer);
+    std::thread::Builder::new()
+        .name("http-test".into())
+        .spawn(move || {
+            let cfg = ServerConfig { workers: 2, ..ServerConfig::default() };
+            let _ = serve_listener(listener, cfg, q3, m3, Some(t3));
+        })
+        .expect("spawn server");
+
+    let body = format!(
+        "{{\"prompt\": \"{PROMPT}\", \"method\": \"snapkv\", \"budget\": 16, \"max_new\": 4}}"
+    );
+    let (status, resp) =
+        lookaheadkv::server::http::http_post(&addr, "/generate", &body).expect("post");
+    assert_eq!(status, 200, "{resp}");
+    let r = json::parse(&resp).expect("generate json");
+    let id = r.req("id").as_usize().expect("id");
+    let total_ms = r.req("total_ms").as_f64().expect("total_ms");
+
+    // Per-request stats are part of the response contract.
+    let stats = r.req("stats");
+    assert!(stats.req("queue_ms").as_f64().is_some());
+    assert!(stats.req("ttft_ms").as_f64().unwrap_or(-1.0) >= 0.0);
+    assert_eq!(stats.req("prefill_chunks").as_usize(), Some(1));
+    assert!(stats.req("decode_iters").as_usize().is_some());
+    assert!(!stats.req("evicted_per_layer").usize_arr().is_empty());
+    assert!(stats.req("evicted_total").as_usize().is_some());
+    assert!(stats.req("peak_arena_blocks").as_usize().is_some());
+    assert_eq!(stats.req("spills").as_usize(), Some(0));
+    assert_eq!(stats.req("restores").as_usize(), Some(0));
+    let ev = r.req("eviction");
+    assert_eq!(ev.req("policy").as_str(), Some("SnapKV"));
+    assert_eq!(ev.req("budget").as_usize(), Some(16));
+    assert!(ev.req("kept_total").as_usize().unwrap_or(0) > 0);
+    assert_eq!(ev.req("score_quantiles").as_arr().map(<[json::Json]>::len), Some(5));
+
+    // The reply was sent after the Finish span, so the trace is
+    // complete by the time the client can ask for it.
+    let (status, resp) =
+        lookaheadkv::server::http::http_get(&addr, &format!("/trace/{id}")).expect("get trace");
+    assert_eq!(status, 200, "{resp}");
+    let t = json::parse(&resp).expect("trace json");
+    assert_eq!(t.req("request_id").as_usize(), Some(id));
+    let spans = t.req("spans").as_arr().expect("spans");
+    assert!(spans.len() >= 4, "expected queue/admission/eviction/decode/finish spans");
+    let phases: Vec<&str> = spans.iter().filter_map(|s| s.req("phase").as_str()).collect();
+    for expect in ["queue", "admission", "eviction", "decode", "finish"] {
+        assert!(phases.contains(&expect), "phase {expect} missing: {phases:?}");
+    }
+    let sum_us: f64 =
+        spans.iter().map(|s| s.req("dur_us").as_f64().expect("dur_us")).sum();
+    assert_eq!(t.req("total_us").as_f64(), Some(sum_us));
+    // The non-queue spans tile the service time (5% acceptance bound).
+    let non_queue_ms: f64 = spans
+        .iter()
+        .filter(|s| s.req("phase").as_str() != Some("queue"))
+        .map(|s| s.req("dur_us").as_f64().unwrap_or(0.0) / 1e3)
+        .sum();
+    assert!(
+        (non_queue_ms - total_ms).abs() <= total_ms * 0.05 + 0.5,
+        "trace spans {non_queue_ms:.3} ms vs reported total {total_ms:.3} ms"
+    );
+
+    // Unknown id: 404 with an explanatory error; junk id: 400.
+    let (status, _) =
+        lookaheadkv::server::http::http_get(&addr, "/trace/999999").expect("get unknown");
+    assert_eq!(status, 404);
+    let (status, _) =
+        lookaheadkv::server::http::http_get(&addr, "/trace/abc").expect("get junk");
+    assert_eq!(status, 400);
+
+    queue.close();
+    engine_thread.join().expect("engine thread");
+}
