@@ -244,6 +244,32 @@ def bench_decode():
     paged_mb = 4 * 5 * (4 * 2 * 16) * 64 * 2 * 4 / 1e6
     rows.append(row("decode_mem/dense_kv_mb/b4", dense_mb))
     rows.append(row("decode_mem/paged_kv_mb/b4", paged_mb))
+
+    # ---- KV dtype section (4k context, --kv-dtype satellite): one dense
+    # f32 prefill feeds per-dtype paged arenas (1024 kept rows -> cap
+    # 1152). Decode attention streams KV columns, so a fraction of its
+    # cost scales with the storage bytes-per-element; the rest (f32
+    # scratch arithmetic, fused dequant multiply-adds) is dtype-flat.
+    MEMF = 0.3  # memory-bound fraction of the attention column stream
+    kept = 1024
+
+    def long_dec(bpe):
+        scale = 1 - MEMF + MEMF * bpe / 4
+        return sum(
+            ms(TINY_MM + 4 * 4 * 4 * 16 * (kept + i) * scale) + OVH for i in range(steps)
+        )
+
+    rows.append(row("decode_dtype/dense_f32/b4", 4 * long_dec(4)))
+    # per-iteration gather-compaction of 1024 rows/seq (quantize at write)
+    compact = ms(kept * 4 * 2 * 16 * 2) + 0.1
+    for dt, bpe in (("f32", 4), ("f16", 2), ("u8", 1)):
+        rows.append(row(f"decode_dtype/paged_{dt}/b4", 4 * (long_dec(bpe) * 1.05 + compact) + 0.3))
+    # resident KV in MB (exact): 17 64-slot blocks per seq (16 kept + 1
+    # grow) x 4 seqs; u8 adds one 8-byte Seg per (layer, KV head) per side
+    blocks = 4 * (kept // 64 + 1)
+    side = 4 * 2 * 64 * 16  # elements per block per side
+    for dt, bb in (("f32", 2 * side * 4), ("f16", 2 * side * 2), ("u8", 2 * (side + 4 * 2 * 8))):
+        rows.append(row(f"decode_mem/paged_{dt}_kv_mb_4k/b4", blocks * bb / 1e6))
     return rows
 
 

@@ -12,7 +12,7 @@ mod common;
 
 use lookaheadkv::engine::GenOptions;
 use lookaheadkv::eviction::Method;
-use lookaheadkv::kvcache::{BlockAllocator, KvArena, KvDims, PagedSeqCache, SeqCache};
+use lookaheadkv::kvcache::{BlockAllocator, KvArena, KvDims, KvDtype, PagedSeqCache, SeqCache};
 use lookaheadkv::model::tokenizer::encode;
 use lookaheadkv::util::bench::{record_named, run_bench, BenchConfig, BenchResult};
 use lookaheadkv::util::stats::summarize;
@@ -81,7 +81,18 @@ fn main() {
         });
         results.push(r);
         let r = run_bench(&format!("decode_dispatch/paged/b{batch}"), &cfg, || {
-            run_paged(&engine, &model, dims, &pre.k, &pre.v, &sel.per_layer, prompt.len(), cap, batch);
+            run_paged(
+                &engine,
+                &model,
+                dims,
+                KvDtype::F32,
+                &pre.k,
+                &pre.v,
+                &sel.per_layer,
+                prompt.len(),
+                cap,
+                batch,
+            );
         });
         results.push(r);
         report_speedup(&results, batch);
@@ -112,6 +123,7 @@ fn main() {
             &engine,
             &model,
             dims,
+            KvDtype::F32,
             &pre.k,
             &pre.v,
             &sel_big.per_layer,
@@ -171,25 +183,122 @@ fn main() {
     results.push(mem_row(&format!("decode_mem/dense_kv_mb/b{batch}"), dense_mb));
     results.push(mem_row(&format!("decode_mem/paged_kv_mb/b{batch}"), paged_mb));
 
+    // ---- KV dtype section: paged decode per storage precision at the
+    // longest context the synthetic manifest serves (4k prefill bucket,
+    // 1024 kept rows -> the 1152 cap bucket). One dense f32 prefill is
+    // the shared oracle; each dtype gather-compacts it into its own
+    // arena (write-time quantization) and decodes through the fused
+    // dequant row kernels. Acceptance, asserted right here: u8 resident
+    // KV <= 0.27x the f32 arena, and paged u8 decode no slower than
+    // paged f32 at this context (5% noise slack).
+    let long_suite = workload::ruler_suite(17, 1, 4096);
+    let mut long_prompt = encode(&long_suite.samples[0].prompt(), true, false);
+    long_prompt.truncate(4000); // stay inside the 4096 prefill bucket
+    let pre_l = engine.prefill_for_method(&long_prompt, &Method::SnapKV).expect("4k prefill");
+    evcfg.budget = 1024;
+    let sel_l = Method::SnapKV.select(&evcfg, n_layers, &pre_l.bundle);
+    let cap_l = engine
+        .rt
+        .manifest()
+        .decode_cap(&model, sel_l.max_kept() + 2 * DISPATCH_STEPS)
+        .expect("decode cap");
+    let base_l =
+        SeqCache::from_selection(&pre_l.k, &pre_l.v, &sel_l.per_layer, long_prompt.len(), cap_l);
+    let r = run_bench(&format!("decode_dtype/dense_f32/b{batch}"), &cfg, || {
+        let mut caches: Vec<SeqCache> = (0..batch).map(|_| base_l.clone()).collect();
+        for step in 0..DISPATCH_STEPS {
+            let tokens = vec![65 + step as i32; batch];
+            let mut refs: Vec<&mut SeqCache> = caches.iter_mut().collect();
+            let _ = engine.decode_step_batch(&model, &mut refs, &tokens).expect("batch step");
+        }
+    });
+    results.push(r);
+    let mut dtype_ms = Vec::new();
+    let mut dtype_mb = Vec::new();
+    for dtype in [KvDtype::F32, KvDtype::F16, KvDtype::U8] {
+        let r = run_bench(&format!("decode_dtype/paged_{dtype}/b{batch}"), &cfg, || {
+            run_paged(
+                &engine,
+                &model,
+                dims,
+                dtype,
+                &pre_l.k,
+                &pre_l.v,
+                &sel_l.per_layer,
+                long_prompt.len(),
+                cap_l,
+                batch,
+            );
+        });
+        dtype_ms.push(r.ms.mean);
+        results.push(r);
+        // Resident bytes after one full (untimed) run of the same loop.
+        let (bytes, slots) = run_paged(
+            &engine,
+            &model,
+            dims,
+            dtype,
+            &pre_l.k,
+            &pre_l.v,
+            &sel_l.per_layer,
+            long_prompt.len(),
+            cap_l,
+            batch,
+        );
+        let mb = bytes as f64 / 1e6;
+        println!(
+            "resident KV at 4k ctx, dtype {dtype}: {mb:.3} MB over {slots} slots \
+             ({:.1} bytes/token)",
+            bytes as f64 / slots as f64
+        );
+        dtype_mb.push(mb);
+        results.push(mem_row(&format!("decode_mem/paged_{dtype}_kv_mb_4k/b{batch}"), mb));
+    }
+    let (f32_ms, u8_ms) = (dtype_ms[0], dtype_ms[2]);
+    let (f32_mb, f16_mb, u8_mb) = (dtype_mb[0], dtype_mb[1], dtype_mb[2]);
+    assert!(
+        u8_mb <= 0.27 * f32_mb,
+        "u8 resident KV ({u8_mb:.3} MB) must be <= 0.27x the f32 arena ({f32_mb:.3} MB)"
+    );
+    assert!(
+        f16_mb <= 0.52 * f32_mb,
+        "f16 resident KV ({f16_mb:.3} MB) must be ~half the f32 arena ({f32_mb:.3} MB)"
+    );
+    assert!(
+        u8_ms <= f32_ms * 1.05,
+        "paged u8 decode ({u8_ms:.3} ms) must not be slower than paged f32 ({f32_ms:.3} ms) \
+         at 4k context"
+    );
+    println!(
+        "dtype at 4k ctx: paged f32 {f32_ms:.3} ms vs u8 {:.3} ms ({:.2}x), \
+         resident {f32_mb:.3} MB vs {u8_mb:.3} MB ({:.2}x)",
+        u8_ms,
+        f32_ms / u8_ms,
+        f32_mb / u8_mb
+    );
+
     record_named("decode", &results);
 }
 
 /// One paged dispatch iteration: gather-compact `batch` caches into a
-/// fresh arena and run the 16-step batched paged decode (mirrors what
-/// the engine loop does per admitted request).
+/// fresh arena of the given storage dtype (write-time quantization) and
+/// run the 16-step batched paged decode (mirrors what the engine loop
+/// does per admitted request). Returns the resident arena bytes and
+/// allocated slots after the run, for the memory rows.
 #[allow(clippy::too_many_arguments)]
 fn run_paged(
     engine: &lookaheadkv::engine::Engine,
     model: &str,
     dims: KvDims,
+    dtype: KvDtype,
     k: &TensorF,
     v: &TensorF,
     kept: &[Vec<usize>],
     prompt_len: usize,
     cap: usize,
     batch: usize,
-) {
-    let mut arena = KvArena::new(128, ARENA_BLOCK);
+) -> (usize, usize) {
+    let mut arena = KvArena::with_dtype(128, ARENA_BLOCK, dtype);
     let mut alloc = BlockAllocator::new(128 * ARENA_BLOCK, ARENA_BLOCK);
     let mut caches: Vec<PagedSeqCache> = (0..batch)
         .map(|i| {
@@ -219,6 +328,8 @@ fn run_paged(
             .decode_step_batch_paged(model, &mut arena, &mut refs, &tokens)
             .expect("paged step");
     }
+    let slots: usize = caches.iter().map(PagedSeqCache::allocated_slots).sum();
+    (arena.bytes_in_use(), slots)
 }
 
 /// A deterministic "megabytes" row: same JSON schema as the latency

@@ -122,13 +122,13 @@ impl Recorder {
                 let bs = ar.block_size();
                 for li in 0..l {
                     for g in 0..hkv {
+                        let seg = li * hkv + g;
                         for r in 0..b {
                             let slot = start + r;
-                            let src_k = ar.k_row(&self.dims, table[slot / bs], li, g, slot % bs);
-                            let src_v = ar.v_row(&self.dims, table[slot / bs], li, g, slot % bs);
+                            let blk = ar.block_raw(table[slot / bs]).expect("pass block unbound");
                             let dst = ((li * hkv + g) * b + r) * dh;
-                            k.data[dst..dst + dh].copy_from_slice(src_k);
-                            v.data[dst..dst + dh].copy_from_slice(src_v);
+                            blk.k.decode_row(seg, slot % bs, bs, dh, &mut k.data[dst..dst + dh]);
+                            blk.v.decode_row(seg, slot % bs, bs, dh, &mut v.data[dst..dst + dh]);
                         }
                     }
                 }
@@ -331,7 +331,7 @@ impl Engine {
             };
         };
         let dims = self.kv_dims(pass_model)?;
-        let blocks = ctx.alloc_blocks(len, dims.slot_floats())?;
+        let blocks = ctx.alloc_blocks(len, &dims)?;
         let bs = ctx.arena.block_size();
         let res = (|| -> Result<ChunkState> {
             let mut st = ChunkState::new_paged(

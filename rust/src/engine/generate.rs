@@ -122,7 +122,7 @@ impl GtAccumulator {
 /// where queue/spill phases are zero) and the serving loop
 /// (`scheduler::batcher`), and surfaced verbatim as the `stats` object
 /// of the `POST /generate` response.
-#[derive(Debug, Clone, Default, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct RequestStats {
     /// Submit → popped by the engine loop.
     pub queue_ms: f64,
@@ -140,6 +140,30 @@ pub struct RequestStats {
     pub spills: usize,
     /// Times its spilled blocks were restored.
     pub restores: usize,
+    /// Storage dtype of this request's KV blocks (`f32`/`f16`/`u8`;
+    /// dense caches are always `f32`).
+    pub kv_dtype: String,
+    /// Peak resident KV bytes this request held, in the stored
+    /// representation (quantized payload + per-block scale/zero-point
+    /// for `u8`, not the logical f32 size).
+    pub resident_kv_bytes: usize,
+}
+
+impl Default for RequestStats {
+    fn default() -> RequestStats {
+        RequestStats {
+            queue_ms: 0.0,
+            ttft_ms: 0.0,
+            prefill_chunks: 0,
+            decode_iters: 0,
+            evicted_per_layer: Vec::new(),
+            peak_arena_blocks: 0,
+            spills: 0,
+            restores: 0,
+            kv_dtype: "f32".to_string(),
+            resident_kv_bytes: 0,
+        }
+    }
 }
 
 impl RequestStats {
@@ -159,6 +183,8 @@ impl RequestStats {
             ("peak_arena_blocks", self.peak_arena_blocks.into()),
             ("spills", self.spills.into()),
             ("restores", self.restores.into()),
+            ("kv_dtype", self.kv_dtype.clone().into()),
+            ("resident_kv_bytes", self.resident_kv_bytes.into()),
         ])
     }
 }
@@ -197,7 +223,10 @@ impl Engine {
         let t_start = Instant::now();
         let model = self.cfg.model.clone();
         let n_layers = self.n_layers(&model);
-        let mheads = self.rt.manifest().model(&model)?.n_heads;
+        let mm = self.rt.manifest().model(&model)?;
+        let mheads = mm.n_heads;
+        let slot_bytes =
+            crate::kvcache::manager::bytes_per_slot(mm.n_layers, mm.n_kv_heads, mm.head_dim);
 
         // 1-2. prefill + select
         let mut evcfg = self.cfg.eviction;
@@ -263,6 +292,9 @@ impl Engine {
             peak_arena_blocks: 0,
             spills: 0,
             restores: 0,
+            // The offline path decodes through a dense f32 SeqCache.
+            kv_dtype: "f32".to_string(),
+            resident_kv_bytes: cap * slot_bytes,
         };
         Ok(GenResult {
             text: decode_until_eos(&tokens),

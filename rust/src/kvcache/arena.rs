@@ -3,7 +3,7 @@
 //!
 //! The [`super::block::BlockAllocator`] decides *who* owns which
 //! [`BlockId`]; the [`KvArena`] owns the *bytes* — one pair of K/V
-//! buffers per bound block, each holding `block_size` token slots laid
+//! planes per bound block, each holding `block_size` token slots laid
 //! out `[L, Hkv, block_size, dh]`. Decode caches
 //! ([`super::paged::PagedSeqCache`]), in-flight chunked-prefill state
 //! ([`crate::runtime::ChunkState`] with a block table) and prefix-tree
@@ -11,10 +11,23 @@
 //! pool of blocks, so admission control charges actual bound bytes
 //! rather than dense-bucket estimates.
 //!
+//! Blocks store KV in one of three formats ([`KvDtype`]): `f32` (the
+//! frozen bit-exact oracle), `f16`, or `u8` with one asymmetric affine
+//! scale/zero-point per (layer, KV head, block) segment ([`Seg`]).
+//! Quantization happens at write time ([`KvPlane::encode_row`] /
+//! [`KvPlane::encode_block`]); kernels read rows either decoded into a
+//! caller-held `O(dh)` scratch row ([`KvAccess::k_row`]) or through the
+//! fused accessors ([`KvAccess::k_dot`] / [`KvAccess::v_axpy`]) that
+//! fold dequantization into the attention row loop — no materialized
+//! f32 copy of the cache ever exists. Every path (dense, paged,
+//! prefix-resumed) shares this single decode implementation.
+//!
 //! Buffers are materialized on [`KvArena::bind`] and dropped on
-//! [`KvArena::release`], so `bytes_in_use` tracks *resident* KV — a
-//! paged cache of 80 live rows costs two 64-slot blocks, not a 640-slot
-//! dense bucket. The arena is dimension-agnostic: callers pass a
+//! [`KvArena::release`], so `bytes_in_use` tracks *resident* KV in
+//! dtype-true bytes (a u8 block costs ~¼ of its f32 twin), while
+//! `logical_bytes_in_use` reports what the same blocks would cost at
+//! f32 — the ratio of the two is the compression factor exported on
+//! `GET /metrics`. The arena is dimension-agnostic: callers pass a
 //! [`KvDims`] per access, which lets one pool serve models with
 //! different layer/head geometry (e.g. the SpecKV draft model).
 //!
@@ -23,12 +36,456 @@
 //! the owned buffers to worker threads, and puts them back afterwards
 //! ([`KvArena::put`]) — disjointness across sequences is enforced by
 //! construction (a block can only be taken once), with no unsafe code.
+//! Spill/restore ([`KvArena::spill`]) moves the *stored* representation
+//! verbatim, so a spill → restore round trip is bit-exact per dtype.
 
 use anyhow::{Context, Result};
 
-use crate::util::tensor::TensorF;
+use crate::util::tensor::{dot4, TensorF};
 
 use super::block::{BlockAllocator, BlockId};
+
+/// Storage format of a KV block.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KvDtype {
+    #[default]
+    F32,
+    F16,
+    U8,
+}
+
+impl KvDtype {
+    pub fn parse(s: &str) -> Option<KvDtype> {
+        match s {
+            "f32" | "fp32" | "float32" => Some(KvDtype::F32),
+            "f16" | "fp16" | "float16" | "half" => Some(KvDtype::F16),
+            "u8" | "uint8" | "int8" | "q8" => Some(KvDtype::U8),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            KvDtype::F32 => "f32",
+            KvDtype::F16 => "f16",
+            KvDtype::U8 => "u8",
+        }
+    }
+
+    /// Payload bytes per stored element.
+    pub fn bytes_per_elem(&self) -> usize {
+        match self {
+            KvDtype::F32 => 4,
+            KvDtype::F16 => 2,
+            KvDtype::U8 => 1,
+        }
+    }
+
+    /// Exact resident bytes of one bound block (K + V planes, including
+    /// u8 quant-parameter segments) — the unit the scheduler's admission
+    /// accounting charges.
+    pub fn block_bytes(&self, dims: &KvDims, block_size: usize) -> usize {
+        let elems = dims.slot_floats() * block_size;
+        let seg_bytes = match self {
+            KvDtype::U8 => dims.n_layers * dims.n_kv_heads * std::mem::size_of::<Seg>(),
+            _ => 0,
+        };
+        2 * (elems * self.bytes_per_elem() + seg_bytes)
+    }
+}
+
+impl std::fmt::Display for KvDtype {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// f32 → IEEE 754 binary16 bits, round-to-nearest-even (no `half` crate
+/// offline, so hand-rolled; property-tested below).
+pub fn f16_from_f32(x: f32) -> u16 {
+    let b = x.to_bits();
+    let sign = ((b >> 16) & 0x8000) as u16;
+    let e = ((b >> 23) & 0xff) as i32;
+    let m = b & 0x007f_ffff;
+    if e == 255 {
+        // Inf / NaN (keep NaN payload non-zero)
+        return sign | 0x7c00 | if m != 0 { 0x0200 } else { 0 };
+    }
+    let ne = e - 112; // rebias 127 -> 15
+    if ne >= 31 {
+        return sign | 0x7c00; // overflow -> inf
+    }
+    if ne <= 0 {
+        if ne < -10 {
+            return sign; // underflow -> signed zero
+        }
+        // subnormal half: shift the implicit-1 mantissa into place
+        let full = m | 0x0080_0000;
+        let shift = (14 - ne) as u32;
+        let half = full >> shift;
+        let rem = full & ((1u32 << shift) - 1);
+        let halfway = 1u32 << (shift - 1);
+        let rounded =
+            if rem > halfway || (rem == halfway && (half & 1) != 0) { half + 1 } else { half };
+        return sign | rounded as u16;
+    }
+    let half = ((ne as u32) << 10) | (m >> 13);
+    let rem = m & 0x1fff;
+    // mantissa carry propagates into the exponent (and saturates to inf)
+    let rounded = if rem > 0x1000 || (rem == 0x1000 && (half & 1) != 0) { half + 1 } else { half };
+    sign | rounded as u16
+}
+
+/// IEEE 754 binary16 bits → f32 (exact).
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = ((h as u32) & 0x8000) << 16;
+    let e = ((h >> 10) & 0x1f) as u32;
+    let m = (h & 0x03ff) as u32;
+    let bits = if e == 0 {
+        if m == 0 {
+            sign
+        } else {
+            // subnormal: renormalize
+            let mut e2 = 113u32; // biased-127 exponent of 2^-14
+            let mut m2 = m;
+            while m2 & 0x0400 == 0 {
+                m2 <<= 1;
+                e2 -= 1;
+            }
+            sign | (e2 << 23) | ((m2 & 0x03ff) << 13)
+        }
+    } else if e == 31 {
+        sign | 0x7f80_0000 | (m << 13)
+    } else {
+        sign | ((e + 112) << 23) | (m << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Per-(layer, KV-head, block) asymmetric affine quantization range for
+/// u8 planes: `x ≈ lo + (hi - lo) / 255 * code`. A fresh segment is
+/// `EMPTY` (`lo > hi`), so the first written row defines the range.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Seg {
+    pub lo: f32,
+    pub hi: f32,
+}
+
+impl Seg {
+    pub const EMPTY: Seg = Seg { lo: f32::INFINITY, hi: f32::NEG_INFINITY };
+
+    #[inline(always)]
+    pub fn scale(&self) -> f32 {
+        if self.hi > self.lo {
+            (self.hi - self.lo) / 255.0
+        } else {
+            0.0
+        }
+    }
+}
+
+#[inline(always)]
+fn quantize_u8(x: f32, s: &Seg) -> u8 {
+    let sc = s.scale();
+    if sc == 0.0 {
+        0
+    } else {
+        ((x - s.lo) / sc).round().clamp(0.0, 255.0) as u8
+    }
+}
+
+#[inline(always)]
+fn dequantize_u8(c: u8, s: &Seg) -> f32 {
+    s.lo + s.scale() * c as f32
+}
+
+/// One side (K or V) of a bound block in its stored representation. All
+/// variants use the same `[L, Hkv, block_size, dh]` element order; u8
+/// additionally carries one [`Seg`] per `(layer, KV head)` — segment
+/// index `li * Hkv + g`, segment length `block_size * dh` codes.
+#[derive(Debug, Clone, PartialEq)]
+pub enum KvPlane {
+    F32(Vec<f32>),
+    F16(Vec<u16>),
+    U8 { codes: Vec<u8>, segs: Vec<Seg> },
+}
+
+impl KvPlane {
+    pub fn zeroed(dtype: KvDtype, elems: usize, n_segs: usize) -> KvPlane {
+        match dtype {
+            KvDtype::F32 => KvPlane::F32(vec![0.0; elems]),
+            KvDtype::F16 => KvPlane::F16(vec![0; elems]),
+            KvDtype::U8 => {
+                assert!(n_segs > 0 && elems % n_segs == 0, "u8 plane needs uniform segments");
+                KvPlane::U8 { codes: vec![0; elems], segs: vec![Seg::EMPTY; n_segs] }
+            }
+        }
+    }
+
+    pub fn dtype(&self) -> KvDtype {
+        match self {
+            KvPlane::F32(_) => KvDtype::F32,
+            KvPlane::F16(_) => KvDtype::F16,
+            KvPlane::U8 { .. } => KvDtype::U8,
+        }
+    }
+
+    /// Stored element count (token slots × dh across layers/heads).
+    pub fn len(&self) -> usize {
+        match self {
+            KvPlane::F32(d) => d.len(),
+            KvPlane::F16(d) => d.len(),
+            KvPlane::U8 { codes, .. } => codes.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Resident bytes of the stored representation (payload + u8 quant
+    /// parameters).
+    pub fn bytes(&self) -> usize {
+        match self {
+            KvPlane::F32(d) => d.len() * 4,
+            KvPlane::F16(d) => d.len() * 2,
+            KvPlane::U8 { codes, segs } => codes.len() + segs.len() * std::mem::size_of::<Seg>(),
+        }
+    }
+
+    /// Raw f32 payload, when this plane is an f32 plane (oracle paths
+    /// and tests that assert bit-identity).
+    pub fn as_f32(&self) -> Option<&[f32]> {
+        match self {
+            KvPlane::F32(d) => Some(d),
+            _ => None,
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Option<&mut [f32]> {
+        match self {
+            KvPlane::F32(d) => Some(d),
+            _ => None,
+        }
+    }
+
+    #[inline(always)]
+    fn row_off(seg: usize, within: usize, bs: usize, dh: usize) -> usize {
+        (seg * bs + within) * dh
+    }
+
+    /// Decode one `dh`-element row into `out` — the single dequant
+    /// implementation every read path funnels through.
+    #[inline]
+    pub fn decode_row(&self, seg: usize, within: usize, bs: usize, dh: usize, out: &mut [f32]) {
+        let o = Self::row_off(seg, within, bs, dh);
+        match self {
+            KvPlane::F32(d) => out[..dh].copy_from_slice(&d[o..o + dh]),
+            KvPlane::F16(d) => {
+                for (y, &h) in out[..dh].iter_mut().zip(&d[o..o + dh]) {
+                    *y = f16_to_f32(h);
+                }
+            }
+            KvPlane::U8 { codes, segs } => {
+                let s = &segs[seg];
+                let (lo, sc) = (s.lo, s.scale());
+                for (y, &c) in out[..dh].iter_mut().zip(&codes[o..o + dh]) {
+                    *y = lo + sc * c as f32;
+                }
+            }
+        }
+    }
+
+    /// Store one row, quantizing at write time. A u8 row that widens its
+    /// segment's range deterministically requantizes the whole segment
+    /// (decode with the old params, re-encode with the new) before the
+    /// row is written.
+    pub fn encode_row(&mut self, seg: usize, within: usize, bs: usize, dh: usize, src: &[f32]) {
+        let o = Self::row_off(seg, within, bs, dh);
+        match self {
+            KvPlane::F32(d) => d[o..o + dh].copy_from_slice(&src[..dh]),
+            KvPlane::F16(d) => {
+                for (y, &x) in d[o..o + dh].iter_mut().zip(src) {
+                    *y = f16_from_f32(x);
+                }
+            }
+            KvPlane::U8 { codes, segs } => {
+                let mut lo = segs[seg].lo;
+                let mut hi = segs[seg].hi;
+                for &x in &src[..dh] {
+                    lo = lo.min(x);
+                    hi = hi.max(x);
+                }
+                if lo < segs[seg].lo || hi > segs[seg].hi {
+                    let old = segs[seg];
+                    let new = Seg { lo, hi };
+                    if old.hi >= old.lo {
+                        let so = seg * bs * dh;
+                        for c in &mut codes[so..so + bs * dh] {
+                            *c = quantize_u8(dequantize_u8(*c, &old), &new);
+                        }
+                    }
+                    segs[seg] = new;
+                }
+                let s = segs[seg];
+                for (c, &x) in codes[o..o + dh].iter_mut().zip(src) {
+                    *c = quantize_u8(x, &s);
+                }
+            }
+        }
+    }
+
+    /// Overwrite the whole plane from dense f32 data, re-deriving each
+    /// u8 segment's range in a single shot (prefix-tree insertion).
+    pub fn encode_block(&mut self, src: &[f32]) {
+        assert_eq!(src.len(), self.len(), "encode_block: length mismatch");
+        match self {
+            KvPlane::F32(d) => d.copy_from_slice(src),
+            KvPlane::F16(d) => {
+                for (y, &x) in d.iter_mut().zip(src) {
+                    *y = f16_from_f32(x);
+                }
+            }
+            KvPlane::U8 { codes, segs } => {
+                let seg_len = codes.len() / segs.len();
+                for (si, sg) in segs.iter_mut().enumerate() {
+                    let span = si * seg_len..(si + 1) * seg_len;
+                    let mut lo = f32::INFINITY;
+                    let mut hi = f32::NEG_INFINITY;
+                    for &x in &src[span.clone()] {
+                        lo = lo.min(x);
+                        hi = hi.max(x);
+                    }
+                    *sg = Seg { lo, hi };
+                    for (c, &x) in codes[span.clone()].iter_mut().zip(&src[span]) {
+                        *c = quantize_u8(x, sg);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Decode the whole plane to dense f32 (prefix-seed assembly, spill
+    /// round-trip tests).
+    pub fn decode_all(&self) -> Vec<f32> {
+        match self {
+            KvPlane::F32(d) => d.clone(),
+            KvPlane::F16(d) => d.iter().map(|&h| f16_to_f32(h)).collect(),
+            KvPlane::U8 { codes, segs } => {
+                let seg_len = codes.len() / segs.len();
+                let mut out = Vec::with_capacity(codes.len());
+                for (si, s) in segs.iter().enumerate() {
+                    let (lo, sc) = (s.lo, s.scale());
+                    // an untouched (EMPTY) segment decodes as zeros
+                    if s.hi < s.lo {
+                        out.resize(out.len() + seg_len, 0.0);
+                        continue;
+                    }
+                    out.extend(codes[si * seg_len..(si + 1) * seg_len].iter().map(|&c| lo + sc * c as f32));
+                }
+                out
+            }
+        }
+    }
+
+    /// `dot(q, row)` with dequantization fused into the loop. The f32
+    /// arm is exactly [`dot4`], so the oracle path's numerics are
+    /// untouched; the u8 arm uses the affine decomposition
+    /// `scale·Σ(qᵢ·cᵢ) + lo·Σqᵢ` — no per-element decode.
+    #[inline]
+    pub fn row_dot(&self, seg: usize, within: usize, bs: usize, dh: usize, q: &[f32]) -> f32 {
+        let o = Self::row_off(seg, within, bs, dh);
+        match self {
+            KvPlane::F32(d) => dot4(q, &d[o..o + dh]),
+            KvPlane::F16(d) => {
+                let mut s = 0.0f32;
+                for (qi, &h) in q[..dh].iter().zip(&d[o..o + dh]) {
+                    s += qi * f16_to_f32(h);
+                }
+                s
+            }
+            KvPlane::U8 { codes, segs } => {
+                let sg = &segs[seg];
+                let mut cd = 0.0f32; // Σ qᵢ·cᵢ
+                let mut qs = 0.0f32; // Σ qᵢ
+                for (qi, &c) in q[..dh].iter().zip(&codes[o..o + dh]) {
+                    cd += qi * c as f32;
+                    qs += qi;
+                }
+                sg.scale() * cd + sg.lo * qs
+            }
+        }
+    }
+
+    /// `out += w · row` with dequantization fused into the loop.
+    #[inline]
+    pub fn row_axpy(
+        &self,
+        seg: usize,
+        within: usize,
+        bs: usize,
+        dh: usize,
+        w: f32,
+        out: &mut [f32],
+    ) {
+        let o = Self::row_off(seg, within, bs, dh);
+        match self {
+            KvPlane::F32(d) => {
+                for (y, &x) in out[..dh].iter_mut().zip(&d[o..o + dh]) {
+                    *y += w * x;
+                }
+            }
+            KvPlane::F16(d) => {
+                for (y, &h) in out[..dh].iter_mut().zip(&d[o..o + dh]) {
+                    *y += w * f16_to_f32(h);
+                }
+            }
+            KvPlane::U8 { codes, segs } => {
+                let sg = &segs[seg];
+                let (ws, wl) = (w * sg.scale(), w * sg.lo);
+                for (y, &c) in out[..dh].iter_mut().zip(&codes[o..o + dh]) {
+                    *y += ws * c as f32 + wl;
+                }
+            }
+        }
+    }
+
+    /// Copy one row's *stored representation* verbatim (gather
+    /// compaction that does not cross block boundaries — no decode, no
+    /// requantization error). The destination u8 segment adopts the
+    /// source segment's quant params on first copy; mixing params is a
+    /// caller bug.
+    pub fn copy_row_from(
+        &mut self,
+        src: &KvPlane,
+        src_seg: usize,
+        src_within: usize,
+        dst_seg: usize,
+        dst_within: usize,
+        bs: usize,
+        dh: usize,
+    ) {
+        let so = Self::row_off(src_seg, src_within, bs, dh);
+        let po = Self::row_off(dst_seg, dst_within, bs, dh);
+        match (self, src) {
+            (KvPlane::F32(d), KvPlane::F32(s)) => d[po..po + dh].copy_from_slice(&s[so..so + dh]),
+            (KvPlane::F16(d), KvPlane::F16(s)) => d[po..po + dh].copy_from_slice(&s[so..so + dh]),
+            (
+                KvPlane::U8 { codes, segs },
+                KvPlane::U8 { codes: scodes, segs: ssegs },
+            ) => {
+                let sp = ssegs[src_seg];
+                let dsg = &mut segs[dst_seg];
+                if dsg.hi < dsg.lo {
+                    *dsg = sp;
+                }
+                assert_eq!(*dsg, sp, "raw row copy requires matching quant params");
+                codes[po..po + dh].copy_from_slice(&scodes[so..so + dh]);
+            }
+            _ => panic!("copy_row_from across KV dtypes"),
+        }
+    }
+}
 
 /// Per-model KV geometry (everything but the sequence axis).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -53,30 +510,52 @@ impl KvDims {
     }
 }
 
-/// One bound block's buffers: `block_size` slots of K and V, laid out
-/// `[L, Hkv, block_size, dh]` per side.
+/// One bound block's stored buffers: `block_size` slots of K and V in
+/// the arena's [`KvDtype`], laid out `[L, Hkv, block_size, dh]` per
+/// side.
 #[derive(Debug, Clone)]
 pub struct KvBlock {
-    pub k: Vec<f32>,
-    pub v: Vec<f32>,
+    pub k: KvPlane,
+    pub v: KvPlane,
+}
+
+impl KvBlock {
+    /// Resident bytes of the stored representation (both sides).
+    pub fn bytes(&self) -> usize {
+        self.k.bytes() + self.v.bytes()
+    }
+
+    /// What this block would cost at f32 (compression-ratio accounting).
+    pub fn logical_bytes(&self) -> usize {
+        (self.k.len() + self.v.len()) * 4
+    }
 }
 
 /// Uniform row-level access to a sequence's KV, whatever its physical
-/// layout. The reference backend's prefill/decode kernels are generic
-/// over this trait, so the dense and paged paths run the *same* float
-/// operations in the same order — bit-identical by construction.
+/// layout or dtype. The reference backend's prefill/decode kernels are
+/// generic over this trait, so the dense and paged paths run the *same*
+/// float operations in the same order — bit-identical by construction
+/// at f32, one shared dequant implementation otherwise.
 pub trait KvAccess {
     /// Allocated slot capacity visible to the kernel.
     fn n_slots(&self) -> usize;
-    /// The `dh`-float K row of `slot` in layer `li`, KV head `g`.
-    fn k_row(&self, li: usize, g: usize, slot: usize) -> &[f32];
-    fn v_row(&self, li: usize, g: usize, slot: usize) -> &[f32];
-    /// Store one slot's K/V rows (decode insertion, prefill append).
+    /// The `dh`-float K row of `slot` in layer `li`, KV head `g` —
+    /// borrowed straight from f32 storage, or dequantized into the
+    /// caller's `O(dh)` scratch row.
+    fn k_row<'s>(&'s self, li: usize, g: usize, slot: usize, scratch: &'s mut [f32]) -> &'s [f32];
+    fn v_row<'s>(&'s self, li: usize, g: usize, slot: usize, scratch: &'s mut [f32]) -> &'s [f32];
+    /// Store one slot's K/V rows (decode insertion, prefill append) —
+    /// quantizes at write time on low-precision storage.
     fn write_row(&mut self, li: usize, g: usize, slot: usize, k: &[f32], v: &[f32]);
+    /// `dot(q, K[slot])` with dequantization fused into the row loop.
+    fn k_dot(&self, li: usize, g: usize, slot: usize, q: &[f32]) -> f32;
+    /// `out += w · V[slot]` with dequantization fused into the row loop.
+    fn v_axpy(&self, li: usize, g: usize, slot: usize, w: f32, out: &mut [f32]);
 }
 
 /// [`KvAccess`] over borrowed dense `[L, Hkv, cap, dh]` tensors (the
 /// historical cache layout; still the prefill-bucket scratch layout).
+/// Always f32 — `--kv-dtype` applies to arena-backed storage only.
 pub struct DenseKvRef<'a> {
     k: &'a mut TensorF,
     v: &'a mut TensorF,
@@ -107,13 +586,13 @@ impl KvAccess for DenseKvRef<'_> {
     }
 
     #[inline(always)]
-    fn k_row(&self, li: usize, g: usize, slot: usize) -> &[f32] {
+    fn k_row<'s>(&'s self, li: usize, g: usize, slot: usize, _scratch: &'s mut [f32]) -> &'s [f32] {
         let o = self.off(li, g, slot);
         &self.k.data[o..o + self.dh]
     }
 
     #[inline(always)]
-    fn v_row(&self, li: usize, g: usize, slot: usize) -> &[f32] {
+    fn v_row<'s>(&'s self, li: usize, g: usize, slot: usize, _scratch: &'s mut [f32]) -> &'s [f32] {
         let o = self.off(li, g, slot);
         &self.v.data[o..o + self.dh]
     }
@@ -123,6 +602,20 @@ impl KvAccess for DenseKvRef<'_> {
         let o = self.off(li, g, slot);
         self.k.data[o..o + self.dh].copy_from_slice(k);
         self.v.data[o..o + self.dh].copy_from_slice(v);
+    }
+
+    #[inline(always)]
+    fn k_dot(&self, li: usize, g: usize, slot: usize, q: &[f32]) -> f32 {
+        let o = self.off(li, g, slot);
+        dot4(q, &self.k.data[o..o + self.dh])
+    }
+
+    #[inline(always)]
+    fn v_axpy(&self, li: usize, g: usize, slot: usize, w: f32, out: &mut [f32]) {
+        let o = self.off(li, g, slot);
+        for (y, &x) in out[..self.dh].iter_mut().zip(&self.v.data[o..o + self.dh]) {
+            *y += w * x;
+        }
     }
 }
 
@@ -149,9 +642,13 @@ impl OwnedKv {
         self.blocks
     }
 
+    pub fn blocks(&self) -> &[KvBlock] {
+        &self.blocks
+    }
+
     #[inline(always)]
-    fn off(&self, li: usize, g: usize, within: usize) -> usize {
-        ((li * self.dims.n_kv_heads + g) * self.block_size + within) * self.dims.head_dim
+    fn seg(&self, li: usize, g: usize) -> usize {
+        li * self.dims.n_kv_heads + g
     }
 }
 
@@ -162,46 +659,85 @@ impl KvAccess for OwnedKv {
     }
 
     #[inline(always)]
-    fn k_row(&self, li: usize, g: usize, slot: usize) -> &[f32] {
+    fn k_row<'s>(&'s self, li: usize, g: usize, slot: usize, scratch: &'s mut [f32]) -> &'s [f32] {
         let (b, within) = (slot / self.block_size, slot % self.block_size);
-        let o = self.off(li, g, within);
-        &self.blocks[b].k[o..o + self.dims.head_dim]
+        let dh = self.dims.head_dim;
+        let plane = &self.blocks[b].k;
+        if let KvPlane::F32(d) = plane {
+            let o = (self.seg(li, g) * self.block_size + within) * dh;
+            return &d[o..o + dh];
+        }
+        plane.decode_row(self.seg(li, g), within, self.block_size, dh, scratch);
+        &scratch[..dh]
     }
 
     #[inline(always)]
-    fn v_row(&self, li: usize, g: usize, slot: usize) -> &[f32] {
+    fn v_row<'s>(&'s self, li: usize, g: usize, slot: usize, scratch: &'s mut [f32]) -> &'s [f32] {
         let (b, within) = (slot / self.block_size, slot % self.block_size);
-        let o = self.off(li, g, within);
-        &self.blocks[b].v[o..o + self.dims.head_dim]
+        let dh = self.dims.head_dim;
+        let plane = &self.blocks[b].v;
+        if let KvPlane::F32(d) = plane {
+            let o = (self.seg(li, g) * self.block_size + within) * dh;
+            return &d[o..o + dh];
+        }
+        plane.decode_row(self.seg(li, g), within, self.block_size, dh, scratch);
+        &scratch[..dh]
     }
 
     #[inline(always)]
     fn write_row(&mut self, li: usize, g: usize, slot: usize, k: &[f32], v: &[f32]) {
         let (b, within) = (slot / self.block_size, slot % self.block_size);
-        let o = self.off(li, g, within);
-        let dh = self.dims.head_dim;
-        self.blocks[b].k[o..o + dh].copy_from_slice(k);
-        self.blocks[b].v[o..o + dh].copy_from_slice(v);
+        let (seg, bs, dh) = (self.seg(li, g), self.block_size, self.dims.head_dim);
+        self.blocks[b].k.encode_row(seg, within, bs, dh, k);
+        self.blocks[b].v.encode_row(seg, within, bs, dh, v);
+    }
+
+    #[inline(always)]
+    fn k_dot(&self, li: usize, g: usize, slot: usize, q: &[f32]) -> f32 {
+        let (b, within) = (slot / self.block_size, slot % self.block_size);
+        self.blocks[b].k.row_dot(self.seg(li, g), within, self.block_size, self.dims.head_dim, q)
+    }
+
+    #[inline(always)]
+    fn v_axpy(&self, li: usize, g: usize, slot: usize, w: f32, out: &mut [f32]) {
+        let (b, within) = (slot / self.block_size, slot % self.block_size);
+        self.blocks[b].v.row_axpy(
+            self.seg(li, g),
+            within,
+            self.block_size,
+            self.dims.head_dim,
+            w,
+            out,
+        );
     }
 }
 
 /// The shared physical block store. Indexed by [`BlockId`]; one slot per
 /// allocator block, `None` until bound (or while temporarily taken).
+/// Every bound block stores KV in the arena-wide [`KvDtype`].
 #[derive(Debug)]
 pub struct KvArena {
     block_size: usize,
+    dtype: KvDtype,
     slots: Vec<Option<KvBlock>>,
     bytes: usize,
+    logical_bytes: usize,
     peak_bytes: usize,
 }
 
 impl KvArena {
     pub fn new(n_blocks: usize, block_size: usize) -> KvArena {
+        KvArena::with_dtype(n_blocks, block_size, KvDtype::F32)
+    }
+
+    pub fn with_dtype(n_blocks: usize, block_size: usize, dtype: KvDtype) -> KvArena {
         assert!(block_size > 0, "KvArena block_size must be > 0");
         KvArena {
             block_size,
+            dtype,
             slots: (0..n_blocks).map(|_| None).collect(),
             bytes: 0,
+            logical_bytes: 0,
             peak_bytes: 0,
         }
     }
@@ -210,13 +746,24 @@ impl KvArena {
         self.block_size
     }
 
+    pub fn dtype(&self) -> KvDtype {
+        self.dtype
+    }
+
     pub fn n_blocks(&self) -> usize {
         self.slots.len()
     }
 
-    /// Resident KV bytes (K + V of every bound block).
+    /// Resident KV bytes of every bound block, in *stored* (dtype-true)
+    /// bytes — what the memory actually costs.
     pub fn bytes_in_use(&self) -> usize {
         self.bytes
+    }
+
+    /// What the same bound blocks would cost at f32. The
+    /// resident/logical ratio is the arena's compression factor.
+    pub fn logical_bytes_in_use(&self) -> usize {
+        self.logical_bytes
     }
 
     pub fn peak_bytes(&self) -> usize {
@@ -235,17 +782,24 @@ impl KvArena {
         i
     }
 
-    /// Materialize zeroed buffers for freshly allocated blocks.
-    /// `slot_floats` is the per-slot float count of the owning model
-    /// ([`KvDims::slot_floats`]).
-    pub fn bind(&mut self, blocks: &[BlockId], slot_floats: usize) {
-        assert!(slot_floats > 0, "binding zero-sized KV slots");
-        let n = slot_floats * self.block_size;
+    /// Materialize zeroed buffers for freshly allocated blocks in the
+    /// arena's dtype. `dims` is the owning model's geometry
+    /// ([`KvDims`]) — it sizes both the payload and the u8 quant
+    /// segments (one per layer × KV head).
+    pub fn bind(&mut self, blocks: &[BlockId], dims: &KvDims) {
+        let n = dims.slot_floats() * self.block_size;
+        assert!(n > 0, "binding zero-sized KV slots");
+        let n_segs = dims.n_layers * dims.n_kv_heads;
+        let block_bytes = self.dtype.block_bytes(dims, self.block_size);
         for &b in blocks {
             let i = self.idx(b);
             assert!(self.slots[i].is_none(), "binding already-bound block {b:?}");
-            self.slots[i] = Some(KvBlock { k: vec![0.0; n], v: vec![0.0; n] });
-            self.bytes += n * 2 * 4;
+            self.slots[i] = Some(KvBlock {
+                k: KvPlane::zeroed(self.dtype, n, n_segs),
+                v: KvPlane::zeroed(self.dtype, n, n_segs),
+            });
+            self.bytes += block_bytes;
+            self.logical_bytes += n * 2 * 4;
         }
         self.peak_bytes = self.peak_bytes.max(self.bytes);
     }
@@ -256,7 +810,8 @@ impl KvArena {
         for &b in blocks {
             let i = self.idx(b);
             if let Some(kvb) = self.slots[i].take() {
-                self.bytes -= (kvb.k.len() + kvb.v.len()) * 4;
+                self.bytes -= kvb.bytes();
+                self.logical_bytes -= kvb.logical_bytes();
             }
         }
     }
@@ -278,25 +833,29 @@ impl KvArena {
     /// Move the blocks' buffers out of the arena *permanently* (cold
     /// spill tier): unlike [`KvArena::take`], the bytes leave resident
     /// accounting, because the caller is about to free the block ids and
-    /// park the buffers host-side. Fails with no side effects if any
-    /// block is unbound or currently taken.
+    /// park the buffers host-side. The stored representation moves
+    /// verbatim — spilling a u8 block never decodes it. Fails with no
+    /// side effects if any block is unbound or currently taken.
     pub fn spill(&mut self, blocks: &[BlockId]) -> Result<Vec<KvBlock>> {
         let kvs = self.take(blocks).context("spill")?;
         for kvb in &kvs {
-            self.bytes -= (kvb.k.len() + kvb.v.len()) * 4;
+            self.bytes -= kvb.bytes();
+            self.logical_bytes -= kvb.logical_bytes();
         }
         Ok(kvs)
     }
 
     /// Re-bind spilled buffers to freshly allocated blocks, bringing
     /// their bytes back into resident accounting. The buffers move
-    /// verbatim, so a spill → restore round trip is bit-identical.
+    /// verbatim, so a spill → restore round trip is bit-identical on
+    /// the stored representation for every dtype.
     pub fn restore(&mut self, blocks: &[BlockId], kvs: Vec<KvBlock>) {
         assert_eq!(blocks.len(), kvs.len(), "restore: table/buffer length mismatch");
         for (&b, kvb) in blocks.iter().zip(kvs) {
             let i = self.idx(b);
             assert!(self.slots[i].is_none(), "restoring into occupied arena slot {b:?}");
-            self.bytes += (kvb.k.len() + kvb.v.len()) * 4;
+            self.bytes += kvb.bytes();
+            self.logical_bytes += kvb.logical_bytes();
             self.slots[i] = Some(kvb);
         }
         self.peak_bytes = self.peak_bytes.max(self.bytes);
@@ -316,25 +875,50 @@ impl KvArena {
         self.slots[self.idx(b)].as_ref().unwrap_or_else(|| panic!("reading unbound block {b:?}"))
     }
 
-    #[inline]
-    fn row_off(&self, dims: &KvDims, li: usize, g: usize, within: usize) -> usize {
-        ((li * dims.n_kv_heads + g) * self.block_size + within) * dims.head_dim
-    }
-
     /// Read one K row: `slot` is the *global* slot index of a block
-    /// table, resolved to `(blocks[slot / bs], slot % bs)` by the caller.
-    pub fn k_row(&self, dims: &KvDims, b: BlockId, li: usize, g: usize, within: usize) -> &[f32] {
-        let o = self.row_off(dims, li, g, within);
-        &self.block(b).k[o..o + dims.head_dim]
+    /// table, resolved to `(blocks[slot / bs], slot % bs)` by the
+    /// caller. f32 storage returns a borrow; quantized storage decodes
+    /// into `scratch` (≥ `dh` floats).
+    pub fn k_row<'s>(
+        &'s self,
+        dims: &KvDims,
+        b: BlockId,
+        li: usize,
+        g: usize,
+        within: usize,
+        scratch: &'s mut [f32],
+    ) -> &'s [f32] {
+        let (seg, dh) = (li * dims.n_kv_heads + g, dims.head_dim);
+        let plane = &self.block(b).k;
+        if let KvPlane::F32(d) = plane {
+            let o = (seg * self.block_size + within) * dh;
+            return &d[o..o + dh];
+        }
+        plane.decode_row(seg, within, self.block_size, dh, scratch);
+        &scratch[..dh]
     }
 
-    pub fn v_row(&self, dims: &KvDims, b: BlockId, li: usize, g: usize, within: usize) -> &[f32] {
-        let o = self.row_off(dims, li, g, within);
-        &self.block(b).v[o..o + dims.head_dim]
+    pub fn v_row<'s>(
+        &'s self,
+        dims: &KvDims,
+        b: BlockId,
+        li: usize,
+        g: usize,
+        within: usize,
+        scratch: &'s mut [f32],
+    ) -> &'s [f32] {
+        let (seg, dh) = (li * dims.n_kv_heads + g, dims.head_dim);
+        let plane = &self.block(b).v;
+        if let KvPlane::F32(d) = plane {
+            let o = (seg * self.block_size + within) * dh;
+            return &d[o..o + dh];
+        }
+        plane.decode_row(seg, within, self.block_size, dh, scratch);
+        &scratch[..dh]
     }
 
     /// Write one `dh`-float K/V row pair at `(layer, head, offset)` of a
-    /// bound block.
+    /// bound block, quantizing at write time.
     pub fn write_row(
         &mut self,
         dims: &KvDims,
@@ -345,33 +929,41 @@ impl KvArena {
         k: &[f32],
         v: &[f32],
     ) {
-        let o = self.row_off(dims, li, g, within);
-        let dh = dims.head_dim;
+        let (seg, bs, dh) = (li * dims.n_kv_heads + g, self.block_size, dims.head_dim);
         let i = self.idx(b);
         let blk = self.slots[i].as_mut().unwrap_or_else(|| panic!("writing unbound block {b:?}"));
-        blk.k[o..o + dh].copy_from_slice(k);
-        blk.v[o..o + dh].copy_from_slice(v);
+        blk.k.encode_row(seg, within, bs, dh, k);
+        blk.v.encode_row(seg, within, bs, dh, v);
     }
 
     /// Copy whole block buffers in (prefix-tree insertion: a
     /// [`super::prefix::BlockRecord`]'s `[L, Hkv, bs, dh]` tensors have
-    /// exactly the block layout).
+    /// exactly the block layout). On quantized storage this is the
+    /// single-shot quantization path: u8 segment ranges are derived from
+    /// the full block in one pass.
     pub fn write_block(&mut self, b: BlockId, k: &[f32], v: &[f32]) {
         let i = self.idx(b);
         let blk = self.slots[i].as_mut().unwrap_or_else(|| panic!("writing unbound block {b:?}"));
         assert_eq!(blk.k.len(), k.len(), "write_block: K length mismatch");
         assert_eq!(blk.v.len(), v.len(), "write_block: V length mismatch");
-        blk.k.copy_from_slice(k);
-        blk.v.copy_from_slice(v);
+        blk.k.encode_block(k);
+        blk.v.encode_block(v);
     }
 
-    /// Raw buffers of one bound block (prefix seed assembly, tests).
-    pub fn block_kv(&self, b: BlockId) -> Option<(&[f32], &[f32])> {
-        self.slots[self.idx(b)].as_ref().map(|blk| (&blk.k[..], &blk.v[..]))
+    /// One bound block's contents, decoded to dense f32 (prefix seed
+    /// assembly, tests). Bit-exact at f32; one shared dequant otherwise.
+    pub fn block_kv(&self, b: BlockId) -> Option<(Vec<f32>, Vec<f32>)> {
+        self.slots[self.idx(b)].as_ref().map(|blk| (blk.k.decode_all(), blk.v.decode_all()))
+    }
+
+    /// One bound block's *stored* representation (spill tests, raw-copy
+    /// compaction).
+    pub fn block_raw(&self, b: BlockId) -> Option<&KvBlock> {
+        self.slots[self.idx(b)].as_ref()
     }
 
     /// Gather rows `0..rows` of a block table into dense
-    /// `[L, Hkv, rows, dh]` tensors.
+    /// `[L, Hkv, rows, dh]` f32 tensors, decoding as it goes.
     pub fn gather_dense(
         &self,
         dims: &KvDims,
@@ -388,12 +980,13 @@ impl KvArena {
         let mut v = TensorF::zeros(vec![l, hkv, rows, dh]);
         for li in 0..l {
             for g in 0..hkv {
+                let seg = li * hkv + g;
                 for r in 0..rows {
-                    let b = blocks[r / self.block_size];
+                    let blk = self.block(blocks[r / self.block_size]);
                     let within = r % self.block_size;
                     let dst = ((li * hkv + g) * rows + r) * dh;
-                    k.data[dst..dst + dh].copy_from_slice(self.k_row(dims, b, li, g, within));
-                    v.data[dst..dst + dh].copy_from_slice(self.v_row(dims, b, li, g, within));
+                    blk.k.decode_row(seg, within, self.block_size, dh, &mut k.data[dst..dst + dh]);
+                    blk.v.decode_row(seg, within, self.block_size, dh, &mut v.data[dst..dst + dh]);
                 }
             }
         }
@@ -402,7 +995,7 @@ impl KvArena {
 
     /// Scatter dense `[L, Hkv, rows, dh]` tensors into rows
     /// `start..start + rows` of a block table (prefix-seed resume, the
-    /// default backend's paged write-through).
+    /// default backend's paged write-through), quantizing at write time.
     pub fn scatter_dense(
         &mut self,
         dims: &KvDims,
@@ -467,7 +1060,7 @@ impl PagedCtx<'_> {
     /// Allocate and bind enough blocks for `slots` token slots,
     /// LRU-reclaiming unpinned prefix-tree blocks first under pool
     /// pressure. "kv pool exhausted" means genuinely exhausted.
-    pub fn alloc_blocks(&mut self, slots: usize, slot_floats: usize) -> Result<Vec<BlockId>> {
+    pub fn alloc_blocks(&mut self, slots: usize, dims: &KvDims) -> Result<Vec<BlockId>> {
         let slots = slots.max(1);
         if let Some(p) = self.prefix.as_deref_mut() {
             while !self.alloc.can_alloc(slots) {
@@ -482,7 +1075,7 @@ impl PagedCtx<'_> {
             }
         }
         let ids = self.alloc.alloc(self.owner, slots).context("kv pool exhausted")?;
-        self.arena.bind(&ids, slot_floats);
+        self.arena.bind(&ids, dims);
         Ok(ids)
     }
 
@@ -504,9 +1097,10 @@ mod tests {
     fn bind_take_put_release_accounting() {
         let mut a = KvArena::new(4, 8);
         let ids = [BlockId(0), BlockId(2)];
-        a.bind(&ids, DIMS.slot_floats());
+        a.bind(&ids, &DIMS);
         let per_block = DIMS.slot_floats() * 8 * 2 * 4;
         assert_eq!(a.bytes_in_use(), 2 * per_block);
+        assert_eq!(a.logical_bytes_in_use(), 2 * per_block, "f32: resident == logical");
         assert_eq!(a.blocks_bound(), 2);
         let taken = a.take(&ids).unwrap();
         assert_eq!(taken.len(), 2);
@@ -516,16 +1110,38 @@ mod tests {
         assert_eq!(a.blocks_bound(), 2);
         a.release(&ids);
         assert_eq!(a.bytes_in_use(), 0);
+        assert_eq!(a.logical_bytes_in_use(), 0);
         // releasing never-bound blocks is a no-op (dense reservations)
         a.release(&[BlockId(1)]);
         assert_eq!(a.bytes_in_use(), 0);
     }
 
     #[test]
+    fn dtype_accounting_ratios() {
+        for (dtype, max_ratio) in
+            [(KvDtype::F32, 1.0), (KvDtype::F16, 0.5), (KvDtype::U8, 0.27)]
+        {
+            let mut a = KvArena::with_dtype(4, 64, dtype);
+            let dims = KvDims { n_layers: 4, n_kv_heads: 2, head_dim: 16 };
+            let ids = [BlockId(0), BlockId(1)];
+            a.bind(&ids, &dims);
+            let ratio = a.bytes_in_use() as f64 / a.logical_bytes_in_use() as f64;
+            assert!(
+                ratio <= max_ratio,
+                "{dtype}: resident/logical {ratio:.4} above the {max_ratio} ceiling"
+            );
+            assert_eq!(a.bytes_in_use(), 2 * dtype.block_bytes(&dims, 64));
+            a.release(&ids);
+            assert_eq!(a.bytes_in_use(), 0);
+            assert_eq!(a.logical_bytes_in_use(), 0);
+        }
+    }
+
+    #[test]
     fn rows_roundtrip_through_blocks() {
         let mut a = KvArena::new(2, 4);
         let ids = [BlockId(1), BlockId(0)]; // order of the table, not of ids
-        a.bind(&ids, DIMS.slot_floats());
+        a.bind(&ids, &DIMS);
         let bs = a.block_size();
         // write slots 0..7 through the table, read them back
         for slot in 0..2 * bs {
@@ -539,7 +1155,8 @@ mod tests {
                 }
             }
         }
-        assert_eq!(a.k_row(&DIMS, ids[1], 1, 0, 2)[0], (6 * 100 + 10) as f32);
+        let mut scr = [0.0f32; 4];
+        assert_eq!(a.k_row(&DIMS, ids[1], 1, 0, 2, &mut scr)[0], (6 * 100 + 10) as f32);
         let (k, v) = a.gather_dense(&DIMS, &ids, 7).unwrap();
         assert_eq!(k.shape, vec![2, 2, 7, 4]);
         assert_eq!(k.index(&[0, 1, 5])[0], 501.0);
@@ -550,7 +1167,7 @@ mod tests {
     fn gather_scatter_roundtrip() {
         let mut a = KvArena::new(3, 4);
         let ids = [BlockId(2), BlockId(0), BlockId(1)];
-        a.bind(&ids, DIMS.slot_floats());
+        a.bind(&ids, &DIMS);
         let rows = 10;
         let n = DIMS.n_layers * DIMS.n_kv_heads * rows * DIMS.head_dim;
         let k = TensorF::new(
@@ -583,7 +1200,7 @@ mod tests {
                 table.swap(i, j);
             }
             let dims = KvDims { n_layers: rng.range(1, 3), n_kv_heads: rng.range(1, 3), head_dim: 2 };
-            a.bind(&table, dims.slot_floats());
+            a.bind(&table, &dims);
             let slots = n_blocks * bs;
             for slot in 0..slots {
                 let (b, within) = (table[slot / bs], slot % bs);
@@ -594,13 +1211,14 @@ mod tests {
                     }
                 }
             }
+            let mut scr = [0.0f32; 2];
             for slot in 0..slots {
                 let (b, within) = (table[slot / bs], slot % bs);
                 for li in 0..dims.n_layers {
                     for g in 0..dims.n_kv_heads {
                         let want = (slot * 1000 + li * 10 + g) as f32;
-                        assert_eq!(a.k_row(&dims, b, li, g, within), &[want, want + 0.5][..]);
-                        assert_eq!(a.v_row(&dims, b, li, g, within), &[-want, want][..]);
+                        assert_eq!(a.k_row(&dims, b, li, g, within, &mut scr), &[want, want + 0.5][..]);
+                        assert_eq!(a.v_row(&dims, b, li, g, within, &mut scr), &[-want, want][..]);
                     }
                 }
             }
@@ -609,7 +1227,11 @@ mod tests {
             let kv = OwnedKv::new(taken, dims, bs);
             for slot in 0..slots {
                 let want = (slot * 1000) as f32;
-                assert_eq!(kv.k_row(0, 0, slot)[0], want);
+                assert_eq!(kv.k_row(0, 0, slot, &mut scr)[0], want);
+                // the fused dot agrees with a scratch-decode dot
+                let q = [1.0f32, 2.0];
+                let row = kv.k_row(0, 0, slot, &mut scr).to_vec();
+                assert_eq!(kv.k_dot(0, 0, slot, &q), dot4(&q, &row));
             }
             a.put(&table, kv.into_blocks());
         });
@@ -620,7 +1242,7 @@ mod tests {
         let mut arena = KvArena::new(8, 8);
         let mut alloc = BlockAllocator::new(64, 8);
         let mut ctx = PagedCtx { arena: &mut arena, alloc: &mut alloc, prefix: None, owner: 7 };
-        let ids = ctx.alloc_blocks(20, DIMS.slot_floats()).unwrap(); // 3 blocks
+        let ids = ctx.alloc_blocks(20, &DIMS).unwrap(); // 3 blocks
         assert_eq!(ids.len(), 3);
         assert!(ctx.arena.bytes_in_use() > 0);
         assert_eq!(ctx.alloc.used_blocks(), 3);
@@ -629,8 +1251,167 @@ mod tests {
         assert_eq!(ctx.alloc.used_blocks(), 0);
         // zero-slot requests still pin one block (a live sequence always
         // has at least one block to append into)
-        let ids = ctx.alloc_blocks(0, DIMS.slot_floats()).unwrap();
+        let ids = ctx.alloc_blocks(0, &DIMS).unwrap();
         assert_eq!(ids.len(), 1);
         ctx.free_blocks(&ids);
+    }
+
+    /// f16 conversion: f16 → f32 → f16 is the identity on every finite
+    /// half bit pattern, and f32 → f16 rounds within half a ULP.
+    #[test]
+    fn f16_conversion_properties() {
+        for h in 0u16..=0xffff {
+            let e = (h >> 10) & 0x1f;
+            let x = f16_to_f32(h);
+            if e == 31 {
+                if h & 0x03ff == 0 {
+                    assert!(x.is_infinite());
+                } else {
+                    assert!(x.is_nan());
+                    continue; // NaN payloads need not round-trip bit-exactly
+                }
+            }
+            assert_eq!(f16_from_f32(x), h, "half bits {h:#06x} do not round-trip");
+        }
+        // rounding: max relative error of a f32 -> f16 -> f32 trip is
+        // 2^-11 for normal halves
+        check("f16 rounding", &Config { cases: 256, ..Config::new() }, |rng, _| {
+            let x = (rng.f32() - 0.5) * 100.0;
+            let y = f16_to_f32(f16_from_f32(x));
+            let tol = x.abs().max(6.1e-5) * (1.0 / 2048.0) + 1e-7;
+            assert!((x - y).abs() <= tol, "f16 round of {x} gave {y}");
+        });
+        // specials
+        assert_eq!(f16_from_f32(0.0), 0);
+        assert_eq!(f16_from_f32(-0.0), 0x8000);
+        assert_eq!(f16_from_f32(f32::INFINITY), 0x7c00);
+        assert_eq!(f16_from_f32(1e9), 0x7c00, "overflow saturates to inf");
+        assert_eq!(f16_from_f32(1e-12), 0, "underflow flushes to zero");
+        assert_eq!(f16_to_f32(f16_from_f32(1.0)), 1.0);
+        assert_eq!(f16_to_f32(f16_from_f32(-2.5)), -2.5);
+    }
+
+    /// u8 single-shot quantization: constant segments decode exactly;
+    /// arbitrary segments decode within half a quantization step.
+    #[test]
+    fn u8_encode_block_error_bound() {
+        check("u8 quantize", &Config { cases: 64, max_size: 12, ..Config::new() }, |rng, _| {
+            let (bs, dh, n_segs) = (4usize, 4usize, 3usize);
+            let n = n_segs * bs * dh;
+            let kind = rng.below(4);
+            let data: Vec<f32> = (0..n)
+                .map(|i| match kind {
+                    0 => 0.0,                                  // all zero: exact
+                    1 => 3.25,                                 // constant: exact
+                    2 => {
+                        // single outlier per segment
+                        if i % (bs * dh) == 0 { 1000.0 } else { rng.f32() }
+                    }
+                    _ => (rng.f32() - 0.5) * 1e-38,            // denormal-range values
+                })
+                .collect();
+            let mut p = KvPlane::zeroed(KvDtype::U8, n, n_segs);
+            p.encode_block(&data);
+            let dec = p.decode_all();
+            for si in 0..n_segs {
+                let span = si * bs * dh..(si + 1) * bs * dh;
+                let lo = data[span.clone()].iter().cloned().fold(f32::INFINITY, f32::min);
+                let hi = data[span.clone()].iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let step = ((hi - lo) / 255.0).max(0.0);
+                for i in span {
+                    let err = (data[i] - dec[i]).abs();
+                    assert!(
+                        err <= step * 0.5001 + 1e-30,
+                        "seg {si} elem {i}: |{} - {}| = {err} > step/2 ({step})",
+                        data[i],
+                        dec[i]
+                    );
+                }
+            }
+        });
+    }
+
+    /// u8 running-range writes: later rows that widen the range
+    /// requantize earlier rows deterministically, and every live row
+    /// stays within a small multiple of the final quantization step.
+    #[test]
+    fn u8_running_range_expansion() {
+        let dims = KvDims { n_layers: 1, n_kv_heads: 1, head_dim: 4 };
+        let mut a = KvArena::with_dtype(1, 8, KvDtype::U8);
+        a.bind(&[BlockId(0)], &dims);
+        let rows: Vec<[f32; 4]> = vec![
+            [0.1, 0.2, 0.3, 0.4],
+            [-5.0, 0.0, 5.0, 2.0],    // widens both ends
+            [100.0, -100.0, 0.0, 1.0], // widens massively
+            [0.5, 0.25, -0.25, 0.75],
+        ];
+        for (i, r) in rows.iter().enumerate() {
+            a.write_row(&dims, BlockId(0), 0, 0, i, r, r);
+        }
+        let step = 200.0 / 255.0; // final range is [-100, 100]
+        let mut scr = [0.0f32; 4];
+        for (i, r) in rows.iter().enumerate() {
+            let got = a.k_row(&dims, BlockId(0), 0, 0, i, &mut scr);
+            for (x, y) in r.iter().zip(got) {
+                assert!(
+                    (x - y).abs() <= 2.0 * step,
+                    "row {i}: |{x} - {y}| above the requantization bound"
+                );
+            }
+        }
+        // deterministic: the same write sequence reproduces the codes
+        let mut b = KvArena::with_dtype(1, 8, KvDtype::U8);
+        b.bind(&[BlockId(0)], &dims);
+        for (i, r) in rows.iter().enumerate() {
+            b.write_row(&dims, BlockId(0), 0, 0, i, r, r);
+        }
+        let (ka, va) = a.block_kv(BlockId(0)).unwrap();
+        let (kb, vb) = b.block_kv(BlockId(0)).unwrap();
+        assert_eq!(ka, kb);
+        assert_eq!(va, vb);
+    }
+
+    /// Spill → restore moves the stored representation verbatim for
+    /// every dtype: decoded contents (and u8 codes) are bit-identical.
+    #[test]
+    fn spill_restore_verbatim_per_dtype() {
+        for dtype in [KvDtype::F32, KvDtype::F16, KvDtype::U8] {
+            let dims = KvDims { n_layers: 2, n_kv_heads: 1, head_dim: 4 };
+            let mut a = KvArena::with_dtype(4, 4, dtype);
+            let ids = [BlockId(0), BlockId(3)];
+            a.bind(&ids, &dims);
+            for slot in 0..8 {
+                let (b, w) = (ids[slot / 4], slot % 4);
+                for li in 0..2 {
+                    let row = [slot as f32 * 0.37 - 1.0 + li as f32; 4];
+                    a.write_row(&dims, b, li, 0, w, &row, &row);
+                }
+            }
+            let before: Vec<_> = ids.iter().map(|&b| a.block_kv(b).unwrap()).collect();
+            let bytes = a.bytes_in_use();
+            let spilled = a.spill(&ids).unwrap();
+            assert_eq!(a.bytes_in_use(), 0);
+            let new_ids = [BlockId(1), BlockId(2)];
+            a.restore(&new_ids, spilled);
+            assert_eq!(a.bytes_in_use(), bytes);
+            for (nb, want) in new_ids.iter().zip(&before) {
+                assert_eq!(&a.block_kv(*nb).unwrap(), want, "{dtype}: spill round trip drifted");
+            }
+        }
+    }
+
+    /// Raw row copy (compaction that stays within one source block)
+    /// moves codes verbatim and adopts the source quant params.
+    #[test]
+    fn u8_copy_row_from_adopts_params() {
+        let (bs, dh) = (4usize, 4usize);
+        let mut src = KvPlane::zeroed(KvDtype::U8, bs * dh, 1);
+        let data: Vec<f32> = (0..bs * dh).map(|i| (i as f32) * 0.5 - 3.0).collect();
+        src.encode_block(&data);
+        let mut dst = KvPlane::zeroed(KvDtype::U8, bs * dh, 1);
+        for w in 0..bs {
+            dst.copy_row_from(&src, 0, w, 0, w, bs, dh);
+        }
+        assert_eq!(src.decode_all(), dst.decode_all(), "raw copy must be lossless");
     }
 }

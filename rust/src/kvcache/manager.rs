@@ -8,7 +8,7 @@
 
 use std::collections::HashMap;
 
-use super::arena::{KvArena, KvBlock, PagedCtx};
+use super::arena::{KvArena, KvBlock, KvDtype, PagedCtx};
 use super::block::BlockAllocator;
 use super::cache::SeqCache;
 use super::paged::PagedSeqCache;
@@ -17,9 +17,24 @@ use super::prefix::{
     PREFIX_OWNER,
 };
 
-/// Bytes per slot for a model (one token's KV across layers/heads).
+/// Bytes per slot for a model (one token's KV across layers/heads),
+/// at the logical f32 representation.
 pub fn bytes_per_slot(n_layers: usize, n_kv_heads: usize, head_dim: usize) -> usize {
-    n_layers * n_kv_heads * head_dim * 4 * 2 // K and V, f32
+    bytes_per_slot_dtype(n_layers, n_kv_heads, head_dim, KvDtype::F32)
+}
+
+/// Dtype-true bytes per slot — what a bound arena slot actually costs
+/// (u8 per-segment quant params are amortized over whole blocks and
+/// charged by [`KvDtype::block_bytes`], not here). The scheduler's
+/// admission/quota math charges this, so a u8 pool admits ~4× the
+/// sequences of an f32 pool of the same byte budget.
+pub fn bytes_per_slot_dtype(
+    n_layers: usize,
+    n_kv_heads: usize,
+    head_dim: usize,
+    dtype: KvDtype,
+) -> usize {
+    n_layers * n_kv_heads * head_dim * dtype.bytes_per_elem() * 2 // K and V
 }
 
 /// What a (non-prefix) owner's blocks are charged as, for the per-owner
@@ -39,8 +54,11 @@ pub struct CacheStats {
     pub used_blocks: usize,
     pub free_blocks: usize,
     pub peak_used_blocks: usize,
-    /// Resident arena bytes (bound K+V buffers).
+    /// Resident arena bytes (bound K+V buffers, dtype-true).
     pub arena_bytes: usize,
+    /// What the same bound blocks would cost at f32; the
+    /// resident/logical ratio is the arena's compression factor.
+    pub arena_logical_bytes: usize,
     pub arena_peak_bytes: usize,
     /// Arena blocks with bound buffers (≤ `used_blocks`: dense
     /// reservations charge the allocator without binding bytes).
@@ -101,8 +119,14 @@ impl CacheManager {
     /// `total_slots` is the global KV budget in token slots (the analog of
     /// GPU KV memory); `block_size` the allocation granularity.
     pub fn new(total_slots: usize, block_size: usize) -> CacheManager {
+        CacheManager::with_dtype(total_slots, block_size, KvDtype::F32)
+    }
+
+    /// Like [`CacheManager::new`], with the arena storing KV in `dtype`
+    /// (`--kv-dtype`; f16/u8 quantize at write time).
+    pub fn with_dtype(total_slots: usize, block_size: usize, dtype: KvDtype) -> CacheManager {
         let allocator = BlockAllocator::new(total_slots, block_size);
-        let arena = KvArena::new(allocator.total_blocks(), block_size);
+        let arena = KvArena::with_dtype(allocator.total_blocks(), block_size, dtype);
         CacheManager {
             allocator,
             arena,
@@ -119,6 +143,10 @@ impl CacheManager {
 
     pub fn arena(&self) -> &KvArena {
         &self.arena
+    }
+
+    pub fn kv_dtype(&self) -> KvDtype {
+        self.arena.dtype()
     }
 
     /// Split borrow of the physical pool for engine calls that thread
@@ -245,7 +273,7 @@ impl CacheManager {
         );
         let bufs = self.arena.spill(&cache.blocks)?;
         self.allocator.free(&cache.blocks);
-        let bytes: usize = bufs.iter().map(|b| (b.k.len() + b.v.len()) * 4).sum();
+        let bytes: usize = bufs.iter().map(KvBlock::bytes).sum();
         let n = bufs.len();
         self.spill.bytes += bytes;
         self.spill.peak_bytes = self.spill.peak_bytes.max(self.spill.bytes);
@@ -279,7 +307,7 @@ impl CacheManager {
             return RestoreOutcome::NoSpace;
         };
         let bufs = self.spill.seqs.remove(&owner).unwrap();
-        let bytes: usize = bufs.iter().map(|b| (b.k.len() + b.v.len()) * 4).sum();
+        let bytes: usize = bufs.iter().map(KvBlock::bytes).sum();
         let n = bufs.len();
         self.spill.bytes -= bytes;
         self.spill.restored_blocks_total += n;
@@ -293,7 +321,7 @@ impl CacheManager {
     pub fn drop_spilled(&mut self, owner: u64) -> usize {
         match self.spill.seqs.remove(&owner) {
             Some(bufs) => {
-                let bytes: usize = bufs.iter().map(|b| (b.k.len() + b.v.len()) * 4).sum();
+                let bytes: usize = bufs.iter().map(KvBlock::bytes).sum();
                 self.spill.bytes -= bytes;
                 bufs.len()
             }
@@ -384,6 +412,7 @@ impl CacheManager {
             free_blocks: self.allocator.free_blocks(),
             peak_used_blocks: self.allocator.peak_used_blocks(),
             arena_bytes: self.arena.bytes_in_use(),
+            arena_logical_bytes: self.arena.logical_bytes_in_use(),
             arena_peak_bytes: self.arena.peak_bytes(),
             arena_blocks: self.arena.blocks_bound(),
             blocks_decode: by_class[0],
@@ -432,7 +461,7 @@ mod tests {
         let mut m = CacheManager::new(64, 8);
         let dims = KvDims { n_layers: 1, n_kv_heads: 1, head_dim: 2 };
         m.tag(7, OwnerClass::Prefill);
-        let ids = m.paged_ctx(7).alloc_blocks(20, dims.slot_floats()).unwrap();
+        let ids = m.paged_ctx(7).alloc_blocks(20, &dims).unwrap();
         assert_eq!(ids.len(), 3);
         let s = m.stats();
         assert_eq!(s.blocks_prefill, 3);

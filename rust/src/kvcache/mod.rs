@@ -30,7 +30,9 @@ pub mod manager;
 pub mod paged;
 pub mod prefix;
 
-pub use arena::{DenseKvRef, KvAccess, KvArena, KvBlock, KvDims, OwnedKv, PagedCtx};
+pub use arena::{
+    DenseKvRef, KvAccess, KvArena, KvBlock, KvDims, KvDtype, KvPlane, OwnedKv, PagedCtx, Seg,
+};
 pub use block::{BlockAllocator, BlockId};
 pub use cache::SeqCache;
 pub use manager::{CacheManager, OwnerClass, RestoreOutcome, SpillStats, SpillStore};

@@ -24,7 +24,7 @@ use anyhow::{Context, Result};
 
 use crate::util::tensor::TensorF;
 
-use super::arena::{KvArena, KvDims, OwnedKv};
+use super::arena::{KvArena, KvBlock, KvDims};
 use super::block::{BlockAllocator, BlockId};
 use super::cache::SeqCache;
 
@@ -126,21 +126,75 @@ impl PagedSeqCache {
         let mut cache = Self::alloc_for(arena, alloc, owner, dims, kept, prompt_len, cap)?;
         // Take the destination blocks out so source reads and destination
         // writes cannot alias (they are distinct blocks by construction).
-        let taken = arena.take(&cache.blocks)?;
-        let mut dst = OwnedKv::new(taken, dims, bs);
-        for (li, idx) in kept.iter().enumerate() {
-            for (slot, &p) in idx.iter().enumerate() {
-                for g in 0..dims.n_kv_heads {
-                    let kr = arena.k_row(&dims, src_blocks[p / bs], li, g, p % bs);
-                    let vr = arena.v_row(&dims, src_blocks[p / bs], li, g, p % bs);
-                    dst.write_row(li, g, slot, kr, vr);
-                }
+        let mut dst = match arena.take(&cache.blocks) {
+            Ok(d) => d,
+            Err(e) => {
+                arena.release(&cache.blocks);
+                alloc.free(&cache.blocks);
+                return Err(e);
             }
+        };
+        let res = Self::gather_into(arena, &mut dst, dims, bs, src_blocks, kept);
+        // Put the destination blocks back unconditionally so the byte
+        // accounting stays balanced; a failed gather (e.g. a source block
+        // freed out from under the selection) then unwinds the whole
+        // allocation instead of leaking half-filled blocks.
+        arena.put(&cache.blocks, dst);
+        if let Err(e) = res {
+            arena.release(&cache.blocks);
+            alloc.free(&cache.blocks);
+            return Err(e);
         }
-        let blocks = cache.blocks.clone();
-        arena.put(&blocks, dst.into_blocks());
         cache.note_selection(kept);
         Ok(cache)
+    }
+
+    /// The copy loop of [`Self::from_arena_selection`]: walk the
+    /// destination slots one destination block at a time — when every
+    /// kept row of a (dest block, layer) span comes from a single source
+    /// block, the stored representation is copied verbatim (the u8
+    /// segment adopts the source quant params), so compaction only
+    /// requantizes when it crosses block boundaries. f32/f16 take the
+    /// same split but both paths are lossless for them.
+    fn gather_into(
+        arena: &KvArena,
+        dst: &mut [KvBlock],
+        dims: KvDims,
+        bs: usize,
+        src_blocks: &[BlockId],
+        kept: &[Vec<usize>],
+    ) -> Result<()> {
+        let (hkv, dh) = (dims.n_kv_heads, dims.head_dim);
+        let mut scr_k = vec![0.0f32; dh];
+        let mut scr_v = vec![0.0f32; dh];
+        for (li, idx) in kept.iter().enumerate() {
+            let mut slot = 0usize;
+            while slot < idx.len() {
+                let d = slot / bs;
+                let end = ((d + 1) * bs).min(idx.len());
+                let one_src = idx[slot..end].iter().all(|&p| p / bs == idx[slot] / bs);
+                for s in slot..end {
+                    let p = idx[s];
+                    let src = arena
+                        .block_raw(src_blocks[p / bs])
+                        .with_context(|| format!("source block for kept row {p} unbound"))?;
+                    for g in 0..hkv {
+                        let seg = li * hkv + g;
+                        if one_src {
+                            dst[d].k.copy_row_from(&src.k, seg, p % bs, seg, s % bs, bs, dh);
+                            dst[d].v.copy_row_from(&src.v, seg, p % bs, seg, s % bs, bs, dh);
+                        } else {
+                            src.k.decode_row(seg, p % bs, bs, dh, &mut scr_k);
+                            src.v.decode_row(seg, p % bs, bs, dh, &mut scr_v);
+                            dst[d].k.encode_row(seg, s % bs, bs, dh, &scr_k);
+                            dst[d].v.encode_row(seg, s % bs, bs, dh, &scr_v);
+                        }
+                    }
+                }
+                slot = end;
+            }
+        }
+        Ok(())
     }
 
     /// Allocate + bind the destination blocks of a gather-compaction.
@@ -159,7 +213,7 @@ impl PagedSeqCache {
             anyhow::ensure!(idx.len() <= cap, "layer {li}: {} kept > cap {cap}", idx.len());
         }
         let ids = alloc.alloc(owner, max_rows).context("kv pool exhausted")?;
-        arena.bind(&ids, dims.slot_floats());
+        arena.bind(&ids, &dims);
         Ok(PagedSeqCache {
             blocks: ids,
             block_size: bs,
@@ -194,7 +248,7 @@ impl PagedSeqCache {
     pub fn grow(&mut self, arena: &mut KvArena, alloc: &mut BlockAllocator, owner: u64) -> bool {
         match alloc.alloc(owner, self.block_size) {
             Some(ids) => {
-                arena.bind(&ids, self.dims.slot_floats());
+                arena.bind(&ids, &self.dims);
                 self.blocks.extend(ids);
                 true
             }
@@ -233,11 +287,14 @@ impl PagedSeqCache {
             anyhow::ensure!(self.lens[li] <= cap, "layer {li} has more rows than cap {cap}");
             for g in 0..hkv {
                 for slot in 0..self.lens[li] {
-                    let b = self.blocks[slot / self.block_size];
+                    let blk = arena
+                        .block_raw(self.blocks[slot / self.block_size])
+                        .context("paged cache block unbound")?;
                     let within = slot % self.block_size;
+                    let seg = li * hkv + g;
                     let dst = ((li * hkv + g) * cap + slot) * dh;
-                    k.data[dst..dst + dh].copy_from_slice(arena.k_row(&dims, b, li, g, within));
-                    v.data[dst..dst + dh].copy_from_slice(arena.v_row(&dims, b, li, g, within));
+                    blk.k.decode_row(seg, within, self.block_size, dh, &mut k.data[dst..dst + dh]);
+                    blk.v.decode_row(seg, within, self.block_size, dh, &mut v.data[dst..dst + dh]);
                 }
             }
         }
@@ -299,7 +356,7 @@ mod tests {
         let v = full_kv(2, 2, 8, 4);
         // stage the "prompt" KV in arena blocks (2 blocks of 4 rows)
         let src = alloc.alloc(99, 8).unwrap();
-        arena.bind(&src, DIMS.slot_floats());
+        arena.bind(&src, &DIMS);
         arena.scatter_dense(&DIMS, &src, 0, &k, &v).unwrap();
         let kept = vec![vec![0, 4, 5, 6, 7], vec![2, 3]];
         let a = PagedSeqCache::from_arena_selection(
@@ -320,6 +377,61 @@ mod tests {
         alloc.free(&src);
         let da2 = a.gather_dense(&arena, 8).unwrap();
         assert_eq!(da.k.data, da2.k.data);
+    }
+
+    /// On u8 storage, a compaction whose kept rows stay within one
+    /// source block per destination block copies codes verbatim — the
+    /// decoded selection is *exactly* the decoded source rows. A
+    /// selection crossing block boundaries requantizes, staying within
+    /// one quantization step of the decoded source.
+    #[test]
+    fn arena_selection_u8_raw_copy_vs_requantize() {
+        use crate::kvcache::arena::KvDtype;
+        let mut arena = KvArena::with_dtype(8, 4, KvDtype::U8);
+        let mut alloc = BlockAllocator::new(32, 4);
+        let k = full_kv(2, 2, 8, 4);
+        let v = full_kv(2, 2, 8, 4);
+        let src = alloc.alloc(99, 8).unwrap();
+        arena.bind(&src, &DIMS);
+        arena.scatter_dense(&DIMS, &src, 0, &k, &v).unwrap();
+        let src_dense = arena.gather_dense(&DIMS, &src, 8).unwrap();
+        // block-aligned kept rows: each 4-slot dest block fills from one
+        // src block -> raw copy, bit-exact vs the decoded source
+        let kept = vec![vec![0, 1, 2, 3], vec![4, 5, 6, 7]];
+        let a = PagedSeqCache::from_arena_selection(
+            &mut arena, &mut alloc, 1, DIMS, &src, &kept, 8, 8,
+        )
+        .unwrap();
+        let da = a.gather_dense(&arena, 8).unwrap();
+        for li in 0..2 {
+            for g in 0..2 {
+                for (slot, &p) in kept[li].iter().enumerate() {
+                    assert_eq!(
+                        da.k.index(&[li, g, slot]),
+                        src_dense.0.index(&[li, g, p]),
+                        "raw copy must be lossless"
+                    );
+                }
+            }
+        }
+        // boundary-crossing kept rows requantize: bounded drift only
+        let kept = vec![vec![1, 2, 5, 6], vec![0, 7]];
+        let b = PagedSeqCache::from_arena_selection(
+            &mut arena, &mut alloc, 2, DIMS, &src, &kept, 8, 8,
+        )
+        .unwrap();
+        let db = b.gather_dense(&arena, 8).unwrap();
+        for li in 0..2 {
+            for g in 0..2 {
+                for (slot, &p) in kept[li].iter().enumerate() {
+                    let got = db.k.index(&[li, g, slot]);
+                    let want = src_dense.0.index(&[li, g, p]);
+                    for (x, y) in got.iter().zip(want) {
+                        assert!((x - y).abs() <= 2.0, "requantize drift {x} vs {y}");
+                    }
+                }
+            }
+        }
     }
 
     #[test]

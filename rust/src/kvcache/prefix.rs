@@ -364,7 +364,7 @@ impl PrefixCache {
                 head_dim: rec.k.shape[3],
             };
             debug_assert_eq!(rec.k.shape[2], b, "record rows disagree with the block size");
-            arena.bind(&ids, dims.slot_floats());
+            arena.bind(&ids, &dims);
             arena.write_block(ids[0], &rec.k.data, &rec.v.data);
             let node = Node {
                 start,

@@ -65,6 +65,8 @@ fn print_help() {
          \x20 serve     --addr 127.0.0.1:8080 --model lkv-tiny --max-active 4 \\\n\
          \x20           [--prefill-chunk 256] [--per-seq-decode] \\\n\
          \x20           [--kv-pool SLOTS] [--kv-block SLOTS] [--dense-kv] \\\n\
+         \x20           [--kv-dtype f32|f16|u8]   (arena storage precision; u8 packs\n\
+         \x20                                      ~3.9x more KV per byte, f32 default) \\\n\
          \x20           [--prefix-cache] [--prefix-cache-slots N] \\\n\
          \x20           [--tenants N] [--quota-tokens N] [--stall-slo-ms MS] \\\n\
          \x20           [--no-preemption] [--threads N] [--ref-naive] \\\n\
@@ -131,6 +133,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         kv_pool_slots: args.usize("kv-pool", defaults.kv_pool_slots),
         kv_block_slots: args.usize_clamped("kv-block", defaults.kv_block_slots, 1, 4096),
         paged_kv: !args.has("dense-kv"),
+        // Arena storage dtype: f32 (bit-exact oracle, default), f16, or
+        // u8 with per-(layer, KV-head, block) scale/zero-point.
+        kv_dtype: match args.get("kv-dtype") {
+            None => defaults.kv_dtype,
+            Some(s) => lookaheadkv::kvcache::KvDtype::parse(s)
+                .ok_or_else(|| anyhow::anyhow!("unknown --kv-dtype {s} (f32|f16|u8)"))?,
+        },
         batched_decode: !args.has("per-seq-decode"),
         // 0 = monolithic prefill; 64-256 interleaves decode steps between
         // prompt chunks (see README "Chunked prefill").

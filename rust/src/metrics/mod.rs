@@ -204,6 +204,10 @@ pub struct Metrics {
     counters: RwLock<BTreeMap<String, Arc<AtomicU64>>>,
     gauges: RwLock<BTreeMap<String, Arc<AtomicU64>>>, // f64 bit patterns
     histograms: RwLock<BTreeMap<String, Arc<Histogram>>>,
+    /// Info-style gauges: constant-`1` samples whose payload is the
+    /// label set (the Prometheus `foo_info{bar="baz"} 1` idiom). Cold
+    /// path only — set once at startup (e.g. `kv_cache_info{kv_dtype}`).
+    infos: RwLock<BTreeMap<String, Vec<(String, String)>>>,
 }
 
 fn handle<T>(reg: &RwLock<BTreeMap<String, Arc<T>>>, name: &str, init: impl Fn() -> T) -> Arc<T> {
@@ -249,6 +253,24 @@ impl Metrics {
             .store(value.to_bits(), Ordering::Relaxed);
     }
 
+    /// Set an info-style gauge: a constant `1` sample whose payload is
+    /// its label set (`kv_cache_info{kv_dtype="u8"} 1`). Re-setting the
+    /// same name replaces the labels. Not for hot paths — each call
+    /// takes the write lock and allocates.
+    pub fn set_info(&self, name: &str, labels: &[(&str, &str)]) {
+        if self.disabled {
+            return;
+        }
+        let labels: Vec<(String, String)> =
+            labels.iter().map(|&(k, v)| (k.to_string(), v.to_string())).collect();
+        self.infos.write().unwrap().insert(name.to_string(), labels);
+    }
+
+    /// Label set of an info gauge (None when never set).
+    pub fn info(&self, name: &str) -> Option<Vec<(String, String)>> {
+        self.infos.read().unwrap().get(name).cloned()
+    }
+
     pub fn gauge(&self, name: &str) -> Option<f64> {
         self.gauges
             .read()
@@ -285,7 +307,20 @@ impl Metrics {
         for (k, v) in self.gauges.read().unwrap().iter() {
             gauges.set(k, f64::from_bits(v.load(Ordering::Relaxed)).into());
         }
-        Json::from_pairs(vec![("counters", counters), ("gauges", gauges), ("latency", hists)])
+        let mut infos = Json::obj();
+        for (k, labels) in self.infos.read().unwrap().iter() {
+            let mut l = Json::obj();
+            for (lk, lv) in labels {
+                l.set(lk, lv.as_str().into());
+            }
+            infos.set(k, l);
+        }
+        Json::from_pairs(vec![
+            ("counters", counters),
+            ("gauges", gauges),
+            ("info", infos),
+            ("latency", hists),
+        ])
     }
 
     /// Prometheus text exposition (format 0.0.4). Metric names are
@@ -314,6 +349,18 @@ impl Metrics {
             let Some(name) = emit_name(&mut out, k) else { continue };
             out.push_str(&format!("# TYPE {name} gauge\n"));
             out.push_str(&format!("{name} {}\n", fmt_f64(f64::from_bits(v.load(Ordering::Relaxed)))));
+        }
+        for (k, labels) in self.infos.read().unwrap().iter() {
+            let Some(name) = emit_name(&mut out, k) else { continue };
+            out.push_str(&format!("# TYPE {name} gauge\n"));
+            let rendered: Vec<String> = labels
+                .iter()
+                .map(|(lk, lv)| {
+                    let lv = lv.replace('\\', "\\\\").replace('"', "\\\"");
+                    format!("{}=\"{lv}\"", prometheus_name(lk))
+                })
+                .collect();
+            out.push_str(&format!("{name}{{{}}} 1\n", rendered.join(",")));
         }
         for (k, h) in self.histograms.read().unwrap().iter() {
             let Some(name) = emit_name(&mut out, k) else { continue };
@@ -521,6 +568,26 @@ mod tests {
         assert_eq!(m.gauge("missing"), None);
         let j = m.to_json();
         assert_eq!(j.req("gauges").req("kv_free_blocks").as_f64(), Some(5.0));
+    }
+
+    /// Info gauges render as labeled constant-1 samples, pass the
+    /// linter, and surface their labels in the JSON export.
+    #[test]
+    fn info_gauge_labeled_exposition() {
+        let m = Metrics::new();
+        m.set_info("kv_cache_info", &[("kv_dtype", "u8")]);
+        let text = m.to_prometheus();
+        lint_exposition(&text).unwrap();
+        assert!(text.contains("# TYPE kv_cache_info gauge"));
+        assert!(text.contains("kv_cache_info{kv_dtype=\"u8\"} 1"));
+        // Re-set replaces the label set.
+        m.set_info("kv_cache_info", &[("kv_dtype", "f16")]);
+        assert_eq!(m.info("kv_cache_info"), Some(vec![("kv_dtype".into(), "f16".into())]));
+        let j = m.to_json();
+        assert_eq!(j.req("info").req("kv_cache_info").req("kv_dtype").as_str(), Some("f16"));
+        let noop = Metrics::noop();
+        noop.set_info("kv_cache_info", &[("kv_dtype", "u8")]);
+        assert!(noop.info("kv_cache_info").is_none());
     }
 
     /// Regression for the reservoir-era honesty bugs: the old histogram

@@ -508,25 +508,12 @@ fn apply_rope(xs: &mut [f32], t: usize, n_heads: usize, dh: usize, pos: &[f32], 
 /// Dot product with four independent accumulator lanes (ILP/SIMD
 /// friendly without float reassociation — the lane structure is fixed,
 /// so results are identical everywhere the streaming suite calls it).
+/// Shared with the KV arena's fused-dequant accessors via
+/// [`crate::util::tensor::dot4`] so dense and paged paths run literally
+/// the same dot.
 #[inline(always)]
 fn dot_f(a: &[f32], b: &[f32]) -> f32 {
-    let n = a.len().min(b.len());
-    let m = n & !3;
-    let mut acc = [0.0f32; 4];
-    let mut i = 0;
-    while i < m {
-        acc[0] += a[i] * b[i];
-        acc[1] += a[i + 1] * b[i + 1];
-        acc[2] += a[i + 2] * b[i + 2];
-        acc[3] += a[i + 3] * b[i + 3];
-        i += 4;
-    }
-    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
-    while i < n {
-        s += a[i] * b[i];
-        i += 1;
-    }
-    s
+    crate::util::tensor::dot4(a, b)
 }
 
 /// Streaming dense layer: blocked packed GEMM (row-parallel) plus the
@@ -1110,12 +1097,7 @@ fn prefill_chunk_naive<A: KvAccess>(
                 let qrow = &q[(r * nh + h) * dh..][..dh];
                 let mut maxv = f32::NEG_INFINITY;
                 for j in 0..n_vis {
-                    let krow = kv.k_row(li, g, j);
-                    let mut s = 0.0f32;
-                    for e in 0..dh {
-                        s += qrow[e] * krow[e];
-                    }
-                    s *= scale;
+                    let s = kv.k_dot(li, g, j, qrow) * scale;
                     prow[j] = s;
                     if s > maxv {
                         maxv = s;
@@ -1134,10 +1116,7 @@ fn prefill_chunk_naive<A: KvAccess>(
                     if p == 0.0 {
                         continue;
                     }
-                    let vrow = kv.v_row(li, g, j);
-                    for e in 0..dh {
-                        arow[e] += p * vrow[e];
-                    }
+                    kv.v_axpy(li, g, j, p, arow);
                 }
                 // running H2O column sums (normalized by 1/len at finalize)
                 if let Some(h2o) = pass.bundle.h2o_scores.as_mut() {
@@ -1328,7 +1307,7 @@ fn chunk_head_attention<A: KvAccess, S: ScoreSink>(
         while j0 < n_vis {
             let j1 = (j0 + tile).min(n_vis);
             for j in j0..j1 {
-                let s = dot_f(qrow, kv.k_row(li, g, j)) * ha.scale;
+                let s = kv.k_dot(li, g, j, qrow) * ha.scale;
                 prow[j] = s;
                 if s > maxv {
                     maxv = s;
@@ -1349,10 +1328,7 @@ fn chunk_head_attention<A: KvAccess, S: ScoreSink>(
             if p == 0.0 {
                 continue;
             }
-            let vrow = kv.v_row(li, g, j);
-            for e in 0..dh {
-                arow[e] += p * vrow[e];
-            }
+            kv.v_axpy(li, g, j, p, arow);
         }
         sink.row(a, &prow[..n_vis]);
     }
@@ -1499,12 +1475,7 @@ fn lkv_suffix_naive<A: KvAccess>(
                 let mut maxv = f32::NEG_INFINITY;
                 // prompt columns 0..len from the accumulated cache …
                 for j in 0..len {
-                    let krow = kv.k_row(li, g, j);
-                    let mut s = 0.0f32;
-                    for e in 0..dh {
-                        s += qrow[e] * krow[e];
-                    }
-                    s *= scale;
+                    let s = kv.k_dot(li, g, j, qrow) * scale;
                     prompt_p[j] = s;
                     if s > maxv {
                         maxv = s;
@@ -1540,10 +1511,7 @@ fn lkv_suffix_naive<A: KvAccess>(
                     if p == 0.0 {
                         continue;
                     }
-                    let vrow = kv.v_row(li, g, j);
-                    for e in 0..dh {
-                        arow[e] += p * vrow[e];
-                    }
+                    kv.v_axpy(li, g, j, p, arow);
                 }
                 for j in 0..=r {
                     sfx_p[j] *= norm;
@@ -1687,7 +1655,7 @@ fn suffix_head_attention<A: KvAccess>(
         while j0 < len {
             let j1 = (j0 + tile).min(len);
             for j in j0..j1 {
-                let s = dot_f(qrow, kv.k_row(li, g, j)) * ha.scale;
+                let s = kv.k_dot(li, g, j, qrow) * ha.scale;
                 prompt_p[j] = s;
                 if s > maxv {
                     maxv = s;
@@ -1720,10 +1688,7 @@ fn suffix_head_attention<A: KvAccess>(
             if p == 0.0 {
                 continue;
             }
-            let vrow = kv.v_row(li, g, j);
-            for e in 0..dh {
-                arow[e] += p * vrow[e];
-            }
+            kv.v_axpy(li, g, j, p, arow);
         }
         for j in 0..=r {
             sfx_p[j] *= norm;
@@ -1855,12 +1820,7 @@ fn decode_naive<A: KvAccess>(
             let prow = &mut probs.data[(li * nh + h) * c..(li * nh + h + 1) * c];
             let mut maxv = f32::NEG_INFINITY;
             for j in 0..n_live {
-                let krow = kv.k_row(li, g, j);
-                let mut sc = 0.0f32;
-                for e in 0..dh {
-                    sc += qrow[e] * krow[e];
-                }
-                sc *= scale;
+                let sc = kv.k_dot(li, g, j, qrow) * scale;
                 prow[j] = sc;
                 if sc > maxv {
                     maxv = sc;
@@ -1876,10 +1836,7 @@ fn decode_naive<A: KvAccess>(
             for j in 0..n_live {
                 prow[j] *= norm;
                 let p = prow[j];
-                let vrow = kv.v_row(li, g, j);
-                for e in 0..dh {
-                    arow[e] += p * vrow[e];
-                }
+                kv.v_axpy(li, g, j, p, arow);
             }
         }
         linear(&attn, 1, dims.q_dim, &layer.wo.w, None, &mut attn_out);
@@ -1959,7 +1916,7 @@ fn decode_stream<A: KvAccess>(
             while j0 < n_live {
                 let j1 = (j0 + tile).min(n_live);
                 for j in j0..j1 {
-                    let sc = dot_f(qrow, kv.k_row(li, g, j)) * scale;
+                    let sc = kv.k_dot(li, g, j, qrow) * scale;
                     prow[j] = sc;
                     if sc > maxv {
                         maxv = sc;
@@ -1977,10 +1934,7 @@ fn decode_stream<A: KvAccess>(
             for j in 0..n_live {
                 prow[j] *= norm;
                 let p = prow[j];
-                let vrow = kv.v_row(li, g, j);
-                for e in 0..dh {
-                    arow[e] += p * vrow[e];
-                }
+                kv.v_axpy(li, g, j, p, arow);
             }
             sinks[h].row(pos, &prow[..n_live]);
         }
@@ -2845,7 +2799,7 @@ mod tests {
         let dims = KvDims { n_layers: 4, n_kv_heads: 2, head_dim: 16 };
         let mut arena = KvArena::new(8, 16);
         let table: Vec<BlockId> = (0..4u32).map(BlockId).collect();
-        arena.bind(&table, dims.slot_floats());
+        arena.bind(&table, &dims);
         arena.scatter_dense(&dims, &table, 0, &k0, &v0).unwrap();
         let pseqs = vec![PagedDecodeSeq { token: 70, pos: 5, blocks: &table, lens: &lens }];
         let paged_outs = b.decode_batch_paged("lkv-tiny", &mut arena, &pseqs).unwrap();

@@ -69,7 +69,8 @@ use std::time::{Duration, Instant};
 use crate::engine::{ChunkedPrefill, Engine, FinishReason, PrefillOutput, PrefixPlan, RequestStats};
 use crate::eviction::DecisionSummary;
 use crate::kvcache::{
-    manager::bytes_per_slot, CacheManager, MatchKind, OwnerClass, PagedSeqCache, PrefixPin,
+    manager::{bytes_per_slot, bytes_per_slot_dtype},
+    CacheManager, KvDims, KvDtype, MatchKind, OwnerClass, PagedSeqCache, PrefixPin,
     RestoreOutcome, SeqCache,
 };
 use crate::metrics::Metrics;
@@ -130,6 +131,11 @@ pub struct LoopConfig {
     /// lower-priority victims are eligible, so single-priority
     /// workloads never preempt regardless of this flag.
     pub preemption: bool,
+    /// Storage dtype of the paged KV arena (CLI `--kv-dtype`):
+    /// `F32` (the bit-exact oracle, default), `F16`, or `U8` with
+    /// per-(layer, KV-head, block) scale/zero-point. Dense caches
+    /// (`--dense-kv`) stay f32 regardless.
+    pub kv_dtype: KvDtype,
 }
 
 impl Default for LoopConfig {
@@ -147,6 +153,7 @@ impl Default for LoopConfig {
             quota_tokens: 0,
             stall_slo_ms: 0.0,
             preemption: true,
+            kv_dtype: KvDtype::F32,
         }
     }
 }
@@ -249,6 +256,13 @@ pub struct EngineLoop {
     /// In-flight quota tokens per tenant (only tracked with
     /// `quota_tokens > 0`).
     tenant_used: HashMap<u32, usize>,
+    /// Resident bytes of one arena block in the configured `kv_dtype`
+    /// (quantized payload + per-block scale/zero-point for u8).
+    /// Resolved at `run` from the model's KV dims.
+    block_bytes: usize,
+    /// Resident bytes of one dense f32 KV slot (dense caches ignore
+    /// `kv_dtype`).
+    dense_slot_bytes: usize,
 }
 
 impl EngineLoop {
@@ -267,6 +281,8 @@ impl EngineLoop {
             paged: false,
             stall_window: VecDeque::new(),
             tenant_used: HashMap::new(),
+            block_bytes: 0,
+            dense_slot_bytes: 0,
         }
     }
 
@@ -417,8 +433,24 @@ impl EngineLoop {
     pub fn run(mut self) {
         let model = self.engine.cfg.model.clone();
         let m = self.engine.rt.manifest().model(&model).expect("model");
-        let _slot_bytes = bytes_per_slot(m.n_layers, m.n_kv_heads, m.head_dim);
-        let mut mgr = CacheManager::new(self.cfg.kv_pool_slots, self.cfg.kv_block_slots);
+        let dtype = self.cfg.kv_dtype;
+        let dims = KvDims {
+            n_layers: m.n_layers,
+            n_kv_heads: m.n_kv_heads,
+            head_dim: m.head_dim,
+        };
+        self.block_bytes = dtype.block_bytes(&dims, self.cfg.kv_block_slots.max(1));
+        self.dense_slot_bytes = bytes_per_slot(m.n_layers, m.n_kv_heads, m.head_dim);
+        // Admission accounting is slot-denominated; the byte-denominated
+        // capacity gauges must charge dtype-true stored bytes (including
+        // the u8 per-block scale/zero-point overhead), not f32 sizes.
+        let slot_bytes = bytes_per_slot_dtype(m.n_layers, m.n_kv_heads, m.head_dim, dtype);
+        self.metrics.set_gauge("kv_slot_bytes", slot_bytes as f64);
+        let pool_blocks = self.cfg.kv_pool_slots.div_ceil(self.cfg.kv_block_slots.max(1));
+        self.metrics.set_gauge("kv_pool_bytes", (pool_blocks * self.block_bytes) as f64);
+        self.metrics.set_info("kv_cache_info", &[("kv_dtype", dtype.as_str())]);
+        let mut mgr =
+            CacheManager::with_dtype(self.cfg.kv_pool_slots, self.cfg.kv_block_slots, dtype);
         let mut active: Vec<ActiveSeq> = Vec::new();
         let mut preempted: Vec<ActiveSeq> = Vec::new();
         let mut pending: Option<PendingPrefill> = None;
@@ -446,6 +478,12 @@ impl EngineLoop {
                 "backend {} does not support paged KV; \
                  falling back to dense per-sequence caches",
                 self.engine.rt.backend_name()
+            );
+        }
+        if !self.paged && dtype != KvDtype::F32 {
+            log::warn!(
+                "--kv-dtype {dtype} requires paged KV; \
+                 dense per-sequence caches stay f32"
             );
         }
         if self.cfg.prefix_cache {
@@ -1119,6 +1157,7 @@ impl EngineLoop {
             }
             let dims = self.engine.kv_dims(&self.engine.cfg.model)?;
             let src_blocks = pre.blocks;
+            let t_q = Instant::now();
             let res = {
                 let (arena, alloc) = mgr.paged_parts();
                 match &src_blocks {
@@ -1145,6 +1184,23 @@ impl EngineLoop {
                     ),
                 }
             };
+            // Tag the compaction's quantization work when the arena is
+            // low-precision: a paged gather decodes source rows and
+            // re-encodes them against destination block params
+            // (dequant-requantize); a dense prefill output quantizes at
+            // write time. Informational spans — they overlap the
+            // enclosing Eviction span, so they are only recorded when a
+            // low-precision dtype is actually in play (the f32 tiling
+            // invariants in `tests/trace.rs` / `bench_serve` never see
+            // them).
+            if self.cfg.kv_dtype != KvDtype::F32 {
+                let phase = if src_blocks.is_some() {
+                    Phase::Requantize
+                } else {
+                    Phase::Quantize
+                };
+                self.span(req.id, phase, t_q, Instant::now());
+            }
             // Free the prompt's blocks immediately, gather or no gather.
             if let Some(src) = src_blocks {
                 mgr.paged_ctx(req.id).free_blocks(&src);
@@ -1181,6 +1237,11 @@ impl EngineLoop {
         self.metrics.set_gauge("kv_arena_blocks_used", s.arena_blocks as f64);
         self.metrics.set_gauge("kv_arena_bytes", s.arena_bytes as f64);
         self.metrics.set_gauge("kv_arena_peak_bytes", s.arena_peak_bytes as f64);
+        // Stored (dtype-true) vs logical (f32-equivalent) occupancy:
+        // identical for `--kv-dtype f32`, resident ≈ 0.5×/0.26× logical
+        // for f16/u8.
+        self.metrics.set_gauge("kv_arena_bytes_resident", s.arena_bytes as f64);
+        self.metrics.set_gauge("kv_arena_bytes_logical", s.arena_logical_bytes as f64);
         self.metrics.set_gauge("kv_arena_blocks_decode", s.blocks_decode as f64);
         self.metrics.set_gauge("kv_arena_blocks_prefix", s.blocks_prefix as f64);
         self.metrics.set_gauge("kv_arena_blocks_prefill", s.blocks_prefill as f64);
@@ -1241,8 +1302,16 @@ impl EngineLoop {
             .iter()
             .map(|&k| decision.prompt_len.saturating_sub(k))
             .collect();
-        if let ActiveKv::Paged(c) = &cache {
-            stats.peak_arena_blocks = c.allocated_slots().div_ceil(mgr.block_size());
+        match &cache {
+            ActiveKv::Paged(c) => {
+                stats.peak_arena_blocks = c.allocated_slots().div_ceil(mgr.block_size());
+                stats.kv_dtype = mgr.kv_dtype().as_str().to_string();
+                stats.resident_kv_bytes = stats.peak_arena_blocks * self.block_bytes;
+            }
+            ActiveKv::Dense(c) => {
+                stats.kv_dtype = "f32".to_string();
+                stats.resident_kv_bytes = c.cap * self.dense_slot_bytes;
+            }
         }
         self.metrics.observe("ttft_ms", ttft_ms);
         if self.cfg.tenants > 1 {
@@ -1324,6 +1393,10 @@ impl EngineLoop {
         if let ActiveKv::Paged(c) = &seq.cache {
             let blocks = c.allocated_slots().div_ceil(mgr.block_size());
             seq.stats.peak_arena_blocks = seq.stats.peak_arena_blocks.max(blocks);
+            seq.stats.resident_kv_bytes = seq
+                .stats
+                .resident_kv_bytes
+                .max(seq.stats.peak_arena_blocks * self.block_bytes);
         }
         mgr.drop_spilled(seq.id);
         mgr.release(seq.id);

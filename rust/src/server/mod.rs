@@ -12,7 +12,8 @@
 //!                    truncation is observable, not silent — plus a
 //!                    per-request "stats" object: queue_ms, ttft_ms,
 //!                    prefill_chunks, decode_iters, evicted_per_layer,
-//!                    peak_arena_blocks, spills, restores — and an
+//!                    peak_arena_blocks, spills, restores, kv_dtype,
+//!                    resident_kv_bytes — and an
 //!                    "eviction" decision summary: policy, budget,
 //!                    kept/evicted counts, score-quantile digest).
 //!                    The optional inline "policy" object is a

@@ -50,10 +50,19 @@ pub enum Phase {
     Restore,
     /// Completion: final bookkeeping + reply send.
     Finish,
+    /// Write-time quantization into a low-precision KV arena (recorded
+    /// only when `--kv-dtype` is not `f32`). Tiled inside the enclosing
+    /// lifecycle phase, so it is *informational* — excluded from the
+    /// spans-tile-to-wall-time invariant checked by `bench_serve`.
+    Quantize,
+    /// Dequantize→requantize during gather-compaction: kept rows that
+    /// cross block boundaries are decoded to f32 scratch and re-encoded
+    /// against the destination block's scale/zero-point.
+    Requantize,
 }
 
 impl Phase {
-    pub const ALL: [Phase; 8] = [
+    pub const ALL: [Phase; 10] = [
         Phase::Queue,
         Phase::Admission,
         Phase::PrefillChunk,
@@ -62,6 +71,8 @@ impl Phase {
         Phase::Spill,
         Phase::Restore,
         Phase::Finish,
+        Phase::Quantize,
+        Phase::Requantize,
     ];
 
     pub fn as_str(self) -> &'static str {
@@ -74,6 +85,8 @@ impl Phase {
             Phase::Spill => "spill",
             Phase::Restore => "restore",
             Phase::Finish => "finish",
+            Phase::Quantize => "quantize",
+            Phase::Requantize => "dequant-requantize",
         }
     }
 

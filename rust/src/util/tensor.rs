@@ -281,6 +281,32 @@ pub fn gemm_acc(x: &[f32], t: usize, n_in: usize, w: &[f32], n_out: usize, out: 
     }
 }
 
+/// `dot(a, b)` over the common prefix, with four independent
+/// accumulator lanes. This is *the* row-dot of the codebase: the
+/// streaming attention kernels and the KV arena's fused-dequant
+/// accessors both call it, so dense and paged f32 paths run identical
+/// float operations in identical order.
+#[inline(always)]
+pub fn dot4(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len().min(b.len());
+    let m = n & !3;
+    let mut acc = [0.0f32; 4];
+    let mut i = 0;
+    while i < m {
+        acc[0] += a[i] * b[i];
+        acc[1] += a[i + 1] * b[i + 1];
+        acc[2] += a[i + 2] * b[i + 2];
+        acc[3] += a[i + 3] * b[i + 3];
+        i += 4;
+    }
+    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+    while i < n {
+        s += a[i] * b[i];
+        i += 1;
+    }
+    s
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -13,8 +13,10 @@ use std::path::Path;
 
 use lookaheadkv::engine::{Engine, EngineConfig, GenOptions};
 use lookaheadkv::eviction::{EvictionConfig, Method};
+use lookaheadkv::kvcache::{CacheManager, KvDtype, PagedSeqCache};
 use lookaheadkv::model::tokenizer::encode;
 use lookaheadkv::runtime::{Backend, KernelConfig, ReferenceBackend, Runtime, Value};
+use lookaheadkv::util::rng::argmax;
 
 const ALL_METHODS: &[&str] = &[
     "full", "random", "streaming", "snapkv", "pyramidkv", "h2o", "tova", "laq", "speckv",
@@ -222,4 +224,109 @@ fn chunked_offsets_agree_within_and_across_suites() {
     let sel_n = method.select(&cfg, 4, &mono_naive.bundle);
     let sel_s = method.select(&cfg, 4, &mono_stream.bundle);
     assert_eq!(sel_n, sel_s, "eviction selections diverged across kernel suites");
+}
+
+/// Paged prefill → select → gather-compact → greedy paged decode, with
+/// the arena storing KV in `dtype` (the low-precision A/B harness: the
+/// whole pipeline reads KV through the fused-dequant `KvAccess` seam).
+/// Returns (prefill logits, kept slots per layer, greedy token ids).
+fn paged_run(
+    engine: &Engine,
+    dtype: KvDtype,
+    prompt: &[i32],
+    method: &Method,
+    budget: usize,
+    steps: usize,
+) -> (Vec<f32>, Vec<Vec<usize>>, Vec<i32>) {
+    const BLOCK: usize = 16;
+    let model = "lkv-tiny";
+    let n_layers = engine.n_layers(model);
+    let dims = engine.kv_dims(model).expect("dims");
+    let mut mgr = CacheManager::with_dtype(64 * BLOCK, BLOCK, dtype);
+    let out = {
+        let mut ctx = mgr.paged_ctx(1);
+        let mut job = engine
+            .chunked_prefill_begin_paged(prompt, method, 13, None, &mut ctx)
+            .expect("begin paged");
+        let mut n = 0;
+        while !job.step_paged(engine, &mut ctx).expect("paged chunk") {
+            n += 1;
+            assert!(n < 10_000, "paged chunked prefill does not terminate");
+        }
+        job.into_output().expect("output")
+    };
+    let evcfg = EvictionConfig::new(budget);
+    let sel = method.select(&evcfg, n_layers, &out.bundle);
+    let cap = engine
+        .rt
+        .manifest()
+        .decode_cap(model, sel.max_kept() + steps + 1)
+        .expect("decode cap");
+    let blocks = out.blocks.clone().expect("paged prefill must carry its block table");
+    let mut cache = {
+        let (arena, alloc) = mgr.paged_parts();
+        PagedSeqCache::from_arena_selection(
+            arena,
+            alloc,
+            2,
+            dims,
+            &blocks,
+            &sel.per_layer,
+            prompt.len(),
+            cap,
+        )
+        .expect("gather-compaction")
+    };
+    mgr.paged_ctx(1).free_blocks(&blocks);
+    let mut token = argmax(&out.logits) as i32;
+    let mut tokens = vec![token];
+    for _ in 0..steps {
+        let (arena, alloc) = mgr.paged_parts();
+        if cache.headroom() == 0 {
+            assert!(cache.grow(arena, alloc, 2), "grow failed");
+        }
+        let step = {
+            let mut refs = vec![&mut cache];
+            engine.decode_step_batch_paged(model, arena, &mut refs, &[token]).expect("paged decode")
+        };
+        token = argmax(&step[0].logits) as i32;
+        tokens.push(token);
+    }
+    (out.logits, sel.per_layer.clone(), tokens)
+}
+
+/// The f32 arena is the frozen oracle: a `--kv-dtype f32` paged prefill
+/// stays bit-identical to the dense monolithic pass (no tolerance).
+#[test]
+fn dtype_f32_arena_stays_bit_identical_to_dense() {
+    let eng = engine(KernelConfig::streaming(3), "lkv-tiny");
+    let prompt = encode("A7K=Q2Z;lorem;ipsum;dolor;sit;amet;consectetur;A7K=", true, false);
+    let method = Method::SnapKV;
+    let mono = eng.prefill_for_method(&prompt, &method).expect("dense prefill");
+    let (l32, _, _) = paged_run(&eng, KvDtype::F32, &prompt, &method, 16, 4);
+    assert_eq!(l32, mono.logits, "f32 arena prefill logits drifted from the dense oracle");
+}
+
+/// Per-dtype A/B against the f32 oracle: logit drift stays within the
+/// per-dtype bound, and the eviction selections (kept slots per layer)
+/// are **identical** to f32's for every score-driven policy family —
+/// quantization noise must never flip what gets evicted at these
+/// budgets.
+#[test]
+fn dtype_ab_logit_drift_bounded_and_selections_identical() {
+    let eng = engine(KernelConfig::streaming(3), "lkv-tiny");
+    let prompt = encode("A7K=Q2Z;lorem;ipsum;dolor;sit;amet;consectetur;A7K=", true, false);
+    for name in ["h2o", "snapkv", "tova", "lookaheadkv", "predictor"] {
+        let method = Method::parse(name).unwrap_or_else(|| panic!("{name:?} must parse"));
+        let (l32, sel32, _t32) = paged_run(&eng, KvDtype::F32, &prompt, &method, 16, 4);
+        // f16 carries ~11 bits of mantissa: drift is rounding noise.
+        // u8 is per-(layer, head, block) affine: drift is bounded by the
+        // quantization step through one attention readback, far below
+        // anything selection-relevant but not rounding-tight.
+        for (dtype, tol) in [(KvDtype::F16, 5e-3f32), (KvDtype::U8, 0.25)] {
+            let (l, sel, _t) = paged_run(&eng, dtype, &prompt, &method, 16, 4);
+            assert_close_slice(&l, &l32, tol, &format!("{name}/{dtype}: prefill logits"));
+            assert_eq!(sel, sel32, "{name}/{dtype}: eviction selection diverged from f32");
+        }
+    }
 }

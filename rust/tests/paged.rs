@@ -17,7 +17,7 @@ use std::sync::Arc;
 use lookaheadkv::engine::{Engine, EngineConfig, FinishReason};
 use lookaheadkv::eviction::{EvictionConfig, Method, ScoreBundle};
 use lookaheadkv::kvcache::{
-    BlockAllocator, CacheManager, KvArena, PagedSeqCache, SeqCache,
+    BlockAllocator, CacheManager, KvArena, KvDims, KvDtype, PagedSeqCache, SeqCache,
 };
 use lookaheadkv::metrics::Metrics;
 use lookaheadkv::model::tokenizer::encode;
@@ -216,30 +216,29 @@ fn paged_chunked_prefill_matches_dense_for_every_policy() {
     }
 }
 
-/// Drive the full engine loop over `prompts` (alternating SnapKV /
-/// LookaheadKV) and return ordered replies + metrics.
-fn run_loop(
-    prompts: &[String],
+/// Drive the full engine loop over explicit (prompt, method) requests
+/// with an arena storage dtype, returning ordered replies + metrics.
+fn run_loop_with(
+    reqs: &[(Vec<i32>, Method)],
     paged: bool,
     chunk: usize,
     pool_slots: usize,
     budget: usize,
     max_new: usize,
+    dtype: KvDtype,
 ) -> (Vec<Reply>, Arc<Metrics>) {
     let engine = engine();
-    let queue = Arc::new(RequestQueue::new(prompts.len() + 1));
+    let queue = Arc::new(RequestQueue::new(reqs.len() + 1));
     let metrics = Arc::new(Metrics::new());
     let mut receivers = Vec::new();
-    for (i, p) in prompts.iter().enumerate() {
+    for (i, (prompt, method)) in reqs.iter().enumerate() {
         let (tx, rx) = channel();
         receivers.push(rx);
-        let method =
-            if i % 2 == 0 { Method::SnapKV } else { Method::parse("lookaheadkv").unwrap() };
         queue
             .submit(Request {
                 id: i as u64,
-                prompt: encode(p, true, false),
-                method,
+                prompt: prompt.clone(),
+                method: method.clone(),
                 budget,
                 max_new,
                 temperature: 0.0,
@@ -258,6 +257,7 @@ fn run_loop(
         kv_pool_slots: pool_slots,
         kv_block_slots: BLOCK,
         paged_kv: paged,
+        kv_dtype: dtype,
         ..LoopConfig::default()
     };
     EngineLoop::new(engine, cfg, Arc::clone(&queue), Arc::clone(&metrics)).run();
@@ -265,6 +265,28 @@ fn run_loop(
         receivers.into_iter().map(|rx| rx.recv().expect("reply")).collect();
     replies.sort_by_key(|r| r.id);
     (replies, metrics)
+}
+
+/// Drive the full engine loop over `prompts` (alternating SnapKV /
+/// LookaheadKV, f32 arena) and return ordered replies + metrics.
+fn run_loop(
+    prompts: &[String],
+    paged: bool,
+    chunk: usize,
+    pool_slots: usize,
+    budget: usize,
+    max_new: usize,
+) -> (Vec<Reply>, Arc<Metrics>) {
+    let reqs: Vec<(Vec<i32>, Method)> = prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
+            let method =
+                if i % 2 == 0 { Method::SnapKV } else { Method::parse("lookaheadkv").unwrap() };
+            (encode(p, true, false), method)
+        })
+        .collect();
+    run_loop_with(&reqs, paged, chunk, pool_slots, budget, max_new, KvDtype::F32)
 }
 
 /// End to end through the engine loop, chunked and monolithic: the
@@ -350,6 +372,173 @@ fn pool_exhaustion_truncates_observably() {
     assert_eq!(tm.counter("decode_truncated_total"), 1);
     // even the truncated run returns every block
     assert_eq!(tm.gauge("kv_arena_bytes"), Some(0.0));
+}
+
+/// `--kv-dtype u8` end-to-end through the engine loop: for every
+/// parseable policy family (plus the learned predictor), the quantized
+/// arena reproduces the f32 oracle's generation token for token —
+/// chunked and monolithic — and drains without leaking a block. The
+/// replies carry the storage dtype and a dtype-true resident-KV byte
+/// figure that undercuts the f32 run's.
+#[test]
+fn engine_loop_u8_matches_f32_for_every_policy() {
+    let prompt = test_prompt();
+    let names: Vec<&str> = ALL_METHODS.iter().copied().chain(["predictor"]).collect();
+    let reqs: Vec<(Vec<i32>, Method)> = names
+        .iter()
+        .map(|name| {
+            let m = Method::parse(name).unwrap_or_else(|| panic!("{name:?} must parse"));
+            (prompt.clone(), m)
+        })
+        .collect();
+    for chunk in [16usize, 0] {
+        let (oracle, _) = run_loop_with(&reqs, true, chunk, 16 * 1152, 16, 12, KvDtype::F32);
+        let (quant, qm) = run_loop_with(&reqs, true, chunk, 16 * 1152, 16, 12, KvDtype::U8);
+        for ((name, a), b) in names.iter().zip(&oracle).zip(&quant) {
+            assert!(a.error.is_none(), "{name} chunk {chunk} f32 error: {:?}", a.error);
+            assert!(b.error.is_none(), "{name} chunk {chunk} u8 error: {:?}", b.error);
+            assert_eq!(a.text, b.text, "{name} chunk {chunk}: u8 generation diverges from f32");
+            assert_eq!(a.n_tokens, b.n_tokens, "{name} chunk {chunk}: token count differs");
+            assert_eq!(a.kept, b.kept, "{name} chunk {chunk}: kept rows differ");
+            assert_eq!(
+                a.finish_reason, b.finish_reason,
+                "{name} chunk {chunk}: finish reason differs"
+            );
+            assert_eq!(a.stats.kv_dtype, "f32", "{name} chunk {chunk}: oracle dtype");
+            assert_eq!(b.stats.kv_dtype, "u8", "{name} chunk {chunk}: stats dtype");
+            assert!(b.stats.resident_kv_bytes > 0, "{name} chunk {chunk}: resident bytes");
+            assert!(
+                b.stats.resident_kv_bytes < a.stats.resident_kv_bytes,
+                "{name} chunk {chunk}: u8 resident {} must undercut f32 {}",
+                b.stats.resident_kv_bytes,
+                a.stats.resident_kv_bytes
+            );
+        }
+        // quantized pool drains clean: resident and logical both zero
+        assert_eq!(qm.gauge("kv_arena_bytes"), Some(0.0), "chunk {chunk}: u8 bytes leak");
+        assert_eq!(qm.gauge("kv_arena_bytes_resident"), Some(0.0), "chunk {chunk}");
+        assert_eq!(qm.gauge("kv_arena_bytes_logical"), Some(0.0), "chunk {chunk}");
+    }
+}
+
+/// Quantize→dequantize round-trips the per-(layer, KV head, block) u8
+/// scales for adversarial value ranges — all-zero rows, denormal
+/// magnitudes, ordinary data, constant rows with a single huge outlier.
+/// Every decoded element stays within half a quantization step of its
+/// segment's own range (exactly zero error when the segment is flat).
+#[test]
+fn prop_u8_arena_roundtrip_adversarial_ranges() {
+    use lookaheadkv::kvcache::BlockId;
+    use lookaheadkv::util::proptest::{check, Config};
+    check(
+        "u8 arena quantize roundtrip",
+        &Config { cases: 64, max_size: 12, ..Config::new() },
+        |rng, size| {
+            let bs = 1 + rng.below(6);
+            let dims = KvDims {
+                n_layers: 1 + rng.below(3),
+                n_kv_heads: 1 + rng.below(2),
+                head_dim: 1 + rng.below(size.max(1) + 4),
+            };
+            let mut arena = KvArena::with_dtype(2, bs, KvDtype::U8);
+            arena.bind(&[BlockId(0)], &dims);
+            let elems = dims.slot_floats() * bs;
+            let kind = rng.below(4);
+            let mut gen = |i: usize| -> f32 {
+                match kind {
+                    0 => 0.0,
+                    1 => (rng.f32() - 0.5) * 2e-39,
+                    2 => rng.f32() * 8.0 - 4.0,
+                    _ => {
+                        if i == 0 {
+                            1000.0
+                        } else {
+                            0.125
+                        }
+                    }
+                }
+            };
+            let k: Vec<f32> = (0..elems).map(&mut gen).collect();
+            let v: Vec<f32> = (0..elems).map(&mut gen).collect();
+            arena.write_block(BlockId(0), &k, &v);
+            let (dk, dv) = arena.block_kv(BlockId(0)).expect("bound block");
+            let seg_elems = bs * dims.head_dim;
+            for (plane, orig) in [(&dk, &k), (&dv, &v)] {
+                for seg in 0..dims.n_layers * dims.n_kv_heads {
+                    let s = &orig[seg * seg_elems..(seg + 1) * seg_elems];
+                    let d = &plane[seg * seg_elems..(seg + 1) * seg_elems];
+                    let lo = s.iter().copied().fold(f32::INFINITY, f32::min);
+                    let hi = s.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+                    let step = if hi > lo { (hi - lo) / 255.0 } else { 0.0 };
+                    for (x, y) in s.iter().zip(d) {
+                        assert!(
+                            (x - y).abs() <= step * 0.5001 + 1e-30,
+                            "kind {kind} seg {seg}: {x} decoded as {y} (step {step})"
+                        );
+                    }
+                }
+            }
+            arena.release(&[BlockId(0)]);
+            assert_eq!(arena.bytes_in_use(), 0);
+        },
+    );
+}
+
+/// Gather-compaction never reads freed source blocks: once the prompt's
+/// block table is released back to the pool, `from_arena_selection`
+/// fails cleanly (no stale-data reuse) and unwinds its own destination
+/// allocation — nothing leaks from the failed attempt.
+#[test]
+fn arena_selection_never_reads_freed_blocks() {
+    let engine = engine();
+    let prompt = test_prompt();
+    let n_layers = engine.n_layers(MODEL);
+    let dims = engine.kv_dims(MODEL).expect("dims");
+    let method = Method::SnapKV;
+    let mut mgr = CacheManager::with_dtype(256 * BLOCK, BLOCK, KvDtype::U8);
+    let out = {
+        let mut ctx = mgr.paged_ctx(1);
+        let mut job = engine
+            .chunked_prefill_begin_paged(&prompt, &method, 13, None, &mut ctx)
+            .expect("begin paged");
+        let mut steps = 0;
+        while !job.step_paged(&engine, &mut ctx).expect("paged step") {
+            steps += 1;
+            assert!(steps < 10_000, "paged chunked prefill does not terminate");
+        }
+        job.into_output().expect("output")
+    };
+    let evcfg = EvictionConfig::new(16);
+    let sel = method.select(&evcfg, n_layers, &out.bundle);
+    let cap = engine.rt.manifest().decode_cap(MODEL, sel.max_kept() + 4).expect("decode cap");
+    let blocks = out.blocks.expect("paged output must carry the prompt block table");
+    // Free the prompt blocks FIRST: the gather must now refuse to run.
+    mgr.paged_ctx(1).free_blocks(&blocks);
+    let res = {
+        let (arena, alloc) = mgr.paged_parts();
+        PagedSeqCache::from_arena_selection(
+            arena,
+            alloc,
+            2,
+            dims,
+            &blocks,
+            &sel.per_layer,
+            prompt.len(),
+            cap,
+        )
+    };
+    match res {
+        Ok(_) => panic!("gather-compaction must not read freed source blocks"),
+        Err(e) => {
+            let msg = format!("{e:#}");
+            assert!(msg.contains("unbound"), "unexpected error: {msg}");
+        }
+    }
+    // The failed attempt unwound its destination allocation entirely.
+    let s = mgr.stats();
+    assert_eq!(s.used_blocks, 0, "failed compaction leaked allocator blocks");
+    assert_eq!(s.arena_bytes, 0, "failed compaction leaked arena bytes");
+    assert_eq!(s.arena_logical_bytes, 0, "failed compaction leaked logical bytes");
 }
 
 /// A dense-loop sequence hitting its cap reports `kv_exhausted` too

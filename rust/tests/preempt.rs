@@ -17,7 +17,7 @@ use std::sync::Arc;
 
 use lookaheadkv::engine::{Engine, EngineConfig, FinishReason};
 use lookaheadkv::eviction::Method;
-use lookaheadkv::kvcache::{BlockAllocator, KvArena};
+use lookaheadkv::kvcache::{BlockAllocator, KvArena, KvDims, KvDtype};
 use lookaheadkv::metrics::Metrics;
 use lookaheadkv::model::tokenizer::encode;
 use lookaheadkv::runtime::artifacts::default_artifacts_dir;
@@ -46,6 +46,18 @@ fn run_pair(
     preemption: bool,
     budget: usize,
     max_new: usize,
+) -> (Vec<Reply>, Arc<Metrics>) {
+    run_pair_dtype(method, pool_slots, preemption, budget, max_new, KvDtype::F32)
+}
+
+/// [`run_pair`] with an explicit arena storage dtype.
+fn run_pair_dtype(
+    method: &str,
+    pool_slots: usize,
+    preemption: bool,
+    budget: usize,
+    max_new: usize,
+    dtype: KvDtype,
 ) -> (Vec<Reply>, Arc<Metrics>) {
     let engine = engine();
     let queue = Arc::new(RequestQueue::new(4));
@@ -79,6 +91,7 @@ fn run_pair(
         paged_kv: true,
         preemption,
         tenants: 2,
+        kv_dtype: dtype,
         ..LoopConfig::default()
     };
     EngineLoop::new(engine, cfg, Arc::clone(&queue), Arc::clone(&metrics)).run();
@@ -210,9 +223,10 @@ fn over_quota_request_is_rejected_not_queued() {
 }
 
 /// Arena-level spill/restore property: over random pool shapes, block
-/// sizes, buffer widths and id-permuting interlopers, a spill → realloc
-/// → restore round trip is bit-identical and byte accounting returns to
-/// exactly its pre-spill state.
+/// sizes, head dims, storage dtypes and id-permuting interlopers, a
+/// spill → realloc → restore round trip reproduces the *stored*
+/// representation bit for bit (u8 codes and quant params included) and
+/// byte accounting returns to exactly its pre-spill state.
 #[test]
 fn arena_spill_restore_roundtrip_property() {
     check(
@@ -221,22 +235,21 @@ fn arena_spill_restore_roundtrip_property() {
         |rng, size| {
             let bs = 1 + rng.below(6);
             let nb = 3 + rng.below(size.max(1) + 4);
-            let sf = 1 + rng.below(12);
-            let mut arena = KvArena::new(nb, bs);
+            let dims = KvDims { n_layers: 1, n_kv_heads: 1, head_dim: 1 + rng.below(12) };
+            let dtype = [KvDtype::F32, KvDtype::F16, KvDtype::U8][rng.below(3)];
+            let mut arena = KvArena::with_dtype(nb, bs, dtype);
             let mut alloc = BlockAllocator::new(nb * bs, bs);
 
             // Owner 1: the spill victim, with a random KV pattern.
             let na = 1 + rng.below(nb - 1);
             let ids = alloc.alloc(1, na * bs).expect("victim alloc");
-            arena.bind(&ids, sf);
+            arena.bind(&ids, &dims);
             let mut bufs = arena.take(&ids).expect("take for fill");
             for b in &mut bufs {
-                for x in b.k.iter_mut() {
-                    *x = rng.f32();
-                }
-                for x in b.v.iter_mut() {
-                    *x = rng.f32();
-                }
+                let k: Vec<f32> = (0..b.k.len()).map(|_| rng.f32()).collect();
+                b.k.encode_block(&k);
+                let v: Vec<f32> = (0..b.v.len()).map(|_| rng.f32()).collect();
+                b.v.encode_block(&v);
             }
             let expected = bufs.clone();
             arena.put(&ids, bufs);
@@ -246,13 +259,13 @@ fn arena_spill_restore_roundtrip_property() {
             let n2 = rng.below(spare + 1);
             let other = if n2 > 0 {
                 let ids2 = alloc.alloc(2, n2 * bs).expect("bystander alloc");
-                arena.bind(&ids2, sf);
+                arena.bind(&ids2, &dims);
                 ids2
             } else {
                 Vec::new()
             };
             let bytes_before = arena.bytes_in_use();
-            let victim_bytes = na * bs * sf * 2 * 4;
+            let victim_bytes = na * dtype.block_bytes(&dims, bs);
 
             let spilled = arena.spill(&ids).expect("spill");
             alloc.free(&ids);
@@ -262,7 +275,8 @@ fn arena_spill_restore_roundtrip_property() {
             // An interloper grabs some of the freed ids so the restore
             // lands on a (generally) different block table.
             let n3 = rng.below(nb - n2 - na + 1);
-            let interloper = if n3 > 0 { alloc.alloc(3, n3 * bs).expect("interloper") } else { Vec::new() };
+            let interloper =
+                if n3 > 0 { alloc.alloc(3, n3 * bs).expect("interloper") } else { Vec::new() };
             // Spilling allocator-only (unbound) blocks must fail cleanly.
             if !interloper.is_empty() {
                 assert!(arena.spill(&interloper).is_err());
@@ -272,9 +286,9 @@ fn arena_spill_restore_roundtrip_property() {
             arena.restore(&ids_new, spilled);
             assert_eq!(arena.bytes_in_use(), bytes_before);
             for (id, exp) in ids_new.iter().zip(&expected) {
-                let (k, v) = arena.block_kv(*id).expect("restored block bound");
-                assert_eq!(k, &exp.k[..], "K must survive spill/restore bit-identically");
-                assert_eq!(v, &exp.v[..], "V must survive spill/restore bit-identically");
+                let blk = arena.block_raw(*id).expect("restored block bound");
+                assert_eq!(blk.k, exp.k, "stored K must survive spill/restore bit-identically");
+                assert_eq!(blk.v, exp.v, "stored V must survive spill/restore bit-identically");
             }
 
             // Full teardown leaves nothing resident.
@@ -284,7 +298,51 @@ fn arena_spill_restore_roundtrip_property() {
             alloc.free(&other);
             alloc.free(&interloper);
             assert_eq!(arena.bytes_in_use(), 0);
+            assert_eq!(arena.logical_bytes_in_use(), 0);
             assert_eq!(alloc.used_blocks(), 0);
         },
     );
+}
+
+/// A u8 sequence preempted to the host spill store and restored
+/// generates exactly the text of a never-spilled u8 run: spill moves
+/// the quantized representation verbatim, so preemption and
+/// quantization compose without requantization drift.
+#[test]
+fn u8_spill_restore_reproduces_unspilled_generation() {
+    for name in ["snapkv", "lookaheadkv"] {
+        // Never-spilled u8 reference under an ample pool.
+        let (full, fm) = run_pair_dtype(name, 16 * 1152, true, 16, 16, KvDtype::U8);
+        assert!(full[0].error.is_none(), "{name}: ample high errored: {:?}", full[0].error);
+        assert!(full[1].error.is_none(), "{name}: ample low errored: {:?}", full[1].error);
+        assert_eq!(fm.counter("preemptions_total"), 0, "{name}: ample pool must not preempt");
+        let kept = full[0].kept;
+        let blocks = kept.div_ceil(BLOCK).max(1);
+
+        // Exactly two compacted caches fit; the first grow must preempt.
+        let (tiny, tm) = run_pair_dtype(name, 2 * blocks * BLOCK, true, 16, 16, KvDtype::U8);
+        for (a, b) in full.iter().zip(tiny.iter()) {
+            assert!(b.error.is_none(), "{name} req {}: {:?}", b.id, b.error);
+            assert_eq!(
+                a.text, b.text,
+                "{name} req {}: u8 generation differs under preemption",
+                a.id
+            );
+            assert_eq!(a.n_tokens, b.n_tokens, "{name} req {}: token count differs", a.id);
+            assert_eq!(b.stats.kv_dtype, "u8", "{name} req {}: stats dtype", b.id);
+        }
+        assert_eq!(tm.counter("decode_truncated_total"), 0, "{name}: truncated under preemption");
+        let writes = full[0].n_tokens.saturating_sub(1);
+        let slack = blocks * BLOCK - kept;
+        if writes > slack {
+            assert!(tm.counter("preemptions_total") >= 1, "{name}: expected a preemption");
+            assert!(tm.counter("spill_blocks_total") >= 1, "{name}: expected spilled blocks");
+        } else {
+            eprintln!("{name}: no growth (writes {writes} <= slack {slack}); spill not exercised");
+        }
+        // The quantized spill tier drains completely.
+        assert_eq!(tm.gauge("kv_spill_seqs"), Some(0.0), "{name}: spill-tier seq leak");
+        assert_eq!(tm.gauge("kv_spill_bytes"), Some(0.0), "{name}: spill-tier byte leak");
+        assert_eq!(tm.gauge("kv_arena_bytes"), Some(0.0), "{name}: arena leak");
+    }
 }

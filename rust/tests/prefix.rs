@@ -423,6 +423,15 @@ fn metrics_http_roundtrip_exposes_cache_stats() {
     // arena occupancy: bytes + per-owner block breakdown; with requests
     // drained, only the prefix tree still holds resident KV
     assert!(gauges.req("kv_arena_bytes").as_f64().unwrap_or(0.0) > 0.0);
+    // dtype-aware occupancy: resident (stored representation) vs logical
+    // (f32-equivalent) gauges; at the default f32 dtype the two agree
+    let resident = gauges.req("kv_arena_bytes_resident").as_f64().expect("resident gauge");
+    let logical = gauges.req("kv_arena_bytes_logical").as_f64().expect("logical gauge");
+    assert!(resident > 0.0, "prefix tree must hold resident KV bytes");
+    assert_eq!(resident, logical, "f32 arena: resident bytes must equal logical bytes");
+    // the arena storage dtype is exported as an info-style gauge
+    let info = j.req("info").req("kv_cache_info");
+    assert_eq!(info.req("kv_dtype").as_str(), Some("f32"));
     assert!(
         gauges.req("kv_arena_blocks_prefix").as_f64().unwrap_or(0.0) > 0.0,
         "tree blocks must show up in the per-owner breakdown"
@@ -519,6 +528,12 @@ fn prometheus_exposition_http_roundtrip_agrees_with_json() {
     );
     assert!(prom.contains("# TYPE prefills counter"), "missing counter TYPE line:\n{prom}");
     assert!(prom.contains("# TYPE ttft_ms histogram"), "missing histogram TYPE line");
+    // the KV storage dtype rides along as a labeled constant-1 info
+    // sample and survives the exposition lint above
+    assert!(
+        prom.contains("kv_cache_info{kv_dtype=\"f32\"} 1"),
+        "kv_dtype info sample missing:\n{prom}"
+    );
 
     queue.close();
     engine_thread.join().expect("engine thread");
