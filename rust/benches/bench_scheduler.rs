@@ -42,6 +42,8 @@ fn main() {
                 tenant: 0,
                 priority: Priority::Normal,
                 submitted_at: std::time::Instant::now(),
+                deadline_ms: 0,
+                cancel: Arc::new(std::sync::atomic::AtomicBool::new(false)),
                 reply: tx,
             })
             .unwrap();
@@ -193,6 +195,8 @@ fn run_mixed_once(shorts: &[Vec<i32>], long_prompt: &[i32], chunk: usize, metric
                 tenant: 0,
                 priority: Priority::Normal,
                 submitted_at: std::time::Instant::now(),
+                deadline_ms: 0,
+                cancel: Arc::new(std::sync::atomic::AtomicBool::new(false)),
                 reply: tx,
             })
             .expect("submit short");
@@ -211,6 +215,8 @@ fn run_mixed_once(shorts: &[Vec<i32>], long_prompt: &[i32], chunk: usize, metric
             tenant: 0,
             priority: Priority::Normal,
             submitted_at: std::time::Instant::now(),
+            deadline_ms: 0,
+            cancel: Arc::new(std::sync::atomic::AtomicBool::new(false)),
             reply: tx,
         })
         .expect("submit long");
@@ -243,6 +249,8 @@ fn run_loop_once(prompts: &[Vec<i32>], batched: bool, metrics: &Arc<Metrics>) {
                 tenant: 0,
                 priority: Priority::Normal,
                 submitted_at: std::time::Instant::now(),
+                deadline_ms: 0,
+                cancel: Arc::new(std::sync::atomic::AtomicBool::new(false)),
                 reply: tx,
             })
             .expect("submit");

@@ -26,6 +26,7 @@ use std::time::{Duration, Instant};
 
 use lookaheadkv::engine::{Engine, EngineConfig, FinishReason};
 use lookaheadkv::eviction::Method;
+use lookaheadkv::faults::FaultPlan;
 use lookaheadkv::metrics::Metrics;
 use lookaheadkv::model::tokenizer::encode;
 use lookaheadkv::runtime::artifacts::default_artifacts_dir;
@@ -55,6 +56,7 @@ struct RunStats {
     high_kv_exhausted: usize,
     high_errors: usize,
     deferred: u64,
+    engine_errors: u64,
 }
 
 fn p99(mut xs: Vec<f64>) -> f64 {
@@ -98,7 +100,11 @@ fn assert_spans_tile(tracer: &Tracer, totals: &[(u64, f64)]) {
 /// plays the open-loop client (sleeps to each arrival offset, submits,
 /// then collects every reply). Returns tail latencies + counters plus
 /// the run's span tracer (already tiling-checked against every reply).
-fn run_trace(suite: &OpenLoopSuite, preemption: bool) -> (RunStats, Arc<Tracer>) {
+fn run_trace(
+    suite: &OpenLoopSuite,
+    preemption: bool,
+    faults: Option<Arc<FaultPlan>>,
+) -> (RunStats, Arc<Tracer>) {
     let engine =
         Engine::new(&default_artifacts_dir(), EngineConfig::new("lkv-tiny")).expect("engine");
     let queue = Arc::new(RequestQueue::new(suite.arrivals.len() + 1));
@@ -110,6 +116,7 @@ fn run_trace(suite: &OpenLoopSuite, preemption: bool) -> (RunStats, Arc<Tracer>)
         paged_kv: true,
         preemption,
         tenants: TENANTS,
+        faults: faults.clone(),
         ..LoopConfig::default()
     };
     let tracer = Arc::new(Tracer::new());
@@ -150,6 +157,8 @@ fn run_trace(suite: &OpenLoopSuite, preemption: bool) -> (RunStats, Arc<Tracer>)
                 tenant: a.tenant,
                 priority,
                 submitted_at: Instant::now(),
+                deadline_ms: 0,
+                cancel: Arc::new(std::sync::atomic::AtomicBool::new(false)),
                 reply: tx.clone(),
             })
             .expect("submit");
@@ -166,6 +175,14 @@ fn run_trace(suite: &OpenLoopSuite, preemption: bool) -> (RunStats, Arc<Tracer>)
         let recv_at = Instant::now();
         let (tenant, submitted) = info[&reply.id];
         totals.push((reply.id, reply.total_ms));
+        // On faulted runs, tail stats cover only the requests the plan
+        // never touches — the row measures fault *containment*, and an
+        // injected error is not a latency sample.
+        if let Some(plan) = &faults {
+            if plan.touches(reply.id, 400) {
+                continue;
+            }
+        }
         if reply.error.is_some() {
             if tenant == 0 {
                 high_errors += 1;
@@ -185,7 +202,12 @@ fn run_trace(suite: &OpenLoopSuite, preemption: bool) -> (RunStats, Arc<Tracer>)
         }
     }
     handle.join().expect("engine loop thread");
-    assert_spans_tile(&tracer, &totals);
+    // Fault-terminated requests end in Error/Cancel spans whose sum
+    // intentionally excludes work the fault discarded; the tiling
+    // invariant is a clean-run property.
+    if faults.is_none() {
+        assert_spans_tile(&tracer, &totals);
+    }
 
     let stats = RunStats {
         ttft_p99_all: p99(ttft_all),
@@ -198,6 +220,7 @@ fn run_trace(suite: &OpenLoopSuite, preemption: bool) -> (RunStats, Arc<Tracer>)
         high_kv_exhausted,
         high_errors,
         deferred: metrics.counter("admission_deferred_total"),
+        engine_errors: metrics.counter("engine_errors_total"),
     };
     (stats, tracer)
 }
@@ -236,8 +259,8 @@ fn main() {
     let mut base_runs = Vec::new();
     let mut last_tracer = None;
     for r in 0..runs {
-        let (s, tracer) = run_trace(&suite, true);
-        let (b, _) = run_trace(&suite, false);
+        let (s, tracer) = run_trace(&suite, true, None);
+        let (b, _) = run_trace(&suite, false, None);
         last_tracer = Some(tracer);
         println!(
             "run {r}: spill high p99 {:.2} ms (preempt {} spill {} restore {} trunc {}) | \
@@ -247,6 +270,24 @@ fn main() {
         );
         spill_runs.push(s);
         base_runs.push(b);
+    }
+
+    // Faulted replay: ~5% of requests take a permanent injected backend
+    // fault (every=20 over 28 arrivals), plus a little injected decode
+    // jitter. The recorded tail is the p99 TTFT of the *unaffected*
+    // requests — the ungated robustness signal that injected failures
+    // stay contained instead of stalling their neighbors.
+    let fault_plan = Arc::new(
+        FaultPlan::parse("seed=11;backend:every=20;delay:rate=0.05,ms=2").expect("fault plan"),
+    );
+    let mut fault_runs = Vec::new();
+    for r in 0..runs.min(2) {
+        let (f, _) = run_trace(&suite, true, Some(Arc::clone(&fault_plan)));
+        println!(
+            "faulted run {r}: unaffected p99 {:.2} ms ({} injected errors)",
+            f.ttft_p99_all, f.engine_errors
+        );
+        fault_runs.push(f);
     }
 
     // Acceptance: the high-priority tenant never gets truncated or
@@ -311,6 +352,17 @@ fn main() {
         }
         .with_extra("baseline_truncated_total", sum_c(|r| r.truncated, &base_runs))
         .with_extra("baseline_preemptions_total", sum_c(|r| r.preemptions, &base_runs)),
+        // New row: absent from older baselines, so the CI gate treats it
+        // as informational until a fresh baseline is recorded.
+        BenchResult {
+            name: "serve/faulted/ttft_p99_unaffected_ms".into(),
+            iters: fault_runs.len(),
+            ms: summarize(&col(|r| r.ttft_p99_all, &fault_runs)),
+            extras: Vec::new(),
+        }
+        .with_extra("faulted_engine_errors_total", sum_c(|r| r.engine_errors, &fault_runs))
+        .with_extra("faulted_preemptions_total", sum_c(|r| r.preemptions, &fault_runs))
+        .with_extra("faulted_restores_total", sum_c(|r| r.restores, &fault_runs)),
     ];
     for r in &results {
         println!(

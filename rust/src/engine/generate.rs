@@ -29,6 +29,12 @@ pub enum FinishReason {
     Stopped,
     /// The request failed; see the reply's `error`.
     Error,
+    /// The request's `deadline_ms` elapsed before generation finished;
+    /// the reply carries whatever tokens were produced in time.
+    Deadline,
+    /// The client disconnected (or cancelled) mid-generation; the
+    /// engine freed the sequence's resources immediately.
+    Cancelled,
 }
 
 impl FinishReason {
@@ -39,6 +45,8 @@ impl FinishReason {
             FinishReason::KvExhausted => "kv_exhausted",
             FinishReason::Stopped => "stopped",
             FinishReason::Error => "error",
+            FinishReason::Deadline => "deadline",
+            FinishReason::Cancelled => "cancelled",
         }
     }
 }

@@ -1,0 +1,384 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! A [`FaultPlan`] is parsed from a compact grammar (CLI `--fault-plan`
+//! or env `LKV_FAULTS`) and consulted at the real failure seams of the
+//! engine: backend compute, arena allocation, spill/restore I/O,
+//! decode latency, and client disconnect. Decisions are a **pure
+//! function** of `(seed, site, request-ordinal, attempt)` — no
+//! interior mutability, no clock, no shared RNG — so a faulted run
+//! replays exactly, and a test can recompute which requests a plan
+//! touches without running the engine.
+//!
+//! Grammar (`;`-separated segments, first may set the seed):
+//!
+//! ```text
+//! seed=7;backend:rate=0.05;restore:rate=0.5;delay:every=3,ms=8;disconnect:ids=2+5
+//! ```
+//!
+//! Sites: `backend` (compute error), `alloc` (KV arena allocation
+//! failure), `spill` (spill-out I/O error), `restore` (spill-in I/O
+//! error), `delay` (injected decode latency; takes `ms=`),
+//! `disconnect` (mid-stream client disconnect → cancellation).
+//!
+//! Selectors (per site; exactly one of `rate`/`every`/`ids`):
+//! * `rate=P` — fires when `hash(seed, site, ordinal, attempt) < P`.
+//!   Because the *attempt* index participates, rate faults are
+//!   **transient**: a retry re-rolls, modelling flaky I/O.
+//! * `every=N` — fires when `ordinal % N == 0`, on every attempt
+//!   (**permanent** for that request).
+//! * `ids=A+B+C` — fires for exactly those request ids, on every
+//!   attempt (**permanent**; the precision tool for regression tests).
+//!
+//! When no plan is configured the engine holds no `FaultPlan` at all
+//! (an `Option` that is `None`), so the disabled cost is one pointer
+//! null-check per seam.
+
+use std::fmt;
+
+/// Injection seam. The ordinal passed to [`FaultPlan::fires`] is the
+/// request id; the attempt index distinguishes retries (restore),
+/// chunks (backend prefill) or decode iterations (backend decode).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultSite {
+    /// Backend compute error (prefill chunk or decode step).
+    Backend,
+    /// KV arena / block-allocator allocation failure.
+    Alloc,
+    /// Spill-to-host write error.
+    Spill,
+    /// Restore-from-host read error.
+    Restore,
+    /// Injected decode latency (`ms=` milliseconds per fired step).
+    Delay,
+    /// Mid-stream client disconnect (engine sees a cancellation).
+    Disconnect,
+}
+
+impl FaultSite {
+    pub const ALL: [FaultSite; 6] = [
+        FaultSite::Backend,
+        FaultSite::Alloc,
+        FaultSite::Spill,
+        FaultSite::Restore,
+        FaultSite::Delay,
+        FaultSite::Disconnect,
+    ];
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FaultSite::Backend => "backend",
+            FaultSite::Alloc => "alloc",
+            FaultSite::Spill => "spill",
+            FaultSite::Restore => "restore",
+            FaultSite::Delay => "delay",
+            FaultSite::Disconnect => "disconnect",
+        }
+    }
+
+    fn parse(s: &str) -> Option<FaultSite> {
+        FaultSite::ALL.iter().copied().find(|site| site.as_str() == s)
+    }
+
+    /// Distinct per-site salt so the same (ordinal, attempt) rolls
+    /// independently at every seam.
+    fn tag(&self) -> u64 {
+        0xF001_0000_0000_0000 ^ ((*self as u64 + 1) << 32)
+    }
+}
+
+impl fmt::Display for FaultSite {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// How one site decides whether to fire.
+#[derive(Debug, Clone, PartialEq)]
+enum Selector {
+    /// Pseudo-random per (ordinal, attempt): transient.
+    Rate(f64),
+    /// `ordinal % n == 0`, every attempt: permanent.
+    Every(u64),
+    /// Exact request ids, every attempt: permanent.
+    Ids(Vec<u64>),
+}
+
+/// Parsed per-site rule.
+#[derive(Debug, Clone, PartialEq)]
+struct SiteRule {
+    selector: Selector,
+    /// Milliseconds for `delay`; ignored by other sites.
+    ms: u64,
+}
+
+/// A seeded, deterministic fault schedule. See the module docs for
+/// the grammar; construct via [`FaultPlan::parse`] or
+/// [`FaultPlan::from_env`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    seed: u64,
+    rules: [Option<SiteRule>; 6],
+    /// The source string, kept for logs and soak summaries.
+    source: String,
+}
+
+/// SplitMix64 finalizer — the same mixer as `util::rng`, reproduced
+/// here so fault decisions never share state with any sampler RNG.
+fn mix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+impl FaultPlan {
+    /// Parse the `seed=N;site:k=v,...` grammar. Errors are meant for
+    /// humans (they reach `--fault-plan` CLI validation).
+    pub fn parse(s: &str) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan {
+            seed: 0,
+            rules: [None, None, None, None, None, None],
+            source: s.trim().to_string(),
+        };
+        let mut any = false;
+        for seg in s.split(';').map(str::trim).filter(|seg| !seg.is_empty()) {
+            if let Some(v) = seg.strip_prefix("seed=") {
+                plan.seed =
+                    v.trim().parse::<u64>().map_err(|_| format!("bad seed `{v}`"))?;
+                continue;
+            }
+            let (site_s, body) = seg
+                .split_once(':')
+                .ok_or_else(|| format!("segment `{seg}` is not `site:k=v,...`"))?;
+            let site = FaultSite::parse(site_s.trim())
+                .ok_or_else(|| format!("unknown fault site `{}`", site_s.trim()))?;
+            let mut selector: Option<Selector> = None;
+            let mut ms = 0u64;
+            for kv in body.split(',').map(str::trim).filter(|kv| !kv.is_empty()) {
+                let (k, v) = kv
+                    .split_once('=')
+                    .ok_or_else(|| format!("`{kv}` in `{seg}` is not k=v"))?;
+                let prev = selector.is_some();
+                match k.trim() {
+                    "rate" => {
+                        let p = v
+                            .trim()
+                            .parse::<f64>()
+                            .ok()
+                            .filter(|p| (0.0..=1.0).contains(p))
+                            .ok_or_else(|| format!("rate `{v}` not in [0,1]"))?;
+                        selector = Some(Selector::Rate(p));
+                    }
+                    "every" => {
+                        let n = v
+                            .trim()
+                            .parse::<u64>()
+                            .ok()
+                            .filter(|n| *n > 0)
+                            .ok_or_else(|| format!("every `{v}` must be a positive integer"))?;
+                        selector = Some(Selector::Every(n));
+                    }
+                    "ids" => {
+                        let ids = v
+                            .split('+')
+                            .map(|id| id.trim().parse::<u64>())
+                            .collect::<Result<Vec<u64>, _>>()
+                            .map_err(|_| format!("ids `{v}` must be `A+B+C` integers"))?;
+                        selector = Some(Selector::Ids(ids));
+                    }
+                    "ms" => {
+                        ms = v
+                            .trim()
+                            .parse::<u64>()
+                            .map_err(|_| format!("ms `{v}` must be an integer"))?;
+                    }
+                    other => return Err(format!("unknown key `{other}` in `{seg}`")),
+                }
+                if prev && selector.is_some() && k.trim() != "ms" {
+                    return Err(format!("site `{site_s}` has more than one selector"));
+                }
+            }
+            let selector = selector
+                .ok_or_else(|| format!("site `{site_s}` needs one of rate=/every=/ids="))?;
+            if site == FaultSite::Delay && ms == 0 {
+                return Err("delay site needs ms=<milliseconds>".to_string());
+            }
+            if plan.rules[site as usize].is_some() {
+                return Err(format!("site `{site_s}` configured twice"));
+            }
+            plan.rules[site as usize] = Some(SiteRule { selector, ms });
+            any = true;
+        }
+        if !any {
+            return Err("fault plan configures no sites".to_string());
+        }
+        Ok(plan)
+    }
+
+    /// Plan from `LKV_FAULTS`, if set. Invalid plans are an error (a
+    /// chaos run silently running fault-free is worse than failing).
+    pub fn from_env() -> Result<Option<FaultPlan>, String> {
+        match std::env::var("LKV_FAULTS") {
+            Ok(s) if !s.trim().is_empty() => FaultPlan::parse(&s).map(Some),
+            _ => Ok(None),
+        }
+    }
+
+    /// The plan string this was parsed from.
+    pub fn source(&self) -> &str {
+        &self.source
+    }
+
+    /// Does `site` fire for (`ordinal`, `attempt`)? Pure — same plan,
+    /// same arguments, same answer, forever.
+    pub fn fires(&self, site: FaultSite, ordinal: u64, attempt: u64) -> bool {
+        let Some(rule) = &self.rules[site as usize] else { return false };
+        match &rule.selector {
+            Selector::Rate(p) => {
+                let h = mix(mix(mix(self.seed ^ site.tag()) ^ ordinal) ^ attempt);
+                // 53 high bits → uniform [0,1).
+                let u = (h >> 11) as f64 / (1u64 << 53) as f64;
+                u < *p
+            }
+            Selector::Every(n) => ordinal % n == 0,
+            Selector::Ids(ids) => ids.contains(&ordinal),
+        }
+    }
+
+    /// Injected latency for a fired `delay` site (0 when not fired).
+    pub fn delay_ms(&self, ordinal: u64, attempt: u64) -> u64 {
+        if self.fires(FaultSite::Delay, ordinal, attempt) {
+            self.rules[FaultSite::Delay as usize].as_ref().map_or(0, |r| r.ms)
+        } else {
+            0
+        }
+    }
+
+    /// True when `site` can ever fire under this plan (a rule exists).
+    pub fn targets(&self, site: FaultSite) -> bool {
+        self.rules[site as usize].is_some()
+    }
+
+    /// Would *any* site fire for this request id on *any* attempt up
+    /// to `max_attempts`? Used by the chaos soak to split requests
+    /// into fault-touched and must-be-identical sets without running
+    /// the engine. `delay` is excluded: injected latency perturbs
+    /// timing, never tokens.
+    pub fn touches(&self, ordinal: u64, max_attempts: u64) -> bool {
+        FaultSite::ALL
+            .iter()
+            .filter(|site| **site != FaultSite::Delay)
+            .any(|site| (0..max_attempts).any(|a| self.fires(*site, ordinal, a)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_grammar() {
+        let p = FaultPlan::parse(
+            "seed=7;backend:rate=0.25;alloc:every=4;restore:rate=0.5;\
+             delay:every=3,ms=8;disconnect:ids=2+5",
+        )
+        .expect("parse");
+        assert!(p.targets(FaultSite::Backend));
+        assert!(p.targets(FaultSite::Alloc));
+        assert!(p.targets(FaultSite::Restore));
+        assert!(p.targets(FaultSite::Delay));
+        assert!(p.targets(FaultSite::Disconnect));
+        assert!(!p.targets(FaultSite::Spill));
+        // every=4 is ordinal arithmetic, independent of seed/attempt.
+        assert!(p.fires(FaultSite::Alloc, 0, 0));
+        assert!(p.fires(FaultSite::Alloc, 8, 3));
+        assert!(!p.fires(FaultSite::Alloc, 5, 0));
+        // ids is exact and permanent across attempts.
+        assert!(p.fires(FaultSite::Disconnect, 2, 0));
+        assert!(p.fires(FaultSite::Disconnect, 5, 9));
+        assert!(!p.fires(FaultSite::Disconnect, 3, 0));
+        // delay carries its ms only when fired.
+        assert_eq!(p.delay_ms(3, 0), 8);
+        assert_eq!(p.delay_ms(4, 0), 0);
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        for bad in [
+            "",
+            "seed=7",                     // no sites
+            "warp:rate=0.5",              // unknown site
+            "backend:rate=1.5",           // rate out of range
+            "backend:rate=0.1,every=2",   // two selectors
+            "backend:bogus=1",            // unknown key
+            "backend",                    // no colon
+            "alloc:every=0",              // every must be positive
+            "delay:rate=0.5",             // delay without ms
+            "disconnect:ids=1+x",         // non-integer id
+            "backend:rate=0.1;backend:rate=0.2", // duplicate site
+            "seed=banana;backend:rate=0.1",
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "`{bad}` should not parse");
+        }
+    }
+
+    #[test]
+    fn rate_decisions_are_deterministic_and_seed_sensitive() {
+        let a = FaultPlan::parse("seed=1;backend:rate=0.3").unwrap();
+        let b = FaultPlan::parse("seed=1;backend:rate=0.3").unwrap();
+        let c = FaultPlan::parse("seed=2;backend:rate=0.3").unwrap();
+        let fire =
+            |p: &FaultPlan| -> Vec<bool> { (0..256).map(|i| p.fires(FaultSite::Backend, i, 0)).collect() };
+        assert_eq!(fire(&a), fire(&b), "same seed must replay exactly");
+        assert_ne!(fire(&a), fire(&c), "different seed must reshuffle");
+        // Frequency sanity: ~30% over 256 ordinals, loose bounds.
+        let n = fire(&a).iter().filter(|f| **f).count();
+        assert!((40..=115).contains(&n), "rate=0.3 fired {n}/256 times");
+    }
+
+    #[test]
+    fn rate_faults_are_transient_across_attempts() {
+        let p = FaultPlan::parse("seed=11;restore:rate=0.5").unwrap();
+        // For a p=0.5 rule, 64 attempts virtually guarantee both
+        // outcomes appear — a retry loop can make progress.
+        let outcomes: Vec<bool> =
+            (0..64).map(|a| p.fires(FaultSite::Restore, 3, a)).collect();
+        assert!(outcomes.iter().any(|f| *f), "never fired in 64 attempts");
+        assert!(outcomes.iter().any(|f| !*f), "always fired in 64 attempts");
+    }
+
+    #[test]
+    fn sites_roll_independently() {
+        let p = FaultPlan::parse("seed=5;backend:rate=0.5;restore:rate=0.5").unwrap();
+        let backend: Vec<bool> =
+            (0..128).map(|i| p.fires(FaultSite::Backend, i, 0)).collect();
+        let restore: Vec<bool> =
+            (0..128).map(|i| p.fires(FaultSite::Restore, i, 0)).collect();
+        assert_ne!(backend, restore, "per-site salts must decorrelate the rolls");
+    }
+
+    #[test]
+    fn touches_matches_fires_sans_delay() {
+        let p =
+            FaultPlan::parse("seed=9;backend:rate=0.1;delay:every=1,ms=2").unwrap();
+        // Delay fires for everyone, but never counts as touching tokens.
+        for id in 0..64 {
+            let expect = (0..4).any(|a| p.fires(FaultSite::Backend, id, a));
+            assert_eq!(p.touches(id, 4), expect, "id {id}");
+        }
+    }
+
+    #[test]
+    fn from_env_roundtrip() {
+        // Unset → None; the engine holds no plan at all.
+        std::env::remove_var("LKV_FAULTS");
+        assert_eq!(FaultPlan::from_env().unwrap(), None);
+        std::env::set_var("LKV_FAULTS", "seed=3;spill:rate=0.2");
+        let p = FaultPlan::from_env().unwrap().expect("plan");
+        assert!(p.targets(FaultSite::Spill));
+        assert_eq!(p.source(), "seed=3;spill:rate=0.2");
+        std::env::set_var("LKV_FAULTS", "nonsense");
+        assert!(FaultPlan::from_env().is_err());
+        std::env::remove_var("LKV_FAULTS");
+    }
+}

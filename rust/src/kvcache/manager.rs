@@ -7,6 +7,9 @@
 //! [`CacheManager::prefix_reclaim_for`]).
 
 use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::faults::{FaultPlan, FaultSite};
 
 use super::arena::{KvArena, KvBlock, KvDtype, PagedCtx};
 use super::block::BlockAllocator;
@@ -104,6 +107,10 @@ pub enum RestoreOutcome {
     NoSpace,
     /// The owner has nothing in the spill store.
     NotSpilled,
+    /// The restore read failed (an injected — or, with a real backing
+    /// store, actual — I/O error). The spill entry is intact; the
+    /// caller may retry, and each retry re-rolls a transient fault.
+    IoError,
 }
 
 pub struct CacheManager {
@@ -113,6 +120,13 @@ pub struct CacheManager {
     prefix: Option<PrefixCache>,
     classes: HashMap<u64, OwnerClass>,
     spill: SpillStore,
+    /// Deterministic fault schedule for the spill/restore seams; None
+    /// (the default) costs one null-check per call.
+    faults: Option<Arc<FaultPlan>>,
+    /// Per-owner spill/restore call counters — the *attempt* index fed
+    /// to the fault plan, so rate faults are transient under retry.
+    spill_attempts: HashMap<u64, u64>,
+    restore_attempts: HashMap<u64, u64>,
 }
 
 impl CacheManager {
@@ -134,7 +148,15 @@ impl CacheManager {
             prefix: None,
             classes: HashMap::new(),
             spill: SpillStore::default(),
+            faults: None,
+            spill_attempts: HashMap::new(),
+            restore_attempts: HashMap::new(),
         }
+    }
+
+    /// Arm deterministic fault injection at the spill/restore seams.
+    pub fn set_faults(&mut self, plan: Arc<FaultPlan>) {
+        self.faults = Some(plan);
     }
 
     pub fn block_size(&self) -> usize {
@@ -271,6 +293,12 @@ impl CacheManager {
             !self.spill.seqs.contains_key(&owner),
             "owner {owner} already has spilled blocks"
         );
+        if let Some(plan) = &self.faults {
+            let attempt = self.spill_attempts.entry(owner).or_insert(0);
+            let fired = plan.fires(FaultSite::Spill, owner, *attempt);
+            *attempt += 1;
+            anyhow::ensure!(!fired, "injected spill I/O fault (owner {owner})");
+        }
         let bufs = self.arena.spill(&cache.blocks)?;
         self.allocator.free(&cache.blocks);
         let bytes: usize = bufs.iter().map(KvBlock::bytes).sum();
@@ -299,6 +327,14 @@ impl CacheManager {
         let Some(bufs) = self.spill.seqs.get(&owner) else {
             return RestoreOutcome::NotSpilled;
         };
+        if let Some(plan) = &self.faults {
+            let attempt = self.restore_attempts.entry(owner).or_insert(0);
+            let fired = plan.fires(FaultSite::Restore, owner, *attempt);
+            *attempt += 1;
+            if fired {
+                return RestoreOutcome::IoError;
+            }
+        }
         let need_slots = bufs.len() * self.allocator.block_size();
         if !self.allocator.can_alloc(need_slots) {
             self.prefix_reclaim_for(need_slots);
@@ -319,6 +355,7 @@ impl CacheManager {
     /// Drop a spilled sequence without restoring it (abort/shutdown of
     /// a preempted request). Returns blocks dropped.
     pub fn drop_spilled(&mut self, owner: u64) -> usize {
+        self.restore_attempts.remove(&owner);
         match self.spill.seqs.remove(&owner) {
             Some(bufs) => {
                 let bytes: usize = bufs.iter().map(KvBlock::bytes).sum();
@@ -381,6 +418,8 @@ impl CacheManager {
         let ids = self.allocator.take_owner(seq_id);
         self.arena.release(&ids);
         self.classes.remove(&seq_id);
+        self.spill_attempts.remove(&seq_id);
+        self.restore_attempts.remove(&seq_id);
         ids.len()
     }
 
@@ -581,6 +620,73 @@ mod tests {
         m.spill_seq(1, &cache).unwrap();
         assert_eq!(m.drop_spilled(1), 1);
         assert_eq!(m.spill_stats().bytes, 0);
+    }
+
+    /// Injected spill/restore faults: a permanent (ids-based) restore
+    /// fault returns `IoError` on every attempt and leaves the spill
+    /// entry intact; transient (rate-based) faults clear under retry.
+    /// No fault ever corrupts the round-trip payload.
+    #[test]
+    fn injected_faults_fail_cleanly_and_retry_clears_transients() {
+        let dims = KvDims { n_layers: 1, n_kv_heads: 1, head_dim: 2 };
+        let k = TensorF::zeros(vec![1, 1, 8, 2]);
+        let kept = vec![(0..8).collect::<Vec<usize>>()];
+
+        // Permanent restore fault for owner 1: IoError forever, entry intact.
+        let mut m = CacheManager::new(64, 8);
+        m.set_faults(Arc::new(crate::faults::FaultPlan::parse("restore:ids=1").unwrap()));
+        let (arena, alloc) = m.paged_parts();
+        let mut cache =
+            PagedSeqCache::from_dense_selection(arena, alloc, 1, dims, &k, &k, &kept, 8, 32)
+                .unwrap();
+        m.spill_seq(1, &cache).unwrap();
+        for _ in 0..4 {
+            assert_eq!(m.try_restore_seq(1, &mut cache), RestoreOutcome::IoError);
+            assert!(m.is_spilled(1), "IoError must leave the spill entry intact");
+        }
+        assert_eq!(m.drop_spilled(1), 1);
+        assert_eq!(m.spill_stats().bytes, 0);
+
+        // Transient restore fault: with rate=0.5, some attempt in a
+        // reasonable retry budget succeeds, and the data is intact.
+        let mut m = CacheManager::new(64, 8);
+        m.set_faults(Arc::new(
+            crate::faults::FaultPlan::parse("seed=3;restore:rate=0.5").unwrap(),
+        ));
+        let (arena, alloc) = m.paged_parts();
+        let mut cache =
+            PagedSeqCache::from_dense_selection(arena, alloc, 2, dims, &k, &k, &kept, 8, 32)
+                .unwrap();
+        let before = cache.gather_dense(m.arena(), 32).unwrap();
+        m.spill_seq(2, &cache).unwrap();
+        let mut restored = false;
+        for _ in 0..64 {
+            match m.try_restore_seq(2, &mut cache) {
+                RestoreOutcome::Restored(n) => {
+                    assert_eq!(n, 1);
+                    restored = true;
+                    break;
+                }
+                RestoreOutcome::IoError => continue,
+                o => panic!("unexpected outcome {o:?}"),
+            }
+        }
+        assert!(restored, "a rate=0.5 fault must clear within 64 retries");
+        let after = cache.gather_dense(m.arena(), 32).unwrap();
+        assert_eq!(before.k.data, after.k.data, "payload must survive faulted retries");
+
+        // A fired spill fault leaves the sequence resident and retryable.
+        let mut m = CacheManager::new(64, 8);
+        m.set_faults(Arc::new(crate::faults::FaultPlan::parse("spill:every=1").unwrap()));
+        let (arena, alloc) = m.paged_parts();
+        let cache =
+            PagedSeqCache::from_dense_selection(arena, alloc, 3, dims, &k, &k, &kept, 8, 32)
+                .unwrap();
+        let resident = m.stats().arena_bytes;
+        assert!(m.spill_seq(3, &cache).is_err(), "every=1 spill fault must fire");
+        assert!(!m.is_spilled(3));
+        assert_eq!(m.stats().arena_bytes, resident, "failed spill must leave bytes resident");
+        assert_eq!(m.release(3), 1);
     }
 
     /// Prefix-tree blocks come out of the same pool as sequence caches,

@@ -31,6 +31,7 @@ pub mod costmodel;
 pub mod engine;
 pub mod eval;
 pub mod eviction;
+pub mod faults;
 pub mod kvcache;
 pub mod metrics;
 pub mod model;

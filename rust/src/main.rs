@@ -16,6 +16,7 @@ use lookaheadkv::engine::{Engine, EngineConfig, GenOptions};
 use lookaheadkv::eval::{runner, tables};
 use lookaheadkv::eviction::spec::PolicySpec;
 use lookaheadkv::eviction::Method;
+use lookaheadkv::faults::FaultPlan;
 use lookaheadkv::metrics::Metrics;
 use lookaheadkv::model::tokenizer::encode;
 use lookaheadkv::runtime::artifacts::default_artifacts_dir;
@@ -71,7 +72,14 @@ fn print_help() {
          \x20           [--tenants N] [--quota-tokens N] [--stall-slo-ms MS] \\\n\
          \x20           [--no-preemption] [--threads N] [--ref-naive] \\\n\
          \x20           [--trace-out PATH]   (Chrome trace-event JSON on shutdown;\n\
-         \x20                                 spans also served at GET /trace/<id>)\n\
+         \x20                                 spans also served at GET /trace/<id>) \\\n\
+         \x20           [--deadline-ms MS]        (default per-request compute deadline;\n\
+         \x20                                      0 = none; body deadline_ms overrides) \\\n\
+         \x20           [--reply-timeout-ms MS]   (front-end 504 timeout, 0 = wait forever) \\\n\
+         \x20           [--restore-retries N] [--restore-retry-base-ms MS] \\\n\
+         \x20           [--fault-plan SPEC]       (deterministic fault injection, e.g.\n\
+         \x20                                      \"seed=7;backend:rate=0.05;restore:rate=0.2\";\n\
+         \x20                                      env LKV_FAULTS when flag absent)\n\
          \x20 generate  --prompt <text> --method lookaheadkv --budget 64 --max-new 32\n\
          \x20 eval      --suite ruler|longbench|qasper|longproc|mtbench --methods snapkv,lookaheadkv \\\n\
          \x20           --budgets 16,32 --ctx 256 --n 8\n\
@@ -160,6 +168,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
         quota_tokens: args.usize("quota-tokens", defaults.quota_tokens),
         stall_slo_ms: args.f64("stall-slo-ms", defaults.stall_slo_ms),
         preemption: !args.has("no-preemption"),
+        // Deterministic fault injection: --fault-plan takes precedence
+        // over LKV_FAULTS; an invalid plan is a startup error, not a
+        // silently-disabled one (see README "Robustness & fault
+        // injection").
+        faults: match args.get("fault-plan") {
+            Some(s) => Some(Arc::new(
+                FaultPlan::parse(s).map_err(|e| anyhow::anyhow!("--fault-plan: {e}"))?,
+            )),
+            None => FaultPlan::from_env()
+                .map_err(|e| anyhow::anyhow!("LKV_FAULTS: {e}"))?
+                .map(Arc::new),
+        },
+        restore_retries: args.usize("restore-retries", defaults.restore_retries as usize) as u32,
+        restore_retry_base_ms: args
+            .usize("restore-retry-base-ms", defaults.restore_retry_base_ms as usize)
+            as u64,
     };
     // Request-lifecycle tracing: always queryable via GET /trace/<id>;
     // --trace-out PATH additionally writes a Chrome trace-event JSON
@@ -175,8 +199,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let engine_thread = std::thread::Builder::new().name("engine".into()).spawn(move || {
         let mut cfg = EngineConfig::new(&model);
         cfg.draft_tokens = draft_tokens;
-        let engine = Engine::new(&art, cfg).expect("engine init");
-        EngineLoop::new(engine, loop_cfg, q2, m2).with_tracer(t2).run()
+        // Engine construction can fail (missing artifacts, bad model
+        // name): close the queue so the front-end answers with clean
+        // errors instead of leaving a panicked engine behind 504s.
+        match Engine::new(&art, cfg) {
+            Ok(engine) => EngineLoop::new(engine, loop_cfg, q2, m2).with_tracer(t2).run(),
+            Err(e) => {
+                log::error!("engine init failed: {e:#}");
+                q2.close();
+            }
+        }
     })?;
     let server_cfg = ServerConfig {
         addr: args.get_or("addr", "127.0.0.1:8080").to_string(),
@@ -184,6 +216,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         queue_cap: args.usize("queue-cap", 64),
         read_timeout_ms: args.usize("read-timeout-ms", 10_000) as u64,
         write_timeout_ms: args.usize("write-timeout-ms", 10_000) as u64,
+        // How long the front-end waits for the engine's reply before
+        // answering 504 (and cancelling the in-flight request); 0 waits
+        // forever. --deadline-ms is the default per-request compute
+        // deadline applied when the body omits `deadline_ms` (0 = none).
+        reply_timeout_ms: args.usize("reply-timeout-ms", 120_000) as u64,
+        default_deadline_ms: args.usize("deadline-ms", 0) as u64,
     };
     serve(server_cfg, queue, metrics, Some(Arc::clone(&tracer)))?;
     let _ = engine_thread.join();

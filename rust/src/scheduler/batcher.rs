@@ -50,6 +50,27 @@
 //! `LoopConfig::batched_decode = false` for the historical per-sequence
 //! round-trip (kept for A/B benchmarking — see `bench_scheduler`).
 //!
+//! **Robustness.** Per-request failures degrade gracefully instead of
+//! poisoning the loop: backend/compaction errors become
+//! `finish_reason = "error"` replies, and every exit path — completion,
+//! rejection, error, deadline, cancellation, shutdown — releases the
+//! sequence's arena blocks, prefix pins, spill entries, and tenant
+//! quota. Requests may carry a `deadline_ms` (checked at chunk and
+//! decode-iteration boundaries; expiry finishes with
+//! `finish_reason = "deadline"`, keeping any tokens already generated)
+//! and a cooperative cancel flag set by the server on client disconnect
+//! (`finish_reason = "cancelled"`). Transient spill-restore failures
+//! retry with capped exponential backoff
+//! (`restore_retry_base_ms`/`restore_retries`) and finally fall back to
+//! a cold recompute — deterministic re-prefill plus token replay, which
+//! rebuilds the exact pre-preemption KV state. A deterministic
+//! [`FaultPlan`] (`LoopConfig::faults`, CLI `--fault-plan`, env
+//! `LKV_FAULTS`) injects failures at each of these seams for chaos
+//! testing; when unset every seam is a single null check. Counters:
+//! `engine_errors_total`, `cancellations_total`,
+//! `deadline_expired_total`, `restore_retries_total`,
+//! `restore_cold_recomputes_total`; gauge: `quota_tokens_in_flight`.
+//!
 //! Exported latency metrics: `decode_stall_ms` (per-iteration decode
 //! stall imposed by prefill work — one chunk, plus the final chunk's
 //! deferred eviction/compaction, when chunked; a whole admission when
@@ -63,11 +84,14 @@
 //! `restore_blocks_total`; gauges: `kv_spill_{seqs,blocks,bytes}`.
 
 use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::engine::{ChunkedPrefill, Engine, FinishReason, PrefillOutput, PrefixPlan, RequestStats};
-use crate::eviction::DecisionSummary;
+use crate::eviction::spec::PolicyKnobs;
+use crate::eviction::{DecisionSummary, Method};
+use crate::faults::{FaultPlan, FaultSite};
 use crate::kvcache::{
     manager::{bytes_per_slot, bytes_per_slot_dtype},
     CacheManager, KvDims, KvDtype, MatchKind, OwnerClass, PagedSeqCache, PrefixPin,
@@ -82,8 +106,23 @@ use crate::trace::{Phase, Tracer};
 /// Recent-stall window length for the SLO admission gate.
 const STALL_WINDOW: usize = 64;
 
+/// Restore retry backoff ceiling (exponential from
+/// `LoopConfig::restore_retry_base_ms`, capped here).
+const RESTORE_BACKOFF_CAP_MS: u64 = 100;
+
+/// Fault-plan *attempt* offset for decode-iteration seams. Prefill
+/// seams use the chunk index directly (attempt `0..chunks`); decode
+/// seams use `DECODE_FAULT_BASE + iteration` so the two never reuse a
+/// roll for prompts under 100 chunks. `FaultPlan::touches(id, n)` with
+/// `n ≥ DECODE_FAULT_BASE + max_new` covers both.
+const DECODE_FAULT_BASE: u64 = 100;
+
 fn ms_between(a: Instant, b: Instant) -> f64 {
     b.saturating_duration_since(a).as_secs_f64() * 1e3
+}
+
+fn past_deadline(deadline: Option<Instant>, now: Instant) -> bool {
+    deadline.is_some_and(|d| now >= d)
 }
 
 #[derive(Debug, Clone)]
@@ -136,6 +175,16 @@ pub struct LoopConfig {
     /// per-(layer, KV-head, block) scale/zero-point. Dense caches
     /// (`--dense-kv`) stay f32 regardless.
     pub kv_dtype: KvDtype,
+    /// Deterministic fault schedule (CLI `--fault-plan`, env
+    /// `LKV_FAULTS`). None (the default) keeps every injection seam a
+    /// single null check.
+    pub faults: Option<Arc<FaultPlan>>,
+    /// Spill-restore retries after a transient restore failure before
+    /// falling back to cold recompute.
+    pub restore_retries: u32,
+    /// Base of the restore retry backoff (doubles per attempt, capped
+    /// at [`RESTORE_BACKOFF_CAP_MS`]).
+    pub restore_retry_base_ms: u64,
 }
 
 impl Default for LoopConfig {
@@ -154,6 +203,9 @@ impl Default for LoopConfig {
             stall_slo_ms: 0.0,
             preemption: true,
             kv_dtype: KvDtype::F32,
+            faults: None,
+            restore_retries: 4,
+            restore_retry_base_ms: 1,
         }
     }
 }
@@ -193,6 +245,43 @@ impl ActiveKv {
     }
 }
 
+/// Everything needed to rebuild a sequence's KV from scratch when its
+/// spilled blocks are unrecoverable: deterministic re-prefill +
+/// re-selection, then a replay of the already-generated tokens.
+struct RecomputeSpec {
+    prompt: Vec<i32>,
+    method: Method,
+    budget: usize,
+    knobs: PolicyKnobs,
+}
+
+/// The slice of a request `select_compact` needs — borrowed from a
+/// live [`Request`] at admission, or from a sequence's
+/// [`RecomputeSpec`] during a cold recompute.
+struct SelectParams<'a> {
+    id: u64,
+    prompt_len: usize,
+    method: &'a Method,
+    budget: usize,
+    knobs: &'a PolicyKnobs,
+    max_new: usize,
+    priority: Priority,
+}
+
+impl<'a> SelectParams<'a> {
+    fn of(req: &'a Request) -> SelectParams<'a> {
+        SelectParams {
+            id: req.id,
+            prompt_len: req.prompt.len(),
+            method: &req.method,
+            budget: req.budget,
+            knobs: &req.knobs,
+            max_new: req.max_new,
+            priority: req.priority,
+        }
+    }
+}
+
 struct ActiveSeq {
     id: u64,
     cache: ActiveKv,
@@ -211,8 +300,25 @@ struct ActiveSeq {
     charge: usize,
     /// End of this sequence's last recorded span (lifecycle tiling).
     mark: Instant,
+    /// Absolute deadline (from the request's `deadline_ms`); checked at
+    /// decode-iteration boundaries and while parked in the spill tier.
+    deadline: Option<Instant>,
+    /// Cooperative cancel flag shared with the server front-end.
+    cancel: Arc<AtomicBool>,
+    /// Failed restore attempts since this sequence was last preempted.
+    restore_attempts: u32,
+    /// Earliest next restore try (exponential backoff after a
+    /// transient restore failure); None = retry immediately.
+    next_restore_at: Option<Instant>,
+    recompute: RecomputeSpec,
     stats: RequestStats,
     eviction: Option<DecisionSummary>,
+}
+
+impl ActiveSeq {
+    fn cancelled(&self) -> bool {
+        self.cancel.load(Ordering::Relaxed)
+    }
 }
 
 /// Lowest-priority (then most recently started) active paged sequence
@@ -393,6 +499,62 @@ impl EngineLoop {
         }
     }
 
+    /// Admission-time gate, after the quota charge but before any
+    /// prefill work: injected disconnects, cooperative cancellation,
+    /// and already-expired deadlines. Returns `None` when the request
+    /// was finished here.
+    fn precheck_queued(&mut self, req: Request) -> Option<Request> {
+        if let Some(plan) = &self.cfg.faults {
+            if plan.fires(FaultSite::Disconnect, req.id, 0) {
+                req.cancel.store(true, Ordering::Relaxed);
+            }
+        }
+        let reason = if req.cancelled() {
+            Some(FinishReason::Cancelled)
+        } else if past_deadline(req.deadline(), Instant::now()) {
+            Some(FinishReason::Deadline)
+        } else {
+            None
+        };
+        match reason {
+            Some(r) => {
+                self.finish_unstarted(req, r);
+                None
+            }
+            None => Some(req),
+        }
+    }
+
+    /// Terminate a request that never started prefilling (cancelled or
+    /// expired while queued): release its quota charge and reply with
+    /// the terminal reason — no error, no tokens.
+    fn finish_unstarted(&mut self, req: Request, reason: FinishReason) {
+        self.release_tenant(req.tenant, req.prompt.len() + req.max_new);
+        match reason {
+            FinishReason::Cancelled => self.metrics.incr("cancellations_total", 1),
+            FinishReason::Deadline => self.metrics.incr("deadline_expired_total", 1),
+            _ => {}
+        }
+        let now = Instant::now();
+        self.span(req.id, Phase::Queue, req.submitted_at, now);
+        self.span(req.id, Phase::Cancel, now, now);
+        let _ = req.reply.send(Reply {
+            id: req.id,
+            text: String::new(),
+            n_tokens: 0,
+            ttft_ms: 0.0,
+            total_ms: ms_between(req.submitted_at, now),
+            kept: 0,
+            finish_reason: reason,
+            error: None,
+            stats: RequestStats {
+                queue_ms: ms_between(req.submitted_at, now),
+                ..Default::default()
+            },
+            eviction: None,
+        });
+    }
+
     /// Spill strictly-lower-priority victims until `slots` are
     /// allocatable (admission-side preemption). Returns whether the
     /// pool can now satisfy the allocation.
@@ -432,25 +594,46 @@ impl EngineLoop {
     /// Run until the queue is closed and drained.
     pub fn run(mut self) {
         let model = self.engine.cfg.model.clone();
-        let m = self.engine.rt.manifest().model(&model).expect("model");
-        let dtype = self.cfg.kv_dtype;
-        let dims = KvDims {
-            n_layers: m.n_layers,
-            n_kv_heads: m.n_kv_heads,
-            head_dim: m.head_dim,
+        // A misconfigured model name is request-controlled input on the
+        // server path (`--model`): it must fail the requests, never
+        // abort the process.
+        let dims = match self.engine.rt.manifest().model(&model) {
+            Ok(m) => KvDims {
+                n_layers: m.n_layers,
+                n_kv_heads: m.n_kv_heads,
+                head_dim: m.head_dim,
+            },
+            Err(e) => {
+                let msg = format!("{e:#}");
+                log::error!("engine loop cannot start: {msg}");
+                self.metrics.incr("engine_errors_total", 1);
+                self.queue.close();
+                while let Some(req) = self.queue.try_pop() {
+                    let t0 = Instant::now();
+                    self.span(req.id, Phase::Queue, req.submitted_at, t0);
+                    self.reject(req, t0, t0, anyhow::anyhow!("engine unavailable: {msg}"));
+                }
+                return;
+            }
         };
+        let dtype = self.cfg.kv_dtype;
         self.block_bytes = dtype.block_bytes(&dims, self.cfg.kv_block_slots.max(1));
-        self.dense_slot_bytes = bytes_per_slot(m.n_layers, m.n_kv_heads, m.head_dim);
+        self.dense_slot_bytes = bytes_per_slot(dims.n_layers, dims.n_kv_heads, dims.head_dim);
         // Admission accounting is slot-denominated; the byte-denominated
         // capacity gauges must charge dtype-true stored bytes (including
         // the u8 per-block scale/zero-point overhead), not f32 sizes.
-        let slot_bytes = bytes_per_slot_dtype(m.n_layers, m.n_kv_heads, m.head_dim, dtype);
+        let slot_bytes =
+            bytes_per_slot_dtype(dims.n_layers, dims.n_kv_heads, dims.head_dim, dtype);
         self.metrics.set_gauge("kv_slot_bytes", slot_bytes as f64);
         let pool_blocks = self.cfg.kv_pool_slots.div_ceil(self.cfg.kv_block_slots.max(1));
         self.metrics.set_gauge("kv_pool_bytes", (pool_blocks * self.block_bytes) as f64);
         self.metrics.set_info("kv_cache_info", &[("kv_dtype", dtype.as_str())]);
         let mut mgr =
             CacheManager::with_dtype(self.cfg.kv_pool_slots, self.cfg.kv_block_slots, dtype);
+        if let Some(plan) = &self.cfg.faults {
+            mgr.set_faults(plan.clone());
+            log::info!("fault injection enabled: {}", plan.source());
+        }
         let mut active: Vec<ActiveSeq> = Vec::new();
         let mut preempted: Vec<ActiveSeq> = Vec::new();
         let mut pending: Option<PendingPrefill> = None;
@@ -498,18 +681,48 @@ impl EngineLoop {
         }
 
         loop {
+            // Reap preempted sequences whose client vanished or whose
+            // deadline passed while parked in the spill tier — they must
+            // not wait on pool space to terminate.
+            if !preempted.is_empty() {
+                let now = Instant::now();
+                let mut k = 0;
+                while k < preempted.len() {
+                    let reason = if preempted[k].cancelled() {
+                        Some(FinishReason::Cancelled)
+                    } else if past_deadline(preempted[k].deadline, now) {
+                        Some(FinishReason::Deadline)
+                    } else {
+                        None
+                    };
+                    match reason {
+                        Some(r) => {
+                            let seq = preempted.remove(k);
+                            self.complete(seq, r, &mut mgr);
+                        }
+                        None => k += 1,
+                    }
+                }
+            }
+
             // Resume preempted sequences before admitting anything new:
             // they already paid their prefill, and restoring is a
             // verbatim host-buffer re-bind. Highest priority (then
-            // oldest) first; stop at the first that doesn't fit.
+            // oldest) first; stop at the first that doesn't fit. A
+            // transient restore I/O failure backs off exponentially and
+            // falls back to a cold recompute after `restore_retries`.
             if !preempted.is_empty() && active.len() < self.cfg.max_active {
                 preempted
                     .sort_by(|a, b| b.priority.cmp(&a.priority).then(a.t_start.cmp(&b.t_start)));
-                while active.len() < self.cfg.max_active && !preempted.is_empty() {
+                let mut k = 0;
+                while active.len() < self.cfg.max_active && k < preempted.len() {
                     let t0 = Instant::now();
-                    let seq = &mut preempted[0];
-                    let id = seq.id;
-                    let outcome = match &mut seq.cache {
+                    if preempted[k].next_restore_at.is_some_and(|at| t0 < at) {
+                        k += 1; // still backing off after a failed restore
+                        continue;
+                    }
+                    let id = preempted[k].id;
+                    let outcome = match &mut preempted[k].cache {
                         ActiveKv::Paged(c) => mgr.try_restore_seq(id, c),
                         ActiveKv::Dense(_) => RestoreOutcome::NotSpilled,
                     };
@@ -519,18 +732,41 @@ impl EngineLoop {
                             self.metrics.observe("restore_ms", ms_between(t0, now));
                             self.metrics.incr("restores_total", 1);
                             self.metrics.incr("restore_blocks_total", n as u64);
-                            let seq = &mut preempted[0];
+                            let seq = &mut preempted[k];
                             // Parked-in-spill time tiles up to the restore.
                             self.span(id, Phase::Spill, seq.mark, t0);
                             self.span(id, Phase::Restore, t0, now);
                             seq.mark = now;
                             seq.stats.restores += 1;
-                            active.push(preempted.remove(0));
+                            seq.restore_attempts = 0;
+                            seq.next_restore_at = None;
+                            active.push(preempted.remove(k));
                         }
                         RestoreOutcome::NoSpace => break,
                         // Defensive: a sequence that was never actually
                         // spilled just rejoins the active set.
-                        RestoreOutcome::NotSpilled => active.push(preempted.remove(0)),
+                        RestoreOutcome::NotSpilled => active.push(preempted.remove(k)),
+                        RestoreOutcome::IoError => {
+                            self.metrics.incr("restore_retries_total", 1);
+                            let seq = &mut preempted[k];
+                            seq.restore_attempts += 1;
+                            if seq.restore_attempts > self.cfg.restore_retries {
+                                log::warn!(
+                                    "restore of seq {id} failed {} times; \
+                                     falling back to cold recompute",
+                                    seq.restore_attempts
+                                );
+                                let seq = preempted.remove(k);
+                                self.cold_recompute(seq, &mut mgr, &mut active);
+                            } else {
+                                let shift = (seq.restore_attempts - 1).min(16);
+                                let backoff = (self.cfg.restore_retry_base_ms << shift)
+                                    .min(RESTORE_BACKOFF_CAP_MS);
+                                seq.next_restore_at =
+                                    Some(t0 + Duration::from_millis(backoff));
+                                k += 1;
+                            }
+                        }
                     }
                 }
                 self.publish_cache_stats(&mgr);
@@ -553,8 +789,14 @@ impl EngineLoop {
                     match req {
                         Some(req) => {
                             if let Some(req) = self.charge_or_reject(req) {
-                                pending =
-                                    self.begin_prefill(req, &mut mgr, &mut active, &mut preempted);
+                                if let Some(req) = self.precheck_queued(req) {
+                                    pending = self.begin_prefill(
+                                        req,
+                                        &mut mgr,
+                                        &mut active,
+                                        &mut preempted,
+                                    );
+                                }
                             }
                         }
                         None if idle && self.queue.is_closed() && self.queue.is_empty() => {
@@ -586,8 +828,10 @@ impl EngineLoop {
                         }
                     };
                     if let Some(req) = self.charge_or_reject(req) {
-                        self.admit(req, &mut active, &mut preempted, &mut mgr);
-                        admitted = true;
+                        if let Some(req) = self.precheck_queued(req) {
+                            self.admit(req, &mut active, &mut preempted, &mut mgr);
+                            admitted = true;
+                        }
                     }
                 }
                 self.note_stall(if stalling_before && admitted {
@@ -597,12 +841,38 @@ impl EngineLoop {
                 });
             }
 
+            // Reap an in-flight prefill whose client disconnected or
+            // whose deadline expired — no more chunks are worth paying
+            // for a reply nobody will read.
+            if let Some(p) = pending.as_ref() {
+                let now = Instant::now();
+                let reason = if p.req.cancelled() {
+                    Some(FinishReason::Cancelled)
+                } else if past_deadline(p.req.deadline(), now) {
+                    Some(FinishReason::Deadline)
+                } else {
+                    None
+                };
+                if let Some(r) = reason {
+                    let p = pending.take().expect("pending just checked");
+                    self.cancel_pending(p, r, &mut mgr);
+                }
+            }
+
             // Advance the in-flight prefill by one chunk; the decode step
             // below still runs this iteration (mixed batching).
             let stepped = match pending.as_mut() {
                 Some(p) => {
                     let t0 = Instant::now();
-                    let stepped = if p.job.is_paged() {
+                    let faulted = self.cfg.faults.as_ref().is_some_and(|f| {
+                        f.fires(FaultSite::Backend, p.req.id, p.chunks as u64)
+                    });
+                    let stepped = if faulted {
+                        Err(anyhow::anyhow!(
+                            "injected backend fault (prefill chunk {})",
+                            p.chunks
+                        ))
+                    } else if p.job.is_paged() {
                         let mut ctx = mgr.paged_ctx(p.req.id);
                         p.job.step_paged(&self.engine, &mut ctx)
                     } else {
@@ -690,8 +960,13 @@ impl EngineLoop {
             // sequence out of slots grows by a block; if the pool is dry
             // it preempts a strictly-lower-priority victim before being
             // given up on with `kv_exhausted`.
+            let now_iter = Instant::now();
             let mut finished_ids: Vec<(u64, FinishReason)> = Vec::new();
             let mut victim_ids: Vec<u64> = Vec::new();
+            // Sequences hit by an injected per-sequence backend fault:
+            // torn down with an error Reply before the batch call, so
+            // co-batched sequences' compute is untouched.
+            let mut faulted_ids: Vec<u64> = Vec::new();
             let mut i = 0;
             while i < active.len() {
                 let id = active[i].id;
@@ -699,49 +974,83 @@ impl EngineLoop {
                     i += 1;
                     continue;
                 }
+                let attempt = DECODE_FAULT_BASE + active[i].stats.decode_iters as u64;
+                if let Some(plan) = &self.cfg.faults {
+                    // Injected client disconnect flips the same
+                    // cooperative flag the HTTP front-end sets, so it
+                    // exercises the identical cancellation path.
+                    if plan.fires(FaultSite::Disconnect, id, attempt) {
+                        active[i].cancel.store(true, Ordering::Relaxed);
+                    }
+                }
                 let tok = active[i].next_token;
                 let done = if tok == EOS_ID {
                     Some(FinishReason::Eos)
                 } else if active[i].tokens.len() >= active[i].max_new {
                     Some(FinishReason::Length)
+                } else if active[i].cancelled() {
+                    Some(FinishReason::Cancelled)
+                } else if past_deadline(active[i].deadline, now_iter) {
+                    Some(FinishReason::Deadline)
+                } else if self
+                    .cfg
+                    .faults
+                    .as_ref()
+                    .is_some_and(|f| f.fires(FaultSite::Backend, id, attempt))
+                {
+                    faulted_ids.push(id);
+                    i += 1;
+                    continue;
                 } else if active[i].cache.headroom() == 0 {
-                    loop {
-                        let grown = match &mut active[i].cache {
-                            ActiveKv::Paged(c) => mgr.grow_paged(id, c),
-                            ActiveKv::Dense(_) => false,
-                        };
-                        if grown {
-                            if let ActiveKv::Paged(c) = &active[i].cache {
-                                let bs = mgr.block_size();
-                                let blocks = c.allocated_slots().div_ceil(bs);
-                                let s = &mut active[i].stats;
-                                s.peak_arena_blocks = s.peak_arena_blocks.max(blocks);
+                    // An injected allocator failure fails the growth
+                    // outright — no preemption rescue — so the request
+                    // finishes `kv_exhausted` with what it generated.
+                    if self
+                        .cfg
+                        .faults
+                        .as_ref()
+                        .is_some_and(|f| f.fires(FaultSite::Alloc, id, attempt))
+                    {
+                        Some(FinishReason::KvExhausted)
+                    } else {
+                        loop {
+                            let grown = match &mut active[i].cache {
+                                ActiveKv::Paged(c) => mgr.grow_paged(id, c),
+                                ActiveKv::Dense(_) => false,
+                            };
+                            if grown {
+                                if let ActiveKv::Paged(c) = &active[i].cache {
+                                    let bs = mgr.block_size();
+                                    let blocks = c.allocated_slots().div_ceil(bs);
+                                    let s = &mut active[i].stats;
+                                    s.peak_arena_blocks = s.peak_arena_blocks.max(blocks);
+                                }
+                                break None;
                             }
-                            break None;
-                        }
-                        if !self.cfg.preemption
-                            || !matches!(active[i].cache, ActiveKv::Paged(_))
-                        {
-                            break Some(FinishReason::KvExhausted);
-                        }
-                        let pri = active[i].priority;
-                        let Some(j) =
-                            pick_victim(&active, Some(i), &victim_ids, &finished_ids, pri)
-                        else {
-                            break Some(FinishReason::KvExhausted);
-                        };
-                        let vid = active[j].id;
-                        let ActiveKv::Paged(vc) = &active[j].cache else { unreachable!() };
-                        match mgr.spill_seq(vid, vc) {
-                            Ok(n) => {
-                                self.metrics.incr("preemptions_total", 1);
-                                self.metrics.incr("spill_blocks_total", n as u64);
-                                active[j].stats.spills += 1;
-                                victim_ids.push(vid);
-                            }
-                            Err(e) => {
-                                log::warn!("preemption spill of seq {vid} failed: {e:#}");
+                            if !self.cfg.preemption
+                                || !matches!(active[i].cache, ActiveKv::Paged(_))
+                            {
                                 break Some(FinishReason::KvExhausted);
+                            }
+                            let pri = active[i].priority;
+                            let Some(j) =
+                                pick_victim(&active, Some(i), &victim_ids, &finished_ids, pri)
+                            else {
+                                break Some(FinishReason::KvExhausted);
+                            };
+                            let vid = active[j].id;
+                            let ActiveKv::Paged(vc) = &active[j].cache else { unreachable!() };
+                            match mgr.spill_seq(vid, vc) {
+                                Ok(n) => {
+                                    self.metrics.incr("preemptions_total", 1);
+                                    self.metrics.incr("spill_blocks_total", n as u64);
+                                    active[j].stats.spills += 1;
+                                    victim_ids.push(vid);
+                                }
+                                Err(e) => {
+                                    log::warn!("preemption spill of seq {vid} failed: {e:#}");
+                                    break Some(FinishReason::KvExhausted);
+                                }
                             }
                         }
                     }
@@ -763,6 +1072,25 @@ impl EngineLoop {
                 }
                 self.publish_cache_stats(&mgr);
             }
+            if !faulted_ids.is_empty() {
+                for fid in &faulted_ids {
+                    // Tolerate a sequence that was also picked as a
+                    // preemption victim this iteration.
+                    let seq = if let Some(j) = active.iter().position(|s| s.id == *fid) {
+                        active.swap_remove(j)
+                    } else if let Some(j) = preempted.iter().position(|s| s.id == *fid) {
+                        preempted.swap_remove(j)
+                    } else {
+                        continue;
+                    };
+                    self.fail_active(
+                        seq,
+                        anyhow::anyhow!("injected backend fault (decode)"),
+                        &mut mgr,
+                    );
+                }
+                self.publish_cache_stats(&mgr);
+            }
 
             // One decode step for every remaining sequence.
             let mut finished: Vec<(usize, FinishReason)> = Vec::new();
@@ -777,6 +1105,19 @@ impl EngineLoop {
                 }
             }
             if !stepping.is_empty() {
+                // Injected decode latency: perturbs timing only, never
+                // tokens (the soak's identity check relies on this).
+                if let Some(plan) = &self.cfg.faults {
+                    let delay: u64 = stepping
+                        .iter()
+                        .map(|(_, s)| {
+                            plan.delay_ms(s.id, DECODE_FAULT_BASE + s.stats.decode_iters as u64)
+                        })
+                        .sum();
+                    if delay > 0 {
+                        std::thread::sleep(Duration::from_millis(delay));
+                    }
+                }
                 if self.cfg.batched_decode || self.paged {
                     // All sequences in one backend call; caches update
                     // in place (no per-token cache serialization). The
@@ -826,7 +1167,7 @@ impl EngineLoop {
                             let err = format!("{e:#}");
                             let now = Instant::now();
                             for (i, seq) in stepping.iter() {
-                                self.span(seq.id, Phase::Finish, seq.mark, now);
+                                self.span(seq.id, Phase::Error, seq.mark, now);
                                 let _ = seq.reply.send(Reply {
                                     id: seq.id,
                                     text: String::new(),
@@ -862,7 +1203,7 @@ impl EngineLoop {
                             }
                             Err(e) => {
                                 let now = Instant::now();
-                                self.span(seq.id, Phase::Finish, seq.mark, now);
+                                self.span(seq.id, Phase::Error, seq.mark, now);
                                 let _ = seq.reply.send(Reply {
                                     id: seq.id,
                                     text: String::new(),
@@ -911,13 +1252,22 @@ impl EngineLoop {
         let t0 = Instant::now();
         self.span(req.id, Phase::Queue, req.submitted_at, t0);
         let queue_ms = ms_between(req.submitted_at, t0);
+        let injected = match &self.cfg.faults {
+            Some(p) if p.fires(FaultSite::Backend, req.id, 0) => Some("backend"),
+            Some(p) if p.fires(FaultSite::Alloc, req.id, 0) => Some("alloc"),
+            _ => None,
+        };
+        if let Some(site) = injected {
+            self.reject(req, t0, t0, anyhow::anyhow!("injected {site} fault (prefill)"));
+            return;
+        }
         // Split at the prefill/selection boundary so the Admission and
         // Eviction spans tile the blocking admission.
         let res = match self.engine.prefill_for_method(&req.prompt, &req.method) {
             Ok(pre) => {
                 let t_mid = Instant::now();
                 self.span(req.id, Phase::Admission, t0, t_mid);
-                self.select_compact(&req, pre, mgr, active, preempted)
+                self.select_compact(&SelectParams::of(&req), pre, mgr, active, preempted)
                     .map(|ok| (ok, t_mid))
                     .map_err(|e| (e, t_mid))
             }
@@ -953,6 +1303,15 @@ impl EngineLoop {
     ) -> Option<PendingPrefill> {
         let t_start = Instant::now();
         self.span(req.id, Phase::Queue, req.submitted_at, t_start);
+        if self.cfg.faults.as_ref().is_some_and(|f| f.fires(FaultSite::Alloc, req.id, 0)) {
+            self.reject(
+                req,
+                t_start,
+                t_start,
+                anyhow::anyhow!("injected alloc fault (prefill admission)"),
+            );
+            return None;
+        }
         let mut pin = None;
         let plan = if mgr.prefix_enabled() {
             match self.engine.prefix_pass_info(req.prompt.len(), &req.method) {
@@ -1077,7 +1436,7 @@ impl EngineLoop {
         let prompt = req.prompt.clone();
         let res = (|| -> anyhow::Result<(ActiveKv, Vec<f32>, usize, DecisionSummary)> {
             let pre = job.into_output()?;
-            self.select_compact(&req, pre, mgr, active, preempted)
+            self.select_compact(&SelectParams::of(&req), pre, mgr, active, preempted)
         })();
         match res {
             Ok((cache, logits, kept, decision)) => {
@@ -1128,7 +1487,7 @@ impl EngineLoop {
     /// allocated, not the dense cap.
     fn select_compact(
         &self,
-        req: &Request,
+        req: &SelectParams<'_>,
         pre: PrefillOutput,
         mgr: &mut CacheManager,
         active: &mut Vec<ActiveSeq>,
@@ -1139,7 +1498,7 @@ impl EngineLoop {
         evcfg.budget = req.budget;
         req.knobs.apply(&mut evcfg);
         let sel = req.method.select(&evcfg, n_layers, &pre.bundle);
-        let decision = DecisionSummary::new(&req.method, &evcfg, &sel, &pre.bundle);
+        let decision = DecisionSummary::new(req.method, &evcfg, &sel, &pre.bundle);
         let cap = self
             .engine
             .rt
@@ -1168,7 +1527,7 @@ impl EngineLoop {
                         dims,
                         src,
                         &sel.per_layer,
-                        req.prompt.len(),
+                        req.prompt_len,
                         cap,
                     ),
                     None => PagedSeqCache::from_dense_selection(
@@ -1179,7 +1538,7 @@ impl EngineLoop {
                         &pre.k,
                         &pre.v,
                         &sel.per_layer,
-                        req.prompt.len(),
+                        req.prompt_len,
                         cap,
                     ),
                 }
@@ -1218,7 +1577,7 @@ impl EngineLoop {
             }
             anyhow::ensure!(mgr.can_admit(cap), "kv pool exhausted");
             let cache =
-                SeqCache::from_selection(&pre.k, &pre.v, &sel.per_layer, req.prompt.len(), cap);
+                SeqCache::from_selection(&pre.k, &pre.v, &sel.per_layer, req.prompt_len, cap);
             Ok((ActiveKv::Dense(cache), pre.logits, sel.max_kept(), decision))
         }
     }
@@ -1245,6 +1604,12 @@ impl EngineLoop {
         self.metrics.set_gauge("kv_arena_blocks_decode", s.blocks_decode as f64);
         self.metrics.set_gauge("kv_arena_blocks_prefix", s.blocks_prefix as f64);
         self.metrics.set_gauge("kv_arena_blocks_prefill", s.blocks_prefill as f64);
+        // In-flight quota tokens across all tenants — must drain to
+        // zero when nothing is running (leak canary for the soak).
+        self.metrics.set_gauge(
+            "quota_tokens_in_flight",
+            self.tenant_used.values().sum::<usize>() as f64,
+        );
         // Cold spill tier: preempted sequences parked host-side.
         let sp = mgr.spill_stats();
         self.metrics.set_gauge("kv_spill_seqs", sp.seqs as f64);
@@ -1332,6 +1697,13 @@ impl EngineLoop {
             // caches already charged their actual blocks at gather.)
             mgr.reserve(req.id, c.cap);
         }
+        let deadline = req.deadline();
+        let recompute = RecomputeSpec {
+            prompt: req.prompt.clone(),
+            method: req.method.clone(),
+            budget: req.budget,
+            knobs: req.knobs,
+        };
         active.push(ActiveSeq {
             id: req.id,
             cache,
@@ -1347,6 +1719,11 @@ impl EngineLoop {
             tenant: req.tenant,
             priority: req.priority,
             mark: t_act,
+            deadline,
+            cancel: req.cancel,
+            restore_attempts: 0,
+            next_restore_at: None,
+            recompute,
             stats,
             eviction: Some(decision),
         });
@@ -1359,8 +1736,9 @@ impl EngineLoop {
     fn reject(&mut self, req: Request, t_start: Instant, mark: Instant, e: anyhow::Error) {
         self.release_tenant(req.tenant, req.prompt.len() + req.max_new);
         self.metrics.incr("prefill_errors", 1);
+        self.metrics.incr("engine_errors_total", 1);
         let now = Instant::now();
-        self.span(req.id, Phase::Finish, mark, now);
+        self.span(req.id, Phase::Error, mark, now);
         let stats = RequestStats {
             queue_ms: ms_between(req.submitted_at, t_start),
             ..Default::default()
@@ -1387,6 +1765,157 @@ impl EngineLoop {
         mgr.release(seq.id);
         self.release_tenant(seq.tenant, seq.charge);
         self.metrics.incr("decode_errors", 1);
+        self.metrics.incr("engine_errors_total", 1);
+        self.publish_cache_stats(mgr);
+    }
+
+    /// Send the error Reply for an in-flight sequence, then tear it
+    /// down. The `Phase::Error` span keeps failed lifecycles tiling.
+    fn fail_active(&mut self, seq: ActiveSeq, e: anyhow::Error, mgr: &mut CacheManager) {
+        let now = Instant::now();
+        self.span(seq.id, Phase::Error, seq.mark, now);
+        let _ = seq.reply.send(Reply {
+            id: seq.id,
+            text: String::new(),
+            n_tokens: 0,
+            ttft_ms: seq.ttft_ms,
+            total_ms: ms_between(seq.t_start, now),
+            kept: seq.kept,
+            finish_reason: FinishReason::Error,
+            error: Some(format!("{e:#}")),
+            stats: seq.stats.clone(),
+            eviction: seq.eviction.clone(),
+        });
+        self.abort(seq, mgr);
+    }
+
+    /// Abandon an in-flight chunked prefill (client disconnected or the
+    /// deadline expired): release its prompt blocks, prefix pin, and
+    /// quota charge, and answer with the terminal reason.
+    fn cancel_pending(&mut self, p: PendingPrefill, reason: FinishReason, mgr: &mut CacheManager) {
+        let PendingPrefill { req, t_start, pin, mark, queue_ms, .. } = p;
+        mgr.release(req.id);
+        if let Some(pin) = pin {
+            mgr.prefix_release(pin);
+        }
+        self.release_tenant(req.tenant, req.prompt.len() + req.max_new);
+        match reason {
+            FinishReason::Cancelled => self.metrics.incr("cancellations_total", 1),
+            FinishReason::Deadline => self.metrics.incr("deadline_expired_total", 1),
+            _ => {}
+        }
+        let now = Instant::now();
+        self.span(req.id, Phase::Cancel, mark, now);
+        let _ = req.reply.send(Reply {
+            id: req.id,
+            text: String::new(),
+            n_tokens: 0,
+            ttft_ms: 0.0,
+            total_ms: ms_between(t_start, now),
+            kept: 0,
+            finish_reason: reason,
+            error: None,
+            stats: RequestStats { queue_ms, ..Default::default() },
+            eviction: None,
+        });
+        self.publish_cache_stats(mgr);
+    }
+
+    /// Rebuild a preempted sequence whose spilled KV is unrecoverable:
+    /// drop the dead spill entry, re-run the deterministic prefill +
+    /// selection (bit-identical to the original admission), then replay
+    /// the already-generated tokens through single-sequence decode
+    /// steps. The sampler state is untouched — replay feeds known
+    /// tokens and discards logits — so future sampling continues
+    /// exactly as if the restore had succeeded.
+    fn cold_recompute(
+        &mut self,
+        mut seq: ActiveSeq,
+        mgr: &mut CacheManager,
+        active: &mut Vec<ActiveSeq>,
+    ) {
+        self.metrics.incr("restore_cold_recomputes_total", 1);
+        let t0 = Instant::now();
+        let id = seq.id;
+        mgr.drop_spilled(id);
+        mgr.release(id);
+        let model = self.engine.cfg.model.clone();
+        let rebuilt = self
+            .engine
+            .prefill_for_method(&seq.recompute.prompt, &seq.recompute.method)
+            .and_then(|pre| {
+                let params = SelectParams {
+                    id,
+                    prompt_len: seq.recompute.prompt.len(),
+                    method: &seq.recompute.method,
+                    budget: seq.recompute.budget,
+                    knobs: &seq.recompute.knobs,
+                    max_new: seq.max_new,
+                    priority: seq.priority,
+                };
+                // Recompute may not preempt others to make room: pass
+                // empty active/preempted sets so a dry pool fails here.
+                let (cache, _logits, _kept, _decision) =
+                    self.select_compact(&params, pre, mgr, &mut Vec::new(), &mut Vec::new())?;
+                Ok(cache)
+            });
+        match rebuilt {
+            Ok(cache) => seq.cache = cache,
+            Err(e) => {
+                self.fail_active(seq, e.context("cold recompute prefill"), mgr);
+                return;
+            }
+        }
+        // Replay every token that was already fed to the backend. The
+        // last element of `tokens` is sampled-but-not-yet-fed, so it is
+        // excluded — the next loop iteration feeds it as usual.
+        let n_replay = seq.tokens.len().saturating_sub(1);
+        for t in 0..n_replay {
+            let tok = seq.tokens[t];
+            if seq.cache.headroom() == 0 {
+                let grown = match &mut seq.cache {
+                    ActiveKv::Paged(c) => mgr.grow_paged(id, c),
+                    ActiveKv::Dense(_) => false,
+                };
+                if !grown {
+                    self.fail_active(
+                        seq,
+                        anyhow::anyhow!("kv pool exhausted during cold recompute"),
+                        mgr,
+                    );
+                    return;
+                }
+            }
+            let step = match &mut seq.cache {
+                ActiveKv::Paged(c) => {
+                    let (arena, _) = mgr.paged_parts();
+                    let mut caches = vec![&mut *c];
+                    self.engine
+                        .decode_step_batch_paged(&model, arena, &mut caches, &[tok])
+                        .map(|_| ())
+                }
+                ActiveKv::Dense(c) => self.engine.decode_step(&model, c, tok).map(|_| ()),
+            };
+            if let Err(e) = step {
+                self.fail_active(seq, e.context("cold recompute replay"), mgr);
+                return;
+            }
+        }
+        let now = Instant::now();
+        // The parked time tiles as Spill, the rebuild as Restore — the
+        // same shape a successful restore records.
+        self.span(id, Phase::Spill, seq.mark, t0);
+        self.span(id, Phase::Restore, t0, now);
+        seq.mark = now;
+        seq.stats.restores += 1;
+        seq.restore_attempts = 0;
+        seq.next_restore_at = None;
+        if let ActiveKv::Paged(c) = &seq.cache {
+            let blocks = c.allocated_slots().div_ceil(mgr.block_size());
+            seq.stats.peak_arena_blocks = seq.stats.peak_arena_blocks.max(blocks);
+        }
+        self.metrics.observe("restore_ms", ms_between(t0, now));
+        active.push(seq);
     }
 
     fn complete(&mut self, mut seq: ActiveSeq, reason: FinishReason, mgr: &mut CacheManager) {
@@ -1404,8 +1933,19 @@ impl EngineLoop {
         self.publish_cache_stats(mgr);
         self.metrics.incr("completions", 1);
         self.metrics.incr("generated_tokens", seq.tokens.len() as u64);
+        match reason {
+            FinishReason::Cancelled => self.metrics.incr("cancellations_total", 1),
+            FinishReason::Deadline => self.metrics.incr("deadline_expired_total", 1),
+            _ => {}
+        }
         let now = Instant::now();
-        self.span(seq.id, Phase::Finish, seq.mark, now);
+        // Deadline/cancel exits replace the Finish span with Cancel so
+        // successful lifecycles keep exactly one Finish.
+        let phase = match reason {
+            FinishReason::Deadline | FinishReason::Cancelled => Phase::Cancel,
+            _ => Phase::Finish,
+        };
+        self.span(seq.id, phase, seq.mark, now);
         let _ = seq.reply.send(Reply {
             id: seq.id,
             text: decode_until_eos(&seq.tokens),
@@ -1428,6 +1968,222 @@ impl EngineLoop {
     ) {
         for seq in active.drain(..).chain(preempted.drain(..)) {
             self.complete(seq, FinishReason::Stopped, mgr);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::EngineConfig;
+    use crate::model::tokenizer::encode;
+    use crate::runtime::artifacts::default_artifacts_dir;
+    use crate::util::proptest;
+    use std::sync::mpsc::{channel, Receiver};
+
+    const ALL_REASONS: [FinishReason; 7] = [
+        FinishReason::Eos,
+        FinishReason::Length,
+        FinishReason::KvExhausted,
+        FinishReason::Stopped,
+        FinishReason::Deadline,
+        FinishReason::Cancelled,
+        FinishReason::Error,
+    ];
+
+    fn engine() -> Engine {
+        Engine::new(&default_artifacts_dir(), EngineConfig::new("lkv-tiny")).expect("engine")
+    }
+
+    fn test_loop() -> EngineLoop {
+        let queue = Arc::new(RequestQueue::new(8));
+        let metrics = Arc::new(Metrics::new());
+        let cfg = LoopConfig { quota_tokens: 1 << 20, ..LoopConfig::default() };
+        let mut el = EngineLoop::new(engine(), cfg, queue, metrics);
+        el.paged = true;
+        el
+    }
+
+    /// Build an in-flight sequence the way admission does — real
+    /// prefill, real selection/compaction into `mgr`'s arena, tenant
+    /// quota charged — so teardown paths are tested against genuinely
+    /// allocated state.
+    fn make_seq(
+        el: &mut EngineLoop,
+        mgr: &mut CacheManager,
+        id: u64,
+        max_new: usize,
+    ) -> (ActiveSeq, Receiver<Reply>) {
+        let prompt = encode("lorem;ipsum;dolor;sit;amet;A7K=Q2Z;consectetur;A7K=", true, false);
+        let method = Method::SnapKV;
+        let pre = el.engine.prefill_for_method(&prompt, &method).expect("prefill");
+        let knobs = PolicyKnobs::default();
+        let params = SelectParams {
+            id,
+            prompt_len: prompt.len(),
+            method: &method,
+            budget: 16,
+            knobs: &knobs,
+            max_new,
+            priority: Priority::Normal,
+        };
+        let (cache, logits, kept, decision) = el
+            .select_compact(&params, pre, mgr, &mut Vec::new(), &mut Vec::new())
+            .expect("select_compact");
+        let charge = prompt.len() + max_new;
+        *el.tenant_used.entry(id as u32).or_default() += charge;
+        let mut sampler = Sampler::greedy();
+        let first = sampler.sample(&logits);
+        let (tx, rx) = channel();
+        let now = Instant::now();
+        let seq = ActiveSeq {
+            id,
+            cache,
+            sampler,
+            tokens: vec![first],
+            next_token: first,
+            max_new,
+            reply: tx,
+            t_start: now,
+            ttft_ms: 0.0,
+            kept,
+            tenant: id as u32,
+            priority: Priority::Normal,
+            charge,
+            mark: now,
+            deadline: None,
+            cancel: Arc::new(AtomicBool::new(false)),
+            restore_attempts: 0,
+            next_restore_at: None,
+            recompute: RecomputeSpec {
+                prompt: prompt.clone(),
+                method: method.clone(),
+                budget: 16,
+                knobs: PolicyKnobs::default(),
+            },
+            stats: RequestStats::default(),
+            eviction: Some(decision),
+        };
+        (seq, rx)
+    }
+
+    /// Leak property: whatever reason a sequence exits with, the pool
+    /// returns to its pre-request block count and the tenant's quota
+    /// charge is fully released — across randomized pool shapes.
+    #[test]
+    fn every_finish_reason_releases_blocks_and_quota() {
+        let cfg = proptest::Config { cases: 5, max_size: 48, ..proptest::Config::new() };
+        // RefCell: the harness only unwinds on assertion failure, never
+        // mid-borrow (same pattern as tests/chunked.rs).
+        let el_ref = std::panic::AssertUnwindSafe(std::cell::RefCell::new(test_loop()));
+        proptest::check("finish reasons leak nothing", &cfg, move |rng, _size| {
+            let el = &mut *el_ref.0.borrow_mut();
+            let block = 1 + (rng.next_u64() as usize) % 32;
+            let pool = 1024 + (rng.next_u64() as usize) % 1024;
+            let mut mgr = CacheManager::new(pool, block);
+            for (i, reason) in ALL_REASONS.iter().enumerate() {
+                let (seq, rx) = make_seq(el, &mut mgr, i as u64, 4);
+                assert!(mgr.stats().used_blocks > 0, "selection allocated no blocks");
+                match reason {
+                    FinishReason::Error => {
+                        el.fail_active(seq, anyhow::anyhow!("injected test failure"), &mut mgr)
+                    }
+                    r => el.complete(seq, *r, &mut mgr),
+                }
+                let reply = rx.recv().expect("reply");
+                assert_eq!(reply.finish_reason, *reason);
+                let s = mgr.stats();
+                assert_eq!(s.used_blocks, 0, "{reason:?} leaked pool blocks");
+                assert_eq!(s.arena_blocks, 0, "{reason:?} leaked arena blocks");
+                assert_eq!(mgr.spill_stats().blocks, 0, "{reason:?} leaked spill blocks");
+                assert!(el.tenant_used.is_empty(), "{reason:?} leaked tenant quota");
+            }
+        });
+    }
+
+    /// Regression (satellite of the robustness PR): a misconfigured
+    /// model name used to `expect()` in `run()` and abort the process;
+    /// it must instead fail each queued request with an error reply and
+    /// return cleanly.
+    #[test]
+    fn unknown_model_fails_requests_without_aborting() {
+        let mut engine = engine();
+        engine.cfg.model = "no-such-model".into();
+        let queue = Arc::new(RequestQueue::new(4));
+        let metrics = Arc::new(Metrics::new());
+        let (tx, rx) = channel();
+        queue
+            .submit(Request {
+                id: 0,
+                prompt: encode("a;b;c", true, false),
+                method: Method::SnapKV,
+                budget: 8,
+                max_new: 4,
+                temperature: 0.0,
+                knobs: PolicyKnobs::default(),
+                tenant: 0,
+                priority: Priority::Normal,
+                submitted_at: Instant::now(),
+                deadline_ms: 0,
+                cancel: Arc::new(AtomicBool::new(false)),
+                reply: tx,
+            })
+            .expect("submit");
+        EngineLoop::new(engine, LoopConfig::default(), Arc::clone(&queue), Arc::clone(&metrics))
+            .run();
+        let reply = rx.recv().expect("reply");
+        assert_eq!(reply.finish_reason, FinishReason::Error);
+        let msg = reply.error.expect("error message");
+        assert!(msg.contains("engine unavailable"), "unexpected error: {msg}");
+        assert!(queue.is_closed(), "run() must close the queue on startup failure");
+        assert!(metrics.counter("engine_errors_total") >= 1);
+    }
+
+    /// Deadlines and cancellation are honored before any prefill work:
+    /// a request whose deadline expired in the queue finishes with
+    /// `deadline`, a pre-cancelled one with `cancelled` — neither is an
+    /// error, and the loop exits normally.
+    #[test]
+    fn queued_deadline_and_cancel_finish_cleanly() {
+        let queue = Arc::new(RequestQueue::new(4));
+        let metrics = Arc::new(Metrics::new());
+        let stale = Instant::now()
+            .checked_sub(Duration::from_millis(50))
+            .unwrap_or_else(Instant::now);
+        let cancelled = Arc::new(AtomicBool::new(true));
+        let mut receivers = Vec::new();
+        for (id, submitted_at, deadline_ms, cancel) in [
+            (0u64, stale, 1u64, Arc::new(AtomicBool::new(false))),
+            (1u64, Instant::now(), 0u64, Arc::clone(&cancelled)),
+        ] {
+            let (tx, rx) = channel();
+            receivers.push(rx);
+            queue
+                .submit(Request {
+                    id,
+                    prompt: encode("a;b;c;d;e", true, false),
+                    method: Method::SnapKV,
+                    budget: 8,
+                    max_new: 4,
+                    temperature: 0.0,
+                    knobs: PolicyKnobs::default(),
+                    tenant: 0,
+                    priority: Priority::Normal,
+                    submitted_at,
+                    deadline_ms,
+                    cancel,
+                    reply: tx,
+                })
+                .expect("submit");
+        }
+        queue.close();
+        EngineLoop::new(engine(), LoopConfig::default(), Arc::clone(&queue), metrics).run();
+        let expect = [FinishReason::Deadline, FinishReason::Cancelled];
+        for (rx, want) in receivers.iter().zip(expect) {
+            let reply = rx.recv().expect("reply");
+            assert_eq!(reply.finish_reason, want);
+            assert!(reply.error.is_none(), "terminal reasons are not errors");
+            assert_eq!(reply.n_tokens, 0);
         }
     }
 }

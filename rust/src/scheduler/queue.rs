@@ -5,8 +5,9 @@
 //! are over their token quota without reordering anyone else.
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::Sender;
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 
 use crate::engine::{FinishReason, RequestStats};
 use crate::eviction::spec::PolicyKnobs;
@@ -61,7 +62,29 @@ pub struct Request {
     /// When the front-end submitted the request; queue-wait time is
     /// measured from here to the engine-loop pop.
     pub submitted_at: std::time::Instant,
+    /// Wall-clock budget measured from `submitted_at`, in milliseconds;
+    /// 0 means no deadline. The engine checks it at chunk/iteration
+    /// boundaries and finishes with `FinishReason::Deadline` (keeping
+    /// any tokens already generated) when it expires.
+    pub deadline_ms: u64,
+    /// Cooperative cancellation flag. The server sets it when the client
+    /// disconnects; the engine polls it at the same boundaries as the
+    /// deadline and finishes with `FinishReason::Cancelled`.
+    pub cancel: Arc<AtomicBool>,
     pub reply: Sender<Reply>,
+}
+
+impl Request {
+    /// Absolute deadline, if the request has one.
+    pub fn deadline(&self) -> Option<std::time::Instant> {
+        (self.deadline_ms > 0)
+            .then(|| self.submitted_at + std::time::Duration::from_millis(self.deadline_ms))
+    }
+
+    /// Has the client asked for this request to stop?
+    pub fn cancelled(&self) -> bool {
+        self.cancel.load(Ordering::Relaxed)
+    }
 }
 
 /// Completion message.
@@ -220,6 +243,8 @@ mod tests {
                 tenant,
                 priority,
                 submitted_at: std::time::Instant::now(),
+                deadline_ms: 0,
+                cancel: Arc::new(AtomicBool::new(false)),
                 reply: tx,
             },
             rx,

@@ -5,10 +5,11 @@
 //!   POST /generate  {"prompt": str, "method": str, "budget": n,
 //!                    "max_new": n, "temperature": f,
 //!                    "tenant": n, "priority": low|normal|high,
-//!                    "policy": {...}}
+//!                    "deadline_ms": n, "policy": {...}}
 //!                    → generation JSON
 //!                    (includes "finish_reason": eos | length |
-//!                    kv_exhausted | stopped — cap/pool-driven
+//!                    kv_exhausted | stopped | error | deadline |
+//!                    cancelled — cap/pool-driven
 //!                    truncation is observable, not silent — plus a
 //!                    per-request "stats" object: queue_ms, ttft_ms,
 //!                    prefill_chunks, decode_iters, evicted_per_layer,
@@ -25,6 +26,15 @@
 //!                    "error" body. Both paths construct the policy
 //!                    through `PolicySpec` — the legacy "method" string
 //!                    is a thin compatibility parser.
+//!                    "deadline_ms" is a wall-clock budget from
+//!                    submission (default `ServerConfig::
+//!                    default_deadline_ms`; 0 = none): expiry finishes
+//!                    with "deadline" and whatever tokens exist. A
+//!                    worker waits `reply_timeout_ms` for the engine,
+//!                    then answers 504 with the request "id" (usable
+//!                    against /trace/<id>) and cancels the sequence;
+//!                    client disconnects are detected mid-wait and
+//!                    cancel the sequence the same way.
 //!   GET  /policies  → the policy registry: every family with its
 //!                     accepted knobs + aliases, the engine's knob
 //!                     defaults, and whether trained predictor weights
@@ -44,8 +54,8 @@
 
 pub mod http;
 
-use std::net::TcpListener;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::channel;
 use std::sync::Arc;
 
@@ -74,6 +84,14 @@ pub struct ServerConfig {
     pub read_timeout_ms: u64,
     /// Socket write timeout for the response. 0 = no timeout.
     pub write_timeout_ms: u64,
+    /// How long a worker waits for the engine's reply before answering
+    /// 504 (the body carries the request id, so the client can pull
+    /// `GET /trace/<id>` post-mortem). The request is cancelled
+    /// engine-side at the same moment. 0 = wait forever.
+    pub reply_timeout_ms: u64,
+    /// Default per-request `deadline_ms` applied when the body doesn't
+    /// set one. 0 = no deadline.
+    pub default_deadline_ms: u64,
 }
 
 impl Default for ServerConfig {
@@ -84,6 +102,8 @@ impl Default for ServerConfig {
             queue_cap: 64,
             read_timeout_ms: 10_000,
             write_timeout_ms: 10_000,
+            reply_timeout_ms: 120_000,
+            default_deadline_ms: 0,
         }
     }
 }
@@ -114,6 +134,7 @@ pub fn serve_listener(
     let pool = ThreadPool::new(cfg.workers, "http");
     let next_id = Arc::new(AtomicU64::new(1));
     let (read_to, write_to) = (cfg.read_timeout_ms, cfg.write_timeout_ms);
+    let cfg = Arc::new(cfg);
     for stream in listener.incoming() {
         let Ok(stream) = stream else { continue };
         // Bound how long a worker can be held by a slow/half-open client.
@@ -124,9 +145,10 @@ pub fn serve_listener(
         let metrics = Arc::clone(&metrics);
         let next_id = Arc::clone(&next_id);
         let tracer = tracer.clone();
+        let cfg = Arc::clone(&cfg);
         if pool
             .execute(move || {
-                let _ = handle_conn(stream, &queue, &metrics, &next_id, tracer.as_deref());
+                let _ = handle_conn(stream, &cfg, &queue, &metrics, &next_id, tracer.as_deref());
             })
             .is_err()
         {
@@ -139,7 +161,8 @@ pub fn serve_listener(
 }
 
 fn handle_conn(
-    mut stream: std::net::TcpStream,
+    mut stream: TcpStream,
+    cfg: &ServerConfig,
     queue: &RequestQueue,
     metrics: &Metrics,
     next_id: &AtomicU64,
@@ -147,12 +170,15 @@ fn handle_conn(
 ) -> Result<()> {
     let req = read_request(&mut stream)?;
     metrics.incr("http_requests", 1);
-    let (status, content_type, body) = route(&req, queue, metrics, next_id, tracer);
+    let (status, content_type, body) = route(&req, &stream, cfg, queue, metrics, next_id, tracer);
     write_response_typed(&mut stream, status, content_type, &body)
 }
 
+#[allow(clippy::too_many_arguments)]
 fn route(
     req: &HttpRequest,
+    stream: &TcpStream,
+    cfg: &ServerConfig,
     queue: &RequestQueue,
     metrics: &Metrics,
     next_id: &AtomicU64,
@@ -175,7 +201,7 @@ fn route(
             json(status, body)
         }
         ("POST", "/generate") => {
-            let (status, body) = generate(req, queue, metrics, next_id);
+            let (status, body) = generate(req, stream, cfg, queue, metrics, next_id);
             json(status, body)
         }
         _ => json(404, Json::from_pairs(vec![("error", "not found".into())])),
@@ -226,8 +252,28 @@ fn policies(metrics: &Metrics) -> Json {
     spec::registry_json(&EvictionConfig::new(64), predictor_loaded(metrics))
 }
 
+/// Has the client hung up? Non-destructive probe: a nonblocking 1-byte
+/// `peek` — orderly EOF or a hard error means gone; `WouldBlock` means
+/// idle-but-alive; readable bytes (pipelining) also mean alive.
+fn client_gone(stream: &TcpStream) -> bool {
+    if stream.set_nonblocking(true).is_err() {
+        return false;
+    }
+    let mut buf = [0u8; 1];
+    let gone = match stream.peek(&mut buf) {
+        Ok(0) => true,
+        Ok(_) => false,
+        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => false,
+        Err(_) => true,
+    };
+    let _ = stream.set_nonblocking(false);
+    gone
+}
+
 fn generate(
     req: &HttpRequest,
+    stream: &TcpStream,
+    cfg: &ServerConfig,
     queue: &RequestQueue,
     metrics: &Metrics,
     next_id: &AtomicU64,
@@ -276,8 +322,12 @@ fn generate(
         );
     }
     let (tx, rx) = channel::<Reply>();
+    let id = next_id.fetch_add(1, Ordering::SeqCst);
+    // Shared with the engine: flipped on client disconnect or reply
+    // timeout so the sequence is cancelled and its KV freed promptly.
+    let cancel = Arc::new(AtomicBool::new(false));
     let request = Request {
-        id: next_id.fetch_add(1, Ordering::SeqCst),
+        id,
         prompt: encode(prompt, true, false),
         method,
         budget: spec
@@ -301,6 +351,12 @@ fn generate(
             },
         },
         submitted_at: std::time::Instant::now(),
+        deadline_ms: body
+            .get("deadline_ms")
+            .and_then(Json::as_usize)
+            .map(|v| v as u64)
+            .unwrap_or(cfg.default_deadline_ms),
+        cancel: Arc::clone(&cancel),
         reply: tx,
     };
     match queue.submit(request) {
@@ -312,30 +368,75 @@ fn generate(
         }
         Ok(()) => {}
     }
-    match rx.recv_timeout(std::time::Duration::from_secs(120)) {
-        Ok(reply) => {
-            if let Some(err) = reply.error {
-                (500, Json::from_pairs(vec![("error", err.into())]))
-            } else {
-                (
-                    200,
+    // Wait in short slices so a vanished client is noticed mid-stream
+    // and the engine-side sequence is cancelled instead of decoding for
+    // nobody. The overall budget is `reply_timeout_ms` (0 = forever).
+    let t0 = std::time::Instant::now();
+    loop {
+        match rx.recv_timeout(std::time::Duration::from_millis(200)) {
+            Ok(reply) => {
+                return if let Some(err) = reply.error {
+                    (500, Json::from_pairs(vec![("error", err.into()), ("id", id.into())]))
+                } else {
+                    (
+                        200,
+                        Json::from_pairs(vec![
+                            ("id", reply.id.into()),
+                            ("text", reply.text.into()),
+                            ("n_tokens", reply.n_tokens.into()),
+                            ("ttft_ms", reply.ttft_ms.into()),
+                            ("total_ms", reply.total_ms.into()),
+                            ("kept", reply.kept.into()),
+                            ("finish_reason", reply.finish_reason.as_str().into()),
+                            ("stats", reply.stats.to_json()),
+                            (
+                                "eviction",
+                                reply.eviction.map_or(Json::Null, |d| d.to_json()),
+                            ),
+                        ]),
+                    )
+                };
+            }
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                if client_gone(stream) {
+                    cancel.store(true, Ordering::Relaxed);
+                    metrics.incr("client_disconnects_total", 1);
+                    // Nobody reads this (the write will fail); 499 is
+                    // the conventional "client closed request".
+                    return (
+                        499,
+                        Json::from_pairs(vec![
+                            ("error", "client closed request".into()),
+                            ("id", id.into()),
+                        ]),
+                    );
+                }
+                if cfg.reply_timeout_ms > 0
+                    && t0.elapsed().as_millis() as u64 >= cfg.reply_timeout_ms
+                {
+                    // Cancel engine-side too: no one is waiting for the
+                    // reply. The id lets the client fetch
+                    // `GET /trace/<id>` post-mortem.
+                    cancel.store(true, Ordering::Relaxed);
+                    metrics.incr("reply_timeouts_total", 1);
+                    return (
+                        504,
+                        Json::from_pairs(vec![
+                            ("error", "timeout".into()),
+                            ("id", id.into()),
+                        ]),
+                    );
+                }
+            }
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                return (
+                    500,
                     Json::from_pairs(vec![
-                        ("id", reply.id.into()),
-                        ("text", reply.text.into()),
-                        ("n_tokens", reply.n_tokens.into()),
-                        ("ttft_ms", reply.ttft_ms.into()),
-                        ("total_ms", reply.total_ms.into()),
-                        ("kept", reply.kept.into()),
-                        ("finish_reason", reply.finish_reason.as_str().into()),
-                        ("stats", reply.stats.to_json()),
-                        (
-                            "eviction",
-                            reply.eviction.map_or(Json::Null, |d| d.to_json()),
-                        ),
+                        ("error", "engine terminated before replying".into()),
+                        ("id", id.into()),
                     ]),
-                )
+                );
             }
         }
-        Err(_) => (504, Json::from_pairs(vec![("error", "timeout".into())])),
     }
 }

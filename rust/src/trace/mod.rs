@@ -59,10 +59,17 @@ pub enum Phase {
     /// cross block boundaries are decoded to f32 scratch and re-encoded
     /// against the destination block's scale/zero-point.
     Requantize,
+    /// Terminal bookkeeping of a *failed* request (error reply + resource
+    /// teardown). Replaces the `Finish` span on error exits, so failed
+    /// lifecycles still tile.
+    Error,
+    /// Terminal bookkeeping of a deadline-expired or client-cancelled
+    /// request. Replaces the `Finish` span on those exits.
+    Cancel,
 }
 
 impl Phase {
-    pub const ALL: [Phase; 10] = [
+    pub const ALL: [Phase; 12] = [
         Phase::Queue,
         Phase::Admission,
         Phase::PrefillChunk,
@@ -73,6 +80,8 @@ impl Phase {
         Phase::Finish,
         Phase::Quantize,
         Phase::Requantize,
+        Phase::Error,
+        Phase::Cancel,
     ];
 
     pub fn as_str(self) -> &'static str {
@@ -87,6 +96,8 @@ impl Phase {
             Phase::Finish => "finish",
             Phase::Quantize => "quantize",
             Phase::Requantize => "dequant-requantize",
+            Phase::Error => "error",
+            Phase::Cancel => "cancel",
         }
     }
 

@@ -1,0 +1,239 @@
+//! Chaos soak: drive bursty workloads through the full engine loop with
+//! deterministic fault injection enabled and assert the two robustness
+//! invariants the PR promises:
+//!
+//! 1. **Containment** — requests the fault plan never touches finish
+//!    token-identical to a fault-free run (faults are per-request, not
+//!    per-process).
+//! 2. **No leaks** — after every run, arena blocks, spill blocks, and
+//!    tenant quota all drain to zero, whatever mix of errors, injected
+//!    disconnects, retries, and cold recomputes the plan provoked.
+//!
+//! Each test writes a machine-readable soak summary under `results/`
+//! (uploaded as a CI artifact by the chaos-soak step).
+
+use std::sync::atomic::AtomicBool;
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use lookaheadkv::engine::{Engine, EngineConfig, FinishReason};
+use lookaheadkv::eviction::Method;
+use lookaheadkv::faults::FaultPlan;
+use lookaheadkv::metrics::Metrics;
+use lookaheadkv::model::tokenizer::encode;
+use lookaheadkv::runtime::artifacts::default_artifacts_dir;
+use lookaheadkv::scheduler::{EngineLoop, LoopConfig, Priority, Reply, Request, RequestQueue};
+use lookaheadkv::util::json::Json;
+
+/// Covers every seam: prefill chunks use attempt `0..chunks`, decode
+/// iterations `100 + iter`, restore retries small integers — 400 bounds
+/// them all for these workloads.
+const MAX_ATTEMPTS: u64 = 400;
+
+fn engine() -> Engine {
+    Engine::new(&default_artifacts_dir(), EngineConfig::new("lkv-tiny")).expect("engine")
+}
+
+fn prompts(n: usize) -> Vec<Vec<i32>> {
+    let texts = [
+        "lorem;ipsum;dolor;sit;amet;A7K=Q2Z;consectetur;elit;A7K=",
+        "sed;do;eiusmod;B3X=W9Y;tempor;incididunt;ut;labore;B3X=",
+        "magna;aliqua;ut;enim;C5M=R4T;ad;minim;veniam;quis;C5M=",
+        "duis;aute;irure;dolor;D8N=K1J;in;reprehenderit;D8N=",
+    ];
+    (0..n).map(|i| encode(texts[i % texts.len()], true, false)).collect()
+}
+
+/// Submit the whole burst up front, close the queue, run the loop on a
+/// worker thread, and collect one reply per request (order-free).
+fn run_burst(
+    prompts: &[Vec<i32>],
+    cfg: LoopConfig,
+    priorities: &[Priority],
+    tenants: usize,
+) -> (Vec<Reply>, Arc<Metrics>) {
+    let queue = Arc::new(RequestQueue::new(prompts.len() + 1));
+    let metrics = Arc::new(Metrics::new());
+    let (tx, rx) = channel::<Reply>();
+    for (i, p) in prompts.iter().enumerate() {
+        queue
+            .submit(Request {
+                id: i as u64,
+                prompt: p.clone(),
+                method: Method::SnapKV,
+                budget: 16,
+                max_new: 8,
+                temperature: 0.0,
+                knobs: Default::default(),
+                tenant: (i % tenants) as u32,
+                priority: priorities[i % priorities.len()],
+                submitted_at: Instant::now(),
+                deadline_ms: 0,
+                cancel: Arc::new(AtomicBool::new(false)),
+                reply: tx.clone(),
+            })
+            .expect("submit");
+    }
+    queue.close();
+    let loop_queue = Arc::clone(&queue);
+    let loop_metrics = Arc::clone(&metrics);
+    let handle = std::thread::spawn(move || {
+        EngineLoop::new(engine(), cfg, loop_queue, loop_metrics).run();
+    });
+    let mut replies: Vec<Reply> = (0..prompts.len())
+        .map(|_| rx.recv_timeout(Duration::from_secs(120)).expect("reply within 120s"))
+        .collect();
+    handle.join().expect("engine loop must exit cleanly");
+    replies.sort_by_key(|r| r.id);
+    (replies, metrics)
+}
+
+/// The leak canaries: all KV and quota occupancy gauges must read zero
+/// once the loop has drained.
+fn assert_no_leaks(metrics: &Metrics, label: &str) {
+    for gauge in
+        ["kv_used_blocks", "kv_arena_blocks_used", "kv_spill_blocks", "quota_tokens_in_flight"]
+    {
+        let v = metrics.gauge(gauge).unwrap_or_else(|| panic!("{label}: gauge {gauge} missing"));
+        assert_eq!(v, 0.0, "{label}: {gauge} = {v} after drain (leak)");
+    }
+}
+
+fn write_summary(name: &str, summary: Json) {
+    let _ = std::fs::create_dir_all("results");
+    let path = format!("results/{name}.json");
+    if std::fs::write(&path, summary.to_string()).is_ok() {
+        println!("wrote {path}");
+    }
+}
+
+/// Permanent, id-targeted faults: the touched set is exact, so every
+/// untouched request must be token-identical to the fault-free run.
+#[test]
+fn fault_untouched_requests_are_token_identical() {
+    let n = 20;
+    let ps = prompts(n);
+    // Generous pool + uniform priority: no organic preemption or
+    // exhaustion, so the only cross-run difference is the plan itself.
+    let cfg = || LoopConfig {
+        max_active: 3,
+        prefill_chunk_tokens: 8,
+        kv_pool_slots: 4096,
+        kv_block_slots: 16,
+        paged_kv: true,
+        tenants: 2,
+        quota_tokens: 1 << 16,
+        ..LoopConfig::default()
+    };
+    let plan = Arc::new(
+        FaultPlan::parse("seed=5;backend:ids=2+9;alloc:ids=4;disconnect:ids=7;delay:every=6,ms=2")
+            .expect("plan"),
+    );
+    let (clean, _) = run_burst(&ps, cfg(), &[Priority::Normal], 2);
+    let mut faulted_cfg = cfg();
+    faulted_cfg.faults = Some(Arc::clone(&plan));
+    let (faulted, metrics) = run_burst(&ps, faulted_cfg, &[Priority::Normal], 2);
+
+    let mut touched = 0usize;
+    for (c, f) in clean.iter().zip(&faulted) {
+        assert_eq!(c.id, f.id);
+        if plan.touches(c.id, MAX_ATTEMPTS) {
+            touched += 1;
+            continue;
+        }
+        assert_eq!(
+            c.text, f.text,
+            "request {} is untouched by the plan but its tokens changed",
+            c.id
+        );
+        assert_eq!(c.finish_reason, f.finish_reason, "request {}", c.id);
+        assert!(f.error.is_none(), "untouched request {} errored: {:?}", c.id, f.error);
+    }
+    assert!(touched >= 3, "the plan should touch several requests, got {touched}");
+    // Targeted requests fail the way their site dictates.
+    for id in [2u64, 9, 4] {
+        let r = &faulted[id as usize];
+        assert_eq!(r.finish_reason, FinishReason::Error, "request {id}");
+        let msg = r.error.as_deref().expect("injected faults carry an error");
+        assert!(msg.contains("injected"), "request {id}: {msg}");
+    }
+    assert_eq!(faulted[7].finish_reason, FinishReason::Cancelled, "injected disconnect");
+    assert!(faulted[7].error.is_none(), "cancellation is terminal, not an error");
+    assert_no_leaks(&metrics, "determinism soak");
+
+    write_summary(
+        "chaos_soak_determinism",
+        Json::from_pairs(vec![
+            ("plan", Json::Str(plan.source().to_string())),
+            ("requests", Json::Num(n as f64)),
+            ("touched", Json::Num(touched as f64)),
+            ("engine_errors_total", Json::Num(metrics.counter("engine_errors_total") as f64)),
+            ("cancellations_total", Json::Num(metrics.counter("cancellations_total") as f64)),
+            ("leaked_blocks", Json::Num(0.0)),
+        ]),
+    );
+}
+
+/// Tight pool + mixed priorities + transient rate faults: preemption,
+/// spill/restore I/O errors, retry backoff, and cold recompute all fire
+/// under pressure, and nothing leaks or deadlocks.
+#[test]
+fn pressure_soak_with_transient_faults_leaks_nothing() {
+    let n = 24;
+    let ps = prompts(n);
+    let plan = Arc::new(
+        FaultPlan::parse(
+            "seed=13;restore:rate=0.7;spill:rate=0.15;backend:rate=0.02;delay:rate=0.1,ms=1",
+        )
+        .expect("plan"),
+    );
+    let cfg = LoopConfig {
+        max_active: 3,
+        kv_pool_slots: 8 * 16,
+        kv_block_slots: 16,
+        paged_kv: true,
+        preemption: true,
+        tenants: 3,
+        quota_tokens: 512,
+        faults: Some(Arc::clone(&plan)),
+        restore_retries: 2,
+        restore_retry_base_ms: 1,
+        ..LoopConfig::default()
+    };
+    let priorities = [Priority::High, Priority::Normal, Priority::Low];
+    let (replies, metrics) = run_burst(&ps, cfg, &priorities, 3);
+
+    assert_eq!(replies.len(), n, "every request must get exactly one reply");
+    for r in &replies {
+        // Errors are allowed (they are injected); silent losses and
+        // panics are not — an error reply must say why.
+        if r.finish_reason == FinishReason::Error {
+            assert!(r.error.is_some(), "request {}: error reply without message", r.id);
+        }
+    }
+    assert_no_leaks(&metrics, "pressure soak");
+
+    write_summary(
+        "chaos_soak_pressure",
+        Json::from_pairs(vec![
+            ("plan", Json::Str(plan.source().to_string())),
+            ("requests", Json::Num(n as f64)),
+            (
+                "errors",
+                Json::Num(
+                    replies.iter().filter(|r| r.finish_reason == FinishReason::Error).count()
+                        as f64,
+                ),
+            ),
+            ("preemptions_total", Json::Num(metrics.counter("preemptions_total") as f64)),
+            ("restore_retries_total", Json::Num(metrics.counter("restore_retries_total") as f64)),
+            (
+                "restore_cold_recomputes_total",
+                Json::Num(metrics.counter("restore_cold_recomputes_total") as f64),
+            ),
+            ("engine_errors_total", Json::Num(metrics.counter("engine_errors_total") as f64)),
+            ("leaked_blocks", Json::Num(0.0)),
+        ]),
+    );
+}

@@ -171,6 +171,8 @@ fn engine_loop_chunked_matches_monolithic() {
                     tenant: 0,
                     priority: Priority::Normal,
                     submitted_at: std::time::Instant::now(),
+                    deadline_ms: 0,
+                    cancel: Arc::new(std::sync::atomic::AtomicBool::new(false)),
                     reply: tx,
                 })
                 .expect("submit");

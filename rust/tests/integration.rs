@@ -172,6 +172,8 @@ fn engine_loop_serves_requests_batched() {
                 tenant: 0,
                 priority: Priority::Normal,
                 submitted_at: std::time::Instant::now(),
+                deadline_ms: 0,
+                cancel: Arc::new(std::sync::atomic::AtomicBool::new(false)),
                 reply: tx,
             })
             .expect("submit");

@@ -246,6 +246,8 @@ fn run_loop_with(
                 tenant: 0,
                 priority: Priority::Normal,
                 submitted_at: std::time::Instant::now(),
+                deadline_ms: 0,
+                cancel: Arc::new(std::sync::atomic::AtomicBool::new(false)),
                 reply: tx,
             })
             .expect("submit");

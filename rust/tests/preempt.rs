@@ -79,6 +79,8 @@ fn run_pair_dtype(
                 tenant: id as u32,
                 priority,
                 submitted_at: std::time::Instant::now(),
+                deadline_ms: 0,
+                cancel: Arc::new(std::sync::atomic::AtomicBool::new(false)),
                 reply: tx,
             })
             .expect("submit");
@@ -204,6 +206,8 @@ fn over_quota_request_is_rejected_not_queued() {
                 tenant: 0,
                 priority: Priority::Normal,
                 submitted_at: std::time::Instant::now(),
+                deadline_ms: 0,
+                cancel: Arc::new(std::sync::atomic::AtomicBool::new(false)),
                 reply: tx,
             })
             .expect("submit");

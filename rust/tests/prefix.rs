@@ -200,6 +200,8 @@ fn run_loop(prompts: &[String], prefix_cache: bool) -> (Vec<Reply>, Arc<Metrics>
                 tenant: 0,
                 priority: Priority::Normal,
                 submitted_at: std::time::Instant::now(),
+                deadline_ms: 0,
+                cancel: Arc::new(std::sync::atomic::AtomicBool::new(false)),
                 reply: tx,
             })
             .expect("submit");
@@ -322,6 +324,8 @@ fn monolithic_fallback_without_chunked_support_is_identical() {
                     tenant: 0,
                     priority: Priority::Normal,
                     submitted_at: std::time::Instant::now(),
+                    deadline_ms: 0,
+                    cancel: Arc::new(std::sync::atomic::AtomicBool::new(false)),
                     reply: tx,
                 })
                 .expect("submit");

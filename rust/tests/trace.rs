@@ -51,6 +51,8 @@ fn run_traced(n: usize, chunk: usize, max_new: usize) -> (Vec<Reply>, Arc<Tracer
                 tenant: 0,
                 priority: Priority::Normal,
                 submitted_at: std::time::Instant::now(),
+                deadline_ms: 0,
+                cancel: Arc::new(std::sync::atomic::AtomicBool::new(false)),
                 reply: tx,
             })
             .expect("submit");
